@@ -1,0 +1,115 @@
+//! End-to-end driver (DESIGN.md §4): the full three-layer system on a real
+//! small workload.
+//!
+//! Pipeline: synthetic 10-class SIFT-like corpus (N=5000, D=128) → PCA →
+//! exact kNN → perplexity-calibrated joint P → dual-tree hierarchical
+//! reorder → multi-level CSB → 500 t-SNE iterations where the attractive
+//! force runs through the hybrid coordinator (Rust workers for sparse
+//! blocklets + **PJRT-executed AOT Pallas block programs** for dense
+//! cluster pairs) → KL-divergence curve + nearest-centroid class purity.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example tsne_end_to_end
+//! ```
+//! Pass `--no-pjrt` to compare against the pure-Rust path.
+
+use nni::apps::tsne::{self, TsneConfig};
+use nni::data::synth::SynthSpec;
+use nni::runtime::ArtifactRegistry;
+
+fn main() {
+    let no_pjrt = std::env::args().any(|a| a == "--no-pjrt");
+    let quick = std::env::args().any(|a| a == "--quick");
+
+    // 10-class corpus: depth-1 hierarchy with 10 branches → 10 leaf
+    // clusters at D=128 with ambient noise.
+    let mut spec = SynthSpec::sift_like(if quick { 1200 } else { 5000 }, 4242);
+    spec.depth = 1;
+    spec.branching = 10;
+    spec.leaf_sigma = 0.08;
+    let data = spec.generate();
+    println!(
+        "corpus: {} points, d={}, {} classes",
+        data.n(),
+        data.d(),
+        data.labels.as_ref().unwrap().iter().max().unwrap() + 1
+    );
+
+    let registry = if no_pjrt {
+        None
+    } else {
+        match ArtifactRegistry::open_default() {
+            Ok(r) => {
+                println!("pjrt: {} ({} artifacts)", r.runtime().platform(), r.variants.len());
+                Some(r)
+            }
+            Err(e) => {
+                println!("pjrt unavailable ({e:#}); running pure-Rust");
+                None
+            }
+        }
+    };
+
+    let cfg = TsneConfig {
+        d: 2,
+        perplexity: 30.0,
+        k: 90.min(data.n() - 1),
+        iters: if quick { 150 } else { 500 },
+        exaggeration_iters: if quick { 50 } else { 100 },
+        threads: 0,
+        seed: 7,
+        leaf_cap: 256,
+        use_pjrt: registry.is_some(),
+        ..Default::default()
+    };
+
+    let t0 = std::time::Instant::now();
+    let res = tsne::run(&data, &cfg, registry);
+    let total = t0.elapsed().as_secs_f64();
+
+    println!("\nKL curve:");
+    for e in &res.log {
+        println!("  iter {:>4}  KL {:.4}  |grad| {:.3e}  t {:.1}s", e.iter, e.kl, e.grad_norm, e.seconds);
+    }
+    println!("\ncoordinator: {}", res.metrics_summary);
+    println!("total wall time: {total:.1}s  ({:.1} ms/iter)", total * 1e3 / cfg.iters as f64);
+
+    // Quality: nearest-class-centroid agreement in the embedding.
+    let e = &res.embedding;
+    let labels = e.labels.as_ref().unwrap();
+    let nclass = (*labels.iter().max().unwrap() + 1) as usize;
+    let mut centroids = vec![[0.0f64; 2]; nclass];
+    let mut counts = vec![0usize; nclass];
+    for i in 0..e.n() {
+        let c = labels[i] as usize;
+        centroids[c][0] += e.row(i)[0] as f64;
+        centroids[c][1] += e.row(i)[1] as f64;
+        counts[c] += 1;
+    }
+    for (c, cnt) in centroids.iter_mut().zip(&counts) {
+        c[0] /= (*cnt).max(1) as f64;
+        c[1] /= (*cnt).max(1) as f64;
+    }
+    let mut correct = 0usize;
+    for i in 0..e.n() {
+        let (x, y) = (e.row(i)[0] as f64, e.row(i)[1] as f64);
+        let mut best = (f64::INFINITY, 0usize);
+        for (c, cen) in centroids.iter().enumerate() {
+            let d2 = (x - cen[0]).powi(2) + (y - cen[1]).powi(2);
+            if d2 < best.0 {
+                best = (d2, c);
+            }
+        }
+        if best.1 == labels[i] as usize {
+            correct += 1;
+        }
+    }
+    let purity = correct as f64 / e.n() as f64;
+    println!("nearest-centroid purity: {purity:.3}");
+
+    // KL must decrease post-exaggeration; purity must beat chance well.
+    let post: Vec<_> = res.log.iter().filter(|l| l.iter >= cfg.exaggeration_iters).collect();
+    assert!(post.len() >= 2 && post.last().unwrap().kl <= post[0].kl + 1e-9, "KL did not decrease");
+    assert!(purity > 2.0 / nclass as f64, "purity {purity} barely above chance");
+    println!("END-TO-END OK");
+}

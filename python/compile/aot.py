@@ -1,0 +1,177 @@
+"""AOT lowering: Layer-2 block programs → HLO text artifacts + manifest.
+
+Interchange format is **HLO text**, not a serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs, under ``--out-dir`` (default ``../artifacts`` relative to this
+package's parent, i.e. the repo's ``artifacts/``):
+
+* ``<variant>.hlo.txt``  — one per entry in :data:`VARIANTS`;
+* ``manifest.json``      — variant name → file, input shapes/dtypes, output
+  shapes/dtypes; parsed by ``rust/src/runtime/artifact.rs``;
+* ``golden/``            — deterministic input/output ``.bin`` tensors (raw
+  little-endian f32) per variant, regenerated from the pure-jnp oracles via
+  the block programs themselves; consumed by the Rust integration tests.
+
+Run via ``make artifacts`` (incremental: skipped when inputs are unchanged).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+# Variant table: name -> (function, example args).
+# M = N = 256 single blocks match the default CSB leaf cap in Rust
+# (csb::hier::LEAF_POINTS); the *_b8 batched variants match the
+# coordinator's default batch size.
+def _variants():
+    v = {}
+    for d in (2, 3, 8):
+        v[f"gauss_d{d}_m256"] = (
+            model.gauss_block,
+            (_spec(256, d), _spec(256, d), _spec(256), _spec(256), _spec(256), _spec()),
+        )
+        v[f"meanshift_d{d}_m256"] = (
+            model.meanshift_blk,
+            (_spec(256, d), _spec(256, d), _spec(256), _spec(256), _spec()),
+        )
+    for d in (2, 3):
+        v[f"tsne_d{d}_m256"] = (
+            model.tsne_block,
+            (_spec(256, d), _spec(256, d), _spec(256, 256), _spec(256), _spec(256)),
+        )
+        v[f"tsne_d{d}_m128_b8"] = (
+            model.tsne_block_batch,
+            (
+                _spec(8, 128, d), _spec(8, 128, d), _spec(8, 128, 128),
+                _spec(8, 128), _spec(8, 128),
+            ),
+        )
+        v[f"tsne_norm_d{d}_m256"] = (
+            model.tsne_block_with_norm,
+            (_spec(256, d), _spec(256, d), _spec(256, 256), _spec(256), _spec(256)),
+        )
+    v["gamma_m512"] = (
+        model.gamma_block,
+        (_spec(512, 2), _spec(512, 2), _spec(512), _spec(512), _spec()),
+    )
+    return v
+
+
+VARIANTS = _variants()
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(name):
+    fn, specs = VARIANTS[name]
+    return jax.jit(fn).lower(*specs)
+
+
+def _input_entry(spec):
+    return {"shape": list(spec.shape), "dtype": str(spec.dtype)}
+
+
+def _golden_inputs(specs, seed):
+    """Deterministic dense inputs: scalars → 0.37; masks stay all-ones so the
+    golden exercises the full block; coordinates/charges ~ U(-1, 1)."""
+    rng = np.random.default_rng(seed)
+    args = []
+    for spec in specs:
+        if len(spec.shape) == 0:
+            args.append(np.float32(0.37))
+        elif len(spec.shape) >= 2:
+            args.append(
+                rng.uniform(-1.0, 1.0, size=spec.shape).astype(np.float32)
+            )
+        else:
+            # 1-D: charge or mask — use positive values; masks being
+            # non-binary is fine (kernels multiply by them linearly).
+            args.append(rng.uniform(0.1, 1.0, size=spec.shape).astype(np.float32))
+    return args
+
+
+def write_goldens(out_dir, name, specs, fn):
+    gdir = os.path.join(out_dir, "golden")
+    os.makedirs(gdir, exist_ok=True)
+    seed = int.from_bytes(hashlib.sha256(name.encode()).digest()[:4], "little")
+    args = _golden_inputs(specs, seed)
+    outs = fn(*args)
+    meta = {"inputs": [], "outputs": []}
+    for i, a in enumerate(args):
+        p = f"{name}.in{i}.bin"
+        np.asarray(a, dtype=np.float32).tofile(os.path.join(gdir, p))
+        meta["inputs"].append({"file": p, "shape": list(np.shape(a))})
+    for i, o in enumerate(outs):
+        p = f"{name}.out{i}.bin"
+        np.asarray(o, dtype=np.float32).tofile(os.path.join(gdir, p))
+        meta["outputs"].append({"file": p, "shape": list(np.shape(o))})
+    return meta
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=None, help="artifacts directory")
+    ap.add_argument("--out", default=None, help="(compat) ignored marker path")
+    ap.add_argument("--only", default=None, help="lower a single variant")
+    ap.add_argument("--no-goldens", action="store_true")
+    args = ap.parse_args(argv)
+
+    out_dir = args.out_dir
+    if out_dir is None:
+        here = os.path.dirname(os.path.abspath(__file__))
+        out_dir = os.path.join(os.path.dirname(os.path.dirname(here)), "artifacts")
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {"format": "hlo-text", "variants": {}}
+    names = [args.only] if args.only else list(VARIANTS)
+    for name in names:
+        fn, specs = VARIANTS[name]
+        text = to_hlo_text(lower_variant(name))
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entry = {
+            "file": fname,
+            "inputs": [_input_entry(s) for s in specs],
+        }
+        if not args.no_goldens:
+            entry["golden"] = write_goldens(out_dir, name, specs, fn)
+        manifest["variants"][name] = entry
+        print(f"lowered {name}: {len(text)} chars", file=sys.stderr)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    # Stamp file so `make artifacts` is incremental.
+    with open(os.path.join(out_dir, ".stamp"), "w") as f:
+        f.write("ok\n")
+    print(f"wrote {len(names)} artifacts to {out_dir}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Layer-1 Pallas kernels: the dense cluster-pair interaction hot-spots.
+
+Each module exposes one jitted, padded, masked block primitive; ``ref.py``
+holds the pure-jnp oracles.  See DESIGN.md §Hardware-Adaptation for the
+CPU-cache → TPU-VMEM mapping rationale.
+"""
+
+from .gauss import gauss_block_matvec
+from .tsne import tsne_attr_block
+from .meanshift import meanshift_block
+from .gamma import gamma_pairs
+
+__all__ = [
+    "gauss_block_matvec",
+    "tsne_attr_block",
+    "meanshift_block",
+    "gamma_pairs",
+]

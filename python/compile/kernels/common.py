@@ -1,0 +1,74 @@
+"""Shared tiling helpers for the Pallas kernels.
+
+All kernels in this package follow the same scheme, which is the TPU
+translation of the paper's block-by-block CPU traversal (DESIGN.md
+§Hardware-Adaptation):
+
+* one *dense cluster-pair block* = one (target-tile × source-tile) step of a
+  Pallas grid;
+* the BlockSpec index maps express the HBM→VMEM streaming schedule that the
+  paper expressed with its multi-level compressed-sparse-block traversal;
+* pairwise distances inside a tile use the expanded ``|t|² + |s|² − 2·T·Sᵀ``
+  form so the bulk of the FLOPs are a matmul (MXU-shaped), not elementwise.
+
+Everything is lowered with ``interpret=True``: the CPU PJRT plugin cannot run
+Mosaic custom-calls, so interpret mode is the execution path and real-TPU
+performance is assessed analytically (EXPERIMENTS.md §Perf-L1).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+
+# Default tile sizes.  (128, 128) keeps the VMEM working set of the largest
+# kernel (tsne_attr: two coord tiles + one P tile + one F tile) at
+# 128·128·4 B ≈ 64 KiB for the P tile plus a few KiB of vectors — far under
+# the ≈16 MiB VMEM of a modern TPU core, leaving room for double-buffering.
+TILE_M = 128
+TILE_N = 128
+
+INTERPRET = True  # CPU PJRT: interpret-mode Pallas only (see module doc).
+
+
+def round_up(n: int, t: int) -> int:
+    """Smallest multiple of ``t`` that is >= ``n`` (and >= t)."""
+    if n <= 0:
+        return t
+    return ((n + t - 1) // t) * t
+
+
+def pad_axis(a, axis: int, to: int):
+    """Zero-pad array ``a`` along ``axis`` up to length ``to``."""
+    n = a.shape[axis]
+    if n == to:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, to - n)
+    return jnp.pad(a, widths)
+
+
+def pad_mask(mask, to: int):
+    """Pad a 0/1 validity mask with zeros (padded entries are invalid)."""
+    return pad_axis(mask, 0, to)
+
+
+def tile_sqdist(t_tile, s_tile):
+    """Pairwise squared distances between two coordinate tiles.
+
+    Shapes: t_tile (TM, d), s_tile (TN, d) → (TM, TN).  The ``T @ Sᵀ``
+    contraction is the MXU-shaped bulk of the work; the rank-1 corrections
+    are VPU element-wise ops.  Clamped at zero against round-off.
+    """
+    t2 = jnp.sum(t_tile * t_tile, axis=1, keepdims=True)
+    s2 = jnp.sum(s_tile * s_tile, axis=1, keepdims=True).T
+    d2 = t2 + s2 - 2.0 * jnp.dot(
+        t_tile, s_tile.T, preferred_element_type=jnp.float32
+    )
+    return jnp.maximum(d2, 0.0)
+
+
+def static_kernel(fn):
+    """functools.partial-with-kwargs helper kept for symmetry/readability."""
+    return functools.partial(fn)

@@ -1,0 +1,74 @@
+"""Pallas kernel: gamma-score (Eq. 4) partial pair sums.
+
+The paper's numerical estimate of the patch-density measure is a Gaussian
+sum over all pairs of *nonzero index positions* of the matrix:
+
+    gamma(A; sigma) = 1/(sigma nnz) * sum_{p,q in Inz(A)}
+                        exp(-|p - q|^2 / sigma^2) .
+
+Treating the nonzero positions as 2-D points, the double sum is itself a
+dense all-pairs interaction — so it reuses the same tiling scheme as the
+coordinate kernels, with d = 2 and a scalar accumulator.  (The Rust side
+also has a grid-truncated O(nnz) estimator for production use; this kernel
+is the exact tile-sum used for cross-validation and for the Fig. 1 numbers.)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+from .common import INTERPRET, TILE_M, TILE_N
+
+
+def _kernel(p_ref, q_ref, pv_ref, qv_ref, s_ref, o_ref):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    d2 = common.tile_sqdist(p_ref[...], q_ref[...])
+    w = jnp.exp(-d2 * s_ref[0])
+    w = w * pv_ref[...][:, None] * qv_ref[...][None, :]
+    o_ref[0] += jnp.sum(w)
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tn"))
+def gamma_pairs(P, Q, p_valid, q_valid, inv_s2, *, tm=TILE_M, tn=TILE_N):
+    """Σ_{i,j} exp(−‖P[i]−Q[j]‖²·inv_s2) over valid pairs (scalar, f32).
+
+    P (M, 2), Q (N, 2) are nonzero index positions as floats;
+    inv_s2 = 1/σ².  Caller normalizes by 1/(σ·nnz) and sums tile pairs.
+    """
+    M = P.shape[0]
+    N = Q.shape[0]
+    mp, np_ = common.round_up(M, tm), common.round_up(N, tn)
+
+    Pp = common.pad_axis(P.astype(jnp.float32), 0, mp)
+    Qp = common.pad_axis(Q.astype(jnp.float32), 0, np_)
+    pvp = common.pad_mask(p_valid.astype(jnp.float32), mp)
+    qvp = common.pad_mask(q_valid.astype(jnp.float32), np_)
+    s = jnp.asarray(inv_s2, jnp.float32).reshape((1,))
+
+    grid = (mp // tm, np_ // tn)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, 2), lambda i, j: (i, 0)),
+            pl.BlockSpec((tn, 2), lambda i, j: (j, 0)),
+            pl.BlockSpec((tm,), lambda i, j: (i,)),
+            pl.BlockSpec((tn,), lambda i, j: (j,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i, j: (0,)),
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.float32),
+        interpret=INTERPRET,
+    )(Pp, Qp, pvp, qvp, s)
+    return out[0]

@@ -1,0 +1,83 @@
+"""Pallas kernel: mean-shift numerator/denominator for one cluster pair.
+
+The paper's second case study (§3.2): one mean-shift iteration moves each
+target (current mean estimate) t_i to
+
+    m_i = ( sum_j w_ij s_j ) / ( sum_j w_ij ),
+    w_ij = exp(-|t_i - s_j|^2 * inv_h2)
+
+over its near-neighbor sources.  Sources are stationary; targets migrate, so
+the interaction matrix profile *and* values change across iterations — the
+target-side clustering is refreshed at a lower cadence by the coordinator.
+
+This kernel computes the per-block partial numerator (M, d) and denominator
+(M,); the L3 engine reduces across all source blocks touching a target
+cluster and performs the division.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+from .common import INTERPRET, TILE_M, TILE_N
+
+
+def _kernel(t_ref, s_ref, tv_ref, sv_ref, h_ref, num_ref, den_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        num_ref[...] = jnp.zeros_like(num_ref)
+        den_ref[...] = jnp.zeros_like(den_ref)
+
+    s = s_ref[...]
+    d2 = common.tile_sqdist(t_ref[...], s)
+    w = jnp.exp(-d2 * h_ref[0])
+    w = w * tv_ref[...][:, None] * sv_ref[...][None, :]
+    num_ref[...] += jnp.dot(w, s, preferred_element_type=jnp.float32)
+    den_ref[...] += jnp.sum(w, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "tn"))
+def meanshift_block(T, S, t_valid, s_valid, inv_h2, *, tm=TILE_M, tn=TILE_N):
+    """Partial mean-shift sums for targets T (M, d) against sources S (N, d).
+
+    Returns (num (M, d), den (M,)) float32, padded entries zero.
+    """
+    M, d = T.shape
+    N = S.shape[0]
+    mp, np_ = common.round_up(M, tm), common.round_up(N, tn)
+
+    Tp = common.pad_axis(T.astype(jnp.float32), 0, mp)
+    Sp = common.pad_axis(S.astype(jnp.float32), 0, np_)
+    tvp = common.pad_mask(t_valid.astype(jnp.float32), mp)
+    svp = common.pad_mask(s_valid.astype(jnp.float32), np_)
+    h = jnp.asarray(inv_h2, jnp.float32).reshape((1,))
+
+    grid = (mp // tm, np_ // tn)
+    num, den = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tn, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((tm,), lambda i, j: (i,)),
+            pl.BlockSpec((tn,), lambda i, j: (j,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tm,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mp, d), jnp.float32),
+            jax.ShapeDtypeStruct((mp,), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(Tp, Sp, tvp, svp, h)
+    return num[:M], den[:M]

@@ -1,0 +1,106 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness ground truth: each function computes, with plain
+``jax.numpy`` ops and no tiling tricks, exactly what the corresponding Pallas
+kernel is supposed to compute.  ``python/tests`` sweeps shapes and dtypes
+with hypothesis and asserts ``allclose`` between kernel and oracle; the AOT
+goldens consumed by the Rust integration tests are also generated from these
+functions.
+
+Conventions
+-----------
+* ``T``: target coordinates, shape (M, d) — the *rows* of the interaction
+  block (response points).
+* ``S``: source coordinates, shape (N, d) — the *columns* (reference
+  points).
+* ``x``: charge vector over the sources, shape (N,) or (N, c).
+* Masks: blocks are padded to fixed tile shapes for AOT; ``t_valid`` /
+  ``s_valid`` are 0/1 float masks of shape (M,) / (N,).  Padded entries
+  contribute nothing.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pairwise_sqdist(T, S):
+    """Squared Euclidean distances, shape (M, N).
+
+    Uses the expanded form ``|t|^2 + |s|^2 - 2 t.s`` — the same algebra the
+    Pallas kernels use so that floating-point behaviour matches — clamped at
+    zero against negative round-off.
+    """
+    t2 = jnp.sum(T * T, axis=1, keepdims=True)  # (M, 1)
+    s2 = jnp.sum(S * S, axis=1, keepdims=True).T  # (1, N)
+    d2 = t2 + s2 - 2.0 * (T @ S.T)
+    return jnp.maximum(d2, 0.0)
+
+
+def gauss_block_matvec(T, S, x, t_valid, s_valid, inv_h2):
+    """Gaussian near-neighbor interaction of one cluster pair.
+
+    y_i = sum_j exp(-|t_i - s_j|^2 * inv_h2) * x_j   over valid j,
+    returned only for valid i (invalid rows are zero).
+
+    ``inv_h2`` is ``1 / (2 h^2)`` for bandwidth h (scalar, folded by caller).
+    """
+    d2 = pairwise_sqdist(T, S)
+    w = jnp.exp(-d2 * inv_h2)
+    w = w * t_valid[:, None] * s_valid[None, :]
+    return w @ x
+
+
+def tsne_attr_block(Yt, Ys, P, t_valid, s_valid):
+    """t-SNE attractive force contribution of one cluster pair.
+
+    Given embedding coordinates Yt (M, d), Ys (N, d) and the (sparse, here
+    densified per block) joint probabilities P (M, N):
+
+        q~_ij = 1 / (1 + |y_i - y_j|^2)          (Student-t numerator)
+        F_i  += sum_j P_ij * q~_ij * (y_i - y_j)
+
+    Returns F of shape (M, d).  This is the non-stationary kernel: values
+    q~_ij are recomputed from coordinates at every t-SNE iteration while the
+    sparsity profile (which P entries are nonzero) stays fixed.
+    """
+    d2 = pairwise_sqdist(Yt, Ys)
+    qn = 1.0 / (1.0 + d2)
+    w = P * qn * t_valid[:, None] * s_valid[None, :]
+    # F_i = (sum_j w_ij) * y_i - sum_j w_ij y_j
+    row = jnp.sum(w, axis=1, keepdims=True)  # (M, 1)
+    return row * Yt - w @ Ys
+
+
+def meanshift_block(T, S, t_valid, s_valid, inv_h2):
+    """Mean-shift numerator and denominator of one cluster pair.
+
+    w_ij  = exp(-|t_i - s_j|^2 * inv_h2)
+    num_i = sum_j w_ij * s_j        (M, d)
+    den_i = sum_j w_ij              (M,)
+
+    The caller forms the shifted mean  m_i = num_i / den_i  after reducing
+    over all source clusters interacting with target cluster i.
+    """
+    d2 = pairwise_sqdist(T, S)
+    w = jnp.exp(-d2 * inv_h2)
+    w = w * t_valid[:, None] * s_valid[None, :]
+    num = w @ S
+    den = jnp.sum(w, axis=1)
+    return num, den
+
+
+def gamma_pairs(P, Q, p_valid, q_valid, inv_s2):
+    """Partial gamma-score sum (Eq. 4) over two tiles of nonzero positions.
+
+    P: (M, 2) float — (row, col) index positions of nonzeros (tile A)
+    Q: (N, 2) float — positions (tile B)
+    returns  sum_{i,j} exp(-|p_i - q_j|^2 * inv_s2)  over valid pairs,
+    where inv_s2 = 1 / sigma^2.
+
+    The full gamma score is  (1 / (sigma * nnz)) * sum over all tile pairs.
+    """
+    d2 = pairwise_sqdist(P, Q)
+    w = jnp.exp(-d2 * inv_s2)
+    w = w * p_valid[:, None] * q_valid[None, :]
+    return jnp.sum(w)

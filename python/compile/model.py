@@ -1,0 +1,99 @@
+"""Layer-2: fixed-shape block programs composed from the Pallas kernels.
+
+Every function here is a *block program*: a jax function over concrete,
+AOT-friendly shapes that the Rust coordinator executes via PJRT on the dense
+blocks produced by the hierarchical reordering.  The contract with Layer 3:
+
+* shapes are fixed per artifact variant (see ``aot.VARIANTS``); the Rust
+  side pads a cluster-pair block to the variant's (M, N) with zeroed
+  validity masks;
+* all inputs/outputs are float32, row-major, and the lowered computation
+  returns a tuple (``return_tuple=True`` in the HLO conversion) which the
+  Rust runtime unpacks;
+* Python is never on the request path — these functions are lowered once by
+  ``aot.py`` into ``artifacts/*.hlo.txt``.
+
+The batched variants (leading axis B) amortize PJRT dispatch overhead: the
+coordinator's batcher groups B leaf blocks and issues one execution — the
+TPU analogue of the paper's observation that blocks must be large enough to
+amortize the per-block indirection cost.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (
+    gauss_block_matvec,
+    tsne_attr_block,
+    meanshift_block,
+    gamma_pairs,
+)
+
+
+# --------------------------------------------------------------------------
+# Single-block programs
+# --------------------------------------------------------------------------
+
+def gauss_block(T, S, x, t_valid, s_valid, inv_h2):
+    """One Gaussian cluster-pair matvec block.  Returns (y,)."""
+    return (gauss_block_matvec(T, S, x, t_valid, s_valid, inv_h2),)
+
+
+def tsne_block(Yt, Ys, P, t_valid, s_valid):
+    """One t-SNE attractive-force block.  Returns (F,)."""
+    return (tsne_attr_block(Yt, Ys, P, t_valid, s_valid),)
+
+
+def meanshift_blk(T, S, t_valid, s_valid, inv_h2):
+    """One mean-shift partial-sums block.  Returns (num, den)."""
+    num, den = meanshift_block(T, S, t_valid, s_valid, inv_h2)
+    return (num, den)
+
+
+def gamma_block(P, Q, p_valid, q_valid, inv_s2):
+    """One gamma-score tile-pair partial sum.  Returns (partial,) shape (1,)."""
+    return (gamma_pairs(P, Q, p_valid, q_valid, inv_s2).reshape((1,)),)
+
+
+# --------------------------------------------------------------------------
+# Batched programs (vmapped over a leading block axis)
+# --------------------------------------------------------------------------
+
+def tsne_block_batch(Yt, Ys, P, t_valid, s_valid):
+    """B independent t-SNE attractive blocks in one dispatch.
+
+    Shapes: Yt (B, M, d), Ys (B, N, d), P (B, M, N), masks (B, M)/(B, N).
+    Returns (F,) with F (B, M, d).
+    """
+    f = jax.vmap(tsne_attr_block, in_axes=(0, 0, 0, 0, 0))
+    return (f(Yt, Ys, P, t_valid, s_valid),)
+
+
+def gauss_block_batch(T, S, x, t_valid, s_valid, inv_h2):
+    """B independent Gaussian matvec blocks in one dispatch.
+
+    inv_h2 is shared across the batch (scalar).  Returns (y,) with (B, M).
+    """
+    f = jax.vmap(gauss_block_matvec, in_axes=(0, 0, 0, 0, 0, None))
+    return (f(T, S, x, t_valid, s_valid, inv_h2),)
+
+
+def meanshift_block_batch(T, S, t_valid, s_valid, inv_h2):
+    """B independent mean-shift partial-sum blocks.  Returns (num, den)."""
+    f = jax.vmap(meanshift_block, in_axes=(0, 0, 0, 0, None))
+    num, den = f(T, S, t_valid, s_valid, inv_h2)
+    return (num, den)
+
+
+# --------------------------------------------------------------------------
+# Whole-iteration fused programs (used by the end-to-end example): one
+# dispatch computes the full dense attractive force of a *single* cluster
+# pair plus the Frobenius norm used for convergence monitoring.
+# --------------------------------------------------------------------------
+
+def tsne_block_with_norm(Yt, Ys, P, t_valid, s_valid):
+    """t-SNE attractive block + squared force norm (convergence metric)."""
+    (F,) = tsne_block(Yt, Ys, P, t_valid, s_valid)
+    return (F, jnp.sum(F * F).reshape((1,)))

@@ -1,0 +1,141 @@
+"""Kernel-vs-oracle correctness: hypothesis sweeps shapes, tiles, masks.
+
+This is the CORE correctness signal for Layer 1: every Pallas kernel must
+match its pure-jnp oracle to float32 tolerance on arbitrary shapes (padding
+paths included), arbitrary tile sizes, and arbitrary validity masks.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    gauss_block_matvec,
+    tsne_attr_block,
+    meanshift_block,
+    gamma_pairs,
+    ref,
+)
+
+# Keep hypothesis deadlines off: interpret-mode pallas first-call tracing is
+# slow and variable.
+COMMON = dict(deadline=None, max_examples=25)
+
+dims = st.sampled_from([1, 2, 3, 5, 8])
+sizes = st.integers(min_value=1, max_value=70)
+tiles = st.sampled_from([8, 16, 32])
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def _mk(rng, m, n, d):
+    T = rng.normal(size=(m, d)).astype(np.float32)
+    S = rng.normal(size=(n, d)).astype(np.float32)
+    tv = (rng.random(m) < 0.85).astype(np.float32)
+    sv = (rng.random(n) < 0.85).astype(np.float32)
+    return T, S, tv, sv
+
+
+@settings(**COMMON)
+@given(m=sizes, n=sizes, d=dims, tm=tiles, tn=tiles, seed=seeds)
+def test_gauss_matches_ref(m, n, d, tm, tn, seed):
+    rng = np.random.default_rng(seed)
+    T, S, tv, sv = _mk(rng, m, n, d)
+    x = rng.normal(size=(n,)).astype(np.float32)
+    got = np.asarray(gauss_block_matvec(T, S, x, tv, sv, 0.37, tm=tm, tn=tn))
+    want = np.asarray(ref.gauss_block_matvec(T, S, x, tv, sv, 0.37))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@settings(**COMMON)
+@given(m=sizes, n=sizes, d=st.sampled_from([2, 3]), tm=tiles, tn=tiles, seed=seeds)
+def test_tsne_matches_ref(m, n, d, tm, tn, seed):
+    rng = np.random.default_rng(seed)
+    Yt, Ys, tv, sv = _mk(rng, m, n, d)
+    P = rng.random((m, n)).astype(np.float32)
+    got = np.asarray(tsne_attr_block(Yt, Ys, P, tv, sv, tm=tm, tn=tn))
+    want = np.asarray(ref.tsne_attr_block(Yt, Ys, P, tv, sv))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@settings(**COMMON)
+@given(m=sizes, n=sizes, d=dims, tm=tiles, tn=tiles, seed=seeds)
+def test_meanshift_matches_ref(m, n, d, tm, tn, seed):
+    rng = np.random.default_rng(seed)
+    T, S, tv, sv = _mk(rng, m, n, d)
+    gn, gd = meanshift_block(T, S, tv, sv, 0.21, tm=tm, tn=tn)
+    wn, wd = ref.meanshift_block(T, S, tv, sv, 0.21)
+    np.testing.assert_allclose(np.asarray(gn), np.asarray(wn), rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(gd), np.asarray(wd), rtol=2e-5, atol=2e-5)
+
+
+@settings(**COMMON)
+@given(m=sizes, n=sizes, tm=tiles, tn=tiles, seed=seeds)
+def test_gamma_matches_ref(m, n, tm, tn, seed):
+    rng = np.random.default_rng(seed)
+    P = rng.integers(0, 200, size=(m, 2)).astype(np.float32)
+    Q = rng.integers(0, 200, size=(n, 2)).astype(np.float32)
+    pv = (rng.random(m) < 0.85).astype(np.float32)
+    qv = (rng.random(n) < 0.85).astype(np.float32)
+    got = float(gamma_pairs(P, Q, pv, qv, 1.0 / 25.0, tm=tm, tn=tn))
+    want = float(ref.gamma_pairs(P, Q, pv, qv, 1.0 / 25.0))
+    assert got == pytest.approx(want, rel=2e-4, abs=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Directed edge cases
+# ---------------------------------------------------------------------------
+
+def test_gauss_all_invalid_sources_is_zero():
+    rng = np.random.default_rng(7)
+    T, S, tv, _ = _mk(rng, 20, 30, 3)
+    x = rng.normal(size=(30,)).astype(np.float32)
+    sv = np.zeros(30, np.float32)
+    y = np.asarray(gauss_block_matvec(T, S, x, tv, sv, 1.0, tm=16, tn=16))
+    assert np.all(y == 0.0)
+
+
+def test_gauss_identical_points_weight_one():
+    # Coincident target/source: weight exp(0) = 1 regardless of bandwidth.
+    P = np.zeros((1, 2), np.float32)
+    one = np.ones(1, np.float32)
+    y = np.asarray(gauss_block_matvec(P, P, 3.0 * one, one, one, 123.0, tm=8, tn=8))
+    np.testing.assert_allclose(y, [3.0], rtol=1e-6)
+
+
+def test_tsne_zero_p_gives_zero_force():
+    rng = np.random.default_rng(8)
+    Yt, Ys, tv, sv = _mk(rng, 17, 19, 2)
+    P = np.zeros((17, 19), np.float32)
+    F = np.asarray(tsne_attr_block(Yt, Ys, P, tv, sv, tm=8, tn=8))
+    assert np.all(F == 0.0)
+
+
+def test_tsne_force_is_attractive_pairwise():
+    # Two points, P=1: force on y0 points toward y1.
+    Yt = np.array([[0.0, 0.0]], np.float32)
+    Ys = np.array([[1.0, 0.0]], np.float32)
+    one = np.ones(1, np.float32)
+    P = np.ones((1, 1), np.float32)
+    F = np.asarray(tsne_attr_block(Yt, Ys, P, one, one, tm=8, tn=8))
+    # F = p*q*(y_t - y_s) = 0.5 * (-1, 0): gradient *descent* direction is -F,
+    # i.e. toward the source.
+    np.testing.assert_allclose(F, [[-0.5, 0.0]], rtol=1e-6)
+
+
+def test_meanshift_mean_of_identical_sources():
+    # All sources at the same location: shifted mean must be that location.
+    T = np.zeros((5, 3), np.float32)
+    S = np.tile(np.array([[1.0, 2.0, 3.0]], np.float32), (11, 1))
+    tv = np.ones(5, np.float32)
+    sv = np.ones(11, np.float32)
+    num, den = meanshift_block(T, S, tv, sv, 0.05, tm=8, tn=8)
+    m = np.asarray(num) / np.asarray(den)[:, None]
+    np.testing.assert_allclose(m, np.tile([[1, 2, 3]], (5, 1)), rtol=1e-5)
+
+
+def test_gamma_single_pair_known_value():
+    P = np.array([[0.0, 0.0]], np.float32)
+    Q = np.array([[3.0, 4.0]], np.float32)  # dist^2 = 25
+    one = np.ones(1, np.float32)
+    g = float(gamma_pairs(P, Q, one, one, 1.0 / 25.0, tm=8, tn=8))
+    assert g == pytest.approx(np.exp(-1.0), rel=1e-5)

@@ -1,0 +1,115 @@
+"""Layer-2 checks: block-program shapes, batching semantics, AOT lowering.
+
+Verifies that (i) each AOT variant lowers to HLO text the xla_extension
+parser accepts structurally (non-empty, ENTRY present, f32 only); (ii) the
+batched programs equal per-block loops; (iii) goldens round-trip.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+
+def test_variant_table_is_consistent():
+    for name, (fn, specs) in aot.VARIANTS.items():
+        assert callable(fn), name
+        for s in specs:
+            assert str(s.dtype) == "float32", f"{name}: non-f32 input {s}"
+
+
+@pytest.mark.parametrize("name", sorted(aot.VARIANTS))
+def test_lowering_produces_hlo_text(name):
+    text = aot.to_hlo_text(aot.lower_variant(name))
+    assert "ENTRY" in text
+    assert "HloModule" in text
+    # 64-bit-id proto issue is bypassed by text; sanity: text parses as ASCII
+    text.encode("ascii")
+
+
+def test_batched_tsne_equals_loop():
+    rng = np.random.default_rng(3)
+    B, M, N, d = 4, 32, 32, 2
+    Yt = rng.normal(size=(B, M, d)).astype(np.float32)
+    Ys = rng.normal(size=(B, N, d)).astype(np.float32)
+    P = rng.random((B, M, N)).astype(np.float32)
+    tv = np.ones((B, M), np.float32)
+    sv = np.ones((B, N), np.float32)
+    (Fb,) = model.tsne_block_batch(Yt, Ys, P, tv, sv)
+    for b in range(B):
+        want = ref.tsne_attr_block(Yt[b], Ys[b], P[b], tv[b], sv[b])
+        np.testing.assert_allclose(np.asarray(Fb[b]), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_batched_gauss_equals_loop():
+    rng = np.random.default_rng(4)
+    B, M, N, d = 3, 24, 40, 3
+    T = rng.normal(size=(B, M, d)).astype(np.float32)
+    S = rng.normal(size=(B, N, d)).astype(np.float32)
+    x = rng.normal(size=(B, N)).astype(np.float32)
+    tv = np.ones((B, M), np.float32)
+    sv = np.ones((B, N), np.float32)
+    (yb,) = model.gauss_block_batch(T, S, x, tv, sv, 0.5)
+    for b in range(B):
+        want = ref.gauss_block_matvec(T[b], S[b], x[b], tv[b], sv[b], 0.5)
+        np.testing.assert_allclose(np.asarray(yb[b]), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_batched_meanshift_equals_loop():
+    rng = np.random.default_rng(5)
+    B, M, N, d = 3, 16, 16, 3
+    T = rng.normal(size=(B, M, d)).astype(np.float32)
+    S = rng.normal(size=(B, N, d)).astype(np.float32)
+    tv = np.ones((B, M), np.float32)
+    sv = np.ones((B, N), np.float32)
+    num, den = model.meanshift_block_batch(T, S, tv, sv, 0.3)
+    for b in range(B):
+        wn, wd = ref.meanshift_block(T[b], S[b], tv[b], sv[b], 0.3)
+        np.testing.assert_allclose(np.asarray(num[b]), np.asarray(wn),
+                                   rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(np.asarray(den[b]), np.asarray(wd),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_tsne_with_norm_consistent():
+    rng = np.random.default_rng(6)
+    M, N, d = 48, 48, 2
+    Yt = rng.normal(size=(M, d)).astype(np.float32)
+    Ys = rng.normal(size=(N, d)).astype(np.float32)
+    P = rng.random((M, N)).astype(np.float32)
+    tv = np.ones(M, np.float32)
+    sv = np.ones(N, np.float32)
+    F, n2 = model.tsne_block_with_norm(Yt, Ys, P, tv, sv)
+    assert float(n2[0]) == pytest.approx(float(np.sum(np.asarray(F) ** 2)), rel=1e-4)
+
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="artifacts not built")
+def test_goldens_match_oracle_recompute():
+    """Golden outputs on disk == recomputing the block program now."""
+    with open(os.path.join(ART, "manifest.json")) as f:
+        manifest = json.load(f)
+    for name, entry in sorted(manifest["variants"].items()):
+        g = entry.get("golden")
+        if g is None:
+            continue
+        fn, specs = aot.VARIANTS[name]
+        args = []
+        for spec, meta in zip(specs, g["inputs"]):
+            a = np.fromfile(os.path.join(ART, "golden", meta["file"]),
+                            dtype=np.float32)
+            args.append(a.reshape(meta["shape"]) if meta["shape"] else a[()])
+        outs = fn(*args)
+        for o, meta in zip(outs, g["outputs"]):
+            want = np.fromfile(os.path.join(ART, "golden", meta["file"]),
+                               dtype=np.float32).reshape(meta["shape"])
+            np.testing.assert_allclose(np.asarray(o), want, rtol=1e-5, atol=1e-5)

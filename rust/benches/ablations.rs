@@ -1,0 +1,114 @@
+//! **Ablations** for the design claims of §2.4 / §4.3:
+//!
+//! 1. *multi-level vs single-level (flat) traversal* of the same blocked
+//!    matrix ("multi-level computation of interactions outperforms its
+//!    single-level counterpart");
+//! 2. *multi-dimensional vs 1-D embedding* for the same hierarchical
+//!    method (γ across embedding dimension 1/2/3);
+//! 3. *hierarchical vs lexical* ordering in the same embedding space;
+//! 4. *block capacity sweep* — the perf-pass finding that blocking
+//!    granularity trades PJRT tile fit against row shredding;
+//! 5. *dense-storage threshold sweep* — dense blocks trade wasted flops
+//!    for streaming access.
+
+use nni::bench::{pipeline_for, print_header, Table, Workload};
+use nni::csb::hier::HierCsb;
+use nni::order::OrderingKind;
+use nni::profile::gamma;
+use nni::spmv;
+use nni::util::cli::Args;
+use nni::util::timer::bench_default;
+
+fn main() {
+    let a = Args::new("ablations over the design choices of §2.4")
+        .opt("n", "8192", "points")
+        .opt("seed", "42", "rng seed")
+        .parse();
+    let n = a.get_usize("n");
+    print_header("ablations", "§2.4 design-choice ablations");
+    let wl = Workload::Sift;
+    let (ds, m) = wl.make(n, a.get_u64("seed"), 0);
+    let sigma = wl.k() as f64 / 2.0;
+
+    // --- 1. multilevel vs flat traversal -------------------------------
+    let dt = pipeline_for(&OrderingKind::DualTree { d: 3 }, a.get_u64("seed")).run(&ds, &m);
+    let tree = dt.tree.as_ref().unwrap();
+    let csb = HierCsb::build(&dt.reordered, tree, tree, 2048);
+    let x = vec![1.0f32; n];
+    let mut y = vec![0.0f32; n];
+    let t_ml = bench_default(|| spmv::multilevel::spmv_ml_seq(&csb, &x, &mut y));
+    let flat = csb.flat_order();
+    let t_flat = bench_default(|| csb.spmv_ordered(&flat, &x, &mut y));
+    let mut t1 = Table::new("ablation_traversal", &["schedule", "ms", "vs_flat"]);
+    t1.row(vec![
+        "multi-level".into(),
+        format!("{:.3}", t_ml.robust_min_s * 1e3),
+        format!("{:.2}", t_flat.robust_min_s / t_ml.robust_min_s),
+    ]);
+    t1.row(vec![
+        "flat (CSB-like)".into(),
+        format!("{:.3}", t_flat.robust_min_s * 1e3),
+        "1.00".into(),
+    ]);
+    t1.finish();
+
+    // --- 2+3. embedding dimension × ordering style ----------------------
+    let mut t2 = Table::new(
+        "ablation_embedding",
+        &["ordering", "dim", "gamma", "bandwidth"],
+    );
+    for d in [1usize, 2, 3] {
+        for (style, kind) in [
+            ("lexical", OrderingKind::Lex { d }),
+            ("dual-tree", OrderingKind::DualTree { d }),
+        ] {
+            let kind = if d == 1 && style == "lexical" {
+                OrderingKind::Pca1d
+            } else {
+                kind
+            };
+            let r = pipeline_for(&kind, a.get_u64("seed")).run(&ds, &m);
+            t2.row(vec![
+                style.into(),
+                d.to_string(),
+                format!("{:.2}", gamma::gamma_fast(&r.reordered, sigma)),
+                r.reordered.bandwidth().to_string(),
+            ]);
+        }
+    }
+    t2.finish();
+    println!("expected: gamma grows with dim; dual-tree >= lexical per dim\n");
+
+    // --- 4. block capacity sweep ----------------------------------------
+    let mut t3 = Table::new("ablation_block_cap", &["block_cap", "blocks", "ms"]);
+    for cap in [128usize, 256, 512, 1024, 2048, 4096] {
+        let c = HierCsb::build(&dt.reordered, tree, tree, cap);
+        let t = bench_default(|| spmv::multilevel::spmv_ml_seq(&c, &x, &mut y));
+        t3.row(vec![
+            cap.to_string(),
+            c.blocks.len().to_string(),
+            format!("{:.3}", t.robust_min_s * 1e3),
+        ]);
+    }
+    t3.finish();
+    println!("expected: small caps shred rows (per-block-row overhead); large caps");
+    println!("lose blocking; sweet spot ~64x nnz/row (EXPERIMENTS.md §Perf)\n");
+
+    // --- 5. dense threshold sweep ---------------------------------------
+    let mut t4 = Table::new(
+        "ablation_dense_threshold",
+        &["threshold", "dense_frac", "ms"],
+    );
+    for thr in [0.1f64, 0.25, 0.5, 0.75, 1.01] {
+        let c = HierCsb::build_with(&dt.reordered, tree, tree, 256, thr);
+        let t = bench_default(|| spmv::multilevel::spmv_ml_seq(&c, &x, &mut y));
+        t4.row(vec![
+            format!("{thr}"),
+            format!("{:.2}", c.dense_fraction()),
+            format!("{:.3}", t.robust_min_s * 1e3),
+        ]);
+    }
+    t4.finish();
+    println!("expected: low thresholds waste flops on zeros in SpMV (they exist for");
+    println!("the PJRT artifact path, where padded dense tiles are free on the MXU)");
+}

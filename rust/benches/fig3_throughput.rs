@@ -1,0 +1,143 @@
+//! **Fig. 3 reproduction**: t-SNE attractive-force execution time under the
+//! six orderings, sequential (top plots) and parallel (bottom plots),
+//! across problem sizes — normalized to the scattered-sequential time, the
+//! paper's own reference.  The dotted-gray roofline of the paper (the
+//! banded/scattered MKL SpMV ratio from the §4.1 micro-benchmark) is
+//! reported alongside, computed on this machine.
+//!
+//! Output: one row per (workload, n): the time ratio (scattered-seq /
+//! ordering-time) per ordering — higher is better, 1.0 = reference.
+//!
+//! Testbed note (EXPERIMENTS.md): on a single-core container with a 260 MB
+//! LLC the roofline ratio is ≈1.0 and parallel speedups cannot exceed 1 —
+//! the *ranking* across orderings and the γ-consistency are the
+//! reproducible shape here.
+
+use nni::bench::{pipeline_for, print_header, Table, Workload};
+use nni::csb::hier::HierCsb;
+use nni::interact::engine::Engine;
+use nni::order::OrderingKind;
+use nni::par::pool::default_threads;
+use nni::sparse::gen;
+use nni::spmv;
+use nni::util::cli::Args;
+use nni::util::rng::Rng;
+use nni::util::timer::bench_default;
+
+fn main() {
+    let a = Args::new("Fig. 3: attractive-force time ratios per ordering")
+        .opt("sizes", "2048,4096,8192", "problem sizes (paper: 2^11..2^17)")
+        .opt("seed", "42", "rng seed")
+        .opt("threads", "0", "0 = all cores")
+        .opt("block-cap", "2048", "CSB block capacity")
+        .flag("gist", "also run the GIST-like workload (slow kNN at D=960)")
+        .parse();
+    let threads = if a.get_usize("threads") == 0 {
+        default_threads()
+    } else {
+        a.get_usize("threads")
+    };
+    print_header(
+        "fig3_throughput",
+        "Fig. 3 — t-SNE attractive force, seq + parallel, normalized to scattered-seq",
+    );
+
+    let kinds = OrderingKind::table1_set();
+    let mut cols: Vec<String> = vec!["set".into(), "n".into(), "roofline".into()];
+    for k in &kinds {
+        cols.push(format!("{}(seq)", k.label()));
+    }
+    for k in &kinds {
+        cols.push(format!("{}(par{threads})", k.label()));
+    }
+    let colrefs: Vec<&str> = cols.iter().map(String::as_str).collect();
+    let mut table = Table::new("fig3_throughput", &colrefs);
+
+    let workloads: Vec<Workload> = if a.get_flag("gist") {
+        vec![Workload::Sift, Workload::Gist]
+    } else {
+        vec![Workload::Sift]
+    };
+    for wl in workloads {
+        for &n in &a.get_usize_list("sizes") {
+            let (ds, m) = wl.make(n, a.get_u64("seed"), threads);
+            // Roofline: banded vs scattered CSR SpMV at matched sparsity
+            // (the paper's dotted gray line, measured on this machine).
+            let per_row = (m.nnz() / n).max(1);
+            let banded = gen::banded(n, per_row, 7);
+            let scat_m = gen::scattered(n, per_row, 7);
+            let x = vec![1.0f32; n];
+            let mut yv = vec![0.0f32; n];
+            let t_band = bench_default(|| spmv::csr::spmv_seq(&banded, &x, &mut yv));
+            let t_scat_m = bench_default(|| spmv::csr::spmv_seq(&scat_m, &x, &mut yv));
+            let roofline = t_scat_m.robust_min_s / t_band.robust_min_s;
+
+            // Embedding coordinates for the force evaluation (tree order
+            // per ordering; d=2 like the paper's visual case).
+            let d = 2;
+            let mut rng = Rng::new(9);
+            let y0: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+
+            // Reference: scattered ordering, sequential.
+            let mut times_seq = Vec::new();
+            let mut times_par = Vec::new();
+            for kind in &kinds {
+                let r = pipeline_for(kind, a.get_u64("seed")).run(&ds, &m);
+                // CSB requires a tree; non-tree orderings get one from a
+                // boxtree over the permuted embedding when available, else
+                // a trivial 1-D tree over positions (flat blocking), which
+                // is exactly what a non-hierarchical ordering offers.
+                let engine = match (&r.tree, &r.embedded) {
+                    (Some(tree), _) => {
+                        let csb = HierCsb::build(&r.reordered, tree, tree, a.get_usize("block-cap"));
+                        Engine::new(csb, threads)
+                    }
+                    (None, _) => {
+                        // position tree: balanced intervals over 0..n
+                        let pos_ds = nni::data::dataset::Dataset::new(
+                            n,
+                            1,
+                            (0..n).map(|i| i as f32).collect(),
+                        );
+                        let tree = nni::tree::boxtree::BoxTree::build(&pos_ds, 16, 32);
+                        // tree.perm is identity for sorted 1-D data
+                        let csb =
+                            HierCsb::build(&r.reordered, &tree, &tree, a.get_usize("block-cap"));
+                        Engine::new(csb, threads)
+                    }
+                };
+                let yt: Vec<f32> = {
+                    // tree order of the embedding coordinates
+                    let mut v = vec![0.0f32; n * d];
+                    for (k, &p) in r.perm.iter().enumerate() {
+                        v[k * d..(k + 1) * d].copy_from_slice(&y0[p * d..(p + 1) * d]);
+                    }
+                    v
+                };
+                let mut force = vec![0.0f32; n * d];
+                let eng_seq = Engine::new(engine.csb.clone(), 1);
+                let t_seq = bench_default(|| eng_seq.tsne_attr(&yt, d, &mut force));
+                let t_par = bench_default(|| engine.tsne_attr(&yt, d, &mut force));
+                times_seq.push(t_seq.robust_min_s);
+                times_par.push(t_par.robust_min_s);
+            }
+            let reference = times_seq[0]; // scattered sequential
+            let mut cells = vec![
+                wl.name().to_string(),
+                n.to_string(),
+                format!("{roofline:.2}"),
+            ];
+            for t in &times_seq {
+                cells.push(format!("{:.2}", reference / t));
+            }
+            for t in &times_par {
+                cells.push(format!("{:.2}", reference / t));
+            }
+            table.row(cells);
+        }
+    }
+    table.finish();
+    println!("\nvalues are speedups over scattered-sequential (paper's reference line).");
+    println!("expected shape: 3D DT highest among orderings; sequential DT approaches");
+    println!("the roofline column; parallel values scale with available cores.");
+}

@@ -1,0 +1,50 @@
+//! **Table 1 reproduction**: kernel-based patch-density estimates
+//! γ(A(π_t, π_s); σ = k/2) for the SIFT (k=30) and GIST (k=90) interaction
+//! matrices under the six orderings of Fig. 2: rand, rCM, 1D, 2D lex,
+//! 3D lex, 3D DT.
+//!
+//! Paper's values (2^14 points): SIFT 2.3 / 14.3 / 6.1 / 12.1 / 12.1 / 20.0;
+//! GIST 71.2 / 243.6 / 286.7 / 352.1 / 361.3 / 409.6.  Expected *shape*:
+//! rand lowest, dual-tree highest, multi-dimensional lexical above 1D.
+//!
+//! Size defaults to 2^12 (exact kNN at D=960 is the cost driver; pass
+//! `--n 16384` for the paper's full 2^14).
+
+use nni::bench::{pipeline_for, print_header, Table, Workload};
+use nni::profile::gamma;
+use nni::util::cli::Args;
+use nni::util::timer::time_once;
+
+fn main() {
+    let a = Args::new("Table 1: gamma per ordering")
+        .opt("n", "4096", "points per dataset (paper: 16384)")
+        .opt("seed", "42", "rng seed")
+        .opt("threads", "0", "0 = all cores")
+        .parse();
+    let n = a.get_usize("n");
+    print_header(
+        "table1_gamma",
+        "Table 1 — gamma(A; sigma=k/2) across orderings, SIFT k=30 / GIST k=90",
+    );
+
+    let mut table = Table::new(
+        "table1_gamma",
+        &["set", "k", "rand", "rCM", "1D", "2D lex", "3D lex", "3D DT"],
+    );
+    for wl in [Workload::Sift, Workload::Gist] {
+        let ((ds, m), t_build) =
+            time_once(|| wl.make(n, a.get_u64("seed"), a.get_usize("threads")));
+        eprintln!("# {} built in {t_build:.1}s (nnz={})", wl.name(), m.nnz());
+        let sigma = wl.k() as f64 / 2.0;
+        let mut cells = vec![wl.name().to_string(), wl.k().to_string()];
+        for kind in nni::order::OrderingKind::table1_set() {
+            let r = pipeline_for(&kind, a.get_u64("seed")).run(&ds, &m);
+            let g = gamma::gamma_fast(&r.reordered, sigma);
+            cells.push(format!("{g:.1}"));
+        }
+        table.row(cells);
+    }
+    table.finish();
+    println!("\npaper (2^14): SIFT 2.3/14.3/6.1/12.1/12.1/20.0 | GIST 71.2/243.6/286.7/352.1/361.3/409.6");
+    println!("expected shape: rand lowest; 3D DT highest; 2D/3D lex > 1D");
+}

@@ -1,0 +1,6 @@
+//! The paper's case studies (§3) as first-class applications: t-SNE with
+//! hierarchically-reordered attractive-force interactions, and mean shift
+//! with cadenced re-clustering.
+
+pub mod meanshift;
+pub mod tsne;

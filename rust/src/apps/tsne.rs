@@ -1,0 +1,389 @@
+//! t-SNE (van der Maaten & Hinton 2008) with the paper's hierarchical
+//! near-neighbor interaction engine for the attractive force (§3.1).
+//!
+//! Pipeline: perplexity-calibrated sparse joint probabilities P over the
+//! kNN graph of the *feature-space* data → dual-tree reorder of P (profile
+//! fixed across iterations) → per-iteration attractive force through the
+//! [`Coordinator`] (Rust + PJRT hybrid) and exact repulsive force — the
+//! paper accelerates the attractive term; the repulsive term follows the
+//! reference algorithm.
+//!
+//! [`Coordinator`]: crate::coordinator::Coordinator
+
+use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::Coordinator;
+use crate::csb::hier::HierCsb;
+use crate::data::dataset::Dataset;
+use crate::interact::engine::Engine;
+use crate::knn::exact::{knn_graph, KnnGraph};
+use crate::order::Pipeline;
+use crate::par::pool::ThreadPool;
+use crate::runtime::ArtifactRegistry;
+use crate::sparse::csr::Csr;
+use crate::util::rng::Rng;
+
+/// t-SNE hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct TsneConfig {
+    /// Output dimension (2 or 3 — must match an AOT artifact for the PJRT
+    /// path).
+    pub d: usize,
+    pub perplexity: f64,
+    /// Neighbors in the sparse P profile (default 3·perplexity).
+    pub k: usize,
+    pub iters: usize,
+    pub early_exaggeration: f32,
+    pub exaggeration_iters: usize,
+    pub learning_rate: f32,
+    pub momentum_start: f32,
+    pub momentum_final: f32,
+    pub threads: usize,
+    pub seed: u64,
+    /// Leaf capacity of the dual-tree reorder.
+    pub leaf_cap: usize,
+    /// Use the PJRT artifact path for dense blocks.
+    pub use_pjrt: bool,
+}
+
+impl Default for TsneConfig {
+    fn default() -> Self {
+        TsneConfig {
+            d: 2,
+            perplexity: 30.0,
+            k: 90,
+            iters: 500,
+            early_exaggeration: 12.0,
+            exaggeration_iters: 100,
+            learning_rate: 200.0,
+            momentum_start: 0.5,
+            momentum_final: 0.8,
+            threads: 0,
+            seed: 42,
+            leaf_cap: 256,
+            use_pjrt: false,
+        }
+    }
+}
+
+/// Per-logging-step record of the run.
+#[derive(Clone, Debug)]
+pub struct TsneLogEntry {
+    pub iter: usize,
+    pub kl: f64,
+    pub grad_norm: f64,
+    pub seconds: f64,
+}
+
+/// Result: embedding (original point order) + loss curve + metrics summary.
+pub struct TsneResult {
+    pub embedding: Dataset,
+    pub log: Vec<TsneLogEntry>,
+    pub metrics_summary: String,
+}
+
+/// Conditional-to-joint P matrix via perplexity calibration (binary search
+/// on the Gaussian precision per point, as in the reference algorithm).
+pub fn joint_probabilities(g: &KnnGraph, perplexity: f64, pool: &ThreadPool) -> Csr {
+    let n = g.n;
+    let k = g.k;
+    let target_h = perplexity.ln();
+    let rows: Vec<usize> = (0..n).collect();
+    let cond: Vec<Vec<f32>> = pool.map(&rows, |&i| {
+        let d2 = g.distances(i);
+        // binary search beta (precision) so that entropy(P_i) = ln(perp)
+        let mut beta = 1.0f64;
+        let (mut lo, mut hi) = (f64::MIN_POSITIVE, f64::MAX);
+        let mut p = vec![0.0f64; k];
+        for _ in 0..64 {
+            let mut sum = 0.0f64;
+            for (t, &dd) in d2.iter().enumerate() {
+                p[t] = (-(dd as f64 - d2[0] as f64) * beta).exp();
+                sum += p[t];
+            }
+            // entropy H = ln(sum) + beta * <d2>_P  (up to the shift)
+            let mut h = 0.0f64;
+            for (t, &dd) in d2.iter().enumerate() {
+                h += p[t] / sum * (dd as f64 - d2[0] as f64);
+            }
+            let h = sum.ln() + beta * h;
+            if (h - target_h).abs() < 1e-5 {
+                break;
+            }
+            if h > target_h {
+                lo = beta;
+                beta = if hi == f64::MAX { beta * 2.0 } else { 0.5 * (beta + hi) };
+            } else {
+                hi = beta;
+                beta = 0.5 * (beta + lo.max(f64::MIN_POSITIVE));
+            }
+        }
+        let sum: f64 = p.iter().sum();
+        p.iter().map(|&x| (x / sum) as f32).collect()
+    });
+    // symmetrize: P_ij = (P(j|i) + P(i|j)) / (2N)
+    let mut r = Vec::with_capacity(2 * n * k);
+    let mut c = Vec::with_capacity(2 * n * k);
+    let mut v = Vec::with_capacity(2 * n * k);
+    let scale = 1.0 / (2.0 * n as f64);
+    for i in 0..n {
+        for (t, &j) in g.neighbors(i).iter().enumerate() {
+            let p = (cond[i][t] as f64 * scale) as f32;
+            r.push(i as u32);
+            c.push(j);
+            v.push(p);
+            r.push(j);
+            c.push(i as u32);
+            v.push(p);
+        }
+    }
+    Csr::from_triplets(n, n, &r, &c, &v)
+}
+
+/// Exact repulsive force and the partition constant Z:
+/// `F_i = Σ_j q̃_ij² (y_i − y_j) / Z`, `Z = Σ_{i≠j} q̃_ij`.
+pub fn repulsive_exact(y: &[f32], n: usize, d: usize, pool: &ThreadPool, out: &mut [f32]) -> f64 {
+    let rows: Vec<usize> = (0..n).collect();
+    let per_row: Vec<(Vec<f32>, f64)> = pool.map(&rows, |&i| {
+        let yi = &y[i * d..(i + 1) * d];
+        let mut f = vec![0.0f32; d];
+        let mut z = 0.0f64;
+        for j in 0..n {
+            if j == i {
+                continue;
+            }
+            let yj = &y[j * d..(j + 1) * d];
+            let mut d2 = 0.0f32;
+            for k in 0..d {
+                let t = yi[k] - yj[k];
+                d2 += t * t;
+            }
+            let q = 1.0 / (1.0 + d2);
+            let q2 = q * q;
+            for k in 0..d {
+                f[k] += q2 * (yi[k] - yj[k]);
+            }
+            z += q as f64;
+        }
+        (f, z)
+    });
+    let mut z_total = 0.0f64;
+    for (i, (f, z)) in per_row.iter().enumerate() {
+        out[i * d..(i + 1) * d].copy_from_slice(f);
+        z_total += z;
+    }
+    // normalize by Z
+    let zf = (1.0 / z_total) as f32;
+    for v in out.iter_mut() {
+        *v *= zf;
+    }
+    z_total
+}
+
+/// KL divergence Σ p log(p/q) over the sparse P profile (tree order).
+fn kl_divergence(csb: &HierCsb, y: &[f32], d: usize, z: f64) -> f64 {
+    let mut kl = 0.0f64;
+    for t in 0..csb.blocks.len() {
+        let b = &csb.blocks[t];
+        let r0 = b.rows.lo as usize;
+        let c0 = b.cols.lo as usize;
+        csb.for_each_nz(t, |r, c, p| {
+            if p <= 0.0 {
+                return;
+            }
+            let yi = &y[(r0 + r) * d..(r0 + r + 1) * d];
+            let yj = &y[(c0 + c) * d..(c0 + c + 1) * d];
+            let mut d2 = 0.0f32;
+            for k in 0..d {
+                let t = yi[k] - yj[k];
+                d2 += t * t;
+            }
+            let q = (1.0 / (1.0 + d2)) as f64 / z;
+            kl += p as f64 * (p as f64 / q.max(1e-300)).ln();
+        });
+    }
+    kl
+}
+
+/// Run t-SNE end to end.  `registry` enables PJRT dense-block dispatch.
+pub fn run(ds: &Dataset, cfg: &TsneConfig, registry: Option<ArtifactRegistry>) -> TsneResult {
+    let n = ds.n();
+    let d = cfg.d;
+    let pool = if cfg.threads == 0 {
+        ThreadPool::with_default()
+    } else {
+        ThreadPool::new(cfg.threads)
+    };
+
+    // 1. kNN + perplexity-calibrated joint P.
+    let g = knn_graph(ds, cfg.k, pool.threads);
+    let p = joint_probabilities(&g, cfg.perplexity, &pool);
+
+    // 2. Hierarchical reorder of the (fixed) profile.
+    let pipe = Pipeline::dual_tree(3).with_seed(cfg.seed).run(ds, &p);
+    let tree = pipe.tree.as_ref().unwrap();
+    // Lower dense threshold on the PJRT path: densified blocks are exactly
+    // what the AOT artifacts consume (zero-padding is free on the MXU).
+    let dense_thr = if cfg.use_pjrt { 0.25 } else { 0.6 };
+    let csb = HierCsb::build_with(&pipe.reordered, tree, tree, cfg.leaf_cap, dense_thr);
+    let engine = Engine::new(csb, pool.threads);
+    let mut coord = Coordinator::new(
+        engine,
+        if cfg.use_pjrt { registry } else { None },
+        BatchPolicy {
+            pjrt_enabled: cfg.use_pjrt,
+            ..Default::default()
+        },
+    );
+
+    // 3. Initialize Y (tree order) ~ N(0, 1e-4).
+    let mut rng = Rng::new(cfg.seed);
+    let mut y: Vec<f32> = (0..n * d).map(|_| 1e-2 * rng.normal() as f32).collect();
+    let mut vel = vec![0.0f32; n * d];
+    let mut gains = vec![1.0f32; n * d];
+    let mut attr = vec![0.0f32; n * d];
+    let mut rep = vec![0.0f32; n * d];
+    let mut log = Vec::new();
+
+    let t_start = std::time::Instant::now();
+    for it in 0..cfg.iters {
+        let exag = if it < cfg.exaggeration_iters {
+            cfg.early_exaggeration
+        } else {
+            1.0
+        };
+        let momentum = if it < cfg.exaggeration_iters {
+            cfg.momentum_start
+        } else {
+            cfg.momentum_final
+        };
+
+        coord.tsne_attr(&y, d, &mut attr);
+        let z = repulsive_exact(&y, n, d, &pool, &mut rep);
+
+        // gradient = 4 (exag * attr - rep); gains + momentum update
+        let mut grad_norm = 0.0f64;
+        for t in 0..n * d {
+            let grad = 4.0 * (exag * attr[t] - rep[t]);
+            grad_norm += (grad * grad) as f64;
+            let same_sign = grad.signum() == vel[t].signum();
+            gains[t] = if same_sign {
+                (gains[t] * 0.8).max(0.01)
+            } else {
+                gains[t] + 0.2
+            };
+            vel[t] = momentum * vel[t] - cfg.learning_rate * gains[t] * grad;
+            y[t] += vel[t];
+        }
+        // re-center (KL is translation invariant; keeps coordinates bounded)
+        for k in 0..d {
+            let mean: f32 = (0..n).map(|i| y[i * d + k]).sum::<f32>() / n as f32;
+            for i in 0..n {
+                y[i * d + k] -= mean;
+            }
+        }
+
+        if it % 50 == 0 || it + 1 == cfg.iters {
+            let kl = kl_divergence(&coord.engine.csb, &y, d, z);
+            log.push(TsneLogEntry {
+                iter: it,
+                kl,
+                grad_norm: grad_norm.sqrt(),
+                seconds: t_start.elapsed().as_secs_f64(),
+            });
+        }
+    }
+
+    // Scatter the embedding back to the original point order.
+    let y_orig = crate::csb::layout::rows_from_tree_order(&y, d, &pipe.perm);
+    let mut embedding = Dataset::new(n, d, y_orig);
+    embedding.labels = ds.labels.clone();
+    TsneResult {
+        embedding,
+        log,
+        metrics_summary: coord.metrics.summary(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+
+    #[test]
+    fn joint_p_is_symmetric_and_normalized() {
+        let ds = SynthSpec::blobs(120, 4, 3, 3).generate();
+        let pool = ThreadPool::new(2);
+        let g = knn_graph(&ds, 10, 2);
+        let p = joint_probabilities(&g, 5.0, &pool);
+        // symmetric
+        for i in 0..p.rows {
+            let (cols, _) = p.row(i);
+            for &j in cols {
+                let a = p.get(i, j as usize);
+                let b = p.get(j as usize, i);
+                assert!((a - b).abs() < 1e-7, "P asym at ({i},{j})");
+            }
+        }
+        // sums to ~1
+        let total: f64 = p.val.iter().map(|&x| x as f64).sum();
+        assert!((total - 1.0).abs() < 1e-3, "sum P = {total}");
+    }
+
+    #[test]
+    fn repulsive_force_pushes_apart() {
+        // two points: repulsive force on each points away from the other
+        let y = vec![0.0f32, 0.0, 1.0, 0.0];
+        let pool = ThreadPool::new(1);
+        let mut out = vec![0.0f32; 4];
+        let z = repulsive_exact(&y, 2, 2, &pool, &mut out);
+        assert!(z > 0.0);
+        assert!(out[0] < 0.0); // point 0 pushed in -x
+        assert!(out[2] > 0.0); // point 1 pushed in +x
+    }
+
+    #[test]
+    fn tsne_separates_blobs_and_kl_decreases() {
+        let ds = SynthSpec::blobs(240, 6, 3, 7).generate();
+        let cfg = TsneConfig {
+            iters: 220,
+            exaggeration_iters: 60,
+            k: 20,
+            perplexity: 10.0,
+            threads: 4,
+            ..Default::default()
+        };
+        let res = run(&ds, &cfg, None);
+        // KL decreases over the run (compare first/last after exaggeration)
+        let post: Vec<&TsneLogEntry> =
+            res.log.iter().filter(|e| e.iter >= 100).collect();
+        assert!(post.len() >= 2);
+        assert!(
+            post.last().unwrap().kl < post[0].kl + 1e-9,
+            "KL not decreasing: {:?}",
+            res.log
+        );
+        // class separation in the embedding: same-label mean distance <
+        // cross-label mean distance
+        let e = &res.embedding;
+        let labels = e.labels.as_ref().unwrap();
+        let (mut same, mut diff, mut ns, mut nd) = (0.0f64, 0.0f64, 0usize, 0usize);
+        for i in 0..e.n() {
+            for j in (i + 1)..e.n().min(i + 40) {
+                let dd = e.sqdist(i, j) as f64;
+                if labels[i] == labels[j] {
+                    same += dd;
+                    ns += 1;
+                } else {
+                    diff += dd;
+                    nd += 1;
+                }
+            }
+        }
+        assert!(
+            same / ns as f64 * 1.5 < diff / nd as f64,
+            "no separation: same {} diff {}",
+            same / ns as f64,
+            diff / nd as f64
+        );
+    }
+}

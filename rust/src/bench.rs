@@ -1,0 +1,183 @@
+//! Shared infrastructure for the paper-figure benchmark harnesses
+//! (`rust/benches/*.rs`): workload construction, ordering application, and
+//! result table emission.  Each bench binary regenerates one table/figure;
+//! see DESIGN.md §3 for the experiment index.
+
+use crate::data::dataset::Dataset;
+use crate::data::synth::SynthSpec;
+use crate::knn::exact::knn_graph;
+use crate::order::{OrderingKind, Pipeline};
+use crate::sparse::csr::Csr;
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::timer;
+use std::io::Write;
+use std::path::PathBuf;
+
+/// The two dataset surrogates of §4.2 with the paper's k values.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Workload {
+    /// SIFT-like: D=128, k=30.
+    Sift,
+    /// GIST-like: D=960, k=90.
+    Gist,
+}
+
+impl Workload {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Workload::Sift => "SIFT",
+            Workload::Gist => "GIST",
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        match self {
+            Workload::Sift => 30,
+            Workload::Gist => 90,
+        }
+    }
+
+    pub fn make_dataset(&self, n: usize, seed: u64) -> Dataset {
+        match self {
+            Workload::Sift => SynthSpec::sift_like(n, seed).generate(),
+            Workload::Gist => SynthSpec::gist_like(n, seed).generate(),
+        }
+    }
+
+    /// Dataset + symmetrized kNN interaction matrix (the Fig. 2 matrices).
+    pub fn make(&self, n: usize, seed: u64, threads: usize) -> (Dataset, Csr) {
+        let ds = self.make_dataset(n, seed);
+        let g = knn_graph(&ds, self.k().min(n - 1), threads);
+        let a = Csr::from_knn(&g, n).symmetrized();
+        (ds, a)
+    }
+}
+
+/// Build a pipeline for an ordering kind with bench-standard parameters
+/// (fine ordering granularity; blocking granularity is chosen at CSB build).
+pub fn pipeline_for(kind: &OrderingKind, seed: u64) -> Pipeline {
+    let mut p = Pipeline::new(kind.clone());
+    p.seed = seed;
+    p
+}
+
+/// Output directory for bench artifacts (tables, rasters, json records).
+pub fn out_dir() -> PathBuf {
+    let dir = PathBuf::from(
+        std::env::var("NNI_BENCH_OUT").unwrap_or_else(|_| "bench_out".into()),
+    );
+    std::fs::create_dir_all(&dir).ok();
+    dir
+}
+
+/// Print the standard bench header (testbed stand-in for Table 2).
+pub fn print_header(bench: &str, paper_ref: &str) {
+    println!("# {bench}");
+    println!("# reproduces: {paper_ref}");
+    println!("# testbed: {}", timer::machine_summary());
+    println!("#");
+}
+
+/// A result table that prints aligned text and saves JSON alongside.
+pub struct Table {
+    pub name: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    records: Vec<Json>,
+}
+
+impl Table {
+    pub fn new(name: &str, columns: &[&str]) -> Table {
+        Table {
+            name: name.into(),
+            columns: columns.iter().map(|c| c.to_string()).collect(),
+            rows: Vec::new(),
+            records: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len());
+        self.records.push(obj(self
+            .columns
+            .iter()
+            .zip(&cells)
+            .map(|(c, v)| {
+                (
+                    c.as_str(),
+                    v.parse::<f64>().map(num).unwrap_or_else(|_| s(v)),
+                )
+            })
+            .collect()));
+        self.rows.push(cells);
+    }
+
+    /// Print aligned columns and write `<out_dir>/<name>.json`.
+    pub fn finish(&self) {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (w, cell) in widths.iter_mut().zip(row) {
+                *w = (*w).max(cell.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("{}", fmt_row(&self.columns));
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        for row in &self.rows {
+            println!("{}", fmt_row(row));
+        }
+        let path = out_dir().join(format!("{}.json", self.name));
+        let doc = obj(vec![
+            ("table", s(&self.name)),
+            ("testbed", s(&timer::machine_summary())),
+            ("rows", arr(self.records.clone())),
+        ]);
+        if let Ok(mut f) = std::fs::File::create(&path) {
+            let _ = writeln!(f, "{doc}");
+        }
+        println!("\n[saved {}]", path.display());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workload_params_match_paper() {
+        assert_eq!(Workload::Sift.k(), 30);
+        assert_eq!(Workload::Gist.k(), 90);
+        let ds = Workload::Sift.make_dataset(64, 1);
+        assert_eq!(ds.d(), 128);
+    }
+
+    #[test]
+    fn make_produces_symmetric_profile() {
+        let (_, a) = Workload::Sift.make(128, 2, 2);
+        assert_eq!(a.rows, 128);
+        for i in 0..a.rows {
+            let (cols, _) = a.row(i);
+            for &j in cols {
+                assert!(a.get(j as usize, i) != 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn table_roundtrip() {
+        let mut t = Table::new("nni_test_table", &["set", "k", "score"]);
+        t.row(vec!["SIFT".into(), "30".into(), "1.5".into()]);
+        t.finish();
+        let path = out_dir().join("nni_test_table.json");
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.contains("\"score\":1.5"));
+        std::fs::remove_file(path).ok();
+    }
+}

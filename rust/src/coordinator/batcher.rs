@@ -1,0 +1,193 @@
+//! Routing and batching policy: decides, per leaf block, which backend runs
+//! it and groups PJRT-bound blocks into fixed-shape batches.
+//!
+//! Policy (tunable via [`BatchPolicy`]):
+//! * a block goes to PJRT iff it is stored dense, fits the artifact tile
+//!   (≤ `tile` rows/cols), and its population is large enough that the
+//!   dispatch overhead amortizes (`min_nnz`);
+//! * blocks fitting the half-tile (≤ `tile`/2) are grouped `batch` at a
+//!   time for the `*_b8` batched artifact; the remainder run on the
+//!   single-block `m256` artifact;
+//! * everything else runs on the fused Rust path.
+
+use crate::csb::hier::HierCsb;
+
+/// Where a block executes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Route {
+    /// Fused Rust kernel (sparse blocklets, odd shapes).
+    Rust,
+    /// Single-block PJRT program (tile × tile).
+    PjrtSingle,
+    /// Batched PJRT program (batch × half-tile × half-tile).
+    PjrtBatched,
+}
+
+/// Tunables for the routing decision.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Artifact tile size (m256 variants → 256).
+    pub tile: usize,
+    /// Batched-artifact batch size (b8 variants → 8).
+    pub batch: usize,
+    /// Minimum block nnz to justify a PJRT dispatch.
+    pub min_nnz: u32,
+    /// Disable PJRT entirely (pure-Rust operation).
+    pub pjrt_enabled: bool,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            tile: 256,
+            batch: 8,
+            min_nnz: 512,
+            pjrt_enabled: true,
+        }
+    }
+}
+
+/// The routing plan over a [`HierCsb`]'s blocks.
+#[derive(Clone, Debug, Default)]
+pub struct BatchPlan {
+    /// Block indices on the Rust path.
+    pub rust: Vec<u32>,
+    /// Block indices on the single-block PJRT path.
+    pub pjrt_single: Vec<u32>,
+    /// Batched PJRT groups (each ≤ `batch` long; short groups are padded
+    /// with masked-out slots at dispatch time).
+    pub pjrt_batches: Vec<Vec<u32>>,
+}
+
+impl BatchPlan {
+    /// Build the plan for `csb` under `policy`.
+    pub fn build(csb: &HierCsb, policy: &BatchPolicy) -> BatchPlan {
+        let mut plan = BatchPlan::default();
+        let mut batchable: Vec<u32> = Vec::new();
+        for (t, b) in csb.blocks.iter().enumerate() {
+            let t = t as u32;
+            let dense = b.is_dense();
+            if !policy.pjrt_enabled
+                || !dense
+                || b.nnz < policy.min_nnz
+                || b.rows.len() > policy.tile
+                || b.cols.len() > policy.tile
+            {
+                plan.rust.push(t);
+            } else if b.rows.len() <= policy.tile / 2 && b.cols.len() <= policy.tile / 2 {
+                batchable.push(t);
+            } else {
+                plan.pjrt_single.push(t);
+            }
+        }
+        for group in batchable.chunks(policy.batch) {
+            plan.pjrt_batches.push(group.to_vec());
+        }
+        plan
+    }
+
+    pub fn pjrt_block_count(&self) -> usize {
+        self.pjrt_single.len() + self.pjrt_batches.iter().map(Vec::len).sum::<usize>()
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.rust.len() + self.pjrt_block_count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+    use crate::knn::exact::knn_graph;
+    use crate::order::Pipeline;
+    use crate::sparse::csr::Csr;
+
+    fn csb(n: usize, leaf: usize) -> HierCsb {
+        let ds = SynthSpec::blobs(n, 3, 4, 23).generate();
+        let g = knn_graph(&ds, 8, 2);
+        let a = Csr::from_knn(&g, n).symmetrized();
+        let r = Pipeline::dual_tree(3).run(&ds, &a);
+        let tree = r.tree.as_ref().unwrap();
+        // PJRT-path threshold so dense blocks exist to route
+        HierCsb::build_with(&r.reordered, tree, tree, leaf, 0.2)
+    }
+
+    #[test]
+    fn plan_covers_every_block_once() {
+        let m = csb(600, 64);
+        let plan = BatchPlan::build(&m, &BatchPolicy::default());
+        assert_eq!(plan.total_blocks(), m.blocks.len());
+        let mut seen = vec![false; m.blocks.len()];
+        let mark = |seen: &mut Vec<bool>, t: u32| {
+            assert!(!seen[t as usize], "block {t} routed twice");
+            seen[t as usize] = true;
+        };
+        for &t in &plan.rust {
+            mark(&mut seen, t);
+        }
+        for &t in &plan.pjrt_single {
+            mark(&mut seen, t);
+        }
+        for g in &plan.pjrt_batches {
+            for &t in g {
+                mark(&mut seen, t);
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn pjrt_disabled_routes_everything_rust() {
+        let m = csb(400, 64);
+        let plan = BatchPlan::build(
+            &m,
+            &BatchPolicy {
+                pjrt_enabled: false,
+                ..Default::default()
+            },
+        );
+        assert_eq!(plan.rust.len(), m.blocks.len());
+        assert_eq!(plan.pjrt_block_count(), 0);
+    }
+
+    #[test]
+    fn min_nnz_filters_small_blocks() {
+        let m = csb(500, 64);
+        let strict = BatchPlan::build(
+            &m,
+            &BatchPolicy {
+                min_nnz: u32::MAX,
+                ..Default::default()
+            },
+        );
+        assert_eq!(strict.pjrt_block_count(), 0);
+        let loose = BatchPlan::build(
+            &m,
+            &BatchPolicy {
+                min_nnz: 0,
+                ..Default::default()
+            },
+        );
+        // clustered data must produce at least one dense PJRT-eligible block
+        assert!(loose.pjrt_block_count() > 0, "{}", m.describe());
+    }
+
+    #[test]
+    fn batches_respect_batch_size() {
+        let m = csb(800, 32);
+        let policy = BatchPolicy {
+            min_nnz: 0,
+            ..Default::default()
+        };
+        let plan = BatchPlan::build(&m, &policy);
+        for g in &plan.pjrt_batches {
+            assert!(!g.is_empty() && g.len() <= policy.batch);
+            for &t in g {
+                let b = &m.blocks[t as usize];
+                assert!(b.rows.len() <= policy.tile / 2);
+                assert!(b.cols.len() <= policy.tile / 2);
+            }
+        }
+    }
+}

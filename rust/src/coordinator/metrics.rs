@@ -1,0 +1,76 @@
+//! Throughput and routing counters for the coordinator.
+
+use std::time::Instant;
+
+/// Accumulated per-run metrics.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    pub iterations: u64,
+    pub rust_blocks: u64,
+    pub pjrt_single_calls: u64,
+    pub pjrt_batched_calls: u64,
+    pub pjrt_blocks: u64,
+    pub nnz_processed: u64,
+    pub rust_seconds: f64,
+    pub pjrt_seconds: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    /// Time a closure into one of the phase accumulators.
+    pub fn time_phase<T>(acc: &mut f64, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let v = f();
+        *acc += t0.elapsed().as_secs_f64();
+        v
+    }
+
+    /// Interactions (edges) per second over everything processed so far.
+    pub fn edges_per_second(&self) -> f64 {
+        let t = self.rust_seconds + self.pjrt_seconds;
+        if t > 0.0 {
+            self.nnz_processed as f64 / t
+        } else {
+            0.0
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "iters={} rust_blocks={} pjrt_calls={}(+{} batched) pjrt_blocks={} \
+             edges={} rust={:.3}s pjrt={:.3}s ({:.2e} edges/s)",
+            self.iterations,
+            self.rust_blocks,
+            self.pjrt_single_calls,
+            self.pjrt_batched_calls,
+            self.pjrt_blocks,
+            self.nnz_processed,
+            self.rust_seconds,
+            self.pjrt_seconds,
+            self.edges_per_second(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_phase_accumulates() {
+        let mut acc = 0.0;
+        let v = Metrics::time_phase(&mut acc, || 41 + 1);
+        assert_eq!(v, 42);
+        assert!(acc >= 0.0);
+    }
+
+    #[test]
+    fn edges_per_second_zero_when_unused() {
+        let m = Metrics::new();
+        assert_eq!(m.edges_per_second(), 0.0);
+        assert!(m.summary().contains("iters=0"));
+    }
+}

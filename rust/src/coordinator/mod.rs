@@ -1,0 +1,21 @@
+//! Layer-3 coordinator: routes each leaf block of the hierarchical matrix
+//! to a backend (in-process Rust kernels for sparse blocklets, PJRT block
+//! programs for dense cluster pairs), batches PJRT work to amortize
+//! dispatch, and owns the leader/worker topology.
+//!
+//! The PJRT client (`xla` crate) is `Rc`-based — deliberately *not* shared
+//! across threads: the **leader** thread owns the [`ArtifactRegistry`] and
+//! drains the dense-block queue, while **workers** chew through the sparse
+//! blocks with the fused Rust kernels.  Both phases accumulate into the
+//! potential vector under target-leaf ownership, so no synchronization is
+//! needed beyond the phase boundary.
+//!
+//! [`ArtifactRegistry`]: crate::runtime::ArtifactRegistry
+
+pub mod batcher;
+pub mod metrics;
+pub mod scheduler;
+
+pub use batcher::{BatchPlan, Route};
+pub use metrics::Metrics;
+pub use scheduler::Coordinator;

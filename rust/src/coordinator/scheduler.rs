@@ -1,0 +1,376 @@
+//! The coordinator proper: hybrid execution of one interaction iteration.
+//!
+//! Phase 1 — workers: all Rust-routed blocks in parallel under target-leaf
+//! ownership (the multi-level schedule).  Phase 2 — leader: PJRT-routed
+//! dense blocks, batched where the policy allows, executed on the AOT block
+//! programs.  The phases are serialized, so both can accumulate into the
+//! same force/potential buffer without synchronization on the segments.
+//!
+//! If an artifact is unavailable (e.g. `make artifacts` not run, or an
+//! embedding dimension with no lowered variant) the coordinator degrades to
+//! the pure-Rust path and records it in [`Metrics`].
+
+use crate::coordinator::batcher::{BatchPlan, BatchPolicy, Route};
+use crate::coordinator::metrics::Metrics;
+use crate::csb::hier::{HierCsb, LeafBlock};
+use crate::interact::engine::Engine;
+use crate::runtime::{ArtifactRegistry, Tensor};
+
+/// Hybrid Rust + PJRT interaction coordinator.
+pub struct Coordinator {
+    pub engine: Engine,
+    registry: Option<ArtifactRegistry>,
+    pub policy: BatchPolicy,
+    plan: BatchPlan,
+    /// Rust-routed blocks grouped by target leaf (parallel phase input).
+    rust_by_target: Vec<Vec<u32>>,
+    pub metrics: Metrics,
+}
+
+impl Coordinator {
+    /// Build over an engine; `registry` enables the PJRT path.
+    pub fn new(engine: Engine, registry: Option<ArtifactRegistry>, policy: BatchPolicy) -> Self {
+        let effective = BatchPolicy {
+            pjrt_enabled: policy.pjrt_enabled && registry.is_some(),
+            ..policy
+        };
+        let plan = BatchPlan::build(&engine.csb, &effective);
+        let mut rust_by_target = vec![Vec::new(); engine.csb.tgt_leaves.len()];
+        for &t in &plan.rust {
+            let b = &engine.csb.blocks[t as usize];
+            rust_by_target[b.tleaf as usize].push(t);
+        }
+        Coordinator {
+            engine,
+            registry,
+            policy: effective,
+            plan,
+            rust_by_target,
+            metrics: Metrics::new(),
+        }
+    }
+
+    /// Pure-Rust coordinator (no PJRT).
+    pub fn rust_only(engine: Engine) -> Self {
+        Self::new(
+            engine,
+            None,
+            BatchPolicy {
+                pjrt_enabled: false,
+                ..Default::default()
+            },
+        )
+    }
+
+    pub fn csb(&self) -> &HierCsb {
+        &self.engine.csb
+    }
+
+    pub fn plan(&self) -> &BatchPlan {
+        &self.plan
+    }
+
+    /// Route of a given block index under the current plan.
+    pub fn route_of(&self, block: u32) -> Route {
+        if self.plan.rust.contains(&block) {
+            Route::Rust
+        } else if self.plan.pjrt_single.contains(&block) {
+            Route::PjrtSingle
+        } else {
+            Route::PjrtBatched
+        }
+    }
+
+    /// One t-SNE attractive-force iteration (hybrid).
+    ///
+    /// `y`: tree-ordered embedding `n x d`; `force`: output `n x d`.
+    pub fn tsne_attr(&mut self, y: &[f32], d: usize, force: &mut [f32]) {
+        let n = self.engine.csb.rows;
+        assert_eq!(y.len(), n * d);
+        assert_eq!(force.len(), n * d);
+        force.fill(0.0);
+        self.metrics.iterations += 1;
+        self.metrics.nnz_processed += self.engine.csb.nnz as u64;
+
+        // ---- Phase 1: workers on the Rust-routed blocks -------------------
+        let csb = &self.engine.csb;
+        let rust_by_target = &self.rust_by_target;
+        let mut rust_secs = 0.0;
+        Metrics::time_phase(&mut rust_secs, || {
+            struct SendPtr(*mut f32);
+            unsafe impl Send for SendPtr {}
+            unsafe impl Sync for SendPtr {}
+            let fp = SendPtr(force.as_mut_ptr());
+            let fpr = &fp;
+            self.engine.pool.for_each_chunked(rust_by_target.len(), 4, |tl| {
+                let sp = csb.tgt_leaves[tl];
+                // SAFETY: disjoint target-leaf row spans.
+                let seg: &mut [f32] = unsafe {
+                    std::slice::from_raw_parts_mut(
+                        fpr.0.add(sp.lo as usize * d),
+                        sp.len() * d,
+                    )
+                };
+                for &t in &rust_by_target[tl] {
+                    tsne_block_rust(csb, t as usize, y, d, seg);
+                }
+            });
+        });
+        self.metrics.rust_seconds += rust_secs;
+        self.metrics.rust_blocks += self.plan.rust.len() as u64;
+
+        // ---- Phase 2: leader drains the PJRT routes -----------------------
+        if self.registry.is_none() || (self.plan.pjrt_single.is_empty() && self.plan.pjrt_batches.is_empty()) {
+            return;
+        }
+        let mut pjrt_secs = 0.0;
+        let single_name = format!("tsne_d{d}_m256");
+        let batch_name = format!("tsne_d{d}_m128_b8");
+        let registry = self.registry.as_ref().unwrap();
+        let have_single = registry.variants.contains_key(&single_name);
+        let have_batch = registry.variants.contains_key(&batch_name);
+
+        Metrics::time_phase(&mut pjrt_secs, || {
+            for &t in &self.plan.pjrt_single {
+                let b = &csb.blocks[t as usize];
+                if have_single {
+                    match run_tsne_single(registry, &single_name, csb, t as usize, y, d, 256) {
+                        Ok(f_block) => {
+                            accumulate_force(b, &f_block, d, force);
+                            self.metrics.pjrt_single_calls += 1;
+                            self.metrics.pjrt_blocks += 1;
+                            continue;
+                        }
+                        Err(e) => {
+                            eprintln!("pjrt single fallback: {e:#}");
+                        }
+                    }
+                }
+                // fallback: rust
+                let sp = b.rows;
+                let seg = &mut force[sp.lo as usize * d..sp.hi as usize * d];
+                tsne_block_rust(csb, t as usize, y, d, seg);
+                self.metrics.rust_blocks += 1;
+            }
+            for group in &self.plan.pjrt_batches {
+                if have_batch {
+                    match run_tsne_batch(registry, &batch_name, group, csb, y, d, 128, 8) {
+                        Ok(outs) => {
+                            for (&t, f_block) in group.iter().zip(outs.iter()) {
+                                let b = &csb.blocks[t as usize];
+                                accumulate_force(b, f_block, d, force);
+                            }
+                            self.metrics.pjrt_batched_calls += 1;
+                            self.metrics.pjrt_blocks += group.len() as u64;
+                            continue;
+                        }
+                        Err(e) => {
+                            eprintln!("pjrt batch fallback: {e:#}");
+                        }
+                    }
+                }
+                for &t in group {
+                    let sp = csb.blocks[t as usize].rows;
+                    let seg = &mut force[sp.lo as usize * d..sp.hi as usize * d];
+                    tsne_block_rust(csb, t as usize, y, d, seg);
+                    self.metrics.rust_blocks += 1;
+                }
+            }
+        });
+        self.metrics.pjrt_seconds += pjrt_secs;
+    }
+}
+
+/// Fused Rust t-SNE attractive kernel for one block, accumulating into the
+/// target segment (`seg` = rows of the block's target leaf span; the block's
+/// rows are offset within it).
+fn tsne_block_rust(csb: &HierCsb, t: usize, y: &[f32], d: usize, seg: &mut [f32]) {
+    // seg covers the *target leaf* span; block rows start at b.rows.lo
+    // relative to that leaf's lo only when the leaf IS the block row span.
+    // Blocks always span exactly one target leaf, so the offsets match.
+    let b = &csb.blocks[t];
+    let r0 = b.rows.lo as usize;
+    let c0 = b.cols.lo as usize;
+    let seg_rows = seg.len() / d;
+    debug_assert_eq!(seg_rows, b.rows.len());
+    csb.for_each_nz(t, |r, c, p| {
+        let yi = &y[(r0 + r) * d..(r0 + r + 1) * d];
+        let yj = &y[(c0 + c) * d..(c0 + c + 1) * d];
+        let mut d2 = 0.0f32;
+        for k in 0..d {
+            let t = yi[k] - yj[k];
+            d2 += t * t;
+        }
+        let w = p / (1.0 + d2);
+        let out = &mut seg[r * d..(r + 1) * d];
+        for k in 0..d {
+            out[k] += w * (yi[k] - yj[k]);
+        }
+    });
+}
+
+/// Pack one block into the single-block artifact and execute.
+fn run_tsne_single(
+    registry: &ArtifactRegistry,
+    name: &str,
+    csb: &HierCsb,
+    t: usize,
+    y: &[f32],
+    d: usize,
+    tile: usize,
+) -> anyhow::Result<Tensor> {
+    let b = &csb.blocks[t];
+    let (yt, tv) = pack_coords(y, d, b.rows.lo as usize, b.rows.len(), tile);
+    let (ys, sv) = pack_coords(y, d, b.cols.lo as usize, b.cols.len(), tile);
+    let p = pack_dense(csb, t, tile);
+    let outs = registry.run(
+        name,
+        &[
+            Tensor::new(vec![tile, d], yt),
+            Tensor::new(vec![tile, d], ys),
+            Tensor::new(vec![tile, tile], p),
+            Tensor::new(vec![tile], tv),
+            Tensor::new(vec![tile], sv),
+        ],
+    )?;
+    Ok(outs.into_iter().next().unwrap())
+}
+
+/// Pack up to `batch` blocks into the batched artifact and execute;
+/// returns per-block force tensors.
+#[allow(clippy::too_many_arguments)]
+fn run_tsne_batch(
+    registry: &ArtifactRegistry,
+    name: &str,
+    group: &[u32],
+    csb: &HierCsb,
+    y: &[f32],
+    d: usize,
+    tile: usize,
+    batch: usize,
+) -> anyhow::Result<Vec<Tensor>> {
+    let mut yt = vec![0.0f32; batch * tile * d];
+    let mut ys = vec![0.0f32; batch * tile * d];
+    let mut p = vec![0.0f32; batch * tile * tile];
+    let mut tv = vec![0.0f32; batch * tile];
+    let mut sv = vec![0.0f32; batch * tile];
+    for (s, &t) in group.iter().enumerate() {
+        let b = &csb.blocks[t as usize];
+        let (cyt, ctv) = pack_coords(y, d, b.rows.lo as usize, b.rows.len(), tile);
+        let (cys, csv) = pack_coords(y, d, b.cols.lo as usize, b.cols.len(), tile);
+        yt[s * tile * d..(s + 1) * tile * d].copy_from_slice(&cyt);
+        ys[s * tile * d..(s + 1) * tile * d].copy_from_slice(&cys);
+        p[s * tile * tile..(s + 1) * tile * tile]
+            .copy_from_slice(&pack_dense(csb, t as usize, tile));
+        tv[s * tile..(s + 1) * tile].copy_from_slice(&ctv);
+        sv[s * tile..(s + 1) * tile].copy_from_slice(&csv);
+    }
+    let outs = registry.run(
+        name,
+        &[
+            Tensor::new(vec![batch, tile, d], yt),
+            Tensor::new(vec![batch, tile, d], ys),
+            Tensor::new(vec![batch, tile, tile], p),
+            Tensor::new(vec![batch, tile], tv),
+            Tensor::new(vec![batch, tile], sv),
+        ],
+    )?;
+    let f = &outs[0];
+    let mut per_block = Vec::with_capacity(group.len());
+    for s in 0..group.len() {
+        per_block.push(Tensor::new(
+            vec![tile, d],
+            f.data[s * tile * d..(s + 1) * tile * d].to_vec(),
+        ));
+    }
+    Ok(per_block)
+}
+
+/// Copy a coordinate span into a zero-padded `tile x d` tensor + mask.
+fn pack_coords(y: &[f32], d: usize, lo: usize, len: usize, tile: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut out = vec![0.0f32; tile * d];
+    out[..len * d].copy_from_slice(&y[lo * d..(lo + len) * d]);
+    let mut mask = vec![0.0f32; tile];
+    mask[..len].fill(1.0);
+    (out, mask)
+}
+
+/// Densify a block's values into a zero-padded `tile x tile` tensor.
+fn pack_dense(csb: &HierCsb, t: usize, tile: usize) -> Vec<f32> {
+    let b = &csb.blocks[t];
+    let mut out = vec![0.0f32; tile * tile];
+    if let Some(vals) = csb.dense_slice(t) {
+        let w = b.cols.len();
+        for r in 0..b.rows.len() {
+            out[r * tile..r * tile + w].copy_from_slice(&vals[r * w..(r + 1) * w]);
+        }
+    } else {
+        csb.for_each_nz(t, |r, c, v| out[r * tile + c] = v);
+    }
+    out
+}
+
+/// Add a (padded) block force tensor into the global force buffer.
+fn accumulate_force(b: &LeafBlock, f_block: &Tensor, d: usize, force: &mut [f32]) {
+    let tile = f_block.shape[0];
+    debug_assert_eq!(f_block.shape[1], d);
+    let r0 = b.rows.lo as usize;
+    for r in 0..b.rows.len().min(tile) {
+        for k in 0..d {
+            force[(r0 + r) * d + k] += f_block.data[r * d + k];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+    use crate::knn::exact::knn_graph;
+    use crate::order::Pipeline;
+    use crate::sparse::csr::Csr;
+    use crate::util::rng::Rng;
+
+    fn engine(n: usize) -> (Csr, Engine) {
+        let ds = SynthSpec::blobs(n, 2, 4, 31).generate();
+        let g = knn_graph(&ds, 6, 2);
+        let a = Csr::from_knn(&g, n).symmetrized();
+        let r = Pipeline::dual_tree(2).run(&ds, &a);
+        let tree = r.tree.as_ref().unwrap();
+        let csb = HierCsb::build(&r.reordered, tree, tree, 64);
+        (r.reordered, Engine::new(csb, 4))
+    }
+
+    #[test]
+    fn rust_only_coordinator_matches_engine() {
+        let (_, eng) = engine(400);
+        let eng2 = Engine::new(eng.csb.clone(), 4);
+        let mut co = Coordinator::rust_only(eng);
+        let mut rng = Rng::new(7);
+        let y: Vec<f32> = (0..400 * 2).map(|_| rng.normal() as f32).collect();
+        let mut f1 = vec![0.0f32; 800];
+        let mut f2 = vec![0.0f32; 800];
+        co.tsne_attr(&y, 2, &mut f1);
+        eng2.tsne_attr(&y, 2, &mut f2);
+        for (a, b) in f1.iter().zip(&f2) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+        assert_eq!(co.metrics.iterations, 1);
+        assert_eq!(co.metrics.pjrt_blocks, 0);
+    }
+
+    #[test]
+    fn metrics_accumulate_over_iterations() {
+        let (_, eng) = engine(200);
+        let mut co = Coordinator::rust_only(eng);
+        let y = vec![0.5f32; 400];
+        let mut f = vec![0.0f32; 400];
+        co.tsne_attr(&y, 2, &mut f);
+        co.tsne_attr(&y, 2, &mut f);
+        assert_eq!(co.metrics.iterations, 2);
+        assert!(co.metrics.nnz_processed > 0);
+    }
+
+    // PJRT-path equivalence is covered by rust/tests/coordinator_pjrt.rs
+    // (needs built artifacts).
+}

@@ -1,0 +1,648 @@
+//! Hierarchical compressed sparse blocks.
+//!
+//! Leaf clusters of the target tree block the rows; leaf clusters of the
+//! source tree block the columns.  Every nonzero lands in exactly one
+//! (target-leaf × source-leaf) block; blocks denser than a threshold are
+//! stored *dense* (the granule shipped to the PJRT block kernels), the rest
+//! as local CSR with 16-bit local column indices.
+//!
+//! Two traversal schedules are materialized:
+//!
+//! * **multi-level** — the recursive dual-tree descent order: a parent
+//!   cluster pair's blocks are completed before moving on, so both the
+//!   charge segment and the potential segment being touched stay resident
+//!   across consecutive blocks (the paper's "interaction is calculated at
+//!   multiple levels");
+//! * **flat** — row-major over (target leaf, source leaf), i.e. classic
+//!   single-level CSB; kept for the ablation benches.
+
+use crate::sparse::csr::Csr;
+use crate::tree::boxtree::BoxTree;
+use std::collections::HashMap;
+
+/// Half-open index span.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Span {
+    pub lo: u32,
+    pub hi: u32,
+}
+
+impl Span {
+    #[inline]
+    pub fn len(&self) -> usize {
+        (self.hi - self.lo) as usize
+    }
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.hi == self.lo
+    }
+}
+
+/// Block payload locator into the [`HierCsb`] arenas.
+///
+/// All block values live in four shared arenas (one allocation each), not
+/// per-block `Vec`s: iterating blocks in traversal order then walks memory
+/// *linearly*, which is the whole point of the reordering exercise — the
+/// perf pass measured ~240 ns/block of pointer-chasing overhead with
+/// per-block allocations (EXPERIMENTS.md §Perf).
+#[derive(Clone, Copy, Debug)]
+pub enum BlockKind {
+    /// Row-major `rows.len() x cols.len()` values at `dense[off..]`.
+    Dense { off: u32 },
+    /// Doubly-compressed local CSR (DCSR): `row_cnt` *occupied* local rows
+    /// at `sp_rows[row_off..]`, with entries
+    /// `sp_col/sp_val[sp_ptr[ptr_off+t]..sp_ptr[ptr_off+t+1]]` — empty rows
+    /// in the span cost nothing.
+    Sparse {
+        row_off: u32,
+        row_cnt: u32,
+        ptr_off: u32,
+    },
+}
+
+/// One (target leaf × source leaf) block (metadata; payload in the arenas).
+#[derive(Clone, Debug)]
+pub struct LeafBlock {
+    /// Target (row) leaf ordinal and source (column) leaf ordinal.
+    pub tleaf: u32,
+    pub sleaf: u32,
+    pub rows: Span,
+    pub cols: Span,
+    pub nnz: u32,
+    pub kind: BlockKind,
+}
+
+impl LeafBlock {
+    /// Density of the block.
+    pub fn density(&self) -> f64 {
+        self.nnz as f64 / (self.rows.len() as f64 * self.cols.len() as f64)
+    }
+
+    pub fn is_dense(&self) -> bool {
+        matches!(self.kind, BlockKind::Dense { .. })
+    }
+}
+
+/// The hierarchical CSB matrix.
+#[derive(Clone, Debug)]
+pub struct HierCsb {
+    pub rows: usize,
+    pub cols: usize,
+    pub nnz: usize,
+    /// Row blocking: target-leaf spans in order.
+    pub tgt_leaves: Vec<Span>,
+    /// Column blocking: source-leaf spans in order.
+    pub src_leaves: Vec<Span>,
+    /// Leaf blocks, stored in **multi-level traversal order**.
+    pub blocks: Vec<LeafBlock>,
+    /// Per target leaf: indices into `blocks` (ascending source leaf).
+    pub by_target: Vec<Vec<u32>>,
+    /// Dense-storage density threshold used at build time.
+    pub dense_threshold: f64,
+    /// Dense-block value arena (row-major per block).
+    pub dense: Vec<f32>,
+    /// DCSR arenas: occupied local rows, absolute entry pointers, local
+    /// columns, values.
+    pub sp_rows: Vec<u16>,
+    pub sp_ptr: Vec<u32>,
+    pub sp_col: Vec<u16>,
+    pub sp_val: Vec<f32>,
+}
+
+/// Default leaf population cap used across the system (matches the m256
+/// AOT artifact tile).
+pub const LEAF_POINTS: usize = 256;
+
+impl HierCsb {
+    /// Build from a matrix already reordered by the two trees.
+    ///
+    /// `a` must be `A(π_t, π_s)` where π_t/π_s are the trees' permutations;
+    /// row/column spans of the tree's nodes are then contiguous index
+    /// ranges.  `block_cap` sets the blocking granularity via a size-based
+    /// tree cut — the ordering tree itself may be much deeper (fine-grained
+    /// locality) while blocks stay ~block_cap points (artifact tile size).
+    pub fn build(a: &Csr, tgt_tree: &BoxTree, src_tree: &BoxTree, block_cap: usize) -> HierCsb {
+        // 0.6 default: a dense block must be ≥60% populated so the dense
+        // matvec's wasted flops stay bounded by 1.67x (perf pass, DESIGN §8).
+        Self::build_with(a, tgt_tree, src_tree, block_cap, 0.6)
+    }
+
+    pub fn build_with(
+        a: &Csr,
+        tgt_tree: &BoxTree,
+        src_tree: &BoxTree,
+        block_cap: usize,
+        dense_threshold: f64,
+    ) -> HierCsb {
+        assert_eq!(a.rows, tgt_tree.n());
+        assert_eq!(a.cols, src_tree.n());
+        let block_cap = if block_cap == 0 { LEAF_POINTS } else { block_cap };
+        let tgt_leaf_ids = tgt_tree.cut_by_size(block_cap);
+        let src_leaf_ids = src_tree.cut_by_size(block_cap);
+        let tgt_leaves: Vec<Span> = tgt_leaf_ids
+            .iter()
+            .map(|&l| Span {
+                lo: tgt_tree.nodes[l as usize].lo,
+                hi: tgt_tree.nodes[l as usize].hi,
+            })
+            .collect();
+        let src_leaves: Vec<Span> = src_leaf_ids
+            .iter()
+            .map(|&l| Span {
+                lo: src_tree.nodes[l as usize].lo,
+                hi: src_tree.nodes[l as usize].hi,
+            })
+            .collect();
+
+        // Map row/col -> leaf ordinal.
+        let row_leaf = leaf_lookup(&tgt_leaves, a.rows);
+        let col_leaf = leaf_lookup(&src_leaves, a.cols);
+
+        // Bucket nonzeros into (tleaf, sleaf) blocks.
+        let mut buckets: HashMap<(u32, u32), Vec<(u32, u16, f32)>> = HashMap::new();
+        for i in 0..a.rows {
+            let tl = row_leaf[i];
+            let (cols, vals) = a.row(i);
+            let local_row = (i as u32) - tgt_leaves[tl as usize].lo;
+            for (&j, &v) in cols.iter().zip(vals) {
+                let sl = col_leaf[j as usize];
+                let local_col = (j - src_leaves[sl as usize].lo) as u16;
+                buckets
+                    .entry((tl, sl))
+                    .or_default()
+                    .push((local_row, local_col, v));
+            }
+        }
+
+        // Shell blocks (metadata + raw entries), then order by the
+        // multi-level traversal, then pack the arenas in that order so the
+        // hot loop walks memory linearly.
+        struct Shell {
+            tleaf: u32,
+            sleaf: u32,
+            ents: Vec<(u32, u16, f32)>,
+        }
+        let mut shells: Vec<Shell> = buckets
+            .into_iter()
+            .map(|((tl, sl), ents)| Shell {
+                tleaf: tl,
+                sleaf: sl,
+                ents,
+            })
+            .collect();
+
+        let keys: Vec<(u32, u32)> = shells.iter().map(|s| (s.tleaf, s.sleaf)).collect();
+        let order = multilevel_order(tgt_tree, src_tree, &tgt_leaf_ids, &src_leaf_ids, &keys);
+        let mut index: HashMap<(u32, u32), usize> = HashMap::new();
+        for (t, s) in shells.iter().enumerate() {
+            index.insert((s.tleaf, s.sleaf), t);
+        }
+        let mut shell_order: Vec<usize> = Vec::with_capacity(shells.len());
+        for key in order {
+            if let Some(&t) = index.get(&key) {
+                shell_order.push(t);
+            }
+        }
+        assert_eq!(shell_order.len(), shells.len(), "traversal missed blocks");
+
+        let mut blocks: Vec<LeafBlock> = Vec::with_capacity(shells.len());
+        let mut dense: Vec<f32> = Vec::new();
+        let mut sp_rows: Vec<u16> = Vec::new();
+        let mut sp_ptr: Vec<u32> = Vec::new();
+        let mut sp_col: Vec<u16> = Vec::new();
+        let mut sp_val: Vec<f32> = Vec::new();
+        for &si in &shell_order {
+            let shell = &mut shells[si];
+            let rows = tgt_leaves[shell.tleaf as usize];
+            let cols = src_leaves[shell.sleaf as usize];
+            let nnz = shell.ents.len() as u32;
+            let area = rows.len() * cols.len();
+            let density = nnz as f64 / area as f64;
+            let kind = if density >= dense_threshold {
+                let off = dense.len() as u32;
+                dense.resize(dense.len() + area, 0.0);
+                let d = &mut dense[off as usize..];
+                for &(r, c, v) in &shell.ents {
+                    d[r as usize * cols.len() + c as usize] += v;
+                }
+                BlockKind::Dense { off }
+            } else {
+                shell.ents.sort_unstable_by_key(|&(r, c, _)| (r, c));
+                let row_off = sp_rows.len() as u32;
+                let ptr_off = sp_ptr.len() as u32;
+                sp_ptr.push(sp_col.len() as u32);
+                for &(r, c, v) in &shell.ents {
+                    if sp_rows.len() == row_off as usize
+                        || *sp_rows.last().unwrap() != r as u16
+                    {
+                        sp_rows.push(r as u16);
+                        sp_ptr.push(sp_col.len() as u32);
+                    }
+                    sp_col.push(c);
+                    sp_val.push(v);
+                    *sp_ptr.last_mut().unwrap() = sp_col.len() as u32;
+                }
+                BlockKind::Sparse {
+                    row_off,
+                    row_cnt: sp_rows.len() as u32 - row_off,
+                    ptr_off,
+                }
+            };
+            blocks.push(LeafBlock {
+                tleaf: shell.tleaf,
+                sleaf: shell.sleaf,
+                rows,
+                cols,
+                nnz,
+                kind,
+            });
+        }
+
+        let mut by_target: Vec<Vec<u32>> = vec![Vec::new(); tgt_leaves.len()];
+        for (t, b) in blocks.iter().enumerate() {
+            by_target[b.tleaf as usize].push(t as u32);
+        }
+
+        HierCsb {
+            rows: a.rows,
+            cols: a.cols,
+            nnz: a.nnz(),
+            tgt_leaves,
+            src_leaves,
+            blocks,
+            by_target,
+            dense_threshold,
+            dense,
+            sp_rows,
+            sp_ptr,
+            sp_col,
+            sp_val,
+        }
+    }
+
+    /// One block's `y[rows] += B · x[cols]` over the arenas.
+    #[inline]
+    pub fn block_matvec(&self, t: usize, x: &[f32], y: &mut [f32]) {
+        let b = &self.blocks[t];
+        let x_seg = &x[b.cols.lo as usize..b.cols.hi as usize];
+        let y_seg = &mut y[b.rows.lo as usize..b.rows.hi as usize];
+        match b.kind {
+            BlockKind::Dense { off } => {
+                let w = b.cols.len();
+                let d = &self.dense[off as usize..off as usize + b.rows.len() * w];
+                for (r, yv) in y_seg.iter_mut().enumerate() {
+                    let row = &d[r * w..(r + 1) * w];
+                    let mut acc = 0.0f32;
+                    for (rv, xv) in row.iter().zip(x_seg) {
+                        acc += rv * xv;
+                    }
+                    *yv += acc;
+                }
+            }
+            BlockKind::Sparse {
+                row_off,
+                row_cnt,
+                ptr_off,
+            } => {
+                let rows = &self.sp_rows[row_off as usize..(row_off + row_cnt) as usize];
+                let ptr = &self.sp_ptr[ptr_off as usize..(ptr_off + row_cnt + 1) as usize];
+                for (t, &r) in rows.iter().enumerate() {
+                    let lo = ptr[t] as usize;
+                    let hi = ptr[t + 1] as usize;
+                    let mut acc = 0.0f32;
+                    for e in lo..hi {
+                        acc += self.sp_val[e] * x_seg[self.sp_col[e] as usize];
+                    }
+                    y_seg[r as usize] += acc;
+                }
+            }
+        }
+    }
+
+    /// Visit every stored nonzero of block `t` as (local_row, local_col,
+    /// value).
+    #[inline]
+    pub fn for_each_nz<F: FnMut(usize, usize, f32)>(&self, t: usize, mut f: F) {
+        let b = &self.blocks[t];
+        match b.kind {
+            BlockKind::Dense { off } => {
+                let w = b.cols.len();
+                for r in 0..b.rows.len() {
+                    let row = &self.dense[off as usize + r * w..off as usize + (r + 1) * w];
+                    for (c, &v) in row.iter().enumerate() {
+                        if v != 0.0 {
+                            f(r, c, v);
+                        }
+                    }
+                }
+            }
+            BlockKind::Sparse {
+                row_off,
+                row_cnt,
+                ptr_off,
+            } => {
+                for t in 0..row_cnt as usize {
+                    let r = self.sp_rows[row_off as usize + t] as usize;
+                    let lo = self.sp_ptr[ptr_off as usize + t] as usize;
+                    let hi = self.sp_ptr[ptr_off as usize + t + 1] as usize;
+                    for e in lo..hi {
+                        f(r, self.sp_col[e] as usize, self.sp_val[e]);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Dense-block payload (padded into caller buffers by the scheduler).
+    pub fn dense_slice(&self, t: usize) -> Option<&[f32]> {
+        let b = &self.blocks[t];
+        match b.kind {
+            BlockKind::Dense { off } => {
+                Some(&self.dense[off as usize..off as usize + b.rows.len() * b.cols.len()])
+            }
+            BlockKind::Sparse { .. } => None,
+        }
+    }
+
+    /// Flat (single-level, row-major block) schedule — the CSB ablation.
+    pub fn flat_order(&self) -> Vec<u32> {
+        let mut idx: Vec<u32> = (0..self.blocks.len() as u32).collect();
+        idx.sort_by_key(|&t| {
+            let b = &self.blocks[t as usize];
+            (b.tleaf, b.sleaf)
+        });
+        idx
+    }
+
+    /// Sequential multi-level SpMV: `y = A x` (y overwritten).
+    pub fn spmv(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        y.fill(0.0);
+        for t in 0..self.blocks.len() {
+            self.block_matvec(t, x, y);
+        }
+    }
+
+    /// Sequential SpMV in an explicit block order (ablation hook).
+    pub fn spmv_ordered(&self, order: &[u32], x: &[f32], y: &mut [f32]) {
+        y.fill(0.0);
+        for &t in order {
+            self.block_matvec(t as usize, x, y);
+        }
+    }
+
+    /// Fraction of nonzeros living in dense-stored blocks.
+    pub fn dense_fraction(&self) -> f64 {
+        let dense: u64 = self
+            .blocks
+            .iter()
+            .filter(|b| b.is_dense())
+            .map(|b| b.nnz as u64)
+            .sum();
+        dense as f64 / self.nnz.max(1) as f64
+    }
+
+    /// Stats line for logs/benches.
+    pub fn describe(&self) -> String {
+        format!(
+            "blocks={} tgt_leaves={} src_leaves={} dense_frac={:.2} avg_block_nnz={:.1}",
+            self.blocks.len(),
+            self.tgt_leaves.len(),
+            self.src_leaves.len(),
+            self.dense_fraction(),
+            self.nnz as f64 / self.blocks.len().max(1) as f64
+        )
+    }
+}
+
+/// Map each index to its leaf ordinal via span scan.
+fn leaf_lookup(leaves: &[Span], n: usize) -> Vec<u32> {
+    let mut out = vec![0u32; n];
+    for (ord, sp) in leaves.iter().enumerate() {
+        for i in sp.lo..sp.hi {
+            out[i as usize] = ord as u32;
+        }
+    }
+    out
+}
+
+/// Recursive dual-tree descent emitting (block-row ordinal, block-col
+/// ordinal) pairs over the two size cuts; pairs with no nonzeros are pruned
+/// via a bottom-up occupancy set.
+fn multilevel_order(
+    tt: &BoxTree,
+    st: &BoxTree,
+    tgt_leaf_ids: &[u32],
+    src_leaf_ids: &[u32],
+    blocks: &[(u32, u32)],
+) -> Vec<(u32, u32)> {
+    use std::collections::HashSet;
+    // leaf ordinal -> node id, and node id -> leaf ordinal
+    let mut t_ord: HashMap<u32, u32> = HashMap::new();
+    for (o, &id) in tgt_leaf_ids.iter().enumerate() {
+        t_ord.insert(id, o as u32);
+    }
+    let mut s_ord: HashMap<u32, u32> = HashMap::new();
+    for (o, &id) in src_leaf_ids.iter().enumerate() {
+        s_ord.insert(id, o as u32);
+    }
+
+    // Occupied (t node, s node) pairs, propagated to ancestors.
+    let mut occupied: HashSet<(u32, u32)> = HashSet::new();
+    for &(btl, bsl) in blocks {
+        let mut tn = tgt_leaf_ids[btl as usize];
+        loop {
+            let mut sn = src_leaf_ids[bsl as usize];
+            loop {
+                if !occupied.insert((tn, sn)) {
+                    // ancestors already present? still need to walk up this
+                    // source chain because different leaves share ancestors
+                }
+                let sp = st.nodes[sn as usize].parent;
+                if sp == sn {
+                    break;
+                }
+                sn = sp;
+            }
+            let tp = tt.nodes[tn as usize].parent;
+            if tp == tn {
+                break;
+            }
+            tn = tp;
+        }
+    }
+
+    let mut out = Vec::with_capacity(blocks.len());
+    descend(tt, st, 0, 0, &occupied, &t_ord, &s_ord, &mut out);
+    out
+}
+
+#[allow(clippy::too_many_arguments)]
+fn descend(
+    tt: &BoxTree,
+    st: &BoxTree,
+    tn: u32,
+    sn: u32,
+    occupied: &std::collections::HashSet<(u32, u32)>,
+    t_ord: &HashMap<u32, u32>,
+    s_ord: &HashMap<u32, u32>,
+    out: &mut Vec<(u32, u32)>,
+) {
+    if !occupied.contains(&(tn, sn)) {
+        return;
+    }
+    // Cut membership terminates descent (cut nodes are the block spans).
+    let t_leaf = t_ord.contains_key(&tn);
+    let s_leaf = s_ord.contains_key(&sn);
+    match (t_leaf, s_leaf) {
+        (true, true) => {
+            out.push((t_ord[&tn], s_ord[&sn]));
+        }
+        (false, true) => {
+            for &c in &tt.nodes[tn as usize].children {
+                descend(tt, st, c, sn, occupied, t_ord, s_ord, out);
+            }
+        }
+        (true, false) => {
+            for &c in &st.nodes[sn as usize].children {
+                descend(tt, st, tn, c, occupied, t_ord, s_ord, out);
+            }
+        }
+        (false, false) => {
+            // Split both: child-pair blocks complete a parent pair before
+            // moving on (the multi-level schedule).
+            for &tc in &tt.nodes[tn as usize].children {
+                for &sc in &st.nodes[sn as usize].children {
+                    descend(tt, st, tc, sc, occupied, t_ord, s_ord, out);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+    use crate::knn::exact::knn_graph;
+    use crate::order::Pipeline;
+
+    fn setup(n: usize, leaf: usize) -> (Csr, HierCsb) {
+        let ds = SynthSpec::blobs(n, 3, 4, 11).generate();
+        let g = knn_graph(&ds, 8, 2);
+        let a = Csr::from_knn(&g, n).symmetrized();
+        let r = Pipeline::dual_tree(3).run(&ds, &a);
+        let tree = r.tree.as_ref().unwrap();
+        let csb = HierCsb::build(&r.reordered, tree, tree, leaf);
+        (r.reordered, csb)
+    }
+
+    #[test]
+    fn block_nnz_sums_to_total() {
+        let (a, csb) = setup(400, 32);
+        let total: u64 = csb.blocks.iter().map(|b| b.nnz as u64).sum();
+        assert_eq!(total as usize, a.nnz());
+    }
+
+    #[test]
+    fn spmv_matches_csr_reference() {
+        let (a, csb) = setup(500, 32);
+        let mut rng = crate::util::rng::Rng::new(5);
+        let x: Vec<f32> = (0..a.cols).map(|_| rng.f32()).collect();
+        let want = a.matvec_ref(&x);
+        let mut got = vec![0.0f32; a.rows];
+        csb.spmv(&x, &mut got);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-3 * (1.0 + w.abs()), "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn flat_order_same_result() {
+        let (a, csb) = setup(300, 16);
+        let mut rng = crate::util::rng::Rng::new(6);
+        let x: Vec<f32> = (0..a.cols).map(|_| rng.f32()).collect();
+        let mut y1 = vec![0.0f32; a.rows];
+        let mut y2 = vec![0.0f32; a.rows];
+        csb.spmv(&x, &mut y1);
+        let flat = csb.flat_order();
+        csb.spmv_ordered(&flat, &x, &mut y2);
+        for (a, b) in y1.iter().zip(&y2) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn by_target_covers_all_blocks() {
+        let (_, csb) = setup(350, 32);
+        let total: usize = csb.by_target.iter().map(|v| v.len()).sum();
+        assert_eq!(total, csb.blocks.len());
+        for (tl, list) in csb.by_target.iter().enumerate() {
+            for &t in list {
+                assert_eq!(csb.blocks[t as usize].tleaf as usize, tl);
+            }
+        }
+    }
+
+    #[test]
+    fn dense_blocks_appear_on_clustered_data() {
+        // strongly clustered data + symmetrized kNN → diagonal blocks dense
+        // under the PJRT-path threshold (0.25); with k=8 and ~32-point
+        // blocks the diagonal density is ~0.5.
+        let ds = SynthSpec::blobs(400, 3, 4, 11).generate();
+        let g = knn_graph(&ds, 8, 2);
+        let a = Csr::from_knn(&g, 400).symmetrized();
+        let r = Pipeline::dual_tree(3).run(&ds, &a);
+        let tree = r.tree.as_ref().unwrap();
+        let csb = HierCsb::build_with(&r.reordered, tree, tree, 32, 0.25);
+        assert!(
+            csb.dense_fraction() > 0.3,
+            "expected dense blocks, got {}",
+            csb.describe()
+        );
+    }
+
+    #[test]
+    fn multilevel_order_groups_target_parents() {
+        // Blocks of the same target leaf must appear consecutively *or* at
+        // least the traversal must not round-robin leaves: count target
+        // switches; multilevel should have far fewer than random order.
+        let (_, csb) = setup(600, 16);
+        let switches = csb
+            .blocks
+            .windows(2)
+            .filter(|w| w[0].tleaf != w[1].tleaf)
+            .count();
+        // flat row-major order = minimal switches (= #leaves-1 at least);
+        // multilevel is allowed more, but must be within 4x of block-count/leaf bound.
+        assert!(
+            switches < csb.blocks.len(),
+            "degenerate traversal: {switches} switches over {} blocks",
+            csb.blocks.len()
+        );
+    }
+
+    #[test]
+    fn dense_threshold_extremes() {
+        let ds = SynthSpec::blobs(200, 2, 3, 3).generate();
+        let g = knn_graph(&ds, 5, 1);
+        let a = Csr::from_knn(&g, 200).symmetrized();
+        let r = Pipeline::dual_tree(2).run(&ds, &a);
+        let tree = r.tree.as_ref().unwrap();
+        let all_dense = HierCsb::build_with(&r.reordered, tree, tree, 32, 0.0);
+        let all_sparse = HierCsb::build_with(&r.reordered, tree, tree, 32, 1.1);
+        assert!((all_dense.dense_fraction() - 1.0).abs() < 1e-9);
+        assert_eq!(all_sparse.dense_fraction(), 0.0);
+        // both compute the same product
+        let mut rng = crate::util::rng::Rng::new(7);
+        let x: Vec<f32> = (0..200).map(|_| rng.f32()).collect();
+        let mut y1 = vec![0.0f32; 200];
+        let mut y2 = vec![0.0f32; 200];
+        all_dense.spmv(&x, &mut y1);
+        all_sparse.spmv(&x, &mut y2);
+        for (a, b) in y1.iter().zip(&y2) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+}

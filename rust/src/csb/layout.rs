@@ -1,0 +1,76 @@
+//! Hierarchical vector layout: charge and potential vectors placed in
+//! memory according to the cluster structure (§2.4 "we reorder the charge
+//! and potential vectors hierarchically in memory").
+//!
+//! With the tree permutation `perm` (tree position k holds original index
+//! perm[k]):
+//! * `to_tree_order`   — gather `x_tree[k] = x[perm[k]]`
+//! * `from_tree_order` — scatter `y[perm[k]] = y_tree[k]`
+
+/// Gather a vector into tree order.
+pub fn to_tree_order<T: Copy>(x: &[T], perm: &[usize]) -> Vec<T> {
+    assert_eq!(x.len(), perm.len());
+    perm.iter().map(|&p| x[p]).collect()
+}
+
+/// Scatter a tree-ordered vector back to original order.
+pub fn from_tree_order<T: Copy + Default>(x_tree: &[T], perm: &[usize]) -> Vec<T> {
+    assert_eq!(x_tree.len(), perm.len());
+    let mut out = vec![T::default(); x_tree.len()];
+    for (k, &p) in perm.iter().enumerate() {
+        out[p] = x_tree[k];
+    }
+    out
+}
+
+/// Gather rows of a row-major `n x d` coordinate array into tree order.
+pub fn rows_to_tree_order(x: &[f32], d: usize, perm: &[usize]) -> Vec<f32> {
+    assert_eq!(x.len(), perm.len() * d);
+    let mut out = Vec::with_capacity(x.len());
+    for &p in perm {
+        out.extend_from_slice(&x[p * d..(p + 1) * d]);
+    }
+    out
+}
+
+/// Scatter rows of a tree-ordered `n x d` array back to original order.
+pub fn rows_from_tree_order(xt: &[f32], d: usize, perm: &[usize]) -> Vec<f32> {
+    assert_eq!(xt.len(), perm.len() * d);
+    let mut out = vec![0.0f32; xt.len()];
+    for (k, &p) in perm.iter().enumerate() {
+        out[p * d..(p + 1) * d].copy_from_slice(&xt[k * d..(k + 1) * d]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let mut rng = Rng::new(1);
+        let perm = rng.permutation(97);
+        let x: Vec<f32> = (0..97).map(|_| rng.f32()).collect();
+        let xt = to_tree_order(&x, &perm);
+        assert_eq!(from_tree_order(&xt, &perm), x);
+    }
+
+    #[test]
+    fn rows_roundtrip() {
+        let mut rng = Rng::new(2);
+        let perm = rng.permutation(41);
+        let x: Vec<f32> = (0..41 * 3).map(|_| rng.f32()).collect();
+        let xt = rows_to_tree_order(&x, 3, &perm);
+        assert_eq!(rows_from_tree_order(&xt, 3, &perm), x);
+    }
+
+    #[test]
+    fn gather_semantics() {
+        // perm = [2,0,1]: tree position 0 holds original index 2.
+        let x = [10.0f32, 20.0, 30.0];
+        let xt = to_tree_order(&x, &[2, 0, 1]);
+        assert_eq!(xt, vec![30.0, 10.0, 20.0]);
+    }
+}

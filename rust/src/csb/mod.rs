@@ -1,0 +1,7 @@
+//! Multi-level compressed sparse block storage (§2.4) — the paper's
+//! generalization of Buluç et al.'s CSB to *adaptive* blocks derived from
+//! the data's cluster hierarchy, plus the matching hierarchical vector
+//! layout.
+
+pub mod hier;
+pub mod layout;

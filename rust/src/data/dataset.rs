@@ -1,0 +1,267 @@
+//! Dense, row-major point sets with binary I/O.
+//!
+//! The canonical container for source/target data everywhere in the crate:
+//! `n` points in `R^d`, stored as one contiguous `Vec<f32>` (row-major) so
+//! that a tree-ordered permutation makes cluster segments physically
+//! contiguous — the paper's prerequisite for charge/potential locality.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// `n` points in `R^d`, row-major.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Dataset {
+    n: usize,
+    d: usize,
+    xs: Vec<f32>,
+    /// Optional class labels (synthetic data records ground truth here).
+    pub labels: Option<Vec<u32>>,
+}
+
+impl Dataset {
+    pub fn new(n: usize, d: usize, xs: Vec<f32>) -> Self {
+        assert_eq!(xs.len(), n * d, "data length must be n*d");
+        Dataset {
+            n,
+            d,
+            xs,
+            labels: None,
+        }
+    }
+
+    pub fn zeros(n: usize, d: usize) -> Self {
+        Dataset::new(n, d, vec![0.0; n * d])
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// Row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.xs[i * self.d..(i + 1) * self.d]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.xs[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Raw storage.
+    #[inline]
+    pub fn raw(&self) -> &[f32] {
+        &self.xs
+    }
+
+    #[inline]
+    pub fn raw_mut(&mut self) -> &mut [f32] {
+        &mut self.xs
+    }
+
+    /// Squared Euclidean distance between rows `i` and `j`.
+    #[inline]
+    pub fn sqdist(&self, i: usize, j: usize) -> f32 {
+        let (a, b) = (self.row(i), self.row(j));
+        let mut s = 0.0f32;
+        for k in 0..self.d {
+            let t = a[k] - b[k];
+            s += t * t;
+        }
+        s
+    }
+
+    /// Apply a permutation: output row `k` = input row `perm[k]`.
+    /// Labels are carried along.
+    pub fn permuted(&self, perm: &[usize]) -> Dataset {
+        assert_eq!(perm.len(), self.n);
+        let mut xs = Vec::with_capacity(self.xs.len());
+        for &p in perm {
+            xs.extend_from_slice(self.row(p));
+        }
+        let labels = self
+            .labels
+            .as_ref()
+            .map(|l| perm.iter().map(|&p| l[p]).collect());
+        Dataset {
+            n: self.n,
+            d: self.d,
+            xs,
+            labels,
+        }
+    }
+
+    /// Per-coordinate mean.
+    pub fn mean(&self) -> Vec<f32> {
+        let mut m = vec![0.0f64; self.d];
+        for i in 0..self.n {
+            for (k, &v) in self.row(i).iter().enumerate() {
+                m[k] += v as f64;
+            }
+        }
+        m.iter().map(|&s| (s / self.n as f64) as f32).collect()
+    }
+
+    /// Center in place (subtract mean); returns the mean.
+    pub fn center(&mut self) -> Vec<f32> {
+        let m = self.mean();
+        for i in 0..self.n {
+            let r = self.row_mut(i);
+            for (k, mv) in m.iter().enumerate() {
+                r[k] -= mv;
+            }
+        }
+        m
+    }
+
+    /// Keep only the rows with the given indices (any count, any order).
+    pub fn select(&self, idx: &[usize]) -> Dataset {
+        let mut xs = Vec::with_capacity(idx.len() * self.d);
+        for &p in idx {
+            xs.extend_from_slice(self.row(p));
+        }
+        let labels = self
+            .labels
+            .as_ref()
+            .map(|l| idx.iter().map(|&p| l[p]).collect());
+        Dataset {
+            n: idx.len(),
+            d: self.d,
+            xs,
+            labels,
+        }
+    }
+
+    /// Binary serialization: magic, n, d, has_labels, f32 rows, u32 labels.
+    pub fn write_to<W: Write>(&self, w: &mut W) -> std::io::Result<()> {
+        w.write_all(b"NNID")?;
+        w.write_all(&(self.n as u64).to_le_bytes())?;
+        w.write_all(&(self.d as u64).to_le_bytes())?;
+        w.write_all(&[self.labels.is_some() as u8])?;
+        for &x in &self.xs {
+            w.write_all(&x.to_le_bytes())?;
+        }
+        if let Some(ls) = &self.labels {
+            for &l in ls {
+                w.write_all(&l.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn read_from<R: Read>(r: &mut R) -> std::io::Result<Dataset> {
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != b"NNID" {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "bad magic",
+            ));
+        }
+        let mut b8 = [0u8; 8];
+        r.read_exact(&mut b8)?;
+        let n = u64::from_le_bytes(b8) as usize;
+        r.read_exact(&mut b8)?;
+        let d = u64::from_le_bytes(b8) as usize;
+        let mut b1 = [0u8; 1];
+        r.read_exact(&mut b1)?;
+        let mut xs = vec![0.0f32; n * d];
+        let mut b4 = [0u8; 4];
+        for x in xs.iter_mut() {
+            r.read_exact(&mut b4)?;
+            *x = f32::from_le_bytes(b4);
+        }
+        let labels = if b1[0] == 1 {
+            let mut ls = vec![0u32; n];
+            for l in ls.iter_mut() {
+                r.read_exact(&mut b4)?;
+                *l = u32::from_le_bytes(b4);
+            }
+            Some(ls)
+        } else {
+            None
+        };
+        Ok(Dataset { n, d, xs, labels })
+    }
+
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        self.write_to(&mut f)
+    }
+
+    pub fn load(path: &Path) -> std::io::Result<Dataset> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        Dataset::read_from(&mut f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_ds(n: usize, d: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed);
+        let xs: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let mut ds = Dataset::new(n, d, xs);
+        ds.labels = Some((0..n).map(|i| (i % 7) as u32).collect());
+        ds
+    }
+
+    #[test]
+    fn rows_and_sqdist() {
+        let ds = Dataset::new(2, 3, vec![0.0, 0.0, 0.0, 3.0, 4.0, 0.0]);
+        assert_eq!(ds.row(1), &[3.0, 4.0, 0.0]);
+        assert_eq!(ds.sqdist(0, 1), 25.0);
+        assert_eq!(ds.sqdist(1, 1), 0.0);
+    }
+
+    #[test]
+    fn permutation_roundtrip() {
+        let ds = random_ds(37, 5, 1);
+        let mut rng = Rng::new(2);
+        let p = rng.permutation(37);
+        let q = crate::order::invert(&p);
+        assert_eq!(ds.permuted(&p).permuted(&q), ds);
+    }
+
+    #[test]
+    fn centering_zeroes_mean() {
+        let mut ds = random_ds(100, 4, 3);
+        ds.center();
+        for m in ds.mean() {
+            assert!(m.abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn io_roundtrip() {
+        let ds = random_ds(23, 9, 4);
+        let mut buf = Vec::new();
+        ds.write_to(&mut buf).unwrap();
+        let back = Dataset::read_from(&mut &buf[..]).unwrap();
+        assert_eq!(back, ds);
+    }
+
+    #[test]
+    fn io_rejects_bad_magic() {
+        let buf = b"XXXX\0\0\0\0".to_vec();
+        assert!(Dataset::read_from(&mut &buf[..]).is_err());
+    }
+
+    #[test]
+    fn select_picks_rows() {
+        let ds = random_ds(10, 2, 5);
+        let sel = ds.select(&[3, 7]);
+        assert_eq!(sel.n(), 2);
+        assert_eq!(sel.row(0), ds.row(3));
+        assert_eq!(sel.row(1), ds.row(7));
+        assert_eq!(sel.labels.as_ref().unwrap()[1], ds.labels.as_ref().unwrap()[7]);
+    }
+}

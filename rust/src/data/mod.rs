@@ -1,0 +1,5 @@
+//! Datasets: dense point sets in a D-dimensional feature space, plus
+//! synthetic surrogates for the paper's SIFT/GIST corpora (DESIGN.md §5).
+
+pub mod dataset;
+pub mod synth;

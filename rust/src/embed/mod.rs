@@ -1,0 +1,3 @@
+//! Low-dimensional embedding: data-specific principal feature axes (§2.4).
+
+pub mod pca;

@@ -1,0 +1,282 @@
+//! PCA by blocked subspace (orthogonal) iteration — the paper's
+//! "economic-sparse SVD": only the top `d` principal axes are computed,
+//! never the full spectrum (§2.4 "without requiring the computation of all
+//! D singular values").
+//!
+//! For n points in R^D we iterate `V <- orth(Cov · V)` with the covariance
+//! product computed as `Xᵀ(X V)/n` in two blocked passes (no D×D covariance
+//! is materialized for large D).  Convergence is measured on the subspace
+//! angle via the Rayleigh quotient deltas.
+
+use crate::data::dataset::Dataset;
+use crate::par::pool::ThreadPool;
+use crate::util::rng::Rng;
+
+/// Result of a truncated PCA.
+#[derive(Clone, Debug)]
+pub struct Pca {
+    /// Embedding dimension.
+    pub d: usize,
+    /// Ambient dimension.
+    pub ambient: usize,
+    /// Principal axes, row-major `d x ambient` (each row a unit axis).
+    pub axes: Vec<f64>,
+    /// Eigenvalues of the covariance (variance along each axis), desc.
+    pub eigenvalues: Vec<f64>,
+    /// Total variance (trace of covariance), for explained-variance ratios.
+    pub total_variance: f64,
+    /// Data mean subtracted before projection.
+    pub mean: Vec<f32>,
+}
+
+impl Pca {
+    /// Fraction of total variance captured by the first `k <= d` axes —
+    /// the paper's distortion-tolerance ratio Σσᵢ²/‖X‖_F².
+    pub fn explained(&self, k: usize) -> f64 {
+        let s: f64 = self.eigenvalues[..k.min(self.eigenvalues.len())].iter().sum();
+        if self.total_variance > 0.0 {
+            s / self.total_variance
+        } else {
+            0.0
+        }
+    }
+
+    /// Project the dataset onto the top `k <= d` axes.
+    pub fn project(&self, ds: &Dataset, k: usize) -> Dataset {
+        assert!(k <= self.d);
+        assert_eq!(ds.d(), self.ambient);
+        let mut out = vec![0.0f32; ds.n() * k];
+        for i in 0..ds.n() {
+            let row = ds.row(i);
+            for a in 0..k {
+                let axis = &self.axes[a * self.ambient..(a + 1) * self.ambient];
+                let mut s = 0.0f64;
+                for j in 0..self.ambient {
+                    s += (row[j] - self.mean[j]) as f64 * axis[j];
+                }
+                out[i * k + a] = s as f32;
+            }
+        }
+        let mut e = Dataset::new(ds.n(), k, out);
+        e.labels = ds.labels.clone();
+        e
+    }
+}
+
+/// Compute the top-`d` principal axes of `ds`.
+///
+/// `iters` subspace iterations (8–12 suffice for the well-separated spectra
+/// the reordering cares about); deterministic for a given `seed`.
+pub fn pca(ds: &Dataset, d: usize, iters: usize, seed: u64) -> Pca {
+    let n = ds.n();
+    let dim = ds.d();
+    let d = d.min(dim);
+    let mean = ds.mean();
+    let pool = ThreadPool::with_default();
+
+    // Total variance = (1/n) sum_i |x_i - mean|^2.
+    let mut total = 0.0f64;
+    for i in 0..n {
+        for (k, &v) in ds.row(i).iter().enumerate() {
+            let t = (v - mean[k]) as f64;
+            total += t * t;
+        }
+    }
+    total /= n as f64;
+
+    // V: dim x d column block, initialized randomly.
+    let mut rng = Rng::new(seed);
+    let mut v = vec![0.0f64; dim * d];
+    for x in v.iter_mut() {
+        *x = rng.normal();
+    }
+    orthonormalize(&mut v, dim, d);
+
+    let mut eigs = vec![0.0f64; d];
+    for _ in 0..iters.max(1) {
+        // W = Cov · V = Xcᵀ (Xc V) / n, blocked over points, parallel
+        // over row chunks with thread-local accumulators.
+        let chunk = n.div_ceil(pool.threads.max(1)).max(1);
+        let partials: Vec<Vec<f64>> = {
+            let ranges: Vec<(usize, usize)> = (0..n)
+                .step_by(chunk)
+                .map(|lo| (lo, (lo + chunk).min(n)))
+                .collect();
+            pool.map(&ranges, |&(lo, hi)| {
+                let mut w = vec![0.0f64; dim * d];
+                let mut proj = vec![0.0f64; d];
+                for i in lo..hi {
+                    let row = ds.row(i);
+                    for p in proj.iter_mut() {
+                        *p = 0.0;
+                    }
+                    for j in 0..dim {
+                        let xj = (row[j] - mean[j]) as f64;
+                        if xj != 0.0 {
+                            let vr = &v[j * d..(j + 1) * d];
+                            for a in 0..d {
+                                proj[a] += xj * vr[a];
+                            }
+                        }
+                    }
+                    for j in 0..dim {
+                        let xj = (row[j] - mean[j]) as f64;
+                        if xj != 0.0 {
+                            let wr = &mut w[j * d..(j + 1) * d];
+                            for a in 0..d {
+                                wr[a] += xj * proj[a];
+                            }
+                        }
+                    }
+                }
+                w
+            })
+        };
+        let mut w = vec![0.0f64; dim * d];
+        for p in &partials {
+            for (wi, pi) in w.iter_mut().zip(p) {
+                *wi += pi;
+            }
+        }
+        for x in w.iter_mut() {
+            *x /= n as f64;
+        }
+        // Rayleigh quotients BEFORE orthonormalization: eig_a ≈ |w_a| since
+        // v_a is unit: lambda_a = v_aᵀ Cov v_a = v_a · w_a.
+        for (a, e) in eigs.iter_mut().enumerate() {
+            let mut s = 0.0;
+            for j in 0..dim {
+                s += v[j * d + a] * w[j * d + a];
+            }
+            *e = s;
+        }
+        v = w;
+        orthonormalize(&mut v, dim, d);
+    }
+
+    // Sort axes by eigenvalue descending (subspace iteration usually
+    // delivers them ordered, but enforce it).
+    let mut idx: Vec<usize> = (0..d).collect();
+    idx.sort_by(|&a, &b| eigs[b].partial_cmp(&eigs[a]).unwrap());
+    let mut axes = vec![0.0f64; d * dim];
+    let mut eigenvalues = vec![0.0f64; d];
+    for (out_a, &src_a) in idx.iter().enumerate() {
+        eigenvalues[out_a] = eigs[src_a];
+        for j in 0..dim {
+            axes[out_a * dim + j] = v[j * d + src_a];
+        }
+    }
+
+    Pca {
+        d,
+        ambient: dim,
+        axes,
+        eigenvalues,
+        total_variance: total,
+        mean,
+    }
+}
+
+/// Gram–Schmidt on the columns of the `dim x d` block `v`.
+fn orthonormalize(v: &mut [f64], dim: usize, d: usize) {
+    for a in 0..d {
+        for b in 0..a {
+            let mut dot = 0.0;
+            for j in 0..dim {
+                dot += v[j * d + a] * v[j * d + b];
+            }
+            for j in 0..dim {
+                v[j * d + a] -= dot * v[j * d + b];
+            }
+        }
+        let mut norm = 0.0;
+        for j in 0..dim {
+            norm += v[j * d + a] * v[j * d + a];
+        }
+        let norm = norm.sqrt().max(1e-300);
+        for j in 0..dim {
+            v[j * d + a] /= norm;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Data with a known dominant direction: x = t*u + small noise.
+    fn line_data(n: usize, dim: usize, seed: u64) -> (Dataset, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let mut u: Vec<f64> = (0..dim).map(|_| rng.normal()).collect();
+        let nu: f64 = u.iter().map(|x| x * x).sum::<f64>().sqrt();
+        for x in u.iter_mut() {
+            *x /= nu;
+        }
+        let mut xs = vec![0.0f32; n * dim];
+        for i in 0..n {
+            let t = 3.0 * rng.normal();
+            for j in 0..dim {
+                xs[i * dim + j] = (t * u[j] + 0.01 * rng.normal()) as f32;
+            }
+        }
+        (Dataset::new(n, dim, xs), u)
+    }
+
+    #[test]
+    fn recovers_dominant_axis() {
+        let (ds, u) = line_data(500, 20, 1);
+        let p = pca(&ds, 2, 12, 7);
+        let axis = &p.axes[..20];
+        let dot: f64 = axis.iter().zip(&u).map(|(a, b)| a * b).sum();
+        assert!(dot.abs() > 0.99, "axis alignment {dot}");
+        assert!(p.eigenvalues[0] > 5.0 * p.eigenvalues[1]);
+    }
+
+    #[test]
+    fn explained_variance_close_to_one_for_line() {
+        let (ds, _) = line_data(400, 10, 2);
+        let p = pca(&ds, 1, 12, 3);
+        assert!(p.explained(1) > 0.95, "explained {}", p.explained(1));
+    }
+
+    #[test]
+    fn axes_are_orthonormal() {
+        let ds = crate::data::synth::SynthSpec::sift_like(400, 5).generate();
+        let p = pca(&ds, 3, 10, 1);
+        for a in 0..3 {
+            for b in 0..=a {
+                let dot: f64 = (0..p.ambient)
+                    .map(|j| p.axes[a * p.ambient + j] * p.axes[b * p.ambient + j])
+                    .sum();
+                if a == b {
+                    assert!((dot - 1.0).abs() < 1e-8);
+                } else {
+                    assert!(dot.abs() < 1e-6);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn projection_shape_and_centering() {
+        let ds = crate::data::synth::SynthSpec::sift_like(300, 6).generate();
+        let p = pca(&ds, 3, 8, 2);
+        let e = p.project(&ds, 2);
+        assert_eq!(e.n(), 300);
+        assert_eq!(e.d(), 2);
+        // projected data is centered
+        for m in e.mean() {
+            assert!(m.abs() < 1e-3, "mean {m}");
+        }
+    }
+
+    #[test]
+    fn eigenvalues_descend() {
+        let ds = crate::data::synth::SynthSpec::sift_like(500, 8).generate();
+        let p = pca(&ds, 4, 10, 4);
+        for w in p.eigenvalues.windows(2) {
+            assert!(w[0] >= w[1] - 1e-9);
+        }
+    }
+}

@@ -1,0 +1,314 @@
+//! The multi-level interaction engine.
+//!
+//! Holds the hierarchical block structure (profile + stationary values) and
+//! per-iteration recomputes the non-stationary kernel values *fused* with
+//! the block multiply — the paper's key operational point: after the
+//! dual-tree reorder, every iteration touches the matrix block by block and
+//! the vectors segment by segment, whatever the kernel.
+//!
+//! Three iteration kernels, matching the case studies and the L1 Pallas
+//! kernels (`python/compile/kernels/`):
+//!
+//! * [`Engine::tsne_attr`]   — attractive force, values `p_ij/(1+‖y_i−y_j‖²)`;
+//! * [`Engine::gauss_apply`] — Gaussian matvec, values `exp(−‖t−s‖²·inv_h2)`;
+//! * [`Engine::meanshift_step`] — Gaussian numerator/denominator sums.
+//!
+//! Parallelism: target-leaf ownership (one worker owns all writes to a
+//! potential segment), identical to `spmv::multilevel`.
+
+use crate::csb::hier::HierCsb;
+use crate::par::pool::ThreadPool;
+
+/// The engine: block structure + thread pool.
+pub struct Engine {
+    pub csb: HierCsb,
+    pub pool: ThreadPool,
+}
+
+impl Engine {
+    pub fn new(csb: HierCsb, threads: usize) -> Engine {
+        Engine {
+            csb,
+            pool: if threads == 0 {
+                ThreadPool::with_default()
+            } else {
+                ThreadPool::new(threads)
+            },
+        }
+    }
+
+    /// Generic per-target-leaf parallel driver with exclusive row-segment
+    /// ownership. `f(tleaf, out_segment)` computes all of that leaf's
+    /// blocks into its own slice of `out` (`stride` f32 per row).
+    fn per_target<F>(&self, out: &mut [f32], stride: usize, f: F)
+    where
+        F: Fn(usize, &mut [f32]) + Sync,
+    {
+        assert_eq!(out.len(), self.csb.rows * stride);
+        out.fill(0.0);
+        struct SendPtr(*mut f32);
+        unsafe impl Send for SendPtr {}
+        unsafe impl Sync for SendPtr {}
+        let op = SendPtr(out.as_mut_ptr());
+        let opr = &op;
+        let leaves = &self.csb.tgt_leaves;
+        self.pool.for_each_chunked(leaves.len(), 4, |tl| {
+            let sp = leaves[tl];
+            // SAFETY: target-leaf row spans are disjoint.
+            let seg: &mut [f32] = unsafe {
+                std::slice::from_raw_parts_mut(
+                    opr.0.add(sp.lo as usize * stride),
+                    sp.len() * stride,
+                )
+            };
+            f(tl, seg);
+        });
+    }
+
+    /// t-SNE attractive force (§3.1).
+    ///
+    /// * `y`: embedding coordinates, tree-ordered row-major `n x d`
+    ///   (targets and sources coincide);
+    /// * stored block values are the joint probabilities `p_ij`;
+    /// * `force`: output `n x d`, overwritten.
+    ///
+    /// `F_i = Σ_j p_ij · (1 + ‖y_i − y_j‖²)^{-1} · (y_i − y_j)`.
+    pub fn tsne_attr(&self, y: &[f32], d: usize, force: &mut [f32]) {
+        assert_eq!(y.len(), self.csb.cols * d);
+        let csb = &self.csb;
+        self.per_target(force, d, |tl, seg| {
+            for &t in &csb.by_target[tl] {
+                let b = &csb.blocks[t as usize];
+                let r0 = b.rows.lo as usize;
+                let c0 = b.cols.lo as usize;
+                csb.for_each_nz(t as usize, |r, c, p| {
+                    let yi = &y[(r0 + r) * d..(r0 + r + 1) * d];
+                    let yj = &y[(c0 + c) * d..(c0 + c + 1) * d];
+                    let mut d2 = 0.0f32;
+                    for k in 0..d {
+                        let t = yi[k] - yj[k];
+                        d2 += t * t;
+                    }
+                    let w = p / (1.0 + d2);
+                    let out = &mut seg[r * d..(r + 1) * d];
+                    for k in 0..d {
+                        out[k] += w * (yi[k] - yj[k]);
+                    }
+                });
+            }
+        });
+    }
+
+    /// Gaussian interaction matvec (stationary profile, coordinate-derived
+    /// values): `y_out_i = Σ_j exp(−‖t_i − s_j‖²·inv_h2) · x_j` over the
+    /// stored profile.  `tcoords`/`scoords` are tree-ordered `n x d`.
+    pub fn gauss_apply(
+        &self,
+        tcoords: &[f32],
+        scoords: &[f32],
+        d: usize,
+        inv_h2: f32,
+        x: &[f32],
+        y_out: &mut [f32],
+    ) {
+        assert_eq!(tcoords.len(), self.csb.rows * d);
+        assert_eq!(scoords.len(), self.csb.cols * d);
+        assert_eq!(x.len(), self.csb.cols);
+        let csb = &self.csb;
+        self.per_target(y_out, 1, |tl, seg| {
+            for &t in &csb.by_target[tl] {
+                let b = &csb.blocks[t as usize];
+                let r0 = b.rows.lo as usize;
+                let c0 = b.cols.lo as usize;
+                csb.for_each_nz(t as usize, |r, c, _| {
+                    let ti = &tcoords[(r0 + r) * d..(r0 + r + 1) * d];
+                    let sj = &scoords[(c0 + c) * d..(c0 + c + 1) * d];
+                    let mut d2 = 0.0f32;
+                    for k in 0..d {
+                        let t = ti[k] - sj[k];
+                        d2 += t * t;
+                    }
+                    seg[r] += (-d2 * inv_h2).exp() * x[c0 + c];
+                });
+            }
+        });
+    }
+
+    /// Mean-shift partial sums (§3.2): returns `(num, den)` with
+    /// `num_i = Σ_j w_ij s_j` (`n x d`) and `den_i = Σ_j w_ij`.
+    pub fn meanshift_step(
+        &self,
+        tcoords: &[f32],
+        scoords: &[f32],
+        d: usize,
+        inv_h2: f32,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let n = self.csb.rows;
+        let mut num = vec![0.0f32; n * d];
+        let mut den = vec![0.0f32; n];
+        // Fuse both outputs into one pass: compute into num, accumulate den
+        // in a second buffer owned by the same target leaf.
+        struct SendPtr(*mut f32);
+        unsafe impl Send for SendPtr {}
+        unsafe impl Sync for SendPtr {}
+        let dp = SendPtr(den.as_mut_ptr());
+        let dpr = &dp;
+        let csb = &self.csb;
+        self.per_target(&mut num, d, |tl, seg| {
+            let sp = csb.tgt_leaves[tl];
+            // SAFETY: disjoint target spans (same ownership as `seg`).
+            let den_seg: &mut [f32] = unsafe {
+                std::slice::from_raw_parts_mut(dpr.0.add(sp.lo as usize), sp.len())
+            };
+            for &t in &csb.by_target[tl] {
+                let b = &csb.blocks[t as usize];
+                let r0 = b.rows.lo as usize;
+                let c0 = b.cols.lo as usize;
+                csb.for_each_nz(t as usize, |r, c, _| {
+                    let ti = &tcoords[(r0 + r) * d..(r0 + r + 1) * d];
+                    let sj = &scoords[(c0 + c) * d..(c0 + c + 1) * d];
+                    let mut d2 = 0.0f32;
+                    for k in 0..d {
+                        let t = ti[k] - sj[k];
+                        d2 += t * t;
+                    }
+                    let w = (-d2 * inv_h2).exp();
+                    let out = &mut seg[r * d..(r + 1) * d];
+                    for k in 0..d {
+                        out[k] += w * sj[k];
+                    }
+                    den_seg[r] += w;
+                });
+            }
+        });
+        (num, den)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+    use crate::knn::exact::knn_graph;
+    use crate::order::Pipeline;
+    use crate::sparse::csr::Csr;
+    use crate::util::rng::Rng;
+
+    /// Engine + the reordered CSR (values = P) + tree-ordered coords.
+    fn setup(n: usize, d: usize) -> (Csr, Engine, Vec<f32>) {
+        let ds = SynthSpec::blobs(n, d, 4, 17).generate();
+        let g = knn_graph(&ds, 6, 2);
+        let a = Csr::from_knn(&g, n).symmetrized();
+        let r = Pipeline::dual_tree(d).run(&ds, &a);
+        let tree = r.tree.as_ref().unwrap();
+        let csb = HierCsb::build(&r.reordered, tree, tree, 32);
+        let reordered_ds = ds.permuted(&r.perm);
+        let coords = reordered_ds.raw().to_vec();
+        (r.reordered, Engine::new(csb, 4), coords)
+    }
+
+    /// Dense reference for the attractive force over a CSR profile.
+    fn tsne_ref(a: &Csr, y: &[f32], d: usize) -> Vec<f32> {
+        let n = a.rows;
+        let mut f = vec![0.0f32; n * d];
+        for i in 0..n {
+            let (cols, vals) = a.row(i);
+            for (&j, &p) in cols.iter().zip(vals) {
+                let j = j as usize;
+                let mut d2 = 0.0f32;
+                for k in 0..d {
+                    let t = y[i * d + k] - y[j * d + k];
+                    d2 += t * t;
+                }
+                let w = p / (1.0 + d2);
+                for k in 0..d {
+                    f[i * d + k] += w * (y[i * d + k] - y[j * d + k]);
+                }
+            }
+        }
+        f
+    }
+
+    #[test]
+    fn tsne_attr_matches_reference() {
+        let (a, eng, _) = setup(300, 2);
+        let mut rng = Rng::new(3);
+        let y: Vec<f32> = (0..300 * 2).map(|_| rng.normal() as f32).collect();
+        let want = tsne_ref(&a, &y, 2);
+        let mut got = vec![0.0f32; 300 * 2];
+        eng.tsne_attr(&y, 2, &mut got);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-4 * (1.0 + w.abs()), "{g} vs {w}");
+        }
+    }
+
+    #[test]
+    fn gauss_apply_matches_direct() {
+        let (a, eng, coords) = setup(250, 3);
+        let mut rng = Rng::new(4);
+        let x: Vec<f32> = (0..250).map(|_| rng.f32()).collect();
+        let inv_h2 = 0.7f32;
+        // direct over the CSR profile
+        let mut want = vec![0.0f32; 250];
+        for i in 0..250 {
+            let (cols, _) = a.row(i);
+            for &j in cols {
+                let j = j as usize;
+                let mut d2 = 0.0f32;
+                for k in 0..3 {
+                    let t = coords[i * 3 + k] - coords[j * 3 + k];
+                    d2 += t * t;
+                }
+                want[i] += (-d2 * inv_h2).exp() * x[j];
+            }
+        }
+        let mut got = vec![0.0f32; 250];
+        eng.gauss_apply(&coords, &coords, 3, inv_h2, &x, &mut got);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-4 * (1.0 + w.abs()));
+        }
+    }
+
+    #[test]
+    fn meanshift_step_matches_direct() {
+        let (a, eng, coords) = setup(200, 3);
+        let inv_h2 = 0.5f32;
+        let (num, den) = eng.meanshift_step(&coords, &coords, 3, inv_h2);
+        for i in [0usize, 57, 199] {
+            let (cols, _) = a.row(i);
+            let mut wn = [0.0f32; 3];
+            let mut wd = 0.0f32;
+            for &j in cols {
+                let j = j as usize;
+                let mut d2 = 0.0f32;
+                for k in 0..3 {
+                    let t = coords[i * 3 + k] - coords[j * 3 + k];
+                    d2 += t * t;
+                }
+                let w = (-d2 * inv_h2).exp();
+                for k in 0..3 {
+                    wn[k] += w * coords[j * 3 + k];
+                }
+                wd += w;
+            }
+            assert!((den[i] - wd).abs() < 1e-4 * (1.0 + wd.abs()));
+            for k in 0..3 {
+                assert!((num[i * 3 + k] - wn[k]).abs() < 1e-3 * (1.0 + wn[k].abs()));
+            }
+        }
+    }
+
+    #[test]
+    fn thread_count_invariance() {
+        let (_, eng1, coords) = setup(300, 2);
+        let eng4 = Engine::new(eng1.csb.clone(), 8);
+        let mut rng = Rng::new(5);
+        let y: Vec<f32> = (0..300 * 2).map(|_| rng.normal() as f32).collect();
+        let _ = coords;
+        let mut f1 = vec![0.0f32; 600];
+        let mut f4 = vec![0.0f32; 600];
+        eng1.tsne_attr(&y, 2, &mut f1);
+        eng4.tsne_attr(&y, 2, &mut f4);
+        assert_eq!(f1, f4);
+    }
+}

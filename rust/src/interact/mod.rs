@@ -1,0 +1,5 @@
+//! Iterative near-neighbor interaction engines (§1, §3): the non-stationary
+//! setting where matrix *values* (and, for mean shift, the profile) change
+//! across iterations while the hierarchical ordering persists.
+
+pub mod engine;

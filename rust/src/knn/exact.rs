@@ -1,0 +1,267 @@
+//! Exact blocked brute-force kNN.
+//!
+//! The paper takes the kNN graph as given input; we build it exactly so the
+//! interaction-matrix profile is unambiguous.  Complexity O(n²·d) with cache
+//! blocking and a bounded max-heap per query; parallel over query blocks.
+//! For the sizes in the paper's experiments (≤ 2^17 points) this is minutes
+//! at worst and is run once per dataset (results can be cached to disk).
+
+use crate::data::dataset::Dataset;
+use crate::par::pool::ThreadPool;
+
+/// kNN graph: for each target `i`, `k` source neighbors and distances.
+#[derive(Clone, Debug)]
+pub struct KnnGraph {
+    pub n: usize,
+    pub k: usize,
+    /// Row-major `n x k` neighbor indices (sorted by ascending distance).
+    pub idx: Vec<u32>,
+    /// Matching squared distances.
+    pub dist2: Vec<f32>,
+}
+
+impl KnnGraph {
+    #[inline]
+    pub fn neighbors(&self, i: usize) -> &[u32] {
+        &self.idx[i * self.k..(i + 1) * self.k]
+    }
+
+    #[inline]
+    pub fn distances(&self, i: usize) -> &[f32] {
+        &self.dist2[i * self.k..(i + 1) * self.k]
+    }
+}
+
+/// Bounded max-heap of (dist2, idx) keeping the k smallest.
+struct KBest {
+    k: usize,
+    // binary max-heap by dist2
+    heap: Vec<(f32, u32)>,
+}
+
+impl KBest {
+    fn new(k: usize) -> Self {
+        KBest {
+            k,
+            heap: Vec::with_capacity(k),
+        }
+    }
+
+    #[inline]
+    fn bound(&self) -> f32 {
+        if self.heap.len() < self.k {
+            f32::INFINITY
+        } else {
+            self.heap[0].0
+        }
+    }
+
+    #[inline]
+    fn push(&mut self, d: f32, i: u32) {
+        if self.heap.len() < self.k {
+            self.heap.push((d, i));
+            // sift up
+            let mut c = self.heap.len() - 1;
+            while c > 0 {
+                let p = (c - 1) / 2;
+                if self.heap[p].0 < self.heap[c].0 {
+                    self.heap.swap(p, c);
+                    c = p;
+                } else {
+                    break;
+                }
+            }
+        } else if d < self.heap[0].0 {
+            self.heap[0] = (d, i);
+            // sift down
+            let n = self.heap.len();
+            let mut p = 0;
+            loop {
+                let (l, r) = (2 * p + 1, 2 * p + 2);
+                let mut m = p;
+                if l < n && self.heap[l].0 > self.heap[m].0 {
+                    m = l;
+                }
+                if r < n && self.heap[r].0 > self.heap[m].0 {
+                    m = r;
+                }
+                if m == p {
+                    break;
+                }
+                self.heap.swap(p, m);
+                p = m;
+            }
+        }
+    }
+
+    fn into_sorted(mut self) -> Vec<(f32, u32)> {
+        self.heap
+            .sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        self.heap
+    }
+}
+
+/// Exact kNN graph of `ds` against itself, excluding self-matches.
+///
+/// `threads`: worker count (0 → machine default).
+pub fn knn_graph(ds: &Dataset, k: usize, threads: usize) -> KnnGraph {
+    knn_graph_cross(ds, ds, k, threads, true)
+}
+
+/// Exact kNN of `targets` against `sources`.
+/// `exclude_same_index`: skip j == i (self) — used for self-graphs.
+pub fn knn_graph_cross(
+    targets: &Dataset,
+    sources: &Dataset,
+    k: usize,
+    threads: usize,
+    exclude_same_index: bool,
+) -> KnnGraph {
+    assert_eq!(targets.d(), sources.d());
+    let n = targets.n();
+    let m = sources.n();
+    assert!(k >= 1 && k <= m - exclude_same_index as usize, "k out of range");
+    let pool = if threads == 0 {
+        ThreadPool::with_default()
+    } else {
+        ThreadPool::new(threads)
+    };
+
+    let kidx = std::sync::Mutex::new(vec![0u32; n * k]);
+    let kd2 = std::sync::Mutex::new(vec![0.0f32; n * k]);
+    // Process queries in blocks; write each block's rows under the lock
+    // (contention negligible: one lock per 64 queries).
+    const QB: usize = 64;
+    let nblocks = n.div_ceil(QB);
+    pool.for_each_chunked(nblocks, 1, |b| {
+        let lo = b * QB;
+        let hi = (lo + QB).min(n);
+        let mut rows_idx = vec![0u32; (hi - lo) * k];
+        let mut rows_d2 = vec![0.0f32; (hi - lo) * k];
+        for i in lo..hi {
+            let q = targets.row(i);
+            let mut best = KBest::new(k);
+            let d = targets.d();
+            for j in 0..m {
+                if exclude_same_index && j == i {
+                    continue;
+                }
+                let s = sources.row(j);
+                // Early-exit distance: abort accumulation past the bound.
+                let bound = best.bound();
+                let mut acc = 0.0f32;
+                let mut t = 0;
+                while t + 4 <= d {
+                    let a0 = q[t] - s[t];
+                    let a1 = q[t + 1] - s[t + 1];
+                    let a2 = q[t + 2] - s[t + 2];
+                    let a3 = q[t + 3] - s[t + 3];
+                    acc += a0 * a0 + a1 * a1 + a2 * a2 + a3 * a3;
+                    if acc > bound {
+                        break;
+                    }
+                    t += 4;
+                }
+                if acc <= bound {
+                    while t < d {
+                        let a = q[t] - s[t];
+                        acc += a * a;
+                        t += 1;
+                    }
+                    best.push(acc, j as u32);
+                }
+            }
+            let sorted = best.into_sorted();
+            let off = (i - lo) * k;
+            for (slot, (d2v, jj)) in sorted.into_iter().enumerate() {
+                rows_idx[off + slot] = jj;
+                rows_d2[off + slot] = d2v;
+            }
+        }
+        kidx.lock().unwrap()[lo * k..hi * k].copy_from_slice(&rows_idx);
+        kd2.lock().unwrap()[lo * k..hi * k].copy_from_slice(&rows_d2);
+    });
+
+    KnnGraph {
+        n,
+        k,
+        idx: kidx.into_inner().unwrap(),
+        dist2: kd2.into_inner().unwrap(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+    use crate::util::rng::Rng;
+
+    fn brute_reference(ds: &Dataset, i: usize, k: usize) -> Vec<u32> {
+        let mut all: Vec<(f32, u32)> = (0..ds.n())
+            .filter(|&j| j != i)
+            .map(|j| (ds.sqdist(i, j), j as u32))
+            .collect();
+        all.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        all.truncate(k);
+        all.into_iter().map(|(_, j)| j).collect()
+    }
+
+    #[test]
+    fn matches_naive_reference() {
+        let ds = SynthSpec::blobs(120, 5, 3, 11).generate();
+        let g = knn_graph(&ds, 7, 2);
+        for i in [0usize, 17, 63, 119] {
+            let want = brute_reference(&ds, i, 7);
+            // Compare as sets with matching distances (ties may reorder).
+            let got: Vec<u32> = g.neighbors(i).to_vec();
+            let wd: Vec<f32> = want.iter().map(|&j| ds.sqdist(i, j as usize)).collect();
+            let gd: Vec<f32> = got.iter().map(|&j| ds.sqdist(i, j as usize)).collect();
+            for (a, b) in wd.iter().zip(&gd) {
+                assert!((a - b).abs() <= 1e-6 * (1.0 + a.abs()), "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn distances_sorted_and_no_self() {
+        let ds = SynthSpec::blobs(200, 4, 4, 5).generate();
+        let g = knn_graph(&ds, 10, 4);
+        for i in 0..ds.n() {
+            let dd = g.distances(i);
+            for w in dd.windows(2) {
+                assert!(w[0] <= w[1]);
+            }
+            assert!(!g.neighbors(i).contains(&(i as u32)));
+        }
+    }
+
+    #[test]
+    fn parallel_equals_sequential() {
+        let ds = SynthSpec::blobs(150, 6, 3, 9).generate();
+        let a = knn_graph(&ds, 5, 1);
+        let b = knn_graph(&ds, 5, 8);
+        assert_eq!(a.idx, b.idx);
+    }
+
+    #[test]
+    fn cross_knn_nearest_blob_center() {
+        // targets = blob centers ± eps must find sources in own blob.
+        let src = SynthSpec::blobs(300, 3, 3, 21).generate();
+        let mut rng = Rng::new(1);
+        let pick: Vec<usize> = (0..20).map(|_| rng.below(300)).collect();
+        let tgt = src.select(&pick);
+        let g = knn_graph_cross(&tgt, &src, 3, 2, false);
+        for (ti, &si) in pick.iter().enumerate() {
+            // nearest neighbor of a copied point is itself (distance 0)
+            assert_eq!(g.neighbors(ti)[0], si as u32);
+            assert_eq!(g.distances(ti)[0], 0.0);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "k out of range")]
+    fn rejects_k_too_large() {
+        let ds = SynthSpec::blobs(10, 2, 2, 1).generate();
+        knn_graph(&ds, 10, 1);
+    }
+}

@@ -1,0 +1,4 @@
+//! k-nearest-neighbor graph construction (the interaction matrix profile,
+//! Eq. 1: `a_ij != 0` iff `s_j ∈ kNN(t_i)`).
+
+pub mod exact;

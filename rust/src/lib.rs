@@ -1,0 +1,52 @@
+//! # nni — Rapid Near-Neighbor Interaction via Hierarchical Clustering
+//!
+//! A full reproduction of Pitsianis et al., *Rapid Near-Neighbor Interaction
+//! of High-dimensional Data via Hierarchical Clustering* (2017): matrix
+//! reordering for near-neighbor interaction matrices guided by the
+//! *block-sparse with dense blocks* profile principle, the patch-density
+//! measure β and its numerical estimate γ, a dual-tree hierarchical ordering
+//! algorithm, multi-level compressed sparse block storage, and multi-level
+//! (sequential and parallel) interaction computation — plus the paper's two
+//! case studies (t-SNE attractive force, mean shift) as first-class
+//! applications.
+//!
+//! ## Architecture (three layers)
+//!
+//! * **Layer 3 (this crate)** — the coordinator: reordering pipeline,
+//!   multi-level storage, block scheduling, applications, CLI.
+//! * **Layer 2 (python/compile, build-time only)** — JAX block programs
+//!   lowered AOT to HLO text in `artifacts/`.
+//! * **Layer 1 (python/compile/kernels)** — Pallas dense cluster-pair
+//!   kernels called by Layer 2.
+//!
+//! The [`runtime`] module loads the artifacts through PJRT (`xla` crate) so
+//! the request path never touches Python.
+
+pub mod util;
+pub mod par;
+pub mod data;
+pub mod embed;
+pub mod knn;
+pub mod sparse;
+pub mod tree;
+pub mod order;
+pub mod profile;
+pub mod csb;
+pub mod spmv;
+pub mod interact;
+pub mod runtime;
+pub mod coordinator;
+pub mod apps;
+pub mod bench;
+
+/// Convenient re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::csb::hier::HierCsb;
+    pub use crate::data::dataset::Dataset;
+    pub use crate::data::synth::SynthSpec;
+    pub use crate::knn::exact::knn_graph;
+    pub use crate::order::{OrderingKind, Pipeline};
+    pub use crate::profile::gamma::{gamma_exact, gamma_fast};
+    pub use crate::sparse::csr::Csr;
+    pub use crate::util::rng::Rng;
+}

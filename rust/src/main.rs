@@ -1,0 +1,300 @@
+//! `nni` — command-line leader for the hierarchical near-neighbor
+//! interaction system.
+//!
+//! Subcommands:
+//! * `info`      — print testbed + artifact registry summary
+//! * `synth`     — generate a synthetic dataset to a file
+//! * `reorder`   — run an ordering pipeline, report γ/β̂ and profile stats
+//! * `gamma`     — γ-score of a dataset's interaction matrix per ordering
+//! * `spmv`      — time multi-level SpMV vs CSR baselines
+//! * `tsne`      — run t-SNE end to end (hybrid PJRT path optional)
+//! * `meanshift` — run mean shift, report modes
+
+use nni::apps::{meanshift, tsne};
+use nni::bench::Workload;
+use nni::csb::hier::HierCsb;
+use nni::data::dataset::Dataset;
+use nni::data::synth::SynthSpec;
+use nni::knn::exact::knn_graph;
+use nni::order::{OrderingKind, Pipeline};
+use nni::profile::{beta, gamma};
+use nni::runtime::ArtifactRegistry;
+use nni::sparse::csr::Csr;
+use nni::spmv;
+use nni::util::cli::Args;
+use nni::util::timer;
+use std::path::Path;
+
+fn main() {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = if argv.is_empty() {
+        "help".to_string()
+    } else {
+        argv.remove(0)
+    };
+    match cmd.as_str() {
+        "info" => cmd_info(),
+        "synth" => cmd_synth(argv),
+        "reorder" => cmd_reorder(argv),
+        "gamma" => cmd_gamma(argv),
+        "spmv" => cmd_spmv(argv),
+        "tsne" => cmd_tsne(argv),
+        "meanshift" => cmd_meanshift(argv),
+        _ => {
+            eprintln!(
+                "usage: nni <info|synth|reorder|gamma|spmv|tsne|meanshift> [options]\n\
+                 run `nni <cmd> --help` for per-command options"
+            );
+            std::process::exit(if cmd == "help" { 0 } else { 2 });
+        }
+    }
+}
+
+fn workload(name: &str) -> Workload {
+    match name.to_ascii_lowercase().as_str() {
+        "sift" => Workload::Sift,
+        "gist" => Workload::Gist,
+        other => {
+            eprintln!("unknown workload '{other}' (sift|gist)");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn ordering(name: &str) -> OrderingKind {
+    match name.to_ascii_lowercase().as_str() {
+        "rand" | "scattered" => OrderingKind::Scattered,
+        "rcm" => OrderingKind::Rcm,
+        "1d" | "pca1d" => OrderingKind::Pca1d,
+        "2dlex" => OrderingKind::Lex { d: 2 },
+        "3dlex" => OrderingKind::Lex { d: 3 },
+        "2ddt" => OrderingKind::DualTree { d: 2 },
+        "3ddt" | "dualtree" => OrderingKind::DualTree { d: 3 },
+        "morton" => OrderingKind::Morton { d: 3 },
+        other => {
+            eprintln!("unknown ordering '{other}'");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_info() {
+    println!("nni — hierarchical near-neighbor interactions");
+    println!("testbed: {}", timer::machine_summary());
+    match ArtifactRegistry::open_default() {
+        Ok(reg) => {
+            println!("pjrt: {} platform", reg.runtime().platform());
+            let mut names: Vec<&String> = reg.variants.keys().collect();
+            names.sort();
+            println!("artifacts ({}):", names.len());
+            for n in names {
+                println!("  {n}");
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e:#})"),
+    }
+}
+
+fn cmd_synth(argv: Vec<String>) {
+    let a = Args::new("generate a synthetic dataset")
+        .opt("workload", "sift", "sift|gist")
+        .opt("n", "4096", "number of points")
+        .opt("seed", "42", "rng seed")
+        .opt("out", "dataset.nnid", "output path")
+        .parse_from(argv)
+        .unwrap_or_else(die);
+    let ds = workload(&a.get("workload")).make_dataset(a.get_usize("n"), a.get_u64("seed"));
+    ds.save(Path::new(&a.get("out"))).expect("write dataset");
+    println!("wrote {} points (d={}) to {}", ds.n(), ds.d(), a.get("out"));
+}
+
+fn load_or_synth(a: &Args) -> Dataset {
+    let input = a.get("input");
+    if !input.is_empty() {
+        return Dataset::load(Path::new(&input)).expect("load dataset");
+    }
+    workload(&a.get("workload")).make_dataset(a.get_usize("n"), a.get_u64("seed"))
+}
+
+fn cmd_reorder(argv: Vec<String>) {
+    let a = Args::new("ordering pipeline report")
+        .opt("input", "", "dataset file (else synthesize)")
+        .opt("workload", "sift", "sift|gist")
+        .opt("n", "4096", "points when synthesizing")
+        .opt("k", "0", "neighbors (0 = workload default)")
+        .opt("ordering", "3ddt", "rand|rcm|1d|2dlex|3dlex|3ddt|morton")
+        .opt("leaf-cap", "256", "tree leaf capacity")
+        .opt("seed", "42", "rng seed")
+        .opt("threads", "0", "0 = all cores")
+        .parse_from(argv)
+        .unwrap_or_else(die);
+    let ds = load_or_synth(&a);
+    let k = if a.get_usize("k") == 0 {
+        workload(&a.get("workload")).k()
+    } else {
+        a.get_usize("k")
+    };
+    let (g, t_knn) = timer::time_once(|| knn_graph(&ds, k.min(ds.n() - 1), a.get_usize("threads")));
+    let m = Csr::from_knn(&g, ds.n()).symmetrized();
+    let kind = ordering(&a.get("ordering"));
+    let pipe = Pipeline::new(kind.clone()).with_seed(a.get_u64("seed"));
+    let (r, t_order) = timer::time_once(|| pipe.run(&ds, &m));
+    let sigma = k as f64 / 2.0;
+    let gm = gamma::gamma_fast(&r.reordered, sigma);
+    let bt = beta::beta_estimate(&r.reordered);
+    println!("ordering={} n={} k={} nnz={}", kind.label(), ds.n(), k, m.nnz());
+    println!("knn: {t_knn:.2}s  reorder: {t_order:.2}s");
+    println!("gamma(sigma={sigma}) = {gm:.2}");
+    println!("beta-hat = {:.5} ({} patches, area {})", bt.beta, bt.count, bt.area);
+    println!("bandwidth = {}", r.reordered.bandwidth());
+    if let Some(tree) = &r.tree {
+        let csb = HierCsb::build(&r.reordered, tree, tree, a.get_usize("leaf-cap"));
+        println!("csb: {}", csb.describe());
+    }
+}
+
+fn cmd_gamma(argv: Vec<String>) {
+    let a = Args::new("gamma scores across orderings (Table 1 row)")
+        .opt("workload", "sift", "sift|gist")
+        .opt("n", "4096", "points")
+        .opt("seed", "42", "rng seed")
+        .opt("threads", "0", "0 = all cores")
+        .parse_from(argv)
+        .unwrap_or_else(die);
+    let wl = workload(&a.get("workload"));
+    let (ds, m) = wl.make(a.get_usize("n"), a.get_u64("seed"), a.get_usize("threads"));
+    let sigma = wl.k() as f64 / 2.0;
+    print!("{} k={}  ", wl.name(), wl.k());
+    for kind in OrderingKind::table1_set() {
+        let r = Pipeline::new(kind.clone()).with_seed(a.get_u64("seed")).run(&ds, &m);
+        let gm = gamma::gamma_fast(&r.reordered, sigma);
+        print!("{}={gm:.1}  ", kind.label());
+    }
+    println!();
+}
+
+fn cmd_spmv(argv: Vec<String>) {
+    let a = Args::new("multi-level SpMV timing")
+        .opt("workload", "sift", "sift|gist")
+        .opt("n", "8192", "points")
+        .opt("seed", "42", "rng seed")
+        .opt("threads", "0", "0 = all cores")
+        .opt("leaf-cap", "2048", "block capacity (SpMV sweet spot: ~64x nnz/row)")
+        .parse_from(argv)
+        .unwrap_or_else(die);
+    let wl = workload(&a.get("workload"));
+    let threads = if a.get_usize("threads") == 0 {
+        nni::par::pool::default_threads()
+    } else {
+        a.get_usize("threads")
+    };
+    let (ds, m) = wl.make(a.get_usize("n"), a.get_u64("seed"), threads);
+    let r = Pipeline::dual_tree(3).run(&ds, &m);
+    let tree = r.tree.as_ref().unwrap();
+    let csb = HierCsb::build(&r.reordered, tree, tree, a.get_usize("leaf-cap"));
+    println!("{}", csb.describe());
+    let x = vec![1.0f32; ds.n()];
+    let mut y = vec![0.0f32; ds.n()];
+    let m_seq = timer::bench_default(|| spmv::csr::spmv_seq(&r.reordered, &x, &mut y));
+    let m_ml = timer::bench_default(|| spmv::multilevel::spmv_ml_seq(&csb, &x, &mut y));
+    let m_mlp = timer::bench_default(|| spmv::multilevel::spmv_ml_par(&csb, &x, &mut y, threads));
+    println!("csr seq      : {:.3} ms", m_seq.robust_min_s * 1e3);
+    println!("ml  seq      : {:.3} ms", m_ml.robust_min_s * 1e3);
+    println!("ml  par({threads:>2}) : {:.3} ms", m_mlp.robust_min_s * 1e3);
+}
+
+fn cmd_tsne(argv: Vec<String>) {
+    let a = Args::new("t-SNE end to end")
+        .opt("input", "", "dataset file (else synthesize)")
+        .opt("workload", "sift", "sift|gist")
+        .opt("n", "2048", "points when synthesizing")
+        .opt("seed", "42", "rng seed")
+        .opt("iters", "400", "iterations")
+        .opt("perplexity", "30", "perplexity")
+        .opt("k", "90", "neighbors in P")
+        .opt("threads", "0", "0 = all cores")
+        .opt("out", "", "embedding output path (.nnid)")
+        .flag("pjrt", "route dense blocks to the PJRT artifacts")
+        .parse_from(argv)
+        .unwrap_or_else(die);
+    let ds = load_or_synth(&a);
+    let cfg = tsne::TsneConfig {
+        iters: a.get_usize("iters"),
+        perplexity: a.get_f64("perplexity"),
+        k: a.get_usize("k").min(ds.n() - 1),
+        threads: a.get_usize("threads"),
+        seed: a.get_u64("seed"),
+        use_pjrt: a.get_flag("pjrt"),
+        ..Default::default()
+    };
+    let registry = if cfg.use_pjrt {
+        Some(ArtifactRegistry::open_default().expect("artifacts"))
+    } else {
+        None
+    };
+    let res = tsne::run(&ds, &cfg, registry);
+    for e in &res.log {
+        println!(
+            "iter {:>5}  KL {:.4}  |grad| {:.3e}  t {:.1}s",
+            e.iter, e.kl, e.grad_norm, e.seconds
+        );
+    }
+    println!("{}", res.metrics_summary);
+    let out = a.get("out");
+    if !out.is_empty() {
+        res.embedding.save(Path::new(&out)).expect("write embedding");
+        println!("embedding -> {out}");
+    }
+}
+
+fn cmd_meanshift(argv: Vec<String>) {
+    let a = Args::new("mean shift mode finding")
+        .opt("input", "", "dataset file (else synthesize blobs)")
+        .opt("n", "2000", "points when synthesizing")
+        .opt("blobs", "5", "planted modes when synthesizing")
+        .opt("d", "3", "dimension when synthesizing")
+        .opt("bandwidth", "0.25", "kernel bandwidth")
+        .opt("k", "32", "profile neighbors")
+        .opt("iters", "60", "max iterations")
+        .opt("refresh", "5", "profile refresh cadence")
+        .opt("seed", "42", "rng seed")
+        .opt("threads", "0", "0 = all cores")
+        .parse_from(argv)
+        .unwrap_or_else(die);
+    let input = a.get("input");
+    let ds = if input.is_empty() {
+        SynthSpec::blobs(
+            a.get_usize("n"),
+            a.get_usize("d"),
+            a.get_usize("blobs"),
+            a.get_u64("seed"),
+        )
+        .generate()
+    } else {
+        Dataset::load(Path::new(&input)).expect("load dataset")
+    };
+    let cfg = meanshift::MeanShiftConfig {
+        bandwidth: a.get_f64("bandwidth"),
+        k: a.get_usize("k").min(ds.n() - 1),
+        max_iters: a.get_usize("iters"),
+        refresh_every: a.get_usize("refresh"),
+        threads: a.get_usize("threads"),
+        ..Default::default()
+    };
+    let res = meanshift::run(&ds, &cfg);
+    println!(
+        "{} modes after {} iterations over {} points",
+        res.modes.len(),
+        res.iterations,
+        ds.n()
+    );
+    for (m, c) in res.modes.iter().enumerate().take(12) {
+        let count = res.assignment.iter().filter(|&&x| x == m).count();
+        println!("mode {m}: {count} points @ {:?}", &c[..c.len().min(4)]);
+    }
+}
+
+fn die<T>(e: String) -> T {
+    eprintln!("{e}");
+    std::process::exit(2);
+}

@@ -1,0 +1,43 @@
+//! The paper's ordering (§2.4): hierarchical partitioning of the embedded
+//! data by an adaptive 2^d tree; the pre-order leaf walk is the permutation
+//! ("3D dual tree" in the figures — "dual" because the same construction
+//! orders the source tree (columns) and the target tree (rows); for the
+//! self-interaction case studies the two trees coincide).
+
+use crate::data::dataset::Dataset;
+use crate::tree::boxtree::BoxTree;
+
+/// Build the hierarchy and return (permutation, tree).
+///
+/// `leaf_cap` controls the finest cluster granularity; the tree's interior
+/// levels provide the multi-level blocking consumed by `csb::hier`.
+pub fn order(embedded: &Dataset, leaf_cap: usize) -> (Vec<usize>, BoxTree) {
+    let tree = BoxTree::build(embedded, leaf_cap, 32);
+    (tree.perm.clone(), tree)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::order::is_permutation;
+
+    #[test]
+    fn perm_matches_tree() {
+        let ds = crate::data::synth::SynthSpec::blobs(200, 3, 4, 9).generate();
+        let (p, t) = order(&ds, 16);
+        assert!(is_permutation(&p));
+        assert_eq!(p, t.perm);
+    }
+
+    #[test]
+    fn clusters_contiguous_in_order() {
+        // well-separated blobs: each label must occupy a contiguous run
+        let ds = crate::data::synth::SynthSpec::blobs(300, 2, 3, 4).generate();
+        let labels = ds.labels.clone().unwrap();
+        let (p, _) = order(&ds, 8);
+        let seq: Vec<u32> = p.iter().map(|&i| labels[i]).collect();
+        // count label transitions; for contiguous clusters it's k-1 = 2
+        let transitions = seq.windows(2).filter(|w| w[0] != w[1]).count();
+        assert!(transitions <= 4, "labels fragmented: {transitions} transitions");
+    }
+}

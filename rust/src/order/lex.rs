@@ -1,0 +1,84 @@
+//! Lexicographic grid ordering of the first d principal components —
+//! the paper's "2D lex" / "3D lex" comparison points (§4.3).
+//!
+//! Coordinates are quantized to `bins` cells per axis; points sort by the
+//! tuple of cell indices (axis 0 major), breaking ties inside a cell by the
+//! continuous first coordinate.  Plain float lexicographic sorting would
+//! degenerate to a 1-D sort (ties on real-valued leading coordinates are
+//! measure-zero); the grid is what makes the trailing axes matter — the
+//! same convention the paper's profile figures show.
+
+use crate::data::dataset::Dataset;
+use crate::tree::morton::quantize;
+
+/// Lexicographic ordering permutation over the `d = embedded.d()` axes.
+pub fn order(embedded: &Dataset, bins: u32) -> Vec<usize> {
+    let d = embedded.d();
+    let n = embedded.n();
+    let mut lo = vec![f32::INFINITY; d];
+    let mut hi = vec![f32::NEG_INFINITY; d];
+    for i in 0..n {
+        for a in 0..d {
+            lo[a] = lo[a].min(embedded.row(i)[a]);
+            hi[a] = hi[a].max(embedded.row(i)[a]);
+        }
+    }
+    let bits = 32 - (bins.max(2) - 1).leading_zeros(); // ceil(log2 bins)
+    let mut keyed: Vec<(Vec<u32>, f32, usize)> = (0..n)
+        .map(|i| {
+            let r = embedded.row(i);
+            let cells: Vec<u32> = (0..d).map(|a| quantize(r[a], lo[a], hi[a], bits)).collect();
+            (cells, r[0], i)
+        })
+        .collect();
+    keyed.sort_by(|x, y| {
+        x.0.cmp(&y.0)
+            .then(x.1.partial_cmp(&y.1).unwrap_or(std::cmp::Ordering::Equal))
+            .then(x.2.cmp(&y.2))
+    });
+    keyed.into_iter().map(|(_, _, i)| i).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::order::is_permutation;
+
+    #[test]
+    fn is_perm() {
+        let ds = crate::data::synth::SynthSpec::blobs(150, 3, 3, 1).generate();
+        let p = order(&ds, 16);
+        assert!(is_permutation(&p));
+    }
+
+    #[test]
+    fn groups_by_leading_axis_cell() {
+        // Points in two x-bands: all of band 0 precede band 1.
+        let mut xs = Vec::new();
+        for i in 0..10 {
+            xs.extend_from_slice(&[0.0, i as f32]);
+        }
+        for i in 0..10 {
+            xs.extend_from_slice(&[100.0, i as f32]);
+        }
+        let ds = Dataset::new(20, 2, xs);
+        let p = order(&ds, 8);
+        assert!(p[..10].iter().all(|&i| i < 10));
+        assert!(p[10..].iter().all(|&i| i >= 10));
+    }
+
+    #[test]
+    fn second_axis_matters_within_cell() {
+        // Same x for everyone: order must follow y (axis 1) by cells.
+        let mut xs = Vec::new();
+        for i in [5.0f32, 1.0, 9.0, 3.0] {
+            xs.extend_from_slice(&[0.0, i]);
+        }
+        let ds = Dataset::new(4, 2, xs);
+        let p = order(&ds, 8);
+        let ys: Vec<f32> = p.iter().map(|&i| ds.row(i)[1]).collect();
+        let mut sorted = ys.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(ys, sorted);
+    }
+}

@@ -1,0 +1,305 @@
+//! Matrix orderings (§4.3): scattered, reverse Cuthill–McKee, 1-D PCA sort,
+//! 2-D/3-D lexicographic, Morton, and the paper's hierarchical dual-tree
+//! ordering — all behind one [`Pipeline`] API.
+//!
+//! Conventions: a permutation `perm` lists original indices in their new
+//! order (`new position k holds original perm[k]`); `pos = invert(perm)`
+//! maps original index to new position.  Row and column orderings are the
+//! same permutation here (the case-study matrices are self-interactions;
+//! the API keeps (πt, πs) separate where it matters).
+
+pub mod dualtree;
+pub mod lex;
+pub mod pca1d;
+pub mod rcm;
+
+use crate::data::dataset::Dataset;
+use crate::embed::pca;
+use crate::sparse::csr::Csr;
+use crate::tree::boxtree::BoxTree;
+use crate::util::rng::Rng;
+
+/// Invert a permutation: `invert(perm)[perm[k]] == k`.
+pub fn invert(perm: &[usize]) -> Vec<usize> {
+    let mut inv = vec![0usize; perm.len()];
+    for (k, &p) in perm.iter().enumerate() {
+        inv[p] = k;
+    }
+    inv
+}
+
+/// Compose: apply `first`, then `second` (both as "new holds original").
+pub fn compose(first: &[usize], second: &[usize]) -> Vec<usize> {
+    second.iter().map(|&k| first[k]).collect()
+}
+
+/// Check that `perm` is a permutation of `0..n`.
+pub fn is_permutation(perm: &[usize]) -> bool {
+    let n = perm.len();
+    let mut seen = vec![false; n];
+    perm.iter().all(|&p| {
+        if p < n && !seen[p] {
+            seen[p] = true;
+            true
+        } else {
+            false
+        }
+    })
+}
+
+/// The ordering schemes of Fig. 2 / Fig. 3 (plus Morton for ablations).
+#[derive(Clone, Debug, PartialEq)]
+pub enum OrderingKind {
+    /// Random permutation — the paper's "scattered" base case.
+    Scattered,
+    /// Reverse Cuthill–McKee on the symmetrized profile.
+    Rcm,
+    /// Sort by the most dominant PCA coordinate ("1D").
+    Pca1d,
+    /// Lexicographic grid sort of the first `d` principal components
+    /// ("2D lex" / "3D lex").
+    Lex { d: usize },
+    /// The paper's method: hierarchical dual-tree ordering in a `d`-D
+    /// embedding ("3D DT").
+    DualTree { d: usize },
+    /// Morton curve in a `d`-D embedding (ablation).
+    Morton { d: usize },
+}
+
+impl OrderingKind {
+    /// Paper-style short label (matches Table 1 / Fig. 3 legends).
+    pub fn label(&self) -> String {
+        match self {
+            OrderingKind::Scattered => "rand".into(),
+            OrderingKind::Rcm => "rCM".into(),
+            OrderingKind::Pca1d => "1D".into(),
+            OrderingKind::Lex { d } => format!("{d}D lex"),
+            OrderingKind::DualTree { d } => format!("{d}D DT"),
+            OrderingKind::Morton { d } => format!("{d}D morton"),
+        }
+    }
+
+    /// The six orderings of Table 1, in the paper's column order.
+    pub fn table1_set() -> Vec<OrderingKind> {
+        vec![
+            OrderingKind::Scattered,
+            OrderingKind::Rcm,
+            OrderingKind::Pca1d,
+            OrderingKind::Lex { d: 2 },
+            OrderingKind::Lex { d: 3 },
+            OrderingKind::DualTree { d: 3 },
+        ]
+    }
+}
+
+/// Everything the rest of the system needs about a computed ordering.
+#[derive(Clone, Debug)]
+pub struct OrderResult {
+    pub kind: OrderingKind,
+    /// New position k holds original index perm[k].
+    pub perm: Vec<usize>,
+    /// Original index i sits at new position pos[i].
+    pub pos: Vec<usize>,
+    /// The reordered interaction matrix A(π, π).
+    pub reordered: Csr,
+    /// Hierarchy (dual-tree orderings only) — in *reordered* coordinates.
+    pub tree: Option<BoxTree>,
+    /// Low-dimensional embedding in the *original* index order (kept for
+    /// engines that need coordinates, e.g. mean shift re-clustering).
+    pub embedded: Option<Dataset>,
+}
+
+/// Ordering pipeline: embedding (when needed) → ordering → reordered matrix.
+#[derive(Clone, Debug)]
+pub struct Pipeline {
+    pub kind: OrderingKind,
+    /// Leaf capacity for tree builds.
+    pub leaf_cap: usize,
+    /// Subspace-iteration count for PCA.
+    pub pca_iters: usize,
+    /// Grid bins per axis for lexicographic orderings.
+    pub lex_bins: u32,
+    /// Seed (scattered ordering and PCA init).
+    pub seed: u64,
+}
+
+impl Pipeline {
+    pub fn new(kind: OrderingKind) -> Self {
+        Pipeline {
+            kind,
+            leaf_cap: 16,
+            pca_iters: 10,
+            lex_bins: 32,
+            seed: 0xC0FFEE,
+        }
+    }
+
+    /// Shorthand for the paper's method with a `d`-dimensional embedding.
+    pub fn dual_tree(d: usize) -> Self {
+        Pipeline::new(OrderingKind::DualTree { d })
+    }
+
+    pub fn with_leaf_cap(mut self, cap: usize) -> Self {
+        self.leaf_cap = cap;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Embedding dimension this ordering needs (0 = none).
+    fn embed_dim(&self) -> usize {
+        match self.kind {
+            OrderingKind::Scattered | OrderingKind::Rcm => 0,
+            OrderingKind::Pca1d => 1,
+            OrderingKind::Lex { d }
+            | OrderingKind::DualTree { d }
+            | OrderingKind::Morton { d } => d,
+        }
+    }
+
+    /// Run the pipeline on dataset `ds` with interaction profile `a`.
+    ///
+    /// When the data is already low-dimensional (ds.d() <= embed dim), the
+    /// embedding step is skipped, as in the paper (§2.4).
+    pub fn run(&self, ds: &Dataset, a: &Csr) -> OrderResult {
+        assert_eq!(ds.n(), a.rows);
+        assert_eq!(a.rows, a.cols, "pipeline expects a self-interaction matrix");
+        let ed = self.embed_dim();
+        let embedded: Option<Dataset> = if ed > 0 {
+            if ds.d() <= ed {
+                Some(ds.clone())
+            } else {
+                let p = pca::pca(ds, ed, self.pca_iters, self.seed);
+                Some(p.project(ds, ed))
+            }
+        } else {
+            None
+        };
+
+        let (perm, tree) = match &self.kind {
+            OrderingKind::Scattered => {
+                let mut rng = Rng::new(self.seed);
+                (rng.permutation(ds.n()), None)
+            }
+            OrderingKind::Rcm => (rcm::reverse_cuthill_mckee(a), None),
+            OrderingKind::Pca1d => (pca1d::order(embedded.as_ref().unwrap()), None),
+            OrderingKind::Lex { .. } => (
+                lex::order(embedded.as_ref().unwrap(), self.lex_bins),
+                None,
+            ),
+            OrderingKind::Morton { .. } => (
+                crate::tree::morton::morton_order(embedded.as_ref().unwrap(), 16),
+                None,
+            ),
+            OrderingKind::DualTree { .. } => {
+                let (perm, tree) =
+                    dualtree::order(embedded.as_ref().unwrap(), self.leaf_cap);
+                (perm, Some(tree))
+            }
+        };
+        debug_assert!(is_permutation(&perm));
+        let pos = invert(&perm);
+        let reordered = a.permuted(&pos, &pos);
+        OrderResult {
+            kind: self.kind.clone(),
+            perm,
+            pos,
+            reordered,
+            tree,
+            embedded,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+    use crate::knn::exact::knn_graph;
+
+    fn setup(n: usize) -> (Dataset, Csr) {
+        let ds = SynthSpec::blobs(n, 3, 4, 5).generate();
+        let g = knn_graph(&ds, 6, 2);
+        let a = Csr::from_knn(&g, n).symmetrized();
+        (ds, a)
+    }
+
+    #[test]
+    fn invert_compose_identity() {
+        let mut rng = Rng::new(1);
+        let p = rng.permutation(100);
+        let inv = invert(&p);
+        let id = compose(&p, &inv);
+        assert!(id.iter().enumerate().all(|(k, &v)| k == v));
+    }
+
+    #[test]
+    fn all_kinds_produce_permutations() {
+        let (ds, a) = setup(200);
+        for kind in [
+            OrderingKind::Scattered,
+            OrderingKind::Rcm,
+            OrderingKind::Pca1d,
+            OrderingKind::Lex { d: 2 },
+            OrderingKind::Lex { d: 3 },
+            OrderingKind::DualTree { d: 3 },
+            OrderingKind::Morton { d: 2 },
+        ] {
+            let r = Pipeline::new(kind.clone()).with_leaf_cap(16).run(&ds, &a);
+            assert!(is_permutation(&r.perm), "{kind:?}");
+            assert_eq!(r.reordered.nnz(), a.nnz(), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn reorder_preserves_matvec() {
+        let (ds, a) = setup(150);
+        let r = Pipeline::dual_tree(3).with_leaf_cap(16).run(&ds, &a);
+        let mut rng = Rng::new(3);
+        let x: Vec<f32> = (0..150).map(|_| rng.f32()).collect();
+        // x in reordered coordinates: x'[k] = x[perm[k]]
+        let xp: Vec<f32> = r.perm.iter().map(|&p| x[p]).collect();
+        let y = a.matvec_ref(&x);
+        let yp = r.reordered.matvec_ref(&xp);
+        for k in 0..150 {
+            assert!((yp[k] - y[r.perm[k]]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn dualtree_carries_tree() {
+        let (ds, a) = setup(300);
+        let r = Pipeline::dual_tree(3).with_leaf_cap(32).run(&ds, &a);
+        let t = r.tree.unwrap();
+        assert_eq!(t.n(), 300);
+        // The tree's own permutation is relative to the embedded data;
+        // combined with the pipeline it must describe the same reorder.
+        assert_eq!(t.perm, r.perm);
+    }
+
+    #[test]
+    fn low_dim_data_skips_embedding() {
+        // 2-D data with a 3-D dual tree: embedding step must pass through.
+        let ds = SynthSpec::blobs(100, 2, 3, 8).generate();
+        let g = knn_graph(&ds, 4, 1);
+        let a = Csr::from_knn(&g, 100).symmetrized();
+        let r = Pipeline::dual_tree(3).with_leaf_cap(16).run(&ds, &a);
+        assert_eq!(r.embedded.as_ref().unwrap().d(), 2);
+    }
+
+    #[test]
+    fn rcm_reduces_bandwidth_vs_scattered() {
+        let (ds, a) = setup(400);
+        let sc = Pipeline::new(OrderingKind::Scattered).run(&ds, &a);
+        let rc = Pipeline::new(OrderingKind::Rcm).run(&ds, &a);
+        assert!(
+            rc.reordered.bandwidth() < sc.reordered.bandwidth(),
+            "rCM {} !< scattered {}",
+            rc.reordered.bandwidth(),
+            sc.reordered.bandwidth()
+        );
+    }
+}

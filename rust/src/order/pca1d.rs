@@ -1,0 +1,37 @@
+//! 1-D ordering: sort by the most dominant principal coordinate — the
+//! baseline the paper relates to Fiedler/spectral envelope methods (§5).
+
+use crate::data::dataset::Dataset;
+
+/// Sort points ascending by their first embedding coordinate.
+/// `embedded` must have d >= 1; ties break by index (stable).
+pub fn order(embedded: &Dataset) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..embedded.n()).collect();
+    idx.sort_by(|&a, &b| {
+        embedded.row(a)[0]
+            .partial_cmp(&embedded.row(b)[0])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::order::is_permutation;
+
+    #[test]
+    fn sorts_by_first_coordinate() {
+        let ds = Dataset::new(4, 2, vec![3.0, 0.0, 1.0, 9.0, 2.0, -1.0, 0.0, 5.0]);
+        let p = order(&ds);
+        assert_eq!(p, vec![3, 1, 2, 0]);
+        assert!(is_permutation(&p));
+    }
+
+    #[test]
+    fn stable_on_ties() {
+        let ds = Dataset::new(3, 1, vec![1.0, 1.0, 0.0]);
+        assert_eq!(order(&ds), vec![2, 0, 1]);
+    }
+}

@@ -1,0 +1,182 @@
+//! Reverse Cuthill–McKee ordering [George 1971] — the classic
+//! bandwidth-envelope reducer the paper compares against ("rCM").
+//!
+//! BFS from a pseudo-peripheral vertex with neighbors visited in ascending
+//! degree; the final ordering is the reverse of the visit order.
+//! Disconnected components are processed in sequence (each from its own
+//! pseudo-peripheral start).
+
+use crate::sparse::csr::Csr;
+
+/// Adjacency = symmetrized profile of `a` (pattern only).
+fn adjacency(a: &Csr) -> Vec<Vec<u32>> {
+    let n = a.rows;
+    let mut adj: Vec<Vec<u32>> = vec![Vec::new(); n];
+    for i in 0..n {
+        let (cols, _) = a.row(i);
+        for &j in cols {
+            if j as usize != i {
+                adj[i].push(j);
+                adj[j as usize].push(i as u32);
+            }
+        }
+    }
+    for l in adj.iter_mut() {
+        l.sort_unstable();
+        l.dedup();
+    }
+    adj
+}
+
+/// BFS returning (levels, last visited vertex, eccentricity).
+fn bfs(adj: &[Vec<u32>], start: u32, mark: &mut [u32], stamp: u32) -> (Vec<u32>, u32, u32) {
+    let mut order = vec![start];
+    mark[start as usize] = stamp;
+    let mut depth = vec![0u32];
+    let mut head = 0usize;
+    while head < order.len() {
+        let u = order[head];
+        let du = depth[head];
+        head += 1;
+        for &v in &adj[u as usize] {
+            if mark[v as usize] != stamp {
+                mark[v as usize] = stamp;
+                order.push(v);
+                depth.push(du + 1);
+            }
+        }
+    }
+    let ecc = *depth.last().unwrap();
+    let last = *order.last().unwrap();
+    (order, last, ecc)
+}
+
+/// Pseudo-peripheral vertex of the component containing `seed`:
+/// iterate "BFS to the farthest vertex" until the eccentricity stops
+/// growing (George–Liu heuristic).
+fn pseudo_peripheral(adj: &[Vec<u32>], seed: u32, mark: &mut [u32], stamp: &mut u32) -> u32 {
+    let mut u = seed;
+    let mut best_ecc = 0;
+    for _ in 0..8 {
+        *stamp += 1;
+        let (_, far, ecc) = bfs(adj, u, mark, *stamp);
+        if ecc <= best_ecc {
+            break;
+        }
+        best_ecc = ecc;
+        u = far;
+    }
+    u
+}
+
+/// Compute the rCM permutation (new position k holds original index
+/// `perm[k]`).
+pub fn reverse_cuthill_mckee(a: &Csr) -> Vec<usize> {
+    let n = a.rows;
+    let adj = adjacency(a);
+    let deg: Vec<usize> = adj.iter().map(|l| l.len()).collect();
+    let mut visited = vec![false; n];
+    let mut mark = vec![0u32; n];
+    let mut stamp = 0u32;
+    let mut order: Vec<usize> = Vec::with_capacity(n);
+
+    // Components in ascending-minimum-degree order of their seed.
+    let mut seeds: Vec<usize> = (0..n).collect();
+    seeds.sort_unstable_by_key(|&i| deg[i]);
+
+    for seed in seeds {
+        if visited[seed] {
+            continue;
+        }
+        let start = pseudo_peripheral(&adj, seed as u32, &mut mark, &mut stamp);
+        // Cuthill–McKee BFS with degree-sorted neighbor expansion.
+        let mut queue = std::collections::VecDeque::new();
+        visited[start as usize] = true;
+        queue.push_back(start);
+        while let Some(u) = queue.pop_front() {
+            order.push(u as usize);
+            let mut nbrs: Vec<u32> = adj[u as usize]
+                .iter()
+                .copied()
+                .filter(|&v| !visited[v as usize])
+                .collect();
+            nbrs.sort_unstable_by_key(|&v| deg[v as usize]);
+            for v in nbrs {
+                if !visited[v as usize] {
+                    visited[v as usize] = true;
+                    queue.push_back(v);
+                }
+            }
+        }
+    }
+    order.reverse();
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::order::is_permutation;
+    use crate::sparse::gen;
+
+    #[test]
+    fn path_graph_gets_bandwidth_one() {
+        // 0-1-2-...-9 path: rCM must recover a banded ordering.
+        let n = 10;
+        let mut r = Vec::new();
+        let mut c = Vec::new();
+        for i in 0..n - 1 {
+            r.push(i as u32);
+            c.push(i as u32 + 1);
+            r.push(i as u32 + 1);
+            c.push(i as u32);
+        }
+        let v = vec![1.0f32; r.len()];
+        let a = Csr::from_triplets(n, n, &r, &c, &v);
+        let perm = reverse_cuthill_mckee(&a);
+        assert!(is_permutation(&perm));
+        let pos = crate::order::invert(&perm);
+        let b = a.permuted(&pos, &pos);
+        assert_eq!(b.bandwidth(), 1);
+    }
+
+    #[test]
+    fn shuffled_band_recovers_small_bandwidth() {
+        use crate::util::rng::Rng;
+        let a = gen::banded(200, 6, 1);
+        let mut rng = Rng::new(2);
+        let p = rng.permutation(200);
+        let shuffled = a.permuted(&p, &p);
+        assert!(shuffled.bandwidth() > 50);
+        let perm = reverse_cuthill_mckee(&shuffled);
+        let pos = crate::order::invert(&perm);
+        let back = shuffled.permuted(&pos, &pos);
+        assert!(
+            back.bandwidth() <= 16,
+            "rCM bandwidth {} too large",
+            back.bandwidth()
+        );
+    }
+
+    #[test]
+    fn handles_disconnected_components() {
+        // two disjoint edges + isolated vertex
+        let a = Csr::from_triplets(
+            5,
+            5,
+            &[0, 1, 3, 4],
+            &[1, 0, 4, 3],
+            &[1.0, 1.0, 1.0, 1.0],
+        );
+        let perm = reverse_cuthill_mckee(&a);
+        assert!(is_permutation(&perm));
+        assert_eq!(perm.len(), 5);
+    }
+
+    #[test]
+    fn empty_matrix_identity_like() {
+        let a = Csr::from_triplets(4, 4, &[], &[], &[]);
+        let perm = reverse_cuthill_mckee(&a);
+        assert!(is_permutation(&perm));
+    }
+}

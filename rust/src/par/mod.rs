@@ -1,0 +1,10 @@
+//! Minimal data-parallel runtime (rayon substitute, DESIGN.md §5).
+//!
+//! The paper's parallel experiments need exactly one primitive: a
+//! parallel-for over an index range with *static ownership* of output
+//! segments (each target cluster is written by exactly one worker), plus a
+//! dynamically load-balanced variant for irregular block lists.
+
+pub mod pool;
+
+pub use pool::{parallel_chunks, parallel_for, ThreadPool};

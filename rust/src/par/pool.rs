@@ -1,0 +1,210 @@
+//! Scoped parallel-for built on `std::thread::scope` with an atomic
+//! chunk-stealing index — dynamic load balancing without a work-stealing
+//! deque, which is all the paper's block-irregular workloads need.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use by default: the machine's logical cores,
+/// clamped by the `NNI_THREADS` environment variable when set.
+pub fn default_threads() -> usize {
+    if let Ok(s) = std::env::var("NNI_THREADS") {
+        if let Ok(n) = s.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// A logical thread pool: just a thread count; workers are scoped per call
+/// (creation cost is ~10 µs/thread, negligible against the multi-ms block
+/// workloads, and scoping keeps lifetimes simple and safe).
+#[derive(Clone, Copy, Debug)]
+pub struct ThreadPool {
+    pub threads: usize,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> Self {
+        ThreadPool {
+            threads: threads.max(1),
+        }
+    }
+
+    pub fn with_default() -> Self {
+        ThreadPool::new(default_threads())
+    }
+
+    /// Dynamically balanced parallel for: `f(i)` for every `i` in
+    /// `0..n`, chunks of `chunk` indices claimed atomically.
+    ///
+    /// `f` must be safe to call concurrently for distinct `i` (callers
+    /// ensure disjoint writes; see `spmv::multilevel` for the ownership
+    /// discipline).
+    pub fn for_each_chunked<F>(&self, n: usize, chunk: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if self.threads == 1 || n <= chunk {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        let next = AtomicUsize::new(0);
+        let chunk = chunk.max(1);
+        std::thread::scope(|s| {
+            for _ in 0..self.threads {
+                s.spawn(|| loop {
+                    let start = next.fetch_add(chunk, Ordering::Relaxed);
+                    if start >= n {
+                        break;
+                    }
+                    let end = (start + chunk).min(n);
+                    for i in start..end {
+                        f(i);
+                    }
+                });
+            }
+        });
+    }
+
+    /// Parallel map over a slice into a new Vec (order preserved).
+    pub fn map<T: Sync, U: Send + Default + Clone, F>(&self, xs: &[T], f: F) -> Vec<U>
+    where
+        F: Fn(&T) -> U + Sync,
+    {
+        let mut out = vec![U::default(); xs.len()];
+        {
+            let slots: Vec<std::sync::Mutex<&mut U>> =
+                out.iter_mut().map(std::sync::Mutex::new).collect();
+            self.for_each_chunked(xs.len(), 8, |i| {
+                **slots[i].lock().unwrap() = f(&xs[i]);
+            });
+        }
+        out
+    }
+}
+
+/// Free-function parallel for over `0..n` with static chunking:
+/// the range is split into `threads` contiguous spans, one per worker.
+/// Use when per-index cost is uniform (e.g. row-parallel CSR SpMV).
+pub fn parallel_for<F>(threads: usize, n: usize, f: F)
+where
+    F: Fn(std::ops::Range<usize>) + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads == 1 {
+        f(0..n);
+        return;
+    }
+    let per = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let lo = t * per;
+            let hi = ((t + 1) * per).min(n);
+            if lo >= hi {
+                break;
+            }
+            let fr = &f;
+            s.spawn(move || fr(lo..hi));
+        }
+    });
+}
+
+/// Parallel iteration over mutable, disjoint chunks of a slice:
+/// `f(chunk_index, chunk)` with `chunk = &mut data[i*size..(i+1)*size]`.
+pub fn parallel_chunks<T: Send, F>(threads: usize, data: &mut [T], size: usize, f: F)
+where
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let size = size.max(1);
+    if threads <= 1 {
+        for (i, c) in data.chunks_mut(size).enumerate() {
+            f(i, c);
+        }
+        return;
+    }
+    let chunks: Vec<(usize, &mut [T])> = data.chunks_mut(size).enumerate().collect();
+    let next = AtomicUsize::new(0);
+    let slots: Vec<std::sync::Mutex<Option<(usize, &mut [T])>>> =
+        chunks.into_iter().map(|c| std::sync::Mutex::new(Some(c))).collect();
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= slots.len() {
+                    break;
+                }
+                let (ci, chunk) = slots[i].lock().unwrap().take().unwrap();
+                f(ci, chunk);
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    #[test]
+    fn for_each_chunked_visits_all_once() {
+        let n = 10_007;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        ThreadPool::new(8).for_each_chunked(n, 64, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn single_thread_fallback() {
+        let n = 100;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        ThreadPool::new(1).for_each_chunked(n, 7, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_for_covers_range() {
+        let n = 5000;
+        let acc = AtomicU64::new(0);
+        parallel_for(4, n, |r| {
+            let mut local = 0u64;
+            for i in r {
+                local += i as u64;
+            }
+            acc.fetch_add(local, Ordering::Relaxed);
+        });
+        assert_eq!(acc.load(Ordering::Relaxed), (n as u64 - 1) * n as u64 / 2);
+    }
+
+    #[test]
+    fn parallel_chunks_disjoint_writes() {
+        let mut v = vec![0u32; 1000];
+        parallel_chunks(4, &mut v, 33, |ci, c| {
+            for x in c.iter_mut() {
+                *x = ci as u32 + 1;
+            }
+        });
+        assert!(v.iter().all(|&x| x > 0));
+        assert_eq!(v[0], 1);
+        assert_eq!(v[999], 1000usize.div_ceil(33) as u32);
+    }
+
+    #[test]
+    fn pool_map_preserves_order() {
+        let xs: Vec<usize> = (0..500).collect();
+        let ys = ThreadPool::new(4).map(&xs, |&x| x * 2);
+        assert!(ys.iter().enumerate().all(|(i, &y)| y == i * 2));
+    }
+
+    #[test]
+    fn default_threads_positive() {
+        assert!(default_threads() >= 1);
+    }
+}

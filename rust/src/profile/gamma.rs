@@ -1,0 +1,189 @@
+//! The γ-score (Eq. 4): a numerical estimate of the patch-density measure.
+//!
+//! ```text
+//! γ(A; σ) = 1/(σ·nnz) · Σ_{p,q ∈ Inz(A)} exp(−‖p−q‖²/σ²)
+//! ```
+//!
+//! * [`gamma_exact`] — the O(nnz²) double sum (reference; Fig. 1 scale).
+//! * [`gamma_fast`]  — grid-aggregated estimator: nonzero positions are
+//!   binned into square cells of side σ/2; each cell contributes its count
+//!   and centroid, and cell pairs farther than 3σ are truncated
+//!   (exp(−9) < 1.3e-4).  Evaluating the Gaussian at centroid distance is
+//!   second-order accurate in the cell diameter, so the estimate tracks the
+//!   exact score to ~1% while running in O(nnz + cells·neigh).
+
+use crate::par::pool::ThreadPool;
+use crate::sparse::csr::Csr;
+
+/// Exact γ-score by the full double sum.  O(nnz²) — use for validation and
+/// small matrices only.
+pub fn gamma_exact(a: &Csr, sigma: f64) -> f64 {
+    let pos = a.nonzero_positions();
+    let nnz = pos.len();
+    if nnz == 0 {
+        return 0.0;
+    }
+    let inv_s2 = 1.0 / (sigma * sigma);
+    let pool = ThreadPool::with_default();
+    let chunk = nnz.div_ceil(pool.threads.max(1)).max(1);
+    let ranges: Vec<(usize, usize)> = (0..nnz)
+        .step_by(chunk)
+        .map(|lo| (lo, (lo + chunk).min(nnz)))
+        .collect();
+    let partials = pool.map(&ranges, |&(lo, hi)| {
+        let mut s = 0.0f64;
+        for p in lo..hi {
+            let (pi, pj) = pos[p];
+            for &(qi, qj) in &pos {
+                let di = pi as f64 - qi as f64;
+                let dj = pj as f64 - qj as f64;
+                s += (-(di * di + dj * dj) * inv_s2).exp();
+            }
+        }
+        s
+    });
+    let total: f64 = partials.iter().sum();
+    total / (sigma * nnz as f64)
+}
+
+/// Fast grid-aggregated γ-score (see module docs).
+pub fn gamma_fast(a: &Csr, sigma: f64) -> f64 {
+    let pos = a.nonzero_positions();
+    gamma_fast_positions(&pos, sigma)
+}
+
+/// Fast γ over an explicit nonzero position list.
+pub fn gamma_fast_positions(pos: &[(u32, u32)], sigma: f64) -> f64 {
+    let nnz = pos.len();
+    if nnz == 0 {
+        return 0.0;
+    }
+    let cell = (sigma * 0.5).max(1.0);
+    let inv_s2 = 1.0 / (sigma * sigma);
+    // Truncation radius in cells: 3σ / cell.
+    let rad = (3.0 * sigma / cell).ceil() as i64;
+
+    // Aggregate cells: map (ci, cj) -> (count, sum_i, sum_j).
+    use std::collections::HashMap;
+    let mut cells: HashMap<(i64, i64), (f64, f64, f64)> = HashMap::new();
+    for &(i, j) in pos {
+        let key = ((i as f64 / cell) as i64, (j as f64 / cell) as i64);
+        let e = cells.entry(key).or_insert((0.0, 0.0, 0.0));
+        e.0 += 1.0;
+        e.1 += i as f64;
+        e.2 += j as f64;
+    }
+    // Cell list with centroids.
+    let list: Vec<((i64, i64), f64, f64, f64)> = cells
+        .iter()
+        .map(|(&k, &(c, si, sj))| (k, c, si / c, sj / c))
+        .collect();
+    let index: HashMap<(i64, i64), usize> = list
+        .iter()
+        .enumerate()
+        .map(|(t, &(k, _, _, _))| (k, t))
+        .collect();
+
+    let pool = ThreadPool::with_default();
+    let chunk = list.len().div_ceil(pool.threads.max(1)).max(1);
+    let ranges: Vec<(usize, usize)> = (0..list.len())
+        .step_by(chunk)
+        .map(|lo| (lo, (lo + chunk).min(list.len())))
+        .collect();
+    let partials = pool.map(&ranges, |&(lo, hi)| {
+        let mut s = 0.0f64;
+        for t in lo..hi {
+            let ((ci, cj), cnt, mi, mj) = list[t];
+            for di in -rad..=rad {
+                for dj in -rad..=rad {
+                    if let Some(&u) = index.get(&(ci + di, cj + dj)) {
+                        let (_, cnt2, ni, nj) = list[u];
+                        let dx = mi - ni;
+                        let dy = mj - nj;
+                        let w = (-(dx * dx + dy * dy) * inv_s2).exp();
+                        s += cnt * cnt2 * w;
+                    }
+                }
+            }
+        }
+        s
+    });
+    let total: f64 = partials.iter().sum();
+    total / (sigma * nnz as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::gen;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn single_nonzero_self_pair() {
+        let a = Csr::from_triplets(4, 4, &[1], &[2], &[1.0]);
+        // one self-pair: exp(0)=1 → γ = 1/(σ·1)
+        let g = gamma_exact(&a, 2.0);
+        assert!((g - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exact_vs_fast_within_tolerance() {
+        for (n, per_row, seed) in [(60, 4, 1u64), (80, 6, 2), (50, 8, 3)] {
+            let a = gen::scattered(n, per_row, seed);
+            let sigma = 5.0;
+            let ge = gamma_exact(&a, sigma);
+            let gf = gamma_fast(&a, sigma);
+            let rel = (ge - gf).abs() / ge;
+            assert!(rel < 0.05, "n={n}: exact {ge} vs fast {gf} rel {rel}");
+        }
+    }
+
+    #[test]
+    fn exact_vs_fast_on_banded() {
+        let a = gen::banded(80, 6, 4);
+        let ge = gamma_exact(&a, 4.0);
+        let gf = gamma_fast(&a, 4.0);
+        assert!((ge - gf).abs() / ge < 0.05, "{ge} vs {gf}");
+    }
+
+    #[test]
+    fn banded_beats_scattered() {
+        // The whole point of the measure: locality-friendly profiles score
+        // higher at equal size and nnz.
+        let banded = gen::banded(150, 8, 5);
+        let scattered = gen::scattered(150, 8, 5);
+        let gb = gamma_fast(&banded, 4.0);
+        let gs = gamma_fast(&scattered, 4.0);
+        assert!(gb > 2.0 * gs, "banded {gb} !>> scattered {gs}");
+    }
+
+    #[test]
+    fn fig1_monotonicity_block_perm_invariance() {
+        // Fig. 1: (a) arrowhead and (b) block-permuted have ~equal γ;
+        // (c) row-scrambled drops; (d) fully scrambled drops further.
+        let a = gen::block_arrowhead(200, 20, 1);
+        let b = gen::permute_blocks(&a, 20, 2);
+        let mut rng = Rng::new(3);
+        let rp = rng.permutation(200);
+        let c = b.permuted(&rp, &(0..200).collect::<Vec<_>>());
+        let cp = rng.permutation(200);
+        let d = c.permuted(&(0..200).collect::<Vec<_>>(), &cp);
+        let s = 10.0;
+        let (ga, gb_, gc, gd) = (
+            gamma_fast(&a, s),
+            gamma_fast(&b, s),
+            gamma_fast(&c, s),
+            gamma_fast(&d, s),
+        );
+        assert!((ga - gb_).abs() / ga < 0.1, "a {ga} vs b {gb_}");
+        assert!(gc < 0.8 * ga, "c {gc} !< a {ga}");
+        assert!(gd < 0.8 * gc, "d {gd} !< c {gc}");
+    }
+
+    #[test]
+    fn empty_matrix_zero() {
+        let a = Csr::from_triplets(5, 5, &[], &[], &[]);
+        assert_eq!(gamma_exact(&a, 3.0), 0.0);
+        assert_eq!(gamma_fast(&a, 3.0), 0.0);
+    }
+}

@@ -1,0 +1,7 @@
+//! Sparsity-profile measures: the patch-density score β (Eq. 2, estimated
+//! by a Lagrangian quadtree covering) and the numerical γ-score (Eq. 4),
+//! plus profile rasters for the Fig. 2 visuals.
+
+pub mod beta;
+pub mod gamma;
+pub mod render;

@@ -1,0 +1,214 @@
+//! Manifest-driven artifact registry.
+//!
+//! `artifacts/manifest.json` (written by `python -m compile.aot`) maps each
+//! variant name to its HLO file, input signature, and golden tensors.  The
+//! registry compiles variants lazily and caches the executables so the
+//! coordinator can look them up by name on the hot path.
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::runtime::client::{Executable, Runtime, Tensor};
+use crate::util::json::{self, Json};
+
+/// Input/output signature entry.
+#[derive(Clone, Debug)]
+pub struct VariantMeta {
+    pub name: String,
+    pub file: PathBuf,
+    /// Input shapes (f32 only in this system).
+    pub inputs: Vec<Vec<usize>>,
+    pub golden: Option<Golden>,
+}
+
+/// Golden input/output tensor files for integration checks.
+#[derive(Clone, Debug)]
+pub struct Golden {
+    pub inputs: Vec<(PathBuf, Vec<usize>)>,
+    pub outputs: Vec<(PathBuf, Vec<usize>)>,
+}
+
+/// Registry of AOT artifacts.
+pub struct ArtifactRegistry {
+    pub dir: PathBuf,
+    pub variants: HashMap<String, VariantMeta>,
+    runtime: Runtime,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+impl ArtifactRegistry {
+    /// Open `dir` (usually `artifacts/`) and parse its manifest.
+    pub fn open(dir: &Path) -> Result<ArtifactRegistry> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts`"))?;
+        let doc = json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let mut variants = HashMap::new();
+        let vars = doc
+            .get("variants")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing 'variants'"))?;
+        for (name, entry) in vars {
+            let file = dir.join(
+                entry
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("{name}: missing file"))?,
+            );
+            let inputs = entry
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("{name}: missing inputs"))?
+                .iter()
+                .map(|inp| {
+                    inp.get("shape")
+                        .and_then(Json::as_arr)
+                        .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                        .ok_or_else(|| anyhow!("{name}: bad input shape"))
+                })
+                .collect::<Result<Vec<Vec<usize>>>>()?;
+            let golden = entry.get("golden").map(|g| parse_golden(dir, g)).transpose()?;
+            variants.insert(
+                name.clone(),
+                VariantMeta {
+                    name: name.clone(),
+                    file,
+                    inputs,
+                    golden,
+                },
+            );
+        }
+        Ok(ArtifactRegistry {
+            dir: dir.to_path_buf(),
+            variants,
+            runtime: Runtime::cpu()?,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Default artifacts directory: `$NNI_ARTIFACTS` or `./artifacts`.
+    pub fn open_default() -> Result<ArtifactRegistry> {
+        let dir = std::env::var("NNI_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::open(Path::new(&dir))
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+
+    /// Get (compiling and caching on first use) a variant executable.
+    pub fn get(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let meta = self
+            .variants
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact variant '{name}'"))?;
+        let exe = std::sync::Arc::new(self.runtime.load_hlo_text(&meta.file)?);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute a variant after validating input shapes against the manifest.
+    pub fn run(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let meta = self
+            .variants
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact variant '{name}'"))?;
+        if inputs.len() != meta.inputs.len() {
+            return Err(anyhow!(
+                "{name}: expected {} inputs, got {}",
+                meta.inputs.len(),
+                inputs.len()
+            ));
+        }
+        for (k, (t, want)) in inputs.iter().zip(&meta.inputs).enumerate() {
+            if &t.shape != want {
+                return Err(anyhow!(
+                    "{name}: input {k} shape {:?} != manifest {:?}",
+                    t.shape,
+                    want
+                ));
+            }
+        }
+        self.get(name)?.run(inputs)
+    }
+
+    /// Load a golden tensor file (raw little-endian f32).
+    pub fn load_golden_tensor(path: &Path, shape: &[usize]) -> Result<Tensor> {
+        let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+        let n: usize = shape.iter().product::<usize>().max(1);
+        if bytes.len() != n * 4 {
+            return Err(anyhow!(
+                "{path:?}: {} bytes != {} f32s",
+                bytes.len(),
+                n
+            ));
+        }
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect();
+        Ok(Tensor {
+            shape: shape.to_vec(),
+            data,
+        })
+    }
+}
+
+fn parse_golden(dir: &Path, g: &Json) -> Result<Golden> {
+    let gdir = dir.join("golden");
+    let side = |key: &str| -> Result<Vec<(PathBuf, Vec<usize>)>> {
+        g.get(key)
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("golden missing {key}"))?
+            .iter()
+            .map(|e| {
+                let f = gdir.join(
+                    e.get("file")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("golden entry missing file"))?,
+                );
+                let shape = e
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                    .unwrap_or_default();
+                Ok((f, shape))
+            })
+            .collect()
+    };
+    Ok(Golden {
+        inputs: side("inputs")?,
+        outputs: side("outputs")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn golden_tensor_size_check() {
+        let dir = std::env::temp_dir();
+        let p = dir.join("nni_golden_test.bin");
+        std::fs::write(&p, [0u8; 12]).unwrap();
+        assert!(ArtifactRegistry::load_golden_tensor(&p, &[3]).is_ok());
+        assert!(ArtifactRegistry::load_golden_tensor(&p, &[4]).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_context_error() {
+        let err = ArtifactRegistry::open(Path::new("/nonexistent-dir-xyz"))
+            .err()
+            .unwrap();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,9 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! (HLO text; see DESIGN.md §Layer-2) and executes them on the request path
+//! without any Python.
+
+pub mod artifact;
+pub mod client;
+
+pub use artifact::{ArtifactRegistry, Golden, VariantMeta};
+pub use client::{Executable, Runtime, Tensor};

@@ -1,0 +1,85 @@
+//! Coordinate (triplet) format — the assembly/permutation interchange form.
+
+use crate::sparse::csr::Csr;
+
+/// COO sparse matrix: unordered (row, col, val) triplets.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Coo {
+    pub rows: usize,
+    pub cols: usize,
+    pub r: Vec<u32>,
+    pub c: Vec<u32>,
+    pub v: Vec<f32>,
+}
+
+impl Coo {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        Coo {
+            rows,
+            cols,
+            r: Vec::new(),
+            c: Vec::new(),
+            v: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, i: usize, j: usize, x: f32) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.r.push(i as u32);
+        self.c.push(j as u32);
+        self.v.push(x);
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.v.len()
+    }
+
+    /// Convert to CSR (duplicates summed, columns sorted per row).
+    pub fn to_csr(&self) -> Csr {
+        Csr::from_triplets(self.rows, self.cols, &self.r, &self.c, &self.v)
+    }
+
+    /// Apply row/column permutations: entry (i, j) moves to
+    /// (row_pos[i], col_pos[j]) where `*_pos` maps old index -> new position.
+    pub fn permuted(&self, row_pos: &[usize], col_pos: &[usize]) -> Coo {
+        assert_eq!(row_pos.len(), self.rows);
+        assert_eq!(col_pos.len(), self.cols);
+        Coo {
+            rows: self.rows,
+            cols: self.cols,
+            r: self.r.iter().map(|&i| row_pos[i as usize] as u32).collect(),
+            c: self.c.iter().map(|&j| col_pos[j as usize] as u32).collect(),
+            v: self.v.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_convert() {
+        let mut m = Coo::new(3, 3);
+        m.push(0, 1, 2.0);
+        m.push(2, 0, 3.0);
+        m.push(0, 1, 1.0); // duplicate: summed in CSR
+        let csr = m.to_csr();
+        assert_eq!(csr.nnz(), 2);
+        assert_eq!(csr.get(0, 1), 3.0);
+        assert_eq!(csr.get(2, 0), 3.0);
+        assert_eq!(csr.get(1, 1), 0.0);
+    }
+
+    #[test]
+    fn permuted_moves_entries() {
+        let mut m = Coo::new(2, 2);
+        m.push(0, 0, 1.0);
+        m.push(1, 1, 2.0);
+        // swap rows and columns
+        let p = m.permuted(&[1, 0], &[1, 0]);
+        let csr = p.to_csr();
+        assert_eq!(csr.get(1, 1), 1.0);
+        assert_eq!(csr.get(0, 0), 2.0);
+    }
+}

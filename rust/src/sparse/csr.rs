@@ -1,0 +1,293 @@
+//! Compressed sparse row — the baseline format (the paper's CSC/CSR
+//! MKL reference operates on the same indirect-addressing structure).
+
+use crate::knn::exact::KnnGraph;
+
+/// CSR sparse matrix, f32 values, u32 indices.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    /// Row pointers, length rows+1.
+    pub ptr: Vec<u32>,
+    /// Column indices, sorted within each row.
+    pub col: Vec<u32>,
+    pub val: Vec<f32>,
+}
+
+impl Csr {
+    pub fn nnz(&self) -> usize {
+        self.val.len()
+    }
+
+    /// Assemble from triplets: duplicates are summed, columns sorted.
+    pub fn from_triplets(rows: usize, cols: usize, r: &[u32], c: &[u32], v: &[f32]) -> Csr {
+        assert_eq!(r.len(), c.len());
+        assert_eq!(r.len(), v.len());
+        // Counting sort by row.
+        let mut counts = vec![0u32; rows + 1];
+        for &i in r {
+            counts[i as usize + 1] += 1;
+        }
+        for i in 0..rows {
+            counts[i + 1] += counts[i];
+        }
+        let mut order: Vec<u32> = vec![0; r.len()];
+        let mut cursor = counts.clone();
+        for (t, &i) in r.iter().enumerate() {
+            order[cursor[i as usize] as usize] = t as u32;
+            cursor[i as usize] += 1;
+        }
+        // Per row: sort by column, merge duplicates.
+        let mut ptr = vec![0u32; rows + 1];
+        let mut col = Vec::with_capacity(r.len());
+        let mut val = Vec::with_capacity(r.len());
+        let mut rowbuf: Vec<(u32, f32)> = Vec::new();
+        for i in 0..rows {
+            rowbuf.clear();
+            for t in counts[i] as usize..counts[i + 1] as usize {
+                let e = order[t] as usize;
+                rowbuf.push((c[e], v[e]));
+            }
+            rowbuf.sort_unstable_by_key(|&(cj, _)| cj);
+            let mut last: Option<u32> = None;
+            for &(cj, x) in rowbuf.iter() {
+                assert!((cj as usize) < cols, "column out of range");
+                if last == Some(cj) {
+                    let lv = val.last_mut().unwrap();
+                    *lv += x;
+                } else {
+                    col.push(cj);
+                    val.push(x);
+                    last = Some(cj);
+                }
+            }
+            ptr[i + 1] = col.len() as u32;
+        }
+        Csr {
+            rows,
+            cols,
+            ptr,
+            col,
+            val,
+        }
+    }
+
+    /// Interaction profile of a kNN graph: row i has the k neighbors of
+    /// target i, all values 1.0 (values are refreshed by the engine).
+    pub fn from_knn(g: &KnnGraph, cols: usize) -> Csr {
+        let mut ptr = vec![0u32; g.n + 1];
+        let mut col = Vec::with_capacity(g.n * g.k);
+        let mut val = Vec::with_capacity(g.n * g.k);
+        for i in 0..g.n {
+            let mut nb: Vec<u32> = g.neighbors(i).to_vec();
+            nb.sort_unstable();
+            for j in nb {
+                col.push(j);
+                val.push(1.0);
+            }
+            ptr[i + 1] = col.len() as u32;
+        }
+        Csr {
+            rows: g.n,
+            cols,
+            ptr,
+            col,
+            val,
+        }
+    }
+
+    /// Entry accessor (O(log k) within the row).
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        let lo = self.ptr[i] as usize;
+        let hi = self.ptr[i + 1] as usize;
+        match self.col[lo..hi].binary_search(&(j as u32)) {
+            Ok(p) => self.val[lo + p],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Row slice (columns, values).
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f32]) {
+        let lo = self.ptr[i] as usize;
+        let hi = self.ptr[i + 1] as usize;
+        (&self.col[lo..hi], &self.val[lo..hi])
+    }
+
+    /// Symmetrize the profile: A ∪ Aᵀ with values summed (the paper's Fig. 2
+    /// matrices are "symmetrized interactions").
+    pub fn symmetrized(&self) -> Csr {
+        assert_eq!(self.rows, self.cols);
+        let mut r = Vec::with_capacity(self.nnz() * 2);
+        let mut c = Vec::with_capacity(self.nnz() * 2);
+        let mut v = Vec::with_capacity(self.nnz() * 2);
+        for i in 0..self.rows {
+            let (cols, vals) = self.row(i);
+            for (&j, &x) in cols.iter().zip(vals) {
+                r.push(i as u32);
+                c.push(j);
+                v.push(x * 0.5);
+                r.push(j);
+                c.push(i as u32);
+                v.push(x * 0.5);
+            }
+        }
+        Csr::from_triplets(self.rows, self.cols, &r, &c, &v)
+    }
+
+    /// Permute rows and columns: entry (i, j) -> (row_pos[i], col_pos[j]).
+    pub fn permuted(&self, row_pos: &[usize], col_pos: &[usize]) -> Csr {
+        assert_eq!(row_pos.len(), self.rows);
+        assert_eq!(col_pos.len(), self.cols);
+        let mut r = Vec::with_capacity(self.nnz());
+        let mut c = Vec::with_capacity(self.nnz());
+        let mut v = Vec::with_capacity(self.nnz());
+        for i in 0..self.rows {
+            let (cols, vals) = self.row(i);
+            for (&j, &x) in cols.iter().zip(vals) {
+                r.push(row_pos[i] as u32);
+                c.push(col_pos[j as usize] as u32);
+                v.push(x);
+            }
+        }
+        Csr::from_triplets(self.rows, self.cols, &r, &c, &v)
+    }
+
+    /// Nonzero index positions as (row, col) pairs — the set Inz(A) of §2.3.
+    pub fn nonzero_positions(&self) -> Vec<(u32, u32)> {
+        let mut out = Vec::with_capacity(self.nnz());
+        for i in 0..self.rows {
+            let (cols, _) = self.row(i);
+            for &j in cols {
+                out.push((i as u32, j));
+            }
+        }
+        out
+    }
+
+    /// Dense y = A x (reference for tests; O(rows*cols) memory-free).
+    pub fn matvec_ref(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0f32; self.rows];
+        for i in 0..self.rows {
+            let (cols, vals) = self.row(i);
+            let mut acc = 0.0f64;
+            for (&j, &v) in cols.iter().zip(vals) {
+                acc += v as f64 * x[j as usize] as f64;
+            }
+            y[i] = acc as f32;
+        }
+        y
+    }
+
+    /// Bandwidth: max |i - j| over nonzeros (the classic envelope measure
+    /// that rCM minimizes — reported for comparison in the benches).
+    pub fn bandwidth(&self) -> usize {
+        let mut bw = 0usize;
+        for i in 0..self.rows {
+            let (cols, _) = self.row(i);
+            for &j in cols {
+                bw = bw.max((i as i64 - j as i64).unsigned_abs() as usize);
+            }
+        }
+        bw
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    pub fn random_csr(rows: usize, cols: usize, per_row: usize, seed: u64) -> Csr {
+        let mut rng = Rng::new(seed);
+        let mut r = Vec::new();
+        let mut c = Vec::new();
+        let mut v = Vec::new();
+        for i in 0..rows {
+            for j in rng.sample_distinct(cols, per_row.min(cols)) {
+                r.push(i as u32);
+                c.push(j as u32);
+                v.push(rng.f32() + 0.1);
+            }
+        }
+        Csr::from_triplets(rows, cols, &r, &c, &v)
+    }
+
+    #[test]
+    fn triplets_sorted_and_summed() {
+        let m = Csr::from_triplets(2, 3, &[0, 0, 1, 0], &[2, 0, 1, 2], &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(m.nnz(), 3);
+        let (cols, vals) = m.row(0);
+        assert_eq!(cols, &[0, 2]);
+        assert_eq!(vals, &[2.0, 5.0]);
+        assert_eq!(m.get(1, 1), 3.0);
+    }
+
+    #[test]
+    fn symmetrize_makes_symmetric() {
+        let m = random_csr(50, 50, 5, 3);
+        let s = m.symmetrized();
+        for i in 0..50 {
+            let (cols, _) = s.row(i);
+            for &j in cols {
+                assert!(
+                    (s.get(i, j as usize) - s.get(j as usize, i)).abs() < 1e-6,
+                    "asymmetric at ({i},{j})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn permutation_preserves_matvec() {
+        let m = random_csr(40, 40, 6, 7);
+        let mut rng = Rng::new(9);
+        let rp = rng.permutation(40);
+        let cp = rng.permutation(40);
+        let pm = m.permuted(&rp, &cp);
+        // y'[rp[i]] == y[i] when x'[cp[j]] == x[j].
+        let x: Vec<f32> = (0..40).map(|_| rng.f32()).collect();
+        let mut xp = vec![0.0f32; 40];
+        for j in 0..40 {
+            xp[cp[j]] = x[j];
+        }
+        let y = m.matvec_ref(&x);
+        let yp = pm.matvec_ref(&xp);
+        for i in 0..40 {
+            assert!((yp[rp[i]] - y[i]).abs() < 1e-4, "row {i}");
+        }
+    }
+
+    #[test]
+    fn knn_to_csr_profile() {
+        use crate::data::synth::SynthSpec;
+        let ds = SynthSpec::blobs(60, 3, 3, 2).generate();
+        let g = crate::knn::exact::knn_graph(&ds, 4, 1);
+        let a = Csr::from_knn(&g, 60);
+        assert_eq!(a.rows, 60);
+        assert_eq!(a.nnz(), 60 * 4);
+        for i in 0..60 {
+            let (cols, _) = a.row(i);
+            assert_eq!(cols.len(), 4);
+            for w in cols.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn bandwidth_of_diagonal() {
+        let m = Csr::from_triplets(4, 4, &[0, 1, 2, 3], &[0, 1, 2, 3], &[1.0; 4]);
+        assert_eq!(m.bandwidth(), 0);
+        let m2 = Csr::from_triplets(4, 4, &[0, 3], &[3, 0], &[1.0, 1.0]);
+        assert_eq!(m2.bandwidth(), 3);
+    }
+
+    #[test]
+    fn nonzero_positions_count() {
+        let m = random_csr(30, 30, 4, 1);
+        assert_eq!(m.nonzero_positions().len(), m.nnz());
+    }
+}

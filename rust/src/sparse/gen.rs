@@ -1,0 +1,147 @@
+//! Synthetic sparsity-profile generators for the micro-benchmarks (§4.1)
+//! and Fig. 1's block-arrowhead construction.
+
+use crate::sparse::csr::Csr;
+use crate::util::rng::Rng;
+
+/// Banded matrix: `per_row` nonzeros per row packed around the diagonal —
+//  the paper's best-case profile (1D interaction).
+pub fn banded(n: usize, per_row: usize, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed);
+    let half = per_row / 2;
+    let mut r = Vec::with_capacity(n * per_row);
+    let mut c = Vec::with_capacity(n * per_row);
+    let mut v = Vec::with_capacity(n * per_row);
+    for i in 0..n {
+        let lo = i.saturating_sub(half);
+        let hi = (lo + per_row).min(n);
+        let lo = hi.saturating_sub(per_row);
+        for j in lo..hi {
+            r.push(i as u32);
+            c.push(j as u32);
+            v.push(rng.f32() + 0.1);
+        }
+    }
+    Csr::from_triplets(n, n, &r, &c, &v)
+}
+
+/// Scattered matrix: `per_row` nonzeros per row placed uniformly at random —
+/// the paper's base-case profile.
+pub fn scattered(n: usize, per_row: usize, seed: u64) -> Csr {
+    let mut rng = Rng::new(seed);
+    let mut r = Vec::with_capacity(n * per_row);
+    let mut c = Vec::with_capacity(n * per_row);
+    let mut v = Vec::with_capacity(n * per_row);
+    for i in 0..n {
+        for j in rng.sample_distinct(n, per_row) {
+            r.push(i as u32);
+            c.push(j as u32);
+            v.push(rng.f32() + 0.1);
+        }
+    }
+    Csr::from_triplets(n, n, &r, &c, &v)
+}
+
+/// Fig. 1(a): block-arrowhead with full `b x b` blocks on a matrix of size
+/// `n` — full diagonal blocks plus full first block-row and block-column.
+pub fn block_arrowhead(n: usize, b: usize, seed: u64) -> Csr {
+    assert!(n % b == 0, "n must be a multiple of b");
+    let mut rng = Rng::new(seed);
+    let nb = n / b;
+    let mut r = Vec::new();
+    let mut c = Vec::new();
+    let mut v = Vec::new();
+    let dense_block = |bi: usize, bj: usize, r: &mut Vec<u32>, c: &mut Vec<u32>, v: &mut Vec<f32>, rng: &mut Rng| {
+        for i in 0..b {
+            for j in 0..b {
+                r.push((bi * b + i) as u32);
+                c.push((bj * b + j) as u32);
+                v.push(rng.f32() + 0.1);
+            }
+        }
+    };
+    for k in 0..nb {
+        dense_block(k, k, &mut r, &mut c, &mut v, &mut rng); // diagonal
+        if k > 0 {
+            dense_block(0, k, &mut r, &mut c, &mut v, &mut rng); // first row
+            dense_block(k, 0, &mut r, &mut c, &mut v, &mut rng); // first col
+        }
+    }
+    Csr::from_triplets(n, n, &r, &c, &v)
+}
+
+/// Fig. 1(b): permute whole block rows/columns of a block-partitioned
+/// matrix (block size `b`), keeping intra-block order.
+pub fn permute_blocks(m: &Csr, b: usize, seed: u64) -> Csr {
+    assert!(m.rows % b == 0 && m.cols % b == 0);
+    let mut rng = Rng::new(seed);
+    let bperm_r = rng.permutation(m.rows / b);
+    let bperm_c = rng.permutation(m.cols / b);
+    let mut row_pos = vec![0usize; m.rows];
+    let mut col_pos = vec![0usize; m.cols];
+    for (bi, &tb) in bperm_r.iter().enumerate() {
+        for i in 0..b {
+            row_pos[bi * b + i] = tb * b + i;
+        }
+    }
+    for (bj, &tb) in bperm_c.iter().enumerate() {
+        for j in 0..b {
+            col_pos[bj * b + j] = tb * b + j;
+        }
+    }
+    m.permuted(&row_pos, &col_pos)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn banded_profile() {
+        let m = banded(100, 8, 1);
+        assert_eq!(m.nnz(), 800);
+        assert!(m.bandwidth() <= 8);
+    }
+
+    #[test]
+    fn scattered_profile() {
+        let m = scattered(100, 8, 1);
+        assert_eq!(m.nnz(), 800);
+        // overwhelmingly likely to have large bandwidth
+        assert!(m.bandwidth() > 50);
+    }
+
+    #[test]
+    fn arrowhead_counts() {
+        // paper: 500x500 with 20x20 full blocks
+        let m = block_arrowhead(500, 20, 1);
+        let nb = 25;
+        let expect = (nb + 2 * (nb - 1)) * 20 * 20;
+        assert_eq!(m.nnz(), expect);
+        // first block row fully dense
+        for j in 0..500 {
+            assert!(m.get(0, j) > 0.0);
+        }
+    }
+
+    #[test]
+    fn block_permutation_preserves_nnz_and_blocks() {
+        let m = block_arrowhead(200, 20, 2);
+        let p = permute_blocks(&m, 20, 3);
+        assert_eq!(p.nnz(), m.nnz());
+        // each 20x20 block of p is either entirely zero or entirely nonzero
+        for bi in 0..10 {
+            for bj in 0..10 {
+                let mut cnt = 0;
+                for i in 0..20 {
+                    for j in 0..20 {
+                        if p.get(bi * 20 + i, bj * 20 + j) != 0.0 {
+                            cnt += 1;
+                        }
+                    }
+                }
+                assert!(cnt == 0 || cnt == 400, "partial block ({bi},{bj}): {cnt}");
+            }
+        }
+    }
+}

@@ -1,0 +1,5 @@
+//! Sparse matrix formats and synthetic profile generators.
+
+pub mod coo;
+pub mod csr;
+pub mod gen;

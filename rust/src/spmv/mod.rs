@@ -1,0 +1,7 @@
+//! Sparse matrix-vector multiplication engines: baseline CSR (the MKL
+//! stand-in of §4.1) and the multi-level blocked engine over [`HierCsb`].
+//!
+//! [`HierCsb`]: crate::csb::hier::HierCsb
+
+pub mod csr;
+pub mod multilevel;

@@ -1,0 +1,377 @@
+//! Adaptive 2^d tree over points in a low-dimensional embedding space.
+//!
+//! This is the paper's hierarchical-clustering component: with a 3-D
+//! embedding it is an adaptive octree; d = 2 a quadtree; d = 1 a binary
+//! interval tree.  Each node owns a contiguous span of the *reordered*
+//! point sequence; the pre-order walk of the leaves IS the hierarchical
+//! ordering permutation, and the internal levels supply the multi-level
+//! blocking used by the CSB storage and the multi-level interaction
+//! scheduler.
+
+use crate::data::dataset::Dataset;
+
+/// One tree node.
+#[derive(Clone, Debug)]
+pub struct Node {
+    /// Depth (root = 0).
+    pub level: u32,
+    /// Contiguous span `[lo, hi)` of tree-ordered positions.
+    pub lo: u32,
+    pub hi: u32,
+    /// Child node ids (empty for leaves). Up to 2^d.
+    pub children: Vec<u32>,
+    /// Parent id (root points to itself).
+    pub parent: u32,
+    /// Box center in the embedding space.
+    pub center: Vec<f32>,
+    /// Box half-width (same along every axis: boxes stay cubical).
+    pub half: f32,
+}
+
+impl Node {
+    pub fn is_leaf(&self) -> bool {
+        self.children.is_empty()
+    }
+    pub fn len(&self) -> usize {
+        (self.hi - self.lo) as usize
+    }
+    pub fn is_empty(&self) -> bool {
+        self.hi == self.lo
+    }
+}
+
+/// Adaptive 2^d tree.
+#[derive(Clone, Debug)]
+pub struct BoxTree {
+    /// Embedding dimension.
+    pub d: usize,
+    /// Nodes in creation (pre-)order; node 0 is the root.
+    pub nodes: Vec<Node>,
+    /// Ordering permutation: tree position `k` holds original index
+    /// `perm[k]`.
+    pub perm: Vec<usize>,
+    /// Inverse: original index `i` sits at tree position `pos[i]`.
+    pub pos: Vec<usize>,
+    /// Leaf node id for each tree position.
+    pub leaf_at: Vec<u32>,
+    /// Maximum leaf population used during construction.
+    pub leaf_cap: usize,
+}
+
+impl BoxTree {
+    /// Build over `ds` (points in the embedding space, d = ds.d()).
+    ///
+    /// * `leaf_cap`: split nodes with more points than this;
+    /// * `max_depth`: hard depth cap (guards degenerate duplicates).
+    pub fn build(ds: &Dataset, leaf_cap: usize, max_depth: u32) -> BoxTree {
+        let n = ds.n();
+        let d = ds.d();
+        assert!(d >= 1 && d <= 8, "embedding dimension out of range");
+        assert!(leaf_cap >= 1);
+
+        // Root box: cube containing all points.
+        let mut lo = vec![f32::INFINITY; d];
+        let mut hi = vec![f32::NEG_INFINITY; d];
+        for i in 0..n {
+            for (k, &x) in ds.row(i).iter().enumerate() {
+                lo[k] = lo[k].min(x);
+                hi[k] = hi[k].max(x);
+            }
+        }
+        let mut center = vec![0.0f32; d];
+        let mut half = 0.0f32;
+        for k in 0..d {
+            center[k] = 0.5 * (lo[k] + hi[k]);
+            half = half.max(0.5 * (hi[k] - lo[k]));
+        }
+        half = half.max(1e-12);
+
+        let mut tree = BoxTree {
+            d,
+            nodes: vec![Node {
+                level: 0,
+                lo: 0,
+                hi: n as u32,
+                children: Vec::new(),
+                parent: 0,
+                center,
+                half,
+            }],
+            perm: (0..n).collect(),
+            pos: vec![0; n],
+            leaf_at: vec![0; n],
+            leaf_cap,
+        };
+        tree.split_recursive(ds, 0, max_depth);
+        for (k, &p) in tree.perm.iter().enumerate() {
+            tree.pos[p] = k;
+        }
+        tree
+    }
+
+    fn split_recursive(&mut self, ds: &Dataset, node: u32, max_depth: u32) {
+        let (nlo, nhi, level, half, center) = {
+            let nd = &self.nodes[node as usize];
+            (
+                nd.lo as usize,
+                nd.hi as usize,
+                nd.level,
+                nd.half,
+                nd.center.clone(),
+            )
+        };
+        let count = nhi - nlo;
+        if count <= self.leaf_cap || level >= max_depth {
+            for k in nlo..nhi {
+                self.leaf_at[k] = node;
+            }
+            return;
+        }
+        let d = self.d;
+        let nchild = 1usize << d;
+
+        // Bucket points by orthant of the box center.
+        let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); nchild];
+        for k in nlo..nhi {
+            let i = self.perm[k];
+            let row = ds.row(i);
+            let mut code = 0usize;
+            for a in 0..d {
+                if row[a] >= center[a] {
+                    code |= 1 << a;
+                }
+            }
+            buckets[code].push(i);
+        }
+
+        // Degenerate: everything in one orthant and the box can no longer
+        // separate (duplicate-heavy data) — make this a leaf.
+        if buckets.iter().filter(|b| !b.is_empty()).count() == 1 && half < 1e-9 {
+            for k in nlo..nhi {
+                self.leaf_at[k] = node;
+            }
+            return;
+        }
+
+        // Rewrite the span in bucket order and create non-empty children.
+        let mut cursor = nlo;
+        let child_half = half * 0.5;
+        let mut created: Vec<u32> = Vec::new();
+        for (code, bucket) in buckets.iter().enumerate() {
+            if bucket.is_empty() {
+                continue;
+            }
+            let clo = cursor;
+            for &i in bucket {
+                self.perm[cursor] = i;
+                cursor += 1;
+            }
+            let mut ccenter = center.clone();
+            for a in 0..d {
+                ccenter[a] += if code & (1 << a) != 0 {
+                    child_half
+                } else {
+                    -child_half
+                };
+            }
+            let id = self.nodes.len() as u32;
+            self.nodes.push(Node {
+                level: level + 1,
+                lo: clo as u32,
+                hi: cursor as u32,
+                children: Vec::new(),
+                parent: node,
+                center: ccenter,
+                half: child_half,
+            });
+            created.push(id);
+        }
+        self.nodes[node as usize].children = created.clone();
+        for id in created {
+            self.split_recursive(ds, id, max_depth);
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.perm.len()
+    }
+
+    /// All leaf node ids in span (pre-)order.
+    pub fn leaves(&self) -> Vec<u32> {
+        let mut out: Vec<u32> = self
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, nd)| nd.is_leaf() && !nd.is_empty())
+            .map(|(i, _)| i as u32)
+            .collect();
+        out.sort_by_key(|&i| self.nodes[i as usize].lo);
+        out
+    }
+
+    /// Node ids at depth `level` **completing** shallower leaves: returns a
+    /// partition of `[0, n)` using nodes of depth == level plus leaves of
+    /// depth < level, in span order.  This is the per-level blocking the
+    /// multi-level structures consume.
+    pub fn level_cut(&self, level: u32) -> Vec<u32> {
+        let mut out = Vec::new();
+        self.cut_rec(0, level, &mut out);
+        out.sort_by_key(|&i| self.nodes[i as usize].lo);
+        out
+    }
+
+    fn cut_rec(&self, node: u32, level: u32, out: &mut Vec<u32>) {
+        let nd = &self.nodes[node as usize];
+        if nd.is_empty() {
+            return;
+        }
+        if nd.level == level || nd.is_leaf() {
+            out.push(node);
+            return;
+        }
+        for &c in &nd.children {
+            self.cut_rec(c, level, out);
+        }
+    }
+
+    /// Tree height (max node level).
+    pub fn height(&self) -> u32 {
+        self.nodes.iter().map(|n| n.level).max().unwrap_or(0)
+    }
+
+    /// Size-based cut: the shallowest antichain of nodes with ≤ `cap`
+    /// points each (descend only while a node exceeds `cap`), in span
+    /// order.  This decouples *ordering* granularity (the tree recurses to
+    /// small leaves for fine-grained locality) from *blocking* granularity
+    /// (CSB blocks of ~cap points for the artifact tile / cache line
+    /// economics).
+    pub fn cut_by_size(&self, cap: usize) -> Vec<u32> {
+        let mut out = Vec::new();
+        self.cut_size_rec(0, cap.max(1), &mut out);
+        out.sort_by_key(|&i| self.nodes[i as usize].lo);
+        out
+    }
+
+    fn cut_size_rec(&self, node: u32, cap: usize, out: &mut Vec<u32>) {
+        let nd = &self.nodes[node as usize];
+        if nd.is_empty() {
+            return;
+        }
+        if nd.len() <= cap || nd.is_leaf() {
+            out.push(node);
+            return;
+        }
+        for &c in &nd.children {
+            self.cut_size_rec(c, cap, out);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+
+    fn tree_for(n: usize, d: usize, k: usize, cap: usize, seed: u64) -> (Dataset, BoxTree) {
+        let ds = SynthSpec::blobs(n, d, k, seed).generate();
+        let t = BoxTree::build(&ds, cap, 24);
+        (ds, t)
+    }
+
+    #[test]
+    fn perm_is_permutation() {
+        let (_, t) = tree_for(500, 3, 4, 16, 1);
+        let mut seen = vec![false; 500];
+        for &p in &t.perm {
+            assert!(!seen[p]);
+            seen[p] = true;
+        }
+        // pos is the inverse
+        for i in 0..500 {
+            assert_eq!(t.perm[t.pos[i]], i);
+        }
+    }
+
+    #[test]
+    fn leaves_partition_span() {
+        let (_, t) = tree_for(777, 2, 5, 20, 2);
+        let leaves = t.leaves();
+        let mut expect = 0u32;
+        for &l in &leaves {
+            let nd = &t.nodes[l as usize];
+            assert_eq!(nd.lo, expect, "gap before leaf {l}");
+            assert!(nd.len() <= 20 || nd.level == 24);
+            expect = nd.hi;
+        }
+        assert_eq!(expect, 777);
+    }
+
+    #[test]
+    fn level_cut_partitions() {
+        let (_, t) = tree_for(600, 3, 3, 8, 3);
+        for level in 0..=t.height() {
+            let cut = t.level_cut(level);
+            let mut expect = 0u32;
+            for &c in &cut {
+                let nd = &t.nodes[c as usize];
+                assert_eq!(nd.lo, expect);
+                expect = nd.hi;
+            }
+            assert_eq!(expect, 600, "level {level}");
+        }
+    }
+
+    #[test]
+    fn children_nested_in_parent_box() {
+        let (_, t) = tree_for(400, 3, 4, 10, 4);
+        for nd in &t.nodes {
+            for &c in &nd.children {
+                let ch = &t.nodes[c as usize];
+                assert_eq!(ch.parent, t.nodes.iter().position(|x| std::ptr::eq(x, nd)).unwrap() as u32);
+                for a in 0..t.d {
+                    assert!(
+                        (ch.center[a] - nd.center[a]).abs() <= nd.half * 0.5 + 1e-6,
+                        "child box escapes parent"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn points_inside_leaf_boxes() {
+        let (ds, t) = tree_for(300, 2, 4, 12, 5);
+        for k in 0..ds.n() {
+            let leaf = &t.nodes[t.leaf_at[k] as usize];
+            assert!(k as u32 >= leaf.lo && (k as u32) < leaf.hi);
+            let i = t.perm[k];
+            for a in 0..t.d {
+                // loose containment (boxes shrink by exact halving)
+                assert!(
+                    (ds.row(i)[a] - leaf.center[a]).abs() <= leaf.half * (1.0 + 1e-3) + 1e-5,
+                    "point {i} outside its leaf box"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn duplicate_points_terminate() {
+        // All identical points: max_depth guard must stop recursion.
+        let ds = Dataset::new(64, 2, vec![0.5; 128]);
+        let t = BoxTree::build(&ds, 4, 10);
+        assert!(t.height() <= 10);
+        let leaves = t.leaves();
+        let total: usize = leaves.iter().map(|&l| t.nodes[l as usize].len()).sum();
+        assert_eq!(total, 64);
+    }
+
+    #[test]
+    fn clustered_data_yields_shallow_big_leaves_far_apart() {
+        // sanity on the adaptive property: cluster diameters much smaller
+        // than separation → nodes per level stays near the cluster count.
+        let (_, t) = tree_for(1000, 2, 4, 64, 7);
+        let mid = t.level_cut(t.height() / 2);
+        assert!(mid.len() <= 64, "too many mid-level nodes: {}", mid.len());
+    }
+}

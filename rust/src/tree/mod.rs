@@ -1,0 +1,5 @@
+//! Hierarchical partitioning of embedded data (§2.4): adaptive 2^d trees
+//! (binary/quad/octree for d = 1/2/3) and Morton codes.
+
+pub mod boxtree;
+pub mod morton;

@@ -1,0 +1,133 @@
+//! Morton (Z-order) codes — an alternative space-filling-curve ordering
+//! used by the ablation benches to separate "hierarchical blocking" from
+//! "locality-preserving curve" effects.
+
+/// Interleave the low 21 bits of up to 3 coordinates into a 63-bit code.
+pub fn morton3(x: u32, y: u32, z: u32) -> u64 {
+    part1by2(x as u64) | (part1by2(y as u64) << 1) | (part1by2(z as u64) << 2)
+}
+
+/// Interleave the low 31 bits of 2 coordinates.
+pub fn morton2(x: u32, y: u32) -> u64 {
+    part1by1(x as u64) | (part1by1(y as u64) << 1)
+}
+
+#[inline]
+fn part1by1(mut v: u64) -> u64 {
+    v &= 0x0000_0000_FFFF_FFFF;
+    v = (v | (v << 16)) & 0x0000_FFFF_0000_FFFF;
+    v = (v | (v << 8)) & 0x00FF_00FF_00FF_00FF;
+    v = (v | (v << 4)) & 0x0F0F_0F0F_0F0F_0F0F;
+    v = (v | (v << 2)) & 0x3333_3333_3333_3333;
+    v = (v | (v << 1)) & 0x5555_5555_5555_5555;
+    v
+}
+
+#[inline]
+fn part1by2(mut v: u64) -> u64 {
+    v &= 0x1F_FFFF;
+    v = (v | (v << 32)) & 0x1F00_0000_00FF_FF;
+    v = (v | (v << 16)) & 0x1F00_00FF_0000_FF;
+    v = (v | (v << 8)) & 0x100F_00F0_0F00_F00F;
+    v = (v | (v << 4)) & 0x10C3_0C30_C30C_30C3;
+    v = (v | (v << 2)) & 0x1249_2492_4924_9249;
+    v
+}
+
+/// Quantize a coordinate into `bits`-bit grid over `[lo, hi]`.
+pub fn quantize(x: f32, lo: f32, hi: f32, bits: u32) -> u32 {
+    let levels = (1u64 << bits) as f32;
+    if hi <= lo {
+        return 0;
+    }
+    let t = ((x - lo) / (hi - lo) * levels).floor();
+    (t.max(0.0) as u32).min((1u32 << bits) - 1)
+}
+
+/// Morton ordering permutation of points in up to 3 dims (padded with 0).
+pub fn morton_order(points: &crate::data::dataset::Dataset, bits: u32) -> Vec<usize> {
+    let d = points.d().min(3);
+    let n = points.n();
+    let mut lo = vec![f32::INFINITY; d];
+    let mut hi = vec![f32::NEG_INFINITY; d];
+    for i in 0..n {
+        for a in 0..d {
+            lo[a] = lo[a].min(points.row(i)[a]);
+            hi[a] = hi[a].max(points.row(i)[a]);
+        }
+    }
+    let mut keyed: Vec<(u64, usize)> = (0..n)
+        .map(|i| {
+            let r = points.row(i);
+            let q: Vec<u32> = (0..d).map(|a| quantize(r[a], lo[a], hi[a], bits)).collect();
+            let code = match d {
+                1 => q[0] as u64,
+                2 => morton2(q[0], q[1]),
+                _ => morton3(q[0], q[1], q[2]),
+            };
+            (code, i)
+        })
+        .collect();
+    keyed.sort_unstable();
+    keyed.into_iter().map(|(_, i)| i).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn morton2_basic() {
+        assert_eq!(morton2(0, 0), 0);
+        assert_eq!(morton2(1, 0), 1);
+        assert_eq!(morton2(0, 1), 2);
+        assert_eq!(morton2(1, 1), 3);
+        assert_eq!(morton2(2, 0), 4);
+    }
+
+    #[test]
+    fn morton3_basic() {
+        assert_eq!(morton3(0, 0, 0), 0);
+        assert_eq!(morton3(1, 0, 0), 1);
+        assert_eq!(morton3(0, 1, 0), 2);
+        assert_eq!(morton3(0, 0, 1), 4);
+        assert_eq!(morton3(1, 1, 1), 7);
+    }
+
+    #[test]
+    fn quantize_bounds() {
+        assert_eq!(quantize(0.0, 0.0, 1.0, 4), 0);
+        assert_eq!(quantize(1.0, 0.0, 1.0, 4), 15);
+        assert_eq!(quantize(0.5, 0.0, 1.0, 4), 8);
+        assert_eq!(quantize(5.0, 0.0, 1.0, 4), 15); // clamp
+    }
+
+    #[test]
+    fn morton_order_is_permutation() {
+        let ds = crate::data::synth::SynthSpec::blobs(200, 3, 3, 3).generate();
+        let p = morton_order(&ds, 10);
+        let mut seen = vec![false; 200];
+        for i in p {
+            assert!(!seen[i]);
+            seen[i] = true;
+        }
+    }
+
+    #[test]
+    fn morton_groups_nearby_points() {
+        // Two tight far-apart blobs: ordering must not interleave them.
+        let mut xs = Vec::new();
+        for i in 0..50 {
+            xs.extend_from_slice(&[0.0 + (i as f32) * 1e-4, 0.0]);
+        }
+        for i in 0..50 {
+            xs.extend_from_slice(&[100.0 + (i as f32) * 1e-4, 100.0]);
+        }
+        let ds = crate::data::dataset::Dataset::new(100, 2, xs);
+        let p = morton_order(&ds, 12);
+        let first_half: std::collections::HashSet<usize> = p[..50].iter().copied().collect();
+        let all_low = first_half.iter().all(|&i| i < 50);
+        let all_high = first_half.iter().all(|&i| i >= 50);
+        assert!(all_low || all_high, "blobs interleaved in morton order");
+    }
+}

@@ -1,0 +1,245 @@
+//! Declarative command-line argument parsing (clap substitute).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! defaults, and auto-generated `--help`.  Each binary declares its options
+//! with [`Args::new`] + [`Args::opt`]/[`Args::flag`] and then calls
+//! [`Args::parse`].
+
+use std::collections::BTreeMap;
+
+#[derive(Clone)]
+struct OptSpec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// A declarative option table + parsed values.
+pub struct Args {
+    about: String,
+    specs: Vec<OptSpec>,
+    values: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn new(about: &str) -> Self {
+        Args {
+            about: about.to_string(),
+            specs: Vec::new(),
+            values: BTreeMap::new(),
+            positional: Vec::new(),
+        }
+    }
+
+    /// Declare `--name <value>` with a default (`""` is a valid default and
+    /// serves as the usual "unset" sentinel).
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.specs.push(OptSpec {
+            name: name.into(),
+            help: help.into(),
+            default: Some(default.into()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare a boolean `--name` flag.
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(OptSpec {
+            name: name.into(),
+            help: help.into(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    fn usage(&self) -> String {
+        let mut u = format!("{}\n\nOptions:\n", self.about);
+        for s in &self.specs {
+            let left = if s.is_flag {
+                format!("  --{}", s.name)
+            } else {
+                format!("  --{} <v>", s.name)
+            };
+            let def = s
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            u.push_str(&format!("{left:28} {}{def}\n", s.help));
+        }
+        u
+    }
+
+    /// Parse an explicit token list (used by tests); exits on `--help`.
+    pub fn parse_from<I: IntoIterator<Item = String>>(mut self, it: I) -> Result<Self, String> {
+        let toks: Vec<String> = it.into_iter().collect();
+        let mut i = 0;
+        while i < toks.len() {
+            let t = &toks[i];
+            if t == "--help" || t == "-h" {
+                print!("{}", self.usage());
+                std::process::exit(0);
+            }
+            if t == "--bench" {
+                // cargo bench passes `--bench` to harness=false targets;
+                // accept and ignore it so benches run under `cargo bench`.
+                i += 1;
+                continue;
+            }
+            if let Some(body) = t.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}\n{}", self.usage()))?
+                    .clone();
+                let val = if spec.is_flag {
+                    inline.unwrap_or_else(|| "true".into())
+                } else if let Some(v) = inline {
+                    v
+                } else {
+                    i += 1;
+                    toks.get(i)
+                        .ok_or_else(|| format!("--{name} needs a value"))?
+                        .clone()
+                };
+                self.values.insert(name, val);
+            } else {
+                self.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        Ok(self)
+    }
+
+    /// Parse `std::env::args()` (skipping argv[0]); exits with a message on
+    /// error.
+    pub fn parse(self) -> Self {
+        match self.parse_from(std::env::args().skip(1)) {
+            Ok(a) => a,
+            Err(e) => {
+                eprintln!("{e}");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    fn raw(&self, name: &str) -> Option<String> {
+        if let Some(v) = self.values.get(name) {
+            return Some(v.clone());
+        }
+        self.specs
+            .iter()
+            .find(|s| s.name == name)
+            .and_then(|s| s.default.clone())
+    }
+
+    /// Get a string option (declared default applies).
+    pub fn get(&self, name: &str) -> String {
+        self.raw(name)
+            .unwrap_or_else(|| panic!("option --{name} missing and has no default"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects an integer"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> u64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects an integer"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.get(name)
+            .parse()
+            .unwrap_or_else(|_| panic!("--{name} expects a number"))
+    }
+
+    pub fn get_flag(&self, name: &str) -> bool {
+        self.values.contains_key(name)
+    }
+
+    /// Positional arguments in order.
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Comma-separated list of usizes, e.g. `--sizes 1024,2048`.
+    pub fn get_usize_list(&self, name: &str) -> Vec<usize> {
+        self.get(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.trim()
+                    .parse()
+                    .unwrap_or_else(|_| panic!("--{name}: bad integer '{s}'"))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = Args::new("t")
+            .opt("n", "100", "size")
+            .opt("name", "abc", "label")
+            .parse_from(toks(&["--n", "7"]))
+            .unwrap();
+        assert_eq!(a.get_usize("n"), 7);
+        assert_eq!(a.get("name"), "abc");
+    }
+
+    #[test]
+    fn equals_form_and_flags() {
+        let a = Args::new("t")
+            .opt("k", "1", "k")
+            .flag("par", "parallel")
+            .parse_from(toks(&["--k=5", "--par"]))
+            .unwrap();
+        assert_eq!(a.get_usize("k"), 5);
+        assert!(a.get_flag("par"));
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = Args::new("t")
+            .opt("k", "1", "k")
+            .parse_from(toks(&["input.bin", "--k", "2", "out.bin"]))
+            .unwrap();
+        assert_eq!(a.positional(), &["input.bin", "out.bin"]);
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        let r = Args::new("t").parse_from(toks(&["--bogus"]));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = Args::new("t")
+            .opt("sizes", "1,2,3", "sizes")
+            .parse_from(toks(&[]))
+            .unwrap();
+        assert_eq!(a.get_usize_list("sizes"), vec![1, 2, 3]);
+    }
+}

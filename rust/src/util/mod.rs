@@ -1,0 +1,8 @@
+//! Substrate utilities built in-tree (the offline environment ships no
+//! clap/serde/criterion/proptest — DESIGN.md §5 documents the substitution).
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod timer;

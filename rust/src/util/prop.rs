@@ -1,0 +1,138 @@
+//! In-tree property-based testing harness (proptest substitute; DESIGN.md §5).
+//!
+//! A property test draws `CASES` random inputs from generator closures over
+//! a seeded [`Rng`] and asserts an invariant for each.  On failure it
+//! retries with *shrunk* sizes (halving the size hint) to report a small
+//! counterexample, then panics with the seed so the case is reproducible.
+//!
+//! ```ignore
+//! check(|rng, size| {
+//!     let n = 1 + rng.below(size);
+//!     let p = rng.permutation(n);
+//!     let inv = invert(&p);
+//!     prop_assert!(compose(&p, &inv) == identity(n));
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Number of random cases per property.
+pub const CASES: usize = 64;
+
+/// Default size hint passed to the property.
+pub const SIZE: usize = 200;
+
+/// Outcome of one property evaluation.
+pub type PropResult = Result<(), String>;
+
+/// Assert inside a property; returns early with a message on failure.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr) => {
+        if !($cond) {
+            return Err(format!(
+                "assertion failed: {} ({}:{})",
+                stringify!($cond),
+                file!(),
+                line!()
+            ));
+        }
+    };
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+/// Run a property over `CASES` seeded random cases with shrinking-on-failure.
+///
+/// The property receives a fresh RNG (derived from the case index so failures
+/// reproduce independent of iteration order) and a size hint.
+pub fn check<F>(name: &str, prop: F)
+where
+    F: Fn(&mut Rng, usize) -> PropResult,
+{
+    check_with(name, CASES, SIZE, prop)
+}
+
+/// As [`check`] with explicit case count and size hint.
+pub fn check_with<F>(name: &str, cases: usize, size: usize, prop: F)
+where
+    F: Fn(&mut Rng, usize) -> PropResult,
+{
+    // Base seed can be pinned via NNI_PROP_SEED to reproduce a failure.
+    let base: u64 = std::env::var("NNI_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xA5A5_0000);
+    for case in 0..cases {
+        let seed = base ^ ((case as u64) << 32) ^ 0x5DEECE66D;
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng, size) {
+            // Shrink: halve the size hint until the property passes or we
+            // reach a minimal failing size, and report the smallest failure.
+            let mut fail_size = size;
+            let mut fail_msg = msg;
+            let mut s = size / 2;
+            while s >= 2 {
+                let mut r2 = Rng::new(seed);
+                match prop(&mut r2, s) {
+                    Err(m) => {
+                        fail_size = s;
+                        fail_msg = m;
+                        s /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed:#x}, \
+                 shrunk size {fail_size}): {fail_msg}\n\
+                 reproduce with NNI_PROP_SEED={base}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("rev-rev", |rng, size| {
+            let n = 1 + rng.below(size);
+            let v: Vec<u64> = (0..n).map(|_| rng.next_u64()).collect();
+            let mut w = v.clone();
+            w.reverse();
+            w.reverse();
+            prop_assert!(v == w);
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", |_rng, _size| {
+            prop_assert!(1 == 2, "one is not two");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn shrinking_reports_smaller_size() {
+        // A property failing for any size >= 4: shrinker should land <= 4.
+        let result = std::panic::catch_unwind(|| {
+            check("fails-at-4", |rng, size| {
+                let n = 1 + rng.below(size);
+                prop_assert!(n < 4, "n too big");
+                Ok(())
+            });
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // The shrunk size must be well below the default SIZE.
+        assert!(msg.contains("shrunk size"), "{msg}");
+    }
+}

@@ -1,0 +1,118 @@
+//! Measurement protocol for the benchmark harness (criterion substitute).
+//!
+//! `cargo bench` targets use [`bench_run`]: warm up, then repeat the
+//! workload until both a minimum repetition count and a minimum total time
+//! are reached, and report the **robust minimum** (5th percentile) plus the
+//! median — the low quantile is the standard estimator for cache-behaviour
+//! benchmarks where interference is strictly additive noise.
+
+use std::time::{Duration, Instant};
+
+/// Result of a measured run.
+#[derive(Clone, Copy, Debug)]
+pub struct Measurement {
+    /// 5th-percentile iteration time, seconds.
+    pub robust_min_s: f64,
+    /// Median iteration time, seconds.
+    pub median_s: f64,
+    /// Number of measured iterations.
+    pub iters: usize,
+}
+
+impl Measurement {
+    /// Throughput in "units per second" for a per-iteration work count.
+    pub fn throughput(&self, units_per_iter: f64) -> f64 {
+        units_per_iter / self.robust_min_s
+    }
+}
+
+/// Measure `f`, which performs one full iteration of the workload per call.
+///
+/// * `warmup`: iterations discarded up front (populate caches/branch pred).
+/// * `min_iters` / `min_time`: run until both are satisfied.
+pub fn bench_run<F: FnMut()>(
+    warmup: usize,
+    min_iters: usize,
+    min_time: Duration,
+    mut f: F,
+) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(min_iters.max(8));
+    let start = Instant::now();
+    while samples.len() < min_iters || start.elapsed() < min_time {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+        if samples.len() >= 10_000 {
+            break; // pathological fast-workload guard
+        }
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q05 = samples[(samples.len() as f64 * 0.05) as usize];
+    let med = samples[samples.len() / 2];
+    Measurement {
+        robust_min_s: q05,
+        median_s: med,
+        iters: samples.len(),
+    }
+}
+
+/// Default protocol used by the paper-figure benches.
+pub fn bench_default<F: FnMut()>(f: F) -> Measurement {
+    bench_run(2, 7, Duration::from_millis(300), f)
+}
+
+/// One-shot wall time of `f` in seconds (for coarse pipeline stages).
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, f64) {
+    let t0 = Instant::now();
+    let v = f();
+    (v, t0.elapsed().as_secs_f64())
+}
+
+/// Machine description printed by every bench header (Table 2 stand-in).
+pub fn machine_summary() -> String {
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let model = std::fs::read_to_string("/proc/cpuinfo")
+        .ok()
+        .and_then(|s| {
+            s.lines()
+                .find(|l| l.starts_with("model name"))
+                .map(|l| l.split(':').nth(1).unwrap_or("?").trim().to_string())
+        })
+        .unwrap_or_else(|| "unknown-cpu".into());
+    let cache = std::fs::read_to_string("/sys/devices/system/cpu/cpu0/cache/index3/size")
+        .map(|s| s.trim().to_string())
+        .unwrap_or_else(|_| "?".into());
+    format!("cpu='{model}' threads={cores} llc={cache}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_positive_time() {
+        let m = bench_run(1, 5, Duration::from_millis(10), || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(m.robust_min_s > 0.0);
+        assert!(m.median_s >= m.robust_min_s);
+        assert!(m.iters >= 5);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, dt) = time_once(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(dt >= 0.0);
+    }
+
+    #[test]
+    fn machine_summary_nonempty() {
+        assert!(machine_summary().contains("threads="));
+    }
+}

@@ -1,0 +1,97 @@
+//! Smoke tests of the `nni` CLI binary: every subcommand runs on a tiny
+//! workload and produces the expected output shape.
+
+use std::process::Command;
+
+fn nni() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_nni"))
+}
+
+#[test]
+fn help_lists_subcommands() {
+    let out = nni().output().unwrap();
+    let text = String::from_utf8_lossy(&out.stderr) + String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("tsne"));
+    assert!(text.contains("meanshift"));
+}
+
+#[test]
+fn info_prints_testbed() {
+    let out = nni().arg("info").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("testbed:"), "{text}");
+}
+
+#[test]
+fn synth_reorder_roundtrip() {
+    let dir = std::env::temp_dir();
+    let path = dir.join("nni_cli_smoke.nnid");
+    let out = nni()
+        .args([
+            "synth",
+            "--workload",
+            "sift",
+            "--n",
+            "256",
+            "--out",
+            path.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let out = nni()
+        .args([
+            "reorder",
+            "--input",
+            path.to_str().unwrap(),
+            "--k",
+            "8",
+            "--ordering",
+            "3ddt",
+            "--leaf-cap",
+            "64",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("gamma"), "{text}");
+    assert!(text.contains("csb:"), "{text}");
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn meanshift_finds_modes() {
+    let out = nni()
+        .args([
+            "meanshift",
+            "--n",
+            "300",
+            "--blobs",
+            "3",
+            "--k",
+            "16",
+            "--iters",
+            "30",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("3 modes"), "{text}");
+}
+
+#[test]
+fn tsne_short_run_logs_kl() {
+    let out = nni()
+        .args([
+            "tsne", "--n", "300", "--iters", "60", "--k", "20",
+            "--perplexity", "8",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("KL"), "{text}");
+}

@@ -1,0 +1,96 @@
+//! Integration: the coordinator's hybrid (Rust workers + PJRT leader) t-SNE
+//! attractive force must equal the pure-Rust path to float tolerance, and
+//! the routing metrics must show that PJRT actually executed blocks.
+
+use nni::coordinator::batcher::BatchPolicy;
+use nni::coordinator::Coordinator;
+use nni::csb::hier::HierCsb;
+use nni::data::synth::SynthSpec;
+use nni::interact::engine::Engine;
+use nni::knn::exact::knn_graph;
+use nni::order::Pipeline;
+use nni::runtime::ArtifactRegistry;
+use nni::sparse::csr::Csr;
+use nni::util::rng::Rng;
+
+fn setup(n: usize, d: usize, leaf: usize) -> Engine {
+    let ds = SynthSpec::blobs(n, d, 4, 99).generate();
+    let g = knn_graph(&ds, 12, 4);
+    let a = Csr::from_knn(&g, n).symmetrized();
+    let r = Pipeline::dual_tree(d).run(&ds, &a);
+    let tree = r.tree.as_ref().unwrap();
+    // PJRT-path dense threshold (artifacts eat zero-padding for free)
+    let csb = HierCsb::build_with(&r.reordered, tree, tree, leaf, 0.1);
+    Engine::new(csb, 4)
+}
+
+#[test]
+fn hybrid_equals_rust_only() {
+    if ArtifactRegistry::open_default().is_err() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    for d in [2usize, 3] {
+        // leaf cap 200 (< 256 tile) with dense clusters → dense blocks
+        let engine = setup(900, d, 200);
+        let engine2 = Engine::new(engine.csb.clone(), 4);
+        let policy = BatchPolicy {
+            min_nnz: 64,
+            ..Default::default()
+        };
+        let reg_d = ArtifactRegistry::open_default().unwrap();
+        let mut hybrid = Coordinator::new(engine, Some(reg_d), policy);
+        let mut rust_only = Coordinator::rust_only(engine2);
+        assert!(
+            hybrid.plan().pjrt_block_count() > 0,
+            "d={d}: no blocks routed to PJRT ({})",
+            hybrid.csb().describe()
+        );
+
+        let n = hybrid.csb().rows;
+        let mut rng = Rng::new(3);
+        let y: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+        let mut f_hybrid = vec![0.0f32; n * d];
+        let mut f_rust = vec![0.0f32; n * d];
+        hybrid.tsne_attr(&y, d, &mut f_hybrid);
+        rust_only.tsne_attr(&y, d, &mut f_rust);
+
+        let mut max_err = 0.0f32;
+        for (a, b) in f_hybrid.iter().zip(&f_rust) {
+            max_err = max_err.max((a - b).abs() / (1.0 + b.abs()));
+        }
+        assert!(max_err < 5e-4, "d={d}: hybrid vs rust max rel err {max_err}");
+        assert!(
+            hybrid.metrics.pjrt_blocks > 0,
+            "d={d}: metrics show no PJRT blocks: {}",
+            hybrid.metrics.summary()
+        );
+    }
+}
+
+#[test]
+fn batched_route_is_exercised() {
+    let Ok(reg) = ArtifactRegistry::open_default() else {
+        return;
+    };
+    // small leaves (<=128) force the batched route
+    let engine = setup(1200, 2, 100);
+    let policy = BatchPolicy {
+        min_nnz: 32,
+        ..Default::default()
+    };
+    let mut co = Coordinator::new(engine, Some(reg), policy);
+    if co.plan().pjrt_batches.is_empty() {
+        eprintln!(
+            "no batched groups formed on this structure; plan: rust={} single={}",
+            co.plan().rust.len(),
+            co.plan().pjrt_single.len()
+        );
+        return;
+    }
+    let n = co.csb().rows;
+    let y: Vec<f32> = (0..n * 2).map(|i| (i as f32 * 0.01).sin()).collect();
+    let mut f = vec![0.0f32; n * 2];
+    co.tsne_attr(&y, 2, &mut f);
+    assert!(co.metrics.pjrt_batched_calls > 0, "{}", co.metrics.summary());
+}

@@ -1,0 +1,145 @@
+//! Cross-module integration: full ordering pipelines on the paper's
+//! surrogate workloads, checking (i) numerical equivalence of every SpMV
+//! engine under every ordering, and (ii) the paper's qualitative claims —
+//! γ ranks dual-tree above lexical above scattered, and γ agrees with β̂.
+
+use nni::bench::Workload;
+use nni::csb::hier::HierCsb;
+use nni::order::{OrderingKind, Pipeline};
+use nni::profile::{beta, gamma};
+use nni::spmv;
+use nni::util::rng::Rng;
+
+#[test]
+fn all_orderings_preserve_spmv_semantics() {
+    let (ds, a) = Workload::Sift.make(1024, 7, 4);
+    let mut rng = Rng::new(1);
+    let x: Vec<f32> = (0..ds.n()).map(|_| rng.f32()).collect();
+    let y_ref = a.matvec_ref(&x);
+    for kind in OrderingKind::table1_set() {
+        let r = Pipeline::new(kind.clone()).run(&ds, &a);
+        let xp: Vec<f32> = r.perm.iter().map(|&p| x[p]).collect();
+        let mut yp = vec![0.0f32; ds.n()];
+        spmv::csr::spmv_seq(&r.reordered, &xp, &mut yp);
+        for i in 0..ds.n() {
+            let got = yp[r.pos[i]];
+            assert!(
+                (got - y_ref[i]).abs() < 1e-3 * (1.0 + y_ref[i].abs()),
+                "{kind:?} row {i}: {got} vs {}",
+                y_ref[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn csb_engines_agree_across_thread_counts() {
+    let (ds, a) = Workload::Sift.make(2048, 9, 4);
+    let r = Pipeline::dual_tree(3).run(&ds, &a);
+    let tree = r.tree.as_ref().unwrap();
+    let csb = HierCsb::build(&r.reordered, tree, tree, 256);
+    let mut rng = Rng::new(2);
+    let x: Vec<f32> = (0..ds.n()).map(|_| rng.f32()).collect();
+    let mut y_csr = vec![0.0f32; ds.n()];
+    spmv::csr::spmv_seq(&r.reordered, &x, &mut y_csr);
+    let mut y = vec![0.0f32; ds.n()];
+    spmv::multilevel::spmv_ml_seq(&csb, &x, &mut y);
+    for (g, w) in y.iter().zip(&y_csr) {
+        assert!((g - w).abs() < 1e-3 * (1.0 + w.abs()));
+    }
+    let seq = y.clone();
+    for threads in [2, 4, 8] {
+        spmv::multilevel::spmv_ml_par(&csb, &x, &mut y, threads);
+        assert_eq!(seq, y, "threads={threads}");
+    }
+}
+
+#[test]
+fn gamma_ranks_orderings_as_paper_table1() {
+    // Table 1's qualitative ranking on the SIFT surrogate:
+    //   rand < 1D < {2D lex, 3D lex} < 3D DT, with rCM > rand.
+    let (ds, a) = Workload::Sift.make(2048, 5, 4);
+    let sigma = Workload::Sift.k() as f64 / 2.0;
+    let score = |kind: OrderingKind| {
+        let r = Pipeline::new(kind).run(&ds, &a);
+        gamma::gamma_fast(&r.reordered, sigma)
+    };
+    let rand = score(OrderingKind::Scattered);
+    let rcm = score(OrderingKind::Rcm);
+    let d1 = score(OrderingKind::Pca1d);
+    let lex3 = score(OrderingKind::Lex { d: 3 });
+    let dt3 = score(OrderingKind::DualTree { d: 3 });
+    println!("gamma: rand={rand:.1} rcm={rcm:.1} 1d={d1:.1} lex3={lex3:.1} dt3={dt3:.1}");
+    assert!(rcm > rand, "rCM {rcm} !> rand {rand}");
+    assert!(d1 > rand, "1D {d1} !> rand {rand}");
+    assert!(lex3 > d1 * 0.9, "3D lex {lex3} !>~ 1D {d1}");
+    assert!(dt3 > lex3, "3D DT {dt3} !> 3D lex {lex3}");
+    assert!(dt3 > rand * 2.0, "DT should be far above scattered");
+}
+
+#[test]
+fn beta_and_gamma_agree_on_ranking() {
+    let (ds, a) = Workload::Sift.make(1024, 11, 4);
+    let kinds = [
+        OrderingKind::Scattered,
+        OrderingKind::Lex { d: 3 },
+        OrderingKind::DualTree { d: 3 },
+    ];
+    let mut scores = Vec::new();
+    for kind in kinds {
+        let r = Pipeline::new(kind.clone()).run(&ds, &a);
+        let g = gamma::gamma_fast(&r.reordered, 15.0);
+        let b = beta::beta_estimate(&r.reordered).beta;
+        scores.push((kind, g, b));
+    }
+    // both measures should order: scattered < lex3 <= dt3
+    assert!(scores[0].1 < scores[1].1 && scores[1].1 <= scores[2].1 * 1.05,
+        "gamma ranking violated: {scores:?}");
+    assert!(scores[0].2 <= scores[2].2,
+        "beta ranking violated: {scores:?}");
+}
+
+#[test]
+fn dual_tree_ml_spmv_is_competitive_and_gamma_predicts_locality() {
+    // Testbed note (EXPERIMENTS.md §Testbed): this container has a 260 MB
+    // LLC, so the paper's banded-vs-scattered SpMV roofline ratio is ~1.0
+    // at CI sizes — by the paper's own normalization, time parity is the
+    // expected outcome here, and the locality improvement is asserted on
+    // the machine-independent gamma-score instead.  The micro-bench and
+    // fig3 harnesses report the measured ratios against that roofline.
+    let n = 1 << 13;
+    let (ds, a) = Workload::Sift.make(n, 3, 0);
+    let scat = Pipeline::new(OrderingKind::Scattered).run(&ds, &a);
+    let dt = Pipeline::dual_tree(3).run(&ds, &a);
+    let tree = dt.tree.as_ref().unwrap();
+    // block cap 2048: SpMV-oriented blocking (perf log: smaller caps
+    // shred rows to ~1.5 entries per block-row; EXPERIMENTS.md §Perf)
+    let csb = HierCsb::build(&dt.reordered, tree, tree, 2048);
+    let x = vec![1.0f32; n];
+    let mut y = vec![0.0f32; n];
+    let t_scat = nni::util::timer::bench_default(|| {
+        spmv::csr::spmv_seq(&scat.reordered, &x, &mut y)
+    });
+    let t_dt = nni::util::timer::bench_default(|| {
+        spmv::multilevel::spmv_ml_seq(&csb, &x, &mut y)
+    });
+    println!(
+        "scattered csr: {:.3} ms, dual-tree ml: {:.3} ms",
+        t_scat.robust_min_s * 1e3,
+        t_dt.robust_min_s * 1e3
+    );
+    // L3 criterion from DESIGN §8: the multilevel machinery must not
+    // become the bottleneck — within 1.3x of raw CSR streaming.
+    assert!(
+        t_dt.robust_min_s < 1.3 * t_scat.robust_min_s,
+        "multilevel overhead too high: {:.3} ms vs {:.3} ms",
+        t_dt.robust_min_s * 1e3,
+        t_scat.robust_min_s * 1e3
+    );
+    // The machine-independent claim: the dual-tree ordering's locality is
+    // far better, as measured by the gamma-score.
+    let sigma = Workload::Sift.k() as f64 / 2.0;
+    let g_scat = nni::profile::gamma::gamma_fast(&scat.reordered, sigma);
+    let g_dt = nni::profile::gamma::gamma_fast(&dt.reordered, sigma);
+    assert!(g_dt > 3.0 * g_scat, "gamma: dt {g_dt} vs scattered {g_scat}");
+}

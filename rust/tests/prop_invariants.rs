@@ -1,0 +1,204 @@
+//! Property-based invariants across the system (in-tree `util::prop`
+//! harness; DESIGN.md §6).  Every property runs 64 seeded random cases with
+//! shrinking-on-failure; reproduce any failure with `NNI_PROP_SEED=<seed>`.
+
+use nni::csb::hier::HierCsb;
+use nni::data::dataset::Dataset;
+use nni::order::{compose, invert, is_permutation};
+use nni::prop_assert;
+use nni::sparse::csr::Csr;
+use nni::tree::boxtree::BoxTree;
+use nni::util::prop::check;
+use nni::util::rng::Rng;
+
+fn random_csr(rng: &mut Rng, n: usize, per_row: usize) -> Csr {
+    let mut r = Vec::new();
+    let mut c = Vec::new();
+    let mut v = Vec::new();
+    for i in 0..n {
+        for j in rng.sample_distinct(n, per_row.min(n)) {
+            r.push(i as u32);
+            c.push(j as u32);
+            v.push(rng.f32() + 0.05);
+        }
+    }
+    Csr::from_triplets(n, n, &r, &c, &v)
+}
+
+fn random_points(rng: &mut Rng, n: usize, d: usize) -> Dataset {
+    Dataset::new(n, d, (0..n * d).map(|_| rng.normal() as f32).collect())
+}
+
+#[test]
+fn permutation_inverse_composes_to_identity() {
+    check("perm-inv", |rng, size| {
+        let n = 1 + rng.below(size);
+        let p = rng.permutation(n);
+        let q = invert(&p);
+        prop_assert!(is_permutation(&p) && is_permutation(&q));
+        let id = compose(&p, &q);
+        prop_assert!(id.iter().enumerate().all(|(k, &v)| k == v));
+        Ok(())
+    });
+}
+
+#[test]
+fn permuting_matrix_preserves_nnz_and_values_multiset() {
+    check("perm-nnz", |rng, size| {
+        let n = 2 + rng.below(size / 2 + 2);
+        let pr = 1 + rng.below(4);
+        let a = random_csr(rng, n, pr);
+        let rp = rng.permutation(n);
+        let cp = rng.permutation(n);
+        let b = a.permuted(&rp, &cp);
+        prop_assert!(b.nnz() == a.nnz());
+        let mut va: Vec<u32> = a.val.iter().map(|v| v.to_bits()).collect();
+        let mut vb: Vec<u32> = b.val.iter().map(|v| v.to_bits()).collect();
+        va.sort_unstable();
+        vb.sort_unstable();
+        prop_assert!(va == vb, "value multiset changed");
+        Ok(())
+    });
+}
+
+#[test]
+fn tree_leaves_partition_any_point_set() {
+    check("tree-partition", |rng, size| {
+        let n = 1 + rng.below(size);
+        let d = 1 + rng.below(3);
+        let ds = random_points(rng, n, d);
+        let cap = 1 + rng.below(32);
+        let t = BoxTree::build(&ds, cap, 20);
+        prop_assert!(is_permutation(&t.perm));
+        let leaves = t.leaves();
+        let mut expect = 0u32;
+        for &l in &leaves {
+            let nd = &t.nodes[l as usize];
+            prop_assert!(nd.lo == expect, "leaf gap at {expect}");
+            expect = nd.hi;
+        }
+        prop_assert!(expect as usize == n);
+        Ok(())
+    });
+}
+
+#[test]
+fn csb_spmv_equals_csr_on_random_matrices() {
+    check("csb-spmv", |rng, size| {
+        let n = 8 + rng.below(size);
+        let d = 2 + rng.below(2);
+        let ds = random_points(rng, n, d);
+        let pr = 1 + rng.below(6);
+        let a = random_csr(rng, n, pr);
+        // build trees over the data, reorder, compare products
+        let tree = BoxTree::build(&ds, 1 + rng.below(40), 20);
+        let pos = invert(&tree.perm);
+        let b = a.permuted(&pos, &pos);
+        let csb = HierCsb::build(&b, &tree, &tree, 0);
+        let x: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+        let want = b.matvec_ref(&x);
+        let mut got = vec![0.0f32; n];
+        csb.spmv(&x, &mut got);
+        for (g, w) in got.iter().zip(&want) {
+            prop_assert!((g - w).abs() < 1e-3 * (1.0 + w.abs()), "{g} vs {w}");
+        }
+        // nnz conservation
+        let total: u64 = csb.blocks.iter().map(|bl| bl.nnz as u64).sum();
+        prop_assert!(total as usize == b.nnz());
+        Ok(())
+    });
+}
+
+#[test]
+fn parallel_spmv_deterministic_across_threads() {
+    check("par-deterministic", |rng, size| {
+        let n = 16 + rng.below(size);
+        let ds = random_points(rng, n, 2);
+        let a = random_csr(rng, n, 3);
+        let tree = BoxTree::build(&ds, 24, 20);
+        let pos = invert(&tree.perm);
+        let b = a.permuted(&pos, &pos);
+        let csb = HierCsb::build(&b, &tree, &tree, 0);
+        let x: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+        let mut y1 = vec![0.0f32; n];
+        let mut y2 = vec![0.0f32; n];
+        nni::spmv::multilevel::spmv_ml_par(&csb, &x, &mut y1, 2);
+        nni::spmv::multilevel::spmv_ml_par(&csb, &x, &mut y2, 7);
+        prop_assert!(y1 == y2, "thread-count nondeterminism");
+        Ok(())
+    });
+}
+
+#[test]
+fn gamma_fast_tracks_exact_on_random_profiles() {
+    check("gamma-fast", |rng, size| {
+        let n = 8 + rng.below(size / 2 + 8);
+        let pr = 1 + rng.below(4);
+        let a = random_csr(rng, n, pr);
+        let sigma = 2.0 + rng.f64() * 6.0;
+        let exact = nni::profile::gamma::gamma_exact(&a, sigma);
+        let fast = nni::profile::gamma::gamma_fast(&a, sigma);
+        prop_assert!(
+            (exact - fast).abs() <= 0.08 * exact.max(1e-12),
+            "sigma {sigma}: exact {exact} vs fast {fast}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn vector_layout_roundtrips() {
+    check("layout-roundtrip", |rng, size| {
+        let n = 1 + rng.below(size);
+        let d = 1 + rng.below(4);
+        let perm = rng.permutation(n);
+        let x: Vec<f32> = (0..n * d).map(|_| rng.f32()).collect();
+        let xt = nni::csb::layout::rows_to_tree_order(&x, d, &perm);
+        let back = nni::csb::layout::rows_from_tree_order(&xt, d, &perm);
+        prop_assert!(back == x);
+        Ok(())
+    });
+}
+
+#[test]
+fn coordinator_plan_partitions_blocks() {
+    use nni::coordinator::batcher::{BatchPlan, BatchPolicy};
+    check("plan-partition", |rng, size| {
+        let n = 32 + rng.below(size * 2);
+        let ds = random_points(rng, n, 2);
+        let pr = 2 + rng.below(6);
+        let a = random_csr(rng, n, pr);
+        let tree = BoxTree::build(&ds, 16 + rng.below(100), 20);
+        let pos = invert(&tree.perm);
+        let b = a.permuted(&pos, &pos);
+        let csb = HierCsb::build(&b, &tree, &tree, 0);
+        let policy = BatchPolicy {
+            min_nnz: rng.below(64) as u32,
+            pjrt_enabled: rng.f32() < 0.8,
+            ..Default::default()
+        };
+        let plan = BatchPlan::build(&csb, &policy);
+        prop_assert!(plan.total_blocks() == csb.blocks.len());
+        let mut seen = vec![false; csb.blocks.len()];
+        let mut mark = |t: u32| -> Result<(), String> {
+            if seen[t as usize] {
+                return Err(format!("block {t} routed twice"));
+            }
+            seen[t as usize] = true;
+            Ok(())
+        };
+        for &t in &plan.rust {
+            mark(t)?;
+        }
+        for &t in &plan.pjrt_single {
+            mark(t)?;
+        }
+        for g in &plan.pjrt_batches {
+            for &t in g {
+                mark(t)?;
+            }
+        }
+        prop_assert!(seen.iter().all(|&s| s));
+        Ok(())
+    });
+}

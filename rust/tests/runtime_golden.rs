@@ -1,0 +1,74 @@
+//! Integration: every AOT artifact, loaded through the PJRT runtime, must
+//! reproduce the golden outputs computed by the Python oracles at
+//! `make artifacts` time.  This is the end-to-end correctness proof of the
+//! L1(Pallas) → L2(JAX/HLO) → L3(Rust/PJRT) chain.
+
+use nni::runtime::ArtifactRegistry;
+
+fn registry() -> Option<ArtifactRegistry> {
+    match ArtifactRegistry::open_default() {
+        Ok(r) => Some(r),
+        Err(e) => {
+            eprintln!("skipping PJRT golden tests: {e:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn all_variant_goldens_roundtrip() {
+    let Some(reg) = registry() else { return };
+    let mut names: Vec<String> = reg.variants.keys().cloned().collect();
+    names.sort();
+    assert!(!names.is_empty(), "manifest has no variants");
+    let mut checked = 0usize;
+    for name in &names {
+        let meta = &reg.variants[name];
+        let Some(g) = &meta.golden else { continue };
+        let inputs: Vec<_> = g
+            .inputs
+            .iter()
+            .map(|(p, s)| ArtifactRegistry::load_golden_tensor(p, s).unwrap())
+            .collect();
+        let outs = reg.run(name, &inputs).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        assert_eq!(outs.len(), g.outputs.len(), "{name}: output arity");
+        for (k, ((path, shape), got)) in g.outputs.iter().zip(&outs).enumerate() {
+            let want = ArtifactRegistry::load_golden_tensor(path, shape).unwrap();
+            assert_eq!(got.shape, want.shape, "{name} out{k} shape");
+            let mut max_err = 0.0f32;
+            for (a, b) in got.data.iter().zip(&want.data) {
+                max_err = max_err.max((a - b).abs() / (1.0 + b.abs()));
+            }
+            assert!(max_err < 1e-4, "{name} out{k}: max rel err {max_err}");
+        }
+        checked += 1;
+    }
+    assert!(checked >= 10, "only {checked} goldens checked");
+}
+
+#[test]
+fn shape_validation_rejects_bad_inputs() {
+    let Some(reg) = registry() else { return };
+    let name = "tsne_d2_m256";
+    if !reg.variants.contains_key(name) {
+        return;
+    }
+    use nni::runtime::Tensor;
+    // wrong arity
+    assert!(reg.run(name, &[]).is_err());
+    // wrong shape on first input
+    let bad = vec![
+        Tensor::zeros(vec![128, 2]),
+        Tensor::zeros(vec![256, 2]),
+        Tensor::zeros(vec![256, 256]),
+        Tensor::zeros(vec![256]),
+        Tensor::zeros(vec![256]),
+    ];
+    assert!(reg.run(name, &bad).is_err());
+}
+
+#[test]
+fn unknown_variant_is_error() {
+    let Some(reg) = registry() else { return };
+    assert!(reg.get("no_such_variant").is_err());
+}
