@@ -1,0 +1,109 @@
+//! **ANN vs exact kNN construction**: build time and recall trajectory
+//! across problem sizes — the scaling argument for the `knn::ann`
+//! subsystem.  The exact backend is O(n²·d); the forest + NN-descent
+//! backend is near-linear, so the speedup column should grow roughly
+//! linearly in n while recall@k stays ≳ 0.95 on the clustered surrogates.
+//!
+//! Recall is measured against a subsampled exact oracle
+//! (`knn::ann::recall`), so it stays cheap even at sizes where the full
+//! exact build dominates the run.  Writes a JSON trajectory record
+//! (`--out`, default `BENCH_knn.json` — note cargo runs benches with cwd
+//! at the package root `rust/`, so pass `--out ../BENCH_knn.json` to
+//! refresh the repo-root record) with per-size build seconds for both
+//! backends and ANN recall@k.
+
+use nni::bench::{print_header, Table, Workload};
+use nni::knn::ann::recall::recall_at_k;
+use nni::knn::ann::AnnParams;
+use nni::knn::exact::knn_graph;
+use nni::knn::KnnBackend;
+use nni::par::pool::default_threads;
+use nni::util::cli::Args;
+use nni::util::json::{arr, num, obj, s, Json};
+use nni::util::timer::{machine_summary, time_once};
+use std::io::Write;
+
+fn main() {
+    let a = Args::new("ANN vs exact kNN build: time + recall trajectory")
+        .opt("sizes", "4096,16384,65536", "problem sizes (2^12, 2^14, 2^16)")
+        .opt("k", "10", "neighbors")
+        .opt("workload", "sift", "sift|gist")
+        .opt("seed", "42", "rng seed")
+        .opt("threads", "0", "0 = all cores")
+        .opt("recall-sample", "512", "recall queries per size")
+        .opt("out", "BENCH_knn.json", "json trajectory record path")
+        .flag("skip-exact", "skip the exact build timing (recall still measured)")
+        .parse();
+    let threads = if a.get_usize("threads") == 0 {
+        default_threads()
+    } else {
+        a.get_usize("threads")
+    };
+    let wl = match a.get("workload").to_ascii_lowercase().as_str() {
+        "gist" => Workload::Gist,
+        _ => Workload::Sift,
+    };
+    print_header(
+        "ann_vs_exact",
+        "knn::ann trajectory — PCA-forest + NN-descent vs exact brute force",
+    );
+
+    let mut table = Table::new(
+        "ann_vs_exact",
+        &["n", "k", "exact_s", "ann_s", "speedup", "recall@k"],
+    );
+    let mut records: Vec<Json> = Vec::new();
+    for &n in &a.get_usize_list("sizes") {
+        let ds = wl.make_dataset(n, a.get_u64("seed"));
+        let k = a.get_usize("k").min(n - 1);
+        let params = AnnParams::default();
+        let backend = KnnBackend::Ann(params);
+        let (g_ann, t_ann) = time_once(|| backend.build(&ds, k, threads));
+        let rep = recall_at_k(
+            &ds,
+            &g_ann,
+            a.get_usize("recall-sample"),
+            a.get_u64("seed"),
+            threads,
+        );
+        let (exact_cell, speedup_cell, exact_json) = if a.get_flag("skip-exact") {
+            ("-".to_string(), "-".to_string(), Json::Null)
+        } else {
+            let (_, t_exact) = time_once(|| knn_graph(&ds, k, threads));
+            (
+                format!("{t_exact:.2}"),
+                format!("{:.1}x", t_exact / t_ann.max(1e-9)),
+                num(t_exact),
+            )
+        };
+        table.row(vec![
+            n.to_string(),
+            k.to_string(),
+            exact_cell,
+            format!("{t_ann:.2}"),
+            speedup_cell,
+            format!("{:.4}", rep.recall),
+        ]);
+        records.push(obj(vec![
+            ("n", num(n as f64)),
+            ("k", num(k as f64)),
+            ("exact_seconds", exact_json),
+            ("ann_seconds", num(t_ann)),
+            ("recall_at_k", num(rep.recall)),
+            ("kth_dist_ratio", num(rep.dist_ratio)),
+        ]));
+    }
+    table.finish();
+
+    let doc = obj(vec![
+        ("bench", s("ann_vs_exact")),
+        ("workload", s(wl.name())),
+        ("testbed", s(&machine_summary())),
+        ("points", arr(records)),
+    ]);
+    let out = a.get("out");
+    let mut f = std::fs::File::create(&out).expect("write trajectory json");
+    writeln!(f, "{doc}").expect("write trajectory json");
+    println!("\n[saved {out}]");
+    println!("expected shape: speedup grows ~linearly in n; recall stays >= 0.95");
+}

@@ -11,8 +11,10 @@
 use crate::csb::hier::HierCsb;
 use crate::data::dataset::Dataset;
 use crate::interact::engine::Engine;
-use crate::knn::exact::knn_graph_cross;
+use crate::knn::ann::forest::{knn_cross_with_forest, PcaForest};
+use crate::knn::KnnBackend;
 use crate::order::invert;
+use crate::par::pool::ThreadPool;
 use crate::sparse::csr::Csr;
 use crate::tree::boxtree::BoxTree;
 
@@ -32,6 +34,8 @@ pub struct MeanShiftConfig {
     pub merge_radius: f64,
     pub threads: usize,
     pub leaf_cap: usize,
+    /// kNN backend for the target→source profile (exact or approximate).
+    pub knn: KnnBackend,
 }
 
 impl Default for MeanShiftConfig {
@@ -45,6 +49,7 @@ impl Default for MeanShiftConfig {
             merge_radius: 0.0,
             threads: 0,
             leaf_cap: 128,
+            knn: KnnBackend::Exact,
         }
     }
 }
@@ -74,14 +79,33 @@ fn build_structure(
     sources_ordered: &Dataset,
     stree: &BoxTree,
     cfg: &MeanShiftConfig,
+    src_forest: Option<&PcaForest>,
 ) -> Structure {
     // Target tree over current means.
     let ttree = BoxTree::build(targets, 16, 32);
     let tperm = ttree.perm.clone();
     let tpos = invert(&tperm);
-    // kNN of (reordered) targets against (already ordered) sources.
+    // kNN of (reordered) targets against (already ordered) sources, built
+    // with the configured backend.  The ANN path reuses the cached source
+    // forest (sources are stationary across refreshes).
     let targets_ordered = targets.permuted(&tperm);
-    let g = knn_graph_cross(&targets_ordered, sources_ordered, cfg.k, cfg.threads, false);
+    let g = match (&cfg.knn, src_forest) {
+        (KnnBackend::Ann(p), Some(f)) => knn_cross_with_forest(
+            &targets_ordered,
+            sources_ordered,
+            f,
+            cfg.k,
+            p,
+            cfg.threads,
+            false,
+        ),
+        // (Ann, None) would rebuild the source forest per refresh; run()
+        // always passes the cache for the Ann backend, so in practice this
+        // arm is the exact path.
+        _ => cfg
+            .knn
+            .build_cross(&targets_ordered, sources_ordered, cfg.k, cfg.threads, false),
+    };
     let a = Csr::from_knn(&g, sources_ordered.n());
     let _ = tpos;
     let csb = HierCsb::build(&a, &ttree_identity(&ttree), stree, cfg.leaf_cap);
@@ -109,6 +133,16 @@ pub fn run(data: &Dataset, cfg: &MeanShiftConfig) -> MeanShiftResult {
     let stree = BoxTree::build(data, 16, 32);
     let sources_ordered = data.permuted(&stree.perm);
 
+    // ANN backend: the source forest depends only on the stationary
+    // sources — build it once and reuse it for every profile refresh.
+    let src_forest: Option<PcaForest> = match &cfg.knn {
+        KnnBackend::Ann(p) => {
+            let pool = ThreadPool::new_or_default(cfg.threads);
+            Some(PcaForest::build(&sources_ordered, p, &pool))
+        }
+        KnnBackend::Exact => None,
+    };
+
     // Current means, original order.
     let mut means = data.clone();
     let mut iterations = 0;
@@ -117,7 +151,13 @@ pub fn run(data: &Dataset, cfg: &MeanShiftConfig) -> MeanShiftResult {
     for it in 0..cfg.max_iters {
         iterations = it + 1;
         if structure.is_none() || it % cfg.refresh_every.max(1) == 0 {
-            structure = Some(build_structure(&means, &sources_ordered, &stree, cfg));
+            structure = Some(build_structure(
+                &means,
+                &sources_ordered,
+                &stree,
+                cfg,
+                src_forest.as_ref(),
+            ));
         }
         let s = structure.as_ref().unwrap();
 
@@ -242,6 +282,22 @@ mod tests {
         let res = run(&ds, &cfg);
         assert!(res.iterations < 100, "did not converge: {}", res.iterations);
         assert_eq!(res.modes.len(), 2);
+    }
+
+    #[test]
+    fn ann_backend_finds_blob_modes() {
+        let ds = SynthSpec::blobs(300, 2, 3, 77).generate();
+        let cfg = MeanShiftConfig {
+            bandwidth: 0.25,
+            k: 24,
+            max_iters: 40,
+            refresh_every: 4,
+            threads: 4,
+            knn: KnnBackend::ann_default(),
+            ..Default::default()
+        };
+        let res = run(&ds, &cfg);
+        assert_eq!(res.modes.len(), 3, "modes: {:?}", res.modes.len());
     }
 
     #[test]

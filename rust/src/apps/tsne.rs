@@ -15,7 +15,8 @@ use crate::coordinator::Coordinator;
 use crate::csb::hier::HierCsb;
 use crate::data::dataset::Dataset;
 use crate::interact::engine::Engine;
-use crate::knn::exact::{knn_graph, KnnGraph};
+use crate::knn::exact::KnnGraph;
+use crate::knn::KnnBackend;
 use crate::order::Pipeline;
 use crate::par::pool::ThreadPool;
 use crate::runtime::ArtifactRegistry;
@@ -43,6 +44,8 @@ pub struct TsneConfig {
     pub leaf_cap: usize,
     /// Use the PJRT artifact path for dense blocks.
     pub use_pjrt: bool,
+    /// kNN backend for the sparse P profile (exact or approximate).
+    pub knn: KnnBackend,
 }
 
 impl Default for TsneConfig {
@@ -61,6 +64,7 @@ impl Default for TsneConfig {
             seed: 42,
             leaf_cap: 256,
             use_pjrt: false,
+            knn: KnnBackend::Exact,
         }
     }
 }
@@ -208,14 +212,10 @@ fn kl_divergence(csb: &HierCsb, y: &[f32], d: usize, z: f64) -> f64 {
 pub fn run(ds: &Dataset, cfg: &TsneConfig, registry: Option<ArtifactRegistry>) -> TsneResult {
     let n = ds.n();
     let d = cfg.d;
-    let pool = if cfg.threads == 0 {
-        ThreadPool::with_default()
-    } else {
-        ThreadPool::new(cfg.threads)
-    };
+    let pool = ThreadPool::new_or_default(cfg.threads);
 
-    // 1. kNN + perplexity-calibrated joint P.
-    let g = knn_graph(ds, cfg.k, pool.threads);
+    // 1. kNN (either backend) + perplexity-calibrated joint P.
+    let g = cfg.knn.build(ds, cfg.k, pool.threads);
     let p = joint_probabilities(&g, cfg.perplexity, &pool);
 
     // 2. Hierarchical reorder of the (fixed) profile.
@@ -308,6 +308,7 @@ pub fn run(ds: &Dataset, cfg: &TsneConfig, registry: Option<ArtifactRegistry>) -
 mod tests {
     use super::*;
     use crate::data::synth::SynthSpec;
+    use crate::knn::exact::knn_graph;
 
     #[test]
     fn joint_p_is_symmetric_and_normalized() {

@@ -29,11 +29,7 @@ impl Engine {
     pub fn new(csb: HierCsb, threads: usize) -> Engine {
         Engine {
             csb,
-            pool: if threads == 0 {
-                ThreadPool::with_default()
-            } else {
-                ThreadPool::new(threads)
-            },
+            pool: ThreadPool::new_or_default(threads),
         }
     }
 

@@ -1,0 +1,520 @@
+//! Randomized PCA-projection forest — the candidate generator of
+//! [`knn::ann`](crate::knn::ann).
+//!
+//! The data is projected once onto its top principal axes (reusing the
+//! blocked subspace iteration of [`embed::pca`](crate::embed::pca); when
+//! the ambient dimension is already small the raw coordinates are used, as
+//! in [`order::Pipeline`](crate::order::Pipeline)).  Each tree then splits
+//! its point set recursively by a **median cut along a jittered principal
+//! direction**: the split axis cycles through the dominant principal axes
+//! by depth (the same "split where the variance lives" idea as the
+//! [`tree::boxtree`](crate::tree::boxtree) orthant splits), and a small
+//! random rotation decorrelates the trees so their leaf buckets overlap
+//! differently.  Points sharing a leaf bucket become mutual neighbor
+//! candidates; the buckets also answer cross-set queries by routing a
+//! projected query point down each tree.
+
+use crate::data::dataset::Dataset;
+use crate::embed::pca::{pca, Pca};
+use crate::knn::ann::{insert_best, AnnParams};
+use crate::knn::exact::KnnGraph;
+use crate::par::pool::ThreadPool;
+use crate::util::rng::Rng;
+
+/// Hard recursion guard.  Median splits halve the set, so depth ≈ log2 n;
+/// the guard only binds on duplicate-heavy data where splits degenerate.
+const MAX_DEPTH: u32 = 48;
+
+/// One node of a projection tree.
+#[derive(Clone, Debug)]
+enum Node {
+    Split {
+        /// Split direction in the projected space (length = proj dim).
+        dir: Vec<f32>,
+        thr: f32,
+        left: u32,
+        right: u32,
+    },
+    Leaf {
+        bucket: u32,
+    },
+}
+
+/// A single randomized projection tree.
+#[derive(Clone, Debug)]
+pub struct ProjTree {
+    nodes: Vec<Node>,
+    root: u32,
+    /// Leaf buckets of original point indices.
+    pub buckets: Vec<Vec<u32>>,
+    /// Bucket ordinal containing each build point.
+    pub bucket_of: Vec<u32>,
+}
+
+impl ProjTree {
+    fn build(proj: &[f32], p: usize, n: usize, leaf_cap: usize, rng: &mut Rng) -> ProjTree {
+        let mut t = ProjTree {
+            nodes: Vec::new(),
+            root: 0,
+            buckets: Vec::new(),
+            bucket_of: vec![0; n],
+        };
+        let ids: Vec<u32> = (0..n as u32).collect();
+        t.root = t.build_rec(proj, p, ids, leaf_cap, 0, rng);
+        t
+    }
+
+    fn build_rec(
+        &mut self,
+        proj: &[f32],
+        p: usize,
+        ids: Vec<u32>,
+        leaf_cap: usize,
+        depth: u32,
+        rng: &mut Rng,
+    ) -> u32 {
+        if ids.len() <= leaf_cap || depth >= MAX_DEPTH {
+            return self.make_leaf(ids);
+        }
+        // Jittered principal axis: cycle the dominant axes by depth, mix in
+        // a small random rotation so trees decorrelate.
+        let axis = (depth as usize) % p;
+        let mut dir = vec![0.0f32; p];
+        dir[axis] = 1.0;
+        let jitter = 0.3 / (p as f64).sqrt();
+        for v in dir.iter_mut() {
+            *v += (jitter * rng.normal()) as f32;
+        }
+        let mut keyed: Vec<(f32, u32)> = ids
+            .iter()
+            .map(|&i| {
+                let row = &proj[i as usize * p..(i as usize + 1) * p];
+                let mut s = 0.0f32;
+                for (w, x) in dir.iter().zip(row) {
+                    s += w * x;
+                }
+                (s, i)
+            })
+            .collect();
+        let mid = keyed.len() / 2;
+        keyed.select_nth_unstable_by(mid, |a, b| {
+            a.0.partial_cmp(&b.0)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.1.cmp(&b.1))
+        });
+        let thr = keyed[mid].0;
+        let mut left = Vec::with_capacity(mid);
+        let mut right = Vec::with_capacity(keyed.len() - mid);
+        for &(key, i) in &keyed {
+            if key < thr {
+                left.push(i);
+            } else {
+                right.push(i);
+            }
+        }
+        drop(keyed);
+        if left.is_empty() || right.is_empty() {
+            // All keys coincide (duplicate-heavy span): cannot separate.
+            return self.make_leaf(ids);
+        }
+        let l = self.build_rec(proj, p, left, leaf_cap, depth + 1, rng);
+        let r = self.build_rec(proj, p, right, leaf_cap, depth + 1, rng);
+        let id = self.nodes.len() as u32;
+        self.nodes.push(Node::Split {
+            dir,
+            thr,
+            left: l,
+            right: r,
+        });
+        id
+    }
+
+    fn make_leaf(&mut self, ids: Vec<u32>) -> u32 {
+        let bucket = self.buckets.len() as u32;
+        for &i in &ids {
+            self.bucket_of[i as usize] = bucket;
+        }
+        self.buckets.push(ids);
+        let id = self.nodes.len() as u32;
+        self.nodes.push(Node::Leaf { bucket });
+        id
+    }
+
+    /// Route a projected query point to its leaf bucket's members.
+    pub fn route(&self, q: &[f32]) -> &[u32] {
+        let mut cur = self.root;
+        loop {
+            match &self.nodes[cur as usize] {
+                Node::Leaf { bucket } => return &self.buckets[*bucket as usize],
+                Node::Split {
+                    dir,
+                    thr,
+                    left,
+                    right,
+                } => {
+                    let mut s = 0.0f32;
+                    for (w, x) in dir.iter().zip(q) {
+                        s += w * x;
+                    }
+                    cur = if s < *thr { *left } else { *right };
+                }
+            }
+        }
+    }
+}
+
+/// The forest: shared projection model + `trees` randomized trees.
+/// The build-time n×p projection is dropped after construction (only the
+/// buckets and split planes are needed afterwards), so the resident cost
+/// is O(n) bucket indices, not O(n·p) coordinates.
+pub struct PcaForest {
+    /// Projection model (None when the raw dimension is already ≤ proj_dim
+    /// — the embedding step passes through, as in the ordering pipeline).
+    pca: Option<Pca>,
+    /// Projected dimension.
+    pub p: usize,
+    pub trees: Vec<ProjTree>,
+}
+
+impl PcaForest {
+    /// Build over `ds`; tree construction is parallel over trees.
+    pub fn build(ds: &Dataset, params: &AnnParams, pool: &ThreadPool) -> PcaForest {
+        let p = params.proj_dim.clamp(1, ds.d());
+        let (model, proj) = if ds.d() <= p {
+            (None, ds.raw().to_vec())
+        } else {
+            let pc = pca(ds, p, params.pca_iters.max(1), params.seed);
+            let projected = pc.project(ds, p).raw().to_vec();
+            (Some(pc), projected)
+        };
+        let n = ds.n();
+        let leaf_cap = params.leaf_cap.max(2);
+        let tree_ids: Vec<u64> = (0..params.trees.max(1) as u64).collect();
+        let trees: Vec<ProjTree> = pool
+            .map(&tree_ids, |&t| {
+                let mut rng =
+                    Rng::new(params.seed ^ t.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0x51ED);
+                Some(ProjTree::build(&proj, p, n, leaf_cap, &mut rng))
+            })
+            .into_iter()
+            .map(|t| t.expect("tree built"))
+            .collect();
+        PcaForest {
+            pca: model,
+            p,
+            trees,
+        }
+    }
+
+    /// Project arbitrary same-dimension rows with the forest's embedding.
+    pub fn project_dataset(&self, ds: &Dataset) -> Vec<f32> {
+        match &self.pca {
+            None => {
+                assert_eq!(ds.d(), self.p, "dimension mismatch for raw projection");
+                ds.raw().to_vec()
+            }
+            Some(pc) => pc.project(ds, self.p).raw().to_vec(),
+        }
+    }
+
+    /// Collect the self-candidates of build point `i`: the union of its
+    /// leaf buckets across trees, sorted, deduplicated, self removed.
+    pub fn self_candidates(&self, i: usize, out: &mut Vec<u32>) {
+        out.clear();
+        for t in &self.trees {
+            out.extend_from_slice(&t.buckets[t.bucket_of[i] as usize]);
+        }
+        out.sort_unstable();
+        out.dedup();
+        if let Ok(pos) = out.binary_search(&(i as u32)) {
+            out.remove(pos);
+        }
+    }
+}
+
+/// Squared distance between rows of two datasets.
+#[inline]
+fn sqdist_cross(a: &Dataset, i: usize, b: &Dataset, j: usize) -> f32 {
+    let mut s = 0.0f32;
+    for (x, y) in a.row(i).iter().zip(b.row(j)) {
+        let d = x - y;
+        s += d * d;
+    }
+    s
+}
+
+/// Ensure at least `k` distinct candidates, none equal to `exclude`:
+/// deterministic pseudo-random probes first, then a linear sweep backstop
+/// (only reached on tiny or degenerate inputs).
+fn pad_candidates(cand: &mut Vec<u32>, exclude: Option<u32>, m: usize, k: usize, seed: u64) {
+    if cand.len() >= k {
+        return;
+    }
+    let mut rng = Rng::new(seed);
+    let mut tries = 0usize;
+    while cand.len() < k && tries < 4 * k {
+        let j = rng.below(m) as u32;
+        if Some(j) != exclude && !cand.contains(&j) {
+            cand.push(j);
+        }
+        tries += 1;
+    }
+    let mut j = 0u32;
+    while cand.len() < k && (j as usize) < m {
+        if Some(j) != exclude && !cand.contains(&j) {
+            cand.push(j);
+        }
+        j += 1;
+    }
+}
+
+/// Per-point seed derivation for the padding RNG.
+#[inline]
+fn pad_seed(seed: u64, i: usize) -> u64 {
+    seed ^ (i as u64).wrapping_mul(0x2545_F491_4F6C_DD1D)
+}
+
+/// Shared row-filling driver for forest-seeded graphs: per point, `collect`
+/// must leave at least `k` distinct valid candidates in its `Vec` argument
+/// (clearing it first); `dist` scores one candidate.  The k best per row
+/// are written in blocks under a lock, as in `knn::exact` (contention: one
+/// lock per 64 points).
+fn fill_rows<C, D>(n: usize, k: usize, pool: &ThreadPool, collect: C, dist: D) -> KnnGraph
+where
+    C: Fn(usize, &mut Vec<u32>) + Sync,
+    D: Fn(usize, u32) -> f32 + Sync,
+{
+    let kidx = std::sync::Mutex::new(vec![0u32; n * k]);
+    let kd2 = std::sync::Mutex::new(vec![0.0f32; n * k]);
+    const QB: usize = 64;
+    let nblocks = n.div_ceil(QB);
+    pool.for_each_chunked(nblocks, 1, |b| {
+        let lo = b * QB;
+        let hi = (lo + QB).min(n);
+        let mut rows_idx = vec![0u32; (hi - lo) * k];
+        let mut rows_d2 = vec![0.0f32; (hi - lo) * k];
+        let mut cand: Vec<u32> = Vec::new();
+        for i in lo..hi {
+            collect(i, &mut cand);
+            let mut best: Vec<(f32, u32)> = Vec::with_capacity(k + 1);
+            for &j in &cand {
+                insert_best(&mut best, k, dist(i, j), j);
+            }
+            let off = (i - lo) * k;
+            for (slot, &(d, j)) in best.iter().enumerate() {
+                rows_idx[off + slot] = j;
+                rows_d2[off + slot] = d;
+            }
+        }
+        kidx.lock().unwrap()[lo * k..hi * k].copy_from_slice(&rows_idx);
+        kd2.lock().unwrap()[lo * k..hi * k].copy_from_slice(&rows_d2);
+    });
+    KnnGraph {
+        n,
+        k,
+        idx: kidx.into_inner().unwrap(),
+        dist2: kd2.into_inner().unwrap(),
+    }
+}
+
+/// Initial kNN graph from forest candidates: the k best bucket-mates per
+/// point (padded to k on degenerate buckets).
+pub fn seed_graph(
+    ds: &Dataset,
+    forest: &PcaForest,
+    k: usize,
+    params: &AnnParams,
+    pool: &ThreadPool,
+) -> KnnGraph {
+    let n = ds.n();
+    fill_rows(
+        n,
+        k,
+        pool,
+        |i, cand| {
+            forest.self_candidates(i, cand);
+            pad_candidates(cand, Some(i as u32), n, k, pad_seed(params.seed, i));
+        },
+        |i, j| ds.sqdist(i, j as usize),
+    )
+}
+
+/// Approximate cross kNN of `targets` against a **prebuilt** source forest:
+/// each target routes down every tree and the union of the reached buckets
+/// is its candidate set.  No descent pass — the migrating-target use case
+/// (mean shift) refreshes the profile every few iterations, so bucket
+/// quality is what matters, and Gaussian weights make distant misses
+/// negligible.  The forest depends only on the sources, so callers with
+/// stationary sources (mean shift) build it once and reuse it here.
+pub fn knn_cross_with_forest(
+    targets: &Dataset,
+    sources: &Dataset,
+    forest: &PcaForest,
+    k: usize,
+    params: &AnnParams,
+    threads: usize,
+    exclude_same_index: bool,
+) -> KnnGraph {
+    assert_eq!(targets.d(), sources.d());
+    let n = targets.n();
+    let m = sources.n();
+    assert!(
+        k >= 1 && k <= m - exclude_same_index as usize,
+        "k out of range"
+    );
+    let pool = ThreadPool::new_or_default(threads);
+    let tproj = forest.project_dataset(targets);
+    let p = forest.p;
+    fill_rows(
+        n,
+        k,
+        &pool,
+        |i, cand| {
+            cand.clear();
+            let q = &tproj[i * p..(i + 1) * p];
+            for t in &forest.trees {
+                cand.extend_from_slice(t.route(q));
+            }
+            cand.sort_unstable();
+            cand.dedup();
+            let exclude = if exclude_same_index && i < m {
+                if let Ok(pos) = cand.binary_search(&(i as u32)) {
+                    cand.remove(pos);
+                }
+                Some(i as u32)
+            } else {
+                None
+            };
+            pad_candidates(cand, exclude, m, k, pad_seed(params.seed, i));
+        },
+        |i, j| sqdist_cross(targets, i, sources, j as usize),
+    )
+}
+
+/// As [`knn_cross_with_forest`], building the source forest first — the
+/// one-shot entry point used by [`KnnBackend`](crate::knn::KnnBackend).
+pub fn knn_cross_ann(
+    targets: &Dataset,
+    sources: &Dataset,
+    k: usize,
+    params: &AnnParams,
+    threads: usize,
+    exclude_same_index: bool,
+) -> KnnGraph {
+    let pool = ThreadPool::new_or_default(threads);
+    let forest = PcaForest::build(sources, params, &pool);
+    knn_cross_with_forest(
+        targets,
+        sources,
+        &forest,
+        k,
+        params,
+        threads,
+        exclude_same_index,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+
+    fn params_small() -> AnnParams {
+        AnnParams {
+            trees: 4,
+            leaf_cap: 16,
+            ..AnnParams::default()
+        }
+    }
+
+    #[test]
+    fn buckets_partition_points() {
+        let ds = SynthSpec::blobs(500, 3, 4, 3).generate();
+        let pool = ThreadPool::new(2);
+        let f = PcaForest::build(&ds, &params_small(), &pool);
+        assert_eq!(f.trees.len(), 4);
+        for t in &f.trees {
+            let total: usize = t.buckets.iter().map(Vec::len).sum();
+            assert_eq!(total, 500);
+            for (b, bucket) in t.buckets.iter().enumerate() {
+                for &i in bucket {
+                    assert_eq!(t.bucket_of[i as usize], b as u32);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn route_reaches_own_bucket() {
+        // Routing a build point's own projection must reach the bucket that
+        // contains it (split keys are deterministic functions of proj).
+        let ds = SynthSpec::blobs(300, 4, 3, 7).generate();
+        let pool = ThreadPool::new(2);
+        let f = PcaForest::build(&ds, &params_small(), &pool);
+        let proj = f.project_dataset(&ds);
+        let p = f.p;
+        for i in [0usize, 37, 299] {
+            let q = &proj[i * p..(i + 1) * p];
+            for t in &f.trees {
+                let members = t.route(q);
+                assert!(members.contains(&(i as u32)), "point {i} missed its bucket");
+            }
+        }
+    }
+
+    #[test]
+    fn seed_graph_has_full_valid_rows() {
+        let ds = SynthSpec::blobs(200, 3, 4, 5).generate();
+        let pool = ThreadPool::new(4);
+        let f = PcaForest::build(&ds, &params_small(), &pool);
+        let g = seed_graph(&ds, &f, 8, &params_small(), &pool);
+        for i in 0..200 {
+            let nb = g.neighbors(i);
+            let mut sorted = nb.to_vec();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 8, "row {i} has duplicates");
+            assert!(!nb.contains(&(i as u32)));
+            for w in g.distances(i).windows(2) {
+                assert!(w[0] <= w[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn duplicate_points_terminate_and_fill() {
+        // All-identical points: splits degenerate, the leaf guard fires,
+        // and padding still delivers k distinct neighbors.
+        let ds = Dataset::new(64, 3, vec![0.5; 192]);
+        let pool = ThreadPool::new(2);
+        let f = PcaForest::build(&ds, &params_small(), &pool);
+        let g = seed_graph(&ds, &f, 5, &params_small(), &pool);
+        for i in 0..64 {
+            let mut nb = g.neighbors(i).to_vec();
+            nb.sort_unstable();
+            nb.dedup();
+            assert_eq!(nb.len(), 5);
+            assert!(!nb.contains(&(i as u32)));
+        }
+    }
+
+    #[test]
+    fn cross_query_finds_copied_points() {
+        let src = SynthSpec::blobs(300, 3, 3, 21).generate();
+        let mut rng = Rng::new(1);
+        let pick: Vec<usize> = (0..20).map(|_| rng.below(300)).collect();
+        let tgt = src.select(&pick);
+        let g = knn_cross_ann(&tgt, &src, 3, &params_small(), 2, false);
+        for (ti, &si) in pick.iter().enumerate() {
+            assert_eq!(g.neighbors(ti)[0], si as u32, "target {ti}");
+            assert_eq!(g.distances(ti)[0], 0.0);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "k out of range")]
+    fn cross_rejects_large_k() {
+        let ds = SynthSpec::blobs(10, 2, 2, 1).generate();
+        knn_cross_ann(&ds, &ds, 10, &params_small(), 1, true);
+    }
+}

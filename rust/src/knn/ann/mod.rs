@@ -1,0 +1,152 @@
+//! Approximate kNN (`knn::ann`): randomized PCA-projection forest +
+//! NN-descent refinement, near-linear in n.
+//!
+//! The exact backend's O(n²·d) scan is the hardest scaling wall between
+//! the paper's 2^17-point experiments and production sizes; this subsystem
+//! replaces it with a two-stage construction, both stages parallel over a
+//! [`ThreadPool`]:
+//!
+//! 1. **Forest seeding** ([`forest`]) — project onto the top principal
+//!    axes (reusing [`embed::pca`](crate::embed::pca)'s subspace
+//!    iteration) and build [`AnnParams::trees`] randomized trees, each
+//!    splitting by a median cut along a jittered principal direction.
+//!    Points sharing a leaf bucket seed each other's candidate lists.
+//! 2. **NN-descent** ([`descent`]) — neighbors-of-neighbors passes over
+//!    true full-dimensional distances, double-buffered for thread-count
+//!    determinism, stopping early when the update rate drops below
+//!    [`AnnParams::delta`].
+//!
+//! [`recall`] measures recall@k against [`knn::exact`](crate::knn::exact)
+//! on query subsamples; with [`AnnParams::default`] the system lands at
+//! recall@10 ≈ 0.97 on clustered SIFT-like data (enforced ≥ 0.90 by the
+//! `knn_backends` integration test).
+
+pub mod descent;
+pub mod forest;
+pub mod recall;
+
+use crate::data::dataset::Dataset;
+use crate::knn::exact::KnnGraph;
+use crate::par::pool::ThreadPool;
+
+/// Tunables of the approximate backend.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AnnParams {
+    /// Number of randomized projection trees.
+    pub trees: usize,
+    /// Leaf bucket capacity (candidate group size).
+    pub leaf_cap: usize,
+    /// Projection dimension (top principal axes; clamped to the data dim).
+    pub proj_dim: usize,
+    /// PCA subspace-iteration count.
+    pub pca_iters: usize,
+    /// Maximum NN-descent passes.
+    pub descent_iters: usize,
+    /// Early-termination threshold on the per-pass update rate.
+    pub delta: f64,
+    /// Distance evaluations per point per pass (0 = auto: 12·k).
+    pub max_candidates: usize,
+    /// Reverse-neighbor sample cap per point (0 = auto: k).
+    pub reverse_cap: usize,
+    /// Seed for axis jitter and candidate padding.
+    pub seed: u64,
+}
+
+impl Default for AnnParams {
+    fn default() -> Self {
+        AnnParams {
+            trees: 8,
+            leaf_cap: 64,
+            proj_dim: 8,
+            pca_iters: 6,
+            descent_iters: 10,
+            delta: 0.002,
+            max_candidates: 0,
+            reverse_cap: 0,
+            seed: 0xA11CE,
+        }
+    }
+}
+
+/// Insert `(d, j)` into a best-list sorted ascending by `(dist2, idx)` and
+/// bounded at `k` entries; no-op when worse than the current kth.
+pub(crate) fn insert_best(best: &mut Vec<(f32, u32)>, k: usize, d: f32, j: u32) {
+    if best.len() == k {
+        let (wd, wj) = best[k - 1];
+        if d > wd || (d == wd && j >= wj) {
+            return;
+        }
+    }
+    let pos = best.partition_point(|&(bd, bj)| bd < d || (bd == d && bj < j));
+    best.insert(pos, (d, j));
+    if best.len() > k {
+        best.pop();
+    }
+}
+
+/// Approximate self-kNN graph of `ds` (no self matches), same contract as
+/// [`knn::exact::knn_graph`](crate::knn::exact::knn_graph).
+///
+/// `threads`: worker count (0 → machine default).
+pub fn knn_graph_ann(ds: &Dataset, k: usize, params: &AnnParams, threads: usize) -> KnnGraph {
+    let n = ds.n();
+    assert!(k >= 1 && k <= n - 1, "k out of range");
+    let pool = ThreadPool::new_or_default(threads);
+    let f = forest::PcaForest::build(ds, params, &pool);
+    let seeded = forest::seed_graph(ds, &f, k, params, &pool);
+    descent::refine(ds, seeded, params, &pool)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+
+    #[test]
+    fn insert_best_keeps_k_smallest_sorted() {
+        let mut best = Vec::new();
+        for (d, j) in [(5.0, 1), (1.0, 2), (3.0, 3), (0.5, 4), (3.0, 0)] {
+            insert_best(&mut best, 3, d, j);
+        }
+        assert_eq!(best, vec![(0.5, 4), (1.0, 2), (3.0, 0)]);
+        // equal-distance, larger index than the kth: rejected
+        insert_best(&mut best, 3, 3.0, 9);
+        assert_eq!(best.len(), 3);
+        assert_eq!(best[2], (3.0, 0));
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let ds = SynthSpec::blobs(300, 4, 3, 3).generate();
+        let p = AnnParams::default();
+        let a = knn_graph_ann(&ds, 5, &p, 2);
+        let b = knn_graph_ann(&ds, 5, &p, 2);
+        assert_eq!(a.idx, b.idx);
+        let mut p2 = p.clone();
+        p2.seed = 1234;
+        let c = knn_graph_ann(&ds, 5, &p2, 2);
+        // different forest jitter is allowed to change rows (usually does
+        // on at least one point); only require validity
+        assert_eq!(c.n, 300);
+    }
+
+    #[test]
+    #[should_panic(expected = "k out of range")]
+    fn rejects_k_too_large() {
+        let ds = SynthSpec::blobs(10, 2, 2, 1).generate();
+        knn_graph_ann(&ds, 10, &AnnParams::default(), 1);
+    }
+
+    #[test]
+    fn tiny_inputs_work() {
+        let ds = SynthSpec::blobs(4, 2, 1, 2).generate();
+        let g = knn_graph_ann(&ds, 3, &AnnParams::default(), 1);
+        for i in 0..4 {
+            let mut nb = g.neighbors(i).to_vec();
+            nb.sort_unstable();
+            nb.dedup();
+            assert_eq!(nb.len(), 3);
+            assert!(!nb.contains(&(i as u32)));
+        }
+    }
+}

@@ -1,0 +1,114 @@
+//! Recall harness: measure an approximate kNN graph against the exact
+//! backend on a subsample of query points.
+//!
+//! The exact oracle is [`knn::exact::knn_graph_cross`] restricted to the
+//! sampled queries, so the cost is O(sample·n·d) rather than O(n²·d) —
+//! cheap enough to run inside benches at every size.
+//!
+//! [`knn::exact::knn_graph_cross`]: crate::knn::exact::knn_graph_cross
+
+use crate::data::dataset::Dataset;
+use crate::knn::exact::{knn_graph_cross, KnnGraph};
+use crate::util::rng::Rng;
+
+/// Result of a recall measurement.
+#[derive(Clone, Debug)]
+pub struct RecallReport {
+    pub k: usize,
+    /// Number of sampled query points.
+    pub sampled: usize,
+    /// Fraction of true k-nearest neighbors present in the approximate
+    /// rows (recall@k).
+    pub recall: f64,
+    /// Mean ratio of the approximate kth-neighbor distance to the exact
+    /// kth-neighbor distance over the sample (1.0 = perfect).
+    pub dist_ratio: f64,
+}
+
+/// recall@k of `approx` (a self-graph over `ds`) on `sample` random
+/// queries, exact neighbors recomputed as the oracle.
+pub fn recall_at_k(
+    ds: &Dataset,
+    approx: &KnnGraph,
+    sample: usize,
+    seed: u64,
+    threads: usize,
+) -> RecallReport {
+    assert_eq!(approx.n, ds.n());
+    let n = ds.n();
+    let k = approx.k;
+    let sample = sample.clamp(1, n);
+    let mut rng = Rng::new(seed);
+    let picks = rng.sample_distinct(n, sample);
+    let queries = ds.select(&picks);
+    // k+1 cross neighbors (the query itself shows up at distance 0), the
+    // self match is dropped per row below.
+    let kq = (k + 1).min(n);
+    let truth = knn_graph_cross(&queries, ds, kq, threads, false);
+
+    let mut hits = 0usize;
+    let mut total = 0usize;
+    let mut ratio = 0.0f64;
+    for (qi, &orig) in picks.iter().enumerate() {
+        let mut exact_pairs: Vec<(f32, u32)> = truth
+            .distances(qi)
+            .iter()
+            .zip(truth.neighbors(qi))
+            .filter(|&(_, &j)| j as usize != orig)
+            .map(|(&d, &j)| (d, j))
+            .collect();
+        exact_pairs.truncate(k);
+        let mut approx_sorted = approx.neighbors(orig).to_vec();
+        approx_sorted.sort_unstable();
+        for &(_, j) in &exact_pairs {
+            if approx_sorted.binary_search(&j).is_ok() {
+                hits += 1;
+            }
+        }
+        total += exact_pairs.len();
+        let exact_kth = exact_pairs.last().map(|&(d, _)| d as f64).unwrap_or(0.0);
+        let approx_kth = approx.distances(orig).last().copied().unwrap_or(0.0) as f64;
+        ratio += if exact_kth > 0.0 {
+            (approx_kth / exact_kth).sqrt()
+        } else {
+            1.0
+        };
+    }
+    RecallReport {
+        k,
+        sampled: sample,
+        recall: hits as f64 / total.max(1) as f64,
+        dist_ratio: ratio / sample as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+    use crate::knn::exact::knn_graph;
+
+    #[test]
+    fn exact_graph_scores_perfect_recall() {
+        let ds = SynthSpec::blobs(300, 4, 3, 5).generate();
+        let g = knn_graph(&ds, 5, 2);
+        let rep = recall_at_k(&ds, &g, 64, 1, 2);
+        assert_eq!(rep.sampled, 64);
+        assert!(rep.recall > 0.999, "recall {}", rep.recall);
+        assert!((rep.dist_ratio - 1.0).abs() < 1e-4, "ratio {}", rep.dist_ratio);
+    }
+
+    #[test]
+    fn corrupted_graph_scores_below_one() {
+        let ds = SynthSpec::blobs(300, 4, 3, 6).generate();
+        let mut g = knn_graph(&ds, 5, 2);
+        // Break half the rows: replace the nearest neighbor with a far index.
+        for i in 0..150 {
+            let row = i * g.k;
+            g.idx[row] = ((i + 150) % 300) as u32;
+            g.dist2[row] = f32::MAX;
+        }
+        let rep = recall_at_k(&ds, &g, 128, 2, 2);
+        assert!(rep.recall < 0.99, "corruption not detected: {}", rep.recall);
+    }
+}

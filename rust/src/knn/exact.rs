@@ -121,11 +121,7 @@ pub fn knn_graph_cross(
     let n = targets.n();
     let m = sources.n();
     assert!(k >= 1 && k <= m - exclude_same_index as usize, "k out of range");
-    let pool = if threads == 0 {
-        ThreadPool::with_default()
-    } else {
-        ThreadPool::new(threads)
-    };
+    let pool = ThreadPool::new_or_default(threads);
 
     let kidx = std::sync::Mutex::new(vec![0u32; n * k]);
     let kd2 = std::sync::Mutex::new(vec![0.0f32; n * k]);

@@ -1,4 +1,106 @@
 //! k-nearest-neighbor graph construction (the interaction matrix profile,
 //! Eq. 1: `a_ij != 0` iff `s_j ∈ kNN(t_i)`).
+//!
+//! Two backends build the same [`exact::KnnGraph`] structure:
+//!
+//! * [`exact`] — blocked brute force, O(n²·d).  Ground truth: the right
+//!   choice up to a few tens of thousands of points, for paper-figure
+//!   reproductions, and as the oracle for recall measurement.
+//! * [`ann`] — approximate, near-linear in n: a randomized PCA-projection
+//!   forest seeds candidate lists that NN-descent refines.  The right
+//!   choice beyond ~10⁴ points; recall@10 ≈ 0.97 on clustered data with
+//!   default [`ann::AnnParams`] (measured by [`ann::recall`]).
+//!
+//! [`KnnBackend`] selects between them uniformly everywhere a profile is
+//! built: the ordering pipeline ([`order::Pipeline`]), both applications
+//! (`apps::tsne`, `apps::meanshift`), the `nni` CLI (`knn` subcommand and
+//! `--knn` flags), and the `ann_vs_exact` bench.
+//!
+//! [`order::Pipeline`]: crate::order::Pipeline
 
+pub mod ann;
 pub mod exact;
+
+use crate::data::dataset::Dataset;
+use self::ann::AnnParams;
+use self::exact::KnnGraph;
+
+/// Uniform backend selector for kNN graph construction.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub enum KnnBackend {
+    /// Blocked brute force (`knn::exact`), O(n²·d).
+    #[default]
+    Exact,
+    /// PCA-projection forest + NN-descent (`knn::ann`), near-linear.
+    Ann(AnnParams),
+}
+
+impl KnnBackend {
+    /// The approximate backend with default parameters.
+    pub fn ann_default() -> KnnBackend {
+        KnnBackend::Ann(AnnParams::default())
+    }
+
+    /// Short label for logs and CLI output.
+    pub fn label(&self) -> &'static str {
+        match self {
+            KnnBackend::Exact => "exact",
+            KnnBackend::Ann(_) => "ann",
+        }
+    }
+
+    /// Self-kNN graph of `ds` (no self matches).
+    ///
+    /// `threads`: worker count (0 → machine default).
+    pub fn build(&self, ds: &Dataset, k: usize, threads: usize) -> KnnGraph {
+        match self {
+            KnnBackend::Exact => exact::knn_graph(ds, k, threads),
+            KnnBackend::Ann(p) => ann::knn_graph_ann(ds, k, p, threads),
+        }
+    }
+
+    /// Cross kNN of `targets` against `sources` (the mean-shift profile).
+    /// The approximate backend routes targets through a forest built on the
+    /// sources (see [`ann::forest::knn_cross_ann`]).
+    pub fn build_cross(
+        &self,
+        targets: &Dataset,
+        sources: &Dataset,
+        k: usize,
+        threads: usize,
+        exclude_same_index: bool,
+    ) -> KnnGraph {
+        match self {
+            KnnBackend::Exact => {
+                exact::knn_graph_cross(targets, sources, k, threads, exclude_same_index)
+            }
+            KnnBackend::Ann(p) => {
+                ann::forest::knn_cross_ann(targets, sources, k, p, threads, exclude_same_index)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+
+    #[test]
+    fn labels_and_default() {
+        assert_eq!(KnnBackend::default(), KnnBackend::Exact);
+        assert_eq!(KnnBackend::Exact.label(), "exact");
+        assert_eq!(KnnBackend::ann_default().label(), "ann");
+    }
+
+    #[test]
+    fn both_backends_share_the_graph_contract() {
+        let ds = SynthSpec::blobs(200, 3, 3, 4).generate();
+        for backend in [KnnBackend::Exact, KnnBackend::ann_default()] {
+            let g = backend.build(&ds, 6, 2);
+            assert_eq!(g.n, 200);
+            assert_eq!(g.k, 6);
+            assert_eq!(g.idx.len(), 1200);
+        }
+    }
+}

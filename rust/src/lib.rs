@@ -19,8 +19,25 @@
 //! * **Layer 1 (python/compile/kernels)** — Pallas dense cluster-pair
 //!   kernels called by Layer 2.
 //!
-//! The [`runtime`] module loads the artifacts through PJRT (`xla` crate) so
-//! the request path never touches Python.
+//! The [`runtime`] module loads the artifacts through PJRT (`xla` crate,
+//! behind the `pjrt` cargo feature) so the request path never touches
+//! Python; default builds ship a stub and run pure Rust.
+//!
+//! ## kNN backends
+//!
+//! The paper takes the kNN interaction graph as given; this crate builds
+//! it, behind [`knn::KnnBackend`]:
+//!
+//! * `Exact` — [`knn::exact`], blocked brute force, O(n²·d): ground truth
+//!   for figure reproductions and recall oracles.
+//! * `Ann(params)` — [`knn::ann`], a randomized PCA-projection forest
+//!   seeding NN-descent refinement, near-linear in n: the scaling path for
+//!   datasets beyond the paper's 2^17 ceiling (recall@10 ≈ 0.97 on
+//!   clustered data at default parameters).
+//!
+//! The backend threads uniformly through [`order::Pipeline::run_points`],
+//! both applications, the `nni` CLI (`--knn exact|ann`), and the
+//! `ann_vs_exact` bench.
 
 pub mod util;
 pub mod par;
@@ -44,7 +61,9 @@ pub mod prelude {
     pub use crate::csb::hier::HierCsb;
     pub use crate::data::dataset::Dataset;
     pub use crate::data::synth::SynthSpec;
+    pub use crate::knn::ann::{knn_graph_ann, AnnParams};
     pub use crate::knn::exact::knn_graph;
+    pub use crate::knn::KnnBackend;
     pub use crate::order::{OrderingKind, Pipeline};
     pub use crate::profile::gamma::{gamma_exact, gamma_fast};
     pub use crate::sparse::csr::Csr;

@@ -4,18 +4,26 @@
 //! Subcommands:
 //! * `info`      — print testbed + artifact registry summary
 //! * `synth`     — generate a synthetic dataset to a file
+//! * `knn`       — build a kNN graph (exact or ann), report time + recall
 //! * `reorder`   — run an ordering pipeline, report γ/β̂ and profile stats
 //! * `gamma`     — γ-score of a dataset's interaction matrix per ordering
 //! * `spmv`      — time multi-level SpMV vs CSR baselines
 //! * `tsne`      — run t-SNE end to end (hybrid PJRT path optional)
 //! * `meanshift` — run mean shift, report modes
+//!
+//! The `knn`, `reorder`, `tsne`, and `meanshift` commands accept
+//! `--knn exact|ann` plus the `--ann-*` tuning knobs (see
+//! `knn::ann::AnnParams`); `gamma` and `spmv` always use the exact
+//! backend (their outputs are figure reproductions).
 
 use nni::apps::{meanshift, tsne};
 use nni::bench::Workload;
 use nni::csb::hier::HierCsb;
 use nni::data::dataset::Dataset;
 use nni::data::synth::SynthSpec;
-use nni::knn::exact::knn_graph;
+use nni::knn::ann::recall::recall_at_k;
+use nni::knn::ann::AnnParams;
+use nni::knn::KnnBackend;
 use nni::order::{OrderingKind, Pipeline};
 use nni::profile::{beta, gamma};
 use nni::runtime::ArtifactRegistry;
@@ -35,6 +43,7 @@ fn main() {
     match cmd.as_str() {
         "info" => cmd_info(),
         "synth" => cmd_synth(argv),
+        "knn" => cmd_knn(argv),
         "reorder" => cmd_reorder(argv),
         "gamma" => cmd_gamma(argv),
         "spmv" => cmd_spmv(argv),
@@ -42,10 +51,36 @@ fn main() {
         "meanshift" => cmd_meanshift(argv),
         _ => {
             eprintln!(
-                "usage: nni <info|synth|reorder|gamma|spmv|tsne|meanshift> [options]\n\
+                "usage: nni <info|synth|knn|reorder|gamma|spmv|tsne|meanshift> [options]\n\
                  run `nni <cmd> --help` for per-command options"
             );
             std::process::exit(if cmd == "help" { 0 } else { 2 });
+        }
+    }
+}
+
+/// Shared `--knn`/`--ann-*` option block for profile-building commands.
+fn knn_opts(a: Args) -> Args {
+    a.opt("knn", "exact", "knn backend: exact|ann")
+        .opt("ann-trees", "8", "ann: projection trees")
+        .opt("ann-leaf", "64", "ann: leaf bucket capacity")
+        .opt("ann-iters", "10", "ann: max NN-descent passes")
+}
+
+/// Resolve the backend selected by the `--knn`/`--ann-*` options.
+fn knn_backend(a: &Args) -> KnnBackend {
+    match a.get("knn").to_ascii_lowercase().as_str() {
+        "exact" => KnnBackend::Exact,
+        "ann" => KnnBackend::Ann(AnnParams {
+            trees: a.get_usize("ann-trees"),
+            leaf_cap: a.get_usize("ann-leaf"),
+            descent_iters: a.get_usize("ann-iters"),
+            seed: a.get_u64("seed"),
+            ..AnnParams::default()
+        }),
+        other => {
+            eprintln!("unknown knn backend '{other}' (exact|ann)");
+            std::process::exit(2);
         }
     }
 }
@@ -116,25 +151,66 @@ fn load_or_synth(a: &Args) -> Dataset {
     workload(&a.get("workload")).make_dataset(a.get_usize("n"), a.get_u64("seed"))
 }
 
+fn cmd_knn(argv: Vec<String>) {
+    let a = knn_opts(
+        Args::new("build a kNN graph and measure backend quality")
+            .opt("input", "", "dataset file (else synthesize)")
+            .opt("workload", "sift", "sift|gist")
+            .opt("n", "4096", "points when synthesizing")
+            .opt("k", "10", "neighbors")
+            .opt("seed", "42", "rng seed")
+            .opt("threads", "0", "0 = all cores")
+            .opt("recall-sample", "256", "recall queries vs exact (0 = skip)"),
+    )
+    .parse_from(argv)
+    .unwrap_or_else(die);
+    let ds = load_or_synth(&a);
+    if ds.n() < 2 {
+        die::<()>("knn needs at least 2 points".into());
+    }
+    let k = a.get_usize("k").clamp(1, ds.n() - 1);
+    let backend = knn_backend(&a);
+    let (g, t) = timer::time_once(|| backend.build(&ds, k, a.get_usize("threads")));
+    println!(
+        "knn backend={} n={} d={} k={}  build {t:.2}s",
+        backend.label(),
+        ds.n(),
+        ds.d(),
+        k
+    );
+    let sample = a.get_usize("recall-sample");
+    if sample > 0 {
+        let rep = recall_at_k(&ds, &g, sample, a.get_u64("seed"), a.get_usize("threads"));
+        println!(
+            "recall@{k} = {:.4} over {} queries (kth-dist ratio {:.3})",
+            rep.recall, rep.sampled, rep.dist_ratio
+        );
+    }
+}
+
 fn cmd_reorder(argv: Vec<String>) {
-    let a = Args::new("ordering pipeline report")
-        .opt("input", "", "dataset file (else synthesize)")
-        .opt("workload", "sift", "sift|gist")
-        .opt("n", "4096", "points when synthesizing")
-        .opt("k", "0", "neighbors (0 = workload default)")
-        .opt("ordering", "3ddt", "rand|rcm|1d|2dlex|3dlex|3ddt|morton")
-        .opt("leaf-cap", "256", "tree leaf capacity")
-        .opt("seed", "42", "rng seed")
-        .opt("threads", "0", "0 = all cores")
-        .parse_from(argv)
-        .unwrap_or_else(die);
+    let a = knn_opts(
+        Args::new("ordering pipeline report")
+            .opt("input", "", "dataset file (else synthesize)")
+            .opt("workload", "sift", "sift|gist")
+            .opt("n", "4096", "points when synthesizing")
+            .opt("k", "0", "neighbors (0 = workload default)")
+            .opt("ordering", "3ddt", "rand|rcm|1d|2dlex|3dlex|3ddt|morton")
+            .opt("leaf-cap", "256", "tree leaf capacity")
+            .opt("seed", "42", "rng seed")
+            .opt("threads", "0", "0 = all cores"),
+    )
+    .parse_from(argv)
+    .unwrap_or_else(die);
     let ds = load_or_synth(&a);
     let k = if a.get_usize("k") == 0 {
         workload(&a.get("workload")).k()
     } else {
         a.get_usize("k")
     };
-    let (g, t_knn) = timer::time_once(|| knn_graph(&ds, k.min(ds.n() - 1), a.get_usize("threads")));
+    let backend = knn_backend(&a);
+    let (g, t_knn) =
+        timer::time_once(|| backend.build(&ds, k.min(ds.n() - 1), a.get_usize("threads")));
     let m = Csr::from_knn(&g, ds.n()).symmetrized();
     let kind = ordering(&a.get("ordering"));
     let pipe = Pipeline::new(kind.clone()).with_seed(a.get_u64("seed"));
@@ -142,7 +218,14 @@ fn cmd_reorder(argv: Vec<String>) {
     let sigma = k as f64 / 2.0;
     let gm = gamma::gamma_fast(&r.reordered, sigma);
     let bt = beta::beta_estimate(&r.reordered);
-    println!("ordering={} n={} k={} nnz={}", kind.label(), ds.n(), k, m.nnz());
+    println!(
+        "ordering={} knn={} n={} k={} nnz={}",
+        kind.label(),
+        backend.label(),
+        ds.n(),
+        k,
+        m.nnz()
+    );
     println!("knn: {t_knn:.2}s  reorder: {t_order:.2}s");
     println!("gamma(sigma={sigma}) = {gm:.2}");
     println!("beta-hat = {:.5} ({} patches, area {})", bt.beta, bt.count, bt.area);
@@ -204,19 +287,21 @@ fn cmd_spmv(argv: Vec<String>) {
 }
 
 fn cmd_tsne(argv: Vec<String>) {
-    let a = Args::new("t-SNE end to end")
-        .opt("input", "", "dataset file (else synthesize)")
-        .opt("workload", "sift", "sift|gist")
-        .opt("n", "2048", "points when synthesizing")
-        .opt("seed", "42", "rng seed")
-        .opt("iters", "400", "iterations")
-        .opt("perplexity", "30", "perplexity")
-        .opt("k", "90", "neighbors in P")
-        .opt("threads", "0", "0 = all cores")
-        .opt("out", "", "embedding output path (.nnid)")
-        .flag("pjrt", "route dense blocks to the PJRT artifacts")
-        .parse_from(argv)
-        .unwrap_or_else(die);
+    let a = knn_opts(
+        Args::new("t-SNE end to end")
+            .opt("input", "", "dataset file (else synthesize)")
+            .opt("workload", "sift", "sift|gist")
+            .opt("n", "2048", "points when synthesizing")
+            .opt("seed", "42", "rng seed")
+            .opt("iters", "400", "iterations")
+            .opt("perplexity", "30", "perplexity")
+            .opt("k", "90", "neighbors in P")
+            .opt("threads", "0", "0 = all cores")
+            .opt("out", "", "embedding output path (.nnid)")
+            .flag("pjrt", "route dense blocks to the PJRT artifacts"),
+    )
+    .parse_from(argv)
+    .unwrap_or_else(die);
     let ds = load_or_synth(&a);
     let cfg = tsne::TsneConfig {
         iters: a.get_usize("iters"),
@@ -225,6 +310,7 @@ fn cmd_tsne(argv: Vec<String>) {
         threads: a.get_usize("threads"),
         seed: a.get_u64("seed"),
         use_pjrt: a.get_flag("pjrt"),
+        knn: knn_backend(&a),
         ..Default::default()
     };
     let registry = if cfg.use_pjrt {
@@ -248,19 +334,21 @@ fn cmd_tsne(argv: Vec<String>) {
 }
 
 fn cmd_meanshift(argv: Vec<String>) {
-    let a = Args::new("mean shift mode finding")
-        .opt("input", "", "dataset file (else synthesize blobs)")
-        .opt("n", "2000", "points when synthesizing")
-        .opt("blobs", "5", "planted modes when synthesizing")
-        .opt("d", "3", "dimension when synthesizing")
-        .opt("bandwidth", "0.25", "kernel bandwidth")
-        .opt("k", "32", "profile neighbors")
-        .opt("iters", "60", "max iterations")
-        .opt("refresh", "5", "profile refresh cadence")
-        .opt("seed", "42", "rng seed")
-        .opt("threads", "0", "0 = all cores")
-        .parse_from(argv)
-        .unwrap_or_else(die);
+    let a = knn_opts(
+        Args::new("mean shift mode finding")
+            .opt("input", "", "dataset file (else synthesize blobs)")
+            .opt("n", "2000", "points when synthesizing")
+            .opt("blobs", "5", "planted modes when synthesizing")
+            .opt("d", "3", "dimension when synthesizing")
+            .opt("bandwidth", "0.25", "kernel bandwidth")
+            .opt("k", "32", "profile neighbors")
+            .opt("iters", "60", "max iterations")
+            .opt("refresh", "5", "profile refresh cadence")
+            .opt("seed", "42", "rng seed")
+            .opt("threads", "0", "0 = all cores"),
+    )
+    .parse_from(argv)
+    .unwrap_or_else(die);
     let input = a.get("input");
     let ds = if input.is_empty() {
         SynthSpec::blobs(
@@ -279,6 +367,7 @@ fn cmd_meanshift(argv: Vec<String>) {
         max_iters: a.get_usize("iters"),
         refresh_every: a.get_usize("refresh"),
         threads: a.get_usize("threads"),
+        knn: knn_backend(&a),
         ..Default::default()
     };
     let res = meanshift::run(&ds, &cfg);

@@ -15,6 +15,7 @@ pub mod rcm;
 
 use crate::data::dataset::Dataset;
 use crate::embed::pca;
+use crate::knn::KnnBackend;
 use crate::sparse::csr::Csr;
 use crate::tree::boxtree::BoxTree;
 use crate::util::rng::Rng;
@@ -121,6 +122,9 @@ pub struct Pipeline {
     pub lex_bins: u32,
     /// Seed (scattered ordering and PCA init).
     pub seed: u64,
+    /// kNN backend used by [`Pipeline::run_points`] to build the
+    /// interaction profile (exact or approximate).
+    pub knn: KnnBackend,
 }
 
 impl Pipeline {
@@ -131,6 +135,7 @@ impl Pipeline {
             pca_iters: 10,
             lex_bins: 32,
             seed: 0xC0FFEE,
+            knn: KnnBackend::Exact,
         }
     }
 
@@ -149,6 +154,12 @@ impl Pipeline {
         self
     }
 
+    /// Select the kNN backend used by [`Pipeline::run_points`].
+    pub fn with_knn(mut self, backend: KnnBackend) -> Self {
+        self.knn = backend;
+        self
+    }
+
     /// Embedding dimension this ordering needs (0 = none).
     fn embed_dim(&self) -> usize {
         match self.kind {
@@ -158,6 +169,16 @@ impl Pipeline {
             | OrderingKind::DualTree { d }
             | OrderingKind::Morton { d } => d,
         }
+    }
+
+    /// Run the full pipeline from raw points: build the symmetrized kNN
+    /// interaction profile with the configured [`KnnBackend`], then order.
+    ///
+    /// `threads`: worker count for the kNN build (0 → machine default).
+    pub fn run_points(&self, ds: &Dataset, k: usize, threads: usize) -> OrderResult {
+        let g = self.knn.build(ds, k, threads);
+        let a = Csr::from_knn(&g, ds.n()).symmetrized();
+        self.run(ds, &a)
     }
 
     /// Run the pipeline on dataset `ds` with interaction profile `a`.
@@ -288,6 +309,25 @@ mod tests {
         let a = Csr::from_knn(&g, 100).symmetrized();
         let r = Pipeline::dual_tree(3).with_leaf_cap(16).run(&ds, &a);
         assert_eq!(r.embedded.as_ref().unwrap().d(), 2);
+    }
+
+    #[test]
+    fn run_points_matches_manual_exact_build() {
+        let (ds, a) = setup(200);
+        let manual = Pipeline::dual_tree(3).run(&ds, &a);
+        let auto = Pipeline::dual_tree(3).run_points(&ds, 6, 2);
+        assert_eq!(manual.perm, auto.perm);
+        assert_eq!(manual.reordered.nnz(), auto.reordered.nnz());
+    }
+
+    #[test]
+    fn run_points_ann_backend_produces_permutation() {
+        let ds = SynthSpec::blobs(300, 3, 4, 6).generate();
+        let r = Pipeline::dual_tree(3)
+            .with_knn(KnnBackend::ann_default())
+            .run_points(&ds, 5, 2);
+        assert!(is_permutation(&r.perm));
+        assert!(r.tree.is_some());
     }
 
     #[test]

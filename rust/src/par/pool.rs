@@ -36,6 +36,16 @@ impl ThreadPool {
         ThreadPool::new(default_threads())
     }
 
+    /// `threads` workers, with the crate-wide convention that 0 means the
+    /// machine default (`ThreadPool::new(0)` alone would mean 1 thread).
+    pub fn new_or_default(threads: usize) -> Self {
+        if threads == 0 {
+            ThreadPool::with_default()
+        } else {
+            ThreadPool::new(threads)
+        }
+    }
+
     /// Dynamically balanced parallel for: `f(i)` for every `i` in
     /// `0..n`, chunks of `chunk` indices claimed atomically.
     ///

@@ -3,9 +3,14 @@
 //! Interchange is **HLO text** (not serialized protos): jax ≥ 0.5 emits
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
 //! reassigns ids (see /opt/xla-example/README.md and DESIGN.md).
-
-use anyhow::{anyhow, Context, Result};
-use std::path::Path;
+//!
+//! The `xla` crate is an external dependency the offline toolchain cannot
+//! fetch, so the PJRT backend is gated behind the `pjrt` cargo feature.
+//! The default build compiles a stub whose [`Runtime::cpu`] fails with a
+//! descriptive error: [`ArtifactRegistry`](crate::runtime::ArtifactRegistry)
+//! then fails to open, and every caller (coordinator, CLI, tests) already
+//! degrades to the pure-Rust path.  Enabling `--features pjrt` requires
+//! adding the `xla` dependency to Cargo.toml.
 
 /// A host tensor: f32 data + shape (row-major).
 #[derive(Clone, Debug, PartialEq)]
@@ -38,91 +43,152 @@ impl Tensor {
     pub fn rank(&self) -> usize {
         self.shape.len()
     }
+}
 
-    fn to_literal(&self) -> Result<xla::Literal> {
-        if self.shape.is_empty() {
-            return Ok(xla::Literal::scalar(self.data[0]));
+#[cfg(feature = "pjrt")]
+mod backend {
+    //! Real PJRT backing via the external `xla` crate.
+
+    use super::Tensor;
+    use anyhow::{anyhow, Context, Result};
+    use std::path::Path;
+
+    impl Tensor {
+        fn to_literal(&self) -> Result<xla::Literal> {
+            if self.shape.is_empty() {
+                return Ok(xla::Literal::scalar(self.data[0]));
+            }
+            let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+            xla::Literal::vec1(&self.data)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape {dims:?}: {e:?}"))
         }
-        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
-        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
+
+        fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+            let shape = lit.array_shape().map_err(|e| anyhow!("shape: {e:?}"))?;
+            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+            let data = lit
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("literal data: {e:?}"))?;
+            Ok(Tensor::new(dims, data))
+        }
     }
 
-    fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
-        let shape = lit.array_shape()?;
-        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-        let data = lit.to_vec::<f32>()?;
-        Ok(Tensor::new(dims, data))
+    /// The PJRT CPU runtime.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+    }
+
+    impl Runtime {
+        /// Create a CPU PJRT client.
+        pub fn cpu() -> Result<Runtime> {
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e:?}"))?;
+            Ok(Runtime { client })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load and compile one HLO-text artifact.
+        pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {path:?}: {e:?}"))?;
+            Ok(Executable {
+                exe,
+                name: path
+                    .file_name()
+                    .map(|s| s.to_string_lossy().into_owned())
+                    .unwrap_or_default(),
+            })
+        }
+    }
+
+    /// A compiled block program.
+    pub struct Executable {
+        exe: xla::PjRtLoadedExecutable,
+        pub name: String,
+    }
+
+    impl Executable {
+        /// Execute with host tensors; returns the tuple outputs as tensors.
+        ///
+        /// The AOT pipeline lowers every program with `return_tuple=True`,
+        /// so the single result literal is always a tuple.
+        pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+            let lits: Vec<xla::Literal> = inputs
+                .iter()
+                .map(|t| t.to_literal())
+                .collect::<Result<_>>()?;
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&lits)
+                .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
+            let out = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetch {}: {e:?}", self.name))?;
+            let parts = out
+                .to_tuple()
+                .map_err(|e| anyhow!("untuple {}: {e:?}", self.name))?;
+            parts
+                .iter()
+                .map(Tensor::from_literal)
+                .collect::<Result<Vec<_>>>()
+                .context("decode outputs")
+        }
     }
 }
 
-/// The PJRT CPU runtime.
-pub struct Runtime {
-    client: xla::PjRtClient,
-}
+#[cfg(not(feature = "pjrt"))]
+mod backend {
+    //! Stub compiled when the `pjrt` feature is off: construction fails
+    //! cleanly so every consumer degrades to the pure-Rust path.
 
-impl Runtime {
-    /// Create a CPU PJRT client.
-    pub fn cpu() -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e:?}"))?;
-        Ok(Runtime { client })
+    use super::Tensor;
+    use anyhow::{anyhow, Result};
+    use std::path::Path;
+
+    /// Placeholder PJRT runtime; never constructible in this build.
+    pub struct Runtime {
+        _private: (),
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    impl Runtime {
+        pub fn cpu() -> Result<Runtime> {
+            Err(anyhow!(
+                "PJRT runtime unavailable: built without the `pjrt` feature \
+                 (the offline toolchain ships no `xla` crate; see \
+                 rust/src/runtime/client.rs)"
+            ))
+        }
+
+        pub fn platform(&self) -> String {
+            "unavailable".into()
+        }
+
+        pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
+            Err(anyhow!("PJRT runtime unavailable: cannot load {path:?}"))
+        }
     }
 
-    /// Load and compile one HLO-text artifact.
-    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {path:?}: {e:?}"))?;
-        Ok(Executable {
-            exe,
-            name: path
-                .file_name()
-                .map(|s| s.to_string_lossy().into_owned())
-                .unwrap_or_default(),
-        })
+    /// Placeholder compiled program; never constructible in this build.
+    pub struct Executable {
+        pub name: String,
+    }
+
+    impl Executable {
+        pub fn run(&self, _inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+            Err(anyhow!("PJRT executable '{}' unavailable", self.name))
+        }
     }
 }
 
-/// A compiled block program.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    pub name: String,
-}
-
-impl Executable {
-    /// Execute with host tensors; returns the tuple outputs as tensors.
-    ///
-    /// The AOT pipeline lowers every program with `return_tuple=True`, so
-    /// the single result literal is always a tuple.
-    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        let lits: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| t.to_literal())
-            .collect::<Result<_>>()?;
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&lits)
-            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
-        let out = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch {}: {e:?}", self.name))?;
-        let parts = out
-            .to_tuple()
-            .map_err(|e| anyhow!("untuple {}: {e:?}", self.name))?;
-        parts
-            .iter()
-            .map(Tensor::from_literal)
-            .collect::<Result<Vec<_>>>()
-            .context("decode outputs")
-    }
-}
+pub use backend::{Executable, Runtime};
 
 #[cfg(test)]
 mod tests {
@@ -140,6 +206,13 @@ mod tests {
     #[should_panic]
     fn tensor_rejects_mismatched_len() {
         Tensor::new(vec![2, 2], vec![0.0; 3]);
+    }
+
+    #[test]
+    #[cfg(not(feature = "pjrt"))]
+    fn stub_runtime_fails_cleanly() {
+        let err = Runtime::cpu().err().unwrap();
+        assert!(format!("{err}").contains("pjrt"));
     }
 
     // PJRT-backed tests live in rust/tests/runtime_golden.rs (they need the

@@ -13,6 +13,7 @@ fn help_lists_subcommands() {
     let text = String::from_utf8_lossy(&out.stderr) + String::from_utf8_lossy(&out.stdout);
     assert!(text.contains("tsne"));
     assert!(text.contains("meanshift"));
+    assert!(text.contains("knn"));
 }
 
 #[test]
@@ -59,6 +60,35 @@ fn synth_reorder_roundtrip() {
     assert!(text.contains("gamma"), "{text}");
     assert!(text.contains("csb:"), "{text}");
     std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn knn_subcommand_reports_recall() {
+    let out = nni()
+        .args([
+            "knn", "--n", "400", "--k", "5", "--knn", "ann", "--recall-sample", "64",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("backend=ann"), "{text}");
+    assert!(text.contains("recall@5"), "{text}");
+}
+
+#[test]
+fn reorder_accepts_ann_backend() {
+    let out = nni()
+        .args([
+            "reorder", "--n", "512", "--k", "8", "--knn", "ann", "--ordering", "3ddt",
+            "--leaf-cap", "64",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("knn=ann"), "{text}");
+    assert!(text.contains("gamma"), "{text}");
 }
 
 #[test]

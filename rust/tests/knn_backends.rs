@@ -1,0 +1,116 @@
+//! kNN backend coverage: `KnnGraph` invariants for both backends
+//! (property-tested), ANN recall vs exact on the clustered 4k-point
+//! acceptance dataset, thread-count determinism, and the ordering-pipeline
+//! acceptance check (an ANN-built profile must score within 10% of the
+//! exact backend's γ on the same dataset).
+
+use nni::data::synth::SynthSpec;
+use nni::knn::ann::{knn_graph_ann, AnnParams};
+use nni::knn::exact::{knn_graph, KnnGraph};
+use nni::knn::KnnBackend;
+use nni::order::Pipeline;
+use nni::prelude::Dataset;
+use nni::profile::gamma;
+use nni::prop_assert;
+use nni::util::prop::check_with;
+
+/// The KnnGraph contract: bounds, no self loops, no duplicates, ascending
+/// distances that match the data.
+fn graph_invariants(ds: &Dataset, g: &KnnGraph, n: usize, k: usize) -> Result<(), String> {
+    prop_assert!(g.n == n && g.k == k, "shape {}x{} != {n}x{k}", g.n, g.k);
+    for i in 0..n {
+        let nb = g.neighbors(i);
+        let dd = g.distances(i);
+        let mut sorted = nb.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        prop_assert!(sorted.len() == k, "row {i}: duplicate neighbors");
+        for (&j, &d) in nb.iter().zip(dd) {
+            prop_assert!((j as usize) < n, "row {i}: index {j} out of bounds");
+            prop_assert!(j as usize != i, "row {i}: self neighbor");
+            let want = ds.sqdist(i, j as usize);
+            prop_assert!(
+                (d - want).abs() <= 1e-4 * (1.0 + want.abs()),
+                "row {i}: stored dist {d} != computed {want}"
+            );
+        }
+        for w in dd.windows(2) {
+            prop_assert!(w[0] <= w[1], "row {i}: distances not ascending");
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn knn_graph_invariants_hold_for_both_backends() {
+    check_with("knn-invariants", 24, 160, |rng, size| {
+        let n = 16 + rng.below(size);
+        let d = 2 + rng.below(6);
+        let k = 1 + rng.below(8);
+        let ds = SynthSpec::blobs(n, d, 3, rng.next_u64()).generate();
+        let ann = KnnBackend::Ann(AnnParams {
+            trees: 4,
+            leaf_cap: 16,
+            descent_iters: 4,
+            ..AnnParams::default()
+        });
+        for backend in [KnnBackend::Exact, ann] {
+            let g = backend.build(&ds, k, 2);
+            graph_invariants(&ds, &g, n, k)?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn ann_threads_do_not_change_the_graph() {
+    let ds = SynthSpec::sift_like(1500, 3).generate();
+    let p = AnnParams::default();
+    let a = knn_graph_ann(&ds, 8, &p, 1);
+    let b = knn_graph_ann(&ds, 8, &p, 8);
+    assert_eq!(a.idx, b.idx);
+    assert_eq!(a.dist2, b.dist2);
+}
+
+/// Acceptance: recall@10 ≥ 0.90 vs exact on a 4k-point clustered dataset
+/// (default AnnParams land ≈ 0.97; the margin absorbs seed variation).
+#[test]
+fn ann_recall_at_10_exceeds_090_on_clustered_4k() {
+    let ds = SynthSpec::sift_like(4096, 7).generate();
+    let k = 10;
+    let approx = knn_graph_ann(&ds, k, &AnnParams::default(), 0);
+    let exact = knn_graph(&ds, k, 0);
+    let mut hits = 0usize;
+    for i in 0..ds.n() {
+        let mut truth = exact.neighbors(i).to_vec();
+        truth.sort_unstable();
+        for &j in approx.neighbors(i) {
+            if truth.binary_search(&j).is_ok() {
+                hits += 1;
+            }
+        }
+    }
+    let recall = hits as f64 / (ds.n() * k) as f64;
+    assert!(recall >= 0.90, "ann recall@10 = {recall:.4} < 0.90");
+}
+
+/// Acceptance: the ANN-built profile must order essentially as well as the
+/// exact one — γ within 10% on the same dataset (the embedding, tree, and
+/// permutation are identical; only profile edges differ).
+#[test]
+fn ann_ordering_gamma_within_10pct_of_exact() {
+    let ds = SynthSpec::sift_like(4096, 11).generate();
+    let k = 10;
+    let sigma = k as f64 / 2.0;
+    let score = |backend: KnnBackend| {
+        let r = Pipeline::dual_tree(3).with_knn(backend).run_points(&ds, k, 0);
+        gamma::gamma_fast(&r.reordered, sigma)
+    };
+    let g_exact = score(KnnBackend::Exact);
+    let g_ann = score(KnnBackend::ann_default());
+    let rel = (g_exact - g_ann).abs() / g_exact;
+    assert!(
+        rel <= 0.10,
+        "gamma exact {g_exact:.2} vs ann {g_ann:.2} (rel diff {rel:.3})"
+    );
+}

@@ -1,0 +1,156 @@
+//! Minimal, dependency-free stand-in for the `anyhow` error crate.
+//!
+//! The build environment is fully offline (no crates.io access), so this
+//! vendored shim provides exactly the subset the `nni` runtime layer uses:
+//! [`Error`], [`Result`], the [`anyhow!`] macro, and the [`Context`]
+//! extension trait.  Semantics match `anyhow` where the callers rely on
+//! them: `{}` formats the outermost message only, `{:#}` prints the whole
+//! context chain (`outer: inner: root`), and any `std::error::Error` value
+//! converts into [`Error`] via `?`.
+
+use std::fmt;
+
+/// An error message with an optional chained cause.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Create an error from a displayable message.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error {
+            msg: m.to_string(),
+            source: None,
+        }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, c: C) -> Error {
+        Error {
+            msg: c.to_string(),
+            source: Some(Box::new(self)),
+        }
+    }
+
+    /// The innermost message of the chain.
+    pub fn root_cause(&self) -> &str {
+        let mut e = self;
+        while let Some(s) = &e.source {
+            e = s;
+        }
+        &e.msg
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if f.alternate() {
+            let mut cur = &self.source;
+            while let Some(e) = cur {
+                write!(f, ": {}", e.msg)?;
+                cur = &e.source;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self:#}")
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // Flatten the std error's source chain into our layered form.
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut err: Option<Error> = None;
+        for msg in msgs.into_iter().rev() {
+            err = Some(Error {
+                msg,
+                source: err.map(Box::new),
+            });
+        }
+        err.unwrap()
+    }
+}
+
+/// `anyhow`-style result alias (error type defaults to [`Error`]).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Attach context to the error branch of a result.
+pub trait Context<T> {
+    /// Wrap the error with a fixed context message.
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    /// Wrap the error with a lazily evaluated context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    Error: From<E>,
+{
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_plain_vs_alternate() {
+        let e = Error::msg("root").context("mid").context("top");
+        assert_eq!(format!("{e}"), "top");
+        assert_eq!(format!("{e:#}"), "top: mid: root");
+        assert_eq!(e.root_cause(), "root");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn io_fail() -> Result<()> {
+            std::fs::read("/nonexistent-path-xyz/f")?;
+            Ok(())
+        }
+        let err = io_fail().unwrap_err();
+        assert!(!format!("{err}").is_empty());
+    }
+
+    #[test]
+    fn context_on_io_result() {
+        let r: std::io::Result<()> = Err(std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            "gone",
+        ));
+        let err = r.with_context(|| format!("reading {}", "x")).unwrap_err();
+        assert_eq!(format!("{err}"), "reading x");
+        assert!(format!("{err:#}").contains("gone"));
+    }
+
+    #[test]
+    fn macro_formats() {
+        let e = anyhow!("bad {} at {}", "value", 3);
+        assert_eq!(format!("{e}"), "bad value at 3");
+    }
+}
