@@ -21,8 +21,10 @@ use nni::par::pool::default_threads;
 use nni::sparse::gen;
 use nni::spmv;
 use nni::util::cli::Args;
+use nni::util::json::{arr, num, obj, s, Json};
 use nni::util::rng::Rng;
-use nni::util::timer::bench_default;
+use nni::util::timer::{bench_default, machine_summary};
+use std::io::Write;
 
 fn main() {
     let a = Args::new("Fig. 3: attractive-force time ratios per ordering")
@@ -30,13 +32,22 @@ fn main() {
         .opt("seed", "42", "rng seed")
         .opt("threads", "0", "0 = all cores")
         .opt("block-cap", "2048", "CSB block capacity")
+        .opt("rhs", "1,2,4,8", "multi-RHS sweep batch widths")
+        .opt("rhs-n", "4096", "problem size of the multi-RHS sweep")
+        .opt(
+            "interact-out",
+            "../BENCH_interact.json",
+            "multi-RHS sweep json record (cargo bench cwd is rust/, so the default lands at the repo root)",
+        )
         .flag("gist", "also run the GIST-like workload (slow kNN at D=960)")
+        .flag("smoke", "CI smoke mode: tiny sizes, same code paths")
         .parse();
     let threads = if a.get_usize("threads") == 0 {
         default_threads()
     } else {
         a.get_usize("threads")
     };
+    let smoke = a.get_flag("smoke");
     print_header(
         "fig3_throughput",
         "Fig. 3 — t-SNE attractive force, seq + parallel, normalized to scattered-seq",
@@ -53,13 +64,14 @@ fn main() {
     let colrefs: Vec<&str> = cols.iter().map(String::as_str).collect();
     let mut table = Table::new("fig3_throughput", &colrefs);
 
-    let workloads: Vec<Workload> = if a.get_flag("gist") {
+    let workloads: Vec<Workload> = if a.get_flag("gist") && !smoke {
         vec![Workload::Sift, Workload::Gist]
     } else {
         vec![Workload::Sift]
     };
+    let sizes = if smoke { vec![512] } else { a.get_usize_list("sizes") };
     for wl in workloads {
-        for &n in &a.get_usize_list("sizes") {
+        for &n in &sizes {
             let (ds, m) = wl.make(n, a.get_u64("seed"), threads);
             // Roofline: banded vs scattered CSR SpMV at matched sparsity
             // (the paper's dotted gray line, measured on this machine).
@@ -140,4 +152,138 @@ fn main() {
     println!("\nvalues are speedups over scattered-sequential (paper's reference line).");
     println!("expected shape: 3D DT highest among orderings; sequential DT approaches");
     println!("the roofline column; parallel values scale with available cores.");
+
+    let rhs_n = if smoke { 512 } else { a.get_usize("rhs-n") };
+    multi_rhs_sweep(
+        rhs_n,
+        &a.get_usize_list("rhs"),
+        a.get_u64("seed"),
+        threads,
+        &a.get("interact-out"),
+    );
+}
+
+/// Multi-RHS sweep (EXPERIMENTS.md §Multi-RHS): per-RHS throughput of the
+/// batched block kernels vs the k-fold scalar path on the clustered
+/// SIFT-like dataset, for the structural SpMM and the fused Gaussian
+/// kernel.  Writes the `BENCH_interact.json` record.
+fn multi_rhs_sweep(n: usize, ks: &[usize], seed: u64, threads: usize, out_path: &str) {
+    println!("\n# multi-RHS sweep — n={n} clustered SIFT-like, 3D dual-tree ordering");
+    let wl = Workload::Sift;
+    let (ds, m) = wl.make(n, seed, threads);
+    let r = pipeline_for(&OrderingKind::DualTree { d: 3 }, seed).run(&ds, &m);
+    let tree = r.tree.as_ref().unwrap();
+    // PJRT-path dense threshold: the micro-GEMM wants dense blocks.
+    let csb = HierCsb::build_with(&r.reordered, tree, tree, 256, 0.25);
+    println!("# {}", csb.describe());
+    let coords = ds.permuted(&r.perm).raw().to_vec();
+    let d = ds.d();
+    let inv_h2 = 0.5f32;
+    let engine_par = Engine::new(csb.clone(), threads);
+    let engine_seq = Engine::new(csb.clone(), 1);
+    let mut rng = Rng::new(seed ^ 0xbeef);
+    let mut table = Table::new(
+        "fig3_multirhs",
+        &["kernel", "n", "k", "scalar_ms", "batched_ms", "per_rhs_speedup", "par_batched_ms"],
+    );
+    let mut records: Vec<Json> = Vec::new();
+    for &k in ks {
+        let x1: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+        let mut y1 = vec![0.0f32; n];
+        let xk: Vec<f32> = (0..n * k).map(|_| rng.f32()).collect();
+        let mut yk = vec![0.0f32; n * k];
+
+        // Structural SpMM vs k scalar SpMVs.
+        let t_scalar = bench_default(|| {
+            for _ in 0..k {
+                spmv::multilevel::spmv_ml_seq(&csb, &x1, &mut y1);
+            }
+        });
+        let t_batched = bench_default(|| spmv::multilevel::spmm_ml_seq(&csb, &xk, &mut yk, k));
+        let t_par =
+            bench_default(|| spmv::multilevel::spmm_ml_par(&csb, &xk, &mut yk, k, threads));
+        push_point(
+            &mut table,
+            &mut records,
+            "spmm",
+            n,
+            k,
+            t_scalar.robust_min_s,
+            t_batched.robust_min_s,
+            t_par.robust_min_s,
+        );
+
+        // Fused Gaussian kernel: k queries, weights computed once per entry.
+        let t_gscalar = bench_default(|| {
+            for _ in 0..k {
+                engine_seq.gauss_apply(&coords, &coords, d, inv_h2, &x1, &mut y1);
+            }
+        });
+        let t_gbatched = bench_default(|| {
+            engine_seq.gauss_apply_multi(&coords, &coords, d, inv_h2, &xk, k, &mut yk)
+        });
+        let t_gpar = bench_default(|| {
+            engine_par.gauss_apply_multi(&coords, &coords, d, inv_h2, &xk, k, &mut yk)
+        });
+        push_point(
+            &mut table,
+            &mut records,
+            "gauss",
+            n,
+            k,
+            t_gscalar.robust_min_s,
+            t_gbatched.robust_min_s,
+            t_gpar.robust_min_s,
+        );
+    }
+    table.finish();
+    let doc = obj(vec![
+        ("bench", s("fig3_multirhs")),
+        ("workload", s(wl.name())),
+        ("n", num(n as f64)),
+        ("status", s("measured")),
+        ("testbed", s(&machine_summary())),
+        (
+            "expected_shape",
+            s("per_rhs_speedup grows with k; acceptance bar: gauss k=8 >= 2x (spmm merely > 1) on the clustered dataset; k=1 rows are the parity check"),
+        ),
+        ("points", arr(records)),
+    ]);
+    let mut f = std::fs::File::create(out_path).expect("write interact json");
+    writeln!(f, "{doc}").expect("write interact json");
+    println!("\n[saved {out_path}]");
+    println!("per_rhs_speedup = (k x scalar time) / batched time; k=1 rows are the parity check.");
+}
+
+/// One sweep row + json record.
+#[allow(clippy::too_many_arguments)]
+fn push_point(
+    table: &mut Table,
+    records: &mut Vec<Json>,
+    kernel: &str,
+    n: usize,
+    k: usize,
+    scalar_s: f64,
+    batched_s: f64,
+    par_s: f64,
+) {
+    let speedup = scalar_s / batched_s;
+    table.row(vec![
+        kernel.to_string(),
+        n.to_string(),
+        k.to_string(),
+        format!("{:.3}", scalar_s * 1e3),
+        format!("{:.3}", batched_s * 1e3),
+        format!("{speedup:.2}"),
+        format!("{:.3}", par_s * 1e3),
+    ]);
+    records.push(obj(vec![
+        ("kernel", s(kernel)),
+        ("n", num(n as f64)),
+        ("k", num(k as f64)),
+        ("scalar_seconds", num(scalar_s)),
+        ("batched_seconds", num(batched_s)),
+        ("par_batched_seconds", num(par_s)),
+        ("per_rhs_speedup", num(speedup)),
+    ]));
 }

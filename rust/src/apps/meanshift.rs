@@ -7,6 +7,12 @@
 //! the kNN profile + target tree + CSB structure are rebuilt every
 //! `refresh_every` iterations; in between, only values are recomputed
 //! (fused with the multiply by the engine).
+//!
+//! Each step is one batched d+1-column block product
+//! ([`Engine::meanshift_step`]): dense blocks multiply the materialized
+//! Gaussian weights against the augmented sources `[s | 1]`, so the
+//! numerator coordinates and the denominator row sums come out of a single
+//! micro-GEMM pass per block.
 
 use crate::csb::hier::HierCsb;
 use crate::data::dataset::Dataset;

@@ -8,6 +8,12 @@
 //! paper accelerates the attractive term; the repulsive term follows the
 //! reference algorithm.
 //!
+//! The attractive force is multi-RHS under the hood: dense blocks of P run
+//! the batched micro-GEMM over the d embedding columns (plus a fused
+//! row-sum column) via `interact::engine::tsne_block`, so raising
+//! [`TsneConfig::d`] widens the per-block GEMM instead of adding scalar
+//! matvec passes.
+//!
 //! [`Coordinator`]: crate::coordinator::Coordinator
 
 use crate::coordinator::batcher::BatchPolicy;

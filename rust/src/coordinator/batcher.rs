@@ -1,5 +1,7 @@
 //! Routing and batching policy: decides, per leaf block, which backend runs
-//! it and groups PJRT-bound blocks into fixed-shape batches.
+//! it and groups PJRT-bound blocks into fixed-shape batches, plus the
+//! query-side batcher that turns singleton requests into whole multi-RHS
+//! batches for the engine.
 //!
 //! Policy (tunable via [`BatchPolicy`]):
 //! * a block goes to PJRT iff it is stored dense, fits the artifact tile
@@ -11,6 +13,7 @@
 //! * everything else runs on the fused Rust path.
 
 use crate::csb::hier::HierCsb;
+use crate::interact::engine::Engine;
 
 /// Where a block executes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -95,6 +98,113 @@ impl BatchPlan {
     }
 }
 
+/// Accumulates single-RHS Gaussian queries and drains them through
+/// [`Engine::gauss_apply_multi`] in whole `batch`-sized groups, so the
+/// engine always sees multi-RHS work instead of a stream of singleton
+/// matvecs.  The kernel weights are then computed once per profile entry
+/// per group rather than once per query — the serving-path face of the
+/// multi-RHS block kernels.
+#[derive(Clone, Debug)]
+pub struct QueryBatcher {
+    batch: usize,
+    pending: Vec<Vec<f32>>,
+}
+
+impl QueryBatcher {
+    pub fn new(batch: usize) -> QueryBatcher {
+        QueryBatcher {
+            batch: batch.max(1),
+            pending: Vec::new(),
+        }
+    }
+
+    /// Enqueue one charge vector (length = source count); returns its
+    /// submission slot (results come back in submission order).
+    pub fn submit(&mut self, x: Vec<f32>) -> usize {
+        self.pending.push(x);
+        self.pending.len() - 1
+    }
+
+    /// Queries waiting for a flush.
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// True when at least one full batch is waiting.
+    pub fn ready(&self) -> bool {
+        self.pending.len() >= self.batch
+    }
+
+    /// Drain all pending queries through [`QueryBatcher::run_slate`].
+    /// Returns the per-query potential vectors in submission order and the
+    /// number of engine calls made.
+    pub fn flush(
+        &mut self,
+        engine: &Engine,
+        tcoords: &[f32],
+        scoords: &[f32],
+        d: usize,
+        inv_h2: f32,
+    ) -> (Vec<Vec<f32>>, usize) {
+        let queries = std::mem::take(&mut self.pending);
+        Self::run_slate(self.batch, engine, &queries, tcoords, scoords, d, inv_h2)
+    }
+
+    /// Group a borrowed slate of queries `batch` at a time through one
+    /// multi-RHS engine call per group ([`gauss_group`]) — the single home
+    /// of the query-grouping policy, shared by [`QueryBatcher::flush`] and
+    /// `Coordinator::gauss_serve`.  Returns per-query potentials in slate
+    /// order and the number of engine calls made.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_slate(
+        batch: usize,
+        engine: &Engine,
+        queries: &[Vec<f32>],
+        tcoords: &[f32],
+        scoords: &[f32],
+        d: usize,
+        inv_h2: f32,
+    ) -> (Vec<Vec<f32>>, usize) {
+        let batch = batch.max(1);
+        let mut out = Vec::with_capacity(queries.len());
+        let mut calls = 0usize;
+        for group in queries.chunks(batch) {
+            out.extend(gauss_group(engine, group, tcoords, scoords, d, inv_h2));
+            calls += 1;
+        }
+        (out, calls)
+    }
+}
+
+/// Run one whole query group as a single multi-RHS engine call:
+/// interleave the group into the row-major `n x k` RHS layout, apply
+/// [`Engine::gauss_apply_multi`] once, and de-interleave the potentials
+/// (one vector per query, in group order).
+pub fn gauss_group(
+    engine: &Engine,
+    group: &[Vec<f32>],
+    tcoords: &[f32],
+    scoords: &[f32],
+    d: usize,
+    inv_h2: f32,
+) -> Vec<Vec<f32>> {
+    let n_rows = engine.csb.rows;
+    let n_cols = engine.csb.cols;
+    let k = group.len();
+    let mut x = vec![0.0f32; n_cols * k];
+    for (j, q) in group.iter().enumerate() {
+        assert_eq!(q.len(), n_cols, "query length != source count");
+        for (i, &v) in q.iter().enumerate() {
+            x[i * k + j] = v;
+        }
+    }
+    let mut y = vec![0.0f32; n_rows * k];
+    engine.gauss_apply_multi(tcoords, scoords, d, inv_h2, &x, k, &mut y);
+    (0..k)
+        .map(|j| (0..n_rows).map(|i| y[i * k + j]).collect())
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -171,6 +281,42 @@ mod tests {
         );
         // clustered data must produce at least one dense PJRT-eligible block
         assert!(loose.pjrt_block_count() > 0, "{}", m.describe());
+    }
+
+    #[test]
+    fn query_batcher_matches_per_query_path() {
+        use crate::util::rng::Rng;
+        let n = 300;
+        let ds = SynthSpec::blobs(n, 3, 4, 23).generate();
+        let g = knn_graph(&ds, 8, 2);
+        let a = Csr::from_knn(&g, n).symmetrized();
+        let r = Pipeline::dual_tree(3).run(&ds, &a);
+        let tree = r.tree.as_ref().unwrap();
+        let eng = Engine::new(HierCsb::build_with(&r.reordered, tree, tree, 32, 0.25), 2);
+        let coords = ds.permuted(&r.perm).raw().to_vec();
+        let inv_h2 = 0.7f32;
+        let mut rng = Rng::new(13);
+        let queries: Vec<Vec<f32>> = (0..11)
+            .map(|_| (0..n).map(|_| rng.f32() - 0.5).collect())
+            .collect();
+        // batch of 4 → groups 4,4,3
+        let mut qb = QueryBatcher::new(4);
+        for q in &queries {
+            qb.submit(q.clone());
+        }
+        assert!(qb.ready());
+        assert_eq!(qb.pending_len(), 11);
+        let (got, calls) = qb.flush(&eng, &coords, &coords, 3, inv_h2);
+        assert_eq!(calls, 3);
+        assert_eq!(got.len(), queries.len());
+        assert_eq!(qb.pending_len(), 0);
+        for (q, batched) in queries.iter().zip(&got) {
+            let mut want = vec![0.0f32; n];
+            eng.gauss_apply(&coords, &coords, 3, inv_h2, q, &mut want);
+            for (g, w) in batched.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-4 * (1.0 + w.abs()), "{g} vs {w}");
+            }
+        }
     }
 
     #[test]

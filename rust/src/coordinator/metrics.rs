@@ -10,6 +10,11 @@ pub struct Metrics {
     pub pjrt_single_calls: u64,
     pub pjrt_batched_calls: u64,
     pub pjrt_blocks: u64,
+    /// Queries served through the multi-RHS batched path (`gauss_serve`).
+    pub batched_queries: u64,
+    /// Whole-batch engine calls made by `gauss_serve` (distinct from
+    /// `iterations`, which counts t-SNE steps).
+    pub serve_calls: u64,
     pub nnz_processed: u64,
     pub rust_seconds: f64,
     pub pjrt_seconds: f64,
@@ -41,12 +46,14 @@ impl Metrics {
     pub fn summary(&self) -> String {
         format!(
             "iters={} rust_blocks={} pjrt_calls={}(+{} batched) pjrt_blocks={} \
-             edges={} rust={:.3}s pjrt={:.3}s ({:.2e} edges/s)",
+             batched_queries={}/{} edges={} rust={:.3}s pjrt={:.3}s ({:.2e} edges/s)",
             self.iterations,
             self.rust_blocks,
             self.pjrt_single_calls,
             self.pjrt_batched_calls,
             self.pjrt_blocks,
+            self.batched_queries,
+            self.serve_calls,
             self.nnz_processed,
             self.rust_seconds,
             self.pjrt_seconds,

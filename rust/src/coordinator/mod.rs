@@ -16,6 +16,6 @@ pub mod batcher;
 pub mod metrics;
 pub mod scheduler;
 
-pub use batcher::{BatchPlan, Route};
+pub use batcher::{BatchPlan, QueryBatcher, Route};
 pub use metrics::Metrics;
 pub use scheduler::Coordinator;

@@ -10,10 +10,10 @@
 //! embedding dimension with no lowered variant) the coordinator degrades to
 //! the pure-Rust path and records it in [`Metrics`].
 
-use crate::coordinator::batcher::{BatchPlan, BatchPolicy, Route};
+use crate::coordinator::batcher::{BatchPlan, BatchPolicy, QueryBatcher, Route};
 use crate::coordinator::metrics::Metrics;
 use crate::csb::hier::{HierCsb, LeafBlock};
-use crate::interact::engine::Engine;
+use crate::interact::engine::{tsne_block, BlockScratch, Engine};
 use crate::runtime::{ArtifactRegistry, Tensor};
 
 /// Hybrid Rust + PJRT interaction coordinator.
@@ -111,8 +111,9 @@ impl Coordinator {
                         sp.len() * d,
                     )
                 };
+                let mut scratch = BlockScratch::default();
                 for &t in &rust_by_target[tl] {
-                    tsne_block_rust(csb, t as usize, y, d, seg);
+                    tsne_block(csb, t as usize, y, d, &mut scratch, seg);
                 }
             });
         });
@@ -131,6 +132,7 @@ impl Coordinator {
         let have_batch = registry.variants.contains_key(&batch_name);
 
         Metrics::time_phase(&mut pjrt_secs, || {
+            let mut scratch = BlockScratch::default();
             for &t in &self.plan.pjrt_single {
                 let b = &csb.blocks[t as usize];
                 if have_single {
@@ -149,7 +151,7 @@ impl Coordinator {
                 // fallback: rust
                 let sp = b.rows;
                 let seg = &mut force[sp.lo as usize * d..sp.hi as usize * d];
-                tsne_block_rust(csb, t as usize, y, d, seg);
+                tsne_block(csb, t as usize, y, d, &mut scratch, seg);
                 self.metrics.rust_blocks += 1;
             }
             for group in &self.plan.pjrt_batches {
@@ -172,41 +174,45 @@ impl Coordinator {
                 for &t in group {
                     let sp = csb.blocks[t as usize].rows;
                     let seg = &mut force[sp.lo as usize * d..sp.hi as usize * d];
-                    tsne_block_rust(csb, t as usize, y, d, seg);
+                    tsne_block(csb, t as usize, y, d, &mut scratch, seg);
                     self.metrics.rust_blocks += 1;
                 }
             }
         });
         self.metrics.pjrt_seconds += pjrt_secs;
     }
-}
 
-/// Fused Rust t-SNE attractive kernel for one block, accumulating into the
-/// target segment (`seg` = rows of the block's target leaf span; the block's
-/// rows are offset within it).
-fn tsne_block_rust(csb: &HierCsb, t: usize, y: &[f32], d: usize, seg: &mut [f32]) {
-    // seg covers the *target leaf* span; block rows start at b.rows.lo
-    // relative to that leaf's lo only when the leaf IS the block row span.
-    // Blocks always span exactly one target leaf, so the offsets match.
-    let b = &csb.blocks[t];
-    let r0 = b.rows.lo as usize;
-    let c0 = b.cols.lo as usize;
-    let seg_rows = seg.len() / d;
-    debug_assert_eq!(seg_rows, b.rows.len());
-    csb.for_each_nz(t, |r, c, p| {
-        let yi = &y[(r0 + r) * d..(r0 + r + 1) * d];
-        let yj = &y[(c0 + c) * d..(c0 + c + 1) * d];
-        let mut d2 = 0.0f32;
-        for k in 0..d {
-            let t = yi[k] - yj[k];
-            d2 += t * t;
-        }
-        let w = p / (1.0 + d2);
-        let out = &mut seg[r * d..(r + 1) * d];
-        for k in 0..d {
-            out[k] += w * (yi[k] - yj[k]);
-        }
-    });
+    /// Serve a slate of Gaussian queries through the engine's multi-RHS
+    /// kernel: queries are grouped `policy.batch` at a time (the same knob
+    /// that sizes the PJRT b8 artifacts) and each group runs as **one**
+    /// batched interaction — the engine sees whole query batches, never
+    /// singletons.  Returns one potential vector per query, in order.
+    pub fn gauss_serve(
+        &mut self,
+        tcoords: &[f32],
+        scoords: &[f32],
+        d: usize,
+        inv_h2: f32,
+        queries: &[Vec<f32>],
+    ) -> Vec<Vec<f32>> {
+        let mut rust_secs = 0.0;
+        let (out, calls) = Metrics::time_phase(&mut rust_secs, || {
+            QueryBatcher::run_slate(
+                self.policy.batch,
+                &self.engine,
+                queries,
+                tcoords,
+                scoords,
+                d,
+                inv_h2,
+            )
+        });
+        self.metrics.rust_seconds += rust_secs;
+        self.metrics.batched_queries += queries.len() as u64;
+        self.metrics.serve_calls += calls as u64;
+        self.metrics.nnz_processed += self.engine.csb.nnz as u64 * queries.len() as u64;
+        out
+    }
 }
 
 /// Pack one block into the single-block artifact and execute.
@@ -369,6 +375,38 @@ mod tests {
         co.tsne_attr(&y, 2, &mut f);
         assert_eq!(co.metrics.iterations, 2);
         assert!(co.metrics.nnz_processed > 0);
+    }
+
+    #[test]
+    fn gauss_serve_batches_whole_query_groups() {
+        let ds = SynthSpec::blobs(250, 2, 3, 31).generate();
+        let g = knn_graph(&ds, 6, 2);
+        let a = Csr::from_knn(&g, 250).symmetrized();
+        let r = Pipeline::dual_tree(2).run(&ds, &a);
+        let tree = r.tree.as_ref().unwrap();
+        let csb = HierCsb::build_with(&r.reordered, tree, tree, 32, 0.25);
+        let eng = Engine::new(csb, 2);
+        let eng2 = Engine::new(eng.csb.clone(), 2);
+        let mut co = Coordinator::rust_only(eng);
+        let coords = ds.permuted(&r.perm).raw().to_vec();
+        let mut rng = Rng::new(3);
+        let queries: Vec<Vec<f32>> = (0..10)
+            .map(|_| (0..250).map(|_| rng.f32()).collect())
+            .collect();
+        let got = co.gauss_serve(&coords, &coords, 2, 0.8, &queries);
+        assert_eq!(got.len(), 10);
+        assert_eq!(co.metrics.batched_queries, 10);
+        // default policy batch = 8 → two whole-batch engine calls, and
+        // serving must not masquerade as iteration steps
+        assert_eq!(co.metrics.serve_calls, 2);
+        assert_eq!(co.metrics.iterations, 0);
+        for (q, batched) in queries.iter().zip(&got) {
+            let mut want = vec![0.0f32; 250];
+            eng2.gauss_apply(&coords, &coords, 2, 0.8, q, &mut want);
+            for (g, w) in batched.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-4 * (1.0 + w.abs()), "{g} vs {w}");
+            }
+        }
     }
 
     // PJRT-path equivalence is covered by rust/tests/coordinator_pjrt.rs

@@ -44,7 +44,7 @@ impl Span {
 /// per-block `Vec`s: iterating blocks in traversal order then walks memory
 /// *linearly*, which is the whole point of the reordering exercise — the
 /// perf pass measured ~240 ns/block of pointer-chasing overhead with
-/// per-block allocations (EXPERIMENTS.md §Perf).
+/// per-block allocations (repo-root `EXPERIMENTS.md` §Perf).
 #[derive(Clone, Copy, Debug)]
 pub enum BlockKind {
     /// Row-major `rows.len() x cols.len()` values at `dense[off..]`.
@@ -319,6 +319,81 @@ impl HierCsb {
         }
     }
 
+    /// One block's multi-RHS update `Y[rows] += B · X[cols]` over the
+    /// arenas, with `X`/`Y` stored row-major `n x k` (RHS index fastest —
+    /// the same layout the engine uses for `n x d` coordinate arrays).
+    ///
+    /// Dense blocks run the register-blocked micro-GEMM
+    /// ([`dense_gemm_acc`]); DCSR blocks run row-wise k-wide AXPYs.  For
+    /// every RHS column the per-output accumulation chain is identical to
+    /// [`Self::block_matvec`]'s, so `block_matmul(k=1)` is **bit-exact**
+    /// with the scalar path (rustc does not reassociate float ops).
+    #[inline]
+    pub fn block_matmul(&self, t: usize, x: &[f32], y: &mut [f32], k: usize) {
+        let b = &self.blocks[t];
+        let x_seg = &x[b.cols.lo as usize * k..b.cols.hi as usize * k];
+        let y_seg = &mut y[b.rows.lo as usize * k..b.rows.hi as usize * k];
+        match b.kind {
+            BlockKind::Dense { off } => {
+                let w = b.cols.len();
+                let d = &self.dense[off as usize..off as usize + b.rows.len() * w];
+                dense_gemm_acc(d, b.rows.len(), w, x_seg, k, y_seg);
+            }
+            BlockKind::Sparse {
+                row_off,
+                row_cnt,
+                ptr_off,
+            } => {
+                let rows = &self.sp_rows[row_off as usize..(row_off + row_cnt) as usize];
+                let ptr = &self.sp_ptr[ptr_off as usize..(ptr_off + row_cnt + 1) as usize];
+                let mut j0 = 0;
+                while j0 < k {
+                    let kc = GEMM_KC.min(k - j0);
+                    for (ti, &r) in rows.iter().enumerate() {
+                        let lo = ptr[ti] as usize;
+                        let hi = ptr[ti + 1] as usize;
+                        let mut acc = [0.0f32; GEMM_KC];
+                        for e in lo..hi {
+                            let v = self.sp_val[e];
+                            let xr = &x_seg[self.sp_col[e] as usize * k + j0..][..kc];
+                            for (a, &xv) in acc[..kc].iter_mut().zip(xr) {
+                                *a += v * xv;
+                            }
+                        }
+                        let out = &mut y_seg[r as usize * k + j0..][..kc];
+                        for (o, &a) in out.iter_mut().zip(&acc[..kc]) {
+                            *o += a;
+                        }
+                    }
+                    j0 += kc;
+                }
+            }
+        }
+    }
+
+    /// Sequential multi-level SpMM: `Y = A X` with `k` RHS columns
+    /// (`x`: `cols x k`, `y`: `rows x k`, both row-major; y overwritten).
+    pub fn spmm(&self, x: &[f32], y: &mut [f32], k: usize) {
+        assert!(k >= 1, "spmm needs at least one RHS column");
+        assert_eq!(x.len(), self.cols * k);
+        assert_eq!(y.len(), self.rows * k);
+        y.fill(0.0);
+        for t in 0..self.blocks.len() {
+            self.block_matmul(t, x, y, k);
+        }
+    }
+
+    /// Sequential SpMM in an explicit block order (ablation hook).
+    pub fn spmm_ordered(&self, order: &[u32], x: &[f32], y: &mut [f32], k: usize) {
+        assert!(k >= 1, "spmm needs at least one RHS column");
+        assert_eq!(x.len(), self.cols * k);
+        assert_eq!(y.len(), self.rows * k);
+        y.fill(0.0);
+        for &t in order {
+            self.block_matmul(t as usize, x, y, k);
+        }
+    }
+
     /// Visit every stored nonzero of block `t` as (local_row, local_col,
     /// value).
     #[inline]
@@ -413,6 +488,73 @@ impl HierCsb {
             self.dense_fraction(),
             self.nnz as f64 / self.blocks.len().max(1) as f64
         )
+    }
+}
+
+/// RHS register-block width of the micro-GEMM: 8 f32 accumulators fit one
+/// AVX2 register (or two NEON quads) with room for the 4 broadcast values
+/// of the unrolled reduction, so the inner loops stay in registers.
+pub const GEMM_KC: usize = 8;
+
+/// Register-blocked dense micro-GEMM granule: `Y += D · X` for a row-major
+/// `nrows x ncols` block `d` against `k` RHS columns (`x`: `ncols x k`,
+/// `y`: `nrows x k`, row-major).
+///
+/// RHS columns are processed in register blocks of [`GEMM_KC`]; the
+/// reduction over `ncols` is 4×-unrolled.  Each (row, rhs) output keeps a
+/// **single sequential accumulation chain** in column order — the same
+/// op sequence as the scalar dense matvec — so `k = 1` reproduces
+/// [`HierCsb::block_matvec`] bit-for-bit while still reusing every loaded
+/// matrix value across all `k` columns (the GEMM arithmetic-intensity win).
+pub fn dense_gemm_acc(d: &[f32], nrows: usize, ncols: usize, x: &[f32], k: usize, y: &mut [f32]) {
+    debug_assert!(d.len() >= nrows * ncols);
+    debug_assert!(x.len() >= ncols * k);
+    debug_assert!(y.len() >= nrows * k);
+    let mut j0 = 0;
+    while j0 < k {
+        let kc = GEMM_KC.min(k - j0);
+        for r in 0..nrows {
+            let row = &d[r * ncols..(r + 1) * ncols];
+            let mut acc = [0.0f32; GEMM_KC];
+            let acc = &mut acc[..kc];
+            let mut c = 0;
+            while c + 4 <= ncols {
+                let d0 = row[c];
+                let d1 = row[c + 1];
+                let d2 = row[c + 2];
+                let d3 = row[c + 3];
+                let x0 = &x[c * k + j0..][..kc];
+                let x1 = &x[(c + 1) * k + j0..][..kc];
+                let x2 = &x[(c + 2) * k + j0..][..kc];
+                let x3 = &x[(c + 3) * k + j0..][..kc];
+                for (a, &xv) in acc.iter_mut().zip(x0) {
+                    *a += d0 * xv;
+                }
+                for (a, &xv) in acc.iter_mut().zip(x1) {
+                    *a += d1 * xv;
+                }
+                for (a, &xv) in acc.iter_mut().zip(x2) {
+                    *a += d2 * xv;
+                }
+                for (a, &xv) in acc.iter_mut().zip(x3) {
+                    *a += d3 * xv;
+                }
+                c += 4;
+            }
+            while c < ncols {
+                let dv = row[c];
+                let xr = &x[c * k + j0..][..kc];
+                for (a, &xv) in acc.iter_mut().zip(xr) {
+                    *a += dv * xv;
+                }
+                c += 1;
+            }
+            let out = &mut y[r * k + j0..][..kc];
+            for (o, &a) in out.iter_mut().zip(acc.iter()) {
+                *o += a;
+            }
+        }
+        j0 += kc;
     }
 }
 
@@ -621,6 +763,73 @@ mod tests {
             "degenerate traversal: {switches} switches over {} blocks",
             csb.blocks.len()
         );
+    }
+
+    #[test]
+    fn spmm_columns_bitexact_with_spmv() {
+        // The acceptance bar of the multi-RHS path: every column of
+        // spmm(k) reproduces the scalar spmv bit-for-bit (same chains).
+        let (a, csb) = setup(500, 32);
+        let mut rng = crate::util::rng::Rng::new(21);
+        for k in [1usize, 2, 3, 7, 8, 11] {
+            let x: Vec<f32> = (0..a.cols * k).map(|_| rng.f32() - 0.5).collect();
+            let mut y = vec![0.0f32; a.rows * k];
+            csb.spmm(&x, &mut y, k);
+            for j in 0..k {
+                let xj: Vec<f32> = (0..a.cols).map(|i| x[i * k + j]).collect();
+                let mut yj = vec![0.0f32; a.rows];
+                csb.spmv(&xj, &mut yj);
+                for i in 0..a.rows {
+                    assert_eq!(
+                        y[i * k + j].to_bits(),
+                        yj[i].to_bits(),
+                        "k={k} col={j} row={i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn spmm_ordered_flat_matches_multilevel() {
+        let (a, csb) = setup(400, 16);
+        let mut rng = crate::util::rng::Rng::new(22);
+        let k = 4;
+        let x: Vec<f32> = (0..a.cols * k).map(|_| rng.f32()).collect();
+        let mut y1 = vec![0.0f32; a.rows * k];
+        let mut y2 = vec![0.0f32; a.rows * k];
+        csb.spmm(&x, &mut y1, k);
+        let flat = csb.flat_order();
+        csb.spmm_ordered(&flat, &x, &mut y2, k);
+        for (a, b) in y1.iter().zip(&y2) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn dense_gemm_matches_naive() {
+        // Odd shapes around the 4x unroll and the GEMM_KC register block.
+        let mut rng = crate::util::rng::Rng::new(23);
+        let shapes = [(1usize, 1usize, 1usize), (3, 5, 2), (7, 9, 8), (4, 13, 9), (16, 31, 17)];
+        for &(r, c, k) in &shapes {
+            let d: Vec<f32> = (0..r * c).map(|_| rng.f32() - 0.5).collect();
+            let x: Vec<f32> = (0..c * k).map(|_| rng.f32() - 0.5).collect();
+            let mut y = vec![0.0f32; r * k];
+            dense_gemm_acc(&d, r, c, &x, k, &mut y);
+            for i in 0..r {
+                for j in 0..k {
+                    let mut want = 0.0f64;
+                    for t in 0..c {
+                        want += d[i * c + t] as f64 * x[t * k + j] as f64;
+                    }
+                    assert!(
+                        (y[i * k + j] as f64 - want).abs() < 1e-4 * (1.0 + want.abs()),
+                        "({r}x{c} k={k}) at ({i},{j}): {} vs {want}",
+                        y[i * k + j]
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -15,8 +15,16 @@
 //!
 //! Parallelism: target-leaf ownership (one worker owns all writes to a
 //! potential segment), identical to `spmv::multilevel`.
+//!
+//! Batched execution: all three kernels are multi-RHS under the hood.  A
+//! dense block's weights are materialized once ([`BlockScratch`]) and fed
+//! to the register-blocked micro-GEMM
+//! ([`crate::csb::hier::dense_gemm_acc`]) over every output column at
+//! once — d embedding dimensions for t-SNE, d+1 fused columns for mean
+//! shift (the ones column yields the denominator), k simultaneous queries
+//! for [`Engine::gauss_apply_multi`] — instead of looping scalar matvecs.
 
-use crate::csb::hier::HierCsb;
+use crate::csb::hier::{dense_gemm_acc, HierCsb};
 use crate::par::pool::ThreadPool;
 
 /// The engine: block structure + thread pool.
@@ -61,7 +69,7 @@ impl Engine {
         });
     }
 
-    /// t-SNE attractive force (§3.1).
+    /// t-SNE attractive force (§3.1), batched.
     ///
     /// * `y`: embedding coordinates, tree-ordered row-major `n x d`
     ///   (targets and sources coincide);
@@ -69,28 +77,17 @@ impl Engine {
     /// * `force`: output `n x d`, overwritten.
     ///
     /// `F_i = Σ_j p_ij · (1 + ‖y_i − y_j‖²)^{-1} · (y_i − y_j)`.
+    ///
+    /// Dense blocks run the multi-RHS micro-GEMM over the block-local
+    /// augmented RHS `[y − c | 1]` (see [`tsne_block`]); sparse blocklets
+    /// keep the fused scalar loop.
     pub fn tsne_attr(&self, y: &[f32], d: usize, force: &mut [f32]) {
         assert_eq!(y.len(), self.csb.cols * d);
         let csb = &self.csb;
         self.per_target(force, d, |tl, seg| {
+            let mut scratch = BlockScratch::default();
             for &t in &csb.by_target[tl] {
-                let b = &csb.blocks[t as usize];
-                let r0 = b.rows.lo as usize;
-                let c0 = b.cols.lo as usize;
-                csb.for_each_nz(t as usize, |r, c, p| {
-                    let yi = &y[(r0 + r) * d..(r0 + r + 1) * d];
-                    let yj = &y[(c0 + c) * d..(c0 + c + 1) * d];
-                    let mut d2 = 0.0f32;
-                    for k in 0..d {
-                        let t = yi[k] - yj[k];
-                        d2 += t * t;
-                    }
-                    let w = p / (1.0 + d2);
-                    let out = &mut seg[r * d..(r + 1) * d];
-                    for k in 0..d {
-                        out[k] += w * (yi[k] - yj[k]);
-                    }
-                });
+                tsne_block(csb, t as usize, y, d, &mut scratch, seg);
             }
         });
     }
@@ -107,31 +104,78 @@ impl Engine {
         x: &[f32],
         y_out: &mut [f32],
     ) {
+        self.gauss_apply_multi(tcoords, scoords, d, inv_h2, x, 1, y_out);
+    }
+
+    /// Multi-query Gaussian interaction: `k` simultaneous charge vectors
+    /// (`x`: `cols x k` row-major) against one stored profile, producing
+    /// `y_out`: `rows x k`.
+    ///
+    /// The kernel values `exp(−‖t_i − s_j‖²·inv_h2)` are computed **once
+    /// per profile entry** and applied to all `k` queries: dense blocks
+    /// materialize the masked weight block and run the micro-GEMM, sparse
+    /// blocklets run row-wise k-wide AXPYs.  The per-query win over `k`
+    /// scalar [`Engine::gauss_apply`] calls approaches `k` when the
+    /// transcendental dominates.
+    #[allow(clippy::too_many_arguments)]
+    pub fn gauss_apply_multi(
+        &self,
+        tcoords: &[f32],
+        scoords: &[f32],
+        d: usize,
+        inv_h2: f32,
+        x: &[f32],
+        k: usize,
+        y_out: &mut [f32],
+    ) {
+        assert!(k >= 1, "gauss_apply_multi needs at least one query");
         assert_eq!(tcoords.len(), self.csb.rows * d);
         assert_eq!(scoords.len(), self.csb.cols * d);
-        assert_eq!(x.len(), self.csb.cols);
+        assert_eq!(x.len(), self.csb.cols * k);
         let csb = &self.csb;
-        self.per_target(y_out, 1, |tl, seg| {
+        self.per_target(y_out, k, |tl, seg| {
+            let mut scratch = BlockScratch::default();
             for &t in &csb.by_target[tl] {
                 let b = &csb.blocks[t as usize];
                 let r0 = b.rows.lo as usize;
                 let c0 = b.cols.lo as usize;
-                csb.for_each_nz(t as usize, |r, c, _| {
-                    let ti = &tcoords[(r0 + r) * d..(r0 + r + 1) * d];
-                    let sj = &scoords[(c0 + c) * d..(c0 + c + 1) * d];
-                    let mut d2 = 0.0f32;
-                    for k in 0..d {
-                        let t = ti[k] - sj[k];
-                        d2 += t * t;
-                    }
-                    seg[r] += (-d2 * inv_h2).exp() * x[c0 + c];
-                });
+                debug_assert_eq!(seg.len(), b.rows.len() * k, "block must span its target leaf");
+                // k = 1 stays on the fused pass over stored nonzeros:
+                // materializing the masked weight block only pays off once
+                // the GEMM amortizes it across multiple RHS columns.
+                if k > 1 && csb.dense_slice(t as usize).is_some() {
+                    let w = &mut scratch.w;
+                    let (rn, cn) =
+                        gauss_weights_dense(csb, t as usize, tcoords, scoords, d, inv_h2, w);
+                    dense_gemm_acc(&scratch.w, rn, cn, &x[c0 * k..(c0 + cn) * k], k, seg);
+                } else {
+                    csb.for_each_nz(t as usize, |r, c, _| {
+                        let ti = &tcoords[(r0 + r) * d..(r0 + r + 1) * d];
+                        let sj = &scoords[(c0 + c) * d..(c0 + c + 1) * d];
+                        let mut d2 = 0.0f32;
+                        for kk in 0..d {
+                            let t = ti[kk] - sj[kk];
+                            d2 += t * t;
+                        }
+                        let w = (-d2 * inv_h2).exp();
+                        let xr = &x[(c0 + c) * k..(c0 + c + 1) * k];
+                        let out = &mut seg[r * k..(r + 1) * k];
+                        for (o, &xv) in out.iter_mut().zip(xr) {
+                            *o += w * xv;
+                        }
+                    });
+                }
             }
         });
     }
 
     /// Mean-shift partial sums (§3.2): returns `(num, den)` with
     /// `num_i = Σ_j w_ij s_j` (`n x d`) and `den_i = Σ_j w_ij`.
+    ///
+    /// The two outputs are `d + 1` fused RHS columns of one batched block
+    /// product: dense blocks run the micro-GEMM against the augmented
+    /// source matrix `[s | 1]`, whose last column yields the denominator
+    /// row sums for free.
     pub fn meanshift_step(
         &self,
         tcoords: &[f32],
@@ -142,6 +186,9 @@ impl Engine {
         let n = self.csb.rows;
         let mut num = vec![0.0f32; n * d];
         let mut den = vec![0.0f32; n];
+        // Augmented sources [s | 1]: cols x (d+1), shared by all workers.
+        let ka = d + 1;
+        let sa = augment_ones(scoords, self.csb.cols, d);
         // Fuse both outputs into one pass: compute into num, accumulate den
         // in a second buffer owned by the same target leaf.
         struct SendPtr(*mut f32);
@@ -156,29 +203,218 @@ impl Engine {
             let den_seg: &mut [f32] = unsafe {
                 std::slice::from_raw_parts_mut(dpr.0.add(sp.lo as usize), sp.len())
             };
+            let mut scratch = BlockScratch::default();
             for &t in &csb.by_target[tl] {
                 let b = &csb.blocks[t as usize];
                 let r0 = b.rows.lo as usize;
                 let c0 = b.cols.lo as usize;
-                csb.for_each_nz(t as usize, |r, c, _| {
-                    let ti = &tcoords[(r0 + r) * d..(r0 + r + 1) * d];
-                    let sj = &scoords[(c0 + c) * d..(c0 + c + 1) * d];
-                    let mut d2 = 0.0f32;
-                    for k in 0..d {
-                        let t = ti[k] - sj[k];
-                        d2 += t * t;
+                debug_assert_eq!(seg.len(), b.rows.len() * d, "block must span its target leaf");
+                if csb.dense_slice(t as usize).is_some() {
+                    let w = &mut scratch.w;
+                    let (rn, cn) =
+                        gauss_weights_dense(csb, t as usize, tcoords, scoords, d, inv_h2, w);
+                    scratch.out.clear();
+                    scratch.out.resize(rn * ka, 0.0);
+                    dense_gemm_acc(
+                        &scratch.w,
+                        rn,
+                        cn,
+                        &sa[c0 * ka..(c0 + cn) * ka],
+                        ka,
+                        &mut scratch.out,
+                    );
+                    for r in 0..rn {
+                        let row = &scratch.out[r * ka..(r + 1) * ka];
+                        let out = &mut seg[r * d..(r + 1) * d];
+                        for (o, &v) in out.iter_mut().zip(&row[..d]) {
+                            *o += v;
+                        }
+                        den_seg[r] += row[d];
                     }
-                    let w = (-d2 * inv_h2).exp();
-                    let out = &mut seg[r * d..(r + 1) * d];
-                    for k in 0..d {
-                        out[k] += w * sj[k];
-                    }
-                    den_seg[r] += w;
-                });
+                } else {
+                    csb.for_each_nz(t as usize, |r, c, _| {
+                        let ti = &tcoords[(r0 + r) * d..(r0 + r + 1) * d];
+                        let sj = &scoords[(c0 + c) * d..(c0 + c + 1) * d];
+                        let mut d2 = 0.0f32;
+                        for k in 0..d {
+                            let t = ti[k] - sj[k];
+                            d2 += t * t;
+                        }
+                        let w = (-d2 * inv_h2).exp();
+                        let out = &mut seg[r * d..(r + 1) * d];
+                        for k in 0..d {
+                            out[k] += w * sj[k];
+                        }
+                        den_seg[r] += w;
+                    });
+                }
             }
         });
         (num, den)
     }
+}
+
+/// Reusable per-worker scratch of the batched block kernels: the
+/// materialized weight block, the micro-GEMM output panel, and the
+/// block-local RHS panel.  One scratch per target-leaf task keeps the
+/// buffers hot across that leaf's blocks without cross-thread sharing.
+#[derive(Default)]
+pub struct BlockScratch {
+    /// Materialized (masked) kernel weights, row-major block shape.
+    pub w: Vec<f32>,
+    /// GEMM output panel, `block_rows x k` row-major.
+    pub out: Vec<f32>,
+    /// Block-local augmented RHS panel, `block_cols x k` row-major.
+    pub xs: Vec<f32>,
+}
+
+/// Augment a row-major `n x d` coordinate array with a trailing ones
+/// column → `n x (d+1)`.  The ones column turns row sums into one more RHS
+/// column of the same block product (used by the mean-shift batched
+/// kernel; the t-SNE kernel builds a block-local shifted variant).
+pub fn augment_ones(x: &[f32], n: usize, d: usize) -> Vec<f32> {
+    assert_eq!(x.len(), n * d);
+    let ka = d + 1;
+    let mut out = vec![1.0f32; n * ka];
+    for i in 0..n {
+        out[i * ka..i * ka + d].copy_from_slice(&x[i * d..(i + 1) * d]);
+    }
+    out
+}
+
+/// Per-block fused t-SNE attractive kernel, shared by [`Engine::tsne_attr`]
+/// and the coordinator's Rust phase (identical op order on both paths, so
+/// the hybrid and pure-engine results match bit-for-bit on Rust-routed
+/// blocks).
+///
+/// Dense blocks materialize `w_ij = p_ij/(1+‖y_i−y_j‖²)` once and run the
+/// multi-RHS micro-GEMM against the block-local augmented RHS
+/// `[y_j − c | 1]` (`block_cols x (d+1)`), where `c` is the block's first
+/// source coordinate: column `d` of the product is the weight row sum
+/// `rs`, giving `F_i = rs·(y_i − c) − (W·(y − c))_i` without a second
+/// pass.  The shift by `c` keeps both terms at cluster-radius magnitude —
+/// the unshifted `rs·y_i − (W·y)_i` form cancels catastrophically when a
+/// dense cluster sits far from the embedding origin.  Sparse blocklets run
+/// the fused scalar loop.
+///
+/// `seg` is the target-leaf output segment (`block_rows x d`); blocks span
+/// exactly one target leaf, so block-local rows index it directly.
+pub fn tsne_block(
+    csb: &HierCsb,
+    t: usize,
+    y: &[f32],
+    d: usize,
+    scratch: &mut BlockScratch,
+    seg: &mut [f32],
+) {
+    let b = &csb.blocks[t];
+    let r0 = b.rows.lo as usize;
+    let c0 = b.cols.lo as usize;
+    let ka = d + 1;
+    debug_assert_eq!(seg.len(), b.rows.len() * d, "block must span its target leaf");
+    if let Some(dvals) = csb.dense_slice(t) {
+        let rn = b.rows.len();
+        let cn = b.cols.len();
+        scratch.w.clear();
+        scratch.w.resize(rn * cn, 0.0);
+        for r in 0..rn {
+            let yi = &y[(r0 + r) * d..(r0 + r + 1) * d];
+            let wrow = &mut scratch.w[r * cn..(r + 1) * cn];
+            let prow = &dvals[r * cn..(r + 1) * cn];
+            for (c, (wv, &p)) in wrow.iter_mut().zip(prow).enumerate() {
+                if p != 0.0 {
+                    let yj = &y[(c0 + c) * d..(c0 + c + 1) * d];
+                    let mut d2 = 0.0f32;
+                    for k in 0..d {
+                        let t = yi[k] - yj[k];
+                        d2 += t * t;
+                    }
+                    *wv = p / (1.0 + d2);
+                }
+            }
+        }
+        // Reference point: the block's first source coordinate (points in
+        // a dense block are near-neighbors, so every |y_j − c| is small).
+        let cref = &y[c0 * d..(c0 + 1) * d];
+        scratch.xs.clear();
+        scratch.xs.resize(cn * ka, 0.0);
+        for j in 0..cn {
+            let yj = &y[(c0 + j) * d..(c0 + j + 1) * d];
+            let xrow = &mut scratch.xs[j * ka..(j + 1) * ka];
+            for k in 0..d {
+                xrow[k] = yj[k] - cref[k];
+            }
+            xrow[d] = 1.0;
+        }
+        scratch.out.clear();
+        scratch.out.resize(rn * ka, 0.0);
+        dense_gemm_acc(&scratch.w, rn, cn, &scratch.xs, ka, &mut scratch.out);
+        for r in 0..rn {
+            let yi = &y[(r0 + r) * d..(r0 + r + 1) * d];
+            let row = &scratch.out[r * ka..(r + 1) * ka];
+            let rs = row[d];
+            let out = &mut seg[r * d..(r + 1) * d];
+            for k in 0..d {
+                out[k] += rs * (yi[k] - cref[k]) - row[k];
+            }
+        }
+    } else {
+        csb.for_each_nz(t, |r, c, p| {
+            let yi = &y[(r0 + r) * d..(r0 + r + 1) * d];
+            let yj = &y[(c0 + c) * d..(c0 + c + 1) * d];
+            let mut d2 = 0.0f32;
+            for k in 0..d {
+                let t = yi[k] - yj[k];
+                d2 += t * t;
+            }
+            let w = p / (1.0 + d2);
+            let out = &mut seg[r * d..(r + 1) * d];
+            for k in 0..d {
+                out[k] += w * (yi[k] - yj[k]);
+            }
+        });
+    }
+}
+
+/// Materialize the masked Gaussian weight block of dense block `t` into
+/// `w` (row-major `rows x cols`): `w_rc = exp(−‖t_r − s_c‖²·inv_h2)` where
+/// the stored profile has an entry, 0 elsewhere.  Returns (rows, cols).
+///
+/// Must only be called for dense-stored blocks (the caller dispatches).
+fn gauss_weights_dense(
+    csb: &HierCsb,
+    t: usize,
+    tcoords: &[f32],
+    scoords: &[f32],
+    d: usize,
+    inv_h2: f32,
+    w: &mut Vec<f32>,
+) -> (usize, usize) {
+    let b = &csb.blocks[t];
+    let r0 = b.rows.lo as usize;
+    let c0 = b.cols.lo as usize;
+    let rn = b.rows.len();
+    let cn = b.cols.len();
+    let dvals = csb.dense_slice(t).expect("gauss_weights_dense on sparse block");
+    w.clear();
+    w.resize(rn * cn, 0.0);
+    for r in 0..rn {
+        let ti = &tcoords[(r0 + r) * d..(r0 + r + 1) * d];
+        let wrow = &mut w[r * cn..(r + 1) * cn];
+        let prow = &dvals[r * cn..(r + 1) * cn];
+        for (c, (wv, &p)) in wrow.iter_mut().zip(prow).enumerate() {
+            if p != 0.0 {
+                let sj = &scoords[(c0 + c) * d..(c0 + c + 1) * d];
+                let mut d2 = 0.0f32;
+                for k in 0..d {
+                    let t = ti[k] - sj[k];
+                    d2 += t * t;
+                }
+                *wv = (-d2 * inv_h2).exp();
+            }
+        }
+    }
+    (rn, cn)
 }
 
 #[cfg(test)]
@@ -291,6 +527,70 @@ mod tests {
             for k in 0..3 {
                 assert!((num[i * 3 + k] - wn[k]).abs() < 1e-3 * (1.0 + wn[k].abs()));
             }
+        }
+    }
+
+    /// Engine with a low dense threshold so the batched dense-block path
+    /// is actually exercised (clustered blobs → dense diagonal blocks).
+    fn setup_dense(n: usize, d: usize) -> (Csr, Engine, Vec<f32>) {
+        let ds = SynthSpec::blobs(n, d, 4, 17).generate();
+        let g = knn_graph(&ds, 6, 2);
+        let a = Csr::from_knn(&g, n).symmetrized();
+        let r = Pipeline::dual_tree(d).run(&ds, &a);
+        let tree = r.tree.as_ref().unwrap();
+        let csb = HierCsb::build_with(&r.reordered, tree, tree, 32, 0.25);
+        assert!(csb.dense_fraction() > 0.0, "test needs dense blocks: {}", csb.describe());
+        let coords = ds.permuted(&r.perm).raw().to_vec();
+        (r.reordered, Engine::new(csb, 4), coords)
+    }
+
+    #[test]
+    fn gauss_apply_multi_matches_per_query() {
+        let (_, eng, coords) = setup_dense(300, 3);
+        let n = 300;
+        let mut rng = Rng::new(6);
+        let k = 5;
+        let x: Vec<f32> = (0..n * k).map(|_| rng.f32() - 0.5).collect();
+        let inv_h2 = 0.6f32;
+        let mut got = vec![0.0f32; n * k];
+        eng.gauss_apply_multi(&coords, &coords, 3, inv_h2, &x, k, &mut got);
+        for j in 0..k {
+            let xj: Vec<f32> = (0..n).map(|i| x[i * k + j]).collect();
+            let mut want = vec![0.0f32; n];
+            eng.gauss_apply(&coords, &coords, 3, inv_h2, &xj, &mut want);
+            for i in 0..n {
+                let g = got[i * k + j];
+                let w = want[i];
+                assert!((g - w).abs() < 1e-4 * (1.0 + w.abs()), "q{j} row{i}: {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn batched_dense_path_matches_sparse_path() {
+        // The same profile stored all-dense vs all-sparse must produce the
+        // same kernels: exercises micro-GEMM vs fused scalar consistency.
+        let ds = SynthSpec::blobs(250, 2, 3, 9).generate();
+        let g = knn_graph(&ds, 6, 2);
+        let a = Csr::from_knn(&g, 250).symmetrized();
+        let r = Pipeline::dual_tree(2).run(&ds, &a);
+        let tree = r.tree.as_ref().unwrap();
+        let dense_eng = Engine::new(HierCsb::build_with(&r.reordered, tree, tree, 32, 0.0), 2);
+        let sparse_eng = Engine::new(HierCsb::build_with(&r.reordered, tree, tree, 32, 1.1), 2);
+        let coords = ds.permuted(&r.perm).raw().to_vec();
+        let mut rng = Rng::new(11);
+        let y: Vec<f32> = (0..250 * 2).map(|_| rng.normal() as f32).collect();
+        let mut f1 = vec![0.0f32; 500];
+        let mut f2 = vec![0.0f32; 500];
+        dense_eng.tsne_attr(&y, 2, &mut f1);
+        sparse_eng.tsne_attr(&y, 2, &mut f2);
+        for (a, b) in f1.iter().zip(&f2) {
+            assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+        let (n1, d1) = dense_eng.meanshift_step(&coords, &coords, 2, 0.5);
+        let (n2, d2) = sparse_eng.meanshift_step(&coords, &coords, 2, 0.5);
+        for (a, b) in n1.iter().zip(&n2).chain(d1.iter().zip(&d2)) {
+            assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()), "{a} vs {b}");
         }
     }
 

@@ -197,6 +197,7 @@ fn cmd_reorder(argv: Vec<String>) {
             .opt("k", "0", "neighbors (0 = workload default)")
             .opt("ordering", "3ddt", "rand|rcm|1d|2dlex|3dlex|3ddt|morton")
             .opt("leaf-cap", "256", "tree leaf capacity")
+            .opt("rhs", "1", "multi-RHS width: >1 times batched spmm vs k scalar spmv")
             .opt("seed", "42", "rng seed")
             .opt("threads", "0", "0 = all cores"),
     )
@@ -233,6 +234,27 @@ fn cmd_reorder(argv: Vec<String>) {
     if let Some(tree) = &r.tree {
         let csb = HierCsb::build(&r.reordered, tree, tree, a.get_usize("leaf-cap"));
         println!("csb: {}", csb.describe());
+        let k = a.get_usize("rhs");
+        if k > 1 {
+            let n = ds.n();
+            let x1 = vec![1.0f32; n];
+            let mut y1 = vec![0.0f32; n];
+            let xk = vec![1.0f32; n * k];
+            let mut yk = vec![0.0f32; n * k];
+            let m_scalar = timer::bench_default(|| {
+                for _ in 0..k {
+                    spmv::multilevel::spmv_ml_seq(&csb, &x1, &mut y1);
+                }
+            });
+            let m_spmm =
+                timer::bench_default(|| spmv::multilevel::spmm_ml_seq(&csb, &xk, &mut yk, k));
+            println!(
+                "multi-rhs k={k}: scalar {:.3} ms  batched {:.3} ms  ({:.2}x)",
+                m_scalar.robust_min_s * 1e3,
+                m_spmm.robust_min_s * 1e3,
+                m_scalar.robust_min_s / m_spmm.robust_min_s
+            );
+        }
     }
 }
 
@@ -263,6 +285,7 @@ fn cmd_spmv(argv: Vec<String>) {
         .opt("seed", "42", "rng seed")
         .opt("threads", "0", "0 = all cores")
         .opt("leaf-cap", "2048", "block capacity (SpMV sweet spot: ~64x nnz/row)")
+        .opt("rhs", "1", "multi-RHS width: >1 also times batched spmm paths")
         .parse_from(argv)
         .unwrap_or_else(die);
     let wl = workload(&a.get("workload"));
@@ -284,6 +307,26 @@ fn cmd_spmv(argv: Vec<String>) {
     println!("csr seq      : {:.3} ms", m_seq.robust_min_s * 1e3);
     println!("ml  seq      : {:.3} ms", m_ml.robust_min_s * 1e3);
     println!("ml  par({threads:>2}) : {:.3} ms", m_mlp.robust_min_s * 1e3);
+    let k = a.get_usize("rhs");
+    if k > 1 {
+        let xk = vec![1.0f32; ds.n() * k];
+        let mut yk = vec![0.0f32; ds.n() * k];
+        let m_loop = timer::bench_default(|| {
+            for _ in 0..k {
+                spmv::multilevel::spmv_ml_seq(&csb, &x, &mut y);
+            }
+        });
+        let m_mm = timer::bench_default(|| spmv::multilevel::spmm_ml_seq(&csb, &xk, &mut yk, k));
+        let m_mmp =
+            timer::bench_default(|| spmv::multilevel::spmm_ml_par(&csb, &xk, &mut yk, k, threads));
+        println!("{k} x ml seq  : {:.3} ms", m_loop.robust_min_s * 1e3);
+        println!(
+            "spmm seq k={k:<2}: {:.3} ms ({:.2}x vs scalar loop)",
+            m_mm.robust_min_s * 1e3,
+            m_loop.robust_min_s / m_mm.robust_min_s
+        );
+        println!("spmm par({threads:>2}) : {:.3} ms", m_mmp.robust_min_s * 1e3);
+    }
 }
 
 fn cmd_tsne(argv: Vec<String>) {

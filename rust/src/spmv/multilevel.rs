@@ -1,4 +1,4 @@
-//! Multi-level blocked SpMV over [`HierCsb`], sequential and parallel.
+//! Multi-level blocked SpMV/SpMM over [`HierCsb`], sequential and parallel.
 //!
 //! Parallel discipline (§2.4 "multi-core environments"): each **target
 //! leaf** is owned by exactly one task — all blocks writing a given
@@ -33,6 +33,39 @@ pub fn spmv_ml_par(m: &HierCsb, x: &[f32], y: &mut [f32], threads: usize) {
         let yall: &mut [f32] = unsafe { std::slice::from_raw_parts_mut(ypr.0, ylen) };
         for &t in &m.by_target[tl] {
             m.block_matvec(t as usize, x, yall);
+        }
+    });
+}
+
+/// Sequential multi-level SpMM: `Y = A X` with `k` RHS columns (`x`:
+/// `cols x k` row-major, `y`: `rows x k`).  At `k = 1` this is bit-exact
+/// with [`spmv_ml_seq`] (see [`HierCsb::block_matmul`]).
+pub fn spmm_ml_seq(m: &HierCsb, x: &[f32], y: &mut [f32], k: usize) {
+    m.spmm(x, y, k);
+}
+
+/// Parallel multi-level SpMM under the same target-leaf ownership
+/// discipline as [`spmv_ml_par`]: each task owns a whole `leaf_rows x k`
+/// output panel, per-target block order is fixed, so results are bit-exact
+/// equal to [`spmm_ml_seq`] regardless of thread count.
+pub fn spmm_ml_par(m: &HierCsb, x: &[f32], y: &mut [f32], k: usize, threads: usize) {
+    assert!(k >= 1, "spmm needs at least one RHS column");
+    assert_eq!(x.len(), m.cols * k);
+    assert_eq!(y.len(), m.rows * k);
+    y.fill(0.0);
+    let pool = ThreadPool::new(threads);
+    struct SendPtr(*mut f32);
+    unsafe impl Send for SendPtr {}
+    unsafe impl Sync for SendPtr {}
+    let yp = SendPtr(y.as_mut_ptr());
+    let ylen = y.len();
+    let ypr = &yp;
+    pool.for_each_chunked(m.by_target.len(), 4, |tl| {
+        // SAFETY: this task exclusively owns the row panel of target leaf
+        // `tl`; all blocks below write only inside rows.lo*k..rows.hi*k.
+        let yall: &mut [f32] = unsafe { std::slice::from_raw_parts_mut(ypr.0, ylen) };
+        for &t in &m.by_target[tl] {
+            m.block_matmul(t as usize, x, yall, k);
         }
     });
 }
@@ -80,6 +113,53 @@ mod tests {
         spmv_ml_par(&m, &x, &mut got, 4);
         for (g, w) in got.iter().zip(&want) {
             assert!((g - w).abs() < 1e-3 * (1.0 + w.abs()));
+        }
+    }
+
+    #[test]
+    fn spmm_parallel_matches_sequential_exactly() {
+        let (a, m) = setup(600);
+        let mut rng = Rng::new(10);
+        for k in [1usize, 3, 8] {
+            let x: Vec<f32> = (0..a.cols * k).map(|_| rng.f32()).collect();
+            let mut y1 = vec![0.0f32; a.rows * k];
+            let mut y2 = vec![0.0f32; a.rows * k];
+            spmm_ml_seq(&m, &x, &mut y1, k);
+            for threads in [1, 2, 4, 8] {
+                spmm_ml_par(&m, &x, &mut y2, k, threads);
+                assert_eq!(y1, y2, "k={k} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn spmm_k1_bitexact_with_spmv() {
+        let (a, m) = setup(500);
+        let mut rng = Rng::new(11);
+        let x: Vec<f32> = (0..a.cols).map(|_| rng.f32()).collect();
+        let mut y1 = vec![0.0f32; a.rows];
+        let mut y2 = vec![0.0f32; a.rows];
+        spmv_ml_seq(&m, &x, &mut y1);
+        spmm_ml_seq(&m, &x, &mut y2, 1);
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn spmm_matches_csr_reference_per_column() {
+        let (a, m) = setup(350);
+        let mut rng = Rng::new(12);
+        let k = 5;
+        let x: Vec<f32> = (0..a.cols * k).map(|_| rng.f32()).collect();
+        let mut y = vec![0.0f32; a.rows * k];
+        spmm_ml_par(&m, &x, &mut y, k, 4);
+        for j in 0..k {
+            let xj: Vec<f32> = (0..a.cols).map(|i| x[i * k + j]).collect();
+            let want = a.matvec_ref(&xj);
+            for i in 0..a.rows {
+                let g = y[i * k + j];
+                let w = want[i];
+                assert!((g - w).abs() < 1e-3 * (1.0 + w.abs()), "col {j}: {g} vs {w}");
+            }
         }
     }
 

@@ -1,0 +1,205 @@
+//! Golden-reference tests for the three interaction-engine kernels: every
+//! kernel is checked against a naive O(n²) dense oracle computed from first
+//! principles (dense matrix + coordinates, f64 accumulation) on small
+//! clustered datasets.  The engines are built with the PJRT-path dense
+//! threshold so both the batched micro-GEMM (dense blocks) and the fused
+//! scalar path (sparse blocklets) are exercised.
+
+use nni::csb::hier::HierCsb;
+use nni::data::synth::SynthSpec;
+use nni::interact::engine::Engine;
+use nni::knn::exact::knn_graph;
+use nni::order::Pipeline;
+use nni::sparse::csr::Csr;
+use nni::util::rng::Rng;
+
+/// Reordered profile (values = stored matrix), engine with dense blocks,
+/// and tree-ordered coordinates.
+fn setup(n: usize, d: usize, seed: u64) -> (Csr, Engine, Vec<f32>) {
+    let ds = SynthSpec::blobs(n, d, 4, seed).generate();
+    let g = knn_graph(&ds, 6, 2);
+    let a = Csr::from_knn(&g, n).symmetrized();
+    let r = Pipeline::dual_tree(d).run(&ds, &a);
+    let tree = r.tree.as_ref().unwrap();
+    let csb = HierCsb::build_with(&r.reordered, tree, tree, 32, 0.25);
+    assert!(
+        csb.dense_fraction() > 0.0,
+        "oracle tests must exercise the batched dense path: {}",
+        csb.describe()
+    );
+    let coords = ds.permuted(&r.perm).raw().to_vec();
+    (r.reordered, Engine::new(csb, 4), coords)
+}
+
+/// Densify the profile (duplicates coalesce additively, as in the CSB).
+fn densify(a: &Csr) -> Vec<f32> {
+    let n = a.rows;
+    let mut dm = vec![0.0f32; n * n];
+    for i in 0..a.rows {
+        let (cols, vals) = a.row(i);
+        for (&j, &v) in cols.iter().zip(vals) {
+            dm[i * n + j as usize] += v;
+        }
+    }
+    dm
+}
+
+fn assert_close(got: f32, want: f64, ctx: &str) {
+    assert!(
+        (got as f64 - want).abs() <= 1e-4 * (1.0 + want.abs()),
+        "{ctx}: {got} vs oracle {want}"
+    );
+}
+
+#[test]
+fn tsne_attr_matches_dense_oracle() {
+    let n = 320;
+    let d = 2;
+    let (a, eng, _) = setup(n, d, 41);
+    let p = densify(&a);
+    let mut rng = Rng::new(7);
+    let y: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+    let mut got = vec![0.0f32; n * d];
+    eng.tsne_attr(&y, d, &mut got);
+    for i in 0..n {
+        for k in 0..d {
+            let mut want = 0.0f64;
+            for j in 0..n {
+                let pij = p[i * n + j] as f64;
+                if pij == 0.0 {
+                    continue;
+                }
+                let mut d2 = 0.0f64;
+                for t in 0..d {
+                    let dv = (y[i * d + t] - y[j * d + t]) as f64;
+                    d2 += dv * dv;
+                }
+                want += pij / (1.0 + d2) * (y[i * d + k] - y[j * d + k]) as f64;
+            }
+            assert_close(got[i * d + k], want, &format!("force[{i},{k}]"));
+        }
+    }
+}
+
+#[test]
+fn gauss_apply_matches_dense_oracle() {
+    let n = 280;
+    let d = 3;
+    let (a, eng, coords) = setup(n, d, 43);
+    let p = densify(&a);
+    let inv_h2 = 0.7f32;
+    let mut rng = Rng::new(8);
+    let x: Vec<f32> = (0..n).map(|_| rng.f32() - 0.5).collect();
+    let mut got = vec![0.0f32; n];
+    eng.gauss_apply(&coords, &coords, d, inv_h2, &x, &mut got);
+    for i in 0..n {
+        let mut want = 0.0f64;
+        for j in 0..n {
+            if p[i * n + j] == 0.0 {
+                continue;
+            }
+            let mut d2 = 0.0f64;
+            for t in 0..d {
+                let dv = (coords[i * d + t] - coords[j * d + t]) as f64;
+                d2 += dv * dv;
+            }
+            want += (-d2 * inv_h2 as f64).exp() * x[j] as f64;
+        }
+        assert_close(got[i], want, &format!("potential[{i}]"));
+    }
+}
+
+#[test]
+fn gauss_apply_multi_matches_dense_oracle_per_column() {
+    let n = 240;
+    let d = 3;
+    let (a, eng, coords) = setup(n, d, 47);
+    let p = densify(&a);
+    let inv_h2 = 0.5f32;
+    let k = 6;
+    let mut rng = Rng::new(9);
+    let x: Vec<f32> = (0..n * k).map(|_| rng.f32() - 0.5).collect();
+    let mut got = vec![0.0f32; n * k];
+    eng.gauss_apply_multi(&coords, &coords, d, inv_h2, &x, k, &mut got);
+    for q in 0..k {
+        for i in 0..n {
+            let mut want = 0.0f64;
+            for j in 0..n {
+                if p[i * n + j] == 0.0 {
+                    continue;
+                }
+                let mut d2 = 0.0f64;
+                for t in 0..d {
+                    let dv = (coords[i * d + t] - coords[j * d + t]) as f64;
+                    d2 += dv * dv;
+                }
+                want += (-d2 * inv_h2 as f64).exp() * x[j * k + q] as f64;
+            }
+            assert_close(got[i * k + q], want, &format!("query {q} potential[{i}]"));
+        }
+    }
+}
+
+#[test]
+fn meanshift_step_matches_dense_oracle() {
+    let n = 260;
+    let d = 3;
+    let (a, eng, coords) = setup(n, d, 53);
+    let p = densify(&a);
+    let inv_h2 = 0.6f32;
+    let (num, den) = eng.meanshift_step(&coords, &coords, d, inv_h2);
+    for i in 0..n {
+        let mut wn = vec![0.0f64; d];
+        let mut wd = 0.0f64;
+        for j in 0..n {
+            if p[i * n + j] == 0.0 {
+                continue;
+            }
+            let mut d2 = 0.0f64;
+            for t in 0..d {
+                let dv = (coords[i * d + t] - coords[j * d + t]) as f64;
+                d2 += dv * dv;
+            }
+            let w = (-d2 * inv_h2 as f64).exp();
+            for (t, wnt) in wn.iter_mut().enumerate() {
+                *wnt += w * coords[j * d + t] as f64;
+            }
+            wd += w;
+        }
+        assert_close(den[i], wd, &format!("den[{i}]"));
+        for (t, &wnt) in wn.iter().enumerate() {
+            assert_close(num[i * d + t], wnt, &format!("num[{i},{t}]"));
+        }
+    }
+}
+
+#[test]
+fn batched_kernels_thread_count_invariant_and_repeatable() {
+    // Target-leaf ownership: identical results across thread counts and
+    // across repeated runs, for all three batched kernels.
+    let n = 300;
+    let d = 2;
+    let (_, eng1, coords) = setup(n, d, 59);
+    let mut rng = Rng::new(10);
+    let y: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+    let x: Vec<f32> = (0..n * 4).map(|_| rng.f32()).collect();
+    let mut f_ref = vec![0.0f32; n * d];
+    eng1.tsne_attr(&y, d, &mut f_ref);
+    let mut g_ref = vec![0.0f32; n * 4];
+    eng1.gauss_apply_multi(&coords, &coords, d, 0.8, &x, 4, &mut g_ref);
+    let (num_ref, den_ref) = eng1.meanshift_step(&coords, &coords, d, 0.8);
+    for threads in [1usize, 2, 8] {
+        let eng = Engine::new(eng1.csb.clone(), threads);
+        for _rep in 0..2 {
+            let mut f = vec![0.0f32; n * d];
+            eng.tsne_attr(&y, d, &mut f);
+            assert_eq!(f, f_ref, "tsne threads={threads}");
+            let mut g = vec![0.0f32; n * 4];
+            eng.gauss_apply_multi(&coords, &coords, d, 0.8, &x, 4, &mut g);
+            assert_eq!(g, g_ref, "gauss threads={threads}");
+            let (num, den) = eng.meanshift_step(&coords, &coords, d, 0.8);
+            assert_eq!(num, num_ref, "ms num threads={threads}");
+            assert_eq!(den, den_ref, "ms den threads={threads}");
+        }
+    }
+}

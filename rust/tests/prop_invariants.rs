@@ -129,6 +129,203 @@ fn parallel_spmv_deterministic_across_threads() {
     });
 }
 
+/// Random reordered CSB over random points/profile (shared by the HierCsb
+/// invariant properties below).
+fn random_csb(rng: &mut Rng, size: usize) -> (Csr, HierCsb) {
+    let n = 8 + rng.below(size);
+    let d = 1 + rng.below(3);
+    let ds = random_points(rng, n, d);
+    let pr = 1 + rng.below(6);
+    let a = random_csr(rng, n, pr);
+    let tree = BoxTree::build(&ds, 1 + rng.below(40), 20);
+    let pos = invert(&tree.perm);
+    let b = a.permuted(&pos, &pos);
+    // random dense threshold: exercise all-dense, mixed, and all-sparse
+    let thr = rng.f64() * 1.2;
+    let csb = HierCsb::build_with(&b, &tree, &tree, 0, thr);
+    (b, csb)
+}
+
+#[test]
+fn every_nonzero_lands_in_exactly_one_block() {
+    check("block-partition", |rng, size| {
+        let (b, csb) = random_csb(rng, size);
+        // Collect (row, col, value-bits) from the blocks, checking span
+        // membership; multiset equality with the CSR triplets proves each
+        // nonzero lands in exactly one block with its value intact.
+        let mut from_blocks: Vec<(u32, u32, u32)> = Vec::with_capacity(b.nnz());
+        let mut in_span = true;
+        for t in 0..csb.blocks.len() {
+            let blk = csb.blocks[t].clone();
+            csb.for_each_nz(t, |r, c, v| {
+                in_span &= r < blk.rows.len() && c < blk.cols.len();
+                from_blocks.push((blk.rows.lo + r as u32, blk.cols.lo + c as u32, v.to_bits()));
+            });
+        }
+        prop_assert!(in_span, "nonzero outside its block's spans");
+        let mut from_csr: Vec<(u32, u32, u32)> = Vec::with_capacity(b.nnz());
+        for i in 0..b.rows {
+            let (cols, vals) = b.row(i);
+            for (&j, &v) in cols.iter().zip(vals) {
+                from_csr.push((i as u32, j, v.to_bits()));
+            }
+        }
+        from_blocks.sort_unstable();
+        from_csr.sort_unstable();
+        prop_assert!(
+            from_blocks == from_csr,
+            "block nonzeros != csr nonzeros ({} vs {})",
+            from_blocks.len(),
+            from_csr.len()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn arena_offsets_in_bounds_and_non_overlapping() {
+    use nni::csb::hier::BlockKind;
+    check("arena-bounds", |rng, size| {
+        let (_, csb) = random_csb(rng, size);
+        let mut dense_iv: Vec<(usize, usize)> = Vec::new();
+        let mut row_iv: Vec<(usize, usize)> = Vec::new();
+        let mut ent_iv: Vec<(usize, usize)> = Vec::new();
+        for b in &csb.blocks {
+            match b.kind {
+                BlockKind::Dense { off } => {
+                    let lo = off as usize;
+                    let hi = lo + b.rows.len() * b.cols.len();
+                    prop_assert!(hi <= csb.dense.len(), "dense arena overflow");
+                    dense_iv.push((lo, hi));
+                }
+                BlockKind::Sparse {
+                    row_off,
+                    row_cnt,
+                    ptr_off,
+                } => {
+                    let rlo = row_off as usize;
+                    let rhi = rlo + row_cnt as usize;
+                    prop_assert!(rhi <= csb.sp_rows.len(), "sp_rows overflow");
+                    prop_assert!(row_cnt as usize <= b.rows.len(), "more occupied rows than span");
+                    row_iv.push((rlo, rhi));
+                    let plo = ptr_off as usize;
+                    let phi = plo + row_cnt as usize + 1;
+                    prop_assert!(phi <= csb.sp_ptr.len(), "sp_ptr overflow");
+                    // entry pointers: monotone, in-bounds
+                    for w in csb.sp_ptr[plo..phi].windows(2) {
+                        prop_assert!(w[0] <= w[1], "sp_ptr not monotone");
+                    }
+                    let elo = csb.sp_ptr[plo] as usize;
+                    let ehi = csb.sp_ptr[phi - 1] as usize;
+                    prop_assert!(ehi <= csb.sp_val.len(), "entry arena overflow");
+                    prop_assert!(ehi - elo == b.nnz as usize, "entry count != block nnz");
+                    ent_iv.push((elo, ehi));
+                }
+            }
+        }
+        // non-overlap per arena (empty intervals are trivially fine)
+        for iv in [&mut dense_iv, &mut row_iv, &mut ent_iv] {
+            iv.sort_unstable();
+            for w in iv.windows(2) {
+                prop_assert!(w[0].1 <= w[1].0, "overlapping arena intervals {w:?}");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn flat_and_multilevel_schedules_visit_same_blocks() {
+    check("schedule-cover", |rng, size| {
+        let (_, csb) = random_csb(rng, size);
+        // flat_order is a permutation of the stored (multi-level) order …
+        let flat = csb.flat_order();
+        let mut sorted = flat.clone();
+        sorted.sort_unstable();
+        prop_assert!(
+            sorted.iter().enumerate().all(|(i, &t)| i == t as usize),
+            "flat order is not a permutation of the block set"
+        );
+        // … sorted row-major by (tleaf, sleaf) …
+        let keys: Vec<(u32, u32)> = flat
+            .iter()
+            .map(|&t| (csb.blocks[t as usize].tleaf, csb.blocks[t as usize].sleaf))
+            .collect();
+        prop_assert!(keys.windows(2).all(|w| w[0] < w[1]), "flat order not row-major");
+        // … and the stored traversal holds each (tleaf, sleaf) pair once.
+        let mut stored: Vec<(u32, u32)> =
+            csb.blocks.iter().map(|b| (b.tleaf, b.sleaf)).collect();
+        stored.sort_unstable();
+        prop_assert!(
+            stored.windows(2).all(|w| w[0] != w[1]),
+            "duplicate block key in the multi-level schedule"
+        );
+        // keys (flat order) is strictly increasing, stored is sorted:
+        // equality ⇔ both schedules visit exactly the same block set.
+        prop_assert!(
+            stored == keys,
+            "flat and multi-level schedules visit different block sets"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn spmm_columns_bitexact_with_spmv() {
+    check("spmm-bitexact", |rng, size| {
+        let (b, csb) = random_csb(rng, size);
+        let k = 1 + rng.below(5);
+        let x: Vec<f32> = (0..b.cols * k).map(|_| rng.f32() - 0.5).collect();
+        let mut y = vec![0.0f32; b.rows * k];
+        nni::spmv::multilevel::spmm_ml_seq(&csb, &x, &mut y, k);
+        for j in 0..k {
+            let xj: Vec<f32> = (0..b.cols).map(|i| x[i * k + j]).collect();
+            let mut yj = vec![0.0f32; b.rows];
+            nni::spmv::multilevel::spmv_ml_seq(&csb, &xj, &mut yj);
+            for i in 0..b.rows {
+                prop_assert!(
+                    y[i * k + j].to_bits() == yj[i].to_bits(),
+                    "spmm col {j} differs from spmv at row {i}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn parallel_spmm_deterministic_across_threads_and_runs() {
+    // The target-leaf-ownership guarantee at the multi-RHS level: par is
+    // bit-exact equal to seq for thread counts {1, 2, 8}, and repeated
+    // runs are stable.
+    check("spmm-par-deterministic", |rng, size| {
+        let (b, csb) = random_csb(rng, size);
+        let k = 1 + rng.below(4);
+        let x: Vec<f32> = (0..b.cols * k).map(|_| rng.f32()).collect();
+        let mut y_seq = vec![0.0f32; b.rows * k];
+        nni::spmv::multilevel::spmm_ml_seq(&csb, &x, &mut y_seq, k);
+        let mut y_par = vec![0.0f32; b.rows * k];
+        for threads in [1usize, 2, 8] {
+            for _rep in 0..2 {
+                nni::spmv::multilevel::spmm_ml_par(&csb, &x, &mut y_par, k, threads);
+                prop_assert!(y_par == y_seq, "spmm k={k} threads={threads} nondeterminism");
+            }
+        }
+        // and the k=1 matvec path across the same thread set
+        let x1: Vec<f32> = (0..b.cols).map(|_| rng.f32()).collect();
+        let mut y1_seq = vec![0.0f32; b.rows];
+        nni::spmv::multilevel::spmv_ml_seq(&csb, &x1, &mut y1_seq);
+        let mut y1_par = vec![0.0f32; b.rows];
+        for threads in [1usize, 2, 8] {
+            for _rep in 0..2 {
+                nni::spmv::multilevel::spmv_ml_par(&csb, &x1, &mut y1_par, threads);
+                prop_assert!(y1_par == y1_seq, "spmv threads={threads} nondeterminism");
+            }
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn gamma_fast_tracks_exact_on_random_profiles() {
     check("gamma-fast", |rng, size| {
