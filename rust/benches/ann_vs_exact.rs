@@ -7,12 +7,12 @@
 //! Recall is measured against a subsampled exact oracle
 //! (`knn::ann::recall`), so it stays cheap even at sizes where the full
 //! exact build dominates the run.  Writes a JSON trajectory record
-//! (`--out`, default `BENCH_knn.json` — note cargo runs benches with cwd
-//! at the package root `rust/`, so pass `--out ../BENCH_knn.json` to
-//! refresh the repo-root record) with per-size build seconds for both
-//! backends and ANN recall@k.
+//! (`--out`, default `BENCH_knn.json`; relative paths resolve against the
+//! **repo root** via `bench::repo_root_out`, so the record lands in the
+//! same place no matter which directory cargo runs the bench from) with
+//! per-size build seconds for both backends and ANN recall@k.
 
-use nni::bench::{print_header, Table, Workload};
+use nni::bench::{print_header, repo_root_out, Table, Workload};
 use nni::knn::ann::recall::recall_at_k;
 use nni::knn::ann::AnnParams;
 use nni::knn::exact::knn_graph;
@@ -26,12 +26,12 @@ use std::io::Write;
 fn main() {
     let a = Args::new("ANN vs exact kNN build: time + recall trajectory")
         .opt("sizes", "4096,16384,65536", "problem sizes (2^12, 2^14, 2^16)")
-        .opt("k", "10", "neighbors")
+        .opt_usize_min("k", 10, 1, "neighbors")
         .opt("workload", "sift", "sift|gist")
-        .opt("seed", "42", "rng seed")
-        .opt("threads", "0", "0 = all cores")
-        .opt("recall-sample", "512", "recall queries per size")
-        .opt("out", "BENCH_knn.json", "json trajectory record path")
+        .opt_u64("seed", 42, "rng seed")
+        .opt_usize("threads", 0, "0 = all cores")
+        .opt_usize("recall-sample", 512, "recall queries per size")
+        .opt("out", "BENCH_knn.json", "json record path (relative = repo root)")
         .flag("skip-exact", "skip the exact build timing (recall still measured)")
         .parse();
     let threads = if a.get_usize("threads") == 0 {
@@ -101,9 +101,9 @@ fn main() {
         ("testbed", s(&machine_summary())),
         ("points", arr(records)),
     ]);
-    let out = a.get("out");
+    let out = repo_root_out(&a.get("out"));
     let mut f = std::fs::File::create(&out).expect("write trajectory json");
     writeln!(f, "{doc}").expect("write trajectory json");
-    println!("\n[saved {out}]");
+    println!("\n[saved {}]", out.display());
     println!("expected shape: speedup grows ~linearly in n; recall stays >= 0.95");
 }

@@ -1,0 +1,171 @@
+//! **Build-side scaling**: wall time of the three ordering-pipeline build
+//! stages — PCA Gram accumulation (`embed::pca_par`), adaptive tree
+//! construction (`BoxTree::build_par`), and HierCsb assembly
+//! (`HierCsb::build_par`) — across worker counts.  This is the path a
+//! per-batch profile refresh pays on every iteration (mean shift rebuilds
+//! the target tree + CSB each `refresh_every`), so the record tracks the
+//! claim that the build side, not just the apply side, scales with cores.
+//!
+//! Every parallel point is checked **bit-identical** against the
+//! single-thread reference before its timing is recorded — the bench
+//! doubles as a determinism canary on real workload shapes.
+//!
+//! Writes `BENCH_build.json` (relative paths resolve against the repo root
+//! via `bench::repo_root_out`).  `--smoke` runs tiny sizes over threads
+//! {1, 2} for CI.  Methodology: EXPERIMENTS.md §Build-scaling.
+
+use nni::bench::{print_header, repo_root_out, Table, Workload};
+use nni::csb::hier::HierCsb;
+use nni::embed::pca::pca_par;
+use nni::knn::KnnBackend;
+use nni::order::invert;
+use nni::tree::boxtree::BoxTree;
+use nni::util::cli::Args;
+use nni::util::json::{arr, num, obj, s, Json};
+use nni::util::timer::{machine_summary, time_once};
+use std::io::Write;
+
+fn main() {
+    let a = Args::new("build-side scaling: PCA + tree + CSB assembly across thread counts")
+        .opt_usize_min("n", 16384, 64, "problem size")
+        .opt("threads-list", "1,2,4,8", "worker counts to sweep")
+        .opt_usize_min("embed-d", 3, 1, "embedding dimension")
+        .opt_usize_min("k", 16, 1, "profile neighbors")
+        .opt_usize_min("leaf-cap", 16, 1, "ordering-tree leaf capacity")
+        .opt_usize_min("block-cap", 256, 1, "CSB block capacity")
+        .opt_usize_min("reps", 3, 1, "repetitions per point (minimum reported)")
+        .opt_u64("seed", 42, "rng seed")
+        .opt("out", "BENCH_build.json", "json record path (relative = repo root)")
+        .flag("smoke", "CI smoke mode: small n, threads {1,2}, same code paths")
+        .parse();
+    let smoke = a.get_flag("smoke");
+    let n = if smoke { 2048 } else { a.get_usize("n") };
+    let threads_list: Vec<usize> = if smoke {
+        vec![1, 2]
+    } else {
+        a.get_usize_list("threads-list")
+    };
+    let ed = a.get_usize("embed-d");
+    let k = a.get_usize("k").min(n - 1);
+    let leaf_cap = a.get_usize("leaf-cap");
+    let block_cap = a.get_usize("block-cap");
+    let reps = a.get_usize("reps");
+    let seed = a.get_u64("seed");
+    print_header(
+        "build_scaling",
+        "ordering-pipeline build path (PCA Gram, BoxTree, HierCsb) vs worker count",
+    );
+
+    // Fixed inputs shared by every thread count: the clustered SIFT-like
+    // surrogate and its symmetrized kNN profile (ANN backend past the
+    // exact-build comfort zone — the profile is an *input* here).
+    let wl = Workload::Sift;
+    let ds = wl.make_dataset(n, seed);
+    let backend = if n > 4096 {
+        KnnBackend::ann_default()
+    } else {
+        KnnBackend::Exact
+    };
+    let (g, t_knn) = time_once(|| backend.build(&ds, k, 0));
+    let m = nni::sparse::csr::Csr::from_knn(&g, n).symmetrized();
+    println!("# n={n} k={k} nnz={} (knn [{}] {t_knn:.2}s)", m.nnz(), backend.label());
+
+    // Single-thread references for the bit-identity checks.
+    let pca_ref = pca_par(&ds, ed, 10, seed, 1);
+    let embedded_ref = pca_ref.project(&ds, ed);
+    let tree_ref = BoxTree::build(&embedded_ref, leaf_cap, 32);
+    let pos_ref = invert(&tree_ref.perm);
+    let b_ref = m.permuted(&pos_ref, &pos_ref);
+    let csb_ref = HierCsb::build(&b_ref, &tree_ref, &tree_ref, block_cap);
+    println!("# csb: {}", csb_ref.describe());
+
+    let mut points: Vec<(usize, f64, f64, f64)> = Vec::new();
+    for &t in &threads_list {
+        let (mut pca_s, mut tree_s, mut csb_s) = (f64::INFINITY, f64::INFINITY, f64::INFINITY);
+        for _ in 0..reps {
+            let (p, dt) = time_once(|| pca_par(&ds, ed, 10, seed, t));
+            pca_s = pca_s.min(dt);
+            assert!(
+                p.axes.iter().zip(&pca_ref.axes).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "pca not bit-identical at threads={t}"
+            );
+            let (tree, dt) = time_once(|| BoxTree::build_par(&embedded_ref, leaf_cap, 32, t));
+            tree_s = tree_s.min(dt);
+            assert_eq!(tree.perm, tree_ref.perm, "tree perm differs at threads={t}");
+            assert_eq!(tree.leaf_at, tree_ref.leaf_at, "leaf_at differs at threads={t}");
+            assert_eq!(tree.nodes.len(), tree_ref.nodes.len());
+            let (csb, dt) = time_once(|| HierCsb::build_par(&b_ref, &tree, &tree, block_cap, t));
+            csb_s = csb_s.min(dt);
+            assert_eq!(csb.blocks, csb_ref.blocks, "block layout differs at threads={t}");
+            let dense_eq =
+                csb.dense.iter().zip(&csb_ref.dense).all(|(x, y)| x.to_bits() == y.to_bits());
+            let val_eq =
+                csb.sp_val.iter().zip(&csb_ref.sp_val).all(|(x, y)| x.to_bits() == y.to_bits());
+            assert!(
+                dense_eq
+                    && val_eq
+                    && csb.sp_rows == csb_ref.sp_rows
+                    && csb.sp_ptr == csb_ref.sp_ptr
+                    && csb.sp_col == csb_ref.sp_col,
+                "csb arenas differ at threads={t}"
+            );
+        }
+        points.push((t, pca_s, tree_s, csb_s));
+    }
+
+    // Speedup baseline: the measured single-thread point when the sweep
+    // includes one (whatever its position), else the smallest thread count.
+    let baseline = points
+        .iter()
+        .find(|p| p.0 == 1)
+        .or_else(|| points.iter().min_by_key(|p| p.0))
+        .map(|&(_, p, tr, c)| p + tr + c)
+        .unwrap_or(f64::NAN);
+    let mut table = Table::new(
+        "build_scaling",
+        &["threads", "pca_ms", "tree_ms", "csb_ms", "total_ms", "speedup_vs_1"],
+    );
+    let mut records: Vec<Json> = Vec::new();
+    for &(t, pca_s, tree_s, csb_s) in &points {
+        let total = pca_s + tree_s + csb_s;
+        let speedup = baseline / total;
+        table.row(vec![
+            t.to_string(),
+            format!("{:.3}", pca_s * 1e3),
+            format!("{:.3}", tree_s * 1e3),
+            format!("{:.3}", csb_s * 1e3),
+            format!("{:.3}", total * 1e3),
+            format!("{speedup:.2}"),
+        ]);
+        records.push(obj(vec![
+            ("threads", num(t as f64)),
+            ("pca_seconds", num(pca_s)),
+            ("tree_seconds", num(tree_s)),
+            ("csb_seconds", num(csb_s)),
+            ("total_seconds", num(total)),
+            ("speedup_vs_1", num(speedup)),
+        ]));
+    }
+    table.finish();
+
+    let doc = obj(vec![
+        ("bench", s("build_scaling")),
+        ("workload", s(wl.name())),
+        ("n", num(n as f64)),
+        ("k", num(k as f64)),
+        ("block_cap", num(block_cap as f64)),
+        ("status", s("measured")),
+        ("testbed", s(&machine_summary())),
+        (
+            "expected_shape",
+            s("total_seconds decreases (speedup_vs_1 grows) as threads grow, up to the \
+               core count; every point is asserted bit-identical to the single-thread build"),
+        ),
+        ("points", arr(records)),
+    ]);
+    let out = repo_root_out(&a.get("out"));
+    let mut f = std::fs::File::create(&out).expect("write build json");
+    writeln!(f, "{doc}").expect("write build json");
+    println!("\n[saved {}]", out.display());
+    println!("expected shape: build wall-time decreases as threads grow; identity asserted.");
+}

@@ -13,7 +13,7 @@
 //! the *ranking* across orderings and the γ-consistency are the
 //! reproducible shape here.
 
-use nni::bench::{pipeline_for, print_header, Table, Workload};
+use nni::bench::{pipeline_for, print_header, repo_root_out, Table, Workload};
 use nni::csb::hier::HierCsb;
 use nni::interact::engine::Engine;
 use nni::order::OrderingKind;
@@ -29,15 +29,15 @@ use std::io::Write;
 fn main() {
     let a = Args::new("Fig. 3: attractive-force time ratios per ordering")
         .opt("sizes", "2048,4096,8192", "problem sizes (paper: 2^11..2^17)")
-        .opt("seed", "42", "rng seed")
-        .opt("threads", "0", "0 = all cores")
-        .opt("block-cap", "2048", "CSB block capacity")
+        .opt_u64("seed", 42, "rng seed")
+        .opt_usize("threads", 0, "0 = all cores")
+        .opt_usize_min("block-cap", 2048, 1, "CSB block capacity")
         .opt("rhs", "1,2,4,8", "multi-RHS sweep batch widths")
-        .opt("rhs-n", "4096", "problem size of the multi-RHS sweep")
+        .opt_usize_min("rhs-n", 4096, 1, "problem size of the multi-RHS sweep")
         .opt(
             "interact-out",
-            "../BENCH_interact.json",
-            "multi-RHS sweep json record (cargo bench cwd is rust/, so the default lands at the repo root)",
+            "BENCH_interact.json",
+            "multi-RHS sweep json record (relative = repo root)",
         )
         .flag("gist", "also run the GIST-like workload (slow kNN at D=960)")
         .flag("smoke", "CI smoke mode: tiny sizes, same code paths")
@@ -101,7 +101,13 @@ fn main() {
                 // is exactly what a non-hierarchical ordering offers.
                 let engine = match (&r.tree, &r.embedded) {
                     (Some(tree), _) => {
-                        let csb = HierCsb::build(&r.reordered, tree, tree, a.get_usize("block-cap"));
+                        let csb = HierCsb::build_par(
+                            &r.reordered,
+                            tree,
+                            tree,
+                            a.get_usize("block-cap"),
+                            threads,
+                        );
                         Engine::new(csb, threads)
                     }
                     (None, _) => {
@@ -174,7 +180,7 @@ fn multi_rhs_sweep(n: usize, ks: &[usize], seed: u64, threads: usize, out_path: 
     let r = pipeline_for(&OrderingKind::DualTree { d: 3 }, seed).run(&ds, &m);
     let tree = r.tree.as_ref().unwrap();
     // PJRT-path dense threshold: the micro-GEMM wants dense blocks.
-    let csb = HierCsb::build_with(&r.reordered, tree, tree, 256, 0.25);
+    let csb = HierCsb::build_with_par(&r.reordered, tree, tree, 256, 0.25, threads);
     println!("# {}", csb.describe());
     let coords = ds.permuted(&r.perm).raw().to_vec();
     let d = ds.d();
@@ -237,6 +243,7 @@ fn multi_rhs_sweep(n: usize, ks: &[usize], seed: u64, threads: usize, out_path: 
         );
     }
     table.finish();
+    let out_path = repo_root_out(out_path);
     let doc = obj(vec![
         ("bench", s("fig3_multirhs")),
         ("workload", s(wl.name())),
@@ -249,9 +256,9 @@ fn multi_rhs_sweep(n: usize, ks: &[usize], seed: u64, threads: usize, out_path: 
         ),
         ("points", arr(records)),
     ]);
-    let mut f = std::fs::File::create(out_path).expect("write interact json");
+    let mut f = std::fs::File::create(&out_path).expect("write interact json");
     writeln!(f, "{doc}").expect("write interact json");
-    println!("\n[saved {out_path}]");
+    println!("\n[saved {}]", out_path.display());
     println!("per_rhs_speedup = (k x scalar time) / batched time; k=1 rows are the parity check.");
 }
 

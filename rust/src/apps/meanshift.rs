@@ -39,9 +39,24 @@ pub struct MeanShiftConfig {
     /// Mode merge radius (defaults to bandwidth when 0).
     pub merge_radius: f64,
     pub threads: usize,
+    /// Build-side workers of the per-refresh rebuild (target tree + CSB
+    /// assembly): 0 = follow `threads`.  Bit-identical across counts.
+    pub build_threads: usize,
     pub leaf_cap: usize,
     /// kNN backend for the target→source profile (exact or approximate).
     pub knn: KnnBackend,
+}
+
+impl MeanShiftConfig {
+    /// Build-side worker count: explicit `build_threads`, else `threads`
+    /// (either may be 0 = machine default).
+    fn resolved_build_threads(&self) -> usize {
+        if self.build_threads != 0 {
+            self.build_threads
+        } else {
+            self.threads
+        }
+    }
 }
 
 impl Default for MeanShiftConfig {
@@ -54,6 +69,7 @@ impl Default for MeanShiftConfig {
             refresh_every: 5,
             merge_radius: 0.0,
             threads: 0,
+            build_threads: 0,
             leaf_cap: 128,
             knn: KnnBackend::Exact,
         }
@@ -87,8 +103,10 @@ fn build_structure(
     cfg: &MeanShiftConfig,
     src_forest: Option<&PcaForest>,
 ) -> Structure {
-    // Target tree over current means.
-    let ttree = BoxTree::build(targets, 16, 32);
+    // Target tree over current means — rebuilt every refresh, so this is
+    // the hot build path the parallel construction exists for.
+    let build_threads = cfg.resolved_build_threads();
+    let ttree = BoxTree::build_par(targets, 16, 32, build_threads);
     let tperm = ttree.perm.clone();
     let tpos = invert(&tperm);
     // kNN of (reordered) targets against (already ordered) sources, built
@@ -114,7 +132,13 @@ fn build_structure(
     };
     let a = Csr::from_knn(&g, sources_ordered.n());
     let _ = tpos;
-    let csb = HierCsb::build(&a, &ttree_identity(&ttree), stree, cfg.leaf_cap);
+    let csb = HierCsb::build_par(
+        &a,
+        &ttree_identity(&ttree),
+        stree,
+        cfg.leaf_cap,
+        build_threads,
+    );
     Structure {
         engine: Engine::new(csb, cfg.threads),
         tperm,
@@ -136,7 +160,7 @@ pub fn run(data: &Dataset, cfg: &MeanShiftConfig) -> MeanShiftResult {
     let inv_h2 = (1.0 / (2.0 * cfg.bandwidth * cfg.bandwidth)) as f32;
 
     // Fixed source structure.
-    let stree = BoxTree::build(data, 16, 32);
+    let stree = BoxTree::build_par(data, 16, 32, cfg.resolved_build_threads());
     let sources_ordered = data.permuted(&stree.perm);
 
     // ANN backend: the source forest depends only on the stationary

@@ -45,6 +45,9 @@ pub struct TsneConfig {
     pub momentum_start: f32,
     pub momentum_final: f32,
     pub threads: usize,
+    /// Build-side workers of the reorder (PCA, tree, CSB assembly):
+    /// 0 = follow `threads`.  Bit-identical across counts.
+    pub build_threads: usize,
     pub seed: u64,
     /// Leaf capacity of the dual-tree reorder.
     pub leaf_cap: usize,
@@ -67,6 +70,7 @@ impl Default for TsneConfig {
             momentum_start: 0.5,
             momentum_final: 0.8,
             threads: 0,
+            build_threads: 0,
             seed: 42,
             leaf_cap: 256,
             use_pjrt: false,
@@ -224,13 +228,29 @@ pub fn run(ds: &Dataset, cfg: &TsneConfig, registry: Option<ArtifactRegistry>) -
     let g = cfg.knn.build(ds, cfg.k, pool.threads);
     let p = joint_probabilities(&g, cfg.perplexity, &pool);
 
-    // 2. Hierarchical reorder of the (fixed) profile.
-    let pipe = Pipeline::dual_tree(3).with_seed(cfg.seed).run(ds, &p);
+    // 2. Hierarchical reorder of the (fixed) profile, built in parallel
+    // (bit-identical to the sequential build at any worker count).
+    let build_threads = if cfg.build_threads != 0 {
+        cfg.build_threads
+    } else {
+        pool.threads
+    };
+    let pipe = Pipeline::dual_tree(3)
+        .with_seed(cfg.seed)
+        .with_build_threads(build_threads)
+        .run(ds, &p);
     let tree = pipe.tree.as_ref().unwrap();
     // Lower dense threshold on the PJRT path: densified blocks are exactly
     // what the AOT artifacts consume (zero-padding is free on the MXU).
     let dense_thr = if cfg.use_pjrt { 0.25 } else { 0.6 };
-    let csb = HierCsb::build_with(&pipe.reordered, tree, tree, cfg.leaf_cap, dense_thr);
+    let csb = HierCsb::build_with_par(
+        &pipe.reordered,
+        tree,
+        tree,
+        cfg.leaf_cap,
+        dense_thr,
+        build_threads,
+    );
     let engine = Engine::new(csb, pool.threads);
     let mut coord = Coordinator::new(
         engine,

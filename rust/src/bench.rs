@@ -61,6 +61,27 @@ pub fn pipeline_for(kind: &OrderingKind, seed: u64) -> Pipeline {
     p
 }
 
+/// Resolve a bench record path against the **repo root** (the parent of the
+/// crate manifest directory), so JSON records land at the repo root no
+/// matter what cwd cargo runs the bench with (`rust/` for `cargo bench`,
+/// the workspace root for direct binary invocation — the old `../…`
+/// defaults scattered files in the latter case).  Absolute paths pass
+/// through untouched.
+pub fn repo_root_out(path: &str) -> PathBuf {
+    let p = PathBuf::from(path);
+    if p.is_absolute() {
+        return p;
+    }
+    // Runtime CARGO_MANIFEST_DIR (set by cargo for run/bench/test), falling
+    // back to the compile-time value for bare binary invocations.
+    let manifest = std::env::var("CARGO_MANIFEST_DIR")
+        .unwrap_or_else(|_| env!("CARGO_MANIFEST_DIR").to_string());
+    match PathBuf::from(manifest).parent() {
+        Some(root) => root.join(&p),
+        None => p,
+    }
+}
+
 /// Output directory for bench artifacts (tables, rasters, json records).
 pub fn out_dir() -> PathBuf {
     let dir = PathBuf::from(
@@ -168,6 +189,21 @@ mod tests {
                 assert!(a.get(j as usize, i) != 0.0);
             }
         }
+    }
+
+    #[test]
+    fn repo_root_out_resolves_against_workspace_root() {
+        let p = repo_root_out("BENCH_test.json");
+        assert!(p.ends_with("BENCH_test.json"));
+        // the resolved parent is the repo root: it contains the crate dir
+        let root = p.parent().unwrap();
+        assert!(
+            root.join("rust").join("Cargo.toml").exists(),
+            "resolved root {root:?} is not the repo root"
+        );
+        // absolute paths pass through
+        let abs = if cfg!(windows) { "C:\\x\\y.json" } else { "/x/y.json" };
+        assert_eq!(repo_root_out(abs), PathBuf::from(abs));
     }
 
     #[test]

@@ -12,6 +12,7 @@
 
 use crate::coordinator::batcher::{BatchPlan, BatchPolicy, QueryBatcher, Route};
 use crate::coordinator::metrics::Metrics;
+use crate::par::pool::SendPtr;
 use crate::csb::hier::{HierCsb, LeafBlock};
 use crate::interact::engine::{tsne_block, BlockScratch, Engine};
 use crate::runtime::{ArtifactRegistry, Tensor};
@@ -97,9 +98,6 @@ impl Coordinator {
         let rust_by_target = &self.rust_by_target;
         let mut rust_secs = 0.0;
         Metrics::time_phase(&mut rust_secs, || {
-            struct SendPtr(*mut f32);
-            unsafe impl Send for SendPtr {}
-            unsafe impl Sync for SendPtr {}
             let fp = SendPtr(force.as_mut_ptr());
             let fpr = &fp;
             self.engine.pool.for_each_chunked(rust_by_target.len(), 4, |tl| {
@@ -127,7 +125,10 @@ impl Coordinator {
         let mut pjrt_secs = 0.0;
         let single_name = format!("tsne_d{d}_m256");
         let batch_name = format!("tsne_d{d}_m128_b8");
-        let registry = self.registry.as_ref().unwrap();
+        let registry = self.registry.as_ref().expect(
+            "PJRT phase entered without an artifact registry — BatchPlan must route \
+             every block to Rust when the Coordinator is built with registry=None",
+        );
         let have_single = registry.variants.contains_key(&single_name);
         let have_batch = registry.variants.contains_key(&batch_name);
 
@@ -239,7 +240,10 @@ fn run_tsne_single(
             Tensor::new(vec![tile], sv),
         ],
     )?;
-    Ok(outs.into_iter().next().unwrap())
+    Ok(outs
+        .into_iter()
+        .next()
+        .expect("PJRT artifact executed but returned no output tensor"))
 }
 
 /// Pack up to `batch` blocks into the batched artifact and execute;

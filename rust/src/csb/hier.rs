@@ -16,6 +16,7 @@
 //! * **flat** — row-major over (target leaf, source leaf), i.e. classic
 //!   single-level CSB; kept for the ablation benches.
 
+use crate::par::pool::{SendPtr, ThreadPool};
 use crate::sparse::csr::Csr;
 use crate::tree::boxtree::BoxTree;
 use std::collections::HashMap;
@@ -45,7 +46,7 @@ impl Span {
 /// *linearly*, which is the whole point of the reordering exercise — the
 /// perf pass measured ~240 ns/block of pointer-chasing overhead with
 /// per-block allocations (repo-root `EXPERIMENTS.md` §Perf).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum BlockKind {
     /// Row-major `rows.len() x cols.len()` values at `dense[off..]`.
     Dense { off: u32 },
@@ -61,7 +62,7 @@ pub enum BlockKind {
 }
 
 /// One (target leaf × source leaf) block (metadata; payload in the arenas).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct LeafBlock {
     /// Target (row) leaf ordinal and source (column) leaf ordinal.
     pub tleaf: u32,
@@ -134,6 +135,36 @@ impl HierCsb {
         block_cap: usize,
         dense_threshold: f64,
     ) -> HierCsb {
+        Self::build_with_par(a, tgt_tree, src_tree, block_cap, dense_threshold, 1)
+    }
+
+    /// Parallel build with the default dense threshold (`threads = 0` means
+    /// the machine default).
+    pub fn build_par(
+        a: &Csr,
+        tgt_tree: &BoxTree,
+        src_tree: &BoxTree,
+        block_cap: usize,
+        threads: usize,
+    ) -> HierCsb {
+        Self::build_with_par(a, tgt_tree, src_tree, block_cap, 0.6, threads)
+    }
+
+    /// The assembly proper: count → exclusive scan → parallel fill into the
+    /// four shared arenas.  Every arena region belongs to exactly one block
+    /// and every block to exactly one **target leaf** (the same ownership
+    /// discipline as `spmv::multilevel::spmm_ml_par`), so target leaves fill
+    /// concurrently with no synchronization — and because each block is
+    /// filled by one leaf's fixed row scan, the result is **bit-identical**
+    /// across thread counts.
+    pub fn build_with_par(
+        a: &Csr,
+        tgt_tree: &BoxTree,
+        src_tree: &BoxTree,
+        block_cap: usize,
+        dense_threshold: f64,
+        threads: usize,
+    ) -> HierCsb {
         assert_eq!(a.rows, tgt_tree.n());
         assert_eq!(a.cols, src_tree.n());
         let block_cap = if block_cap == 0 { LEAF_POINTS } else { block_cap };
@@ -154,113 +185,219 @@ impl HierCsb {
             })
             .collect();
 
-        // Map row/col -> leaf ordinal.
-        let row_leaf = leaf_lookup(&tgt_leaves, a.rows);
+        // Map col -> source leaf ordinal (rows are scanned per target leaf).
         let col_leaf = leaf_lookup(&src_leaves, a.cols);
+        let pool = ThreadPool::new_or_default(threads);
+        let nt = tgt_leaves.len();
+        let ns = src_leaves.len();
 
-        // Bucket nonzeros into (tleaf, sleaf) blocks.
-        let mut buckets: HashMap<(u32, u32), Vec<(u32, u16, f32)>> = HashMap::new();
-        for i in 0..a.rows {
-            let tl = row_leaf[i];
-            let (cols, vals) = a.row(i);
-            let local_row = (i as u32) - tgt_leaves[tl as usize].lo;
-            for (&j, &v) in cols.iter().zip(vals) {
-                let sl = col_leaf[j as usize];
-                let local_col = (j - src_leaves[sl as usize].lo) as u16;
-                buckets
-                    .entry((tl, sl))
-                    .or_default()
-                    .push((local_row, local_col, v));
-            }
+        // Pass 1 — count (parallel over target leaves): the occupied source
+        // leaves of each target leaf, with per-block nnz and occupied-row
+        // counts.  Counts depend only on the leaf's own rows, so the result
+        // is thread-count independent.  The per-leaf state is a sorted vec
+        // of just the *occupied* blocks — O(nnz + blocks) per leaf, not
+        // O(src_leaves) scratch per leaf, which would make the count pass
+        // quadratic in the leaf count at scale.  CSR rows have ascending
+        // columns, so equal source leaves arrive in runs and the cached
+        // index hits for all but the first entry of each run.
+        #[derive(Clone, Default)]
+        struct LeafCount {
+            sl: u32,
+            nnz: u32,
+            rows: u32,
+            /// Last row counted for this block (count-pass scratch).
+            last_row: u32,
         }
-
-        // Shell blocks (metadata + raw entries), then order by the
-        // multi-level traversal, then pack the arenas in that order so the
-        // hot loop walks memory linearly.
-        struct Shell {
-            tleaf: u32,
-            sleaf: u32,
-            ents: Vec<(u32, u16, f32)>,
-        }
-        let mut shells: Vec<Shell> = buckets
-            .into_iter()
-            .map(|((tl, sl), ents)| Shell {
-                tleaf: tl,
-                sleaf: sl,
-                ents,
-            })
-            .collect();
-
-        let keys: Vec<(u32, u32)> = shells.iter().map(|s| (s.tleaf, s.sleaf)).collect();
-        let order = multilevel_order(tgt_tree, src_tree, &tgt_leaf_ids, &src_leaf_ids, &keys);
-        let mut index: HashMap<(u32, u32), usize> = HashMap::new();
-        for (t, s) in shells.iter().enumerate() {
-            index.insert((s.tleaf, s.sleaf), t);
-        }
-        let mut shell_order: Vec<usize> = Vec::with_capacity(shells.len());
-        for key in order {
-            if let Some(&t) = index.get(&key) {
-                shell_order.push(t);
-            }
-        }
-        assert_eq!(shell_order.len(), shells.len(), "traversal missed blocks");
-
-        let mut blocks: Vec<LeafBlock> = Vec::with_capacity(shells.len());
-        let mut dense: Vec<f32> = Vec::new();
-        let mut sp_rows: Vec<u16> = Vec::new();
-        let mut sp_ptr: Vec<u32> = Vec::new();
-        let mut sp_col: Vec<u16> = Vec::new();
-        let mut sp_val: Vec<f32> = Vec::new();
-        for &si in &shell_order {
-            let shell = &mut shells[si];
-            let rows = tgt_leaves[shell.tleaf as usize];
-            let cols = src_leaves[shell.sleaf as usize];
-            let nnz = shell.ents.len() as u32;
-            let area = rows.len() * cols.len();
-            let density = nnz as f64 / area as f64;
-            let kind = if density >= dense_threshold {
-                let off = dense.len() as u32;
-                dense.resize(dense.len() + area, 0.0);
-                let d = &mut dense[off as usize..];
-                for &(r, c, v) in &shell.ents {
-                    d[r as usize * cols.len() + c as usize] += v;
+        let leaf_idx: Vec<usize> = (0..nt).collect();
+        let per_leaf: Vec<Vec<LeafCount>> = pool.map(&leaf_idx, |&tl| {
+            let span = tgt_leaves[tl];
+            let mut counts: Vec<LeafCount> = Vec::new();
+            for i in span.lo..span.hi {
+                let (cols, _) = a.row(i as usize);
+                let mut cached: Option<usize> = None;
+                for &j in cols {
+                    let sl = col_leaf[j as usize];
+                    let li = match cached {
+                        Some(li) if counts[li].sl == sl => li,
+                        _ => match counts.binary_search_by_key(&sl, |c| c.sl) {
+                            Ok(li) => li,
+                            Err(pos) => {
+                                counts.insert(
+                                    pos,
+                                    LeafCount {
+                                        sl,
+                                        nnz: 0,
+                                        rows: 0,
+                                        last_row: u32::MAX,
+                                    },
+                                );
+                                pos
+                            }
+                        },
+                    };
+                    counts[li].nnz += 1;
+                    if counts[li].last_row != i {
+                        counts[li].last_row = i;
+                        counts[li].rows += 1;
+                    }
+                    cached = Some(li);
                 }
+            }
+            counts
+        });
+
+        // Block keys, ordered by the multi-level traversal.
+        let keys: Vec<(u32, u32)> = per_leaf
+            .iter()
+            .enumerate()
+            .flat_map(|(tl, cs)| cs.iter().map(move |c| (tl as u32, c.sl)))
+            .collect();
+        let order = multilevel_order(tgt_tree, src_tree, &tgt_leaf_ids, &src_leaf_ids, &keys);
+        assert_eq!(order.len(), keys.len(), "traversal missed blocks");
+
+        // Exclusive scan — arena offsets in traversal order, so the hot
+        // loop walks memory linearly.
+        let mut blocks: Vec<LeafBlock> = Vec::with_capacity(order.len());
+        let mut ent_base: Vec<u32> = Vec::with_capacity(order.len());
+        let (mut dense_len, mut rows_len, mut ptr_len, mut ents_len) =
+            (0usize, 0usize, 0usize, 0usize);
+        for &(tl, sl) in &order {
+            let counts = &per_leaf[tl as usize];
+            let c = &counts[counts
+                .binary_search_by_key(&sl, |c| c.sl)
+                .expect("traversal emitted an uncounted block")];
+            let rows = tgt_leaves[tl as usize];
+            let cols = src_leaves[sl as usize];
+            let area = rows.len() * cols.len();
+            let density = c.nnz as f64 / area as f64;
+            let kind = if density >= dense_threshold {
+                let off = dense_len as u32;
+                dense_len += area;
+                ent_base.push(0);
                 BlockKind::Dense { off }
             } else {
-                shell.ents.sort_unstable_by_key(|&(r, c, _)| (r, c));
-                let row_off = sp_rows.len() as u32;
-                let ptr_off = sp_ptr.len() as u32;
-                sp_ptr.push(sp_col.len() as u32);
-                for &(r, c, v) in &shell.ents {
-                    if sp_rows.len() == row_off as usize
-                        || *sp_rows.last().unwrap() != r as u16
-                    {
-                        sp_rows.push(r as u16);
-                        sp_ptr.push(sp_col.len() as u32);
-                    }
-                    sp_col.push(c);
-                    sp_val.push(v);
-                    *sp_ptr.last_mut().unwrap() = sp_col.len() as u32;
-                }
-                BlockKind::Sparse {
-                    row_off,
-                    row_cnt: sp_rows.len() as u32 - row_off,
-                    ptr_off,
-                }
+                let k = BlockKind::Sparse {
+                    row_off: rows_len as u32,
+                    row_cnt: c.rows,
+                    ptr_off: ptr_len as u32,
+                };
+                rows_len += c.rows as usize;
+                ptr_len += c.rows as usize + 1;
+                ent_base.push(ents_len as u32);
+                ents_len += c.nnz as usize;
+                k
             };
             blocks.push(LeafBlock {
-                tleaf: shell.tleaf,
-                sleaf: shell.sleaf,
+                tleaf: tl,
+                sleaf: sl,
                 rows,
                 cols,
-                nnz,
+                nnz: c.nnz,
                 kind,
             });
         }
-
-        let mut by_target: Vec<Vec<u32>> = vec![Vec::new(); tgt_leaves.len()];
+        let mut by_target: Vec<Vec<u32>> = vec![Vec::new(); nt];
         for (t, b) in blocks.iter().enumerate() {
             by_target[b.tleaf as usize].push(t as u32);
+        }
+        // Per target leaf, (source leaf → block index), sorted for the
+        // fill-pass lookups.
+        let mut lookup: Vec<Vec<(u32, u32)>> = vec![Vec::new(); nt];
+        for (t, b) in blocks.iter().enumerate() {
+            lookup[b.tleaf as usize].push((b.sleaf, t as u32));
+        }
+        for l in lookup.iter_mut() {
+            l.sort_unstable();
+        }
+
+        // Pass 2 — fill (parallel over target leaves).
+        let mut dense = vec![0.0f32; dense_len];
+        let mut sp_rows = vec![0u16; rows_len];
+        let mut sp_ptr = vec![0u32; ptr_len];
+        let mut sp_col = vec![0u16; ents_len];
+        let mut sp_val = vec![0.0f32; ents_len];
+        {
+            let dp = SendPtr(dense.as_mut_ptr());
+            let rp = SendPtr(sp_rows.as_mut_ptr());
+            let pp = SendPtr(sp_ptr.as_mut_ptr());
+            let cp = SendPtr(sp_col.as_mut_ptr());
+            let vp = SendPtr(sp_val.as_mut_ptr());
+            let (dpr, rpr, ppr, cpr, vpr) = (&dp, &rp, &pp, &cp, &vp);
+            let blocks_ref = &blocks;
+            let lookup_ref = &lookup;
+            let ent_base_ref = &ent_base;
+            let tgt_leaves_ref = &tgt_leaves;
+            let col_leaf_ref = &col_leaf;
+            pool.for_each_chunked(nt, 1, |tl| {
+                // SAFETY: every write lands in an arena region of a block
+                // owned by target leaf `tl`; block regions are disjoint.
+                let dense_all: &mut [f32] =
+                    unsafe { std::slice::from_raw_parts_mut(dpr.0, dense_len) };
+                let rows_all: &mut [u16] =
+                    unsafe { std::slice::from_raw_parts_mut(rpr.0, rows_len) };
+                let ptr_all: &mut [u32] =
+                    unsafe { std::slice::from_raw_parts_mut(ppr.0, ptr_len) };
+                let col_all: &mut [u16] =
+                    unsafe { std::slice::from_raw_parts_mut(cpr.0, ents_len) };
+                let val_all: &mut [f32] =
+                    unsafe { std::slice::from_raw_parts_mut(vpr.0, ents_len) };
+                let lst = &lookup_ref[tl];
+                let mut ents_written = vec![0u32; lst.len()];
+                let mut rows_written = vec![0u32; lst.len()];
+                let mut cur_row = vec![u32::MAX; lst.len()];
+                for &(_, bi) in lst {
+                    if let BlockKind::Sparse { ptr_off, .. } = blocks_ref[bi as usize].kind {
+                        // ptr[0] = block entry base; ptr[1 + t] (filled
+                        // below) = end of occupied row t.
+                        ptr_all[ptr_off as usize] = ent_base_ref[bi as usize];
+                    }
+                }
+                let span = tgt_leaves_ref[tl];
+                for i in span.lo..span.hi {
+                    let local_row = i - span.lo;
+                    let (cols, vals) = a.row(i as usize);
+                    // Same run cache as the count pass: ascending columns
+                    // deliver equal source leaves in runs, so the lookup is
+                    // O(1) amortized instead of a search per nonzero.
+                    let mut cached = usize::MAX;
+                    for (&j, &v) in cols.iter().zip(vals) {
+                        let sl = col_leaf_ref[j as usize];
+                        let li = if cached != usize::MAX && lst[cached].0 == sl {
+                            cached
+                        } else {
+                            lst.binary_search_by_key(&sl, |e| e.0)
+                                .expect("entry in uncounted block")
+                        };
+                        cached = li;
+                        let bi = lst[li].1 as usize;
+                        let b = &blocks_ref[bi];
+                        match b.kind {
+                            BlockKind::Dense { off } => {
+                                let w = b.cols.len();
+                                let c = (j - b.cols.lo) as usize;
+                                dense_all[off as usize + local_row as usize * w + c] += v;
+                            }
+                            BlockKind::Sparse {
+                                row_off, ptr_off, ..
+                            } => {
+                                let base = ent_base_ref[bi];
+                                if cur_row[li] != i {
+                                    cur_row[li] = i;
+                                    rows_all[row_off as usize + rows_written[li] as usize] =
+                                        local_row as u16;
+                                    rows_written[li] += 1;
+                                }
+                                let e = (base + ents_written[li]) as usize;
+                                col_all[e] = (j - b.cols.lo) as u16;
+                                val_all[e] = v;
+                                ents_written[li] += 1;
+                                ptr_all[ptr_off as usize + rows_written[li] as usize] =
+                                    base + ents_written[li];
+                            }
+                        }
+                    }
+                }
+            });
         }
 
         HierCsb {
@@ -829,6 +966,40 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn build_par_bitidentical_with_sequential() {
+        let ds = SynthSpec::blobs(500, 3, 4, 11).generate();
+        let g = knn_graph(&ds, 8, 2);
+        let a = Csr::from_knn(&g, 500).symmetrized();
+        let r = Pipeline::dual_tree(3).run(&ds, &a);
+        let tree = r.tree.as_ref().unwrap();
+        let seq = HierCsb::build_with(&r.reordered, tree, tree, 32, 0.4);
+        for threads in [1usize, 2, 8] {
+            let par = HierCsb::build_with_par(&r.reordered, tree, tree, 32, 0.4, threads);
+            assert_eq!(seq.tgt_leaves, par.tgt_leaves, "threads={threads}");
+            assert_eq!(seq.src_leaves, par.src_leaves);
+            assert_eq!(seq.blocks, par.blocks, "block layout, threads={threads}");
+            assert_eq!(seq.by_target, par.by_target);
+            assert_eq!(seq.sp_rows, par.sp_rows);
+            assert_eq!(seq.sp_ptr, par.sp_ptr);
+            assert_eq!(seq.sp_col, par.sp_col);
+            assert_eq!(seq.dense.len(), par.dense.len());
+            assert!(
+                seq.dense
+                    .iter()
+                    .zip(&par.dense)
+                    .all(|(x, y)| x.to_bits() == y.to_bits()),
+                "dense arena differs, threads={threads}"
+            );
+            assert_eq!(seq.sp_val.len(), par.sp_val.len());
+            assert!(seq
+                .sp_val
+                .iter()
+                .zip(&par.sp_val)
+                .all(|(x, y)| x.to_bits() == y.to_bits()));
         }
     }
 

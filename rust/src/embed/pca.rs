@@ -63,25 +63,57 @@ impl Pca {
     }
 }
 
+/// Fixed row-chunk size of the parallel Gram/variance accumulations.  The
+/// chunking is **independent of the thread count** and the per-chunk
+/// partials are reduced in chunk order, so `pca_par` is bit-identical
+/// across `threads` values (f64 addition is not associative; thread-count-
+/// dependent chunk boundaries would regroup the sums).  256 rows keeps a
+/// chunk ~10⁵ flops at SIFT-like dimensions — large enough to amortize the
+/// claim, small enough to balance the pool.
+const PCA_CHUNK: usize = 256;
+
+/// Fixed chunking of `0..n` (see [`PCA_CHUNK`]).
+fn fixed_ranges(n: usize) -> Vec<(usize, usize)> {
+    (0..n)
+        .step_by(PCA_CHUNK)
+        .map(|lo| (lo, (lo + PCA_CHUNK).min(n)))
+        .collect()
+}
+
+/// Compute the top-`d` principal axes of `ds` with the machine-default
+/// worker count (see [`pca_par`]).
+pub fn pca(ds: &Dataset, d: usize, iters: usize, seed: u64) -> Pca {
+    pca_par(ds, d, iters, seed, 0)
+}
+
 /// Compute the top-`d` principal axes of `ds`.
 ///
 /// `iters` subspace iterations (8–12 suffice for the well-separated spectra
-/// the reordering cares about); deterministic for a given `seed`.
-pub fn pca(ds: &Dataset, d: usize, iters: usize, seed: u64) -> Pca {
+/// the reordering cares about); deterministic for a given `seed`, and
+/// bit-identical across `threads` values (0 = machine default,
+/// `NNI_THREADS`-respecting): partial Gram/variance sums are accumulated
+/// over fixed-size row chunks and reduced in chunk order.
+pub fn pca_par(ds: &Dataset, d: usize, iters: usize, seed: u64, threads: usize) -> Pca {
     let n = ds.n();
     let dim = ds.d();
     let d = d.min(dim);
     let mean = ds.mean();
-    let pool = ThreadPool::with_default();
+    let pool = ThreadPool::new_or_default(threads);
+    let ranges = fixed_ranges(n);
 
-    // Total variance = (1/n) sum_i |x_i - mean|^2.
-    let mut total = 0.0f64;
-    for i in 0..n {
-        for (k, &v) in ds.row(i).iter().enumerate() {
-            let t = (v - mean[k]) as f64;
-            total += t * t;
+    // Total variance = (1/n) sum_i |x_i - mean|^2, chunk partials reduced
+    // in fixed order.
+    let partial_var: Vec<f64> = pool.map(&ranges, |&(lo, hi)| {
+        let mut acc = 0.0f64;
+        for i in lo..hi {
+            for (k, &v) in ds.row(i).iter().enumerate() {
+                let t = (v - mean[k]) as f64;
+                acc += t * t;
+            }
         }
-    }
+        acc
+    });
+    let mut total: f64 = partial_var.iter().sum();
     total /= n as f64;
 
     // V: dim x d column block, initialized randomly.
@@ -95,43 +127,36 @@ pub fn pca(ds: &Dataset, d: usize, iters: usize, seed: u64) -> Pca {
     let mut eigs = vec![0.0f64; d];
     for _ in 0..iters.max(1) {
         // W = Cov · V = Xcᵀ (Xc V) / n, blocked over points, parallel
-        // over row chunks with thread-local accumulators.
-        let chunk = n.div_ceil(pool.threads.max(1)).max(1);
-        let partials: Vec<Vec<f64>> = {
-            let ranges: Vec<(usize, usize)> = (0..n)
-                .step_by(chunk)
-                .map(|lo| (lo, (lo + chunk).min(n)))
-                .collect();
-            pool.map(&ranges, |&(lo, hi)| {
-                let mut w = vec![0.0f64; dim * d];
-                let mut proj = vec![0.0f64; d];
-                for i in lo..hi {
-                    let row = ds.row(i);
-                    for p in proj.iter_mut() {
-                        *p = 0.0;
-                    }
-                    for j in 0..dim {
-                        let xj = (row[j] - mean[j]) as f64;
-                        if xj != 0.0 {
-                            let vr = &v[j * d..(j + 1) * d];
-                            for a in 0..d {
-                                proj[a] += xj * vr[a];
-                            }
-                        }
-                    }
-                    for j in 0..dim {
-                        let xj = (row[j] - mean[j]) as f64;
-                        if xj != 0.0 {
-                            let wr = &mut w[j * d..(j + 1) * d];
-                            for a in 0..d {
-                                wr[a] += xj * proj[a];
-                            }
+        // over fixed-size row chunks with per-chunk accumulators.
+        let partials: Vec<Vec<f64>> = pool.map(&ranges, |&(lo, hi)| {
+            let mut w = vec![0.0f64; dim * d];
+            let mut proj = vec![0.0f64; d];
+            for i in lo..hi {
+                let row = ds.row(i);
+                for p in proj.iter_mut() {
+                    *p = 0.0;
+                }
+                for j in 0..dim {
+                    let xj = (row[j] - mean[j]) as f64;
+                    if xj != 0.0 {
+                        let vr = &v[j * d..(j + 1) * d];
+                        for a in 0..d {
+                            proj[a] += xj * vr[a];
                         }
                     }
                 }
-                w
-            })
-        };
+                for j in 0..dim {
+                    let xj = (row[j] - mean[j]) as f64;
+                    if xj != 0.0 {
+                        let wr = &mut w[j * d..(j + 1) * d];
+                        for a in 0..d {
+                            wr[a] += xj * proj[a];
+                        }
+                    }
+                }
+            }
+            w
+        });
         let mut w = vec![0.0f64; dim * d];
         for p in &partials {
             for (wi, pi) in w.iter_mut().zip(p) {
@@ -155,9 +180,10 @@ pub fn pca(ds: &Dataset, d: usize, iters: usize, seed: u64) -> Pca {
     }
 
     // Sort axes by eigenvalue descending (subspace iteration usually
-    // delivers them ordered, but enforce it).
+    // delivers them ordered, but enforce it).  `total_cmp` so a degenerate
+    // NaN eigenvalue cannot panic the sort.
     let mut idx: Vec<usize> = (0..d).collect();
-    idx.sort_by(|&a, &b| eigs[b].partial_cmp(&eigs[a]).unwrap());
+    idx.sort_by(|&a, &b| eigs[b].total_cmp(&eigs[a]));
     let mut axes = vec![0.0f64; d * dim];
     let mut eigenvalues = vec![0.0f64; d];
     for (out_a, &src_a) in idx.iter().enumerate() {
@@ -268,6 +294,34 @@ mod tests {
         // projected data is centered
         for m in e.mean() {
             assert!(m.abs() < 1e-3, "mean {m}");
+        }
+    }
+
+    #[test]
+    fn pca_bitidentical_across_threads() {
+        // Fixed-chunk Gram accumulation: the result must not depend on the
+        // worker count.
+        let ds = crate::data::synth::SynthSpec::sift_like(700, 9).generate();
+        let reference = pca_par(&ds, 3, 8, 5, 1);
+        for threads in [2usize, 8] {
+            let p = pca_par(&ds, 3, 8, 5, threads);
+            assert_eq!(
+                p.total_variance.to_bits(),
+                reference.total_variance.to_bits(),
+                "threads={threads}"
+            );
+            assert!(
+                p.axes
+                    .iter()
+                    .zip(&reference.axes)
+                    .all(|(a, b)| a.to_bits() == b.to_bits()),
+                "axes differ at threads={threads}"
+            );
+            assert!(p
+                .eigenvalues
+                .iter()
+                .zip(&reference.eigenvalues)
+                .all(|(a, b)| a.to_bits() == b.to_bits()));
         }
     }
 

@@ -25,7 +25,7 @@
 //! for [`Engine::gauss_apply_multi`] — instead of looping scalar matvecs.
 
 use crate::csb::hier::{dense_gemm_acc, HierCsb};
-use crate::par::pool::ThreadPool;
+use crate::par::pool::{SendPtr, ThreadPool};
 
 /// The engine: block structure + thread pool.
 pub struct Engine {
@@ -50,9 +50,6 @@ impl Engine {
     {
         assert_eq!(out.len(), self.csb.rows * stride);
         out.fill(0.0);
-        struct SendPtr(*mut f32);
-        unsafe impl Send for SendPtr {}
-        unsafe impl Sync for SendPtr {}
         let op = SendPtr(out.as_mut_ptr());
         let opr = &op;
         let leaves = &self.csb.tgt_leaves;
@@ -191,9 +188,6 @@ impl Engine {
         let sa = augment_ones(scoords, self.csb.cols, d);
         // Fuse both outputs into one pass: compute into num, accumulate den
         // in a second buffer owned by the same target leaf.
-        struct SendPtr(*mut f32);
-        unsafe impl Send for SendPtr {}
-        unsafe impl Sync for SendPtr {}
         let dp = SendPtr(den.as_mut_ptr());
         let dpr = &dp;
         let csb = &self.csb;

@@ -62,9 +62,32 @@ fn main() {
 /// Shared `--knn`/`--ann-*` option block for profile-building commands.
 fn knn_opts(a: Args) -> Args {
     a.opt("knn", "exact", "knn backend: exact|ann")
-        .opt("ann-trees", "8", "ann: projection trees")
-        .opt("ann-leaf", "64", "ann: leaf bucket capacity")
-        .opt("ann-iters", "10", "ann: max NN-descent passes")
+        .opt_usize_min("ann-trees", 8, 1, "ann: projection trees")
+        .opt_usize_min("ann-leaf", 64, 1, "ann: leaf bucket capacity")
+        .opt_usize("ann-iters", 10, "ann: max NN-descent passes")
+}
+
+/// Shared `--build-threads` knob: worker count of the ordering-pipeline
+/// build side (PCA, tree construction, CSB assembly) — results are
+/// bit-identical across counts.
+fn build_opts(a: Args) -> Args {
+    a.opt_usize(
+        "build-threads",
+        0,
+        "build-side workers (PCA/tree/CSB; 0 = follow --threads)",
+    )
+}
+
+/// Build-side worker count: explicit `--build-threads`, else `--threads`
+/// (either may be 0 = machine default) — same fallback as the app configs,
+/// so capping `--threads` also caps the build phase.
+fn resolve_build_threads(a: &Args) -> usize {
+    let bt = a.get_usize("build-threads");
+    if bt != 0 {
+        bt
+    } else {
+        a.get_usize("threads")
+    }
 }
 
 /// Resolve the backend selected by the `--knn`/`--ann-*` options.
@@ -133,8 +156,8 @@ fn cmd_info() {
 fn cmd_synth(argv: Vec<String>) {
     let a = Args::new("generate a synthetic dataset")
         .opt("workload", "sift", "sift|gist")
-        .opt("n", "4096", "number of points")
-        .opt("seed", "42", "rng seed")
+        .opt_usize_min("n", 4096, 1, "number of points")
+        .opt_u64("seed", 42, "rng seed")
         .opt("out", "dataset.nnid", "output path")
         .parse_from(argv)
         .unwrap_or_else(die);
@@ -156,11 +179,11 @@ fn cmd_knn(argv: Vec<String>) {
         Args::new("build a kNN graph and measure backend quality")
             .opt("input", "", "dataset file (else synthesize)")
             .opt("workload", "sift", "sift|gist")
-            .opt("n", "4096", "points when synthesizing")
-            .opt("k", "10", "neighbors")
-            .opt("seed", "42", "rng seed")
-            .opt("threads", "0", "0 = all cores")
-            .opt("recall-sample", "256", "recall queries vs exact (0 = skip)"),
+            .opt_usize_min("n", 4096, 1, "points when synthesizing")
+            .opt_usize_min("k", 10, 1, "neighbors")
+            .opt_u64("seed", 42, "rng seed")
+            .opt_usize("threads", 0, "0 = all cores")
+            .opt_usize("recall-sample", 256, "recall queries vs exact (0 = skip)"),
     )
     .parse_from(argv)
     .unwrap_or_else(die);
@@ -189,18 +212,18 @@ fn cmd_knn(argv: Vec<String>) {
 }
 
 fn cmd_reorder(argv: Vec<String>) {
-    let a = knn_opts(
+    let a = build_opts(knn_opts(
         Args::new("ordering pipeline report")
             .opt("input", "", "dataset file (else synthesize)")
             .opt("workload", "sift", "sift|gist")
-            .opt("n", "4096", "points when synthesizing")
-            .opt("k", "0", "neighbors (0 = workload default)")
+            .opt_usize_min("n", 4096, 1, "points when synthesizing")
+            .opt_usize("k", 0, "neighbors (0 = workload default)")
             .opt("ordering", "3ddt", "rand|rcm|1d|2dlex|3dlex|3ddt|morton")
-            .opt("leaf-cap", "256", "tree leaf capacity")
-            .opt("rhs", "1", "multi-RHS width: >1 times batched spmm vs k scalar spmv")
-            .opt("seed", "42", "rng seed")
-            .opt("threads", "0", "0 = all cores"),
-    )
+            .opt_usize_min("leaf-cap", 256, 1, "tree leaf capacity")
+            .opt_usize_min("rhs", 1, 1, "multi-RHS width: >1 times batched spmm vs k scalar spmv")
+            .opt_u64("seed", 42, "rng seed")
+            .opt_usize("threads", 0, "0 = all cores"),
+    ))
     .parse_from(argv)
     .unwrap_or_else(die);
     let ds = load_or_synth(&a);
@@ -214,7 +237,10 @@ fn cmd_reorder(argv: Vec<String>) {
         timer::time_once(|| backend.build(&ds, k.min(ds.n() - 1), a.get_usize("threads")));
     let m = Csr::from_knn(&g, ds.n()).symmetrized();
     let kind = ordering(&a.get("ordering"));
-    let pipe = Pipeline::new(kind.clone()).with_seed(a.get_u64("seed"));
+    let build_threads = resolve_build_threads(&a);
+    let pipe = Pipeline::new(kind.clone())
+        .with_seed(a.get_u64("seed"))
+        .with_build_threads(build_threads);
     let (r, t_order) = timer::time_once(|| pipe.run(&ds, &m));
     let sigma = k as f64 / 2.0;
     let gm = gamma::gamma_fast(&r.reordered, sigma);
@@ -232,7 +258,13 @@ fn cmd_reorder(argv: Vec<String>) {
     println!("beta-hat = {:.5} ({} patches, area {})", bt.beta, bt.count, bt.area);
     println!("bandwidth = {}", r.reordered.bandwidth());
     if let Some(tree) = &r.tree {
-        let csb = HierCsb::build(&r.reordered, tree, tree, a.get_usize("leaf-cap"));
+        let csb = HierCsb::build_par(
+            &r.reordered,
+            tree,
+            tree,
+            a.get_usize("leaf-cap"),
+            build_threads,
+        );
         println!("csb: {}", csb.describe());
         let k = a.get_usize("rhs");
         if k > 1 {
@@ -261,9 +293,9 @@ fn cmd_reorder(argv: Vec<String>) {
 fn cmd_gamma(argv: Vec<String>) {
     let a = Args::new("gamma scores across orderings (Table 1 row)")
         .opt("workload", "sift", "sift|gist")
-        .opt("n", "4096", "points")
-        .opt("seed", "42", "rng seed")
-        .opt("threads", "0", "0 = all cores")
+        .opt_usize_min("n", 4096, 1, "points")
+        .opt_u64("seed", 42, "rng seed")
+        .opt_usize("threads", 0, "0 = all cores")
         .parse_from(argv)
         .unwrap_or_else(die);
     let wl = workload(&a.get("workload"));
@@ -279,15 +311,17 @@ fn cmd_gamma(argv: Vec<String>) {
 }
 
 fn cmd_spmv(argv: Vec<String>) {
-    let a = Args::new("multi-level SpMV timing")
-        .opt("workload", "sift", "sift|gist")
-        .opt("n", "8192", "points")
-        .opt("seed", "42", "rng seed")
-        .opt("threads", "0", "0 = all cores")
-        .opt("leaf-cap", "2048", "block capacity (SpMV sweet spot: ~64x nnz/row)")
-        .opt("rhs", "1", "multi-RHS width: >1 also times batched spmm paths")
-        .parse_from(argv)
-        .unwrap_or_else(die);
+    let a = build_opts(
+        Args::new("multi-level SpMV timing")
+            .opt("workload", "sift", "sift|gist")
+            .opt_usize_min("n", 8192, 1, "points")
+            .opt_u64("seed", 42, "rng seed")
+            .opt_usize("threads", 0, "0 = all cores")
+            .opt_usize_min("leaf-cap", 2048, 1, "block capacity (SpMV sweet spot: ~64x nnz/row)")
+            .opt_usize_min("rhs", 1, 1, "multi-RHS width: >1 also times batched spmm paths"),
+    )
+    .parse_from(argv)
+    .unwrap_or_else(die);
     let wl = workload(&a.get("workload"));
     let threads = if a.get_usize("threads") == 0 {
         nni::par::pool::default_threads()
@@ -295,9 +329,18 @@ fn cmd_spmv(argv: Vec<String>) {
         a.get_usize("threads")
     };
     let (ds, m) = wl.make(a.get_usize("n"), a.get_u64("seed"), threads);
-    let r = Pipeline::dual_tree(3).run(&ds, &m);
+    let build_threads = resolve_build_threads(&a);
+    let r = Pipeline::dual_tree(3)
+        .with_build_threads(build_threads)
+        .run(&ds, &m);
     let tree = r.tree.as_ref().unwrap();
-    let csb = HierCsb::build(&r.reordered, tree, tree, a.get_usize("leaf-cap"));
+    let csb = HierCsb::build_par(
+        &r.reordered,
+        tree,
+        tree,
+        a.get_usize("leaf-cap"),
+        build_threads,
+    );
     println!("{}", csb.describe());
     let x = vec![1.0f32; ds.n()];
     let mut y = vec![0.0f32; ds.n()];
@@ -330,19 +373,19 @@ fn cmd_spmv(argv: Vec<String>) {
 }
 
 fn cmd_tsne(argv: Vec<String>) {
-    let a = knn_opts(
+    let a = build_opts(knn_opts(
         Args::new("t-SNE end to end")
             .opt("input", "", "dataset file (else synthesize)")
             .opt("workload", "sift", "sift|gist")
-            .opt("n", "2048", "points when synthesizing")
-            .opt("seed", "42", "rng seed")
-            .opt("iters", "400", "iterations")
-            .opt("perplexity", "30", "perplexity")
-            .opt("k", "90", "neighbors in P")
-            .opt("threads", "0", "0 = all cores")
+            .opt_usize_min("n", 2048, 1, "points when synthesizing")
+            .opt_u64("seed", 42, "rng seed")
+            .opt_usize_min("iters", 400, 1, "iterations")
+            .opt_f64("perplexity", 30.0, "perplexity")
+            .opt_usize_min("k", 90, 1, "neighbors in P")
+            .opt_usize("threads", 0, "0 = all cores")
             .opt("out", "", "embedding output path (.nnid)")
             .flag("pjrt", "route dense blocks to the PJRT artifacts"),
-    )
+    ))
     .parse_from(argv)
     .unwrap_or_else(die);
     let ds = load_or_synth(&a);
@@ -351,6 +394,7 @@ fn cmd_tsne(argv: Vec<String>) {
         perplexity: a.get_f64("perplexity"),
         k: a.get_usize("k").min(ds.n() - 1),
         threads: a.get_usize("threads"),
+        build_threads: a.get_usize("build-threads"),
         seed: a.get_u64("seed"),
         use_pjrt: a.get_flag("pjrt"),
         knn: knn_backend(&a),
@@ -377,19 +421,19 @@ fn cmd_tsne(argv: Vec<String>) {
 }
 
 fn cmd_meanshift(argv: Vec<String>) {
-    let a = knn_opts(
+    let a = build_opts(knn_opts(
         Args::new("mean shift mode finding")
             .opt("input", "", "dataset file (else synthesize blobs)")
-            .opt("n", "2000", "points when synthesizing")
-            .opt("blobs", "5", "planted modes when synthesizing")
-            .opt("d", "3", "dimension when synthesizing")
-            .opt("bandwidth", "0.25", "kernel bandwidth")
-            .opt("k", "32", "profile neighbors")
-            .opt("iters", "60", "max iterations")
-            .opt("refresh", "5", "profile refresh cadence")
-            .opt("seed", "42", "rng seed")
-            .opt("threads", "0", "0 = all cores"),
-    )
+            .opt_usize_min("n", 2000, 1, "points when synthesizing")
+            .opt_usize_min("blobs", 5, 1, "planted modes when synthesizing")
+            .opt_usize_min("d", 3, 1, "dimension when synthesizing")
+            .opt_f64("bandwidth", 0.25, "kernel bandwidth")
+            .opt_usize_min("k", 32, 1, "profile neighbors")
+            .opt_usize_min("iters", 60, 1, "max iterations")
+            .opt_usize("refresh", 5, "profile refresh cadence")
+            .opt_u64("seed", 42, "rng seed")
+            .opt_usize("threads", 0, "0 = all cores"),
+    ))
     .parse_from(argv)
     .unwrap_or_else(die);
     let input = a.get("input");
@@ -410,6 +454,7 @@ fn cmd_meanshift(argv: Vec<String>) {
         max_iters: a.get_usize("iters"),
         refresh_every: a.get_usize("refresh"),
         threads: a.get_usize("threads"),
+        build_threads: a.get_usize("build-threads"),
         knn: knn_backend(&a),
         ..Default::default()
     };

@@ -12,7 +12,13 @@ use crate::tree::boxtree::BoxTree;
 /// `leaf_cap` controls the finest cluster granularity; the tree's interior
 /// levels provide the multi-level blocking consumed by `csb::hier`.
 pub fn order(embedded: &Dataset, leaf_cap: usize) -> (Vec<usize>, BoxTree) {
-    let tree = BoxTree::build(embedded, leaf_cap, 32);
+    order_par(embedded, leaf_cap, 1)
+}
+
+/// [`order`] with an explicit build-side worker count (0 = machine
+/// default).  Bit-identical to the sequential build for every `threads`.
+pub fn order_par(embedded: &Dataset, leaf_cap: usize, threads: usize) -> (Vec<usize>, BoxTree) {
+    let tree = BoxTree::build_par(embedded, leaf_cap, 32, threads);
     (tree.perm.clone(), tree)
 }
 

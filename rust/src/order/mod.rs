@@ -125,6 +125,10 @@ pub struct Pipeline {
     /// kNN backend used by [`Pipeline::run_points`] to build the
     /// interaction profile (exact or approximate).
     pub knn: KnnBackend,
+    /// Worker threads of the *build side* (PCA Gram accumulation, tree
+    /// construction): 0 = machine default (`NNI_THREADS`-respecting).
+    /// The build is bit-identical across thread counts.
+    pub build_threads: usize,
 }
 
 impl Pipeline {
@@ -136,6 +140,7 @@ impl Pipeline {
             lex_bins: 32,
             seed: 0xC0FFEE,
             knn: KnnBackend::Exact,
+            build_threads: 0,
         }
     }
 
@@ -160,6 +165,13 @@ impl Pipeline {
         self
     }
 
+    /// Set the build-side worker count (0 = machine default).  Results are
+    /// bit-identical across thread counts.
+    pub fn with_build_threads(mut self, threads: usize) -> Self {
+        self.build_threads = threads;
+        self
+    }
+
     /// Embedding dimension this ordering needs (0 = none).
     fn embed_dim(&self) -> usize {
         match self.kind {
@@ -174,11 +186,17 @@ impl Pipeline {
     /// Run the full pipeline from raw points: build the symmetrized kNN
     /// interaction profile with the configured [`KnnBackend`], then order.
     ///
-    /// `threads`: worker count for the kNN build (0 → machine default).
+    /// `threads`: worker count for the kNN build (0 → machine default);
+    /// also used for the build side (PCA, tree) unless
+    /// [`Pipeline::with_build_threads`] set an explicit count.
     pub fn run_points(&self, ds: &Dataset, k: usize, threads: usize) -> OrderResult {
         let g = self.knn.build(ds, k, threads);
         let a = Csr::from_knn(&g, ds.n()).symmetrized();
-        self.run(ds, &a)
+        if self.build_threads == 0 && threads != 0 {
+            self.clone().with_build_threads(threads).run(ds, &a)
+        } else {
+            self.run(ds, &a)
+        }
     }
 
     /// Run the pipeline on dataset `ds` with interaction profile `a`.
@@ -193,7 +211,7 @@ impl Pipeline {
             if ds.d() <= ed {
                 Some(ds.clone())
             } else {
-                let p = pca::pca(ds, ed, self.pca_iters, self.seed);
+                let p = pca::pca_par(ds, ed, self.pca_iters, self.seed, self.build_threads);
                 Some(p.project(ds, ed))
             }
         } else {
@@ -216,8 +234,11 @@ impl Pipeline {
                 None,
             ),
             OrderingKind::DualTree { .. } => {
-                let (perm, tree) =
-                    dualtree::order(embedded.as_ref().unwrap(), self.leaf_cap);
+                let (perm, tree) = dualtree::order_par(
+                    embedded.as_ref().unwrap(),
+                    self.leaf_cap,
+                    self.build_threads,
+                );
                 (perm, Some(tree))
             }
         };

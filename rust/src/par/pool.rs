@@ -4,6 +4,21 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
+/// Raw mutable pointer that may cross scoped-thread boundaries — the
+/// crate's one shared wrapper for the disjoint-write parallel pattern: a
+/// caller partitions an output buffer into non-overlapping regions (target-
+/// leaf row spans, pre-reserved subtree ranges, arena block regions, …),
+/// hands the base pointer to scoped workers, and each worker reconstructs
+/// a slice but writes only the region it owns.
+///
+/// SAFETY contract for every use site: regions written through the pointer
+/// must be disjoint across concurrently running tasks, and the underlying
+/// allocation must outlive the thread scope (guaranteed by
+/// `std::thread::scope` joining before the buffer is dropped).
+pub struct SendPtr<T>(pub *mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
 /// Number of worker threads to use by default: the machine's logical cores,
 /// clamped by the `NNI_THREADS` environment variable when set.
 pub fn default_threads() -> usize {

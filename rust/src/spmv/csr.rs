@@ -3,7 +3,7 @@
 //! allocation per call, 4-way unrolled accumulation, static row split in
 //! parallel mode.
 
-use crate::par::pool::parallel_for;
+use crate::par::pool::{parallel_for, SendPtr};
 use crate::sparse::csr::Csr;
 
 /// y = A x, sequential.
@@ -23,9 +23,6 @@ pub fn spmv_par(a: &Csr, x: &[f32], y: &mut [f32], threads: usize) {
     assert_eq!(y.len(), a.rows);
     // SAFETY-free approach: share y through a raw pointer wrapper; the row
     // ranges are disjoint so writes never alias.
-    struct SendPtr(*mut f32);
-    unsafe impl Send for SendPtr {}
-    unsafe impl Sync for SendPtr {}
     let yp = SendPtr(y.as_mut_ptr());
     parallel_for(threads, a.rows, |range| {
         let base = &yp;

@@ -8,7 +8,7 @@
 //! balance the irregular per-leaf work.
 
 use crate::csb::hier::HierCsb;
-use crate::par::pool::ThreadPool;
+use crate::par::pool::{SendPtr, ThreadPool};
 
 /// Sequential multi-level SpMV (delegates to the stored traversal order).
 pub fn spmv_ml_seq(m: &HierCsb, x: &[f32], y: &mut [f32]) {
@@ -21,9 +21,6 @@ pub fn spmv_ml_par(m: &HierCsb, x: &[f32], y: &mut [f32], threads: usize) {
     assert_eq!(y.len(), m.rows);
     y.fill(0.0);
     let pool = ThreadPool::new(threads);
-    struct SendPtr(*mut f32);
-    unsafe impl Send for SendPtr {}
-    unsafe impl Sync for SendPtr {}
     let yp = SendPtr(y.as_mut_ptr());
     let ylen = y.len();
     let ypr = &yp;
@@ -54,9 +51,6 @@ pub fn spmm_ml_par(m: &HierCsb, x: &[f32], y: &mut [f32], k: usize, threads: usi
     assert_eq!(y.len(), m.rows * k);
     y.fill(0.0);
     let pool = ThreadPool::new(threads);
-    struct SendPtr(*mut f32);
-    unsafe impl Send for SendPtr {}
-    unsafe impl Sync for SendPtr {}
     let yp = SendPtr(y.as_mut_ptr());
     let ylen = y.len();
     let ypr = &yp;

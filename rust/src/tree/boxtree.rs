@@ -9,6 +9,7 @@
 //! scheduler.
 
 use crate::data::dataset::Dataset;
+use crate::par::pool::{SendPtr, ThreadPool};
 
 /// One tree node.
 #[derive(Clone, Debug)]
@@ -68,127 +69,188 @@ impl BoxTree {
         let d = ds.d();
         assert!(d >= 1 && d <= 8, "embedding dimension out of range");
         assert!(leaf_cap >= 1);
-
-        // Root box: cube containing all points.
-        let mut lo = vec![f32::INFINITY; d];
-        let mut hi = vec![f32::NEG_INFINITY; d];
-        for i in 0..n {
-            for (k, &x) in ds.row(i).iter().enumerate() {
-                lo[k] = lo[k].min(x);
-                hi[k] = hi[k].max(x);
-            }
-        }
-        let mut center = vec![0.0f32; d];
-        let mut half = 0.0f32;
-        for k in 0..d {
-            center[k] = 0.5 * (lo[k] + hi[k]);
-            half = half.max(0.5 * (hi[k] - lo[k]));
-        }
-        half = half.max(1e-12);
-
         let mut tree = BoxTree {
             d,
-            nodes: vec![Node {
-                level: 0,
-                lo: 0,
-                hi: n as u32,
-                children: Vec::new(),
-                parent: 0,
-                center,
-                half,
-            }],
+            nodes: vec![root_node(ds)],
             perm: (0..n).collect(),
             pos: vec![0; n],
             leaf_at: vec![0; n],
             leaf_cap,
         };
-        tree.split_recursive(ds, 0, max_depth);
+        build_rec(
+            ds,
+            d,
+            leaf_cap,
+            max_depth,
+            &mut tree.nodes,
+            0,
+            &mut tree.perm,
+            &mut tree.leaf_at,
+        );
         for (k, &p) in tree.perm.iter().enumerate() {
             tree.pos[p] = k;
         }
         tree
     }
 
-    fn split_recursive(&mut self, ds: &Dataset, node: u32, max_depth: u32) {
-        let (nlo, nhi, level, half, center) = {
-            let nd = &self.nodes[node as usize];
-            (
-                nd.lo as usize,
-                nd.hi as usize,
-                nd.level,
-                nd.half,
-                nd.center.clone(),
-            )
-        };
-        let count = nhi - nlo;
-        if count <= self.leaf_cap || level >= max_depth {
-            for k in nlo..nhi {
-                self.leaf_at[k] = node;
-            }
-            return;
+    /// Task-parallel build, **bit-identical** to [`BoxTree::build`]: the top
+    /// of the tree is split serially (FIFO) until at least `threads`
+    /// independent subtrees exist; each subtree then builds concurrently
+    /// inside its pre-reserved `perm`/`leaf_at` span (spans are fixed by the
+    /// serial phase, so no synchronization on the arrays).  A renumbering
+    /// pass places every subtree's nodes at the ids the sequential DFS
+    /// would have assigned (a subtree's descendants always occupy one
+    /// contiguous id block), so node layout, `perm`, `pos`, and `leaf_at`
+    /// come out identical regardless of thread count.
+    ///
+    /// `threads = 0` means the machine default (`NNI_THREADS`-respecting).
+    pub fn build_par(ds: &Dataset, leaf_cap: usize, max_depth: u32, threads: usize) -> BoxTree {
+        let threads = ThreadPool::new_or_default(threads).threads;
+        if threads <= 1 {
+            return Self::build(ds, leaf_cap, max_depth);
         }
-        let d = self.d;
-        let nchild = 1usize << d;
+        let n = ds.n();
+        let d = ds.d();
+        assert!(d >= 1 && d <= 8, "embedding dimension out of range");
+        assert!(leaf_cap >= 1);
 
-        // Bucket points by orthant of the box center.
-        let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); nchild];
-        for k in nlo..nhi {
-            let i = self.perm[k];
-            let row = ds.row(i);
-            let mut code = 0usize;
-            for a in 0..d {
-                if row[a] >= center[a] {
-                    code |= 1 << a;
+        // Serial top: split until >= threads (x4 for balance) subtrees.
+        let mut skel: Vec<Node> = vec![root_node(ds)];
+        let mut perm: Vec<usize> = (0..n).collect();
+        let needs = |nd: &Node| nd.len() > leaf_cap && nd.level < max_depth;
+        let mut queue: std::collections::VecDeque<u32> = std::collections::VecDeque::new();
+        if needs(&skel[0]) {
+            queue.push_back(0);
+        }
+        let target = threads * 4;
+        while queue.len() < target {
+            let Some(v) = queue.pop_front() else { break };
+            if split_node(ds, d, &mut skel, v, &mut perm) {
+                let children = skel[v as usize].children.clone();
+                for c in children {
+                    if needs(&skel[c as usize]) {
+                        queue.push_back(c);
+                    }
                 }
             }
-            buckets[code].push(i);
+            // degenerate split → the node stays a (skeleton) leaf
+        }
+        let frontier: Vec<u32> = queue.into_iter().collect();
+        let mut fidx: Vec<Option<usize>> = vec![None; skel.len()];
+        for (i, &v) in frontier.iter().enumerate() {
+            fidx[v as usize] = Some(i);
         }
 
-        // Degenerate: everything in one orthant and the box can no longer
-        // separate (duplicate-heavy data) — make this a leaf.
-        if buckets.iter().filter(|b| !b.is_empty()).count() == 1 && half < 1e-9 {
-            for k in nlo..nhi {
-                self.leaf_at[k] = node;
-            }
-            return;
-        }
-
-        // Rewrite the span in bucket order and create non-empty children.
-        let mut cursor = nlo;
-        let child_half = half * 0.5;
-        let mut created: Vec<u32> = Vec::new();
-        for (code, bucket) in buckets.iter().enumerate() {
-            if bucket.is_empty() {
-                continue;
-            }
-            let clo = cursor;
-            for &i in bucket {
-                self.perm[cursor] = i;
-                cursor += 1;
-            }
-            let mut ccenter = center.clone();
-            for a in 0..d {
-                ccenter[a] += if code & (1 << a) != 0 {
-                    child_half
-                } else {
-                    -child_half
-                };
-            }
-            let id = self.nodes.len() as u32;
-            self.nodes.push(Node {
-                level: level + 1,
-                lo: clo as u32,
-                hi: cursor as u32,
-                children: Vec::new(),
-                parent: node,
-                center: ccenter,
-                half: child_half,
+        // Count pass: build each frontier subtree into a local arena; its
+        // perm/leaf_at writes stay inside the pre-reserved span.
+        let mut leaf_at = vec![0u32; n];
+        let pool = ThreadPool::new(threads);
+        let pp = SendPtr(perm.as_mut_ptr());
+        let lp = SendPtr(leaf_at.as_mut_ptr());
+        let locals: Vec<Vec<Node>> = {
+            let slots: Vec<std::sync::Mutex<Vec<Node>>> =
+                frontier.iter().map(|_| std::sync::Mutex::new(Vec::new())).collect();
+            let ppr = &pp;
+            let lpr = &lp;
+            let skel_ref = &skel;
+            pool.for_each_chunked(frontier.len(), 1, |fi| {
+                let f = frontier[fi] as usize;
+                // SAFETY: frontier spans are disjoint; this subtree build
+                // touches perm/leaf_at only inside skel[f]'s span.
+                let perm_all: &mut [usize] = unsafe { std::slice::from_raw_parts_mut(ppr.0, n) };
+                let leaf_all: &mut [u32] = unsafe { std::slice::from_raw_parts_mut(lpr.0, n) };
+                let mut lnodes = vec![Node {
+                    children: Vec::new(),
+                    parent: 0,
+                    ..skel_ref[f].clone()
+                }];
+                build_rec(ds, d, leaf_cap, max_depth, &mut lnodes, 0, perm_all, leaf_all);
+                *slots[fi].lock().unwrap() = lnodes;
             });
-            created.push(id);
+            slots.into_iter().map(|m| m.into_inner().unwrap()).collect()
+        };
+
+        // Renumber: simulate the sequential DFS id assignment over the
+        // skeleton; each frontier subtree's descendants form one block.
+        let mut skel_global = vec![0u32; skel.len()];
+        let mut base = vec![0u32; frontier.len()];
+        let mut counter = 1u32; // root is id 0
+        assign_ids(&skel, &fidx, &locals, 0, &mut counter, &mut skel_global, &mut base);
+        let total = counter as usize;
+
+        // Fill pass: skeleton nodes (serial — the skeleton is tiny) …
+        let placeholder = Node {
+            level: 0,
+            lo: 0,
+            hi: 0,
+            children: Vec::new(),
+            parent: 0,
+            center: Vec::new(),
+            half: 0.0,
+        };
+        let mut nodes: Vec<Node> = vec![placeholder; total];
+        for (sid, nd) in skel.iter().enumerate() {
+            let g = skel_global[sid] as usize;
+            let mut out = nd.clone();
+            out.parent = skel_global[nd.parent as usize];
+            out.children = nd.children.iter().map(|&c| skel_global[c as usize]).collect();
+            if let Some(fi) = fidx[sid] {
+                // frontier node: its children are the first nodes of its
+                // descendant block (local ids 1.. map to base + id - 1)
+                out.children = locals[fi][0]
+                    .children
+                    .iter()
+                    .map(|&c| base[fi] + c - 1)
+                    .collect();
+            } else if nd.children.is_empty() {
+                for k in nd.lo..nd.hi {
+                    leaf_at[k as usize] = g as u32;
+                }
+            }
+            nodes[g] = out;
         }
-        self.nodes[node as usize].children = created.clone();
-        for id in created {
-            self.split_recursive(ds, id, max_depth);
+        // … then subtree nodes + leaf_at remap, parallel over subtrees.
+        let np = SendPtr(nodes.as_mut_ptr());
+        let lp2 = SendPtr(leaf_at.as_mut_ptr());
+        {
+            let npr = &np;
+            let lpr = &lp2;
+            let skel_ref = &skel;
+            pool.for_each_chunked(frontier.len(), 1, |fi| {
+                let f = frontier[fi] as usize;
+                let b = base[fi];
+                let fg = skel_global[f];
+                let lnodes = &locals[fi];
+                // SAFETY: the id block [b, b + len - 1) and the span
+                // [lo, hi) are owned exclusively by this subtree.
+                let nodes_all: &mut [Node] =
+                    unsafe { std::slice::from_raw_parts_mut(npr.0, total) };
+                let leaf_all: &mut [u32] = unsafe { std::slice::from_raw_parts_mut(lpr.0, n) };
+                for (li, ln) in lnodes.iter().enumerate().skip(1) {
+                    let mut out = ln.clone();
+                    out.parent = if ln.parent == 0 { fg } else { b + ln.parent - 1 };
+                    out.children = ln.children.iter().map(|&c| b + c - 1).collect();
+                    nodes_all[(b + li as u32 - 1) as usize] = out;
+                }
+                let (lo, hi) = (skel_ref[f].lo as usize, skel_ref[f].hi as usize);
+                for k in lo..hi {
+                    let v = leaf_all[k];
+                    leaf_all[k] = if v == 0 { fg } else { b + v - 1 };
+                }
+            });
+        }
+
+        let mut pos = vec![0usize; n];
+        for (k, &p) in perm.iter().enumerate() {
+            pos[p] = k;
+        }
+        BoxTree {
+            d,
+            nodes,
+            perm,
+            pos,
+            leaf_at,
+            leaf_cap,
         }
     }
 
@@ -264,6 +326,191 @@ impl BoxTree {
         for &c in &nd.children {
             self.cut_size_rec(c, cap, out);
         }
+    }
+}
+
+/// Root box: cube containing all points.  Degenerate-input guards:
+/// an empty dataset gets the origin box (the unguarded fold would leave
+/// `lo/hi` at ±∞ → NaN center, infinite half-width), and the half-width
+/// floor is *relative* to the coordinate magnitude — an absolute epsilon
+/// (the old `1e-12`) is a no-op at f32 magnitudes like 1e6, so
+/// all-duplicate data far from the origin stalled every split until
+/// `max_depth`.
+fn root_node(ds: &Dataset) -> Node {
+    let n = ds.n();
+    let d = ds.d();
+    let mut lo = vec![f32::INFINITY; d];
+    let mut hi = vec![f32::NEG_INFINITY; d];
+    for i in 0..n {
+        for (k, &x) in ds.row(i).iter().enumerate() {
+            lo[k] = lo[k].min(x);
+            hi[k] = hi[k].max(x);
+        }
+    }
+    if n == 0 {
+        lo.fill(0.0);
+        hi.fill(0.0);
+    }
+    let mut center = vec![0.0f32; d];
+    let mut half = 0.0f32;
+    let mut max_abs = 0.0f32;
+    for k in 0..d {
+        center[k] = 0.5 * (lo[k] + hi[k]);
+        half = half.max(0.5 * (hi[k] - lo[k]));
+        max_abs = max_abs.max(lo[k].abs()).max(hi[k].abs());
+    }
+    let half = half
+        .max(max_abs * f32::EPSILON * 4.0)
+        .max(f32::MIN_POSITIVE);
+    Node {
+        level: 0,
+        lo: 0,
+        hi: n as u32,
+        children: Vec::new(),
+        parent: 0,
+        center,
+        half,
+    }
+}
+
+/// One split step, shared by the sequential recursion, the serial skeleton
+/// phase of [`BoxTree::build_par`], and the parallel subtree builds: bucket
+/// `nodes[node]`'s span by orthant of its center, rewrite `perm` in bucket
+/// order, and append the non-empty children to `nodes` (ids consecutive, in
+/// orthant-code order — the sequential creation order).  Returns `false`
+/// when the node is degenerate (all points in one orthant and the box is at
+/// the coordinate resolution) and must become a leaf instead.
+fn split_node(
+    ds: &Dataset,
+    d: usize,
+    nodes: &mut Vec<Node>,
+    node: u32,
+    perm: &mut [usize],
+) -> bool {
+    let (nlo, nhi, level, half, center) = {
+        let nd = &nodes[node as usize];
+        (nd.lo as usize, nd.hi as usize, nd.level, nd.half, nd.center.clone())
+    };
+    let nchild = 1usize << d;
+
+    // Bucket points by orthant of the box center.
+    let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); nchild];
+    for k in nlo..nhi {
+        let i = perm[k];
+        let row = ds.row(i);
+        let mut code = 0usize;
+        for a in 0..d {
+            if row[a] >= center[a] {
+                code |= 1 << a;
+            }
+        }
+        buckets[code].push(i);
+    }
+
+    // Degenerate: everything in one orthant and the box can no longer
+    // separate.  The threshold is relative to the center magnitude (f32
+    // resolution at the coordinates), with the old absolute floor kept for
+    // near-origin data.
+    if buckets.iter().filter(|b| !b.is_empty()).count() == 1 {
+        let scale = center.iter().fold(0.0f32, |m, &c| m.max(c.abs()));
+        if half <= (scale * f32::EPSILON * 8.0).max(1e-9) {
+            return false;
+        }
+    }
+
+    // Rewrite the span in bucket order and create non-empty children.
+    let mut cursor = nlo;
+    let child_half = half * 0.5;
+    let mut created: Vec<u32> = Vec::new();
+    for (code, bucket) in buckets.iter().enumerate() {
+        if bucket.is_empty() {
+            continue;
+        }
+        let clo = cursor;
+        for &i in bucket {
+            perm[cursor] = i;
+            cursor += 1;
+        }
+        let mut ccenter = center.clone();
+        for a in 0..d {
+            ccenter[a] += if code & (1 << a) != 0 {
+                child_half
+            } else {
+                -child_half
+            };
+        }
+        let id = nodes.len() as u32;
+        nodes.push(Node {
+            level: level + 1,
+            lo: clo as u32,
+            hi: cursor as u32,
+            children: Vec::new(),
+            parent: node,
+            center: ccenter,
+            half: child_half,
+        });
+        created.push(id);
+    }
+    nodes[node as usize].children = created;
+    true
+}
+
+/// Depth-first build of `nodes[node]`'s subtree (the sequential reference
+/// recursion; also runs per frontier subtree in [`BoxTree::build_par`],
+/// against a *local* arena).  `perm`/`leaf_at` are global-position indexed;
+/// `leaf_at` receives arena-local node ids.
+#[allow(clippy::too_many_arguments)]
+fn build_rec(
+    ds: &Dataset,
+    d: usize,
+    leaf_cap: usize,
+    max_depth: u32,
+    nodes: &mut Vec<Node>,
+    node: u32,
+    perm: &mut [usize],
+    leaf_at: &mut [u32],
+) {
+    let (nlo, nhi, level) = {
+        let nd = &nodes[node as usize];
+        (nd.lo as usize, nd.hi as usize, nd.level)
+    };
+    if nhi - nlo <= leaf_cap || level >= max_depth || !split_node(ds, d, nodes, node, perm) {
+        for k in nlo..nhi {
+            leaf_at[k] = node;
+        }
+        return;
+    }
+    let children = nodes[node as usize].children.clone();
+    for c in children {
+        build_rec(ds, d, leaf_cap, max_depth, nodes, c, perm, leaf_at);
+    }
+}
+
+/// Simulate the sequential DFS id assignment over the serial-phase skeleton:
+/// processing a node allocates its children consecutively, then descends
+/// child by child; reaching a frontier node reserves one contiguous block
+/// for its whole descendant set (`locals[fi].len() - 1`, the local arena
+/// minus the frontier node itself).
+fn assign_ids(
+    skel: &[Node],
+    fidx: &[Option<usize>],
+    locals: &[Vec<Node>],
+    v: usize,
+    counter: &mut u32,
+    skel_global: &mut [u32],
+    base: &mut [u32],
+) {
+    if let Some(fi) = fidx[v] {
+        base[fi] = *counter;
+        *counter += (locals[fi].len() - 1) as u32;
+        return;
+    }
+    for &c in &skel[v].children {
+        skel_global[c as usize] = *counter;
+        *counter += 1;
+    }
+    for &c in &skel[v].children {
+        assign_ids(skel, fidx, locals, c as usize, counter, skel_global, base);
     }
 }
 
@@ -364,6 +611,68 @@ mod tests {
         let leaves = t.leaves();
         let total: usize = leaves.iter().map(|&l| t.nodes[l as usize].len()).sum();
         assert_eq!(total, 64);
+    }
+
+    #[test]
+    fn empty_dataset_yields_finite_root() {
+        // Regression: the unguarded min/max fold left lo/hi at ±∞ → NaN
+        // center and infinite half-width on n = 0.
+        let ds = Dataset::new(0, 3, Vec::new());
+        for t in [BoxTree::build(&ds, 4, 10), BoxTree::build_par(&ds, 4, 10, 4)] {
+            assert_eq!(t.nodes.len(), 1);
+            assert!(t.nodes[0].center.iter().all(|c| c.is_finite()));
+            assert!(t.nodes[0].half.is_finite() && t.nodes[0].half > 0.0);
+            assert!(t.perm.is_empty() && t.pos.is_empty() && t.leaf_at.is_empty());
+            assert!(t.leaves().is_empty());
+        }
+    }
+
+    #[test]
+    fn duplicates_far_from_origin_terminate_immediately() {
+        // Regression: with an absolute epsilon, all-duplicate points at f32
+        // magnitudes like 1e6 stalled (half >> 1e-9, splits produce a
+        // single-child chain down to max_depth).  The relative threshold
+        // must stop at the root.
+        let ds = Dataset::new(64, 2, vec![1.0e6; 128]);
+        let t = BoxTree::build(&ds, 4, 32);
+        assert!(
+            t.nodes.len() <= 2,
+            "degenerate split chain: {} nodes",
+            t.nodes.len()
+        );
+        assert!(t.height() <= 1);
+        let total: usize = t.leaves().iter().map(|&l| t.nodes[l as usize].len()).sum();
+        assert_eq!(total, 64);
+        assert!(t.leaf_at.iter().all(|&l| (l as usize) < t.nodes.len()));
+    }
+
+    #[test]
+    fn build_par_matches_sequential_build() {
+        let shapes = [(900usize, 3usize, 8usize, 1u64), (500, 2, 16, 2), (64, 1, 4, 3)];
+        for (n, d, cap, seed) in shapes {
+            let ds = SynthSpec::blobs(n, d, 4, seed).generate();
+            let seq = BoxTree::build(&ds, cap, 24);
+            for threads in [1usize, 2, 8] {
+                let par = BoxTree::build_par(&ds, cap, 24, threads);
+                assert_eq!(seq.perm, par.perm, "perm n={n} threads={threads}");
+                assert_eq!(seq.pos, par.pos);
+                assert_eq!(seq.leaf_at, par.leaf_at, "leaf_at n={n} threads={threads}");
+                assert_eq!(seq.nodes.len(), par.nodes.len());
+                for (a, b) in seq.nodes.iter().zip(&par.nodes) {
+                    assert_eq!(a.level, b.level);
+                    assert_eq!(a.lo, b.lo);
+                    assert_eq!(a.hi, b.hi);
+                    assert_eq!(a.children, b.children);
+                    assert_eq!(a.parent, b.parent);
+                    assert_eq!(a.half.to_bits(), b.half.to_bits());
+                    assert!(a
+                        .center
+                        .iter()
+                        .zip(&b.center)
+                        .all(|(p, q)| p.to_bits() == q.to_bits()));
+                }
+            }
+        }
     }
 
     #[test]

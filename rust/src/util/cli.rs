@@ -7,12 +7,35 @@
 
 use std::collections::BTreeMap;
 
+/// Value class of an option, validated at parse time so a malformed or
+/// nonsensical flag fails with a one-line usage error naming the flag
+/// instead of a raw panic at first use.
+#[derive(Clone, Copy, PartialEq)]
+enum Kind {
+    Str,
+    Flag,
+    USize { min: usize },
+    U64,
+    F64,
+}
+
+impl Kind {
+    fn placeholder(&self) -> &'static str {
+        match self {
+            Kind::Str => "<v>",
+            Kind::Flag => "",
+            Kind::USize { .. } | Kind::U64 => "<int>",
+            Kind::F64 => "<num>",
+        }
+    }
+}
+
 #[derive(Clone)]
 struct OptSpec {
     name: String,
     help: String,
     default: Option<String>,
-    is_flag: bool,
+    kind: Kind,
 }
 
 /// A declarative option table + parsed values.
@@ -33,36 +56,57 @@ impl Args {
         }
     }
 
-    /// Declare `--name <value>` with a default (`""` is a valid default and
-    /// serves as the usual "unset" sentinel).
-    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+    fn push_spec(mut self, name: &str, help: &str, default: Option<String>, kind: Kind) -> Self {
         self.specs.push(OptSpec {
             name: name.into(),
             help: help.into(),
-            default: Some(default.into()),
-            is_flag: false,
+            default,
+            kind,
         });
         self
     }
 
+    /// Declare `--name <value>` with a default (`""` is a valid default and
+    /// serves as the usual "unset" sentinel).
+    pub fn opt(self, name: &str, default: &str, help: &str) -> Self {
+        self.push_spec(name, help, Some(default.into()), Kind::Str)
+    }
+
+    /// Declare an unsigned-integer option, validated at parse time.
+    pub fn opt_usize(self, name: &str, default: usize, help: &str) -> Self {
+        self.push_spec(name, help, Some(default.to_string()), Kind::USize { min: 0 })
+    }
+
+    /// Declare an unsigned-integer option with a lower bound, validated at
+    /// parse time (`--rhs 0`-style nonsense becomes a usage error instead
+    /// of tripping a downstream assert).
+    pub fn opt_usize_min(self, name: &str, default: usize, min: usize, help: &str) -> Self {
+        self.push_spec(name, help, Some(default.to_string()), Kind::USize { min })
+    }
+
+    /// Declare a u64 option (seeds), validated at parse time.
+    pub fn opt_u64(self, name: &str, default: u64, help: &str) -> Self {
+        self.push_spec(name, help, Some(default.to_string()), Kind::U64)
+    }
+
+    /// Declare a float option, validated at parse time.
+    pub fn opt_f64(self, name: &str, default: f64, help: &str) -> Self {
+        self.push_spec(name, help, Some(default.to_string()), Kind::F64)
+    }
+
     /// Declare a boolean `--name` flag.
-    pub fn flag(mut self, name: &str, help: &str) -> Self {
-        self.specs.push(OptSpec {
-            name: name.into(),
-            help: help.into(),
-            default: None,
-            is_flag: true,
-        });
-        self
+    pub fn flag(self, name: &str, help: &str) -> Self {
+        self.push_spec(name, help, None, Kind::Flag)
     }
 
     fn usage(&self) -> String {
         let mut u = format!("{}\n\nOptions:\n", self.about);
         for s in &self.specs {
-            let left = if s.is_flag {
+            let ph = s.kind.placeholder();
+            let left = if ph.is_empty() {
                 format!("  --{}", s.name)
             } else {
-                format!("  --{} <v>", s.name)
+                format!("  --{} {ph}", s.name)
             };
             let def = s
                 .default
@@ -101,7 +145,7 @@ impl Args {
                     .find(|s| s.name == name)
                     .ok_or_else(|| format!("unknown option --{name}\n{}", self.usage()))?
                     .clone();
-                let val = if spec.is_flag {
+                let val = if spec.kind == Kind::Flag {
                     inline.unwrap_or_else(|| "true".into())
                 } else if let Some(v) = inline {
                     v
@@ -117,7 +161,38 @@ impl Args {
             }
             i += 1;
         }
+        self.validate()?;
         Ok(self)
+    }
+
+    /// Type/range checks of all user-supplied values (declared defaults are
+    /// trusted — they come from the binary itself).
+    fn validate(&self) -> Result<(), String> {
+        for (name, val) in &self.values {
+            let Some(spec) = self.specs.iter().find(|s| &s.name == name) else {
+                continue;
+            };
+            match spec.kind {
+                Kind::USize { min } => {
+                    let v: usize = val
+                        .parse()
+                        .map_err(|_| format!("--{name} expects an integer (got '{val}')"))?;
+                    if v < min {
+                        return Err(format!("--{name} must be at least {min} (got {v})"));
+                    }
+                }
+                Kind::U64 => {
+                    val.parse::<u64>()
+                        .map_err(|_| format!("--{name} expects an integer (got '{val}')"))?;
+                }
+                Kind::F64 => {
+                    val.parse::<f64>()
+                        .map_err(|_| format!("--{name} expects a number (got '{val}')"))?;
+                }
+                Kind::Str | Kind::Flag => {}
+            }
+        }
+        Ok(())
     }
 
     /// Parse `std::env::args()` (skipping argv[0]); exits with a message on
@@ -232,6 +307,45 @@ mod tests {
     fn unknown_option_errors() {
         let r = Args::new("t").parse_from(toks(&["--bogus"]));
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn typed_options_validate_at_parse_time() {
+        // below the minimum → one-line usage error naming the flag
+        let e = Args::new("t")
+            .opt_usize_min("rhs", 1, 1, "rhs width")
+            .parse_from(toks(&["--rhs", "0"]))
+            .err()
+            .expect("--rhs 0 must be rejected");
+        assert!(e.contains("--rhs"), "{e}");
+        // not an integer at all
+        let e = Args::new("t")
+            .opt_usize_min("leaf-cap", 256, 1, "cap")
+            .parse_from(toks(&["--leaf-cap", "many"]))
+            .err()
+            .expect("--leaf-cap many must be rejected");
+        assert!(e.contains("--leaf-cap"), "{e}");
+        // malformed float / u64
+        let e = Args::new("t")
+            .opt_f64("bandwidth", 0.25, "h")
+            .parse_from(toks(&["--bandwidth", "wide"]))
+            .err()
+            .expect("--bandwidth wide must be rejected");
+        assert!(e.contains("--bandwidth"), "{e}");
+        let e = Args::new("t")
+            .opt_u64("seed", 42, "seed")
+            .parse_from(toks(&["--seed", "-3"]))
+            .err()
+            .expect("--seed -3 must be rejected");
+        assert!(e.contains("--seed"), "{e}");
+        // valid values pass and read back typed
+        let a = Args::new("t")
+            .opt_usize_min("rhs", 1, 1, "rhs width")
+            .opt_f64("bandwidth", 0.25, "h")
+            .parse_from(toks(&["--rhs", "8"]))
+            .unwrap();
+        assert_eq!(a.get_usize("rhs"), 8);
+        assert_eq!(a.get_f64("bandwidth"), 0.25);
     }
 
     #[test]

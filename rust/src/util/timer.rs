@@ -49,7 +49,17 @@ pub fn bench_run<F: FnMut()>(
             break; // pathological fast-workload guard
         }
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    summarize(samples)
+}
+
+/// Percentile summary of raw per-iteration samples.  `total_cmp` instead
+/// of `partial_cmp().unwrap()`: a NaN sample (e.g. a clock source folding a
+/// poisoned measurement in) must not panic the sort — under the IEEE total
+/// order positive NaNs sort after every finite time, so the low quantiles
+/// stay finite.
+pub fn summarize(mut samples: Vec<f64>) -> Measurement {
+    assert!(!samples.is_empty(), "summarize needs at least one sample");
+    samples.sort_by(|a, b| a.total_cmp(b));
     let q05 = samples[(samples.len() as f64 * 0.05) as usize];
     let med = samples[samples.len() / 2];
     Measurement {
@@ -102,6 +112,17 @@ mod tests {
         assert!(m.robust_min_s > 0.0);
         assert!(m.median_s >= m.robust_min_s);
         assert!(m.iters >= 5);
+    }
+
+    #[test]
+    fn summarize_tolerates_nan_samples() {
+        // Regression: `sort_by(partial_cmp().unwrap())` panicked on NaN.
+        let m = summarize(vec![0.3, f64::NAN, 0.1, 0.2, 0.25, 0.15, f64::NAN, 0.35]);
+        assert!(m.robust_min_s.is_finite());
+        assert!(m.median_s.is_finite());
+        assert_eq!(m.iters, 8);
+        // NaNs sort last: the robust minimum is the true smallest sample
+        assert_eq!(m.robust_min_s, 0.1);
     }
 
     #[test]

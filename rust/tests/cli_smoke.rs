@@ -92,6 +92,45 @@ fn reorder_accepts_ann_backend() {
 }
 
 #[test]
+fn invalid_flag_values_are_usage_errors() {
+    // nonsensical values die at parse time with a one-line error naming
+    // the flag — not a raw panic from a downstream assert
+    let out = nni()
+        .args(["reorder", "--n", "64", "--rhs", "0"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let text = String::from_utf8_lossy(&out.stderr);
+    assert!(text.contains("--rhs"), "{text}");
+    assert!(!text.contains("panicked"), "{text}");
+    let out = nni()
+        .args(["spmv", "--n", "64", "--leaf-cap", "0"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let text = String::from_utf8_lossy(&out.stderr);
+    assert!(text.contains("--leaf-cap"), "{text}");
+    let out = nni()
+        .args(["reorder", "--n", "sixty-four"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--n"));
+}
+
+#[test]
+fn reorder_accepts_build_threads_knob() {
+    let out = nni()
+        .args([
+            "reorder", "--n", "256", "--k", "6", "--leaf-cap", "64", "--build-threads", "2",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("csb:"));
+}
+
+#[test]
 fn meanshift_finds_modes() {
     let out = nni()
         .args([

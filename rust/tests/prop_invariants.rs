@@ -326,6 +326,132 @@ fn parallel_spmm_deterministic_across_threads_and_runs() {
     });
 }
 
+/// Bit-level tree equality: node layout (levels, spans, topology, box
+/// geometry), permutation, inverse, and leaf map.
+fn trees_bit_identical(a: &BoxTree, b: &BoxTree) -> bool {
+    a.d == b.d
+        && a.perm == b.perm
+        && a.pos == b.pos
+        && a.leaf_at == b.leaf_at
+        && a.nodes.len() == b.nodes.len()
+        && a.nodes.iter().zip(&b.nodes).all(|(x, y)| {
+            x.level == y.level
+                && x.lo == y.lo
+                && x.hi == y.hi
+                && x.children == y.children
+                && x.parent == y.parent
+                && x.half.to_bits() == y.half.to_bits()
+                && x.center.len() == y.center.len()
+                && x.center.iter().zip(&y.center).all(|(p, q)| p.to_bits() == q.to_bits())
+        })
+}
+
+#[test]
+fn parallel_tree_build_bitidentical_across_threads() {
+    // The build-side determinism contract: the task-parallel construction
+    // must reproduce the sequential build exactly — node layout, perm, and
+    // leaf map — for every worker count (NNI_THREADS equivalents 1/2/8 are
+    // exercised through the explicit-thread entry point the env knob feeds).
+    check("tree-par-deterministic", |rng, size| {
+        let n = 1 + rng.below(size * 4);
+        let d = 1 + rng.below(3);
+        let ds = random_points(rng, n, d);
+        let cap = 1 + rng.below(24);
+        let seq = BoxTree::build(&ds, cap, 20);
+        for threads in [1usize, 2, 8] {
+            let par = BoxTree::build_par(&ds, cap, 20, threads);
+            prop_assert!(
+                trees_bit_identical(&seq, &par),
+                "tree differs at threads={threads} (n={n} d={d} cap={cap})"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn parallel_hiercsb_build_bitidentical_across_threads() {
+    // Full-arena determinism of the count→scan→fill assembly: block
+    // metadata, schedules, and all four value arenas bit-equal to the
+    // sequential build at every worker count.
+    check("csb-par-deterministic", |rng, size| {
+        let n = 8 + rng.below(size);
+        let d = 1 + rng.below(3);
+        let ds = random_points(rng, n, d);
+        let pr = 1 + rng.below(6);
+        let a = random_csr(rng, n, pr);
+        let tree = BoxTree::build(&ds, 1 + rng.below(40), 20);
+        let pos = invert(&tree.perm);
+        let b = a.permuted(&pos, &pos);
+        let thr = rng.f64() * 1.2;
+        let seq = HierCsb::build_with(&b, &tree, &tree, 0, thr);
+        for threads in [1usize, 2, 8] {
+            let par = HierCsb::build_with_par(&b, &tree, &tree, 0, thr, threads);
+            prop_assert!(seq.tgt_leaves == par.tgt_leaves && seq.src_leaves == par.src_leaves);
+            prop_assert!(seq.blocks == par.blocks, "block layout differs at threads={threads}");
+            prop_assert!(seq.by_target == par.by_target);
+            prop_assert!(seq.sp_rows == par.sp_rows && seq.sp_ptr == par.sp_ptr);
+            prop_assert!(seq.sp_col == par.sp_col);
+            prop_assert!(
+                seq.dense.len() == par.dense.len()
+                    && seq
+                        .dense
+                        .iter()
+                        .zip(&par.dense)
+                        .all(|(x, y)| x.to_bits() == y.to_bits()),
+                "dense arena differs at threads={threads}"
+            );
+            prop_assert!(
+                seq.sp_val.len() == par.sp_val.len()
+                    && seq
+                        .sp_val
+                        .iter()
+                        .zip(&par.sp_val)
+                        .all(|(x, y)| x.to_bits() == y.to_bits()),
+                "sp_val arena differs at threads={threads}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn parallel_pca_bitidentical_across_threads() {
+    // Fixed-chunk Gram accumulation: axes and eigenvalues must not depend
+    // on the worker count.
+    check("pca-par-deterministic", |rng, size| {
+        // sizes past PCA_CHUNK so the fixed-chunk reduction actually spans
+        // several partials
+        let n = 8 + rng.below(size * 3);
+        let dim = 4 + rng.below(12);
+        let ds = random_points(rng, n, dim);
+        let d = 1 + rng.below(3);
+        let seq = nni::embed::pca::pca_par(&ds, d, 6, 11, 1);
+        for threads in [2usize, 8] {
+            let par = nni::embed::pca::pca_par(&ds, d, 6, 11, threads);
+            prop_assert!(
+                seq.total_variance.to_bits() == par.total_variance.to_bits(),
+                "variance differs at threads={threads}"
+            );
+            prop_assert!(
+                seq.axes.len() == par.axes.len()
+                    && seq
+                        .axes
+                        .iter()
+                        .zip(&par.axes)
+                        .all(|(x, y)| x.to_bits() == y.to_bits()),
+                "axes differ at threads={threads}"
+            );
+            prop_assert!(seq
+                .eigenvalues
+                .iter()
+                .zip(&par.eigenvalues)
+                .all(|(x, y)| x.to_bits() == y.to_bits()));
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn gamma_fast_tracks_exact_on_random_profiles() {
     check("gamma-fast", |rng, size| {
