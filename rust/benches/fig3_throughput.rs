@@ -15,6 +15,7 @@
 
 use nni::bench::{pipeline_for, print_header, repo_root_out, Table, Workload};
 use nni::csb::hier::HierCsb;
+use nni::csb::kernel::{detect, KernelKind};
 use nni::interact::engine::Engine;
 use nni::order::OrderingKind;
 use nni::par::pool::default_threads;
@@ -39,6 +40,7 @@ fn main() {
             "BENCH_interact.json",
             "multi-RHS sweep json record (relative = repo root)",
         )
+        .opt("kernel", "both", "multi-RHS sweep kernels: both|auto|simd|scalar")
         .flag("gist", "also run the GIST-like workload (slow kNN at D=960)")
         .flag("smoke", "CI smoke mode: tiny sizes, same code paths")
         .parse();
@@ -166,131 +168,241 @@ fn main() {
         a.get_u64("seed"),
         threads,
         &a.get("interact-out"),
+        &a.get("kernel"),
     );
 }
 
-/// Multi-RHS sweep (EXPERIMENTS.md §Multi-RHS): per-RHS throughput of the
-/// batched block kernels vs the k-fold scalar path on the clustered
-/// SIFT-like dataset, for the structural SpMM and the fused Gaussian
-/// kernel.  Writes the `BENCH_interact.json` record.
-fn multi_rhs_sweep(n: usize, ks: &[usize], seed: u64, threads: usize, out_path: &str) {
+/// Multi-RHS sweep (EXPERIMENTS.md §Multi-RHS, §Kernel dispatch): per-RHS
+/// throughput of the batched block kernels vs the k-fold scalar path on
+/// the clustered SIFT-like dataset, for the structural SpMM and the fused
+/// Gaussian kernel, swept over the apply micro-kernel (`scalar` reference
+/// vs the runtime-dispatched `simd` path).  Writes the
+/// `BENCH_interact.json` record, whose schema names the kernel and
+/// resolved dispatch per point (and the fallback reason when a SIMD
+/// request resolved to scalar), so the perf trajectory attributes wins to
+/// the right layer.  Before anything is recorded, the scalar path is
+/// asserted bit-identical across worker counts {1, 2, 8}.
+fn multi_rhs_sweep(
+    n: usize,
+    ks: &[usize],
+    seed: u64,
+    threads: usize,
+    out_path: &str,
+    kernel_req: &str,
+) {
     println!("\n# multi-RHS sweep — n={n} clustered SIFT-like, 3D dual-tree ordering");
     let wl = Workload::Sift;
     let (ds, m) = wl.make(n, seed, threads);
     let r = pipeline_for(&OrderingKind::DualTree { d: 3 }, seed).run(&ds, &m);
     let tree = r.tree.as_ref().unwrap();
-    // PJRT-path dense threshold: the micro-GEMM wants dense blocks.
+    // PJRT-path dense threshold: the micro-GEMM wants dense blocks — this
+    // is the dense-fraction-heavy case of the kernel comparison.
     let csb = HierCsb::build_with_par(&r.reordered, tree, tree, 256, 0.25, threads);
     println!("# {}", csb.describe());
     let coords = ds.permuted(&r.perm).raw().to_vec();
     let d = ds.d();
     let inv_h2 = 0.5f32;
-    let engine_par = Engine::new(csb.clone(), threads);
-    let engine_seq = Engine::new(csb.clone(), 1);
-    let mut rng = Rng::new(seed ^ 0xbeef);
+    let kmax = ks.iter().copied().max().unwrap_or(1);
+
+    // Scalar bit-exactness smoke (the determinism gate CI relies on): the
+    // scalar kernel must produce bit-identical results at 1/2/8 workers.
+    {
+        let mut rng = Rng::new(seed ^ 0x5ca1a);
+        let xk: Vec<f32> = (0..n * kmax).map(|_| rng.f32() - 0.5).collect();
+        let mut y_seq = vec![0.0f32; n * kmax];
+        spmv::multilevel::spmm_ml_seq(&csb, &xk, &mut y_seq, kmax);
+        let mut y_par = vec![0.0f32; n * kmax];
+        for t in [1usize, 2, 8] {
+            spmv::multilevel::spmm_ml_par(&csb, &xk, &mut y_par, kmax, t);
+            assert!(
+                y_seq.iter().zip(&y_par).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "scalar spmm not bit-identical at {t} threads"
+            );
+        }
+        println!("# scalar kernel bit-identical across threads {{1,2,8}} at k={kmax}");
+    }
+
+    let kernel_rows: Vec<KernelKind> = match kernel_req {
+        "both" => vec![KernelKind::Scalar, KernelKind::Simd],
+        "scalar" => vec![KernelKind::Scalar],
+        "simd" => vec![KernelKind::Simd],
+        "auto" => vec![KernelKind::Auto],
+        other => {
+            eprintln!("unknown --kernel '{other}' (both|auto|simd|scalar)");
+            std::process::exit(2);
+        }
+    };
+
     let mut table = Table::new(
         "fig3_multirhs",
-        &["kernel", "n", "k", "scalar_ms", "batched_ms", "per_rhs_speedup", "par_batched_ms"],
+        &[
+            "kernel",
+            "dispatch",
+            "n",
+            "k",
+            "scalar_ms",
+            "batched_ms",
+            "per_rhs_speedup",
+            "par_batched_ms",
+        ],
     );
     let mut records: Vec<Json> = Vec::new();
-    for &k in ks {
-        let x1: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
-        let mut y1 = vec![0.0f32; n];
-        let xk: Vec<f32> = (0..n * k).map(|_| rng.f32()).collect();
-        let mut yk = vec![0.0f32; n * k];
+    let mut spmm_kmax_scalar: Option<f64> = None;
+    let mut spmm_kmax_simd: Option<f64> = None;
+    let mut simd_fallback: Option<&'static str> = None;
+    for &kind in &kernel_rows {
+        let (dispatch, fallback) = kind.resolve();
+        if kind != KernelKind::Scalar {
+            simd_fallback = simd_fallback.or(fallback);
+        }
+        let engine_par = Engine::with_kernel(csb.clone(), threads, kind);
+        let engine_seq = Engine::with_kernel(csb.clone(), 1, kind);
+        // Same RNG stream per kernel row → identical inputs across rows.
+        let mut rng = Rng::new(seed ^ 0xbeef);
+        for &k in ks {
+            let x1: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+            let mut y1 = vec![0.0f32; n];
+            let xk: Vec<f32> = (0..n * k).map(|_| rng.f32()).collect();
+            let mut yk = vec![0.0f32; n * k];
 
-        // Structural SpMM vs k scalar SpMVs.
-        let t_scalar = bench_default(|| {
-            for _ in 0..k {
-                spmv::multilevel::spmv_ml_seq(&csb, &x1, &mut y1);
+            // Structural SpMM vs k scalar SpMVs (both under this kernel).
+            let t_scalar = bench_default(|| {
+                for _ in 0..k {
+                    spmv::multilevel::spmm_ml_seq_with(&csb, &x1, &mut y1, 1, dispatch);
+                }
+            });
+            let t_batched = bench_default(|| {
+                spmv::multilevel::spmm_ml_seq_with(&csb, &xk, &mut yk, k, dispatch)
+            });
+            let t_par = bench_default(|| {
+                spmv::multilevel::spmm_ml_par_with(&csb, &xk, &mut yk, k, threads, dispatch)
+            });
+            push_point(
+                &mut table,
+                &mut records,
+                Point {
+                    kernel: kind.label(),
+                    dispatch: dispatch.label(),
+                    fallback,
+                    op: "spmm",
+                    n,
+                    k,
+                    scalar_s: t_scalar.robust_min_s,
+                    batched_s: t_batched.robust_min_s,
+                    par_s: t_par.robust_min_s,
+                },
+            );
+            if k == kmax {
+                match kind {
+                    KernelKind::Scalar => spmm_kmax_scalar = Some(t_batched.robust_min_s),
+                    _ => spmm_kmax_simd = Some(t_batched.robust_min_s),
+                }
             }
-        });
-        let t_batched = bench_default(|| spmv::multilevel::spmm_ml_seq(&csb, &xk, &mut yk, k));
-        let t_par =
-            bench_default(|| spmv::multilevel::spmm_ml_par(&csb, &xk, &mut yk, k, threads));
-        push_point(
-            &mut table,
-            &mut records,
-            "spmm",
-            n,
-            k,
-            t_scalar.robust_min_s,
-            t_batched.robust_min_s,
-            t_par.robust_min_s,
-        );
 
-        // Fused Gaussian kernel: k queries, weights computed once per entry.
-        let t_gscalar = bench_default(|| {
-            for _ in 0..k {
-                engine_seq.gauss_apply(&coords, &coords, d, inv_h2, &x1, &mut y1);
-            }
-        });
-        let t_gbatched = bench_default(|| {
-            engine_seq.gauss_apply_multi(&coords, &coords, d, inv_h2, &xk, k, &mut yk)
-        });
-        let t_gpar = bench_default(|| {
-            engine_par.gauss_apply_multi(&coords, &coords, d, inv_h2, &xk, k, &mut yk)
-        });
-        push_point(
-            &mut table,
-            &mut records,
-            "gauss",
-            n,
-            k,
-            t_gscalar.robust_min_s,
-            t_gbatched.robust_min_s,
-            t_gpar.robust_min_s,
-        );
+            // Fused Gaussian: k queries, weights computed once per entry.
+            let t_gscalar = bench_default(|| {
+                for _ in 0..k {
+                    engine_seq.gauss_apply(&coords, &coords, d, inv_h2, &x1, &mut y1);
+                }
+            });
+            let t_gbatched = bench_default(|| {
+                engine_seq.gauss_apply_multi(&coords, &coords, d, inv_h2, &xk, k, &mut yk)
+            });
+            let t_gpar = bench_default(|| {
+                engine_par.gauss_apply_multi(&coords, &coords, d, inv_h2, &xk, k, &mut yk)
+            });
+            push_point(
+                &mut table,
+                &mut records,
+                Point {
+                    kernel: kind.label(),
+                    dispatch: dispatch.label(),
+                    fallback,
+                    op: "gauss",
+                    n,
+                    k,
+                    scalar_s: t_gscalar.robust_min_s,
+                    batched_s: t_gbatched.robust_min_s,
+                    par_s: t_gpar.robust_min_s,
+                },
+            );
+        }
     }
     table.finish();
-    let out_path = repo_root_out(out_path);
-    let doc = obj(vec![
+
+    let mut top: Vec<(&str, Json)> = vec![
         ("bench", s("fig3_multirhs")),
         ("workload", s(wl.name())),
         ("n", num(n as f64)),
         ("status", s("measured")),
         ("testbed", s(&machine_summary())),
+        ("kernel_requested", s(kernel_req)),
+        ("kernel_detected", s(detect().label())),
+        ("dense_fraction", num(csb.dense_fraction())),
+        ("scalar_bitexact_threads", s("1,2,8")),
         (
             "expected_shape",
-            s("per_rhs_speedup grows with k; acceptance bar: gauss k=8 >= 2x (spmm merely > 1) on the clustered dataset; k=1 rows are the parity check"),
+            s("per_rhs_speedup grows with k; acceptance bar: gauss k=8 >= 2x (spmm merely > 1) on the clustered dataset; k=1 rows are the parity check; simd batched_seconds <= scalar batched_seconds on the dense-heavy spmm rows unless simd_fallback_reason is set"),
         ),
-        ("points", arr(records)),
-    ]);
+    ];
+    if let (Some(sc), Some(sv)) = (spmm_kmax_scalar, spmm_kmax_simd) {
+        // >1 ⇔ the SIMD path beats the scalar path on the dense-heavy
+        // structural case at the widest RHS block.
+        top.push(("simd_speedup_spmm_kmax", num(sc / sv)));
+        println!("# simd vs scalar, spmm k={kmax}: {:.2}x", sc / sv);
+    }
+    if let Some(why) = simd_fallback {
+        top.push(("simd_fallback_reason", s(why)));
+        println!("# simd dispatch fell back to scalar: {why}");
+    }
+    top.push(("points", arr(records)));
+    let doc = obj(top);
+    let out_path = repo_root_out(out_path);
     let mut f = std::fs::File::create(&out_path).expect("write interact json");
     writeln!(f, "{doc}").expect("write interact json");
     println!("\n[saved {}]", out_path.display());
     println!("per_rhs_speedup = (k x scalar time) / batched time; k=1 rows are the parity check.");
 }
 
-/// One sweep row + json record.
-#[allow(clippy::too_many_arguments)]
-fn push_point(
-    table: &mut Table,
-    records: &mut Vec<Json>,
-    kernel: &str,
+/// One sweep point (kernel row × op × k).
+struct Point {
+    kernel: &'static str,
+    dispatch: &'static str,
+    fallback: Option<&'static str>,
+    op: &'static str,
     n: usize,
     k: usize,
     scalar_s: f64,
     batched_s: f64,
     par_s: f64,
-) {
-    let speedup = scalar_s / batched_s;
+}
+
+/// One sweep row + json record.
+fn push_point(table: &mut Table, records: &mut Vec<Json>, p: Point) {
+    let speedup = p.scalar_s / p.batched_s;
     table.row(vec![
-        kernel.to_string(),
-        n.to_string(),
-        k.to_string(),
-        format!("{:.3}", scalar_s * 1e3),
-        format!("{:.3}", batched_s * 1e3),
+        format!("{}:{}", p.kernel, p.op),
+        p.dispatch.to_string(),
+        p.n.to_string(),
+        p.k.to_string(),
+        format!("{:.3}", p.scalar_s * 1e3),
+        format!("{:.3}", p.batched_s * 1e3),
         format!("{speedup:.2}"),
-        format!("{:.3}", par_s * 1e3),
+        format!("{:.3}", p.par_s * 1e3),
     ]);
-    records.push(obj(vec![
-        ("kernel", s(kernel)),
-        ("n", num(n as f64)),
-        ("k", num(k as f64)),
-        ("scalar_seconds", num(scalar_s)),
-        ("batched_seconds", num(batched_s)),
-        ("par_batched_seconds", num(par_s)),
+    let mut rec = vec![
+        ("kernel", s(p.kernel)),
+        ("dispatch", s(p.dispatch)),
+        ("op", s(p.op)),
+        ("n", num(p.n as f64)),
+        ("k", num(p.k as f64)),
+        ("scalar_seconds", num(p.scalar_s)),
+        ("batched_seconds", num(p.batched_s)),
+        ("par_batched_seconds", num(p.par_s)),
         ("per_rhs_speedup", num(speedup)),
-    ]));
+    ];
+    if let Some(why) = p.fallback {
+        rec.push(("dispatch_fallback", s(why)));
+    }
+    records.push(obj(rec));
 }

@@ -15,6 +15,7 @@
 //! micro-GEMM pass per block.
 
 use crate::csb::hier::HierCsb;
+use crate::csb::kernel::KernelKind;
 use crate::data::dataset::Dataset;
 use crate::interact::engine::Engine;
 use crate::knn::ann::forest::{knn_cross_with_forest, PcaForest};
@@ -45,6 +46,8 @@ pub struct MeanShiftConfig {
     pub leaf_cap: usize,
     /// kNN backend for the target→source profile (exact or approximate).
     pub knn: KnnBackend,
+    /// Apply kernel (`Scalar` pins the bit-exact reference path).
+    pub kernel: KernelKind,
 }
 
 impl MeanShiftConfig {
@@ -72,6 +75,7 @@ impl Default for MeanShiftConfig {
             build_threads: 0,
             leaf_cap: 128,
             knn: KnnBackend::Exact,
+            kernel: KernelKind::Auto,
         }
     }
 }
@@ -140,7 +144,7 @@ fn build_structure(
         build_threads,
     );
     Structure {
-        engine: Engine::new(csb, cfg.threads),
+        engine: Engine::with_kernel(csb, cfg.threads, cfg.kernel),
         tperm,
         scoords: sources_ordered.raw().to_vec(),
     }
@@ -177,6 +181,12 @@ pub fn run(data: &Dataset, cfg: &MeanShiftConfig) -> MeanShiftResult {
     let mut means = data.clone();
     let mut iterations = 0;
     let mut structure: Option<Structure> = None;
+    // Hoisted per-iteration buffers: the apply loop is allocation-free in
+    // steady state (the engine owns its own kernel scratch the same way).
+    let mut tcoords: Vec<f32> = Vec::new();
+    let mut num: Vec<f32> = Vec::new();
+    let mut den: Vec<f32> = Vec::new();
+    let mut new_tree: Vec<f32> = Vec::new();
 
     for it in 0..cfg.max_iters {
         iterations = it + 1;
@@ -192,14 +202,14 @@ pub fn run(data: &Dataset, cfg: &MeanShiftConfig) -> MeanShiftResult {
         let s = structure.as_ref().unwrap();
 
         // tree-ordered target coordinates
-        let tcoords = crate::csb::layout::rows_to_tree_order(means.raw(), d, &s.tperm);
-        let (num, den) = s
-            .engine
-            .meanshift_step(&tcoords, &s.scoords, d, inv_h2);
+        crate::csb::layout::rows_to_tree_order_into(means.raw(), d, &s.tperm, &mut tcoords);
+        s.engine
+            .meanshift_step_into(&tcoords, &s.scoords, d, inv_h2, &mut num, &mut den);
 
         // shift: m_i <- num_i / den_i  (tree order), then scatter back
         let mut max_shift2 = 0.0f64;
-        let mut new_tree = vec![0.0f32; n * d];
+        new_tree.clear();
+        new_tree.resize(n * d, 0.0);
         for i in 0..n {
             let dn = den[i].max(1e-30);
             let mut s2 = 0.0f64;
@@ -211,12 +221,8 @@ pub fn run(data: &Dataset, cfg: &MeanShiftConfig) -> MeanShiftResult {
             }
             max_shift2 = max_shift2.max(s2);
         }
-        let new_orig = crate::csb::layout::rows_from_tree_order(&new_tree, d, &s.tperm);
-        means = {
-            let mut m = Dataset::new(n, d, new_orig);
-            m.labels = data.labels.clone();
-            m
-        };
+        // scatter the shifted means straight back into the dataset buffer
+        crate::csb::layout::rows_from_tree_order_into(&new_tree, d, &s.tperm, means.raw_mut());
         if max_shift2.sqrt() < cfg.tol {
             break;
         }

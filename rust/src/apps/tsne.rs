@@ -19,6 +19,7 @@
 use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::Coordinator;
 use crate::csb::hier::HierCsb;
+use crate::csb::kernel::KernelKind;
 use crate::data::dataset::Dataset;
 use crate::interact::engine::Engine;
 use crate::knn::exact::KnnGraph;
@@ -55,6 +56,8 @@ pub struct TsneConfig {
     pub use_pjrt: bool,
     /// kNN backend for the sparse P profile (exact or approximate).
     pub knn: KnnBackend,
+    /// Apply kernel (`Scalar` pins the bit-exact reference path).
+    pub kernel: KernelKind,
 }
 
 impl Default for TsneConfig {
@@ -75,6 +78,7 @@ impl Default for TsneConfig {
             leaf_cap: 256,
             use_pjrt: false,
             knn: KnnBackend::Exact,
+            kernel: KernelKind::Auto,
         }
     }
 }
@@ -251,7 +255,7 @@ pub fn run(ds: &Dataset, cfg: &TsneConfig, registry: Option<ArtifactRegistry>) -
         dense_thr,
         build_threads,
     );
-    let engine = Engine::new(csb, pool.threads);
+    let engine = Engine::with_kernel(csb, pool.threads, cfg.kernel);
     let mut coord = Coordinator::new(
         engine,
         if cfg.use_pjrt { registry } else { None },

@@ -14,7 +14,7 @@ use crate::coordinator::batcher::{BatchPlan, BatchPolicy, QueryBatcher, Route};
 use crate::coordinator::metrics::Metrics;
 use crate::par::pool::SendPtr;
 use crate::csb::hier::{HierCsb, LeafBlock};
-use crate::interact::engine::{tsne_block, BlockScratch, Engine};
+use crate::interact::engine::{tsne_block, Engine};
 use crate::runtime::{ArtifactRegistry, Tensor};
 
 /// Hybrid Rust + PJRT interaction coordinator.
@@ -95,12 +95,14 @@ impl Coordinator {
 
         // ---- Phase 1: workers on the Rust-routed blocks -------------------
         let csb = &self.engine.csb;
+        let dispatch = self.engine.dispatch();
         let rust_by_target = &self.rust_by_target;
         let mut rust_secs = 0.0;
         Metrics::time_phase(&mut rust_secs, || {
             let fp = SendPtr(force.as_mut_ptr());
             let fpr = &fp;
-            self.engine.pool.for_each_chunked(rust_by_target.len(), 4, |tl| {
+            let engine = &self.engine;
+            engine.pool.for_each_chunked_worker(rust_by_target.len(), 4, |w, tl| {
                 let sp = csb.tgt_leaves[tl];
                 // SAFETY: disjoint target-leaf row spans.
                 let seg: &mut [f32] = unsafe {
@@ -109,9 +111,9 @@ impl Coordinator {
                         sp.len() * d,
                     )
                 };
-                let mut scratch = BlockScratch::default();
+                let mut scratch = engine.worker_scratch(w);
                 for &t in &rust_by_target[tl] {
-                    tsne_block(csb, t as usize, y, d, &mut scratch, seg);
+                    tsne_block(csb, t as usize, y, d, dispatch, &mut scratch, seg);
                 }
             });
         });
@@ -133,7 +135,8 @@ impl Coordinator {
         let have_batch = registry.variants.contains_key(&batch_name);
 
         Metrics::time_phase(&mut pjrt_secs, || {
-            let mut scratch = BlockScratch::default();
+            // Leader phase runs after the workers drained; slot 0 is free.
+            let mut scratch = self.engine.worker_scratch(0);
             for &t in &self.plan.pjrt_single {
                 let b = &csb.blocks[t as usize];
                 if have_single {
@@ -152,7 +155,7 @@ impl Coordinator {
                 // fallback: rust
                 let sp = b.rows;
                 let seg = &mut force[sp.lo as usize * d..sp.hi as usize * d];
-                tsne_block(csb, t as usize, y, d, &mut scratch, seg);
+                tsne_block(csb, t as usize, y, d, dispatch, &mut scratch, seg);
                 self.metrics.rust_blocks += 1;
             }
             for group in &self.plan.pjrt_batches {
@@ -175,7 +178,7 @@ impl Coordinator {
                 for &t in group {
                     let sp = csb.blocks[t as usize].rows;
                     let seg = &mut force[sp.lo as usize * d..sp.hi as usize * d];
-                    tsne_block(csb, t as usize, y, d, &mut scratch, seg);
+                    tsne_block(csb, t as usize, y, d, dispatch, &mut scratch, seg);
                     self.metrics.rust_blocks += 1;
                 }
             }

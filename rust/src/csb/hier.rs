@@ -16,10 +16,16 @@
 //! * **flat** — row-major over (target leaf, source leaf), i.e. classic
 //!   single-level CSB; kept for the ablation benches.
 
+use crate::csb::kernel::{self, Dispatch};
+use crate::csb::panel::{self, PanelArena};
 use crate::par::pool::{SendPtr, ThreadPool};
 use crate::sparse::csr::Csr;
 use crate::tree::boxtree::BoxTree;
 use std::collections::HashMap;
+
+// The micro-kernel layer moved to `csb::kernel`; re-exported here because
+// the granule was born in this module and callers import it from here.
+pub use crate::csb::kernel::{dense_gemm_acc, GEMM_KC};
 
 /// Half-open index span.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -108,6 +114,9 @@ pub struct HierCsb {
     pub sp_ptr: Vec<u32>,
     pub sp_col: Vec<u16>,
     pub sp_val: Vec<f32>,
+    /// Tile-major packed copies of the dense blocks (32-byte aligned), the
+    /// layout the SIMD dense micro-kernel consumes.
+    pub panels: PanelArena,
 }
 
 /// Default leaf population cap used across the system (matches the m256
@@ -185,11 +194,23 @@ impl HierCsb {
             })
             .collect();
 
+        // The DCSR arenas index local rows/columns with u16: a leaf span is
+        // bounded by the size cut at ~block_cap points, but an unsplittable
+        // leaf (duplicates past the tree's depth cap) can exceed it, so the
+        // bound is asserted rather than assumed.
+        for sp in tgt_leaves.iter().chain(src_leaves.iter()) {
+            assert!(
+                sp.len() <= (u16::MAX as usize) + 1,
+                "leaf span of {} points exceeds the u16 local-index range (block_cap {})",
+                sp.len(),
+                block_cap
+            );
+        }
+
         // Map col -> source leaf ordinal (rows are scanned per target leaf).
         let col_leaf = leaf_lookup(&src_leaves, a.cols);
         let pool = ThreadPool::new_or_default(threads);
         let nt = tgt_leaves.len();
-        let ns = src_leaves.len();
 
         // Pass 1 — count (parallel over target leaves): the occupied source
         // leaves of each target leaf, with per-block nnz and occupied-row
@@ -259,6 +280,8 @@ impl HierCsb {
         // loop walks memory linearly.
         let mut blocks: Vec<LeafBlock> = Vec::with_capacity(order.len());
         let mut ent_base: Vec<u32> = Vec::with_capacity(order.len());
+        let mut panel_off: Vec<u32> = Vec::with_capacity(order.len());
+        let mut panel_total = 0usize;
         let (mut dense_len, mut rows_len, mut ptr_len, mut ents_len) =
             (0usize, 0usize, 0usize, 0usize);
         for &(tl, sl) in &order {
@@ -274,6 +297,8 @@ impl HierCsb {
                 let off = dense_len as u32;
                 dense_len += area;
                 ent_base.push(0);
+                panel_off.push(panel_total as u32);
+                panel_total += panel::panel_len(rows.len(), cols.len());
                 BlockKind::Dense { off }
             } else {
                 let k = BlockKind::Sparse {
@@ -285,6 +310,7 @@ impl HierCsb {
                 ptr_len += c.rows as usize + 1;
                 ent_base.push(ents_len as u32);
                 ents_len += c.nnz as usize;
+                panel_off.push(panel::NO_PANEL);
                 k
             };
             blocks.push(LeafBlock {
@@ -296,6 +322,7 @@ impl HierCsb {
                 kind,
             });
         }
+        assert!(panel_total <= u32::MAX as usize, "panel arena exceeds u32 offsets");
         let mut by_target: Vec<Vec<u32>> = vec![Vec::new(); nt];
         for (t, b) in blocks.iter().enumerate() {
             by_target[b.tleaf as usize].push(t as u32);
@@ -400,6 +427,39 @@ impl HierCsb {
             });
         }
 
+        // Pass 3 — pack each dense block's values into its tile-major
+        // panel (parallel over blocks; every panel region belongs to
+        // exactly one block and each pack is a pure function of that
+        // block's dense values, so the arena is bit-identical across
+        // thread counts).
+        let mut panel_data = panel::AlignedF32::zeroed(panel_total);
+        {
+            let pp = SendPtr(panel_data.as_mut_slice().as_mut_ptr());
+            let ppr = &pp;
+            let blocks_ref = &blocks;
+            let panel_off_ref = &panel_off;
+            let dense_ref = &dense;
+            pool.for_each_chunked(blocks_ref.len(), 8, |t| {
+                let b = &blocks_ref[t];
+                if let BlockKind::Dense { off } = b.kind {
+                    let (rn, cn) = (b.rows.len(), b.cols.len());
+                    let po = panel_off_ref[t] as usize;
+                    let plen = panel::panel_len(rn, cn);
+                    // SAFETY: the worker materializes only its own block's
+                    // panel region; regions are disjoint per block, so no
+                    // two live slices overlap.
+                    let out: &mut [f32] =
+                        unsafe { std::slice::from_raw_parts_mut(ppr.0.add(po), plen) };
+                    panel::pack_panel(
+                        &dense_ref[off as usize..off as usize + rn * cn],
+                        rn,
+                        cn,
+                        out,
+                    );
+                }
+            });
+        }
+
         HierCsb {
             rows: a.rows,
             cols: a.cols,
@@ -414,6 +474,10 @@ impl HierCsb {
             sp_ptr,
             sp_col,
             sp_val,
+            panels: PanelArena {
+                off: panel_off,
+                data: panel_data,
+            },
         }
     }
 
@@ -468,8 +532,19 @@ impl HierCsb {
     #[inline]
     pub fn block_matmul(&self, t: usize, x: &[f32], y: &mut [f32], k: usize) {
         let b = &self.blocks[t];
-        let x_seg = &x[b.cols.lo as usize * k..b.cols.hi as usize * k];
         let y_seg = &mut y[b.rows.lo as usize * k..b.rows.hi as usize * k];
+        self.block_matmul_seg(t, x, y_seg, k);
+    }
+
+    /// [`Self::block_matmul`] into the block's already-sliced output row
+    /// segment (`block_rows x k`) — the form the parallel drivers use so a
+    /// task only ever holds a mutable slice of its own leaf's rows (blocks
+    /// span exactly one target leaf).
+    #[inline]
+    pub fn block_matmul_seg(&self, t: usize, x: &[f32], y_seg: &mut [f32], k: usize) {
+        let b = &self.blocks[t];
+        debug_assert_eq!(y_seg.len(), b.rows.len() * k);
+        let x_seg = &x[b.cols.lo as usize * k..b.cols.hi as usize * k];
         match b.kind {
             BlockKind::Dense { off } => {
                 let w = b.cols.len();
@@ -483,29 +558,86 @@ impl HierCsb {
             } => {
                 let rows = &self.sp_rows[row_off as usize..(row_off + row_cnt) as usize];
                 let ptr = &self.sp_ptr[ptr_off as usize..(ptr_off + row_cnt + 1) as usize];
-                let mut j0 = 0;
-                while j0 < k {
-                    let kc = GEMM_KC.min(k - j0);
-                    for (ti, &r) in rows.iter().enumerate() {
-                        let lo = ptr[ti] as usize;
-                        let hi = ptr[ti + 1] as usize;
-                        let mut acc = [0.0f32; GEMM_KC];
-                        for e in lo..hi {
-                            let v = self.sp_val[e];
-                            let xr = &x_seg[self.sp_col[e] as usize * k + j0..][..kc];
-                            for (a, &xv) in acc[..kc].iter_mut().zip(xr) {
-                                *a += v * xv;
-                            }
-                        }
-                        let out = &mut y_seg[r as usize * k + j0..][..kc];
-                        for (o, &a) in out.iter_mut().zip(&acc[..kc]) {
-                            *o += a;
-                        }
-                    }
-                    j0 += kc;
-                }
+                kernel::dcsr_gemm_acc(rows, ptr, &self.sp_col, &self.sp_val, x_seg, k, y_seg);
             }
         }
+    }
+
+    /// [`Self::block_matmul`] under an explicit kernel dispatch: `Scalar`
+    /// is the golden reference above; `Avx2` runs the SIMD micro-kernels
+    /// over the packed panel (dense) / the DCSR arenas (sparse).
+    #[inline]
+    pub fn block_matmul_with(&self, t: usize, x: &[f32], y: &mut [f32], k: usize, d: Dispatch) {
+        let b = &self.blocks[t];
+        let y_seg = &mut y[b.rows.lo as usize * k..b.rows.hi as usize * k];
+        self.block_matmul_seg_with(t, x, y_seg, k, d);
+    }
+
+    /// [`Self::block_matmul_seg`] under an explicit kernel dispatch.
+    #[inline]
+    pub fn block_matmul_seg_with(
+        &self,
+        t: usize,
+        x: &[f32],
+        y_seg: &mut [f32],
+        k: usize,
+        d: Dispatch,
+    ) {
+        match d {
+            Dispatch::Scalar => self.block_matmul_seg(t, x, y_seg, k),
+            Dispatch::Avx2 => self.block_matmul_seg_avx2(t, x, y_seg, k),
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    fn block_matmul_seg_avx2(&self, t: usize, x: &[f32], y_seg: &mut [f32], k: usize) {
+        // Re-verify CPU support so a hand-built Dispatch::Avx2 from safe
+        // code cannot reach the target-feature kernels on an unsupported
+        // CPU (std caches the feature probe — one relaxed atomic load).
+        if kernel::detect() != Dispatch::Avx2 {
+            return self.block_matmul_seg(t, x, y_seg, k);
+        }
+        let b = &self.blocks[t];
+        debug_assert_eq!(y_seg.len(), b.rows.len() * k);
+        let x_seg = &x[b.cols.lo as usize * k..b.cols.hi as usize * k];
+        match b.kind {
+            BlockKind::Dense { .. } => {
+                let (rn, cn) = (b.rows.len(), b.cols.len());
+                let p = self
+                    .panels
+                    .panel(t, rn, cn)
+                    .expect("dense block without a packed panel");
+                // SAFETY: the detect() guard above confirmed AVX2+FMA.
+                unsafe { kernel::avx2::panel_gemm_acc(p, rn, cn, x_seg, k, y_seg) };
+            }
+            BlockKind::Sparse {
+                row_off,
+                row_cnt,
+                ptr_off,
+            } => {
+                let rows = &self.sp_rows[row_off as usize..(row_off + row_cnt) as usize];
+                let ptr = &self.sp_ptr[ptr_off as usize..(ptr_off + row_cnt + 1) as usize];
+                // SAFETY: the detect() guard above confirmed AVX2+FMA.
+                unsafe {
+                    kernel::avx2::dcsr_gemm_acc(
+                        rows,
+                        ptr,
+                        &self.sp_col,
+                        &self.sp_val,
+                        x_seg,
+                        k,
+                        y_seg,
+                    )
+                };
+            }
+        }
+    }
+
+    #[cfg(not(target_arch = "x86_64"))]
+    fn block_matmul_seg_avx2(&self, t: usize, x: &[f32], y_seg: &mut [f32], k: usize) {
+        // No SIMD kernel on this target; `kernel::detect()` never yields
+        // Avx2 here, this arm only backstops a hand-built Dispatch.
+        self.block_matmul_seg(t, x, y_seg, k)
     }
 
     /// Sequential multi-level SpMM: `Y = A X` with `k` RHS columns
@@ -625,73 +757,6 @@ impl HierCsb {
             self.dense_fraction(),
             self.nnz as f64 / self.blocks.len().max(1) as f64
         )
-    }
-}
-
-/// RHS register-block width of the micro-GEMM: 8 f32 accumulators fit one
-/// AVX2 register (or two NEON quads) with room for the 4 broadcast values
-/// of the unrolled reduction, so the inner loops stay in registers.
-pub const GEMM_KC: usize = 8;
-
-/// Register-blocked dense micro-GEMM granule: `Y += D · X` for a row-major
-/// `nrows x ncols` block `d` against `k` RHS columns (`x`: `ncols x k`,
-/// `y`: `nrows x k`, row-major).
-///
-/// RHS columns are processed in register blocks of [`GEMM_KC`]; the
-/// reduction over `ncols` is 4×-unrolled.  Each (row, rhs) output keeps a
-/// **single sequential accumulation chain** in column order — the same
-/// op sequence as the scalar dense matvec — so `k = 1` reproduces
-/// [`HierCsb::block_matvec`] bit-for-bit while still reusing every loaded
-/// matrix value across all `k` columns (the GEMM arithmetic-intensity win).
-pub fn dense_gemm_acc(d: &[f32], nrows: usize, ncols: usize, x: &[f32], k: usize, y: &mut [f32]) {
-    debug_assert!(d.len() >= nrows * ncols);
-    debug_assert!(x.len() >= ncols * k);
-    debug_assert!(y.len() >= nrows * k);
-    let mut j0 = 0;
-    while j0 < k {
-        let kc = GEMM_KC.min(k - j0);
-        for r in 0..nrows {
-            let row = &d[r * ncols..(r + 1) * ncols];
-            let mut acc = [0.0f32; GEMM_KC];
-            let acc = &mut acc[..kc];
-            let mut c = 0;
-            while c + 4 <= ncols {
-                let d0 = row[c];
-                let d1 = row[c + 1];
-                let d2 = row[c + 2];
-                let d3 = row[c + 3];
-                let x0 = &x[c * k + j0..][..kc];
-                let x1 = &x[(c + 1) * k + j0..][..kc];
-                let x2 = &x[(c + 2) * k + j0..][..kc];
-                let x3 = &x[(c + 3) * k + j0..][..kc];
-                for (a, &xv) in acc.iter_mut().zip(x0) {
-                    *a += d0 * xv;
-                }
-                for (a, &xv) in acc.iter_mut().zip(x1) {
-                    *a += d1 * xv;
-                }
-                for (a, &xv) in acc.iter_mut().zip(x2) {
-                    *a += d2 * xv;
-                }
-                for (a, &xv) in acc.iter_mut().zip(x3) {
-                    *a += d3 * xv;
-                }
-                c += 4;
-            }
-            while c < ncols {
-                let dv = row[c];
-                let xr = &x[c * k + j0..][..kc];
-                for (a, &xv) in acc.iter_mut().zip(xr) {
-                    *a += dv * xv;
-                }
-                c += 1;
-            }
-            let out = &mut y[r * k + j0..][..kc];
-            for (o, &a) in out.iter_mut().zip(acc.iter()) {
-                *o += a;
-            }
-        }
-        j0 += kc;
     }
 }
 
@@ -944,27 +1009,49 @@ mod tests {
     }
 
     #[test]
-    fn dense_gemm_matches_naive() {
-        // Odd shapes around the 4x unroll and the GEMM_KC register block.
-        let mut rng = crate::util::rng::Rng::new(23);
-        let shapes = [(1usize, 1usize, 1usize), (3, 5, 2), (7, 9, 8), (4, 13, 9), (16, 31, 17)];
-        for &(r, c, k) in &shapes {
-            let d: Vec<f32> = (0..r * c).map(|_| rng.f32() - 0.5).collect();
-            let x: Vec<f32> = (0..c * k).map(|_| rng.f32() - 0.5).collect();
-            let mut y = vec![0.0f32; r * k];
-            dense_gemm_acc(&d, r, c, &x, k, &mut y);
-            for i in 0..r {
-                for j in 0..k {
-                    let mut want = 0.0f64;
-                    for t in 0..c {
-                        want += d[i * c + t] as f64 * x[t * k + j] as f64;
+    fn panels_mirror_dense_blocks() {
+        use crate::csb::panel::{panel_len, PANEL_MR};
+        let (_, csb) = setup(500, 32);
+        for (t, b) in csb.blocks.iter().enumerate() {
+            let (rn, cn) = (b.rows.len(), b.cols.len());
+            match b.kind {
+                BlockKind::Dense { off } => {
+                    let p = csb.panels.panel(t, rn, cn).expect("dense block has a panel");
+                    assert_eq!(p.len(), panel_len(rn, cn));
+                    for r in 0..rn {
+                        for c in 0..cn {
+                            let want = csb.dense[off as usize + r * cn + c];
+                            let got =
+                                p[(r / PANEL_MR) * cn * PANEL_MR + c * PANEL_MR + (r % PANEL_MR)];
+                            assert_eq!(got.to_bits(), want.to_bits(), "block {t} at ({r},{c})");
+                        }
                     }
-                    assert!(
-                        (y[i * k + j] as f64 - want).abs() < 1e-4 * (1.0 + want.abs()),
-                        "({r}x{c} k={k}) at ({i},{j}): {} vs {want}",
-                        y[i * k + j]
-                    );
                 }
+                BlockKind::Sparse { .. } => {
+                    assert!(csb.panels.panel(t, rn, cn).is_none());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dispatched_spmm_matches_scalar_within_tolerance() {
+        // The dispatch seam itself: whatever kernel::detect() offers on
+        // this CPU, block_matmul_with must agree with the scalar reference
+        // (exact parity bounds live in rust/tests/kernel_parity.rs).
+        let (a, csb) = setup(400, 32);
+        let (dispatch, _) = kernel::KernelKind::Auto.resolve();
+        let mut rng = crate::util::rng::Rng::new(29);
+        for k in [1usize, 3, 8] {
+            let x: Vec<f32> = (0..a.cols * k).map(|_| rng.f32() - 0.5).collect();
+            let mut y_ref = vec![0.0f32; a.rows * k];
+            csb.spmm(&x, &mut y_ref, k);
+            let mut y = vec![0.0f32; a.rows * k];
+            for t in 0..csb.blocks.len() {
+                csb.block_matmul_with(t, &x, &mut y, k, dispatch);
+            }
+            for (g, w) in y.iter().zip(&y_ref) {
+                assert!((g - w).abs() < 1e-5 * (1.0 + w.abs()), "k={k}: {g} vs {w}");
             }
         }
     }
@@ -1000,6 +1087,14 @@ mod tests {
                 .iter()
                 .zip(&par.sp_val)
                 .all(|(x, y)| x.to_bits() == y.to_bits()));
+            assert_eq!(seq.panels.off, par.panels.off, "panel offsets, threads={threads}");
+            let sp = seq.panels.data.as_slice();
+            let pp = par.panels.data.as_slice();
+            assert_eq!(sp.len(), pp.len());
+            assert!(
+                sp.iter().zip(pp).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "panel arena differs, threads={threads}"
+            );
         }
     }
 

@@ -1,0 +1,472 @@
+//! Apply-side micro-kernels and their runtime dispatch.
+//!
+//! Every block product in the system bottoms out in one of two granules:
+//!
+//! * **dense** — `Y += D · X` for a dense-stored block against `k` RHS
+//!   columns ([`dense_gemm_acc`] on row-major values, or the AVX2 panel
+//!   kernel [`avx2::panel_gemm_acc`] on the tile-major panels packed at
+//!   build time by [`crate::csb::panel`]);
+//! * **DCSR** — row-wise `k`-wide AXPYs over a block's local CSR with
+//!   `u16` column indices ([`dcsr_gemm_acc`] / [`avx2::dcsr_gemm_acc`]).
+//!
+//! The scalar variants are the **always-available golden reference**: they
+//! keep a single sequential accumulation chain per output in column order,
+//! so `k = 1` reproduces the scalar matvec bit-for-bit and results are
+//! bit-identical across thread counts.  The AVX2+FMA variants keep the
+//! same per-output chain *order* but contract multiply-add pairs (FMA), so
+//! they match the scalar reference to relative tolerance, not bitwise —
+//! which is why [`KernelKind::Scalar`] exists as a CLI-pinnable choice for
+//! determinism-sensitive runs while SIMD-vs-scalar parity is
+//! tolerance-checked (`rust/tests/kernel_parity.rs`, repo-root
+//! EXPERIMENTS.md §Kernel dispatch).
+
+/// RHS register-block width of the micro-GEMM: 8 f32 accumulators fit one
+/// AVX2 register (or two NEON quads) with room for the 4 broadcast values
+/// of the unrolled reduction, so the inner loops stay in registers.
+pub const GEMM_KC: usize = 8;
+
+/// Kernel selection as requested (CLI `--kernel {auto,simd,scalar}`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KernelKind {
+    /// Best available: SIMD when the CPU supports it, scalar otherwise.
+    #[default]
+    Auto,
+    /// SIMD requested explicitly (still falls back to scalar when the CPU
+    /// lacks AVX2+FMA, but the fallback reason is surfaced).
+    Simd,
+    /// Pin the scalar reference kernel (bit-exact across thread counts and
+    /// identical to the pre-SIMD behavior).
+    Scalar,
+}
+
+impl KernelKind {
+    /// Parse a CLI value.
+    pub fn parse(s: &str) -> Result<KernelKind, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(KernelKind::Auto),
+            "simd" => Ok(KernelKind::Simd),
+            "scalar" => Ok(KernelKind::Scalar),
+            other => Err(format!("unknown kernel '{other}' (auto|simd|scalar)")),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            KernelKind::Auto => "auto",
+            KernelKind::Simd => "simd",
+            KernelKind::Scalar => "scalar",
+        }
+    }
+
+    /// Resolve to a concrete dispatch.  The second field is the reason a
+    /// non-scalar request fell back to the scalar kernel (`None` when the
+    /// SIMD path is live or scalar was requested).
+    pub fn resolve(&self) -> (Dispatch, Option<&'static str>) {
+        match self {
+            KernelKind::Scalar => (Dispatch::Scalar, None),
+            KernelKind::Auto | KernelKind::Simd => match detect() {
+                Dispatch::Avx2 => (Dispatch::Avx2, None),
+                Dispatch::Scalar => (Dispatch::Scalar, Some(FALLBACK_REASON)),
+            },
+        }
+    }
+}
+
+/// A concrete kernel implementation chosen at runtime.
+///
+/// Construct `Avx2` via [`detect`]/[`KernelKind::resolve`].  A hand-built
+/// `Avx2` on an unsupported CPU is still *sound*: every dispatch site
+/// re-verifies with [`detect`] (cached probe) and falls back to the
+/// scalar kernel, so the `#[target_feature]` code is never reached
+/// without CPU support.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dispatch {
+    Scalar,
+    Avx2,
+}
+
+impl Dispatch {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Dispatch::Scalar => "scalar",
+            Dispatch::Avx2 => "avx2",
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+const FALLBACK_REASON: &str = "cpu lacks avx2+fma";
+#[cfg(not(target_arch = "x86_64"))]
+const FALLBACK_REASON: &str = "non-x86_64 target (no simd kernel built)";
+
+/// Probe the running CPU for the SIMD kernel's feature set.
+pub fn detect() -> Dispatch {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+        {
+            return Dispatch::Avx2;
+        }
+    }
+    Dispatch::Scalar
+}
+
+/// Register-blocked dense micro-GEMM granule: `Y += D · X` for a row-major
+/// `nrows x ncols` block `d` against `k` RHS columns (`x`: `ncols x k`,
+/// `y`: `nrows x k`, row-major).
+///
+/// RHS columns are processed in register blocks of [`GEMM_KC`]; the
+/// reduction over `ncols` is 4×-unrolled.  Each (row, rhs) output keeps a
+/// **single sequential accumulation chain** in column order — the same
+/// op sequence as the scalar dense matvec — so `k = 1` reproduces
+/// `HierCsb::block_matvec` bit-for-bit while still reusing every loaded
+/// matrix value across all `k` columns (the GEMM arithmetic-intensity win).
+pub fn dense_gemm_acc(d: &[f32], nrows: usize, ncols: usize, x: &[f32], k: usize, y: &mut [f32]) {
+    debug_assert!(d.len() >= nrows * ncols);
+    debug_assert!(x.len() >= ncols * k);
+    debug_assert!(y.len() >= nrows * k);
+    let mut j0 = 0;
+    while j0 < k {
+        let kc = GEMM_KC.min(k - j0);
+        for r in 0..nrows {
+            let row = &d[r * ncols..(r + 1) * ncols];
+            let mut acc = [0.0f32; GEMM_KC];
+            let acc = &mut acc[..kc];
+            let mut c = 0;
+            while c + 4 <= ncols {
+                let d0 = row[c];
+                let d1 = row[c + 1];
+                let d2 = row[c + 2];
+                let d3 = row[c + 3];
+                let x0 = &x[c * k + j0..][..kc];
+                let x1 = &x[(c + 1) * k + j0..][..kc];
+                let x2 = &x[(c + 2) * k + j0..][..kc];
+                let x3 = &x[(c + 3) * k + j0..][..kc];
+                for (a, &xv) in acc.iter_mut().zip(x0) {
+                    *a += d0 * xv;
+                }
+                for (a, &xv) in acc.iter_mut().zip(x1) {
+                    *a += d1 * xv;
+                }
+                for (a, &xv) in acc.iter_mut().zip(x2) {
+                    *a += d2 * xv;
+                }
+                for (a, &xv) in acc.iter_mut().zip(x3) {
+                    *a += d3 * xv;
+                }
+                c += 4;
+            }
+            while c < ncols {
+                let dv = row[c];
+                let xr = &x[c * k + j0..][..kc];
+                for (a, &xv) in acc.iter_mut().zip(xr) {
+                    *a += dv * xv;
+                }
+                c += 1;
+            }
+            let out = &mut y[r * k + j0..][..kc];
+            for (o, &a) in out.iter_mut().zip(acc.iter()) {
+                *o += a;
+            }
+        }
+        j0 += kc;
+    }
+}
+
+/// DCSR micro-kernel granule: `Y += B · X` for a block-local doubly
+/// compressed CSR (`rows`: occupied local rows, `ptr`: absolute entry
+/// pointers into the shared `col`/`val` arenas) against `k` RHS columns
+/// (`x`: `block_cols x k`, `y`: `block_rows x k`, row-major).
+///
+/// The one entry point for the sparse-block register loop, shared by
+/// `HierCsb::block_matmul` and the engine paths (it used to be duplicated
+/// inline).  Per (row, rhs) output: single sequential accumulation chain
+/// in entry order — bit-exact with the scalar matvec at `k = 1`.
+pub fn dcsr_gemm_acc(
+    rows: &[u16],
+    ptr: &[u32],
+    col: &[u16],
+    val: &[f32],
+    x: &[f32],
+    k: usize,
+    y: &mut [f32],
+) {
+    debug_assert_eq!(ptr.len(), rows.len() + 1);
+    let mut j0 = 0;
+    while j0 < k {
+        let kc = GEMM_KC.min(k - j0);
+        for (t, &r) in rows.iter().enumerate() {
+            let lo = ptr[t] as usize;
+            let hi = ptr[t + 1] as usize;
+            let mut acc = [0.0f32; GEMM_KC];
+            for e in lo..hi {
+                let v = val[e];
+                let xr = &x[col[e] as usize * k + j0..][..kc];
+                for (a, &xv) in acc[..kc].iter_mut().zip(xr) {
+                    *a += v * xv;
+                }
+            }
+            let out = &mut y[r as usize * k + j0..][..kc];
+            for (o, &a) in out.iter_mut().zip(&acc[..kc]) {
+                *o += a;
+            }
+        }
+        j0 += kc;
+    }
+}
+
+/// AVX2+FMA variants of the two granules.
+///
+/// Layout contract: the dense kernel consumes **tile-major panels**
+/// ([`crate::csb::panel::pack_panel`]) so each reduction step loads
+/// `PANEL_MR` consecutive block values; both kernels handle any RHS width
+/// `1 ≤ k` via masked loads/stores on the partial register block (no RHS
+/// padding required, so the engine's `n x d` coordinate arrays feed in
+/// directly).  All loads are unaligned-tolerant (`loadu`/`maskload`); the
+/// build-time panel arena is 32-byte aligned so streaming reads stay
+/// cache-line resident.
+#[cfg(target_arch = "x86_64")]
+pub mod avx2 {
+    use super::GEMM_KC;
+    use crate::csb::panel::PANEL_MR;
+    use std::arch::x86_64::*;
+
+    /// Lane mask enabling the first `kc` of 8 f32 lanes.
+    ///
+    /// # Safety
+    /// Requires AVX2 (callers are `#[target_feature(enable = "avx2")]`).
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn lane_mask(kc: usize) -> __m256i {
+        let idx = _mm256_setr_epi32(0, 1, 2, 3, 4, 5, 6, 7);
+        _mm256_cmpgt_epi32(_mm256_set1_epi32(kc as i32), idx)
+    }
+
+    /// `Y += D · X` over a tile-major panel (see module docs).
+    ///
+    /// `panel` is `pack_panel`'s output for an `nrows x ncols` block; `x`
+    /// is `ncols x k` and `y` is `nrows x k`, both row-major.  Per output
+    /// the reduction runs in column order in one accumulator lane, so the
+    /// only deviation from [`super::dense_gemm_acc`] is FMA contraction.
+    ///
+    /// # Safety
+    /// The CPU must support AVX2 and FMA ([`super::detect`] returned
+    /// [`super::Dispatch::Avx2`]).
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    pub unsafe fn panel_gemm_acc(
+        panel: &[f32],
+        nrows: usize,
+        ncols: usize,
+        x: &[f32],
+        k: usize,
+        y: &mut [f32],
+    ) {
+        let ntiles = nrows.div_ceil(PANEL_MR);
+        debug_assert!(panel.len() >= ntiles * ncols * PANEL_MR);
+        debug_assert!(x.len() >= ncols * k);
+        debug_assert!(y.len() >= nrows * k);
+        let mut j0 = 0;
+        while j0 < k {
+            let kc = GEMM_KC.min(k - j0);
+            let full = kc == GEMM_KC;
+            let m = lane_mask(kc);
+            for tile in 0..ntiles {
+                let base = tile * ncols * PANEL_MR;
+                let mut acc = [_mm256_setzero_ps(); PANEL_MR];
+                for c in 0..ncols {
+                    let xp = x.as_ptr().add(c * k + j0);
+                    let xv = if full {
+                        _mm256_loadu_ps(xp)
+                    } else {
+                        _mm256_maskload_ps(xp, m)
+                    };
+                    let dp = base + c * PANEL_MR;
+                    for (rr, a) in acc.iter_mut().enumerate() {
+                        let dv = _mm256_set1_ps(*panel.get_unchecked(dp + rr));
+                        *a = _mm256_fmadd_ps(dv, xv, *a);
+                    }
+                }
+                let r0 = tile * PANEL_MR;
+                let live = (nrows - r0).min(PANEL_MR);
+                for (rr, a) in acc.iter().enumerate().take(live) {
+                    let yp = y.as_mut_ptr().add((r0 + rr) * k + j0);
+                    if full {
+                        _mm256_storeu_ps(yp, _mm256_add_ps(_mm256_loadu_ps(yp), *a));
+                    } else {
+                        _mm256_maskstore_ps(yp, m, _mm256_add_ps(_mm256_maskload_ps(yp, m), *a));
+                    }
+                }
+            }
+            j0 += kc;
+        }
+    }
+
+    /// AVX2 DCSR kernel: same contract as [`super::dcsr_gemm_acc`], one
+    /// broadcast-FMA per stored entry across the `k`-wide register block.
+    ///
+    /// # Safety
+    /// The CPU must support AVX2 and FMA ([`super::detect`] returned
+    /// [`super::Dispatch::Avx2`]).
+    #[target_feature(enable = "avx2")]
+    #[target_feature(enable = "fma")]
+    pub unsafe fn dcsr_gemm_acc(
+        rows: &[u16],
+        ptr: &[u32],
+        col: &[u16],
+        val: &[f32],
+        x: &[f32],
+        k: usize,
+        y: &mut [f32],
+    ) {
+        debug_assert_eq!(ptr.len(), rows.len() + 1);
+        let mut j0 = 0;
+        while j0 < k {
+            let kc = GEMM_KC.min(k - j0);
+            let full = kc == GEMM_KC;
+            let m = lane_mask(kc);
+            for (t, &r) in rows.iter().enumerate() {
+                let lo = *ptr.get_unchecked(t) as usize;
+                let hi = *ptr.get_unchecked(t + 1) as usize;
+                let mut acc = _mm256_setzero_ps();
+                for e in lo..hi {
+                    let xp = x.as_ptr().add(*col.get_unchecked(e) as usize * k + j0);
+                    let xv = if full {
+                        _mm256_loadu_ps(xp)
+                    } else {
+                        _mm256_maskload_ps(xp, m)
+                    };
+                    let dv = _mm256_set1_ps(*val.get_unchecked(e));
+                    acc = _mm256_fmadd_ps(dv, xv, acc);
+                }
+                let yp = y.as_mut_ptr().add(r as usize * k + j0);
+                if full {
+                    _mm256_storeu_ps(yp, _mm256_add_ps(_mm256_loadu_ps(yp), acc));
+                } else {
+                    _mm256_maskstore_ps(yp, m, _mm256_add_ps(_mm256_maskload_ps(yp, m), acc));
+                }
+            }
+            j0 += kc;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive(d: &[f32], r: usize, c: usize, x: &[f32], k: usize) -> Vec<f64> {
+        let mut want = vec![0.0f64; r * k];
+        for i in 0..r {
+            for j in 0..k {
+                for t in 0..c {
+                    want[i * k + j] += d[i * c + t] as f64 * x[t * k + j] as f64;
+                }
+            }
+        }
+        want
+    }
+
+    #[test]
+    fn kernel_kind_parses_and_labels() {
+        assert_eq!(KernelKind::parse("auto").unwrap(), KernelKind::Auto);
+        assert_eq!(KernelKind::parse("SIMD").unwrap(), KernelKind::Simd);
+        assert_eq!(KernelKind::parse("scalar").unwrap(), KernelKind::Scalar);
+        assert!(KernelKind::parse("mkl").is_err());
+        assert_eq!(KernelKind::Scalar.resolve(), (Dispatch::Scalar, None));
+        // Auto/Simd resolve to whatever the CPU offers; a scalar resolution
+        // must carry the fallback reason for the bench record.
+        let (d, why) = KernelKind::Simd.resolve();
+        assert_eq!(why.is_some(), d == Dispatch::Scalar);
+    }
+
+    #[test]
+    fn dense_gemm_matches_naive() {
+        // Odd shapes around the 4x unroll and the GEMM_KC register block.
+        let mut rng = Rng::new(23);
+        let shapes = [(1usize, 1usize, 1usize), (3, 5, 2), (7, 9, 8), (4, 13, 9), (16, 31, 17)];
+        for &(r, c, k) in &shapes {
+            let d: Vec<f32> = (0..r * c).map(|_| rng.f32() - 0.5).collect();
+            let x: Vec<f32> = (0..c * k).map(|_| rng.f32() - 0.5).collect();
+            let mut y = vec![0.0f32; r * k];
+            dense_gemm_acc(&d, r, c, &x, k, &mut y);
+            let want = naive(&d, r, c, &x, k);
+            for (g, w) in y.iter().zip(&want) {
+                assert!((*g as f64 - w).abs() < 1e-4 * (1.0 + w.abs()), "{g} vs {w}");
+            }
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_panel_gemm_matches_scalar() {
+        if detect() != Dispatch::Avx2 {
+            eprintln!("skipping: no AVX2+FMA on this CPU");
+            return;
+        }
+        use crate::csb::panel::{pack_panel, panel_len};
+        let mut rng = Rng::new(31);
+        // rows around PANEL_MR (4), cols around the unroll, k around GEMM_KC
+        let shapes = [
+            (1usize, 1usize, 1usize),
+            (3, 5, 3),
+            (4, 8, 8),
+            (5, 9, 17),
+            (16, 31, 7),
+            (13, 4, 8),
+        ];
+        for &(r, c, k) in &shapes {
+            let d: Vec<f32> = (0..r * c).map(|_| rng.f32() - 0.5).collect();
+            let x: Vec<f32> = (0..c * k).map(|_| rng.f32() - 0.5).collect();
+            let mut panel = vec![0.0f32; panel_len(r, c)];
+            pack_panel(&d, r, c, &mut panel);
+            let mut y_simd = vec![0.0f32; r * k];
+            // SAFETY: detect() confirmed AVX2+FMA above.
+            unsafe { avx2::panel_gemm_acc(&panel, r, c, &x, k, &mut y_simd) };
+            let mut y_ref = vec![0.0f32; r * k];
+            dense_gemm_acc(&d, r, c, &x, k, &mut y_ref);
+            for (g, w) in y_simd.iter().zip(&y_ref) {
+                assert!((g - w).abs() < 1e-5 * (1.0 + w.abs()), "({r}x{c} k={k}): {g} vs {w}");
+            }
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_dcsr_matches_scalar() {
+        if detect() != Dispatch::Avx2 {
+            eprintln!("skipping: no AVX2+FMA on this CPU");
+            return;
+        }
+        let mut rng = Rng::new(32);
+        for &(nrows, ncols, k) in &[(9usize, 7usize, 1usize), (5, 12, 3), (17, 33, 8), (4, 6, 17)] {
+            // random occupied rows with random short entry lists
+            let rows: Vec<u16> = (0..nrows).map(|r| r as u16).collect();
+            let mut ptr = vec![0u32];
+            let mut col = Vec::new();
+            let mut val = Vec::new();
+            for _ in 0..nrows {
+                let cnt = 1 + rng.below(4);
+                for _ in 0..cnt {
+                    col.push(rng.below(ncols) as u16);
+                    val.push(rng.f32() - 0.5);
+                }
+                ptr.push(col.len() as u32);
+            }
+            let x: Vec<f32> = (0..ncols * k).map(|_| rng.f32() - 0.5).collect();
+            let mut y_simd = vec![0.0f32; nrows * k];
+            // SAFETY: detect() confirmed AVX2+FMA above.
+            unsafe { avx2::dcsr_gemm_acc(&rows, &ptr, &col, &val, &x, k, &mut y_simd) };
+            let mut y_ref = vec![0.0f32; nrows * k];
+            dcsr_gemm_acc(&rows, &ptr, &col, &val, &x, k, &mut y_ref);
+            for (g, w) in y_simd.iter().zip(&y_ref) {
+                assert!(
+                    (g - w).abs() < 1e-5 * (1.0 + w.abs()),
+                    "({nrows}x{ncols} k={k}): {g} vs {w}"
+                );
+            }
+        }
+    }
+}

@@ -25,22 +25,39 @@ pub fn from_tree_order<T: Copy + Default>(x_tree: &[T], perm: &[usize]) -> Vec<T
 
 /// Gather rows of a row-major `n x d` coordinate array into tree order.
 pub fn rows_to_tree_order(x: &[f32], d: usize, perm: &[usize]) -> Vec<f32> {
+    let mut out = Vec::new();
+    rows_to_tree_order_into(x, d, perm, &mut out);
+    out
+}
+
+/// [`rows_to_tree_order`] into a reusable buffer (allocation-free once
+/// warm — the per-iteration gather of the mean-shift loop).
+pub fn rows_to_tree_order_into(x: &[f32], d: usize, perm: &[usize], out: &mut Vec<f32>) {
     assert_eq!(x.len(), perm.len() * d);
-    let mut out = Vec::with_capacity(x.len());
+    out.clear();
+    out.reserve(x.len());
     for &p in perm {
         out.extend_from_slice(&x[p * d..(p + 1) * d]);
     }
-    out
 }
 
 /// Scatter rows of a tree-ordered `n x d` array back to original order.
 pub fn rows_from_tree_order(xt: &[f32], d: usize, perm: &[usize]) -> Vec<f32> {
-    assert_eq!(xt.len(), perm.len() * d);
     let mut out = vec![0.0f32; xt.len()];
+    rows_from_tree_order_into(xt, d, perm, &mut out);
+    out
+}
+
+/// [`rows_from_tree_order`] into a caller-owned, pre-sized buffer
+/// (`perm.len() * d`) — every row is overwritten, so the scatter can go
+/// straight into a live coordinate array (the mean-shift loop writes the
+/// shifted means back into its `Dataset` buffer this way).
+pub fn rows_from_tree_order_into(xt: &[f32], d: usize, perm: &[usize], out: &mut [f32]) {
+    assert_eq!(xt.len(), perm.len() * d);
+    assert_eq!(out.len(), xt.len());
     for (k, &p) in perm.iter().enumerate() {
         out[p * d..(p + 1) * d].copy_from_slice(&xt[k * d..(k + 1) * d]);
     }
-    out
 }
 
 #[cfg(test)]

@@ -1,7 +1,10 @@
 //! Multi-level compressed sparse block storage (§2.4) — the paper's
 //! generalization of Buluç et al.'s CSB to *adaptive* blocks derived from
 //! the data's cluster hierarchy, plus the matching hierarchical vector
-//! layout.
+//! layout and the apply-side execution layer: packed dense-block panels
+//! ([`panel`]) and runtime-dispatched micro-kernels ([`kernel`]).
 
 pub mod hier;
+pub mod kernel;
 pub mod layout;
+pub mod panel;

@@ -1,0 +1,195 @@
+//! Packed dense-block panels: the value layout the SIMD dense micro-kernel
+//! consumes.
+//!
+//! A dense block's row-major values answer one question badly: "give me
+//! the next `PANEL_MR` rows' values at reduction column `c`" — the loads
+//! stride by the block width.  Packing at `HierCsb` build time rearranges
+//! each dense block into **tile-major panels**: rows are grouped into
+//! tiles of [`PANEL_MR`], and within a tile the values are stored
+//! column-major (`panel[tile*cols*MR + c*MR + r']`), so every reduction
+//! step of the micro-kernel loads `PANEL_MR` consecutive values.  Tail
+//! rows are zero-padded inside the tile (the kernel computes them but
+//! never stores them), and every panel starts 32-byte aligned
+//! ([`AlignedF32`] + the 8-float rounding in [`panel_len`]) so streaming
+//! reads stay cache-line resident.
+//!
+//! The row-major `dense` arena is kept alongside: it is the layout the
+//! fused engines materialize per-iteration weights in, the coordinator's
+//! PJRT packing reads, and the scalar reference kernel consumes — the
+//! panel arena costs one extra copy of the dense values (< the index
+//! arenas saved by `u16` DCSR columns on typical profiles) and buys the
+//! SIMD kernel contiguous loads on the stationary hot path.
+
+/// Rows per panel tile: 4 broadcast-FMA accumulators per reduction step
+/// (4 ymm accumulators + 1 RHS vector leaves the AVX2 register file room
+/// for the broadcasts).
+pub const PANEL_MR: usize = 4;
+
+/// Sentinel panel offset for blocks without a panel (sparse-stored).
+pub const NO_PANEL: u32 = u32::MAX;
+
+/// Panel footprint in f32 of an `rn x cn` dense block: full tiles of
+/// [`PANEL_MR`] rows, rounded to 8 floats so the *next* panel stays
+/// 32-byte aligned.
+pub fn panel_len(rn: usize, cn: usize) -> usize {
+    (rn.div_ceil(PANEL_MR) * cn * PANEL_MR).next_multiple_of(8)
+}
+
+/// Pack a row-major `rn x cn` block into tile-major panels (see module
+/// docs).  `out` must be zeroed and at least [`panel_len`] long — pad rows
+/// and the alignment tail stay zero.
+pub fn pack_panel(d: &[f32], rn: usize, cn: usize, out: &mut [f32]) {
+    debug_assert!(d.len() >= rn * cn);
+    debug_assert!(out.len() >= rn.div_ceil(PANEL_MR) * cn * PANEL_MR);
+    for r in 0..rn {
+        let base = (r / PANEL_MR) * cn * PANEL_MR + (r % PANEL_MR);
+        let row = &d[r * cn..(r + 1) * cn];
+        for (c, &v) in row.iter().enumerate() {
+            out[base + c * PANEL_MR] = v;
+        }
+    }
+}
+
+/// 32-byte block underlying [`AlignedF32`] (8 f32 = one AVX2 register).
+#[repr(C, align(32))]
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+struct Chunk([f32; 8]);
+
+const ZERO_CHUNK: Chunk = Chunk([0.0; 8]);
+
+/// A 32-byte-aligned `f32` buffer (a `Vec<f32>` only guarantees 4-byte
+/// alignment).  Exposes plain slices; the chunked backing store is an
+/// implementation detail.
+#[derive(Clone, Default, PartialEq)]
+pub struct AlignedF32 {
+    buf: Vec<Chunk>,
+    len: usize,
+}
+
+impl AlignedF32 {
+    /// A zero-initialized buffer of `len` floats.
+    pub fn zeroed(len: usize) -> AlignedF32 {
+        AlignedF32 {
+            buf: vec![ZERO_CHUNK; len.div_ceil(8)],
+            len,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        // SAFETY: `buf` stores `len.div_ceil(8)` contiguous `Chunk`s
+        // (size 32, align 32 — no padding between elements), i.e. at least
+        // `len` contiguous, initialized f32 at 32-byte-aligned storage.
+        unsafe { std::slice::from_raw_parts(self.buf.as_ptr().cast::<f32>(), self.len) }
+    }
+
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        // SAFETY: as in `as_slice`, plus exclusive access via `&mut self`.
+        unsafe { std::slice::from_raw_parts_mut(self.buf.as_mut_ptr().cast::<f32>(), self.len) }
+    }
+
+    /// Set the length to `len` with all floats zeroed, reusing capacity —
+    /// the per-apply scratch pattern (allocation-free once the high-water
+    /// mark is reached).  Returns the buffer as a slice.
+    pub fn reset_zeroed(&mut self, len: usize) -> &mut [f32] {
+        let chunks = len.div_ceil(8);
+        if self.buf.len() < chunks {
+            self.buf.resize(chunks, ZERO_CHUNK);
+        }
+        for c in &mut self.buf[..chunks] {
+            *c = ZERO_CHUNK;
+        }
+        self.len = len;
+        self.as_mut_slice()
+    }
+}
+
+impl std::fmt::Debug for AlignedF32 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "AlignedF32(len={})", self.len)
+    }
+}
+
+/// Per-block panel directory + the shared aligned value arena, built once
+/// by `HierCsb::build_with_par` (deterministically: each block's panel is
+/// a pure function of its dense values).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PanelArena {
+    /// Per block (same indexing as `HierCsb::blocks`): offset of the
+    /// block's panel in `data`, or [`NO_PANEL`] for sparse blocks.
+    pub off: Vec<u32>,
+    pub data: AlignedF32,
+}
+
+impl PanelArena {
+    /// The packed panel of block `t` (`None` for sparse-stored blocks).
+    /// `rn`/`cn` are the block's span lengths.
+    pub fn panel(&self, t: usize, rn: usize, cn: usize) -> Option<&[f32]> {
+        let off = self.off[t];
+        if off == NO_PANEL {
+            return None;
+        }
+        let off = off as usize;
+        Some(&self.data.as_slice()[off..off + panel_len(rn, cn)])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn aligned_buffer_is_32_byte_aligned_and_zeroed() {
+        for len in [0usize, 1, 7, 8, 9, 31, 200] {
+            let mut a = AlignedF32::zeroed(len);
+            assert_eq!(a.len(), len);
+            assert_eq!(a.as_slice().as_ptr() as usize % 32, 0);
+            assert!(a.as_slice().iter().all(|&v| v == 0.0));
+            a.as_mut_slice().iter_mut().for_each(|v| *v = 1.0);
+            // reuse resets to zero without losing alignment
+            let s = a.reset_zeroed(len);
+            assert!(s.iter().all(|&v| v == 0.0));
+            assert_eq!(s.as_ptr() as usize % 32, 0);
+        }
+    }
+
+    #[test]
+    fn panel_roundtrips_rowmajor_values() {
+        let mut rng = Rng::new(5);
+        for &(rn, cn) in &[(1usize, 1usize), (3, 5), (4, 4), (5, 9), (16, 3), (13, 31)] {
+            let d: Vec<f32> = (0..rn * cn).map(|_| rng.f32()).collect();
+            let mut p = vec![0.0f32; panel_len(rn, cn)];
+            pack_panel(&d, rn, cn, &mut p);
+            for r in 0..rn {
+                for c in 0..cn {
+                    let got = p[(r / PANEL_MR) * cn * PANEL_MR + c * PANEL_MR + (r % PANEL_MR)];
+                    assert_eq!(got.to_bits(), d[r * cn + c].to_bits(), "({rn}x{cn}) at ({r},{c})");
+                }
+            }
+            // pad rows in the tail tile stay zero
+            let tiles = rn.div_ceil(PANEL_MR);
+            for r in rn..tiles * PANEL_MR {
+                for c in 0..cn {
+                    let got = p[(r / PANEL_MR) * cn * PANEL_MR + c * PANEL_MR + (r % PANEL_MR)];
+                    assert_eq!(got, 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn panel_len_is_aligned() {
+        for &(rn, cn) in &[(1usize, 1usize), (3, 5), (4, 8), (129, 17)] {
+            assert_eq!(panel_len(rn, cn) % 8, 0);
+            assert!(panel_len(rn, cn) >= rn.div_ceil(PANEL_MR) * cn * PANEL_MR);
+        }
+    }
+}

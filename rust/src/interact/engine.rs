@@ -13,57 +13,162 @@
 //! * [`Engine::gauss_apply`] — Gaussian matvec, values `exp(−‖t−s‖²·inv_h2)`;
 //! * [`Engine::meanshift_step`] — Gaussian numerator/denominator sums.
 //!
-//! Parallelism: target-leaf ownership (one worker owns all writes to a
-//! potential segment), identical to `spmv::multilevel`.
+//! Execution model (the precompiled apply side):
+//!
+//! * **Schedule** — the multilevel traversal is flattened once into an
+//!   [`ApplySchedule`] (target-leaf-owned flat task lists, heaviest leaf
+//!   first) at construction; every apply walks that schedule instead of
+//!   re-deriving traversal state.  Ownership: one worker owns all writes
+//!   to a potential segment, identical to `spmv::multilevel`.
+//! * **Kernel dispatch** — block products run through `csb::kernel`:
+//!   `--kernel scalar` pins the golden reference (bit-identical across
+//!   thread counts and to the pre-SIMD engine); `auto`/`simd` route dense
+//!   blocks to the AVX2 panel GEMM and DCSR blocklets to the AVX2
+//!   broadcast-FMA kernel when the CPU supports it.
+//! * **Scratch** — each worker owns a reusable [`BlockScratch`] slot on
+//!   the engine (weight block, panel, GEMM panel, RHS panel), so
+//!   steady-state applies are allocation-free
+//!   (`rust/tests/alloc_steady_state.rs` counts).
 //!
 //! Batched execution: all three kernels are multi-RHS under the hood.  A
 //! dense block's weights are materialized once ([`BlockScratch`]) and fed
-//! to the register-blocked micro-GEMM
-//! ([`crate::csb::hier::dense_gemm_acc`]) over every output column at
-//! once — d embedding dimensions for t-SNE, d+1 fused columns for mean
-//! shift (the ones column yields the denominator), k simultaneous queries
-//! for [`Engine::gauss_apply_multi`] — instead of looping scalar matvecs.
+//! to the dispatched micro-GEMM over every output column at once — d
+//! embedding dimensions for t-SNE, d+1 fused columns for mean shift (the
+//! ones column yields the denominator), k simultaneous queries for
+//! [`Engine::gauss_apply_multi`] — instead of looping scalar matvecs.
 
-use crate::csb::hier::{dense_gemm_acc, HierCsb};
+use crate::csb::hier::HierCsb;
+use crate::csb::kernel::{dense_gemm_acc, Dispatch, KernelKind};
+use crate::csb::panel::AlignedF32;
 use crate::par::pool::{SendPtr, ThreadPool};
+use crate::spmv::multilevel::ApplySchedule;
+use std::sync::{Mutex, MutexGuard};
 
-/// The engine: block structure + thread pool.
+/// The engine: block structure + thread pool + precompiled schedule +
+/// kernel dispatch + per-worker scratch.
 pub struct Engine {
     pub csb: HierCsb,
     pub pool: ThreadPool,
+    /// Kernel selection as requested (CLI `--kernel`).
+    pub kernel: KernelKind,
+    /// Why a non-scalar request resolved to the scalar kernel (`None`
+    /// when the SIMD path is live or scalar was requested) — surfaced in
+    /// bench records and CLI output.
+    pub dispatch_fallback: Option<&'static str>,
+    dispatch: Dispatch,
+    schedule: ApplySchedule,
+    /// One reusable kernel scratch per pool worker; worker `w` locks slot
+    /// `w` only, so the locks are uncontended.
+    scratch: Vec<Mutex<BlockScratch>>,
+    /// Apply-level shared buffers (mean shift's augmented sources).
+    shared: Mutex<SharedScratch>,
 }
 
 impl Engine {
+    /// Engine with automatic kernel dispatch (SIMD when available).
     pub fn new(csb: HierCsb, threads: usize) -> Engine {
+        Engine::with_kernel(csb, threads, KernelKind::Auto)
+    }
+
+    /// Engine with an explicit kernel choice (`Scalar` pins the bit-exact
+    /// reference path for determinism-sensitive runs).
+    pub fn with_kernel(csb: HierCsb, threads: usize, kernel: KernelKind) -> Engine {
+        let pool = ThreadPool::new_or_default(threads);
+        let (dispatch, dispatch_fallback) = kernel.resolve();
+        let schedule = ApplySchedule::build(&csb);
+        let scratch = (0..pool.threads)
+            .map(|_| Mutex::new(BlockScratch::default()))
+            .collect();
         Engine {
             csb,
-            pool: ThreadPool::new_or_default(threads),
+            pool,
+            kernel,
+            dispatch_fallback,
+            dispatch,
+            schedule,
+            scratch,
+            shared: Mutex::new(SharedScratch::default()),
         }
     }
 
-    /// Generic per-target-leaf parallel driver with exclusive row-segment
-    /// ownership. `f(tleaf, out_segment)` computes all of that leaf's
-    /// blocks into its own slice of `out` (`stride` f32 per row).
+    /// The concrete kernel this engine runs.
+    pub fn dispatch(&self) -> Dispatch {
+        self.dispatch
+    }
+
+    /// The precompiled apply schedule.
+    pub fn schedule(&self) -> &ApplySchedule {
+        &self.schedule
+    }
+
+    /// Worker `w`'s reusable kernel scratch (uncontended by construction:
+    /// only worker `w` of this engine's pool locks slot `w`).
+    pub fn worker_scratch(&self, w: usize) -> MutexGuard<'_, BlockScratch> {
+        self.scratch[w].lock().unwrap()
+    }
+
+    /// Generic schedule-driven parallel driver with exclusive row-segment
+    /// ownership.  `f(scratch, tleaf, block_ids, out_segment)` computes
+    /// one task's blocks into its own slice of `out` (`stride` f32 per
+    /// row), with that worker's reusable scratch.
     fn per_target<F>(&self, out: &mut [f32], stride: usize, f: F)
     where
-        F: Fn(usize, &mut [f32]) + Sync,
+        F: Fn(&mut BlockScratch, usize, &[u32], &mut [f32]) + Sync,
     {
         assert_eq!(out.len(), self.csb.rows * stride);
         out.fill(0.0);
         let op = SendPtr(out.as_mut_ptr());
         let opr = &op;
         let leaves = &self.csb.tgt_leaves;
-        self.pool.for_each_chunked(leaves.len(), 4, |tl| {
-            let sp = leaves[tl];
-            // SAFETY: target-leaf row spans are disjoint.
+        let sched = &self.schedule;
+        self.pool.for_each_chunked_worker(sched.tasks.len(), 1, |w, ti| {
+            let task = sched.tasks[ti];
+            let sp = leaves[task.tleaf as usize];
+            // SAFETY: target-leaf row spans are disjoint, and each leaf is
+            // owned by exactly one schedule task.
             let seg: &mut [f32] = unsafe {
                 std::slice::from_raw_parts_mut(
                     opr.0.add(sp.lo as usize * stride),
                     sp.len() * stride,
                 )
             };
-            f(tl, seg);
+            let mut scratch = self.scratch[w].lock().unwrap();
+            f(&mut *scratch, task.tleaf as usize, sched.blocks_of(&task), seg);
         });
+    }
+
+    /// Schedule-driven parallel SpMM with this engine's kernel dispatch:
+    /// `Y = A X` over the stored block values (`x`: `cols x k`, `y`:
+    /// `rows x k`, row-major; y overwritten).  With the scalar kernel this
+    /// is bit-exact with `spmv::multilevel::spmm_ml_seq` at any thread
+    /// count.
+    pub fn spmm(&self, x: &[f32], y: &mut [f32], k: usize) {
+        assert!(k >= 1, "spmm needs at least one RHS column");
+        assert_eq!(x.len(), self.csb.cols * k);
+        assert_eq!(y.len(), self.csb.rows * k);
+        y.fill(0.0);
+        let yp = SendPtr(y.as_mut_ptr());
+        let ypr = &yp;
+        let csb = &self.csb;
+        let sched = &self.schedule;
+        let dispatch = self.dispatch;
+        self.pool.for_each_chunked(sched.tasks.len(), 1, |ti| {
+            let task = sched.tasks[ti];
+            let sp = csb.tgt_leaves[task.tleaf as usize];
+            // SAFETY: this task exclusively owns its target leaf's rows;
+            // the slice covers only that disjoint span.
+            let seg: &mut [f32] = unsafe {
+                std::slice::from_raw_parts_mut(ypr.0.add(sp.lo as usize * k), sp.len() * k)
+            };
+            for &t in sched.blocks_of(&task) {
+                csb.block_matmul_seg_with(t as usize, x, seg, k, dispatch);
+            }
+        });
+    }
+
+    /// Schedule-driven parallel SpMV (`k = 1` [`Engine::spmm`]).
+    pub fn spmv(&self, x: &[f32], y: &mut [f32]) {
+        self.spmm(x, y, 1);
     }
 
     /// t-SNE attractive force (§3.1), batched.
@@ -75,16 +180,16 @@ impl Engine {
     ///
     /// `F_i = Σ_j p_ij · (1 + ‖y_i − y_j‖²)^{-1} · (y_i − y_j)`.
     ///
-    /// Dense blocks run the multi-RHS micro-GEMM over the block-local
-    /// augmented RHS `[y − c | 1]` (see [`tsne_block`]); sparse blocklets
-    /// keep the fused scalar loop.
+    /// Dense blocks run the dispatched multi-RHS micro-GEMM over the
+    /// block-local augmented RHS `[y − c | 1]` (see [`tsne_block`]);
+    /// sparse blocklets keep the fused scalar loop.
     pub fn tsne_attr(&self, y: &[f32], d: usize, force: &mut [f32]) {
         assert_eq!(y.len(), self.csb.cols * d);
         let csb = &self.csb;
-        self.per_target(force, d, |tl, seg| {
-            let mut scratch = BlockScratch::default();
-            for &t in &csb.by_target[tl] {
-                tsne_block(csb, t as usize, y, d, &mut scratch, seg);
+        let dispatch = self.dispatch;
+        self.per_target(force, d, |scratch, _tl, blocks, seg| {
+            for &t in blocks {
+                tsne_block(csb, t as usize, y, d, dispatch, scratch, seg);
             }
         });
     }
@@ -110,10 +215,10 @@ impl Engine {
     ///
     /// The kernel values `exp(−‖t_i − s_j‖²·inv_h2)` are computed **once
     /// per profile entry** and applied to all `k` queries: dense blocks
-    /// materialize the masked weight block and run the micro-GEMM, sparse
-    /// blocklets run row-wise k-wide AXPYs.  The per-query win over `k`
-    /// scalar [`Engine::gauss_apply`] calls approaches `k` when the
-    /// transcendental dominates.
+    /// materialize the masked weight block and run the dispatched
+    /// micro-GEMM, sparse blocklets run row-wise k-wide AXPYs.  The
+    /// per-query win over `k` scalar [`Engine::gauss_apply`] calls
+    /// approaches `k` when the transcendental dominates.
     #[allow(clippy::too_many_arguments)]
     pub fn gauss_apply_multi(
         &self,
@@ -130,9 +235,9 @@ impl Engine {
         assert_eq!(scoords.len(), self.csb.cols * d);
         assert_eq!(x.len(), self.csb.cols * k);
         let csb = &self.csb;
-        self.per_target(y_out, k, |tl, seg| {
-            let mut scratch = BlockScratch::default();
-            for &t in &csb.by_target[tl] {
+        let dispatch = self.dispatch;
+        self.per_target(y_out, k, |scratch, _tl, blocks, seg| {
+            for &t in blocks {
                 let b = &csb.blocks[t as usize];
                 let r0 = b.rows.lo as usize;
                 let c0 = b.cols.lo as usize;
@@ -141,10 +246,25 @@ impl Engine {
                 // materializing the masked weight block only pays off once
                 // the GEMM amortizes it across multiple RHS columns.
                 if k > 1 && csb.dense_slice(t as usize).is_some() {
-                    let w = &mut scratch.w;
-                    let (rn, cn) =
-                        gauss_weights_dense(csb, t as usize, tcoords, scoords, d, inv_h2, w);
-                    dense_gemm_acc(&scratch.w, rn, cn, &x[c0 * k..(c0 + cn) * k], k, seg);
+                    let (rn, cn) = gauss_weights_dense(
+                        csb,
+                        t as usize,
+                        tcoords,
+                        scoords,
+                        d,
+                        inv_h2,
+                        &mut scratch.w,
+                    );
+                    gemm_dispatch(
+                        &scratch.w,
+                        rn,
+                        cn,
+                        &x[c0 * k..(c0 + cn) * k],
+                        k,
+                        seg,
+                        dispatch,
+                        &mut scratch.wp,
+                    );
                 } else {
                     csb.for_each_nz(t as usize, |r, c, _| {
                         let ti = &tcoords[(r0 + r) * d..(r0 + r + 1) * d];
@@ -169,10 +289,7 @@ impl Engine {
     /// Mean-shift partial sums (§3.2): returns `(num, den)` with
     /// `num_i = Σ_j w_ij s_j` (`n x d`) and `den_i = Σ_j w_ij`.
     ///
-    /// The two outputs are `d + 1` fused RHS columns of one batched block
-    /// product: dense blocks run the micro-GEMM against the augmented
-    /// source matrix `[s | 1]`, whose last column yields the denominator
-    /// row sums for free.
+    /// Allocating wrapper around [`Engine::meanshift_step_into`].
     pub fn meanshift_step(
         &self,
         tcoords: &[f32],
@@ -180,42 +297,77 @@ impl Engine {
         d: usize,
         inv_h2: f32,
     ) -> (Vec<f32>, Vec<f32>) {
+        let mut num = Vec::new();
+        let mut den = Vec::new();
+        self.meanshift_step_into(tcoords, scoords, d, inv_h2, &mut num, &mut den);
+        (num, den)
+    }
+
+    /// Mean-shift partial sums into caller-owned buffers (resized to
+    /// `rows x d` / `rows`; allocation-free once warm — the per-iteration
+    /// hot path of the mean-shift loop).
+    ///
+    /// The two outputs are `d + 1` fused RHS columns of one batched block
+    /// product: dense blocks run the dispatched micro-GEMM against the
+    /// augmented source matrix `[s | 1]`, whose last column yields the
+    /// denominator row sums for free.
+    pub fn meanshift_step_into(
+        &self,
+        tcoords: &[f32],
+        scoords: &[f32],
+        d: usize,
+        inv_h2: f32,
+        num: &mut Vec<f32>,
+        den: &mut Vec<f32>,
+    ) {
         let n = self.csb.rows;
-        let mut num = vec![0.0f32; n * d];
-        let mut den = vec![0.0f32; n];
-        // Augmented sources [s | 1]: cols x (d+1), shared by all workers.
+        num.clear();
+        num.resize(n * d, 0.0);
+        den.clear();
+        den.resize(n, 0.0);
+        // Augmented sources [s | 1]: cols x (d+1), shared by all workers
+        // (engine-owned buffer, refilled in place each call).
         let ka = d + 1;
-        let sa = augment_ones(scoords, self.csb.cols, d);
+        let mut sh = self.shared.lock().unwrap();
+        fill_augment_ones(scoords, self.csb.cols, d, &mut sh.sa);
+        let sa: &[f32] = &sh.sa;
         // Fuse both outputs into one pass: compute into num, accumulate den
         // in a second buffer owned by the same target leaf.
         let dp = SendPtr(den.as_mut_ptr());
         let dpr = &dp;
         let csb = &self.csb;
-        self.per_target(&mut num, d, |tl, seg| {
+        let dispatch = self.dispatch;
+        self.per_target(num, d, |scratch, tl, blocks, seg| {
             let sp = csb.tgt_leaves[tl];
             // SAFETY: disjoint target spans (same ownership as `seg`).
-            let den_seg: &mut [f32] = unsafe {
-                std::slice::from_raw_parts_mut(dpr.0.add(sp.lo as usize), sp.len())
-            };
-            let mut scratch = BlockScratch::default();
-            for &t in &csb.by_target[tl] {
+            let den_seg: &mut [f32] =
+                unsafe { std::slice::from_raw_parts_mut(dpr.0.add(sp.lo as usize), sp.len()) };
+            for &t in blocks {
                 let b = &csb.blocks[t as usize];
                 let r0 = b.rows.lo as usize;
                 let c0 = b.cols.lo as usize;
                 debug_assert_eq!(seg.len(), b.rows.len() * d, "block must span its target leaf");
                 if csb.dense_slice(t as usize).is_some() {
-                    let w = &mut scratch.w;
-                    let (rn, cn) =
-                        gauss_weights_dense(csb, t as usize, tcoords, scoords, d, inv_h2, w);
+                    let (rn, cn) = gauss_weights_dense(
+                        csb,
+                        t as usize,
+                        tcoords,
+                        scoords,
+                        d,
+                        inv_h2,
+                        &mut scratch.w,
+                    );
                     scratch.out.clear();
                     scratch.out.resize(rn * ka, 0.0);
-                    dense_gemm_acc(
+                    gemm_dispatch(
                         &scratch.w,
                         rn,
                         cn,
                         &sa[c0 * ka..(c0 + cn) * ka],
                         ka,
                         &mut scratch.out,
+                        dispatch,
+                        &mut scratch.wp,
                     );
                     for r in 0..rn {
                         let row = &scratch.out[r * ka..(r + 1) * ka];
@@ -244,22 +396,91 @@ impl Engine {
                 }
             }
         });
-        (num, den)
     }
 }
 
 /// Reusable per-worker scratch of the batched block kernels: the
-/// materialized weight block, the micro-GEMM output panel, and the
-/// block-local RHS panel.  One scratch per target-leaf task keeps the
-/// buffers hot across that leaf's blocks without cross-thread sharing.
+/// materialized weight block, its panel-packed copy (SIMD dispatch), the
+/// micro-GEMM output panel, and the block-local RHS panel.  One scratch
+/// per pool worker, owned by the [`Engine`], keeps the buffers hot across
+/// every apply of the engine's lifetime — steady-state applies allocate
+/// nothing.
 #[derive(Default)]
 pub struct BlockScratch {
     /// Materialized (masked) kernel weights, row-major block shape.
     pub w: Vec<f32>,
+    /// Tile-major panel packing of `w` (only the SIMD dispatch uses it).
+    pub wp: AlignedF32,
     /// GEMM output panel, `block_rows x k` row-major.
     pub out: Vec<f32>,
     /// Block-local augmented RHS panel, `block_cols x k` row-major.
     pub xs: Vec<f32>,
+}
+
+/// Engine-owned buffers shared across one apply (not per-worker).
+#[derive(Default)]
+struct SharedScratch {
+    /// Mean shift's augmented source matrix `[s | 1]`.
+    sa: Vec<f32>,
+}
+
+/// Run the dense micro-GEMM `y += w · x` under `dispatch`: the scalar path
+/// consumes the row-major weight block directly; the SIMD path packs it
+/// into `wp` (tile-major panel, buffer reused across blocks) first — the
+/// pack is a linear copy, negligible against the transcendental weight
+/// fill that precedes it.
+#[allow(clippy::too_many_arguments)]
+fn gemm_dispatch(
+    w: &[f32],
+    rn: usize,
+    cn: usize,
+    x: &[f32],
+    k: usize,
+    y: &mut [f32],
+    dispatch: Dispatch,
+    wp: &mut AlignedF32,
+) {
+    match dispatch {
+        Dispatch::Scalar => dense_gemm_acc(w, rn, cn, x, k, y),
+        Dispatch::Avx2 => gemm_avx2(w, rn, cn, x, k, y, wp),
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn gemm_avx2(
+    w: &[f32],
+    rn: usize,
+    cn: usize,
+    x: &[f32],
+    k: usize,
+    y: &mut [f32],
+    wp: &mut AlignedF32,
+) {
+    use crate::csb::panel::{pack_panel, panel_len};
+    // Same guard as `HierCsb::block_matmul_seg_avx2`: a hand-built
+    // Dispatch::Avx2 must not reach the target-feature kernel on an
+    // unsupported CPU (the probe is cached by std).
+    if crate::csb::kernel::detect() != Dispatch::Avx2 {
+        return dense_gemm_acc(w, rn, cn, x, k, y);
+    }
+    let panel = wp.reset_zeroed(panel_len(rn, cn));
+    pack_panel(w, rn, cn, panel);
+    // SAFETY: the detect() guard above confirmed AVX2+FMA.
+    unsafe { crate::csb::kernel::avx2::panel_gemm_acc(panel, rn, cn, x, k, y) };
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn gemm_avx2(
+    w: &[f32],
+    rn: usize,
+    cn: usize,
+    x: &[f32],
+    k: usize,
+    y: &mut [f32],
+    _wp: &mut AlignedF32,
+) {
+    // `kernel::detect()` never yields Avx2 on this target; backstop only.
+    dense_gemm_acc(w, rn, cn, x, k, y)
 }
 
 /// Augment a row-major `n x d` coordinate array with a trailing ones
@@ -267,29 +488,37 @@ pub struct BlockScratch {
 /// column of the same block product (used by the mean-shift batched
 /// kernel; the t-SNE kernel builds a block-local shifted variant).
 pub fn augment_ones(x: &[f32], n: usize, d: usize) -> Vec<f32> {
-    assert_eq!(x.len(), n * d);
-    let ka = d + 1;
-    let mut out = vec![1.0f32; n * ka];
-    for i in 0..n {
-        out[i * ka..i * ka + d].copy_from_slice(&x[i * d..(i + 1) * d]);
-    }
+    let mut out = Vec::new();
+    fill_augment_ones(x, n, d, &mut out);
     out
 }
 
+/// [`augment_ones`] into a reusable buffer (allocation-free once warm).
+pub fn fill_augment_ones(x: &[f32], n: usize, d: usize, out: &mut Vec<f32>) {
+    assert_eq!(x.len(), n * d);
+    let ka = d + 1;
+    out.clear();
+    out.resize(n * ka, 1.0);
+    for i in 0..n {
+        out[i * ka..i * ka + d].copy_from_slice(&x[i * d..(i + 1) * d]);
+    }
+}
+
 /// Per-block fused t-SNE attractive kernel, shared by [`Engine::tsne_attr`]
-/// and the coordinator's Rust phase (identical op order on both paths, so
-/// the hybrid and pure-engine results match bit-for-bit on Rust-routed
-/// blocks).
+/// and the coordinator's Rust phase (identical op order on both paths
+/// under a given dispatch, so the hybrid and pure-engine results match
+/// bit-for-bit on Rust-routed blocks).
 ///
 /// Dense blocks materialize `w_ij = p_ij/(1+‖y_i−y_j‖²)` once and run the
-/// multi-RHS micro-GEMM against the block-local augmented RHS
+/// dispatched multi-RHS micro-GEMM against the block-local augmented RHS
 /// `[y_j − c | 1]` (`block_cols x (d+1)`), where `c` is the block's first
 /// source coordinate: column `d` of the product is the weight row sum
 /// `rs`, giving `F_i = rs·(y_i − c) − (W·(y − c))_i` without a second
 /// pass.  The shift by `c` keeps both terms at cluster-radius magnitude —
 /// the unshifted `rs·y_i − (W·y)_i` form cancels catastrophically when a
 /// dense cluster sits far from the embedding origin.  Sparse blocklets run
-/// the fused scalar loop.
+/// the fused scalar loop (the transcendental-free weight is cheaper than a
+/// gather into SIMD lanes at typical blocklet sizes).
 ///
 /// `seg` is the target-leaf output segment (`block_rows x d`); blocks span
 /// exactly one target leaf, so block-local rows index it directly.
@@ -298,6 +527,7 @@ pub fn tsne_block(
     t: usize,
     y: &[f32],
     d: usize,
+    dispatch: Dispatch,
     scratch: &mut BlockScratch,
     seg: &mut [f32],
 ) {
@@ -342,7 +572,16 @@ pub fn tsne_block(
         }
         scratch.out.clear();
         scratch.out.resize(rn * ka, 0.0);
-        dense_gemm_acc(&scratch.w, rn, cn, &scratch.xs, ka, &mut scratch.out);
+        gemm_dispatch(
+            &scratch.w,
+            rn,
+            cn,
+            &scratch.xs,
+            ka,
+            &mut scratch.out,
+            dispatch,
+            &mut scratch.wp,
+        );
         for r in 0..rn {
             let yi = &y[(r0 + r) * d..(r0 + r + 1) * d];
             let row = &scratch.out[r * ka..(r + 1) * ka];
@@ -600,5 +839,41 @@ mod tests {
         eng1.tsne_attr(&y, 2, &mut f1);
         eng4.tsne_attr(&y, 2, &mut f4);
         assert_eq!(f1, f4);
+    }
+
+    #[test]
+    fn engine_spmm_matches_multilevel_reference() {
+        let (a, eng, _) = setup_dense(300, 3);
+        // a scalar-pinned engine must reproduce spmm_ml_seq bit-for-bit at
+        // any thread count; the auto engine must agree within tolerance.
+        let scalar = Engine::with_kernel(eng.csb.clone(), 8, KernelKind::Scalar);
+        let mut rng = Rng::new(15);
+        for k in [1usize, 4] {
+            let x: Vec<f32> = (0..a.cols * k).map(|_| rng.f32() - 0.5).collect();
+            let mut y_ref = vec![0.0f32; a.rows * k];
+            crate::spmv::multilevel::spmm_ml_seq(&scalar.csb, &x, &mut y_ref, k);
+            let mut y = vec![0.0f32; a.rows * k];
+            scalar.spmm(&x, &mut y, k);
+            assert_eq!(y, y_ref, "scalar engine spmm k={k}");
+            eng.spmm(&x, &mut y, k);
+            for (g, w) in y.iter().zip(&y_ref) {
+                assert!((g - w).abs() < 1e-5 * (1.0 + w.abs()), "auto engine k={k}: {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn meanshift_step_into_reuses_buffers() {
+        let (_, eng, coords) = setup_dense(250, 3);
+        let (num1, den1) = eng.meanshift_step(&coords, &coords, 3, 0.5);
+        let mut num = Vec::new();
+        let mut den = Vec::new();
+        eng.meanshift_step_into(&coords, &coords, 3, 0.5, &mut num, &mut den);
+        assert_eq!(num, num1);
+        assert_eq!(den, den1);
+        // second call into the same (now-sized) buffers: same result
+        eng.meanshift_step_into(&coords, &coords, 3, 0.5, &mut num, &mut den);
+        assert_eq!(num, num1);
+        assert_eq!(den, den1);
     }
 }

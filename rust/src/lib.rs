@@ -59,6 +59,7 @@ pub mod bench;
 /// Convenient re-exports for examples and downstream users.
 pub mod prelude {
     pub use crate::csb::hier::HierCsb;
+    pub use crate::csb::kernel::KernelKind;
     pub use crate::data::dataset::Dataset;
     pub use crate::data::synth::SynthSpec;
     pub use crate::knn::ann::{knn_graph_ann, AnnParams};

@@ -18,7 +18,7 @@
 
 use nni::apps::{meanshift, tsne};
 use nni::bench::Workload;
-use nni::csb::hier::HierCsb;
+use nni::csb::kernel::KernelKind;
 use nni::data::dataset::Dataset;
 use nni::data::synth::SynthSpec;
 use nni::knn::ann::recall::recall_at_k;
@@ -87,6 +87,32 @@ fn resolve_build_threads(a: &Args) -> usize {
         bt
     } else {
         a.get_usize("threads")
+    }
+}
+
+/// Shared `--kernel` knob: apply-side micro-kernel dispatch.  `scalar`
+/// pins the bit-exact reference path (deterministic down to the bit across
+/// thread counts *and* machines); `auto`/`simd` use AVX2+FMA when the CPU
+/// has it (tolerance-equal to scalar; see EXPERIMENTS.md §Kernel dispatch).
+fn kernel_opts(a: Args) -> Args {
+    a.opt("kernel", "auto", "apply kernel: auto|simd|scalar (scalar = bit-exact)")
+}
+
+/// Resolve the `--kernel` choice (usage error on bad values).
+fn kernel_kind(a: &Args) -> KernelKind {
+    KernelKind::parse(&a.get("kernel")).unwrap_or_else(die)
+}
+
+/// One-line dispatch report for the perf commands.
+fn kernel_line(kind: KernelKind) -> String {
+    let (dispatch, fallback) = kind.resolve();
+    match fallback {
+        Some(why) => format!(
+            "kernel: requested={} dispatch={} (fallback: {why})",
+            kind.label(),
+            dispatch.label()
+        ),
+        None => format!("kernel: requested={} dispatch={}", kind.label(), dispatch.label()),
     }
 }
 
@@ -212,7 +238,7 @@ fn cmd_knn(argv: Vec<String>) {
 }
 
 fn cmd_reorder(argv: Vec<String>) {
-    let a = build_opts(knn_opts(
+    let a = kernel_opts(build_opts(knn_opts(
         Args::new("ordering pipeline report")
             .opt("input", "", "dataset file (else synthesize)")
             .opt("workload", "sift", "sift|gist")
@@ -223,9 +249,11 @@ fn cmd_reorder(argv: Vec<String>) {
             .opt_usize_min("rhs", 1, 1, "multi-RHS width: >1 times batched spmm vs k scalar spmv")
             .opt_u64("seed", 42, "rng seed")
             .opt_usize("threads", 0, "0 = all cores"),
-    ))
+    )))
     .parse_from(argv)
     .unwrap_or_else(die);
+    // validate the kernel choice up front — before the expensive kNN build
+    let kernel = kernel_kind(&a);
     let ds = load_or_synth(&a);
     let k = if a.get_usize("k") == 0 {
         workload(&a.get("workload")).k()
@@ -257,15 +285,11 @@ fn cmd_reorder(argv: Vec<String>) {
     println!("gamma(sigma={sigma}) = {gm:.2}");
     println!("beta-hat = {:.5} ({} patches, area {})", bt.beta, bt.count, bt.area);
     println!("bandwidth = {}", r.reordered.bandwidth());
-    if let Some(tree) = &r.tree {
-        let csb = HierCsb::build_par(
-            &r.reordered,
-            tree,
-            tree,
-            a.get_usize("leaf-cap"),
-            build_threads,
-        );
+    let threads = a.get_usize("threads");
+    if let Some(eng) = r.engine_with(a.get_usize("leaf-cap"), 0.6, build_threads, threads, kernel) {
+        let csb = &eng.csb;
         println!("csb: {}", csb.describe());
+        println!("{}", kernel_line(kernel));
         let k = a.get_usize("rhs");
         if k > 1 {
             let n = ds.n();
@@ -275,16 +299,20 @@ fn cmd_reorder(argv: Vec<String>) {
             let mut yk = vec![0.0f32; n * k];
             let m_scalar = timer::bench_default(|| {
                 for _ in 0..k {
-                    spmv::multilevel::spmv_ml_seq(&csb, &x1, &mut y1);
+                    spmv::multilevel::spmv_ml_seq(csb, &x1, &mut y1);
                 }
             });
             let m_spmm =
-                timer::bench_default(|| spmv::multilevel::spmm_ml_seq(&csb, &xk, &mut yk, k));
+                timer::bench_default(|| spmv::multilevel::spmm_ml_seq(csb, &xk, &mut yk, k));
+            // the engine path: precompiled schedule + dispatched kernel
+            let m_eng = timer::bench_default(|| eng.spmm(&xk, &mut yk, k));
             println!(
-                "multi-rhs k={k}: scalar {:.3} ms  batched {:.3} ms  ({:.2}x)",
+                "multi-rhs k={k}: scalar {:.3} ms  batched {:.3} ms  ({:.2}x)  engine({}) {:.3} ms",
                 m_scalar.robust_min_s * 1e3,
                 m_spmm.robust_min_s * 1e3,
-                m_scalar.robust_min_s / m_spmm.robust_min_s
+                m_scalar.robust_min_s / m_spmm.robust_min_s,
+                eng.dispatch().label(),
+                m_eng.robust_min_s * 1e3
             );
         }
     }
@@ -311,7 +339,7 @@ fn cmd_gamma(argv: Vec<String>) {
 }
 
 fn cmd_spmv(argv: Vec<String>) {
-    let a = build_opts(
+    let a = kernel_opts(build_opts(
         Args::new("multi-level SpMV timing")
             .opt("workload", "sift", "sift|gist")
             .opt_usize_min("n", 8192, 1, "points")
@@ -319,9 +347,11 @@ fn cmd_spmv(argv: Vec<String>) {
             .opt_usize("threads", 0, "0 = all cores")
             .opt_usize_min("leaf-cap", 2048, 1, "block capacity (SpMV sweet spot: ~64x nnz/row)")
             .opt_usize_min("rhs", 1, 1, "multi-RHS width: >1 also times batched spmm paths"),
-    )
+    ))
     .parse_from(argv)
     .unwrap_or_else(die);
+    // validate the kernel choice up front — before the expensive kNN build
+    let kind = kernel_kind(&a);
     let wl = workload(&a.get("workload"));
     let threads = if a.get_usize("threads") == 0 {
         nni::par::pool::default_threads()
@@ -333,35 +363,40 @@ fn cmd_spmv(argv: Vec<String>) {
     let r = Pipeline::dual_tree(3)
         .with_build_threads(build_threads)
         .run(&ds, &m);
-    let tree = r.tree.as_ref().unwrap();
-    let csb = HierCsb::build_par(
-        &r.reordered,
-        tree,
-        tree,
-        a.get_usize("leaf-cap"),
-        build_threads,
-    );
+    let eng = r
+        .engine_with(a.get_usize("leaf-cap"), 0.6, build_threads, threads, kind)
+        .expect("dual-tree ordering carries a tree");
+    let csb = &eng.csb;
     println!("{}", csb.describe());
+    println!("{}", kernel_line(kind));
     let x = vec![1.0f32; ds.n()];
     let mut y = vec![0.0f32; ds.n()];
     let m_seq = timer::bench_default(|| spmv::csr::spmv_seq(&r.reordered, &x, &mut y));
-    let m_ml = timer::bench_default(|| spmv::multilevel::spmv_ml_seq(&csb, &x, &mut y));
-    let m_mlp = timer::bench_default(|| spmv::multilevel::spmv_ml_par(&csb, &x, &mut y, threads));
+    let m_ml = timer::bench_default(|| spmv::multilevel::spmv_ml_seq(csb, &x, &mut y));
+    let m_mlp = timer::bench_default(|| spmv::multilevel::spmv_ml_par(csb, &x, &mut y, threads));
+    let m_eng = timer::bench_default(|| eng.spmv(&x, &mut y));
     println!("csr seq      : {:.3} ms", m_seq.robust_min_s * 1e3);
     println!("ml  seq      : {:.3} ms", m_ml.robust_min_s * 1e3);
     println!("ml  par({threads:>2}) : {:.3} ms", m_mlp.robust_min_s * 1e3);
+    println!(
+        "engine({:>6}): {:.3} ms (precompiled schedule, {} dispatch)",
+        kind.label(),
+        m_eng.robust_min_s * 1e3,
+        eng.dispatch().label()
+    );
     let k = a.get_usize("rhs");
     if k > 1 {
         let xk = vec![1.0f32; ds.n() * k];
         let mut yk = vec![0.0f32; ds.n() * k];
         let m_loop = timer::bench_default(|| {
             for _ in 0..k {
-                spmv::multilevel::spmv_ml_seq(&csb, &x, &mut y);
+                spmv::multilevel::spmv_ml_seq(csb, &x, &mut y);
             }
         });
-        let m_mm = timer::bench_default(|| spmv::multilevel::spmm_ml_seq(&csb, &xk, &mut yk, k));
+        let m_mm = timer::bench_default(|| spmv::multilevel::spmm_ml_seq(csb, &xk, &mut yk, k));
         let m_mmp =
-            timer::bench_default(|| spmv::multilevel::spmm_ml_par(&csb, &xk, &mut yk, k, threads));
+            timer::bench_default(|| spmv::multilevel::spmm_ml_par(csb, &xk, &mut yk, k, threads));
+        let m_emm = timer::bench_default(|| eng.spmm(&xk, &mut yk, k));
         println!("{k} x ml seq  : {:.3} ms", m_loop.robust_min_s * 1e3);
         println!(
             "spmm seq k={k:<2}: {:.3} ms ({:.2}x vs scalar loop)",
@@ -369,11 +404,16 @@ fn cmd_spmv(argv: Vec<String>) {
             m_loop.robust_min_s / m_mm.robust_min_s
         );
         println!("spmm par({threads:>2}) : {:.3} ms", m_mmp.robust_min_s * 1e3);
+        println!(
+            "engine spmm  : {:.3} ms ({:.2}x vs scalar-kernel spmm seq)",
+            m_emm.robust_min_s * 1e3,
+            m_mm.robust_min_s / m_emm.robust_min_s
+        );
     }
 }
 
 fn cmd_tsne(argv: Vec<String>) {
-    let a = build_opts(knn_opts(
+    let a = kernel_opts(build_opts(knn_opts(
         Args::new("t-SNE end to end")
             .opt("input", "", "dataset file (else synthesize)")
             .opt("workload", "sift", "sift|gist")
@@ -385,7 +425,7 @@ fn cmd_tsne(argv: Vec<String>) {
             .opt_usize("threads", 0, "0 = all cores")
             .opt("out", "", "embedding output path (.nnid)")
             .flag("pjrt", "route dense blocks to the PJRT artifacts"),
-    ))
+    )))
     .parse_from(argv)
     .unwrap_or_else(die);
     let ds = load_or_synth(&a);
@@ -398,6 +438,7 @@ fn cmd_tsne(argv: Vec<String>) {
         seed: a.get_u64("seed"),
         use_pjrt: a.get_flag("pjrt"),
         knn: knn_backend(&a),
+        kernel: kernel_kind(&a),
         ..Default::default()
     };
     let registry = if cfg.use_pjrt {
@@ -421,7 +462,7 @@ fn cmd_tsne(argv: Vec<String>) {
 }
 
 fn cmd_meanshift(argv: Vec<String>) {
-    let a = build_opts(knn_opts(
+    let a = kernel_opts(build_opts(knn_opts(
         Args::new("mean shift mode finding")
             .opt("input", "", "dataset file (else synthesize blobs)")
             .opt_usize_min("n", 2000, 1, "points when synthesizing")
@@ -433,7 +474,7 @@ fn cmd_meanshift(argv: Vec<String>) {
             .opt_usize("refresh", 5, "profile refresh cadence")
             .opt_u64("seed", 42, "rng seed")
             .opt_usize("threads", 0, "0 = all cores"),
-    ))
+    )))
     .parse_from(argv)
     .unwrap_or_else(die);
     let input = a.get("input");
@@ -456,6 +497,7 @@ fn cmd_meanshift(argv: Vec<String>) {
         threads: a.get_usize("threads"),
         build_threads: a.get_usize("build-threads"),
         knn: knn_backend(&a),
+        kernel: kernel_kind(&a),
         ..Default::default()
     };
     let res = meanshift::run(&ds, &cfg);

@@ -13,8 +13,11 @@ pub mod lex;
 pub mod pca1d;
 pub mod rcm;
 
+use crate::csb::hier::HierCsb;
+use crate::csb::kernel::KernelKind;
 use crate::data::dataset::Dataset;
 use crate::embed::pca;
+use crate::interact::engine::Engine;
 use crate::knn::KnnBackend;
 use crate::sparse::csr::Csr;
 use crate::tree::boxtree::BoxTree;
@@ -108,6 +111,33 @@ pub struct OrderResult {
     /// Low-dimensional embedding in the *original* index order (kept for
     /// engines that need coordinates, e.g. mean shift re-clustering).
     pub embedded: Option<Dataset>,
+}
+
+impl OrderResult {
+    /// Build the apply engine over this ordering: hierarchical CSB storage
+    /// (arena fill + packed panels, parallel and bit-deterministic) plus
+    /// the kernel-dispatched [`Engine`] with its precompiled schedule.
+    /// `None` when the ordering carries no tree (non-hierarchical
+    /// orderings cannot block adaptively).
+    pub fn engine_with(
+        &self,
+        block_cap: usize,
+        dense_threshold: f64,
+        build_threads: usize,
+        threads: usize,
+        kernel: KernelKind,
+    ) -> Option<Engine> {
+        let tree = self.tree.as_ref()?;
+        let csb = HierCsb::build_with_par(
+            &self.reordered,
+            tree,
+            tree,
+            block_cap,
+            dense_threshold,
+            build_threads,
+        );
+        Some(Engine::with_kernel(csb, threads, kernel))
+    }
 }
 
 /// Ordering pipeline: embedding (when needed) → ordering → reordered matrix.
@@ -349,6 +379,19 @@ mod tests {
             .run_points(&ds, 5, 2);
         assert!(is_permutation(&r.perm));
         assert!(r.tree.is_some());
+    }
+
+    #[test]
+    fn engine_with_follows_tree_availability() {
+        let (ds, a) = setup(300);
+        let dt = Pipeline::dual_tree(3).run(&ds, &a);
+        let eng = dt
+            .engine_with(32, 0.6, 2, 2, KernelKind::Scalar)
+            .expect("dual-tree ordering carries a tree");
+        assert_eq!(eng.csb.rows, 300);
+        assert_eq!(eng.kernel, KernelKind::Scalar);
+        let sc = Pipeline::new(OrderingKind::Scattered).run(&ds, &a);
+        assert!(sc.engine_with(32, 0.6, 2, 2, KernelKind::Auto).is_none());
     }
 
     #[test]

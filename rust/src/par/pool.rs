@@ -71,24 +71,38 @@ impl ThreadPool {
     where
         F: Fn(usize) + Sync,
     {
+        self.for_each_chunked_worker(n, chunk, |_, i| f(i));
+    }
+
+    /// [`Self::for_each_chunked`] with the worker ordinal passed through:
+    /// `f(w, i)` with `w < self.threads`, and each `w` running on exactly
+    /// one OS thread at a time — so `w` can index per-worker scratch slots
+    /// without cross-worker contention (the engine's reusable kernel
+    /// buffers).  Serial fallback (1 thread, or `n <= chunk`) uses `w = 0`.
+    pub fn for_each_chunked_worker<F>(&self, n: usize, chunk: usize, f: F)
+    where
+        F: Fn(usize, usize) + Sync,
+    {
         if self.threads == 1 || n <= chunk {
             for i in 0..n {
-                f(i);
+                f(0, i);
             }
             return;
         }
         let next = AtomicUsize::new(0);
         let chunk = chunk.max(1);
         std::thread::scope(|s| {
-            for _ in 0..self.threads {
-                s.spawn(|| loop {
-                    let start = next.fetch_add(chunk, Ordering::Relaxed);
+            for w in 0..self.threads {
+                let fr = &f;
+                let nr = &next;
+                s.spawn(move || loop {
+                    let start = nr.fetch_add(chunk, Ordering::Relaxed);
                     if start >= n {
                         break;
                     }
                     let end = (start + chunk).min(n);
                     for i in start..end {
-                        f(i);
+                        fr(w, i);
                     }
                 });
             }
@@ -192,6 +206,20 @@ mod tests {
             hits[i].fetch_add(1, Ordering::Relaxed);
         });
         assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn worker_ids_stay_in_range_and_visit_all() {
+        let n = 4093;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        let pool = ThreadPool::new(4);
+        pool.for_each_chunked_worker(n, 16, |w, i| {
+            assert!(w < pool.threads);
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        // serial fallback pins worker 0
+        ThreadPool::new(1).for_each_chunked_worker(10, 4, |w, _| assert_eq!(w, 0));
     }
 
     #[test]

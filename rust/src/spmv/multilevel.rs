@@ -8,7 +8,71 @@
 //! balance the irregular per-leaf work.
 
 use crate::csb::hier::HierCsb;
+use crate::csb::kernel::Dispatch;
 use crate::par::pool::{SendPtr, ThreadPool};
+
+/// The multilevel traversal precompiled into target-leaf-owned flat task
+/// lists — the apply-side schedule the engine stores and reuses, instead
+/// of re-deriving per-apply state (nested `by_target` walks, per-task
+/// scratch setup) on every `spmm`/kernel call.
+///
+/// * one task per non-empty target leaf = the ownership coloring (all
+///   writes to a leaf's output rows happen on the task that owns it), so
+///   results are bit-identical for any worker count *within* a kernel
+///   choice;
+/// * `block_ids` is one flat array, grouped per task in multilevel
+///   traversal order — no per-leaf `Vec` indirection on the hot path;
+/// * tasks are ordered heaviest-first (by nnz, ties by leaf ordinal), so
+///   the dynamic chunk claim schedules the long poles early.
+#[derive(Clone, Debug)]
+pub struct ApplySchedule {
+    /// Block indices, grouped per task, multilevel order within each task.
+    pub block_ids: Vec<u32>,
+    pub tasks: Vec<ApplyTask>,
+}
+
+/// One schedule task: a target leaf and its span into
+/// [`ApplySchedule::block_ids`].
+#[derive(Clone, Copy, Debug)]
+pub struct ApplyTask {
+    /// Target-leaf ordinal (owner of the output row span).
+    pub tleaf: u32,
+    pub lo: u32,
+    pub hi: u32,
+}
+
+impl ApplySchedule {
+    pub fn build(m: &HierCsb) -> ApplySchedule {
+        let work: Vec<u64> = m
+            .by_target
+            .iter()
+            .map(|list| list.iter().map(|&t| m.blocks[t as usize].nnz as u64).sum())
+            .collect();
+        let mut order: Vec<usize> = (0..m.by_target.len()).collect();
+        order.sort_by_key(|&tl| (std::cmp::Reverse(work[tl]), tl));
+        let mut block_ids = Vec::with_capacity(m.blocks.len());
+        let mut tasks = Vec::new();
+        for &tl in &order {
+            if m.by_target[tl].is_empty() {
+                continue;
+            }
+            let lo = block_ids.len() as u32;
+            block_ids.extend_from_slice(&m.by_target[tl]);
+            tasks.push(ApplyTask {
+                tleaf: tl as u32,
+                lo,
+                hi: block_ids.len() as u32,
+            });
+        }
+        ApplySchedule { block_ids, tasks }
+    }
+
+    /// The block list of one task.
+    #[inline]
+    pub fn blocks_of(&self, task: &ApplyTask) -> &[u32] {
+        &self.block_ids[task.lo as usize..task.hi as usize]
+    }
+}
 
 /// Sequential multi-level SpMV (delegates to the stored traversal order).
 pub fn spmv_ml_seq(m: &HierCsb, x: &[f32], y: &mut [f32]) {
@@ -41,25 +105,54 @@ pub fn spmm_ml_seq(m: &HierCsb, x: &[f32], y: &mut [f32], k: usize) {
     m.spmm(x, y, k);
 }
 
+/// [`spmm_ml_seq`] under an explicit kernel dispatch (`Scalar` reproduces
+/// it bit-for-bit; `Avx2` runs the SIMD micro-kernels).
+pub fn spmm_ml_seq_with(m: &HierCsb, x: &[f32], y: &mut [f32], k: usize, d: Dispatch) {
+    assert!(k >= 1, "spmm needs at least one RHS column");
+    assert_eq!(x.len(), m.cols * k);
+    assert_eq!(y.len(), m.rows * k);
+    y.fill(0.0);
+    for t in 0..m.blocks.len() {
+        m.block_matmul_with(t, x, y, k, d);
+    }
+}
+
 /// Parallel multi-level SpMM under the same target-leaf ownership
 /// discipline as [`spmv_ml_par`]: each task owns a whole `leaf_rows x k`
 /// output panel, per-target block order is fixed, so results are bit-exact
 /// equal to [`spmm_ml_seq`] regardless of thread count.
 pub fn spmm_ml_par(m: &HierCsb, x: &[f32], y: &mut [f32], k: usize, threads: usize) {
+    spmm_ml_par_with(m, x, y, k, threads, Dispatch::Scalar)
+}
+
+/// [`spmm_ml_par`] under an explicit kernel dispatch.  Thread-count
+/// bit-identity holds *within* a dispatch choice (per-leaf block order is
+/// fixed either way); the Avx2 path matches the scalar path to relative
+/// tolerance only (FMA contraction — see `csb::kernel`).
+pub fn spmm_ml_par_with(
+    m: &HierCsb,
+    x: &[f32],
+    y: &mut [f32],
+    k: usize,
+    threads: usize,
+    d: Dispatch,
+) {
     assert!(k >= 1, "spmm needs at least one RHS column");
     assert_eq!(x.len(), m.cols * k);
     assert_eq!(y.len(), m.rows * k);
     y.fill(0.0);
     let pool = ThreadPool::new(threads);
     let yp = SendPtr(y.as_mut_ptr());
-    let ylen = y.len();
     let ypr = &yp;
     pool.for_each_chunked(m.by_target.len(), 4, |tl| {
+        let sp = m.tgt_leaves[tl];
         // SAFETY: this task exclusively owns the row panel of target leaf
-        // `tl`; all blocks below write only inside rows.lo*k..rows.hi*k.
-        let yall: &mut [f32] = unsafe { std::slice::from_raw_parts_mut(ypr.0, ylen) };
+        // `tl`; the slice covers only that disjoint span.
+        let seg: &mut [f32] = unsafe {
+            std::slice::from_raw_parts_mut(ypr.0.add(sp.lo as usize * k), sp.len() * k)
+        };
         for &t in &m.by_target[tl] {
-            m.block_matmul(t as usize, x, yall, k);
+            m.block_matmul_seg_with(t as usize, x, seg, k, d);
         }
     });
 }
@@ -154,6 +247,57 @@ mod tests {
                 let w = want[i];
                 assert!((g - w).abs() < 1e-3 * (1.0 + w.abs()), "col {j}: {g} vs {w}");
             }
+        }
+    }
+
+    #[test]
+    fn apply_schedule_covers_all_blocks_heaviest_first() {
+        let (_, m) = setup(600);
+        let sched = ApplySchedule::build(&m);
+        // every block appears exactly once, under its owning target leaf
+        let mut seen = vec![false; m.blocks.len()];
+        for task in &sched.tasks {
+            for &t in sched.blocks_of(task) {
+                assert!(!seen[t as usize], "block {t} scheduled twice");
+                seen[t as usize] = true;
+                assert_eq!(m.blocks[t as usize].tleaf, task.tleaf);
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "schedule missed a block");
+        // heaviest-first task order (ties by leaf ordinal)
+        let work = |task: &ApplyTask| -> u64 {
+            sched.blocks_of(task).iter().map(|&t| m.blocks[t as usize].nnz as u64).sum()
+        };
+        for w in sched.tasks.windows(2) {
+            let (a, b) = (work(&w[0]), work(&w[1]));
+            assert!(a > b || (a == b && w[0].tleaf < w[1].tleaf), "{a} then {b}");
+        }
+    }
+
+    #[test]
+    fn dispatch_variants_agree_with_scalar_reference() {
+        use crate::csb::kernel::KernelKind;
+        let (a, m) = setup(500);
+        let mut rng = Rng::new(13);
+        let k = 5;
+        let x: Vec<f32> = (0..a.cols * k).map(|_| rng.f32() - 0.5).collect();
+        let mut y_ref = vec![0.0f32; a.rows * k];
+        spmm_ml_seq(&m, &x, &mut y_ref, k);
+        // Scalar dispatch is the same code path bit-for-bit.
+        let mut y = vec![0.0f32; a.rows * k];
+        spmm_ml_seq_with(&m, &x, &mut y, k, Dispatch::Scalar);
+        assert_eq!(y, y_ref);
+        // Whatever Auto resolves to on this CPU: tolerance parity, and
+        // bit-identical across thread counts within the choice.
+        let (d, _) = KernelKind::Auto.resolve();
+        spmm_ml_seq_with(&m, &x, &mut y, k, d);
+        for (g, w) in y.iter().zip(&y_ref) {
+            assert!((g - w).abs() < 1e-5 * (1.0 + w.abs()), "{g} vs {w}");
+        }
+        let seq = y.clone();
+        for threads in [1, 2, 8] {
+            spmm_ml_par_with(&m, &x, &mut y, k, threads, d);
+            assert_eq!(y, seq, "threads={threads}");
         }
     }
 

@@ -1,0 +1,93 @@
+//! Debug-mode allocation counter: once the engine's per-worker scratch is
+//! warm, steady-state applies perform **zero** heap allocations (the
+//! scratch-hoisting contract of the apply engine; EXPERIMENTS.md §Kernel
+//! dispatch & panel layout).
+//!
+//! Measured at `threads = 1`: the scoped-thread pool spawns OS threads per
+//! *call* (not per block) at higher counts, and those spawns allocate —
+//! that is pool overhead, already amortized over multi-ms applies, not the
+//! per-block allocation regression this test guards against.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+#[test]
+fn steady_state_applies_are_allocation_free() {
+    use nni::csb::hier::HierCsb;
+    use nni::data::synth::SynthSpec;
+    use nni::interact::engine::Engine;
+    use nni::knn::exact::knn_graph;
+    use nni::order::Pipeline;
+    use nni::sparse::csr::Csr;
+    use nni::util::rng::Rng;
+
+    // Build phase allocates freely.
+    let n = 900;
+    let d = 3;
+    let ds = SynthSpec::blobs(n, d, 4, 17).generate();
+    let g = knn_graph(&ds, 6, 1);
+    let a = Csr::from_knn(&g, n).symmetrized();
+    let r = Pipeline::dual_tree(d).run(&ds, &a);
+    let tree = r.tree.as_ref().unwrap();
+    // low threshold → dense blocks exist, so the panel/GEMM paths run
+    let csb = HierCsb::build_with(&r.reordered, tree, tree, 32, 0.25);
+    assert!(csb.blocks.len() > 16, "needs a non-trivial schedule: {}", csb.describe());
+    let eng = Engine::new(csb, 1);
+    let coords = ds.permuted(&r.perm).raw().to_vec();
+    let mut rng = Rng::new(7);
+    let k = 4;
+    let x: Vec<f32> = (0..n * k).map(|_| rng.f32() - 0.5).collect();
+    let y: Vec<f32> = (0..n * d).map(|_| rng.normal() as f32).collect();
+    let mut force = vec![0.0f32; n * d];
+    let mut out_k = vec![0.0f32; n * k];
+    let mut num = Vec::new();
+    let mut den = Vec::new();
+
+    // Warm-up: two rounds reach every buffer's high-water mark (each
+    // round visits every block, so per-worker scratch sees the largest
+    // block of every shape).
+    for _ in 0..2 {
+        eng.tsne_attr(&y, d, &mut force);
+        eng.gauss_apply_multi(&coords, &coords, d, 0.6, &x, k, &mut out_k);
+        eng.meanshift_step_into(&coords, &coords, d, 0.5, &mut num, &mut den);
+        eng.spmm(&x, &mut out_k, k);
+    }
+
+    // Steady state: one more round of every apply — zero allocations.
+    let before = allocs();
+    eng.tsne_attr(&y, d, &mut force);
+    eng.gauss_apply_multi(&coords, &coords, d, 0.6, &x, k, &mut out_k);
+    eng.meanshift_step_into(&coords, &coords, d, 0.5, &mut num, &mut den);
+    eng.spmm(&x, &mut out_k, k);
+    // Expected 0: schedule precompiled, scratch engine-owned at its
+    // high-water mark, output buffers caller-owned.
+    let delta = allocs() - before;
+    assert_eq!(delta, 0, "steady-state applies allocated {delta} times");
+}

@@ -119,6 +119,36 @@ fn invalid_flag_values_are_usage_errors() {
 }
 
 #[test]
+fn kernel_knob_parses_and_reports_dispatch() {
+    // pinned scalar: reported as such, no fallback line
+    let out = nni()
+        .args([
+            "spmv", "--n", "256", "--leaf-cap", "64", "--kernel", "scalar",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("requested=scalar dispatch=scalar"), "{text}");
+    // auto: dispatch resolves to whatever the CPU offers
+    let out = nni()
+        .args(["reorder", "--n", "256", "--k", "6", "--leaf-cap", "64", "--rhs", "4"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("kernel: requested=auto dispatch="), "{text}");
+    // bad value → one-line usage error naming the choices
+    let out = nni()
+        .args(["spmv", "--n", "64", "--kernel", "mkl"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let text = String::from_utf8_lossy(&out.stderr);
+    assert!(text.contains("auto|simd|scalar"), "{text}");
+}
+
+#[test]
 fn reorder_accepts_build_threads_knob() {
     let out = nni()
         .args([

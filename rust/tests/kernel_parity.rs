@@ -1,0 +1,150 @@
+//! SIMD-vs-scalar kernel parity and per-kernel determinism.
+//!
+//! Contract (EXPERIMENTS.md §Kernel dispatch): the scalar kernel is the
+//! golden reference — bit-identical across thread counts and machines.
+//! The SIMD kernels keep the same per-output accumulation-chain *order*
+//! but contract multiply-add pairs (FMA), so they match scalar to a
+//! relative tolerance of 1e-5, and are themselves bit-identical across
+//! thread counts (target-leaf ownership fixes the op sequence per leaf
+//! regardless of the worker count).
+//!
+//! Shapes deliberately straddle the kernel boundaries: leaf caps around
+//! the panel tile (PANEL_MR = 4) and the 4x reduction unroll, RHS widths
+//! around the register block (GEMM_KC = 8): k ∈ {1, 3, 8, 17}.
+//!
+//! On CPUs without AVX2+FMA the Simd request resolves to the scalar
+//! kernel (recorded via `dispatch_fallback`) and these tests degrade to
+//! scalar-vs-scalar identity — still valid, just not exercising the SIMD
+//! path (CI's `-C target-cpu=native` leg runs them on AVX2 hardware).
+
+use nni::csb::hier::HierCsb;
+use nni::csb::kernel::KernelKind;
+use nni::data::synth::SynthSpec;
+use nni::interact::engine::Engine;
+use nni::knn::exact::knn_graph;
+use nni::order::Pipeline;
+use nni::util::rng::Rng;
+
+const KS: [usize; 4] = [1, 3, 8, 17];
+
+/// Mixed dense/sparse CSB over clustered data + tree-ordered coords.
+fn setup(n: usize, leaf: usize, thr: f64) -> (HierCsb, Vec<f32>, usize) {
+    let d = 3;
+    let ds = SynthSpec::blobs(n, d, 4, 17).generate();
+    let g = knn_graph(&ds, 6, 2);
+    let a = nni::sparse::csr::Csr::from_knn(&g, n).symmetrized();
+    let r = Pipeline::dual_tree(d).run(&ds, &a);
+    let tree = r.tree.as_ref().unwrap();
+    let csb = HierCsb::build_with(&r.reordered, tree, tree, leaf, thr);
+    let coords = ds.permuted(&r.perm).raw().to_vec();
+    (csb, coords, d)
+}
+
+fn assert_close(got: &[f32], want: &[f32], tag: &str) {
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!((g - w).abs() < 1e-5 * (1.0 + w.abs()), "{tag} at {i}: {g} vs {w}");
+    }
+}
+
+#[test]
+fn simd_spmm_matches_scalar_reference_on_odd_shapes() {
+    // leaf caps around PANEL_MR and the unroll: tail tiles and short
+    // reductions are the bug-prone paths.
+    for &(n, leaf) in &[(389usize, 5usize), (515, 9), (700, 33)] {
+        // thr 0.3: mixed storage so both micro-kernels run.
+        let (csb, _, _) = setup(n, leaf, 0.3);
+        let scalar = Engine::with_kernel(csb.clone(), 1, KernelKind::Scalar);
+        let simd = Engine::with_kernel(csb.clone(), 1, KernelKind::Simd);
+        let mut rng = Rng::new(41);
+        for k in KS {
+            let x: Vec<f32> = (0..csb.cols * k).map(|_| rng.f32() - 0.5).collect();
+            let mut y_s = vec![0.0f32; csb.rows * k];
+            let mut y_v = vec![0.0f32; csb.rows * k];
+            scalar.spmm(&x, &mut y_s, k);
+            simd.spmm(&x, &mut y_v, k);
+            assert_close(&y_v, &y_s, &format!("spmm n={n} leaf={leaf} k={k}"));
+        }
+    }
+}
+
+#[test]
+fn simd_gauss_matches_scalar_reference() {
+    let (csb, coords, d) = setup(450, 32, 0.25);
+    assert!(csb.dense_fraction() > 0.0, "needs dense blocks: {}", csb.describe());
+    let scalar = Engine::with_kernel(csb.clone(), 1, KernelKind::Scalar);
+    let simd = Engine::with_kernel(csb.clone(), 1, KernelKind::Simd);
+    let mut rng = Rng::new(42);
+    for k in KS {
+        let x: Vec<f32> = (0..csb.cols * k).map(|_| rng.f32() - 0.5).collect();
+        let mut y_s = vec![0.0f32; csb.rows * k];
+        let mut y_v = vec![0.0f32; csb.rows * k];
+        scalar.gauss_apply_multi(&coords, &coords, d, 0.6, &x, k, &mut y_s);
+        simd.gauss_apply_multi(&coords, &coords, d, 0.6, &x, k, &mut y_v);
+        assert_close(&y_v, &y_s, &format!("gauss k={k}"));
+    }
+}
+
+#[test]
+fn simd_tsne_and_meanshift_match_scalar_reference() {
+    let (csb, coords, d) = setup(400, 32, 0.25);
+    let scalar = Engine::with_kernel(csb.clone(), 1, KernelKind::Scalar);
+    let simd = Engine::with_kernel(csb.clone(), 1, KernelKind::Simd);
+    let mut rng = Rng::new(43);
+    let y: Vec<f32> = (0..csb.rows * d).map(|_| rng.normal() as f32).collect();
+    let mut f_s = vec![0.0f32; csb.rows * d];
+    let mut f_v = vec![0.0f32; csb.rows * d];
+    scalar.tsne_attr(&y, d, &mut f_s);
+    simd.tsne_attr(&y, d, &mut f_v);
+    assert_close(&f_v, &f_s, "tsne_attr");
+    let (num_s, den_s) = scalar.meanshift_step(&coords, &coords, d, 0.5);
+    let (num_v, den_v) = simd.meanshift_step(&coords, &coords, d, 0.5);
+    assert_close(&num_v, &num_s, "meanshift num");
+    assert_close(&den_v, &den_s, "meanshift den");
+}
+
+#[test]
+fn each_kernel_is_bit_identical_across_thread_counts() {
+    let (csb, coords, d) = setup(500, 16, 0.3);
+    let mut rng = Rng::new(44);
+    let k = 5;
+    let x: Vec<f32> = (0..csb.cols * k).map(|_| rng.f32() - 0.5).collect();
+    let y: Vec<f32> = (0..csb.rows * d).map(|_| rng.normal() as f32).collect();
+    for kind in [KernelKind::Scalar, KernelKind::Simd] {
+        let ref_eng = Engine::with_kernel(csb.clone(), 1, kind);
+        let mut spmm_ref = vec![0.0f32; csb.rows * k];
+        ref_eng.spmm(&x, &mut spmm_ref, k);
+        let mut gauss_ref = vec![0.0f32; csb.rows * k];
+        ref_eng.gauss_apply_multi(&coords, &coords, d, 0.7, &x, k, &mut gauss_ref);
+        let mut tsne_ref = vec![0.0f32; csb.rows * d];
+        ref_eng.tsne_attr(&y, d, &mut tsne_ref);
+        for threads in [2usize, 8] {
+            let eng = Engine::with_kernel(csb.clone(), threads, kind);
+            let mut got = vec![0.0f32; csb.rows * k];
+            eng.spmm(&x, &mut got, k);
+            assert_eq!(got, spmm_ref, "spmm {:?} threads={threads}", kind);
+            eng.gauss_apply_multi(&coords, &coords, d, 0.7, &x, k, &mut got);
+            assert_eq!(got, gauss_ref, "gauss {:?} threads={threads}", kind);
+            let mut gf = vec![0.0f32; csb.rows * d];
+            eng.tsne_attr(&y, d, &mut gf);
+            assert_eq!(gf, tsne_ref, "tsne {:?} threads={threads}", kind);
+        }
+    }
+}
+
+#[test]
+fn scalar_engine_reproduces_pre_dispatch_reference() {
+    // The scalar-pinned engine must equal the HierCsb scalar traversal
+    // bit-for-bit — the "pin --kernel scalar for determinism" contract.
+    let (csb, _, _) = setup(350, 32, 0.3);
+    let eng = Engine::with_kernel(csb.clone(), 4, KernelKind::Scalar);
+    assert!(eng.dispatch_fallback.is_none());
+    let mut rng = Rng::new(45);
+    for k in [1usize, 4] {
+        let x: Vec<f32> = (0..csb.cols * k).map(|_| rng.f32()).collect();
+        let mut want = vec![0.0f32; csb.rows * k];
+        csb.spmm(&x, &mut want, k);
+        let mut got = vec![0.0f32; csb.rows * k];
+        eng.spmm(&x, &mut got, k);
+        assert_eq!(got, want, "k={k}");
+    }
+}

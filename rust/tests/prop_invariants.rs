@@ -235,6 +235,73 @@ fn arena_offsets_in_bounds_and_non_overlapping() {
 }
 
 #[test]
+fn panels_mirror_dense_arena_and_stay_disjoint() {
+    use nni::csb::hier::BlockKind;
+    use nni::csb::panel::{panel_len, NO_PANEL, PANEL_MR};
+    check("panel-mirror", |rng, size| {
+        let (_, csb) = random_csb(rng, size);
+        prop_assert!(csb.panels.off.len() == csb.blocks.len());
+        let data = csb.panels.data.as_slice();
+        prop_assert!(data.as_ptr() as usize % 32 == 0, "panel arena not 32-byte aligned");
+        let mut iv: Vec<(usize, usize)> = Vec::new();
+        for (t, b) in csb.blocks.iter().enumerate() {
+            let (rn, cn) = (b.rows.len(), b.cols.len());
+            match b.kind {
+                BlockKind::Dense { off } => {
+                    let po = csb.panels.off[t];
+                    prop_assert!(po != NO_PANEL, "dense block without panel");
+                    prop_assert!(po as usize % 8 == 0, "panel offset breaks 32-byte alignment");
+                    let lo = po as usize;
+                    let hi = lo + panel_len(rn, cn);
+                    prop_assert!(hi <= data.len(), "panel arena overflow");
+                    iv.push((lo, hi));
+                    // every value lands at its tile-major position, bit-equal
+                    let p = &data[lo..hi];
+                    for r in 0..rn {
+                        for c in 0..cn {
+                            let got =
+                                p[(r / PANEL_MR) * cn * PANEL_MR + c * PANEL_MR + (r % PANEL_MR)];
+                            let want = csb.dense[off as usize + r * cn + c];
+                            prop_assert!(
+                                got.to_bits() == want.to_bits(),
+                                "panel mismatch at block {t} ({r},{c})"
+                            );
+                        }
+                    }
+                }
+                BlockKind::Sparse { .. } => {
+                    prop_assert!(csb.panels.off[t] == NO_PANEL, "sparse block with panel");
+                }
+            }
+        }
+        iv.sort_unstable();
+        for w in iv.windows(2) {
+            prop_assert!(w[0].1 <= w[1].0, "overlapping panel intervals {w:?}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn dispatched_spmm_tracks_scalar_within_tolerance() {
+    use nni::csb::kernel::KernelKind;
+    check("dispatch-parity", |rng, size| {
+        let (b, csb) = random_csb(rng, size);
+        let (d, _) = KernelKind::Simd.resolve();
+        let k = 1 + rng.below(9);
+        let x: Vec<f32> = (0..b.cols * k).map(|_| rng.f32() - 0.5).collect();
+        let mut y_ref = vec![0.0f32; b.rows * k];
+        nni::spmv::multilevel::spmm_ml_seq(&csb, &x, &mut y_ref, k);
+        let mut y = vec![0.0f32; b.rows * k];
+        nni::spmv::multilevel::spmm_ml_seq_with(&csb, &x, &mut y, k, d);
+        for (g, w) in y.iter().zip(&y_ref) {
+            prop_assert!((g - w).abs() < 1e-5 * (1.0 + w.abs()), "k={k}: {g} vs {w}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn flat_and_multilevel_schedules_visit_same_blocks() {
     check("schedule-cover", |rng, size| {
         let (_, csb) = random_csb(rng, size);
@@ -409,6 +476,17 @@ fn parallel_hiercsb_build_bitidentical_across_threads() {
                         .zip(&par.sp_val)
                         .all(|(x, y)| x.to_bits() == y.to_bits()),
                 "sp_val arena differs at threads={threads}"
+            );
+            prop_assert!(
+                seq.panels.off == par.panels.off,
+                "panel offsets differ at threads={threads}"
+            );
+            let sp = seq.panels.data.as_slice();
+            let pp = par.panels.data.as_slice();
+            prop_assert!(sp.len() == pp.len(), "panel arena length at threads={threads}");
+            prop_assert!(
+                sp.iter().zip(pp).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "panel arena differs at threads={threads}"
             );
         }
         Ok(())
