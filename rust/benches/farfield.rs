@@ -1,0 +1,215 @@
+//! **Far-field compression sweep**: storage, accuracy, and apply time of
+//! the `hmat` full-kernel operator across ACA tolerances
+//! tol ∈ {1e-2, 1e-3, 1e-4}.
+//!
+//! Per tolerance the bench measures, on a clustered SIFT-like surrogate:
+//!
+//! * compressed far-field bytes vs what the same blocks would cost dense
+//!   (the acceptance bar: `storage_ratio < 0.3` at tol = 1e-3);
+//! * the rank histogram of the low-rank blocks (η/tol methodology:
+//!   EXPERIMENTS.md §Far-field compression & KRR);
+//! * sampled relative error of the full spmv against a streamed f64
+//!   dense Gaussian oracle (must stay ≤ 10·tol);
+//! * build and apply wall time.
+//!
+//! Before anything is recorded, the far apply is asserted
+//! **bit-identical across thread counts {1, 2, 8}** (scalar dispatch) —
+//! the same determinism discipline as BENCH_build/BENCH_interact.
+//!
+//! Writes `BENCH_farfield.json` at the repo root; `--smoke` shrinks n for
+//! the CI refresh (same code paths).
+
+use nni::apps::krr::suggest_bandwidth;
+use nni::bench::{print_header, repo_root_out, Table, Workload};
+use nni::csb::kernel::{Dispatch, KernelKind};
+use nni::hmat::aca::GaussGen;
+use nni::hmat::apply::worker_scratch;
+use nni::hmat::{FullKernelConfig, FullKernelEngine};
+use nni::order::dualtree;
+use nni::par::pool::ThreadPool;
+use nni::util::cli::Args;
+use nni::util::json::{arr, num, obj, s, Json};
+use nni::util::rng::Rng;
+use nni::util::timer::{bench_default, machine_summary, time_once};
+use std::io::Write;
+
+fn main() {
+    let a = Args::new("far-field ACA compression sweep (storage, accuracy, apply time)")
+        .opt_usize_min("n", 8192, 64, "problem size")
+        .opt("tol-list", "1e-2,1e-3,1e-4", "ACA tolerances to sweep")
+        .opt_f64("eta", 1.0, "admissibility parameter")
+        .opt_f64("bandwidth", 0.0, "gaussian bandwidth h (0 = median auto)")
+        .opt_usize_min("block-cap", 256, 1, "tree-cut block capacity")
+        .opt_usize_min("leaf-cap", 16, 1, "ordering-tree leaf capacity")
+        .opt_usize_min("sample-rows", 256, 1, "oracle rows sampled for the error estimate")
+        .opt_u64("seed", 42, "rng seed")
+        .opt("out", "BENCH_farfield.json", "json record path (relative = repo root)")
+        .flag("smoke", "CI smoke mode: small n, same code paths")
+        .parse();
+    let smoke = a.get_flag("smoke");
+    let n = if smoke { 2048 } else { a.get_usize("n") };
+    let block_cap = if smoke { 128 } else { a.get_usize("block-cap") };
+    let tols: Vec<f64> = a
+        .get("tol-list")
+        .split(',')
+        .filter(|t| !t.is_empty())
+        .map(|t| t.trim().parse().unwrap_or_else(|_| panic!("--tol-list: bad float '{t}'")))
+        .collect();
+    let eta = a.get_f64("eta") as f32;
+    let seed = a.get_u64("seed");
+    print_header(
+        "farfield",
+        "hmat far-field ACA compression: storage vs tolerance, full-kernel accuracy",
+    );
+
+    // Fixed inputs: clustered surrogate, 3-D PCA embedding, dual tree.
+    let wl = Workload::Sift;
+    let ds = wl.make_dataset(n, seed);
+    let h = if a.get_f64("bandwidth") > 0.0 {
+        a.get_f64("bandwidth")
+    } else {
+        suggest_bandwidth(&ds, seed)
+    };
+    let inv_h2 = (1.0 / (h * h)) as f32;
+    let embedded = nni::embed::pca::pca_par(&ds, 3, 10, seed, 0).project(&ds, 3);
+    let (perm, tree) = dualtree::order_par(&embedded, a.get_usize("leaf-cap"), 0);
+    let coords = ds.permuted(&perm);
+    println!("# n={n} d={} h={h:.4} eta={eta} block_cap={block_cap}", ds.d());
+
+    // Shared probe vector + sampled f64 oracle rows.
+    let mut rng = Rng::new(seed ^ 0xFA2);
+    let x: Vec<f32> = (0..n).map(|_| rng.f32() - 0.5).collect();
+    let m = a.get_usize("sample-rows").min(n);
+    let sample: Vec<usize> = rng.sample_distinct(n, m);
+    let gen = GaussGen {
+        coords: coords.raw(),
+        d: ds.d(),
+        inv_h2,
+    };
+    let oracle: Vec<f64> = sample
+        .iter()
+        .map(|&i| (0..n).map(|j| gen.entry_f64(i, j) * x[j] as f64).sum())
+        .collect();
+    let oracle_norm: f64 = oracle.iter().map(|v| v * v).sum::<f64>().sqrt();
+
+    let mut table = Table::new(
+        "farfield",
+        &[
+            "tol", "far_blocks", "mean_rank", "max_rank", "dense_fb", "storage_ratio",
+            "rel_err", "build_s", "spmv_ms",
+        ],
+    );
+    let mut records: Vec<Json> = Vec::new();
+    for &tol in &tols {
+        let cfg = FullKernelConfig::new(inv_h2)
+            .with_eta(eta)
+            .with_tol(tol as f32)
+            .with_block_cap(block_cap);
+        let (eng, t_build) = time_once(|| {
+            FullKernelEngine::build(&tree, coords.raw(), ds.d(), &cfg, 0, 0, KernelKind::Auto)
+        });
+        let far = &eng.far;
+
+        // Determinism gate: far apply bit-identical across threads {1,2,8}
+        // under the scalar dispatch before anything is recorded.
+        let mut y_ref: Vec<f32> = Vec::new();
+        for threads in [1usize, 2, 8] {
+            let pool = ThreadPool::new(threads);
+            let scratch = worker_scratch(pool.threads);
+            let mut y = vec![0.0f32; n];
+            far.apply_acc(&x, 1, &mut y, &pool, Dispatch::Scalar, &scratch);
+            if y_ref.is_empty() {
+                y_ref = y;
+            } else {
+                assert!(
+                    y.iter().zip(&y_ref).all(|(p, q)| p.to_bits() == q.to_bits()),
+                    "far apply not bit-identical at threads={threads} (tol={tol})"
+                );
+            }
+        }
+
+        // Accuracy: full spmv vs the sampled f64 oracle.
+        let mut y = vec![0.0f32; n];
+        eng.spmv(&x, &mut y);
+        let err: f64 = sample
+            .iter()
+            .zip(&oracle)
+            .map(|(&i, &w)| (y[i] as f64 - w) * (y[i] as f64 - w))
+            .sum::<f64>()
+            .sqrt();
+        let rel_err = err / oracle_norm.max(1e-300);
+        assert!(
+            rel_err <= 10.0 * tol,
+            "full-kernel spmv rel err {rel_err:.3e} exceeds 10·tol at tol={tol}"
+        );
+
+        let ratio = far.far_bytes() as f64 / far.dense_far_bytes().max(1) as f64;
+        if (tol - 1e-3).abs() < 1e-12 {
+            assert!(
+                ratio < 0.3,
+                "acceptance: far storage ratio {ratio:.3} must be < 0.3 at tol=1e-3 ({})",
+                far.describe()
+            );
+        }
+        let m_spmv = bench_default(|| eng.spmv(&x, &mut y));
+        println!("# tol={tol:.0e}: {}", far.describe());
+
+        table.row(vec![
+            format!("{tol:.0e}"),
+            far.blocks.len().to_string(),
+            format!("{:.1}", far.mean_rank()),
+            far.max_rank().to_string(),
+            far.dense_fallback_blocks().to_string(),
+            format!("{ratio:.4}"),
+            format!("{rel_err:.3e}"),
+            format!("{t_build:.3}"),
+            format!("{:.3}", m_spmv.robust_min_s * 1e3),
+        ]);
+        let hist: Vec<Json> = far
+            .rank_histogram()
+            .into_iter()
+            .map(|(r, c)| obj(vec![("rank", num(r as f64)), ("blocks", num(c as f64))]))
+            .collect();
+        records.push(obj(vec![
+            ("tol", num(tol)),
+            ("far_blocks", num(far.blocks.len() as f64)),
+            ("low_rank_blocks", num(far.low_rank_blocks() as f64)),
+            ("dense_fallback_blocks", num(far.dense_fallback_blocks() as f64)),
+            ("mean_rank", num(far.mean_rank())),
+            ("max_rank", num(far.max_rank() as f64)),
+            ("rank_histogram", arr(hist)),
+            ("far_bytes", num(far.far_bytes() as f64)),
+            ("dense_far_bytes", num(far.dense_far_bytes() as f64)),
+            ("storage_ratio", num(ratio)),
+            ("near_covered_entries", num(eng.near.csb.coverage().0 as f64)),
+            ("rel_err_sample", num(rel_err)),
+            ("build_seconds", num(t_build)),
+            ("spmv_seconds", num(m_spmv.robust_min_s)),
+        ]));
+    }
+    table.finish();
+
+    let doc = obj(vec![
+        ("bench", s("farfield")),
+        ("workload", s(wl.name())),
+        ("n", num(n as f64)),
+        ("d", num(ds.d() as f64)),
+        ("bandwidth", num(h)),
+        ("eta", num(eta as f64)),
+        ("block_cap", num(block_cap as f64)),
+        ("status", s("measured")),
+        ("testbed", s(&machine_summary())),
+        (
+            "expected_shape",
+            s("storage_ratio grows and rel_err_sample shrinks as tol tightens; \
+               storage_ratio < 0.3 at tol=1e-3 and rel_err_sample <= 10*tol are asserted, \
+               as is far-apply bit-identity across threads {1,2,8}, before recording"),
+        ),
+        ("points", arr(records)),
+    ]);
+    let out = repo_root_out(&a.get("out"));
+    let mut f = std::fs::File::create(&out).expect("write farfield json");
+    writeln!(f, "{doc}").expect("write farfield json");
+    println!("\n[saved {}]", out.display());
+    println!("expected shape: tighter tol → higher rank/storage, lower error; identity asserted.");
+}

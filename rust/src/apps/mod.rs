@@ -1,6 +1,8 @@
-//! The paper's case studies (§3) as first-class applications: t-SNE with
-//! hierarchically-reordered attractive-force interactions, and mean shift
-//! with cadenced re-clustering.
+//! The paper's case studies (§3) as first-class applications — t-SNE with
+//! hierarchically-reordered attractive-force interactions, mean shift
+//! with cadenced re-clustering — plus kernel ridge regression over the
+//! full-kernel (near + compressed far field) operator.
 
+pub mod krr;
 pub mod meanshift;
 pub mod tsne;

@@ -747,15 +747,41 @@ impl HierCsb {
         dense as f64 / self.nnz.max(1) as f64
     }
 
+    /// Index-space coverage of the stored blocks: `(covered, total)` where
+    /// `covered` is the summed `rows x cols` area of every block and
+    /// `total = rows·cols` of the whole matrix.  Everything outside the
+    /// covered area is implicitly zero — under a kNN-truncated profile
+    /// that is the dropped far field (which `hmat` compresses in
+    /// full-kernel mode), so the gap between the two numbers is exactly
+    /// the near/far split that `describe()` and the `reorder` CLI report
+    /// surface.
+    pub fn coverage(&self) -> (u64, u64) {
+        let covered = self
+            .blocks
+            .iter()
+            .map(|b| b.rows.len() as u64 * b.cols.len() as u64)
+            .sum();
+        (covered, self.rows as u64 * self.cols as u64)
+    }
+
+    /// `covered / total` of [`HierCsb::coverage`] (0 for an empty matrix).
+    pub fn covered_fraction(&self) -> f64 {
+        let (covered, total) = self.coverage();
+        covered as f64 / total.max(1) as f64
+    }
+
     /// Stats line for logs/benches.
     pub fn describe(&self) -> String {
+        let (covered, total) = self.coverage();
         format!(
-            "blocks={} tgt_leaves={} src_leaves={} dense_frac={:.2} avg_block_nnz={:.1}",
+            "blocks={} tgt_leaves={} src_leaves={} dense_frac={:.2} avg_block_nnz={:.1} \
+             covered={covered}/{total} ({:.2}%)",
             self.blocks.len(),
             self.tgt_leaves.len(),
             self.src_leaves.len(),
             self.dense_fraction(),
-            self.nnz as f64 / self.blocks.len().max(1) as f64
+            self.nnz as f64 / self.blocks.len().max(1) as f64,
+            self.covered_fraction() * 100.0
         )
     }
 }
@@ -1096,6 +1122,31 @@ mod tests {
                 "panel arena differs, threads={threads}"
             );
         }
+    }
+
+    #[test]
+    fn coverage_counts_block_areas_against_total() {
+        let (a, csb) = setup(400, 32);
+        let (covered, total) = csb.coverage();
+        assert_eq!(total, (a.rows * a.cols) as u64);
+        let manual: u64 = csb
+            .blocks
+            .iter()
+            .map(|b| b.rows.len() as u64 * b.cols.len() as u64)
+            .sum();
+        assert_eq!(covered, manual);
+        // blocks only exist where nonzeros are, so coverage is bounded by
+        // the full matrix and reaches at least the nnz footprint
+        assert!(covered <= total);
+        assert!(covered >= a.nnz() as u64, "covered area below nnz count");
+        let frac = csb.covered_fraction();
+        assert!(frac > 0.0 && frac <= 1.0);
+        // describe() surfaces the same numbers
+        let d = csb.describe();
+        assert!(
+            d.contains(&format!("covered={covered}/{total}")),
+            "describe() missing coverage: {d}"
+        );
     }
 
     #[test]

@@ -1,0 +1,384 @@
+//! Adaptive cross approximation (ACA) of admissible Gaussian blocks.
+//!
+//! A far block `A` (entries `exp(−‖t_i − s_j‖²·inv_h2)` over a pair of
+//! well-separated boxes) is numerically low-rank; partial-pivot ACA
+//! builds a rank-`r` factorization `A ≈ U·Vᵀ` from `O(r)` generated rows
+//! and columns without ever materializing the block:
+//!
+//! 1. generate the residual row at the current pivot row, pick the pivot
+//!    column as its largest unused entry, scale the row into `v_r`;
+//! 2. generate the residual column at the pivot column — that is `u_r`;
+//! 3. update the running estimate of `‖U·Vᵀ‖_F` incrementally and stop
+//!    once the last increment `‖u_r‖·‖v_r‖` drops below
+//!    `ACA_SAFETY · tol · ‖U·Vᵀ‖_F` (the safety factor absorbs the tail
+//!    the last-increment heuristic does not see, so the *contract* —
+//!    relative Frobenius reconstruction error ≤ `tol` against an f64
+//!    dense oracle — holds with margin; property-tested in
+//!    `rust/tests/prop_invariants.rs`);
+//! 4. the next pivot row is the largest unused entry of `u_r`.
+//!
+//! **Dense fallback**: if the rank reaches half the smaller block side,
+//! the factorization has lost against dense storage
+//! (`(rn+cn)·r ≥ rn·cn` around `r = min/2` for squarish blocks) — the
+//! block is regenerated dense and stored verbatim, which also makes the
+//! ≤ tol contract exact (up to f32 rounding) on blocks the admissibility
+//! heuristic misjudged.
+//!
+//! Everything is sequential and a pure function of (coords, spans, tol):
+//! factorizing blocks in parallel stays bit-deterministic.
+
+use crate::csb::hier::Span;
+
+/// Entry generator for the Gaussian kernel over tree-ordered coordinates
+/// (`coords`: row-major `n x d`): `A[i,j] = exp(−‖x_i − x_j‖²·inv_h2)`.
+#[derive(Clone, Copy, Debug)]
+pub struct GaussGen<'a> {
+    pub coords: &'a [f32],
+    pub d: usize,
+    pub inv_h2: f32,
+}
+
+impl<'a> GaussGen<'a> {
+    #[inline]
+    pub fn entry(&self, i: usize, j: usize) -> f32 {
+        let a = &self.coords[i * self.d..(i + 1) * self.d];
+        let b = &self.coords[j * self.d..(j + 1) * self.d];
+        let mut d2 = 0.0f32;
+        for (p, q) in a.iter().zip(b) {
+            let t = p - q;
+            d2 += t * t;
+        }
+        (-d2 * self.inv_h2).exp()
+    }
+
+    /// The same entry evaluated in f64 (test oracles).
+    pub fn entry_f64(&self, i: usize, j: usize) -> f64 {
+        let a = &self.coords[i * self.d..(i + 1) * self.d];
+        let b = &self.coords[j * self.d..(j + 1) * self.d];
+        let mut d2 = 0.0f64;
+        for (p, q) in a.iter().zip(b) {
+            let t = *p as f64 - *q as f64;
+            d2 += t * t;
+        }
+        (-d2 * self.inv_h2 as f64).exp()
+    }
+}
+
+/// One block's factorization.
+#[derive(Clone, Debug, PartialEq)]
+pub enum AcaFactor {
+    /// `A ≈ U·Vᵀ` with `U` row-major `rows x rank` and `Vt` row-major
+    /// `rank x cols`.  `rank == 0` means the block is numerically zero at
+    /// f32 resolution (every generated pivot row vanished).
+    LowRank {
+        u: Vec<f32>,
+        vt: Vec<f32>,
+        rank: usize,
+    },
+    /// Dense fallback: the block's values, row-major `rows x cols`.
+    Dense(Vec<f32>),
+}
+
+impl Default for AcaFactor {
+    fn default() -> Self {
+        AcaFactor::LowRank {
+            u: Vec::new(),
+            vt: Vec::new(),
+            rank: 0,
+        }
+    }
+}
+
+impl AcaFactor {
+    /// Stored f32 count (storage accounting).
+    pub fn stored_len(&self) -> usize {
+        match self {
+            AcaFactor::LowRank { u, vt, .. } => u.len() + vt.len(),
+            AcaFactor::Dense(v) => v.len(),
+        }
+    }
+}
+
+/// Safety factor on the ACA stopping criterion (see module docs).
+pub const ACA_SAFETY: f32 = 0.25;
+
+/// Factorize the `rows x cols` Gaussian block to relative Frobenius
+/// tolerance `tol`, falling back to dense storage when the rank would
+/// exceed half the smaller block side.
+pub fn aca_gauss(gen: &GaussGen, rows: Span, cols: Span, tol: f32) -> AcaFactor {
+    assert!(tol > 0.0 && tol.is_finite(), "aca tolerance must be positive");
+    let rn = rows.len();
+    let cn = cols.len();
+    if rn == 0 || cn == 0 {
+        return AcaFactor::default();
+    }
+    let max_rank = rn.min(cn) / 2;
+    let r0 = rows.lo as usize;
+    let c0 = cols.lo as usize;
+
+    // u_k / v_k stored contiguously per rank step: `us[k*rn..]` is the
+    // k-th column of U, `vs[k*cn..]` the k-th row of Vᵀ (already the
+    // row-major Vt layout the apply consumes).
+    let mut us: Vec<f32> = Vec::new();
+    let mut vs: Vec<f32> = Vec::new();
+    let mut rank = 0usize;
+    let mut row_used = vec![false; rn];
+    let mut col_used = vec![false; cn];
+    // ‖U·Vᵀ‖_F² maintained incrementally in f64.
+    let mut est2 = 0.0f64;
+    let mut piv_row = 0usize;
+    // Consecutive below-threshold increments: stopping only after two in
+    // a row guards against a single accidentally small pivot step hiding
+    // a fat residual tail.
+    let mut small_streak = 0usize;
+
+    loop {
+        if rank >= max_rank {
+            // Rank would exceed half the block side: dense wins.
+            return AcaFactor::Dense(dense_fill(gen, rows, cols));
+        }
+        // Residual row at piv_row: A[piv_row, :] − Σ_k u_k[piv_row]·v_k.
+        let mut r: Vec<f32> = (0..cn).map(|j| gen.entry(r0 + piv_row, c0 + j)).collect();
+        for k in 0..rank {
+            let uk = us[k * rn + piv_row];
+            if uk != 0.0 {
+                for (rv, &vv) in r.iter_mut().zip(&vs[k * cn..(k + 1) * cn]) {
+                    *rv -= uk * vv;
+                }
+            }
+        }
+        row_used[piv_row] = true;
+        // Pivot column: largest residual magnitude among unused columns.
+        let mut piv_col = usize::MAX;
+        let mut piv_abs = 0.0f32;
+        for (j, &rv) in r.iter().enumerate() {
+            if !col_used[j] && rv.abs() > piv_abs {
+                piv_abs = rv.abs();
+                piv_col = j;
+            }
+        }
+        if piv_col == usize::MAX || piv_abs < f32::MIN_POSITIVE {
+            // Numerically zero residual row — try the next unused row, or
+            // accept the current factorization if none remain.
+            match row_used.iter().position(|&u| !u) {
+                Some(i) => {
+                    piv_row = i;
+                    continue;
+                }
+                None => break,
+            }
+        }
+        let piv = r[piv_col];
+        let inv = 1.0f32 / piv;
+        for rv in r.iter_mut() {
+            *rv *= inv;
+        }
+        col_used[piv_col] = true;
+        // Residual column at piv_col: A[:, piv_col] − Σ_k v_k[piv_col]·u_k.
+        let mut c: Vec<f32> = (0..rn).map(|i| gen.entry(r0 + i, c0 + piv_col)).collect();
+        for k in 0..rank {
+            let vk = vs[k * cn + piv_col];
+            if vk != 0.0 {
+                for (cv, &uv) in c.iter_mut().zip(&us[k * rn..(k + 1) * rn]) {
+                    *cv -= vk * uv;
+                }
+            }
+        }
+        // Norm bookkeeping (f64): ‖Ã + u·vᵀ‖² = ‖Ã‖² + ‖u‖²‖v‖²
+        //                                       + 2·Σ_k (u_k·u)(v_k·v).
+        let nu2 = dot64(&c, &c);
+        let nv2 = dot64(&r, &r);
+        let mut cross = 0.0f64;
+        for k in 0..rank {
+            cross += dot64(&us[k * rn..(k + 1) * rn], &c) * dot64(&vs[k * cn..(k + 1) * cn], &r);
+        }
+        est2 = (est2 + nu2 * nv2 + 2.0 * cross).max(0.0);
+        us.extend_from_slice(&c);
+        vs.extend_from_slice(&r);
+        rank += 1;
+        let inc = (nu2 * nv2).sqrt();
+        if est2 > 0.0 && inc <= (ACA_SAFETY * tol) as f64 * est2.sqrt() {
+            small_streak += 1;
+            if small_streak >= 2 {
+                break;
+            }
+        } else {
+            small_streak = 0;
+        }
+        // Next pivot row: largest magnitude of the new column among
+        // unused rows.
+        let mut best = usize::MAX;
+        let mut best_abs = -1.0f32;
+        for (i, &cv) in c.iter().enumerate() {
+            if !row_used[i] && cv.abs() > best_abs {
+                best_abs = cv.abs();
+                best = i;
+            }
+        }
+        match best {
+            usize::MAX => break,
+            i => piv_row = i,
+        }
+    }
+
+    // Transpose the column-stacked `us` into row-major `U` (`rn x rank`);
+    // `vs` already is row-major `Vt` (`rank x cn`).
+    let mut u = vec![0.0f32; rn * rank];
+    for k in 0..rank {
+        for i in 0..rn {
+            u[i * rank + k] = us[k * rn + i];
+        }
+    }
+    AcaFactor::LowRank { u, vt: vs, rank }
+}
+
+/// Generate the full block row-major (the dense fallback and test oracle
+/// at f32 precision).
+pub fn dense_fill(gen: &GaussGen, rows: Span, cols: Span) -> Vec<f32> {
+    let rn = rows.len();
+    let cn = cols.len();
+    let mut out = vec![0.0f32; rn * cn];
+    for i in 0..rn {
+        let row = &mut out[i * cn..(i + 1) * cn];
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = gen.entry(rows.lo as usize + i, cols.lo as usize + j);
+        }
+    }
+    out
+}
+
+/// f32 dot product with f64 accumulation — the scalar-accumulation
+/// precision discipline shared by the ACA norm bookkeeping and the KRR
+/// CG ([`crate::apps::krr`]).
+#[inline]
+pub fn dot64(a: &[f32], b: &[f32]) -> f64 {
+    a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Two anisotropic clusters `gap` apart along axis 0; rows = first
+    /// cluster, cols = second.
+    fn two_clusters(rng: &mut Rng, rn: usize, cn: usize, d: usize, gap: f32) -> Vec<f32> {
+        let mut coords = Vec::with_capacity((rn + cn) * d);
+        let scales: Vec<f32> = (0..d).map(|_| 0.05 + 0.3 * rng.f32()).collect();
+        for i in 0..rn + cn {
+            for (a, &s) in scales.iter().enumerate() {
+                let mut v = s * rng.normal() as f32;
+                if i >= rn && a == 0 {
+                    v += gap;
+                }
+                coords.push(v);
+            }
+        }
+        coords
+    }
+
+    fn rel_frob_err(gen: &GaussGen, rows: Span, cols: Span, f: &AcaFactor) -> (f64, f64) {
+        let rn = rows.len();
+        let cn = cols.len();
+        let mut err2 = 0.0f64;
+        let mut norm2 = 0.0f64;
+        for i in 0..rn {
+            for j in 0..cn {
+                let a = gen.entry_f64(rows.lo as usize + i, cols.lo as usize + j);
+                let approx = match f {
+                    AcaFactor::LowRank { u, vt, rank } => (0..*rank)
+                        .map(|k| u[i * rank + k] as f64 * vt[k * cn + j] as f64)
+                        .sum::<f64>(),
+                    AcaFactor::Dense(v) => v[i * cn + j] as f64,
+                };
+                err2 += (a - approx) * (a - approx);
+                norm2 += a * a;
+            }
+        }
+        (err2.sqrt(), norm2.sqrt())
+    }
+
+    #[test]
+    fn separated_clusters_compress_to_low_rank() {
+        let mut rng = Rng::new(17);
+        let coords = two_clusters(&mut rng, 48, 40, 3, 4.0);
+        let gen = GaussGen {
+            coords: &coords,
+            d: 3,
+            inv_h2: 0.5,
+        };
+        let rows = Span { lo: 0, hi: 48 };
+        let cols = Span { lo: 48, hi: 88 };
+        let f = aca_gauss(&gen, rows, cols, 1e-3);
+        let AcaFactor::LowRank { rank, .. } = &f else {
+            panic!("well-separated block must stay low-rank");
+        };
+        assert!(*rank < 20, "rank {rank} too high for a separated pair");
+        let (err, norm) = rel_frob_err(&gen, rows, cols, &f);
+        assert!(err <= 1e-3 * norm + 1e-20, "err {err} vs tol*norm {}", 1e-3 * norm);
+    }
+
+    #[test]
+    fn overlapping_clusters_fall_back_to_dense() {
+        // gap 0 → the block is essentially full-rank; ACA must bail to
+        // dense and the stored values are exact at f32 resolution.
+        let mut rng = Rng::new(5);
+        let coords = two_clusters(&mut rng, 24, 24, 2, 0.0);
+        let gen = GaussGen {
+            coords: &coords,
+            d: 2,
+            inv_h2: 40.0,
+        };
+        let rows = Span { lo: 0, hi: 24 };
+        let cols = Span { lo: 24, hi: 48 };
+        let f = aca_gauss(&gen, rows, cols, 1e-4);
+        let (err, norm) = rel_frob_err(&gen, rows, cols, &f);
+        assert!(err <= 1e-4 * norm + 1e-20, "err {err} norm {norm}");
+        if let AcaFactor::LowRank { rank, .. } = &f {
+            assert!(*rank <= 12, "rank cap violated: {rank}");
+        }
+    }
+
+    #[test]
+    fn numerically_zero_block_yields_rank_zero() {
+        // Clusters so far apart every f32 entry underflows to 0.
+        let mut rng = Rng::new(9);
+        let coords = two_clusters(&mut rng, 16, 16, 2, 1e4);
+        let gen = GaussGen {
+            coords: &coords,
+            d: 2,
+            inv_h2: 1.0,
+        };
+        let f = aca_gauss(&gen, Span { lo: 0, hi: 16 }, Span { lo: 16, hi: 32 }, 1e-3);
+        assert_eq!(
+            f,
+            AcaFactor::default(),
+            "all-zero block must produce the empty factorization"
+        );
+        assert_eq!(f.stored_len(), 0);
+    }
+
+    #[test]
+    fn rank_one_block_recovered_exactly() {
+        // All targets at one point, all sources at another: A is exactly
+        // rank one, ACA must stop at rank 1.
+        let mut coords = vec![0.0f32; 40 * 2];
+        for i in 20..40 {
+            coords[i * 2] = 2.0;
+        }
+        let gen = GaussGen {
+            coords: &coords,
+            d: 2,
+            inv_h2: 0.3,
+        };
+        let rows = Span { lo: 0, hi: 20 };
+        let cols = Span { lo: 20, hi: 40 };
+        let f = aca_gauss(&gen, rows, cols, 1e-3);
+        match &f {
+            AcaFactor::LowRank { rank, .. } => assert_eq!(*rank, 1),
+            AcaFactor::Dense(_) => panic!("rank-1 block must not fall back to dense"),
+        }
+        let (err, norm) = rel_frob_err(&gen, rows, cols, &f);
+        assert!(err <= 1e-6 * norm, "rank-1 recovery err {err} norm {norm}");
+    }
+}

@@ -1,0 +1,309 @@
+//! η-admissibility partition of the interaction index space.
+//!
+//! A dual-tree traversal over [`BoxTree`] node pairs splits the `n x n`
+//! index space into two disjoint families of rectangles:
+//!
+//! * **near pairs** — (target cut leaf × source cut leaf) rectangles whose
+//!   boxes are *not* well separated; the full-kernel engine stores them as
+//!   dense `HierCsb` blocks (the existing near-field machinery);
+//! * **far blocks** — rectangles whose boxes satisfy the η-admissibility
+//!   criterion; `hmat::aca` compresses each into a low-rank factorization.
+//!
+//! Admissibility is evaluated from the tree's box geometry alone (centers
+//! and half-widths — the boxes are cubes, so the enclosing-ball radius is
+//! `half·sqrt(d)`): a pair is admissible when the gap between the balls is
+//! positive and the smaller diameter is at most `η` times the gap,
+//!
+//! ```text
+//! gap = ‖c_t − c_s‖ − r_t − r_s   (r = half·sqrt(d))
+//! admissible ⇔ gap > 0  ∧  2·min(r_t, r_s) ≤ η·gap
+//! ```
+//!
+//! Larger η admits closer pairs (more far-field coverage, higher ranks);
+//! η → 0 degenerates to an all-near partition.  The *accuracy* of the
+//! compressed operator never depends on η — ACA runs to the requested
+//! tolerance on whatever blocks are admitted (with a dense fallback) — η
+//! only moves the near/far storage trade-off.
+//!
+//! Emitted far pairs are split on the target side into one block per
+//! **target cut leaf** (the traversal never descends below the size cut,
+//! so a far pair's row span is always a union of consecutive cut leaves).
+//! Every far block then belongs to exactly one target leaf — the same
+//! output-ownership discipline as the near blocks — which is what makes
+//! the fused apply deterministic and lock-free (`hmat::apply`).
+
+use crate::csb::hier::{LEAF_POINTS, Span};
+use crate::tree::boxtree::BoxTree;
+
+/// One far-field rectangle after target-leaf splitting: `rows` is exactly
+/// the span of target cut leaf `tleaf`; `cols` is the span of an
+/// admissible source node (possibly far above the cut).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FarBlockSpec {
+    pub tleaf: u32,
+    pub rows: Span,
+    pub cols: Span,
+}
+
+/// The admissibility partition of the `n x n` self-interaction index
+/// space: near pairs + far blocks tile it exactly (no gaps, no overlap —
+/// property-tested in `rust/tests/prop_invariants.rs`).
+#[derive(Clone, Debug)]
+pub struct Partition {
+    /// Number of points (rows = cols of the index space).
+    pub n: usize,
+    /// Size-cut node ids in span order (`BoxTree::cut_by_size(block_cap)`,
+    /// the same cut `HierCsb::build_with_par` derives — the near side and
+    /// the far side agree on the leaf blocking by construction).
+    pub cut: Vec<u32>,
+    /// Cut-leaf spans in order (row *and* column blocking).
+    pub leaves: Vec<Span>,
+    /// Near (target leaf ordinal, source leaf ordinal) pairs.
+    pub near: Vec<(u32, u32)>,
+    /// Far blocks, one per (target cut leaf, admissible source node).
+    pub far: Vec<FarBlockSpec>,
+    /// Admissibility parameter the partition was built with.
+    pub eta: f32,
+}
+
+impl Partition {
+    /// Total index-space area of the near rectangles.
+    pub fn near_area(&self) -> u64 {
+        self.near
+            .iter()
+            .map(|&(t, s)| {
+                self.leaves[t as usize].len() as u64 * self.leaves[s as usize].len() as u64
+            })
+            .sum()
+    }
+
+    /// Total index-space area of the far rectangles.
+    pub fn far_area(&self) -> u64 {
+        self.far
+            .iter()
+            .map(|b| b.rows.len() as u64 * b.cols.len() as u64)
+            .sum()
+    }
+}
+
+/// η-admissibility of a node pair (see module docs).  A node is never
+/// admissible with itself (zero gap).
+pub fn admissible(tree: &BoxTree, a: u32, b: u32, eta: f32) -> bool {
+    if a == b {
+        return false;
+    }
+    let na = &tree.nodes[a as usize];
+    let nb = &tree.nodes[b as usize];
+    let sd = (tree.d as f32).sqrt();
+    let ra = na.half * sd;
+    let rb = nb.half * sd;
+    let mut dist2 = 0.0f32;
+    for (p, q) in na.center.iter().zip(&nb.center) {
+        let t = p - q;
+        dist2 += t * t;
+    }
+    let gap = dist2.sqrt() - ra - rb;
+    gap > 0.0 && 2.0 * ra.min(rb) <= eta * gap
+}
+
+/// Build the admissibility partition over `tree`'s size cut at
+/// `block_cap` (0 = [`LEAF_POINTS`], matching `HierCsb::build_with_par`).
+///
+/// Traversal: descend node pairs from (root, root); an admissible pair is
+/// emitted far, a pair of cut members is emitted near, otherwise the side
+/// with the larger box splits into its children (each child partitions
+/// the parent span, so the emitted rectangles tile the index space by
+/// induction).  Fully sequential and a pure function of the tree — the
+/// partition is deterministic.
+pub fn partition(tree: &BoxTree, block_cap: usize, eta: f32) -> Partition {
+    assert!(eta > 0.0 && eta.is_finite(), "eta must be positive");
+    let block_cap = if block_cap == 0 { LEAF_POINTS } else { block_cap };
+    let n = tree.n();
+    let cut = tree.cut_by_size(block_cap);
+    let leaves: Vec<Span> = cut
+        .iter()
+        .map(|&id| Span {
+            lo: tree.nodes[id as usize].lo,
+            hi: tree.nodes[id as usize].hi,
+        })
+        .collect();
+    let mut ord = vec![u32::MAX; tree.nodes.len()];
+    for (o, &id) in cut.iter().enumerate() {
+        ord[id as usize] = o as u32;
+    }
+
+    let mut near: Vec<(u32, u32)> = Vec::new();
+    let mut far_pairs: Vec<(u32, u32)> = Vec::new();
+    if n > 0 {
+        descend(tree, 0, 0, eta, &ord, &mut near, &mut far_pairs);
+    }
+
+    // Split each far pair's row span into its covering cut leaves: the
+    // traversal never descends a side below cut membership, so a far
+    // node's span is a union of consecutive cut leaves.
+    let mut far: Vec<FarBlockSpec> = Vec::new();
+    for &(tn, sn) in &far_pairs {
+        let t = &tree.nodes[tn as usize];
+        let s = &tree.nodes[sn as usize];
+        let cols = Span { lo: s.lo, hi: s.hi };
+        let first = leaves.partition_point(|sp| sp.lo < t.lo);
+        debug_assert!(
+            first < leaves.len() && leaves[first].lo == t.lo,
+            "far pair row span does not start on a cut boundary"
+        );
+        let mut o = first;
+        let mut covered = t.lo;
+        while o < leaves.len() && leaves[o].hi <= t.hi {
+            far.push(FarBlockSpec {
+                tleaf: o as u32,
+                rows: leaves[o],
+                cols,
+            });
+            covered = leaves[o].hi;
+            o += 1;
+        }
+        debug_assert_eq!(covered, t.hi, "far pair row span not covered by cut leaves");
+    }
+
+    Partition {
+        n,
+        cut,
+        leaves,
+        near,
+        far,
+        eta,
+    }
+}
+
+fn descend(
+    tree: &BoxTree,
+    tn: u32,
+    sn: u32,
+    eta: f32,
+    ord: &[u32],
+    near: &mut Vec<(u32, u32)>,
+    far: &mut Vec<(u32, u32)>,
+) {
+    if admissible(tree, tn, sn, eta) {
+        far.push((tn, sn));
+        return;
+    }
+    let t_term = ord[tn as usize] != u32::MAX;
+    let s_term = ord[sn as usize] != u32::MAX;
+    match (t_term, s_term) {
+        (true, true) => near.push((ord[tn as usize], ord[sn as usize])),
+        (false, true) => {
+            for &c in &tree.nodes[tn as usize].children {
+                descend(tree, c, sn, eta, ord, near, far);
+            }
+        }
+        (true, false) => {
+            for &c in &tree.nodes[sn as usize].children {
+                descend(tree, tn, c, eta, ord, near, far);
+            }
+        }
+        (false, false) => {
+            // Split the bigger box (ties split the target) so the pair
+            // shrinks toward comparable scales — the classic H-matrix
+            // descent that keeps admissible blocks squarish.
+            if tree.nodes[tn as usize].half >= tree.nodes[sn as usize].half {
+                for &c in &tree.nodes[tn as usize].children {
+                    descend(tree, c, sn, eta, ord, near, far);
+                }
+            } else {
+                for &c in &tree.nodes[sn as usize].children {
+                    descend(tree, tn, c, eta, ord, near, far);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+
+    #[test]
+    fn partition_tiles_small_instance() {
+        let ds = SynthSpec::blobs(300, 3, 4, 7).generate();
+        let tree = BoxTree::build(&ds, 8, 24);
+        let part = partition(&tree, 32, 1.0);
+        assert_eq!(part.n, 300);
+        let mut cover = vec![0u8; 300 * 300];
+        for &(tl, sl) in &part.near {
+            let (r, c) = (part.leaves[tl as usize], part.leaves[sl as usize]);
+            for i in r.lo..r.hi {
+                for j in c.lo..c.hi {
+                    cover[i as usize * 300 + j as usize] += 1;
+                }
+            }
+        }
+        for b in &part.far {
+            assert_eq!(b.rows, part.leaves[b.tleaf as usize]);
+            for i in b.rows.lo..b.rows.hi {
+                for j in b.cols.lo..b.cols.hi {
+                    cover[i as usize * 300 + j as usize] += 1;
+                }
+            }
+        }
+        assert!(cover.iter().all(|&c| c == 1), "partition must tile exactly once");
+        assert_eq!(part.near_area() + part.far_area(), 300 * 300);
+    }
+
+    #[test]
+    fn diagonal_pairs_are_near() {
+        let ds = SynthSpec::blobs(200, 2, 3, 5).generate();
+        let tree = BoxTree::build(&ds, 8, 24);
+        let part = partition(&tree, 16, 1.0);
+        for tl in 0..part.leaves.len() as u32 {
+            assert!(
+                part.near.contains(&(tl, tl)),
+                "diagonal block {tl} must be near (a box is never admissible with itself)"
+            );
+        }
+    }
+
+    #[test]
+    fn clustered_data_produces_far_field() {
+        // Well-separated blobs: cross-cluster rectangles must be admissible.
+        let ds = SynthSpec::blobs(600, 3, 4, 11).generate();
+        let tree = BoxTree::build(&ds, 8, 24);
+        let part = partition(&tree, 32, 1.0);
+        assert!(!part.far.is_empty(), "separated clusters must admit far blocks");
+        assert!(part.far_area() > 0);
+        // far blocks never sit on the diagonal
+        for b in &part.far {
+            let disjoint = b.rows.hi <= b.cols.lo || b.cols.hi <= b.rows.lo;
+            assert!(disjoint, "far block overlaps the diagonal: {b:?}");
+        }
+    }
+
+    #[test]
+    fn eta_monotonicity() {
+        // Larger η admits more (or equally many) far entries.
+        let ds = SynthSpec::blobs(400, 3, 4, 3).generate();
+        let tree = BoxTree::build(&ds, 8, 24);
+        let a_small = partition(&tree, 32, 0.25).far_area();
+        let a_big = partition(&tree, 32, 2.0).far_area();
+        assert!(a_big >= a_small, "eta=2 area {a_big} < eta=0.25 area {a_small}");
+    }
+
+    #[test]
+    fn admissible_is_symmetric_and_irreflexive() {
+        let ds = SynthSpec::blobs(300, 3, 4, 9).generate();
+        let tree = BoxTree::build(&ds, 8, 24);
+        for a in 0..tree.nodes.len() as u32 {
+            assert!(!admissible(&tree, a, a, 1.0));
+        }
+        for a in (0..tree.nodes.len() as u32).step_by(3) {
+            for b in (0..tree.nodes.len() as u32).step_by(5) {
+                assert_eq!(
+                    admissible(&tree, a, b, 1.0),
+                    admissible(&tree, b, a, 1.0),
+                    "admissibility must be symmetric ({a},{b})"
+                );
+            }
+        }
+    }
+}

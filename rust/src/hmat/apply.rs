@@ -1,0 +1,321 @@
+//! Far-field apply: `Y += Σ_blocks U·(Vᵀ·X)` under target-leaf ownership.
+//!
+//! Every far block's rows are exactly one target cut leaf
+//! (`hmat::admissible` splits on emission), so the apply reuses the near
+//! side's parallel discipline verbatim: one task per non-empty target
+//! leaf owns all writes to that leaf's output rows, per-leaf block order
+//! is fixed, and therefore the result is **bit-identical across thread
+//! counts** within a kernel dispatch.  Both GEMMs of a low-rank block —
+//! the `rank x cols` projection `Z = Vᵀ·X` and the `rows x rank`
+//! expansion `Y += U·Z` — run through the same `csb::kernel` granules as
+//! the near blocks: the scalar reference on the row-major factors, or the
+//! AVX2 panel kernel on the packed panels (`hmat::store`).  `Z` lives in
+//! a per-worker aligned scratch slot, so steady-state applies allocate
+//! nothing once the high-water mark is reached.
+
+use crate::csb::kernel::{self, dense_gemm_acc, Dispatch};
+use crate::csb::panel::AlignedF32;
+use crate::hmat::store::{FarField, FarKind};
+use crate::par::pool::{SendPtr, ThreadPool};
+use std::sync::Mutex;
+
+/// Per-worker scratch slots for the `Vᵀ·X` intermediate (one per pool
+/// worker; worker `w` locks slot `w` only, so the locks are uncontended).
+pub fn worker_scratch(threads: usize) -> Vec<Mutex<AlignedF32>> {
+    (0..threads.max(1)).map(|_| Mutex::new(AlignedF32::default())).collect()
+}
+
+impl FarField {
+    /// `y += far · x` with `k` RHS columns (`x`: `cols x k`, `y`:
+    /// `rows x k`, row-major).  **Accumulates** — the caller runs the
+    /// near-field apply first (which overwrites `y`) and this adds the
+    /// far field on top.  `scratch` must hold at least `pool.threads`
+    /// slots ([`worker_scratch`]).
+    pub fn apply_acc(
+        &self,
+        x: &[f32],
+        k: usize,
+        y: &mut [f32],
+        pool: &ThreadPool,
+        dispatch: Dispatch,
+        scratch: &[Mutex<AlignedF32>],
+    ) {
+        assert!(k >= 1, "apply needs at least one RHS column");
+        assert_eq!(x.len(), self.cols * k);
+        assert_eq!(y.len(), self.rows * k);
+        assert!(
+            scratch.len() >= pool.threads,
+            "need one scratch slot per pool worker"
+        );
+        if self.blocks.is_empty() {
+            return;
+        }
+        let yp = SendPtr(y.as_mut_ptr());
+        let ypr = &yp;
+        pool.for_each_chunked_worker(self.tasks.len(), 1, |w, ti| {
+            let tl = self.tasks[ti] as usize;
+            let sp = self.tgt_leaves[tl];
+            // SAFETY: target-leaf row spans are disjoint and each leaf is
+            // owned by exactly one task; the slice covers only that span.
+            let seg: &mut [f32] = unsafe {
+                std::slice::from_raw_parts_mut(ypr.0.add(sp.lo as usize * k), sp.len() * k)
+            };
+            let mut z = scratch[w].lock().unwrap();
+            for &t in &self.by_target[tl] {
+                let b = &self.blocks[t as usize];
+                debug_assert_eq!(b.rows, sp, "far block must span its target leaf");
+                let rn = b.rows.len();
+                let cn = b.cols.len();
+                let x_seg = &x[b.cols.lo as usize * k..b.cols.hi as usize * k];
+                match b.kind {
+                    FarKind::LowRank {
+                        u_off,
+                        vt_off,
+                        u_poff,
+                        vt_poff,
+                    } => {
+                        let r = b.rank as usize;
+                        if r == 0 {
+                            continue; // numerically zero block
+                        }
+                        let zb = z.reset_zeroed(r * k);
+                        far_gemm(
+                            dispatch,
+                            &self.factors[vt_off as usize..vt_off as usize + r * cn],
+                            self.panel(vt_poff, r, cn),
+                            r,
+                            cn,
+                            x_seg,
+                            k,
+                            zb,
+                        );
+                        far_gemm(
+                            dispatch,
+                            &self.factors[u_off as usize..u_off as usize + rn * r],
+                            self.panel(u_poff, rn, r),
+                            rn,
+                            r,
+                            zb,
+                            k,
+                            seg,
+                        );
+                    }
+                    FarKind::Dense { off, poff } => {
+                        far_gemm(
+                            dispatch,
+                            &self.factors[off as usize..off as usize + rn * cn],
+                            self.panel(poff, rn, cn),
+                            rn,
+                            cn,
+                            x_seg,
+                            k,
+                            seg,
+                        );
+                    }
+                }
+            }
+        });
+    }
+
+    #[inline]
+    fn panel(&self, poff: u32, nr: usize, nc: usize) -> &[f32] {
+        let off = poff as usize;
+        &self.panels.as_slice()[off..off + crate::csb::panel::panel_len(nr, nc)]
+    }
+}
+
+/// One dispatched dense GEMM `y += d · x` over a far factor: the scalar
+/// path consumes the row-major values, the AVX2 path the packed panel.
+/// Same CPU re-verification guard as `HierCsb::block_matmul_seg_avx2` —
+/// a hand-built `Dispatch::Avx2` can never reach the `#[target_feature]`
+/// kernel on an unsupported CPU.
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::too_many_arguments)]
+fn far_gemm(
+    dispatch: Dispatch,
+    d: &[f32],
+    panel: &[f32],
+    rn: usize,
+    cn: usize,
+    x: &[f32],
+    k: usize,
+    y: &mut [f32],
+) {
+    if dispatch == Dispatch::Avx2 && kernel::detect() == Dispatch::Avx2 {
+        // SAFETY: detect() confirmed AVX2+FMA.
+        unsafe { kernel::avx2::panel_gemm_acc(panel, rn, cn, x, k, y) };
+        return;
+    }
+    dense_gemm_acc(d, rn, cn, x, k, y);
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+#[allow(clippy::too_many_arguments)]
+fn far_gemm(
+    _dispatch: Dispatch,
+    d: &[f32],
+    _panel: &[f32],
+    rn: usize,
+    cn: usize,
+    x: &[f32],
+    k: usize,
+    y: &mut [f32],
+) {
+    dense_gemm_acc(d, rn, cn, x, k, y);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+    use crate::hmat::aca::GaussGen;
+    use crate::hmat::admissible::partition;
+    use crate::tree::boxtree::BoxTree;
+    use crate::util::rng::Rng;
+
+    fn setup(n: usize, tol: f32) -> (Vec<f32>, crate::hmat::admissible::Partition, FarField) {
+        let ds = SynthSpec::blobs(n, 3, 4, 13).generate();
+        let tree = BoxTree::build(&ds, 8, 24);
+        let coords = ds.permuted(&tree.perm).raw().to_vec();
+        let part = partition(&tree, 32, 1.0);
+        let far = FarField::build(&part, &coords, 3, 0.6, tol, 2);
+        (coords, part, far)
+    }
+
+    /// f64 oracle of the far field alone: sum the exact Gaussian over the
+    /// partition's far rectangles.
+    fn far_oracle(
+        coords: &[f32],
+        part: &crate::hmat::admissible::Partition,
+        x: &[f32],
+    ) -> Vec<f64> {
+        let gen = GaussGen {
+            coords,
+            d: 3,
+            inv_h2: 0.6,
+        };
+        let mut y = vec![0.0f64; part.n];
+        for fb in &part.far {
+            for i in fb.rows.lo..fb.rows.hi {
+                let mut acc = 0.0f64;
+                for j in fb.cols.lo..fb.cols.hi {
+                    acc += gen.entry_f64(i as usize, j as usize) * x[j as usize] as f64;
+                }
+                y[i as usize] += acc;
+            }
+        }
+        y
+    }
+
+    #[test]
+    fn far_apply_matches_f64_oracle() {
+        let tol = 1e-3f32;
+        let (coords, part, far) = setup(700, tol);
+        assert!(!far.is_empty(), "test needs far blocks");
+        let mut rng = Rng::new(7);
+        let x: Vec<f32> = (0..700).map(|_| rng.f32() - 0.5).collect();
+        let want = far_oracle(&coords, &part, &x);
+        let pool = ThreadPool::new(2);
+        let scratch = worker_scratch(pool.threads);
+        let mut y = vec![0.0f32; 700];
+        far.apply_acc(&x, 1, &mut y, &pool, Dispatch::Scalar, &scratch);
+        let norm: f64 = want.iter().map(|w| w * w).sum::<f64>().sqrt();
+        let err: f64 = y
+            .iter()
+            .zip(&want)
+            .map(|(&g, &w)| (g as f64 - w) * (g as f64 - w))
+            .sum::<f64>()
+            .sqrt();
+        assert!(
+            err <= 10.0 * tol as f64 * norm + 1e-12,
+            "far apply err {err} vs norm {norm} ({})",
+            far.describe()
+        );
+    }
+
+    #[test]
+    fn far_apply_accumulates_and_is_thread_invariant() {
+        let (_, _, far) = setup(600, 1e-3);
+        let mut rng = Rng::new(11);
+        let x: Vec<f32> = (0..600).map(|_| rng.f32()).collect();
+        let base: Vec<f32> = (0..600).map(|_| rng.f32()).collect();
+        let mut reference: Vec<f32> = Vec::new();
+        for threads in [1usize, 2, 8] {
+            let pool = ThreadPool::new(threads);
+            let scratch = worker_scratch(pool.threads);
+            let mut y = base.clone();
+            far.apply_acc(&x, 1, &mut y, &pool, Dispatch::Scalar, &scratch);
+            // accumulation: y - base is the far product, base survives
+            assert!(y.iter().zip(&base).any(|(a, b)| a != b), "apply was a no-op");
+            if reference.is_empty() {
+                reference = y;
+            } else {
+                assert!(
+                    y.iter().zip(&reference).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "thread-count bit-identity violated at threads={threads}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn multi_rhs_columns_bitexact_with_single_rhs() {
+        // Same chain-per-column argument as HierCsb::block_matmul: every
+        // spmm column must reproduce the k=1 apply bit-for-bit (scalar).
+        let (_, _, far) = setup(500, 1e-3);
+        let n = 500;
+        let mut rng = Rng::new(23);
+        let k = 5;
+        let x: Vec<f32> = (0..n * k).map(|_| rng.f32() - 0.5).collect();
+        let pool = ThreadPool::new(2);
+        let scratch = worker_scratch(pool.threads);
+        let mut y = vec![0.0f32; n * k];
+        far.apply_acc(&x, k, &mut y, &pool, Dispatch::Scalar, &scratch);
+        for j in 0..k {
+            let xj: Vec<f32> = (0..n).map(|i| x[i * k + j]).collect();
+            let mut yj = vec![0.0f32; n];
+            far.apply_acc(&xj, 1, &mut yj, &pool, Dispatch::Scalar, &scratch);
+            for i in 0..n {
+                assert_eq!(
+                    y[i * k + j].to_bits(),
+                    yj[i].to_bits(),
+                    "col {j} row {i} differs from k=1"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dispatched_apply_matches_scalar_within_tolerance() {
+        let (_, _, far) = setup(500, 1e-3);
+        let n = 500;
+        let mut rng = Rng::new(29);
+        for k in [1usize, 3, 8] {
+            let x: Vec<f32> = (0..n * k).map(|_| rng.f32() - 0.5).collect();
+            let pool = ThreadPool::new(2);
+            let scratch = worker_scratch(pool.threads);
+            let mut y_ref = vec![0.0f32; n * k];
+            far.apply_acc(&x, k, &mut y_ref, &pool, Dispatch::Scalar, &scratch);
+            let (d, _) = crate::csb::kernel::KernelKind::Auto.resolve();
+            let mut y = vec![0.0f32; n * k];
+            far.apply_acc(&x, k, &mut y, &pool, d, &scratch);
+            for (g, w) in y.iter().zip(&y_ref) {
+                assert!((g - w).abs() < 1e-5 * (1.0 + w.abs()), "k={k}: {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_far_field_is_a_noop() {
+        let ds = SynthSpec::blobs(200, 2, 3, 3).generate();
+        let tree = BoxTree::build(&ds, 8, 24);
+        let part = partition(&tree, 32, 1.0);
+        let far = FarField::empty(&part, 1e-3);
+        let pool = ThreadPool::new(2);
+        let scratch = worker_scratch(pool.threads);
+        let x = vec![1.0f32; 200];
+        let mut y = vec![2.5f32; 200];
+        far.apply_acc(&x, 1, &mut y, &pool, Dispatch::Scalar, &scratch);
+        assert!(y.iter().all(|&v| v == 2.5));
+    }
+}

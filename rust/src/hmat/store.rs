@@ -1,0 +1,479 @@
+//! Far-field factor storage: flat arenas + packed panels.
+//!
+//! All ACA factors live in **one** f32 arena (`factors`) addressed by
+//! exclusive-scan offsets, and every dense operand additionally gets a
+//! tile-major, 32-byte-aligned panel copy (reusing [`crate::csb::panel`])
+//! so the far GEMMs ride the same AVX2 path as the near blocks.  The
+//! build follows the `HierCsb::build_with_par` discipline:
+//!
+//! 1. **factorize** — `aca_gauss` per far block through the pool's
+//!    order-preserving `map` (each factorization is sequential and a pure
+//!    function of its block, so the result is independent of the thread
+//!    count);
+//! 2. **scan** — serial exclusive scan of factor / panel footprints into
+//!    per-block offsets;
+//! 3. **fill** — parallel copy + panel pack into the two arenas, every
+//!    region owned by exactly one block.
+//!
+//! The arenas are therefore **bit-identical across thread counts** — the
+//! same contract as the near-field build, asserted by
+//! `benches/farfield.rs` before anything is recorded.
+
+use crate::csb::hier::Span;
+use crate::csb::panel::{pack_panel, panel_len, AlignedF32};
+use crate::hmat::aca::{aca_gauss, AcaFactor, GaussGen};
+use crate::hmat::admissible::Partition;
+use crate::par::pool::{SendPtr, ThreadPool};
+
+/// Payload locator of one far block inside the [`FarField`] arenas.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FarKind {
+    /// `U` row-major `rows x rank` at `factors[u_off..]`, `Vᵀ` row-major
+    /// `rank x cols` at `factors[vt_off..]`; `u_poff`/`vt_poff` locate the
+    /// packed panels.
+    LowRank {
+        u_off: u32,
+        vt_off: u32,
+        u_poff: u32,
+        vt_poff: u32,
+    },
+    /// Dense fallback values, row-major at `factors[off..]`, panel at
+    /// `panels[poff..]`.
+    Dense { off: u32, poff: u32 },
+}
+
+/// One compressed far block (rows = exactly one target cut leaf).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FarBlock {
+    /// Owning target-leaf ordinal (same cut as the near `HierCsb`).
+    pub tleaf: u32,
+    pub rows: Span,
+    pub cols: Span,
+    /// Factorization rank (0 for numerically zero blocks; unused for the
+    /// dense fallback).
+    pub rank: u32,
+    pub kind: FarKind,
+}
+
+impl FarBlock {
+    pub fn area(&self) -> u64 {
+        self.rows.len() as u64 * self.cols.len() as u64
+    }
+
+    pub fn is_dense(&self) -> bool {
+        matches!(self.kind, FarKind::Dense { .. })
+    }
+}
+
+/// The compressed far field of a full-kernel operator.
+#[derive(Clone, Debug)]
+pub struct FarField {
+    pub rows: usize,
+    pub cols: usize,
+    /// Target-leaf row blocking (identical to the near `HierCsb`'s
+    /// `tgt_leaves` — both derive from the same size cut).
+    pub tgt_leaves: Vec<Span>,
+    /// Far blocks in partition (traversal) order.
+    pub blocks: Vec<FarBlock>,
+    /// Per target leaf: indices into `blocks`.
+    pub by_target: Vec<Vec<u32>>,
+    /// Non-empty target-leaf ordinals (the apply task list), heaviest
+    /// first by compressed flops so the dynamic claim schedules long
+    /// poles early.
+    pub tasks: Vec<u32>,
+    /// Row-major factor arena (U / Vᵀ / dense regions, scan-ordered).
+    pub factors: Vec<f32>,
+    /// Tile-major 32-byte-aligned panel copies of every factor region.
+    pub panels: AlignedF32,
+    /// Admissibility parameter and ACA tolerance the field was built with.
+    pub eta: f32,
+    pub tol: f32,
+}
+
+impl FarField {
+    /// Compress `part`'s far blocks over tree-ordered `coords`
+    /// (row-major `n x d`) with Gaussian bandwidth `inv_h2 = 1/h²`.
+    /// `threads = 0` means the machine default; the result is
+    /// bit-identical across thread counts (module docs).
+    pub fn build(
+        part: &Partition,
+        coords: &[f32],
+        d: usize,
+        inv_h2: f32,
+        tol: f32,
+        threads: usize,
+    ) -> FarField {
+        assert_eq!(coords.len(), part.n * d);
+        let gen = GaussGen { coords, d, inv_h2 };
+        let pool = ThreadPool::new_or_default(threads);
+
+        // Pass 1 — factorize (order-preserving parallel map).
+        let factored: Vec<AcaFactor> =
+            pool.map(&part.far, |fb| aca_gauss(&gen, fb.rows, fb.cols, tol));
+
+        // Pass 2 — exclusive scan of arena footprints.
+        let mut blocks: Vec<FarBlock> = Vec::with_capacity(part.far.len());
+        let mut flen = 0usize;
+        let mut plen = 0usize;
+        for (fb, f) in part.far.iter().zip(&factored) {
+            let rn = fb.rows.len();
+            let cn = fb.cols.len();
+            let (rank, kind) = match f {
+                AcaFactor::LowRank { rank, .. } => {
+                    let r = *rank;
+                    let u_off = flen as u32;
+                    flen += rn * r;
+                    let vt_off = flen as u32;
+                    flen += r * cn;
+                    let u_poff = plen as u32;
+                    plen += panel_len(rn, r);
+                    let vt_poff = plen as u32;
+                    plen += panel_len(r, cn);
+                    (
+                        r as u32,
+                        FarKind::LowRank {
+                            u_off,
+                            vt_off,
+                            u_poff,
+                            vt_poff,
+                        },
+                    )
+                }
+                AcaFactor::Dense(_) => {
+                    let off = flen as u32;
+                    flen += rn * cn;
+                    let poff = plen as u32;
+                    plen += panel_len(rn, cn);
+                    (0, FarKind::Dense { off, poff })
+                }
+            };
+            blocks.push(FarBlock {
+                tleaf: fb.tleaf,
+                rows: fb.rows,
+                cols: fb.cols,
+                rank,
+                kind,
+            });
+        }
+        assert!(flen <= u32::MAX as usize, "far factor arena exceeds u32 offsets");
+        assert!(plen <= u32::MAX as usize, "far panel arena exceeds u32 offsets");
+
+        // Pass 3 — parallel fill: copy factors + pack panels into the
+        // per-block regions (disjoint by the scan).
+        let mut factors = vec![0.0f32; flen];
+        let mut panels = AlignedF32::zeroed(plen);
+        {
+            let fp = SendPtr(factors.as_mut_ptr());
+            let pp = SendPtr(panels.as_mut_slice().as_mut_ptr());
+            let (fpr, ppr) = (&fp, &pp);
+            let blocks_ref = &blocks;
+            let factored_ref = &factored;
+            pool.for_each_chunked(blocks_ref.len(), 4, |t| {
+                let b = &blocks_ref[t];
+                let rn = b.rows.len();
+                let cn = b.cols.len();
+                // SAFETY: each block's factor/panel regions are disjoint
+                // by the exclusive scan; this task touches only block t's.
+                let copy_and_pack = |src: &[f32], nr: usize, nc: usize, off: u32, poff: u32| {
+                    debug_assert_eq!(src.len(), nr * nc);
+                    let dst: &mut [f32] = unsafe {
+                        std::slice::from_raw_parts_mut(fpr.0.add(off as usize), nr * nc)
+                    };
+                    dst.copy_from_slice(src);
+                    let pl = panel_len(nr, nc);
+                    let pdst: &mut [f32] = unsafe {
+                        std::slice::from_raw_parts_mut(ppr.0.add(poff as usize), pl)
+                    };
+                    pack_panel(src, nr, nc, pdst);
+                };
+                match (&factored_ref[t], b.kind) {
+                    (
+                        AcaFactor::LowRank { u, vt, rank },
+                        FarKind::LowRank {
+                            u_off,
+                            vt_off,
+                            u_poff,
+                            vt_poff,
+                        },
+                    ) => {
+                        copy_and_pack(u, rn, *rank, u_off, u_poff);
+                        copy_and_pack(vt, *rank, cn, vt_off, vt_poff);
+                    }
+                    (AcaFactor::Dense(v), FarKind::Dense { off, poff }) => {
+                        copy_and_pack(v, rn, cn, off, poff);
+                    }
+                    _ => unreachable!("scan and factorization disagree on block kind"),
+                }
+            });
+        }
+
+        let nt = part.leaves.len();
+        let mut by_target: Vec<Vec<u32>> = vec![Vec::new(); nt];
+        for (t, b) in blocks.iter().enumerate() {
+            by_target[b.tleaf as usize].push(t as u32);
+        }
+        // Heaviest-first task order by compressed flops (ties by ordinal),
+        // mirroring `ApplySchedule`.
+        let flops: Vec<u64> = by_target
+            .iter()
+            .map(|list| {
+                list.iter()
+                    .map(|&t| {
+                        let b = &blocks[t as usize];
+                        match b.kind {
+                            FarKind::LowRank { .. } => {
+                                b.rank as u64 * (b.rows.len() + b.cols.len()) as u64
+                            }
+                            FarKind::Dense { .. } => b.area(),
+                        }
+                    })
+                    .sum()
+            })
+            .collect();
+        let mut tasks: Vec<u32> = (0..nt as u32)
+            .filter(|&tl| !by_target[tl as usize].is_empty())
+            .collect();
+        tasks.sort_by_key(|&tl| (std::cmp::Reverse(flops[tl as usize]), tl));
+
+        FarField {
+            rows: part.n,
+            cols: part.n,
+            tgt_leaves: part.leaves.clone(),
+            blocks,
+            by_target,
+            tasks,
+            factors,
+            panels,
+            eta: part.eta,
+            tol,
+        }
+    }
+
+    /// An empty far field over the same leaf blocking (`--far off`: the
+    /// operator degrades to the near field alone).
+    pub fn empty(part: &Partition, tol: f32) -> FarField {
+        FarField {
+            rows: part.n,
+            cols: part.n,
+            tgt_leaves: part.leaves.clone(),
+            blocks: Vec::new(),
+            by_target: vec![Vec::new(); part.leaves.len()],
+            tasks: Vec::new(),
+            factors: Vec::new(),
+            panels: AlignedF32::zeroed(0),
+            eta: part.eta,
+            tol,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.blocks.is_empty()
+    }
+
+    /// Index-space area covered by far blocks.
+    pub fn coverage(&self) -> u64 {
+        self.blocks.iter().map(|b| b.area()).sum()
+    }
+
+    /// Compressed far-field storage in bytes (factor arena; the panel
+    /// mirror doubles it — reported separately because the panel copy is
+    /// an optional SIMD amenity, not the representation).
+    pub fn far_bytes(&self) -> u64 {
+        self.factors.len() as u64 * 4
+    }
+
+    /// What the same far blocks would cost stored dense.
+    pub fn dense_far_bytes(&self) -> u64 {
+        self.coverage() * 4
+    }
+
+    pub fn low_rank_blocks(&self) -> usize {
+        self.blocks.iter().filter(|b| !b.is_dense()).count()
+    }
+
+    pub fn dense_fallback_blocks(&self) -> usize {
+        self.blocks.iter().filter(|b| b.is_dense()).count()
+    }
+
+    pub fn max_rank(&self) -> u32 {
+        self.blocks.iter().map(|b| b.rank).max().unwrap_or(0)
+    }
+
+    /// Mean rank over low-rank blocks.
+    pub fn mean_rank(&self) -> f64 {
+        let lr = self.low_rank_blocks();
+        if lr == 0 {
+            return 0.0;
+        }
+        let sum: u64 = self.blocks.iter().filter(|b| !b.is_dense()).map(|b| b.rank as u64).sum();
+        sum as f64 / lr as f64
+    }
+
+    /// (rank, block count) pairs over low-rank blocks, ascending rank —
+    /// the rank histogram the farfield bench records.
+    pub fn rank_histogram(&self) -> Vec<(u32, u32)> {
+        let mut counts = std::collections::BTreeMap::new();
+        for b in self.blocks.iter().filter(|b| !b.is_dense()) {
+            *counts.entry(b.rank).or_insert(0u32) += 1;
+        }
+        counts.into_iter().collect()
+    }
+
+    /// Stats line for logs/benches.
+    pub fn describe(&self) -> String {
+        let dense = self.dense_far_bytes();
+        let ratio = if dense == 0 {
+            0.0
+        } else {
+            self.far_bytes() as f64 / dense as f64
+        };
+        format!(
+            "far_blocks={} lowrank={} dense_fallback={} mean_rank={:.1} max_rank={} \
+             bytes={} ({:.1}% of dense far field)",
+            self.blocks.len(),
+            self.low_rank_blocks(),
+            self.dense_fallback_blocks(),
+            self.mean_rank(),
+            self.max_rank(),
+            self.far_bytes(),
+            ratio * 100.0
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::csb::panel::PANEL_MR;
+    use crate::data::synth::SynthSpec;
+    use crate::hmat::admissible::partition;
+    use crate::tree::boxtree::BoxTree;
+
+    fn setup(n: usize) -> (Vec<f32>, Partition, FarField) {
+        let ds = SynthSpec::blobs(n, 3, 4, 21).generate();
+        let tree = BoxTree::build(&ds, 8, 24);
+        let coords = ds.permuted(&tree.perm).raw().to_vec();
+        let part = partition(&tree, 32, 1.0);
+        let far = FarField::build(&part, &coords, 3, 0.5, 1e-3, 2);
+        (coords, part, far)
+    }
+
+    #[test]
+    fn arenas_cover_every_block_disjointly() {
+        let (_, part, far) = setup(500);
+        assert_eq!(far.blocks.len(), part.far.len());
+        let mut regions: Vec<(usize, usize)> = Vec::new();
+        for b in &far.blocks {
+            let rn = b.rows.len();
+            let cn = b.cols.len();
+            match b.kind {
+                FarKind::LowRank { u_off, vt_off, .. } => {
+                    let r = b.rank as usize;
+                    regions.push((u_off as usize, rn * r));
+                    regions.push((vt_off as usize, r * cn));
+                }
+                FarKind::Dense { off, .. } => regions.push((off as usize, rn * cn)),
+            }
+        }
+        let total: usize = regions.iter().map(|&(_, l)| l).sum();
+        assert_eq!(total, far.factors.len(), "factor arena exactly tiled");
+        regions.sort_unstable();
+        let mut expect = 0usize;
+        for (off, len) in regions {
+            assert_eq!(off, expect, "gap or overlap in the factor arena");
+            expect = off + len;
+        }
+    }
+
+    #[test]
+    fn panels_mirror_factor_regions() {
+        let (_, _, far) = setup(400);
+        let panel = far.panels.as_slice();
+        let check = |src: &[f32], nr: usize, nc: usize, poff: usize| {
+            for r in 0..nr {
+                for c in 0..nc {
+                    let idx = (r / PANEL_MR) * nc * PANEL_MR + c * PANEL_MR + (r % PANEL_MR);
+                    assert_eq!(panel[poff + idx].to_bits(), src[r * nc + c].to_bits());
+                }
+            }
+        };
+        for b in &far.blocks {
+            let rn = b.rows.len();
+            let cn = b.cols.len();
+            match b.kind {
+                FarKind::LowRank {
+                    u_off,
+                    vt_off,
+                    u_poff,
+                    vt_poff,
+                } => {
+                    let (uo, vo) = (u_off as usize, vt_off as usize);
+                    let r = b.rank as usize;
+                    check(&far.factors[uo..uo + rn * r], rn, r, u_poff as usize);
+                    check(&far.factors[vo..vo + r * cn], r, cn, vt_poff as usize);
+                }
+                FarKind::Dense { off, poff } => {
+                    let o = off as usize;
+                    check(&far.factors[o..o + rn * cn], rn, cn, poff as usize);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn build_bitidentical_across_thread_counts() {
+        let ds = SynthSpec::blobs(600, 3, 5, 33).generate();
+        let tree = BoxTree::build(&ds, 8, 24);
+        let coords = ds.permuted(&tree.perm).raw().to_vec();
+        let part = partition(&tree, 32, 1.0);
+        let ref1 = FarField::build(&part, &coords, 3, 0.7, 1e-3, 1);
+        for threads in [2usize, 8] {
+            let f = FarField::build(&part, &coords, 3, 0.7, 1e-3, threads);
+            assert_eq!(f.blocks, ref1.blocks, "threads={threads}");
+            assert_eq!(f.factors.len(), ref1.factors.len());
+            assert!(
+                f.factors.iter().zip(&ref1.factors).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "factor arena differs at threads={threads}"
+            );
+            assert!(
+                f.panels
+                    .as_slice()
+                    .iter()
+                    .zip(ref1.panels.as_slice())
+                    .all(|(a, b)| a.to_bits() == b.to_bits()),
+                "panel arena differs at threads={threads}"
+            );
+            assert_eq!(f.tasks, ref1.tasks);
+        }
+    }
+
+    #[test]
+    fn compression_beats_dense_on_clustered_data() {
+        // Production-ish block size: small blocks barely compress
+        // ((rn+cn)·r vs rn·cn needs rn,cn >> r), so test at cap 128.
+        let ds = SynthSpec::blobs(800, 3, 4, 21).generate();
+        let tree = BoxTree::build(&ds, 8, 24);
+        let coords = ds.permuted(&tree.perm).raw().to_vec();
+        let part = partition(&tree, 128, 1.0);
+        let far = FarField::build(&part, &coords, 3, 0.5, 1e-3, 2);
+        assert!(!far.is_empty());
+        assert!(
+            far.far_bytes() * 2 < far.dense_far_bytes(),
+            "expected <1/2 of dense far bytes: {}",
+            far.describe()
+        );
+        let hist = far.rank_histogram();
+        let total: u32 = hist.iter().map(|&(_, c)| c).sum();
+        assert_eq!(total as usize, far.low_rank_blocks());
+    }
+
+    #[test]
+    fn tasks_cover_exactly_nonempty_leaves() {
+        let (_, _, far) = setup(500);
+        let nonempty: usize = far.by_target.iter().filter(|l| !l.is_empty()).count();
+        assert_eq!(far.tasks.len(), nonempty);
+        for &tl in &far.tasks {
+            assert!(!far.by_target[tl as usize].is_empty());
+        }
+    }
+}

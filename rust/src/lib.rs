@@ -38,6 +38,15 @@
 //! The backend threads uniformly through [`order::Pipeline::run_points`],
 //! both applications, the `nni` CLI (`--knn exact|ann`), and the
 //! `ann_vs_exact` bench.
+//!
+//! ## Full-kernel mode
+//!
+//! [`hmat`] lifts the kNN truncation: an η-admissibility partition plus
+//! per-block ACA compression turns the discarded far field into low-rank
+//! factors, and [`hmat::FullKernelEngine`] fuses them with the near-field
+//! [`interact::engine::Engine`] into one operator serving the **full**
+//! Gaussian kernel matrix — the substrate of [`apps::krr`] (kernel ridge
+//! regression) and the `krr` CLI subcommand.
 
 pub mod util;
 pub mod par;
@@ -51,6 +60,7 @@ pub mod profile;
 pub mod csb;
 pub mod spmv;
 pub mod interact;
+pub mod hmat;
 pub mod runtime;
 pub mod coordinator;
 pub mod apps;
@@ -62,6 +72,7 @@ pub mod prelude {
     pub use crate::csb::kernel::KernelKind;
     pub use crate::data::dataset::Dataset;
     pub use crate::data::synth::SynthSpec;
+    pub use crate::hmat::{FarFieldMode, FullKernelConfig, FullKernelEngine};
     pub use crate::knn::ann::{knn_graph_ann, AnnParams};
     pub use crate::knn::exact::knn_graph;
     pub use crate::knn::KnnBackend;

@@ -10,17 +10,21 @@
 //! * `spmv`      — time multi-level SpMV vs CSR baselines
 //! * `tsne`      — run t-SNE end to end (hybrid PJRT path optional)
 //! * `meanshift` — run mean shift, report modes
+//! * `krr`       — kernel ridge regression over the full-kernel operator
 //!
 //! The `knn`, `reorder`, `tsne`, and `meanshift` commands accept
 //! `--knn exact|ann` plus the `--ann-*` tuning knobs (see
 //! `knn::ann::AnnParams`); `gamma` and `spmv` always use the exact
-//! backend (their outputs are figure reproductions).
+//! backend (their outputs are figure reproductions).  `reorder`, `spmv`,
+//! and `krr` accept the far-field knobs (`--far off|aca`, `--tol`,
+//! `--eta`, `--bandwidth`) of the `hmat` full-kernel subsystem.
 
-use nni::apps::{meanshift, tsne};
+use nni::apps::{krr, meanshift, tsne};
 use nni::bench::Workload;
 use nni::csb::kernel::KernelKind;
 use nni::data::dataset::Dataset;
 use nni::data::synth::SynthSpec;
+use nni::hmat::{FarFieldMode, FullKernelConfig};
 use nni::knn::ann::recall::recall_at_k;
 use nni::knn::ann::AnnParams;
 use nni::knn::KnnBackend;
@@ -49,9 +53,10 @@ fn main() {
         "spmv" => cmd_spmv(argv),
         "tsne" => cmd_tsne(argv),
         "meanshift" => cmd_meanshift(argv),
+        "krr" => cmd_krr(argv),
         _ => {
             eprintln!(
-                "usage: nni <info|synth|knn|reorder|gamma|spmv|tsne|meanshift> [options]\n\
+                "usage: nni <info|synth|knn|reorder|gamma|spmv|tsne|meanshift|krr> [options]\n\
                  run `nni <cmd> --help` for per-command options"
             );
             std::process::exit(if cmd == "help" { 0 } else { 2 });
@@ -114,6 +119,39 @@ fn kernel_line(kind: KernelKind) -> String {
         ),
         None => format!("kernel: requested={} dispatch={}", kind.label(), dispatch.label()),
     }
+}
+
+/// Shared far-field option block (`hmat` full-kernel subsystem).  The
+/// default differs per command: `krr` is *about* the full kernel (aca),
+/// the figure-reproduction commands opt in (off).
+fn far_opts(a: Args, default: &'static str) -> Args {
+    a.opt("far", default, "far field: off|aca (aca = full-kernel mode)")
+        .opt_f64("tol", 1e-3, "ACA relative tolerance per far block")
+        .opt_f64("eta", 1.0, "admissibility parameter (bigger = more far field)")
+        .opt_f64("bandwidth", 0.0, "gaussian bandwidth h (0 = median-distance auto)")
+}
+
+/// Resolve the `--far` choice (usage error on bad values).
+fn far_mode(a: &Args) -> FarFieldMode {
+    FarFieldMode::parse(&a.get("far")).unwrap_or_else(die)
+}
+
+/// Resolve the full-kernel config from the `far_opts` block (`None` when
+/// `--far off`): bandwidth auto-resolves via the median heuristic.
+fn full_kernel_cfg(a: &Args, ds: &Dataset, block_cap: usize) -> Option<(FullKernelConfig, f64)> {
+    if far_mode(a) == FarFieldMode::Off {
+        return None;
+    }
+    let h = if a.get_f64("bandwidth") > 0.0 {
+        a.get_f64("bandwidth")
+    } else {
+        krr::suggest_bandwidth(ds, a.get_u64("seed"))
+    };
+    let cfg = FullKernelConfig::new((1.0 / (h * h)) as f32)
+        .with_eta(a.get_f64("eta") as f32)
+        .with_tol(a.get_f64("tol") as f32)
+        .with_block_cap(block_cap);
+    Some((cfg, h))
 }
 
 /// Resolve the backend selected by the `--knn`/`--ann-*` options.
@@ -238,7 +276,7 @@ fn cmd_knn(argv: Vec<String>) {
 }
 
 fn cmd_reorder(argv: Vec<String>) {
-    let a = kernel_opts(build_opts(knn_opts(
+    let opts = kernel_opts(build_opts(knn_opts(
         Args::new("ordering pipeline report")
             .opt("input", "", "dataset file (else synthesize)")
             .opt("workload", "sift", "sift|gist")
@@ -249,11 +287,12 @@ fn cmd_reorder(argv: Vec<String>) {
             .opt_usize_min("rhs", 1, 1, "multi-RHS width: >1 times batched spmm vs k scalar spmv")
             .opt_u64("seed", 42, "rng seed")
             .opt_usize("threads", 0, "0 = all cores"),
-    )))
-    .parse_from(argv)
-    .unwrap_or_else(die);
-    // validate the kernel choice up front — before the expensive kNN build
+    )));
+    let a = far_opts(opts, "off").parse_from(argv).unwrap_or_else(die);
+    // validate the kernel and far-mode choices up front — before the
+    // expensive kNN build
     let kernel = kernel_kind(&a);
+    let _ = far_mode(&a);
     let ds = load_or_synth(&a);
     let k = if a.get_usize("k") == 0 {
         workload(&a.get("workload")).k()
@@ -289,6 +328,12 @@ fn cmd_reorder(argv: Vec<String>) {
     if let Some(eng) = r.engine_with(a.get_usize("leaf-cap"), 0.6, build_threads, threads, kernel) {
         let csb = &eng.csb;
         println!("csb: {}", csb.describe());
+        let (covered, total) = csb.coverage();
+        println!(
+            "coverage: stored blocks span {covered} of {total} entries ({:.2}%); \
+             the rest is the dropped far field (--far aca compresses it)",
+            csb.covered_fraction() * 100.0
+        );
         println!("{}", kernel_line(kernel));
         let k = a.get_usize("rhs");
         if k > 1 {
@@ -316,6 +361,20 @@ fn cmd_reorder(argv: Vec<String>) {
             );
         }
     }
+    if let Some((cfg, h)) = full_kernel_cfg(&a, &ds, a.get_usize("leaf-cap")) {
+        let (fk, t_fk) =
+            timer::time_once(|| r.full_kernel_engine(&ds, &cfg, build_threads, threads, kernel));
+        match fk {
+            Some(fk) => {
+                println!("full-kernel (h={h:.4}): {}", fk.describe());
+                println!(
+                    "full-kernel build {t_fk:.2}s, stored {} bytes (near + far factors)",
+                    fk.stored_bytes()
+                );
+            }
+            None => println!("full-kernel: unavailable (ordering carries no tree)"),
+        }
+    }
 }
 
 fn cmd_gamma(argv: Vec<String>) {
@@ -339,19 +398,21 @@ fn cmd_gamma(argv: Vec<String>) {
 }
 
 fn cmd_spmv(argv: Vec<String>) {
-    let a = kernel_opts(build_opts(
+    let opts = kernel_opts(build_opts(
         Args::new("multi-level SpMV timing")
             .opt("workload", "sift", "sift|gist")
             .opt_usize_min("n", 8192, 1, "points")
             .opt_u64("seed", 42, "rng seed")
             .opt_usize("threads", 0, "0 = all cores")
             .opt_usize_min("leaf-cap", 2048, 1, "block capacity (SpMV sweet spot: ~64x nnz/row)")
+            .opt_usize_min("block-cap", 256, 1, "full-kernel tree-cut capacity (--far aca)")
             .opt_usize_min("rhs", 1, 1, "multi-RHS width: >1 also times batched spmm paths"),
-    ))
-    .parse_from(argv)
-    .unwrap_or_else(die);
-    // validate the kernel choice up front — before the expensive kNN build
+    ));
+    let a = far_opts(opts, "off").parse_from(argv).unwrap_or_else(die);
+    // validate the kernel and far-mode choices up front — before the
+    // expensive kNN build
     let kind = kernel_kind(&a);
+    let _ = far_mode(&a);
     let wl = workload(&a.get("workload"));
     let threads = if a.get_usize("threads") == 0 {
         nni::par::pool::default_threads()
@@ -408,6 +469,24 @@ fn cmd_spmv(argv: Vec<String>) {
             "engine spmm  : {:.3} ms ({:.2}x vs scalar-kernel spmm seq)",
             m_emm.robust_min_s * 1e3,
             m_mm.robust_min_s / m_emm.robust_min_s
+        );
+    }
+    // Full-kernel mode: the same spmv surface over the *untruncated*
+    // Gaussian matrix (near dense blocks + ACA far field).  Deliberately
+    // NOT --leaf-cap: the sparse-SpMV sweet spot (2048) would cut the
+    // tree so coarse that nearly everything lands in the near field.
+    if let Some((cfg, h)) = full_kernel_cfg(&a, &ds, a.get_usize("block-cap")) {
+        let (fk, t_fk) =
+            timer::time_once(|| r.full_kernel_engine(&ds, &cfg, build_threads, threads, kind));
+        let fk = fk.expect("dual-tree ordering carries a tree");
+        println!("full-kernel (h={h:.4}): {}", fk.describe());
+        let mut yf = vec![0.0f32; ds.n()];
+        let m_fk = timer::bench_default(|| fk.spmv(&x, &mut yf));
+        println!(
+            "full spmv    : {:.3} ms (build {t_fk:.2}s, {} stored bytes; dense would be {} bytes)",
+            m_fk.robust_min_s * 1e3,
+            fk.stored_bytes(),
+            (ds.n() as u64 * ds.n() as u64) * 4
         );
     }
 }
@@ -511,6 +590,62 @@ fn cmd_meanshift(argv: Vec<String>) {
         let count = res.assignment.iter().filter(|&&x| x == m).count();
         println!("mode {m}: {count} points @ {:?}", &c[..c.len().min(4)]);
     }
+}
+
+fn cmd_krr(argv: Vec<String>) {
+    let opts = kernel_opts(build_opts(
+        Args::new("kernel ridge regression over the compressed full-kernel operator")
+            .opt("input", "", "dataset file (else synthesize)")
+            .opt("workload", "sift", "sift|gist")
+            .opt_usize_min("n", 4096, 2, "points when synthesizing")
+            .opt_f64("lambda", 1.0, "ridge regularization")
+            .opt_usize_min("block-cap", 256, 1, "tree-cut block capacity")
+            .opt_usize_min("leaf-cap", 16, 1, "ordering-tree leaf capacity")
+            .opt_f64("cg-tol", 1e-6, "CG relative-residual stop")
+            .opt_usize_min("cg-iters", 500, 1, "CG iteration cap")
+            .opt_u64("seed", 42, "rng seed")
+            .opt_usize("threads", 0, "0 = all cores"),
+    ));
+    let a = far_opts(opts, "aca").parse_from(argv).unwrap_or_else(die);
+    let kernel = kernel_kind(&a);
+    let far = far_mode(&a);
+    let ds = load_or_synth(&a);
+    if ds.n() < 2 {
+        die::<()>("krr needs at least 2 points".into());
+    }
+    // Demo target: a smooth function of the leading principal coordinate
+    // (the regression problem KRR is meant to smooth).
+    let y = krr::synthetic_targets(&ds, a.get_u64("seed"));
+    let cfg = krr::KrrConfig {
+        bandwidth: a.get_f64("bandwidth"),
+        lambda: a.get_f64("lambda"),
+        far,
+        tol: a.get_f64("tol"),
+        eta: a.get_f64("eta"),
+        block_cap: a.get_usize("block-cap"),
+        leaf_cap: a.get_usize("leaf-cap"),
+        cg_tol: a.get_f64("cg-tol"),
+        cg_max_iters: a.get_usize("cg-iters"),
+        threads: a.get_usize("threads"),
+        build_threads: a.get_usize("build-threads"),
+        kernel,
+        seed: a.get_u64("seed"),
+    };
+    let (res, t) = timer::time_once(|| krr::run(&ds, &y, &cfg));
+    println!(
+        "krr n={} d={} far={} h={:.4} lambda={}",
+        ds.n(),
+        ds.d(),
+        far.label(),
+        res.bandwidth,
+        cfg.lambda
+    );
+    println!("engine: {}", res.summary);
+    println!("{}", kernel_line(kernel));
+    println!(
+        "cg: {} iterations, rel residual {:.3e}, train rmse {:.4}  ({t:.2}s total)",
+        res.iterations, res.rel_residual, res.train_rmse
+    );
 }
 
 fn die<T>(e: String) -> T {

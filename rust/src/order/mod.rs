@@ -17,6 +17,7 @@ use crate::csb::hier::HierCsb;
 use crate::csb::kernel::KernelKind;
 use crate::data::dataset::Dataset;
 use crate::embed::pca;
+use crate::hmat::{FullKernelConfig, FullKernelEngine};
 use crate::interact::engine::Engine;
 use crate::knn::KnnBackend;
 use crate::sparse::csr::Csr;
@@ -137,6 +138,33 @@ impl OrderResult {
             build_threads,
         );
         Some(Engine::with_kernel(csb, threads, kernel))
+    }
+
+    /// Build the **full-kernel** Gaussian operator over this ordering:
+    /// near field as dense `HierCsb` blocks, far field ACA-compressed
+    /// (`hmat`).  `ds` supplies the coordinates the Gaussian lives in
+    /// (original index order — typically the raw features, not the
+    /// ordering embedding); `None` when the ordering carries no tree.
+    pub fn full_kernel_engine(
+        &self,
+        ds: &Dataset,
+        cfg: &FullKernelConfig,
+        build_threads: usize,
+        threads: usize,
+        kernel: KernelKind,
+    ) -> Option<FullKernelEngine> {
+        let tree = self.tree.as_ref()?;
+        assert_eq!(ds.n(), self.perm.len(), "dataset must match the ordering");
+        let coords = ds.permuted(&self.perm);
+        Some(FullKernelEngine::build(
+            tree,
+            coords.raw(),
+            ds.d(),
+            cfg,
+            build_threads,
+            threads,
+            kernel,
+        ))
     }
 }
 
@@ -392,6 +420,20 @@ mod tests {
         assert_eq!(eng.kernel, KernelKind::Scalar);
         let sc = Pipeline::new(OrderingKind::Scattered).run(&ds, &a);
         assert!(sc.engine_with(32, 0.6, 2, 2, KernelKind::Auto).is_none());
+    }
+
+    #[test]
+    fn full_kernel_engine_follows_tree_availability() {
+        let (ds, a) = setup(300);
+        let cfg = crate::hmat::FullKernelConfig::new(0.5).with_block_cap(64);
+        let dt = Pipeline::dual_tree(3).run(&ds, &a);
+        let eng = dt
+            .full_kernel_engine(&ds, &cfg, 2, 2, KernelKind::Scalar)
+            .expect("dual-tree ordering carries a tree");
+        assert_eq!(eng.n(), 300);
+        assert_eq!(eng.dim, ds.d());
+        let sc = Pipeline::new(OrderingKind::Scattered).run(&ds, &a);
+        assert!(sc.full_kernel_engine(&ds, &cfg, 2, 2, KernelKind::Scalar).is_none());
     }
 
     #[test]

@@ -161,6 +161,48 @@ fn reorder_accepts_build_threads_knob() {
 }
 
 #[test]
+fn krr_converges_and_reports_engine() {
+    let out = nni()
+        .args([
+            "krr", "--n", "512", "--block-cap", "64", "--lambda", "1.0", "--tol", "1e-3",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("far=aca"), "{text}");
+    assert!(text.contains("far_blocks="), "{text}");
+    assert!(text.contains("cg:"), "{text}");
+    // --far off degrades to the truncated baseline
+    let out = nni()
+        .args(["krr", "--n", "256", "--block-cap", "64", "--far", "off"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("far=off"));
+    // bad far mode is a usage error
+    let out = nni().args(["krr", "--n", "64", "--far", "fmm"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("off|aca"));
+}
+
+#[test]
+fn reorder_reports_coverage_and_far_field() {
+    let out = nni()
+        .args([
+            "reorder", "--n", "400", "--k", "8", "--leaf-cap", "64", "--far", "aca",
+            "--tol", "1e-2",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("coverage: stored blocks span"), "{text}");
+    assert!(text.contains("full-kernel"), "{text}");
+    assert!(text.contains("far_blocks="), "{text}");
+}
+
+#[test]
 fn meanshift_finds_modes() {
     let out = nni()
         .args([

@@ -603,3 +603,134 @@ fn coordinator_plan_partitions_blocks() {
         Ok(())
     });
 }
+
+// ---- hmat: admissibility partition + ACA compression -------------------
+
+/// Skewed synthetic clusters: a few blobs with random per-axis anisotropy
+/// and offsets (the hmat properties must hold on ugly geometry, not just
+/// isotropic blobs).
+fn skewed_clusters(rng: &mut Rng, n: usize, d: usize) -> Dataset {
+    let k = 1 + rng.below(4);
+    let centers: Vec<Vec<f32>> = (0..k)
+        .map(|_| (0..d).map(|_| 8.0 * (rng.f32() - 0.5)).collect())
+        .collect();
+    let scales: Vec<Vec<f32>> = (0..k)
+        .map(|_| (0..d).map(|_| 0.02 + 1.2 * rng.f32()).collect())
+        .collect();
+    let mut xs = Vec::with_capacity(n * d);
+    for _ in 0..n {
+        let c = rng.below(k);
+        for a in 0..d {
+            xs.push(centers[c][a] + scales[c][a] * rng.normal() as f32);
+        }
+    }
+    Dataset::new(n, d, xs)
+}
+
+#[test]
+fn hmat_partition_tiles_index_space_exactly() {
+    // Acceptance property (a): admissible far blocks + near pairs cover
+    // every (i, j) exactly once, whatever the geometry, cut, or eta.
+    check("hmat-tiling", |rng, size| {
+        let n = 2 + rng.below(size.min(120));
+        let d = 1 + rng.below(3);
+        let ds = skewed_clusters(rng, n, d);
+        let tree = BoxTree::build(&ds, 1 + rng.below(8), 24);
+        let cap = 1 + rng.below(32);
+        let eta = 0.3 + 2.0 * rng.f32();
+        let part = nni::hmat::admissible::partition(&tree, cap, eta);
+        prop_assert!(part.n == n);
+        let mut cover = vec![0u32; n * n];
+        for &(tl, sl) in &part.near {
+            let (r, c) = (part.leaves[tl as usize], part.leaves[sl as usize]);
+            for i in r.lo..r.hi {
+                for j in c.lo..c.hi {
+                    cover[i as usize * n + j as usize] += 1;
+                }
+            }
+        }
+        for fb in &part.far {
+            prop_assert!(
+                fb.rows == part.leaves[fb.tleaf as usize],
+                "far block rows must equal its target leaf span"
+            );
+            for i in fb.rows.lo..fb.rows.hi {
+                for j in fb.cols.lo..fb.cols.hi {
+                    cover[i as usize * n + j as usize] += 1;
+                }
+            }
+        }
+        prop_assert!(
+            cover.iter().all(|&c| c == 1),
+            "partition gap/overlap: {} cells != 1 (n={n} cap={cap} eta={eta})",
+            cover.iter().filter(|&&c| c != 1).count()
+        );
+        prop_assert!(part.near_area() + part.far_area() == (n as u64) * (n as u64));
+        Ok(())
+    });
+}
+
+#[test]
+fn hmat_aca_reconstruction_error_within_tol() {
+    // Acceptance property (b): each factorization — low-rank or dense
+    // fallback — reconstructs its block to <= tol relative Frobenius
+    // error against an f64 dense oracle, on skewed cluster pairs of any
+    // separation (the absolute slack covers blocks whose every entry
+    // underflows f32).
+    use nni::csb::hier::Span;
+    use nni::hmat::aca::{aca_gauss, AcaFactor, GaussGen};
+    check("hmat-aca", |rng, size| {
+        let rn = 1 + rng.below(size.min(48));
+        let cn = 1 + rng.below(size.min(48));
+        let d = 1 + rng.below(4);
+        let gap = 4.0 * rng.f32(); // 0 (overlapping) .. 4 (well separated)
+        let mut coords = Vec::with_capacity((rn + cn) * d);
+        let scales: Vec<f32> = (0..d).map(|_| 0.02 + 0.6 * rng.f32()).collect();
+        for i in 0..rn + cn {
+            for (a, &sc) in scales.iter().enumerate() {
+                let mut v = sc * rng.normal() as f32;
+                if i >= rn && a == 0 {
+                    v += gap;
+                }
+                coords.push(v);
+            }
+        }
+        let gen = GaussGen {
+            coords: &coords,
+            d,
+            inv_h2: 0.1 + 4.0 * rng.f32(),
+        };
+        let rows = Span { lo: 0, hi: rn as u32 };
+        let cols = Span {
+            lo: rn as u32,
+            hi: (rn + cn) as u32,
+        };
+        let tol = [1e-2f32, 1e-3, 1e-4][rng.below(3)];
+        let f = aca_gauss(&gen, rows, cols, tol);
+        if let AcaFactor::LowRank { rank, u, vt } = &f {
+            prop_assert!(*rank <= rn.min(cn) / 2 || *rank == 0, "rank cap violated: {rank}");
+            prop_assert!(u.len() == rn * rank && vt.len() == rank * cn);
+        }
+        let mut err2 = 0.0f64;
+        let mut norm2 = 0.0f64;
+        for i in 0..rn {
+            for j in 0..cn {
+                let exact = gen.entry_f64(i, rn + j);
+                let approx = match &f {
+                    AcaFactor::LowRank { u, vt, rank } => (0..*rank)
+                        .map(|k| u[i * rank + k] as f64 * vt[k * cn + j] as f64)
+                        .sum::<f64>(),
+                    AcaFactor::Dense(v) => v[i * cn + j] as f64,
+                };
+                err2 += (exact - approx) * (exact - approx);
+                norm2 += exact * exact;
+            }
+        }
+        let (err, norm) = (err2.sqrt(), norm2.sqrt());
+        prop_assert!(
+            err <= tol as f64 * norm + 1e-25,
+            "aca err {err:.3e} > tol {tol:.0e} * norm {norm:.3e} (rn={rn} cn={cn} gap={gap})"
+        );
+        Ok(())
+    });
+}
