@@ -12,7 +12,7 @@
 //! same place no matter which directory cargo runs the bench from) with
 //! per-size build seconds for both backends and ANN recall@k.
 
-use nni::bench::{print_header, repo_root_out, Table, Workload};
+use nni::bench::{counters_json, print_header, repo_root_out, Table, Workload};
 use nni::knn::ann::recall::recall_at_k;
 use nni::knn::ann::AnnParams;
 use nni::knn::exact::knn_graph;
@@ -54,6 +54,9 @@ fn main() {
     );
     let mut records: Vec<Json> = Vec::new();
     for &n in &a.get_usize_list("sizes") {
+        // per-point observability window: the embedded counters cover just
+        // this size's builds
+        nni::obs::reset();
         let ds = wl.make_dataset(n, a.get_u64("seed"));
         let k = a.get_usize("k").min(n - 1);
         let params = AnnParams::default();
@@ -91,6 +94,7 @@ fn main() {
             ("ann_seconds", num(t_ann)),
             ("recall_at_k", num(rep.recall)),
             ("kth_dist_ratio", num(rep.dist_ratio)),
+            ("counters", counters_json()),
         ]));
     }
     table.finish();
@@ -98,6 +102,7 @@ fn main() {
     let doc = obj(vec![
         ("bench", s("ann_vs_exact")),
         ("workload", s(wl.name())),
+        ("status", s("measured")),
         ("testbed", s(&machine_summary())),
         ("points", arr(records)),
     ]);

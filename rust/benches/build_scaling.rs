@@ -14,7 +14,7 @@
 //! via `bench::repo_root_out`).  `--smoke` runs tiny sizes over threads
 //! {1, 2} for CI.  Methodology: EXPERIMENTS.md §Build-scaling.
 
-use nni::bench::{print_header, repo_root_out, Table, Workload};
+use nni::bench::{counters_json, print_header, repo_root_out, Table, Workload};
 use nni::csb::hier::HierCsb;
 use nni::embed::pca::pca_par;
 use nni::knn::KnnBackend;
@@ -80,7 +80,11 @@ fn main() {
     println!("# csb: {}", csb_ref.describe());
 
     let mut points: Vec<(usize, f64, f64, f64)> = Vec::new();
+    let mut counter_snaps: Vec<Json> = Vec::new();
     for &t in &threads_list {
+        // per-point observability window: the embedded counters cover just
+        // this thread count's builds
+        nni::obs::reset();
         let (mut pca_s, mut tree_s, mut csb_s) = (f64::INFINITY, f64::INFINITY, f64::INFINITY);
         for _ in 0..reps {
             let (p, dt) = time_once(|| pca_par(&ds, ed, 10, seed, t));
@@ -111,6 +115,7 @@ fn main() {
             );
         }
         points.push((t, pca_s, tree_s, csb_s));
+        counter_snaps.push(counters_json());
     }
 
     // Speedup baseline: the measured single-thread point when the sweep
@@ -126,7 +131,7 @@ fn main() {
         &["threads", "pca_ms", "tree_ms", "csb_ms", "total_ms", "speedup_vs_1"],
     );
     let mut records: Vec<Json> = Vec::new();
-    for &(t, pca_s, tree_s, csb_s) in &points {
+    for (i, &(t, pca_s, tree_s, csb_s)) in points.iter().enumerate() {
         let total = pca_s + tree_s + csb_s;
         let speedup = baseline / total;
         table.row(vec![
@@ -144,6 +149,7 @@ fn main() {
             ("csb_seconds", num(csb_s)),
             ("total_seconds", num(total)),
             ("speedup_vs_1", num(speedup)),
+            ("counters", counter_snaps[i].clone()),
         ]));
     }
     table.finish();

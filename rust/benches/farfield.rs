@@ -20,7 +20,7 @@
 //! the CI refresh (same code paths).
 
 use nni::apps::krr::suggest_bandwidth;
-use nni::bench::{print_header, repo_root_out, Table, Workload};
+use nni::bench::{counters_json, print_header, repo_root_out, Table, Workload};
 use nni::csb::kernel::{Dispatch, KernelKind};
 use nni::hmat::aca::GaussGen;
 use nni::hmat::apply::worker_scratch;
@@ -101,6 +101,9 @@ fn main() {
     );
     let mut records: Vec<Json> = Vec::new();
     for &tol in &tols {
+        // per-point observability window: the embedded counters cover just
+        // this tolerance's build + applies
+        nni::obs::reset();
         let cfg = FullKernelConfig::new(inv_h2)
             .with_eta(eta)
             .with_tol(tol as f32)
@@ -185,6 +188,7 @@ fn main() {
             ("rel_err_sample", num(rel_err)),
             ("build_seconds", num(t_build)),
             ("spmv_seconds", num(m_spmv.robust_min_s)),
+            ("counters", counters_json()),
         ]));
     }
     table.finish();

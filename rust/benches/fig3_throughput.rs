@@ -13,7 +13,7 @@
 //! the *ranking* across orderings and the γ-consistency are the
 //! reproducible shape here.
 
-use nni::bench::{pipeline_for, print_header, repo_root_out, Table, Workload};
+use nni::bench::{counters_json, pipeline_for, print_header, repo_root_out, Table, Workload};
 use nni::csb::hier::HierCsb;
 use nni::csb::kernel::{detect, KernelKind};
 use nni::interact::engine::Engine;
@@ -266,6 +266,9 @@ fn multi_rhs_sweep(
             let mut yk = vec![0.0f32; n * k];
 
             // Structural SpMM vs k scalar SpMVs (both under this kernel).
+            // Each recorded point embeds the counters drained over just its
+            // own measurement window.
+            nni::obs::reset();
             let t_scalar = bench_default(|| {
                 for _ in 0..k {
                     spmv::multilevel::spmm_ml_seq_with(&csb, &x1, &mut y1, 1, dispatch);
@@ -300,6 +303,7 @@ fn multi_rhs_sweep(
             }
 
             // Fused Gaussian: k queries, weights computed once per entry.
+            nni::obs::reset();
             let t_gscalar = bench_default(|| {
                 for _ in 0..k {
                     engine_seq.gauss_apply(&coords, &coords, d, inv_h2, &x1, &mut y1);
@@ -404,5 +408,6 @@ fn push_point(table: &mut Table, records: &mut Vec<Json>, p: Point) {
     if let Some(why) = p.fallback {
         rec.push(("dispatch_fallback", s(why)));
     }
+    rec.push(("counters", counters_json()));
     records.push(obj(rec));
 }

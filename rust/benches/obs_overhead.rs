@@ -1,0 +1,121 @@
+//! **Tracing overhead guard**: steady-state engine spmm throughput with
+//! span tracing off vs on, interleaved A/B over several rounds (robust
+//! minimum per mode).  The observability layer's contract is that spans
+//! are cheap enough to leave on — the overhead ratio is **asserted below
+//! the tolerance (default 3%) before anything is recorded**, so a
+//! regression in the span hot path fails the bench instead of silently
+//! taxing every traced run.
+//!
+//! Writes `BENCH_obs_overhead.json` at the repo root; `--smoke` shrinks n
+//! for the CI refresh (same code paths).
+
+use nni::bench::{counters_json, print_header, repo_root_out, Workload};
+use nni::csb::hier::HierCsb;
+use nni::csb::kernel::KernelKind;
+use nni::interact::engine::Engine;
+use nni::obs;
+use nni::order::OrderingKind;
+use nni::util::cli::Args;
+use nni::util::json::{arr, num, obj, s};
+use nni::util::rng::Rng;
+use nni::util::timer::{bench_default, machine_summary};
+use std::io::Write;
+
+fn main() {
+    let a = Args::new("span-tracing overhead guard: engine spmm, tracing off vs on")
+        .opt_usize_min("n", 4096, 64, "problem size")
+        .opt_usize_min("rhs", 8, 1, "multi-RHS width")
+        .opt_usize_min("block-cap", 256, 1, "CSB block capacity")
+        .opt_usize_min("rounds", 5, 1, "interleaved A/B rounds")
+        .opt_f64("tolerance", 0.03, "max allowed overhead ratio (0.03 = 3%)")
+        .opt_u64("seed", 42, "rng seed")
+        .opt_usize("threads", 0, "0 = all cores")
+        .opt("out", "BENCH_obs_overhead.json", "json record path (relative = repo root)")
+        .flag("smoke", "CI smoke mode: small n, same code paths")
+        .parse();
+    let smoke = a.get_flag("smoke");
+    let n = if smoke { 2048 } else { a.get_usize("n") };
+    let k = a.get_usize("rhs");
+    let threads = a.get_usize("threads");
+    let seed = a.get_u64("seed");
+    let tolerance = a.get_f64("tolerance");
+    print_header(
+        "obs_overhead",
+        "observability span overhead on the steady-state apply path",
+    );
+
+    let wl = Workload::Sift;
+    let (ds, m) = wl.make(n, seed, threads);
+    let r = nni::bench::pipeline_for(&OrderingKind::DualTree { d: 3 }, seed).run(&ds, &m);
+    let tree = r.tree.as_ref().expect("dual-tree ordering carries a tree");
+    let csb =
+        HierCsb::build_with_par(&r.reordered, tree, tree, a.get_usize("block-cap"), 0.25, threads);
+    println!("# n={n} rhs={k} {}", csb.describe());
+    let eng = Engine::with_kernel(csb, threads, KernelKind::Auto);
+
+    let mut rng = Rng::new(seed ^ 0x0b5);
+    let xk: Vec<f32> = (0..n * k).map(|_| rng.f32() - 0.5).collect();
+    let mut yk = vec![0.0f32; n * k];
+
+    // Interleaved A/B: the two modes see the same thermal/cache environment;
+    // the robust minimum per mode is the comparison.  The slabs are drained
+    // before every traced round so spans take the recording path (the full-
+    // slab drop path is cheaper — measuring it would flatter the ratio).
+    obs::install(nni::par::pool::default_threads(), obs::DEFAULT_SPAN_CAP);
+    let rounds = a.get_usize("rounds");
+    let (mut best_off, mut best_on) = (f64::INFINITY, f64::INFINITY);
+    for _ in 0..rounds {
+        obs::set_enabled(false);
+        best_off = best_off.min(bench_default(|| eng.spmm(&xk, &mut yk, k)).robust_min_s);
+        obs::reset();
+        obs::set_enabled(true);
+        best_on = best_on.min(bench_default(|| eng.spmm(&xk, &mut yk, k)).robust_min_s);
+    }
+    obs::set_enabled(false);
+    let ratio = best_on / best_off;
+    println!(
+        "# spmm off {:.3} ms | on {:.3} ms | overhead {:+.2}%",
+        best_off * 1e3,
+        best_on * 1e3,
+        (ratio - 1.0) * 100.0
+    );
+    // The guard: fail before recording anything.
+    assert!(
+        ratio < 1.0 + tolerance,
+        "tracing overhead {:.2}% exceeds the {:.0}% budget \
+         (off {best_off:.6}s, on {best_on:.6}s)",
+        (ratio - 1.0) * 100.0,
+        tolerance * 100.0
+    );
+
+    let point = obj(vec![
+        ("n", num(n as f64)),
+        ("rhs", num(k as f64)),
+        ("threads", num(threads as f64)),
+        ("off_seconds", num(best_off)),
+        ("on_seconds", num(best_on)),
+        ("overhead_ratio", num(ratio)),
+        ("counters", counters_json()),
+    ]);
+    let doc = obj(vec![
+        ("bench", s("obs_overhead")),
+        ("workload", s(wl.name())),
+        ("n", num(n as f64)),
+        ("status", s("measured")),
+        ("testbed", s(&machine_summary())),
+        (
+            "expected_shape",
+            s("overhead_ratio stays below 1 + tolerance (default 1.03); the assert \
+               runs before the record is written, so a present record implies a pass"),
+        ),
+        ("points", arr(vec![point])),
+    ]);
+    let out = repo_root_out(&a.get("out"));
+    let mut f = std::fs::File::create(&out).expect("write obs_overhead json");
+    writeln!(f, "{doc}").expect("write obs_overhead json");
+    println!("\n[saved {}]", out.display());
+    println!(
+        "expected shape: overhead under {:.0}%; asserted before recording.",
+        tolerance * 100.0
+    );
+}

@@ -22,6 +22,7 @@ use crate::data::dataset::Dataset;
 use crate::embed::pca::pca_par;
 use crate::hmat::aca::dot64;
 use crate::hmat::{FarFieldMode, FullKernelConfig, FullKernelEngine};
+use crate::obs::{self, counters, Counter};
 use crate::order::dualtree;
 use crate::util::rng::Rng;
 
@@ -141,6 +142,7 @@ pub fn synthetic_targets(ds: &Dataset, seed: u64) -> Vec<f32> {
 /// Run KRR: order, compress, solve.  `targets` is in original index order
 /// (as is the returned `alpha`).
 pub fn run(ds: &Dataset, targets: &[f32], cfg: &KrrConfig) -> KrrResult {
+    obs::span!("krr.run");
     let n = ds.n();
     assert_eq!(targets.len(), n, "one target per point");
     assert!(n >= 2, "krr needs at least 2 points");
@@ -181,8 +183,10 @@ pub fn run(ds: &Dataset, targets: &[f32], cfg: &KrrConfig) -> KrrResult {
 
     // Targets into tree order, solve, and back.
     let b: Vec<f32> = perm.iter().map(|&p| targets[p]).collect();
-    let (alpha_t, iterations, rel_residual) =
-        cg_solve(&eng, &b, cfg.lambda as f32, cfg.cg_tol, cfg.cg_max_iters);
+    let (alpha_t, iterations, rel_residual) = {
+        obs::span!("krr.cg_solve");
+        cg_solve(&eng, &b, cfg.lambda as f32, cfg.cg_tol, cfg.cg_max_iters)
+    };
 
     // Training RMSE of the smoother f = K·α (= (K+λI)α − λα).
     let mut f = vec![0.0f32; n];
@@ -256,6 +260,7 @@ pub fn cg_solve(
         rs = rs_new;
         iters += 1;
     }
+    counters::add(Counter::CgIterations, iters as u64);
     (x, iters, rs.sqrt() / bnorm)
 }
 

@@ -20,6 +20,7 @@ use crate::data::dataset::Dataset;
 use crate::interact::engine::Engine;
 use crate::knn::ann::forest::{knn_cross_with_forest, PcaForest};
 use crate::knn::KnnBackend;
+use crate::obs::{self, counters, Counter};
 use crate::order::invert;
 use crate::par::pool::ThreadPool;
 use crate::sparse::csr::Csr;
@@ -189,8 +190,11 @@ pub fn run(data: &Dataset, cfg: &MeanShiftConfig) -> MeanShiftResult {
     let mut new_tree: Vec<f32> = Vec::new();
 
     for it in 0..cfg.max_iters {
+        obs::span!("meanshift.iter");
+        counters::add(Counter::MeanshiftIterations, 1);
         iterations = it + 1;
         if structure.is_none() || it % cfg.refresh_every.max(1) == 0 {
+            obs::span!("meanshift.refresh");
             structure = Some(build_structure(
                 &means,
                 &sources_ordered,

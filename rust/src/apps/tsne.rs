@@ -24,6 +24,7 @@ use crate::data::dataset::Dataset;
 use crate::interact::engine::Engine;
 use crate::knn::exact::KnnGraph;
 use crate::knn::KnnBackend;
+use crate::obs::{self, counters, Counter};
 use crate::order::Pipeline;
 use crate::par::pool::ThreadPool;
 use crate::runtime::ArtifactRegistry;
@@ -276,6 +277,8 @@ pub fn run(ds: &Dataset, cfg: &TsneConfig, registry: Option<ArtifactRegistry>) -
 
     let t_start = std::time::Instant::now();
     for it in 0..cfg.iters {
+        obs::span!("tsne.iter");
+        counters::add(Counter::TsneIterations, 1);
         let exag = if it < cfg.exaggeration_iters {
             cfg.early_exaggeration
         } else {
@@ -287,8 +290,14 @@ pub fn run(ds: &Dataset, cfg: &TsneConfig, registry: Option<ArtifactRegistry>) -
             cfg.momentum_final
         };
 
-        coord.tsne_attr(&y, d, &mut attr);
-        let z = repulsive_exact(&y, n, d, &pool, &mut rep);
+        {
+            obs::span!("tsne.attr");
+            coord.tsne_attr(&y, d, &mut attr);
+        }
+        let z = {
+            obs::span!("tsne.repulsive");
+            repulsive_exact(&y, n, d, &pool, &mut rep)
+        };
 
         // gradient = 4 (exag * attr - rep); gains + momentum update
         let mut grad_norm = 0.0f64;

@@ -8,7 +8,8 @@ use crate::data::synth::SynthSpec;
 use crate::knn::exact::knn_graph;
 use crate::order::{OrderingKind, Pipeline};
 use crate::sparse::csr::Csr;
-use crate::util::json::{arr, num, obj, s, Json};
+use crate::obs;
+use crate::util::json::{self, arr, num, obj, s, Json};
 use crate::util::timer;
 use std::io::Write;
 use std::path::PathBuf;
@@ -89,6 +90,68 @@ pub fn out_dir() -> PathBuf {
     );
     std::fs::create_dir_all(&dir).ok();
     dir
+}
+
+/// Non-zero counter values plus the derived ratios as one JSON object —
+/// the drained observability snapshot each bench embeds into its record
+/// points (`obs::reset()` at the top of a point makes the values
+/// per-point rather than cumulative).
+pub fn counters_json() -> Json {
+    let snap = obs::counters::snapshot();
+    let mut fields: Vec<(&str, Json)> = snap
+        .counters
+        .iter()
+        .filter(|&&(_, v)| v != 0)
+        .map(|&(n, v)| (n, num(v as f64)))
+        .collect();
+    fields.push(("derived.worker_imbalance", num(snap.worker_imbalance())));
+    fields.push(("derived.mean_aca_rank", num(snap.mean_aca_rank())));
+    fields.push(("derived.dense_fill_ratio", num(snap.dense_fill_ratio())));
+    obj(fields)
+}
+
+/// Validate one `BENCH_*.json` record: required keys (`bench`, `status`,
+/// `points`), point shape, and status/points consistency.  `no_pending`
+/// additionally rejects records still pending with no measured points —
+/// the CI honesty gate after the smoke refreshes.  Returns a one-line
+/// status summary.
+pub fn check_record(text: &str, no_pending: bool) -> Result<String, String> {
+    let v = json::parse(text)?;
+    v.as_obj().ok_or("record is not a JSON object")?;
+    let bench = v
+        .get("bench")
+        .and_then(|b| b.as_str())
+        .ok_or("missing string field \"bench\"")?;
+    let status = v
+        .get("status")
+        .and_then(|st| st.as_str())
+        .ok_or("missing string field \"status\"")?;
+    let points = v
+        .get("points")
+        .and_then(|p| p.as_arr())
+        .ok_or("missing array field \"points\"")?;
+    for (i, p) in points.iter().enumerate() {
+        if p.as_obj().is_none() {
+            return Err(format!("point {i} is not an object"));
+        }
+    }
+    let pending = status.starts_with("pending");
+    if pending && !points.is_empty() {
+        return Err(format!(
+            "status says pending but {} points are recorded (stale status)",
+            points.len()
+        ));
+    }
+    if !pending && points.is_empty() {
+        return Err(format!("status \"{status}\" but no measured points"));
+    }
+    if no_pending && pending {
+        return Err(format!(
+            "bench \"{bench}\" is still pending with no measured points \
+             (the smoke refresh did not run or did not save)"
+        ));
+    }
+    Ok(format!("status={status} points={}", points.len()))
 }
 
 /// Print the standard bench header (testbed stand-in for Table 2).
@@ -204,6 +267,35 @@ mod tests {
         // absolute paths pass through
         let abs = if cfg!(windows) { "C:\\x\\y.json" } else { "/x/y.json" };
         assert_eq!(repo_root_out(abs), PathBuf::from(abs));
+    }
+
+    #[test]
+    fn check_record_accepts_and_rejects() {
+        let pending = r#"{"bench":"x","status":"pending: no toolchain","points":[]}"#;
+        assert!(check_record(pending, false).is_ok());
+        let e = check_record(pending, true).expect_err("--no-pending must reject");
+        assert!(e.contains("pending"), "{e}");
+        let measured = r#"{"bench":"x","status":"measured","points":[{"n":1}]}"#;
+        assert!(check_record(measured, true).is_ok());
+        // inconsistent combinations
+        let stale = r#"{"bench":"x","status":"pending: soon","points":[{"n":1}]}"#;
+        assert!(check_record(stale, false).is_err());
+        let hollow = r#"{"bench":"x","status":"measured","points":[]}"#;
+        assert!(check_record(hollow, false).is_err());
+        // schema violations
+        assert!(check_record("[]", false).is_err());
+        assert!(check_record(r#"{"bench":"x","points":[]}"#, false).is_err());
+        assert!(check_record(r#"{"bench":"x","status":"measured","points":[3]}"#, false).is_err());
+        assert!(check_record("not json", false).is_err());
+    }
+
+    #[test]
+    fn counters_json_carries_derived_ratios() {
+        obs::counters::add(obs::Counter::CgIterations, 1);
+        let j = counters_json();
+        assert!(j.get("derived.worker_imbalance").is_some());
+        assert!(j.get("cg.iterations").is_some());
+        assert!(crate::util::json::parse(&j.to_string()).is_ok());
     }
 
     #[test]

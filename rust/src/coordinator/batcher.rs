@@ -14,6 +14,7 @@
 
 use crate::csb::hier::HierCsb;
 use crate::interact::engine::Engine;
+use crate::obs::{counters, Counter};
 
 /// Where a block executes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -122,6 +123,7 @@ impl QueryBatcher {
     /// submission slot (results come back in submission order).
     pub fn submit(&mut self, x: Vec<f32>) -> usize {
         self.pending.push(x);
+        counters::raise(Counter::ServeQueueDepthMax, self.pending.len() as u64);
         self.pending.len() - 1
     }
 
@@ -169,6 +171,10 @@ impl QueryBatcher {
         let mut out = Vec::with_capacity(queries.len());
         let mut calls = 0usize;
         for group in queries.chunks(batch) {
+            // Batch occupancy: slots offered vs slots actually filled —
+            // occupied/slots is the serve-path utilization ratio.
+            counters::add(Counter::ServeBatchSlots, batch as u64);
+            counters::add(Counter::ServeBatchOccupied, group.len() as u64);
             out.extend(gauss_group(engine, group, tcoords, scoords, d, inv_h2));
             calls += 1;
         }

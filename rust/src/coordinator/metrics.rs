@@ -1,6 +1,14 @@
 //! Throughput and routing counters for the coordinator.
+//!
+//! [`Metrics`] keeps the per-coordinator-instance numbers callers and
+//! tests rely on (instances are independent; the scheduler tests assert
+//! exact counts).  Every update is simultaneously mirrored into the
+//! global `obs` counter registry (the `coord.*` names) so one registry
+//! snapshot carries the coordinator's story alongside every other
+//! subsystem.  Phase timing runs through [`crate::obs::timed`] — the
+//! ad-hoc stopwatch this module used to carry is gone.
 
-use std::time::Instant;
+use crate::obs::{counters, Counter};
 
 /// Accumulated per-run metrics.
 #[derive(Clone, Debug, Default)]
@@ -25,12 +33,45 @@ impl Metrics {
         Metrics::default()
     }
 
-    /// Time a closure into one of the phase accumulators.
-    pub fn time_phase<T>(acc: &mut f64, f: impl FnOnce() -> T) -> T {
-        let t0 = Instant::now();
-        let v = f();
-        *acc += t0.elapsed().as_secs_f64();
-        v
+    /// One interaction iteration over `nnz` stored interactions.
+    pub fn note_iteration(&mut self, nnz: u64) {
+        self.iterations += 1;
+        self.nnz_processed += nnz;
+        counters::add(Counter::CoordNnzProcessed, nnz);
+    }
+
+    /// Rust-phase outcome: `blocks` applied in `secs` seconds.
+    pub fn note_rust(&mut self, blocks: u64, secs: f64) {
+        self.rust_blocks += blocks;
+        self.rust_seconds += secs;
+        counters::add(Counter::CoordRustBlocks, blocks);
+        counters::add(Counter::CoordRustNs, (secs * 1e9) as u64);
+    }
+
+    /// PJRT-phase outcome: call/block counts plus the leader-phase time.
+    pub fn note_pjrt(&mut self, single_calls: u64, batched_calls: u64, blocks: u64, secs: f64) {
+        self.pjrt_single_calls += single_calls;
+        self.pjrt_batched_calls += batched_calls;
+        self.pjrt_blocks += blocks;
+        self.pjrt_seconds += secs;
+        counters::add(Counter::CoordPjrtSingleCalls, single_calls);
+        counters::add(Counter::CoordPjrtBatchedCalls, batched_calls);
+        counters::add(Counter::CoordPjrtBlocks, blocks);
+        counters::add(Counter::CoordPjrtNs, (secs * 1e9) as u64);
+    }
+
+    /// Serve-path outcome: `queries` answered in `calls` whole-batch
+    /// engine calls over `nnz` edge visits, spending `secs` on the Rust
+    /// side (the serve path has no PJRT leg).
+    pub fn note_serve(&mut self, queries: u64, calls: u64, nnz: u64, secs: f64) {
+        self.batched_queries += queries;
+        self.serve_calls += calls;
+        self.nnz_processed += nnz;
+        self.rust_seconds += secs;
+        counters::add(Counter::CoordBatchedQueries, queries);
+        counters::add(Counter::CoordServeCalls, calls);
+        counters::add(Counter::CoordNnzProcessed, nnz);
+        counters::add(Counter::CoordRustNs, (secs * 1e9) as u64);
     }
 
     /// Interactions (edges) per second over everything processed so far.
@@ -67,11 +108,22 @@ mod tests {
     use super::*;
 
     #[test]
-    fn time_phase_accumulates() {
-        let mut acc = 0.0;
-        let v = Metrics::time_phase(&mut acc, || 41 + 1);
-        assert_eq!(v, 42);
-        assert!(acc >= 0.0);
+    fn note_helpers_accumulate_per_instance() {
+        let mut m = Metrics::new();
+        m.note_iteration(10);
+        m.note_rust(3, 0.5);
+        m.note_pjrt(1, 2, 17, 0.25);
+        m.note_serve(8, 1, 80, 0.1);
+        assert_eq!(m.iterations, 1);
+        assert_eq!(m.nnz_processed, 90);
+        assert_eq!(m.rust_blocks, 3);
+        assert_eq!(m.pjrt_single_calls, 1);
+        assert_eq!(m.pjrt_batched_calls, 2);
+        assert_eq!(m.pjrt_blocks, 17);
+        assert_eq!(m.batched_queries, 8);
+        assert_eq!(m.serve_calls, 1);
+        assert!((m.rust_seconds - 0.6).abs() < 1e-12);
+        assert!((m.pjrt_seconds - 0.25).abs() < 1e-12);
     }
 
     #[test]
@@ -79,5 +131,16 @@ mod tests {
         let m = Metrics::new();
         assert_eq!(m.edges_per_second(), 0.0);
         assert!(m.summary().contains("iters=0"));
+    }
+
+    #[test]
+    fn summary_format_stable() {
+        let mut m = Metrics::new();
+        m.note_iteration(42);
+        let s = m.summary();
+        assert!(s.contains("iters=1"));
+        assert!(s.contains("edges=42"));
+        assert!(s.contains("rust=0.000s"));
+        assert!(s.contains("edges/s"));
     }
 }

@@ -12,6 +12,7 @@
 
 use crate::coordinator::batcher::{BatchPlan, BatchPolicy, QueryBatcher, Route};
 use crate::coordinator::metrics::Metrics;
+use crate::obs;
 use crate::par::pool::SendPtr;
 use crate::csb::hier::{HierCsb, LeafBlock};
 use crate::interact::engine::{tsne_block, Engine};
@@ -90,15 +91,13 @@ impl Coordinator {
         assert_eq!(y.len(), n * d);
         assert_eq!(force.len(), n * d);
         force.fill(0.0);
-        self.metrics.iterations += 1;
-        self.metrics.nnz_processed += self.engine.csb.nnz as u64;
+        self.metrics.note_iteration(self.engine.csb.nnz as u64);
 
         // ---- Phase 1: workers on the Rust-routed blocks -------------------
         let csb = &self.engine.csb;
         let dispatch = self.engine.dispatch();
         let rust_by_target = &self.rust_by_target;
-        let mut rust_secs = 0.0;
-        Metrics::time_phase(&mut rust_secs, || {
+        let ((), rust_secs) = obs::timed("coord.rust_phase", || {
             let fp = SendPtr(force.as_mut_ptr());
             let fpr = &fp;
             let engine = &self.engine;
@@ -117,14 +116,12 @@ impl Coordinator {
                 }
             });
         });
-        self.metrics.rust_seconds += rust_secs;
-        self.metrics.rust_blocks += self.plan.rust.len() as u64;
+        self.metrics.note_rust(self.plan.rust.len() as u64, rust_secs);
 
         // ---- Phase 2: leader drains the PJRT routes -----------------------
         if self.registry.is_none() || (self.plan.pjrt_single.is_empty() && self.plan.pjrt_batches.is_empty()) {
             return;
         }
-        let mut pjrt_secs = 0.0;
         let single_name = format!("tsne_d{d}_m256");
         let batch_name = format!("tsne_d{d}_m128_b8");
         let registry = self.registry.as_ref().expect(
@@ -134,56 +131,66 @@ impl Coordinator {
         let have_single = registry.variants.contains_key(&single_name);
         let have_batch = registry.variants.contains_key(&batch_name);
 
-        Metrics::time_phase(&mut pjrt_secs, || {
-            // Leader phase runs after the workers drained; slot 0 is free.
-            let mut scratch = self.engine.worker_scratch(0);
-            for &t in &self.plan.pjrt_single {
-                let b = &csb.blocks[t as usize];
-                if have_single {
-                    match run_tsne_single(registry, &single_name, csb, t as usize, y, d, 256) {
-                        Ok(f_block) => {
-                            accumulate_force(b, &f_block, d, force);
-                            self.metrics.pjrt_single_calls += 1;
-                            self.metrics.pjrt_blocks += 1;
-                            continue;
-                        }
-                        Err(e) => {
-                            eprintln!("pjrt single fallback: {e:#}");
-                        }
-                    }
-                }
-                // fallback: rust
-                let sp = b.rows;
-                let seg = &mut force[sp.lo as usize * d..sp.hi as usize * d];
-                tsne_block(csb, t as usize, y, d, dispatch, &mut scratch, seg);
-                self.metrics.rust_blocks += 1;
-            }
-            for group in &self.plan.pjrt_batches {
-                if have_batch {
-                    match run_tsne_batch(registry, &batch_name, group, csb, y, d, 128, 8) {
-                        Ok(outs) => {
-                            for (&t, f_block) in group.iter().zip(outs.iter()) {
-                                let b = &csb.blocks[t as usize];
-                                accumulate_force(b, f_block, d, force);
+        // Count into locals inside the timed closure, fold into metrics
+        // after — the closure already borrows engine/plan fields.
+        let ((single_calls, batched_calls, pjrt_blocks, fallback_blocks), pjrt_secs) =
+            obs::timed("coord.pjrt_phase", || {
+                let (mut sc, mut bc, mut pb, mut fb) = (0u64, 0u64, 0u64, 0u64);
+                // Leader phase runs after the workers drained; slot 0 is free.
+                let mut scratch = self.engine.worker_scratch(0);
+                for &t in &self.plan.pjrt_single {
+                    let b = &csb.blocks[t as usize];
+                    if have_single {
+                        match run_tsne_single(registry, &single_name, csb, t as usize, y, d, 256) {
+                            Ok(f_block) => {
+                                accumulate_force(b, &f_block, d, force);
+                                sc += 1;
+                                pb += 1;
+                                continue;
                             }
-                            self.metrics.pjrt_batched_calls += 1;
-                            self.metrics.pjrt_blocks += group.len() as u64;
-                            continue;
-                        }
-                        Err(e) => {
-                            eprintln!("pjrt batch fallback: {e:#}");
+                            Err(e) => {
+                                eprintln!("pjrt single fallback: {e:#}");
+                            }
                         }
                     }
-                }
-                for &t in group {
-                    let sp = csb.blocks[t as usize].rows;
+                    // fallback: rust
+                    let sp = b.rows;
                     let seg = &mut force[sp.lo as usize * d..sp.hi as usize * d];
                     tsne_block(csb, t as usize, y, d, dispatch, &mut scratch, seg);
-                    self.metrics.rust_blocks += 1;
+                    fb += 1;
                 }
-            }
-        });
-        self.metrics.pjrt_seconds += pjrt_secs;
+                for group in &self.plan.pjrt_batches {
+                    if have_batch {
+                        match run_tsne_batch(registry, &batch_name, group, csb, y, d, 128, 8) {
+                            Ok(outs) => {
+                                for (&t, f_block) in group.iter().zip(outs.iter()) {
+                                    let b = &csb.blocks[t as usize];
+                                    accumulate_force(b, f_block, d, force);
+                                }
+                                bc += 1;
+                                pb += group.len() as u64;
+                                continue;
+                            }
+                            Err(e) => {
+                                eprintln!("pjrt batch fallback: {e:#}");
+                            }
+                        }
+                    }
+                    for &t in group {
+                        let sp = csb.blocks[t as usize].rows;
+                        let seg = &mut force[sp.lo as usize * d..sp.hi as usize * d];
+                        tsne_block(csb, t as usize, y, d, dispatch, &mut scratch, seg);
+                        fb += 1;
+                    }
+                }
+                (sc, bc, pb, fb)
+            });
+        self.metrics.note_pjrt(single_calls, batched_calls, pjrt_blocks, pjrt_secs);
+        if fallback_blocks > 0 {
+            // Fallback blocks count as Rust work; their time already landed
+            // in the PJRT leader phase (as before the refactor).
+            self.metrics.note_rust(fallback_blocks, 0.0);
+        }
     }
 
     /// Serve a slate of Gaussian queries through the engine's multi-RHS
@@ -199,8 +206,7 @@ impl Coordinator {
         inv_h2: f32,
         queries: &[Vec<f32>],
     ) -> Vec<Vec<f32>> {
-        let mut rust_secs = 0.0;
-        let (out, calls) = Metrics::time_phase(&mut rust_secs, || {
+        let ((out, calls), rust_secs) = obs::timed("coord.serve", || {
             QueryBatcher::run_slate(
                 self.policy.batch,
                 &self.engine,
@@ -211,10 +217,12 @@ impl Coordinator {
                 inv_h2,
             )
         });
-        self.metrics.rust_seconds += rust_secs;
-        self.metrics.batched_queries += queries.len() as u64;
-        self.metrics.serve_calls += calls as u64;
-        self.metrics.nnz_processed += self.engine.csb.nnz as u64 * queries.len() as u64;
+        self.metrics.note_serve(
+            queries.len() as u64,
+            calls as u64,
+            self.engine.csb.nnz as u64 * queries.len() as u64,
+            rust_secs,
+        );
         out
     }
 }

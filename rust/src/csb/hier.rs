@@ -18,6 +18,7 @@
 
 use crate::csb::kernel::{self, Dispatch};
 use crate::csb::panel::{self, PanelArena};
+use crate::obs::{self, counters, Counter, LevelStat};
 use crate::par::pool::{SendPtr, ThreadPool};
 use crate::sparse::csr::Csr;
 use crate::tree::boxtree::BoxTree;
@@ -117,6 +118,74 @@ pub struct HierCsb {
     /// Tile-major packed copies of the dense blocks (32-byte aligned), the
     /// layout the SIMD dense micro-kernel consumes.
     pub panels: PanelArena,
+    /// Profile statistics computed once at build and published to the
+    /// `obs` counter registry — `describe()`, the `reorder` CLI report,
+    /// and bench records all read this one set of numbers.
+    pub stats: CsbStats,
+}
+
+/// Build-time profile statistics of a [`HierCsb`] (the paper's profile
+/// measure at the storage layer).  Published to `obs::counters` by
+/// [`CsbStats::publish`]; levels are target-leaf depths in the ordering
+/// tree.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct CsbStats {
+    pub dense_blocks: u64,
+    pub sparse_blocks: u64,
+    /// Σ rows·cols over dense-stored blocks.
+    pub dense_cells: u64,
+    /// Nonzeros living in dense-stored blocks.
+    pub dense_nnz: u64,
+    /// Total stored nonzeros.
+    pub nnz: u64,
+    /// Σ rows·cols over all stored blocks (the near-field footprint).
+    pub covered_area: u64,
+    /// rows·cols of the whole matrix.
+    pub total_area: u64,
+    /// Bytes of the packed panel arena (dense-block SIMD copies).
+    pub panel_bytes: u64,
+    /// Per target-leaf-depth rows, ascending level, empty levels omitted.
+    pub levels: Vec<CsbLevelStats>,
+}
+
+/// One level row of [`CsbStats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CsbLevelStats {
+    pub level: u32,
+    pub blocks: u64,
+    pub dense_blocks: u64,
+    pub nnz: u64,
+    pub cells: u64,
+}
+
+impl CsbStats {
+    /// Fraction of nonzeros living in dense-stored blocks.
+    pub fn dense_fraction(&self) -> f64 {
+        self.dense_nnz as f64 / self.nnz.max(1) as f64
+    }
+
+    /// `covered_area / total_area` (0 for an empty matrix).
+    pub fn covered_fraction(&self) -> f64 {
+        self.covered_area as f64 / self.total_area.max(1) as f64
+    }
+
+    /// Fold this build's numbers into the global `obs` counter registry.
+    pub fn publish(&self) {
+        counters::add(Counter::CsbDenseBlocks, self.dense_blocks);
+        counters::add(Counter::CsbSparseBlocks, self.sparse_blocks);
+        counters::add(Counter::CsbDenseCells, self.dense_cells);
+        counters::add(Counter::CsbDenseNnz, self.dense_nnz);
+        counters::add(Counter::CsbNnz, self.nnz);
+        counters::add(Counter::CsbCoveredArea, self.covered_area);
+        counters::add(Counter::CsbTotalArea, self.total_area);
+        counters::add(Counter::CsbPanelBytes, self.panel_bytes);
+        for l in &self.levels {
+            counters::level_add(LevelStat::Blocks, l.level as usize, l.blocks);
+            counters::level_add(LevelStat::DenseBlocks, l.level as usize, l.dense_blocks);
+            counters::level_add(LevelStat::Nnz, l.level as usize, l.nnz);
+            counters::level_add(LevelStat::Cells, l.level as usize, l.cells);
+        }
+    }
 }
 
 /// Default leaf population cap used across the system (matches the m256
@@ -174,6 +243,7 @@ impl HierCsb {
         dense_threshold: f64,
         threads: usize,
     ) -> HierCsb {
+        obs::span!("csb.build");
         assert_eq!(a.rows, tgt_tree.n());
         assert_eq!(a.cols, src_tree.n());
         let block_cap = if block_cap == 0 { LEAF_POINTS } else { block_cap };
@@ -230,6 +300,7 @@ impl HierCsb {
             last_row: u32,
         }
         let leaf_idx: Vec<usize> = (0..nt).collect();
+        let count_span = obs::trace::SpanGuard::enter("csb.build.count");
         let per_leaf: Vec<Vec<LeafCount>> = pool.map(&leaf_idx, |&tl| {
             let span = tgt_leaves[tl];
             let mut counts: Vec<LeafCount> = Vec::new();
@@ -267,17 +338,23 @@ impl HierCsb {
             counts
         });
 
+        drop(count_span);
+
         // Block keys, ordered by the multi-level traversal.
         let keys: Vec<(u32, u32)> = per_leaf
             .iter()
             .enumerate()
             .flat_map(|(tl, cs)| cs.iter().map(move |c| (tl as u32, c.sl)))
             .collect();
-        let order = multilevel_order(tgt_tree, src_tree, &tgt_leaf_ids, &src_leaf_ids, &keys);
+        let order = {
+            obs::span!("csb.build.order");
+            multilevel_order(tgt_tree, src_tree, &tgt_leaf_ids, &src_leaf_ids, &keys)
+        };
         assert_eq!(order.len(), keys.len(), "traversal missed blocks");
 
         // Exclusive scan — arena offsets in traversal order, so the hot
         // loop walks memory linearly.
+        let scan_span = obs::trace::SpanGuard::enter("csb.build.scan");
         let mut blocks: Vec<LeafBlock> = Vec::with_capacity(order.len());
         let mut ent_base: Vec<u32> = Vec::with_capacity(order.len());
         let mut panel_off: Vec<u32> = Vec::with_capacity(order.len());
@@ -336,8 +413,10 @@ impl HierCsb {
         for l in lookup.iter_mut() {
             l.sort_unstable();
         }
+        drop(scan_span);
 
         // Pass 2 — fill (parallel over target leaves).
+        let fill_span = obs::trace::SpanGuard::enter("csb.build.fill");
         let mut dense = vec![0.0f32; dense_len];
         let mut sp_rows = vec![0u16; rows_len];
         let mut sp_ptr = vec![0u32; ptr_len];
@@ -427,11 +506,14 @@ impl HierCsb {
             });
         }
 
+        drop(fill_span);
+
         // Pass 3 — pack each dense block's values into its tile-major
         // panel (parallel over blocks; every panel region belongs to
         // exactly one block and each pack is a pure function of that
         // block's dense values, so the arena is bit-identical across
         // thread counts).
+        let pack_span = obs::trace::SpanGuard::enter("csb.build.pack");
         let mut panel_data = panel::AlignedF32::zeroed(panel_total);
         {
             let pp = SendPtr(panel_data.as_mut_slice().as_mut_ptr());
@@ -460,6 +542,43 @@ impl HierCsb {
             });
         }
 
+        drop(pack_span);
+
+        // Profile stats — computed once, published to the global counter
+        // registry, and stored so describe()/reports never recompute.
+        let depth: Vec<u32> = tgt_leaf_ids.iter().map(|&id| node_depth(tgt_tree, id)).collect();
+        let max_depth = depth.iter().copied().max().unwrap_or(0) as usize;
+        let mut level_rows: Vec<CsbLevelStats> = (0..=max_depth)
+            .map(|l| CsbLevelStats {
+                level: l as u32,
+                ..CsbLevelStats::default()
+            })
+            .collect();
+        let mut stats = CsbStats {
+            nnz: a.nnz() as u64,
+            total_area: a.rows as u64 * a.cols as u64,
+            panel_bytes: panel_total as u64 * 4,
+            ..CsbStats::default()
+        };
+        for b in &blocks {
+            let area = b.rows.len() as u64 * b.cols.len() as u64;
+            stats.covered_area += area;
+            let row = &mut level_rows[depth[b.tleaf as usize] as usize];
+            row.blocks += 1;
+            row.nnz += b.nnz as u64;
+            row.cells += area;
+            if b.is_dense() {
+                stats.dense_blocks += 1;
+                stats.dense_cells += area;
+                stats.dense_nnz += b.nnz as u64;
+                row.dense_blocks += 1;
+            } else {
+                stats.sparse_blocks += 1;
+            }
+        }
+        stats.levels = level_rows.into_iter().filter(|r| r.blocks > 0).collect();
+        stats.publish();
+
         HierCsb {
             rows: a.rows,
             cols: a.cols,
@@ -478,6 +597,7 @@ impl HierCsb {
                 off: panel_off,
                 data: panel_data,
             },
+            stats,
         }
     }
 
@@ -736,15 +856,10 @@ impl HierCsb {
         }
     }
 
-    /// Fraction of nonzeros living in dense-stored blocks.
+    /// Fraction of nonzeros living in dense-stored blocks (from the
+    /// build-time [`CsbStats`]; no recomputation).
     pub fn dense_fraction(&self) -> f64 {
-        let dense: u64 = self
-            .blocks
-            .iter()
-            .filter(|b| b.is_dense())
-            .map(|b| b.nnz as u64)
-            .sum();
-        dense as f64 / self.nnz.max(1) as f64
+        self.stats.dense_fraction()
     }
 
     /// Index-space coverage of the stored blocks: `(covered, total)` where
@@ -756,21 +871,16 @@ impl HierCsb {
     /// the near/far split that `describe()` and the `reorder` CLI report
     /// surface.
     pub fn coverage(&self) -> (u64, u64) {
-        let covered = self
-            .blocks
-            .iter()
-            .map(|b| b.rows.len() as u64 * b.cols.len() as u64)
-            .sum();
-        (covered, self.rows as u64 * self.cols as u64)
+        (self.stats.covered_area, self.stats.total_area)
     }
 
     /// `covered / total` of [`HierCsb::coverage`] (0 for an empty matrix).
     pub fn covered_fraction(&self) -> f64 {
-        let (covered, total) = self.coverage();
-        covered as f64 / total.max(1) as f64
+        self.stats.covered_fraction()
     }
 
-    /// Stats line for logs/benches.
+    /// Stats line for logs/benches — formatted from the build-time
+    /// [`CsbStats`], the same numbers the `obs` snapshot carries.
     pub fn describe(&self) -> String {
         let (covered, total) = self.coverage();
         format!(
@@ -784,6 +894,22 @@ impl HierCsb {
             self.covered_fraction() * 100.0
         )
     }
+}
+
+/// Depth of tree node `id` (root = 0) via parent walk — the level label of
+/// the per-level profile counters.
+fn node_depth(tree: &BoxTree, id: u32) -> u32 {
+    let mut d = 0;
+    let mut n = id;
+    loop {
+        let p = tree.nodes[n as usize].parent;
+        if p == n {
+            break;
+        }
+        n = p;
+        d += 1;
+    }
+    d
 }
 
 /// Map each index to its leaf ordinal via span scan.

@@ -9,6 +9,7 @@
 //! angle via the Rayleigh quotient deltas.
 
 use crate::data::dataset::Dataset;
+use crate::obs::{self, counters, Counter};
 use crate::par::pool::ThreadPool;
 use crate::util::rng::Rng;
 
@@ -94,6 +95,8 @@ pub fn pca(ds: &Dataset, d: usize, iters: usize, seed: u64) -> Pca {
 /// `NNI_THREADS`-respecting): partial Gram/variance sums are accumulated
 /// over fixed-size row chunks and reduced in chunk order.
 pub fn pca_par(ds: &Dataset, d: usize, iters: usize, seed: u64, threads: usize) -> Pca {
+    obs::span!("embed.pca");
+    counters::add(Counter::PcaRuns, 1);
     let n = ds.n();
     let dim = ds.d();
     let d = d.min(dim);

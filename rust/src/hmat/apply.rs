@@ -16,6 +16,7 @@
 use crate::csb::kernel::{self, dense_gemm_acc, Dispatch};
 use crate::csb::panel::AlignedF32;
 use crate::hmat::store::{FarField, FarKind};
+use crate::obs::{self, counters, Counter};
 use crate::par::pool::{SendPtr, ThreadPool};
 use std::sync::Mutex;
 
@@ -50,9 +51,24 @@ impl FarField {
         if self.blocks.is_empty() {
             return;
         }
+        obs::span!("hmat.far.apply");
+        counters::add(Counter::FarApplyCalls, 1);
+        // Compressed multiply-add cells: r·(rn+cn) per low-rank block,
+        // rn·cn per dense fallback — flops = 2·cells·k, same convention
+        // as `ApplySchedule::flops`.
+        let cells: u64 = self
+            .blocks
+            .iter()
+            .map(|b| match b.kind {
+                FarKind::LowRank { .. } => b.rank as u64 * (b.rows.len() + b.cols.len()) as u64,
+                FarKind::Dense { .. } => b.area(),
+            })
+            .sum();
+        counters::add(Counter::FarGemmFlops, 2 * cells * k as u64);
         let yp = SendPtr(y.as_mut_ptr());
         let ypr = &yp;
         pool.for_each_chunked_worker(self.tasks.len(), 1, |w, ti| {
+            obs::span!("hmat.far.task");
             let tl = self.tasks[ti] as usize;
             let sp = self.tgt_leaves[tl];
             // SAFETY: target-leaf row spans are disjoint and each leaf is

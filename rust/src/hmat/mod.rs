@@ -149,6 +149,7 @@ impl FullKernelEngine {
         threads: usize,
         kernel: KernelKind,
     ) -> FullKernelEngine {
+        crate::obs::span!("hmat.engine.build");
         let n = tree.n();
         assert_eq!(coords.len(), n * dim, "coords must be tree-ordered n x dim");
         assert!(cfg.inv_h2 > 0.0 && cfg.inv_h2.is_finite(), "inv_h2 must be positive");

@@ -23,6 +23,7 @@ use crate::csb::hier::Span;
 use crate::csb::panel::{pack_panel, panel_len, AlignedF32};
 use crate::hmat::aca::{aca_gauss, AcaFactor, GaussGen};
 use crate::hmat::admissible::Partition;
+use crate::obs::{self, counters, Counter};
 use crate::par::pool::{SendPtr, ThreadPool};
 
 /// Payload locator of one far block inside the [`FarField`] arenas.
@@ -103,15 +104,19 @@ impl FarField {
         tol: f32,
         threads: usize,
     ) -> FarField {
+        obs::span!("hmat.build");
         assert_eq!(coords.len(), part.n * d);
         let gen = GaussGen { coords, d, inv_h2 };
         let pool = ThreadPool::new_or_default(threads);
 
         // Pass 1 — factorize (order-preserving parallel map).
+        let factorize_span = obs::trace::SpanGuard::enter("hmat.factorize");
         let factored: Vec<AcaFactor> =
             pool.map(&part.far, |fb| aca_gauss(&gen, fb.rows, fb.cols, tol));
+        drop(factorize_span);
 
         // Pass 2 — exclusive scan of arena footprints.
+        let scan_span = obs::trace::SpanGuard::enter("hmat.scan");
         let mut blocks: Vec<FarBlock> = Vec::with_capacity(part.far.len());
         let mut flen = 0usize;
         let mut plen = 0usize;
@@ -157,9 +162,11 @@ impl FarField {
         }
         assert!(flen <= u32::MAX as usize, "far factor arena exceeds u32 offsets");
         assert!(plen <= u32::MAX as usize, "far panel arena exceeds u32 offsets");
+        drop(scan_span);
 
         // Pass 3 — parallel fill: copy factors + pack panels into the
         // per-block regions (disjoint by the scan).
+        let fill_span = obs::trace::SpanGuard::enter("hmat.fill");
         let mut factors = vec![0.0f32; flen];
         let mut panels = AlignedF32::zeroed(plen);
         {
@@ -206,6 +213,23 @@ impl FarField {
                 }
             });
         }
+        drop(fill_span);
+
+        // Fold compression outcomes into the global counter registry.
+        counters::add(Counter::AcaBlocks, blocks.len() as u64);
+        counters::add(
+            Counter::AcaRankSum,
+            blocks.iter().filter(|b| !b.is_dense()).map(|b| b.rank as u64).sum(),
+        );
+        counters::raise(
+            Counter::AcaRankMax,
+            blocks.iter().map(|b| b.rank as u64).max().unwrap_or(0),
+        );
+        counters::add(Counter::AcaFactorBytes, flen as u64 * 4);
+        counters::add(
+            Counter::AcaDenseFallbacks,
+            blocks.iter().filter(|b| b.is_dense()).count() as u64,
+        );
 
         let nt = part.leaves.len();
         let mut by_target: Vec<Vec<u32>> = vec![Vec::new(); nt];

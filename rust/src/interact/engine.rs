@@ -40,9 +40,12 @@
 use crate::csb::hier::HierCsb;
 use crate::csb::kernel::{dense_gemm_acc, Dispatch, KernelKind};
 use crate::csb::panel::AlignedF32;
+use crate::obs::{self, counters, Counter};
 use crate::par::pool::{SendPtr, ThreadPool};
 use crate::spmv::multilevel::ApplySchedule;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, MutexGuard};
+use std::time::Instant;
 
 /// The engine: block structure + thread pool + precompiled schedule +
 /// kernel dispatch + per-worker scratch.
@@ -62,6 +65,10 @@ pub struct Engine {
     scratch: Vec<Mutex<BlockScratch>>,
     /// Apply-level shared buffers (mean shift's augmented sources).
     shared: Mutex<SharedScratch>,
+    /// Per-worker busy nanoseconds of the current apply call (engine-owned
+    /// so the traced imbalance measurement stays allocation-free); folded
+    /// into the `obs` counters and zeroed at the end of each call.
+    worker_ns: Vec<AtomicU64>,
 }
 
 impl Engine {
@@ -79,6 +86,10 @@ impl Engine {
         let scratch = (0..pool.threads)
             .map(|_| Mutex::new(BlockScratch::default()))
             .collect();
+        // Pre-size the span slabs here — the engine build is the last
+        // allocation point before the (allocation-free) apply steady state.
+        obs::install(pool.threads, obs::DEFAULT_SPAN_CAP);
+        let worker_ns = (0..pool.threads).map(|_| AtomicU64::new(0)).collect();
         Engine {
             csb,
             pool,
@@ -88,6 +99,7 @@ impl Engine {
             schedule,
             scratch,
             shared: Mutex::new(SharedScratch::default()),
+            worker_ns,
         }
     }
 
@@ -111,7 +123,14 @@ impl Engine {
     /// ownership.  `f(scratch, tleaf, block_ids, out_segment)` computes
     /// one task's blocks into its own slice of `out` (`stride` f32 per
     /// row), with that worker's reusable scratch.
-    fn per_target<F>(&self, out: &mut [f32], stride: usize, f: F)
+    ///
+    /// `gemm_k` is the RHS width of the kernel's block products (`stride`
+    /// for plain SpMM, `d + 1` for the augmented t-SNE/mean-shift GEMMs) —
+    /// used only to feed the schedule-static profile counters, one
+    /// `fetch_add` per quantity per call.  Per-task spans and per-worker
+    /// busy-time (the imbalance measure) are recorded only while tracing
+    /// is enabled; all of it is allocation-free.
+    fn per_target<F>(&self, out: &mut [f32], stride: usize, gemm_k: usize, f: F)
     where
         F: Fn(&mut BlockScratch, usize, &[u32], &mut [f32]) + Sync,
     {
@@ -121,7 +140,10 @@ impl Engine {
         let opr = &op;
         let leaves = &self.csb.tgt_leaves;
         let sched = &self.schedule;
+        let traced = obs::enabled();
         self.pool.for_each_chunked_worker(sched.tasks.len(), 1, |w, ti| {
+            obs::span!("apply.task");
+            let t0 = if traced { Some(Instant::now()) } else { None };
             let task = sched.tasks[ti];
             let sp = leaves[task.tleaf as usize];
             // SAFETY: target-leaf row spans are disjoint, and each leaf is
@@ -134,7 +156,35 @@ impl Engine {
             };
             let mut scratch = self.scratch[w].lock().unwrap();
             f(&mut *scratch, task.tleaf as usize, sched.blocks_of(&task), seg);
+            if let Some(t0) = t0 {
+                self.worker_ns[w].fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            }
         });
+        if traced {
+            self.fold_worker_ns(sched.tasks.len());
+        }
+        counters::add(Counter::ApplyCalls, 1);
+        counters::add(Counter::ApplyTasks, sched.tasks.len() as u64);
+        counters::add(Counter::ApplyGemmFlops, sched.flops(gemm_k));
+        counters::add(Counter::ApplyPanelBytes, sched.panel_bytes);
+        counters::add(Counter::ApplySparseNnz, sched.sparse_nnz);
+    }
+
+    /// Fold the per-worker busy times of one traced apply call into the
+    /// global imbalance counters and zero the slots for the next call.
+    fn fold_worker_ns(&self, tasks: usize) {
+        let mut total = 0u64;
+        let mut max = 0u64;
+        for slot in &self.worker_ns {
+            let v = slot.swap(0, Ordering::Relaxed);
+            total += v;
+            max = max.max(v);
+        }
+        if total > 0 {
+            counters::add(Counter::ApplyWorkerNsTotal, total);
+            counters::add(Counter::ApplyWorkerNsMax, max);
+            counters::raise(Counter::ApplyWorkers, self.pool.threads.min(tasks).max(1) as u64);
+        }
     }
 
     /// Schedule-driven parallel SpMM with this engine's kernel dispatch:
@@ -145,22 +195,11 @@ impl Engine {
     pub fn spmm(&self, x: &[f32], y: &mut [f32], k: usize) {
         assert!(k >= 1, "spmm needs at least one RHS column");
         assert_eq!(x.len(), self.csb.cols * k);
-        assert_eq!(y.len(), self.csb.rows * k);
-        y.fill(0.0);
-        let yp = SendPtr(y.as_mut_ptr());
-        let ypr = &yp;
+        obs::span!("apply.spmm");
         let csb = &self.csb;
-        let sched = &self.schedule;
         let dispatch = self.dispatch;
-        self.pool.for_each_chunked(sched.tasks.len(), 1, |ti| {
-            let task = sched.tasks[ti];
-            let sp = csb.tgt_leaves[task.tleaf as usize];
-            // SAFETY: this task exclusively owns its target leaf's rows;
-            // the slice covers only that disjoint span.
-            let seg: &mut [f32] = unsafe {
-                std::slice::from_raw_parts_mut(ypr.0.add(sp.lo as usize * k), sp.len() * k)
-            };
-            for &t in sched.blocks_of(&task) {
+        self.per_target(y, k, k, |_scratch, _tl, blocks, seg| {
+            for &t in blocks {
                 csb.block_matmul_seg_with(t as usize, x, seg, k, dispatch);
             }
         });
@@ -185,9 +224,10 @@ impl Engine {
     /// sparse blocklets keep the fused scalar loop.
     pub fn tsne_attr(&self, y: &[f32], d: usize, force: &mut [f32]) {
         assert_eq!(y.len(), self.csb.cols * d);
+        obs::span!("apply.tsne_attr");
         let csb = &self.csb;
         let dispatch = self.dispatch;
-        self.per_target(force, d, |scratch, _tl, blocks, seg| {
+        self.per_target(force, d, d + 1, |scratch, _tl, blocks, seg| {
             for &t in blocks {
                 tsne_block(csb, t as usize, y, d, dispatch, scratch, seg);
             }
@@ -234,9 +274,10 @@ impl Engine {
         assert_eq!(tcoords.len(), self.csb.rows * d);
         assert_eq!(scoords.len(), self.csb.cols * d);
         assert_eq!(x.len(), self.csb.cols * k);
+        obs::span!("apply.gauss");
         let csb = &self.csb;
         let dispatch = self.dispatch;
-        self.per_target(y_out, k, |scratch, _tl, blocks, seg| {
+        self.per_target(y_out, k, k, |scratch, _tl, blocks, seg| {
             for &t in blocks {
                 let b = &csb.blocks[t as usize];
                 let r0 = b.rows.lo as usize;
@@ -321,6 +362,7 @@ impl Engine {
         den: &mut Vec<f32>,
     ) {
         let n = self.csb.rows;
+        obs::span!("apply.meanshift");
         num.clear();
         num.resize(n * d, 0.0);
         den.clear();
@@ -337,7 +379,7 @@ impl Engine {
         let dpr = &dp;
         let csb = &self.csb;
         let dispatch = self.dispatch;
-        self.per_target(num, d, |scratch, tl, blocks, seg| {
+        self.per_target(num, d, d + 1, |scratch, tl, blocks, seg| {
             let sp = csb.tgt_leaves[tl];
             // SAFETY: disjoint target spans (same ownership as `seg`).
             let den_seg: &mut [f32] =

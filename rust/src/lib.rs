@@ -49,6 +49,7 @@
 //! regression) and the `krr` CLI subcommand.
 
 pub mod util;
+pub mod obs;
 pub mod par;
 pub mod data;
 pub mod embed;

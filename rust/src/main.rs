@@ -28,6 +28,7 @@ use nni::hmat::{FarFieldMode, FullKernelConfig};
 use nni::knn::ann::recall::recall_at_k;
 use nni::knn::ann::AnnParams;
 use nni::knn::KnnBackend;
+use nni::obs::{self, counters};
 use nni::order::{OrderingKind, Pipeline};
 use nni::profile::{beta, gamma};
 use nni::runtime::ArtifactRegistry;
@@ -54,12 +55,51 @@ fn main() {
         "tsne" => cmd_tsne(argv),
         "meanshift" => cmd_meanshift(argv),
         "krr" => cmd_krr(argv),
+        "stats" => cmd_stats(argv),
+        "trace-check" => cmd_trace_check(argv),
+        "bench-check" => cmd_bench_check(argv),
         _ => {
             eprintln!(
-                "usage: nni <info|synth|knn|reorder|gamma|spmv|tsne|meanshift|krr> [options]\n\
+                "usage: nni <info|synth|knn|reorder|gamma|spmv|tsne|meanshift|krr|stats|\
+                 trace-check|bench-check> [options]\n\
                  run `nni <cmd> --help` for per-command options"
             );
             std::process::exit(if cmd == "help" { 0 } else { 2 });
+        }
+    }
+}
+
+/// Shared observability option block, threaded through every subcommand:
+/// either flag enables span tracing for the run; the files are written by
+/// [`obs_end`] when the command body finishes.
+fn obs_opts(a: Args) -> Args {
+    a.opt("trace-out", "", "write Chrome trace-event JSON here (enables tracing)")
+        .opt("metrics-out", "", "write a flat counter-snapshot JSON here")
+}
+
+/// Pre-size the span slabs and enable tracing when either obs flag is set
+/// (call right after parsing, before any traced work).
+fn obs_begin(a: &Args) {
+    if !a.get("trace-out").is_empty() || !a.get("metrics-out").is_empty() {
+        obs::install(nni::par::pool::default_threads(), obs::DEFAULT_SPAN_CAP);
+        obs::set_enabled(true);
+    }
+}
+
+/// Write the requested trace/metrics files at the end of a command.
+fn obs_end(a: &Args) {
+    let trace = a.get("trace-out");
+    if !trace.is_empty() {
+        match obs::export::write_trace(&trace) {
+            Ok(()) => println!("trace -> {trace}"),
+            Err(e) => eprintln!("trace write failed ({trace}): {e}"),
+        }
+    }
+    let metrics = a.get("metrics-out");
+    if !metrics.is_empty() {
+        match obs::export::write_metrics(&metrics) {
+            Ok(()) => println!("metrics -> {metrics}"),
+            Err(e) => eprintln!("metrics write failed ({metrics}): {e}"),
         }
     }
 }
@@ -218,16 +258,20 @@ fn cmd_info() {
 }
 
 fn cmd_synth(argv: Vec<String>) {
-    let a = Args::new("generate a synthetic dataset")
-        .opt("workload", "sift", "sift|gist")
-        .opt_usize_min("n", 4096, 1, "number of points")
-        .opt_u64("seed", 42, "rng seed")
-        .opt("out", "dataset.nnid", "output path")
-        .parse_from(argv)
-        .unwrap_or_else(die);
+    let a = obs_opts(
+        Args::new("generate a synthetic dataset")
+            .opt("workload", "sift", "sift|gist")
+            .opt_usize_min("n", 4096, 1, "number of points")
+            .opt_u64("seed", 42, "rng seed")
+            .opt("out", "dataset.nnid", "output path"),
+    )
+    .parse_from(argv)
+    .unwrap_or_else(die);
+    obs_begin(&a);
     let ds = workload(&a.get("workload")).make_dataset(a.get_usize("n"), a.get_u64("seed"));
     ds.save(Path::new(&a.get("out"))).expect("write dataset");
     println!("wrote {} points (d={}) to {}", ds.n(), ds.d(), a.get("out"));
+    obs_end(&a);
 }
 
 fn load_or_synth(a: &Args) -> Dataset {
@@ -239,7 +283,7 @@ fn load_or_synth(a: &Args) -> Dataset {
 }
 
 fn cmd_knn(argv: Vec<String>) {
-    let a = knn_opts(
+    let a = obs_opts(knn_opts(
         Args::new("build a kNN graph and measure backend quality")
             .opt("input", "", "dataset file (else synthesize)")
             .opt("workload", "sift", "sift|gist")
@@ -248,9 +292,10 @@ fn cmd_knn(argv: Vec<String>) {
             .opt_u64("seed", 42, "rng seed")
             .opt_usize("threads", 0, "0 = all cores")
             .opt_usize("recall-sample", 256, "recall queries vs exact (0 = skip)"),
-    )
+    ))
     .parse_from(argv)
     .unwrap_or_else(die);
+    obs_begin(&a);
     let ds = load_or_synth(&a);
     if ds.n() < 2 {
         die::<()>("knn needs at least 2 points".into());
@@ -273,6 +318,7 @@ fn cmd_knn(argv: Vec<String>) {
             rep.recall, rep.sampled, rep.dist_ratio
         );
     }
+    obs_end(&a);
 }
 
 fn cmd_reorder(argv: Vec<String>) {
@@ -288,7 +334,8 @@ fn cmd_reorder(argv: Vec<String>) {
             .opt_u64("seed", 42, "rng seed")
             .opt_usize("threads", 0, "0 = all cores"),
     )));
-    let a = far_opts(opts, "off").parse_from(argv).unwrap_or_else(die);
+    let a = obs_opts(far_opts(opts, "off")).parse_from(argv).unwrap_or_else(die);
+    obs_begin(&a);
     // validate the kernel and far-mode choices up front — before the
     // expensive kNN build
     let kernel = kernel_kind(&a);
@@ -328,11 +375,19 @@ fn cmd_reorder(argv: Vec<String>) {
     if let Some(eng) = r.engine_with(a.get_usize("leaf-cap"), 0.6, build_threads, threads, kernel) {
         let csb = &eng.csb;
         println!("csb: {}", csb.describe());
-        let (covered, total) = csb.coverage();
+        // coverage/fill from the global observability snapshot — the same
+        // numbers `--metrics-out` exports, instead of a second recompute
+        let snap = counters::snapshot();
+        let (covered, total) = (snap.get("csb.covered_area"), snap.get("csb.total_area"));
         println!(
             "coverage: stored blocks span {covered} of {total} entries ({:.2}%); \
              the rest is the dropped far field (--far aca compresses it)",
-            csb.covered_fraction() * 100.0
+            snap.covered_fraction() * 100.0
+        );
+        println!(
+            "fill: dense blocks {:.1}% occupied over {} tree levels",
+            snap.dense_fill_ratio() * 100.0,
+            snap.levels.len()
         );
         println!("{}", kernel_line(kernel));
         let k = a.get_usize("rhs");
@@ -375,16 +430,20 @@ fn cmd_reorder(argv: Vec<String>) {
             None => println!("full-kernel: unavailable (ordering carries no tree)"),
         }
     }
+    obs_end(&a);
 }
 
 fn cmd_gamma(argv: Vec<String>) {
-    let a = Args::new("gamma scores across orderings (Table 1 row)")
-        .opt("workload", "sift", "sift|gist")
-        .opt_usize_min("n", 4096, 1, "points")
-        .opt_u64("seed", 42, "rng seed")
-        .opt_usize("threads", 0, "0 = all cores")
-        .parse_from(argv)
-        .unwrap_or_else(die);
+    let a = obs_opts(
+        Args::new("gamma scores across orderings (Table 1 row)")
+            .opt("workload", "sift", "sift|gist")
+            .opt_usize_min("n", 4096, 1, "points")
+            .opt_u64("seed", 42, "rng seed")
+            .opt_usize("threads", 0, "0 = all cores"),
+    )
+    .parse_from(argv)
+    .unwrap_or_else(die);
+    obs_begin(&a);
     let wl = workload(&a.get("workload"));
     let (ds, m) = wl.make(a.get_usize("n"), a.get_u64("seed"), a.get_usize("threads"));
     let sigma = wl.k() as f64 / 2.0;
@@ -395,6 +454,7 @@ fn cmd_gamma(argv: Vec<String>) {
         print!("{}={gm:.1}  ", kind.label());
     }
     println!();
+    obs_end(&a);
 }
 
 fn cmd_spmv(argv: Vec<String>) {
@@ -408,7 +468,8 @@ fn cmd_spmv(argv: Vec<String>) {
             .opt_usize_min("block-cap", 256, 1, "full-kernel tree-cut capacity (--far aca)")
             .opt_usize_min("rhs", 1, 1, "multi-RHS width: >1 also times batched spmm paths"),
     ));
-    let a = far_opts(opts, "off").parse_from(argv).unwrap_or_else(die);
+    let a = obs_opts(far_opts(opts, "off")).parse_from(argv).unwrap_or_else(die);
+    obs_begin(&a);
     // validate the kernel and far-mode choices up front — before the
     // expensive kNN build
     let kind = kernel_kind(&a);
@@ -489,10 +550,11 @@ fn cmd_spmv(argv: Vec<String>) {
             (ds.n() as u64 * ds.n() as u64) * 4
         );
     }
+    obs_end(&a);
 }
 
 fn cmd_tsne(argv: Vec<String>) {
-    let a = kernel_opts(build_opts(knn_opts(
+    let a = obs_opts(kernel_opts(build_opts(knn_opts(
         Args::new("t-SNE end to end")
             .opt("input", "", "dataset file (else synthesize)")
             .opt("workload", "sift", "sift|gist")
@@ -504,9 +566,10 @@ fn cmd_tsne(argv: Vec<String>) {
             .opt_usize("threads", 0, "0 = all cores")
             .opt("out", "", "embedding output path (.nnid)")
             .flag("pjrt", "route dense blocks to the PJRT artifacts"),
-    )))
+    ))))
     .parse_from(argv)
     .unwrap_or_else(die);
+    obs_begin(&a);
     let ds = load_or_synth(&a);
     let cfg = tsne::TsneConfig {
         iters: a.get_usize("iters"),
@@ -538,10 +601,11 @@ fn cmd_tsne(argv: Vec<String>) {
         res.embedding.save(Path::new(&out)).expect("write embedding");
         println!("embedding -> {out}");
     }
+    obs_end(&a);
 }
 
 fn cmd_meanshift(argv: Vec<String>) {
-    let a = kernel_opts(build_opts(knn_opts(
+    let a = obs_opts(kernel_opts(build_opts(knn_opts(
         Args::new("mean shift mode finding")
             .opt("input", "", "dataset file (else synthesize blobs)")
             .opt_usize_min("n", 2000, 1, "points when synthesizing")
@@ -553,9 +617,10 @@ fn cmd_meanshift(argv: Vec<String>) {
             .opt_usize("refresh", 5, "profile refresh cadence")
             .opt_u64("seed", 42, "rng seed")
             .opt_usize("threads", 0, "0 = all cores"),
-    )))
+    ))))
     .parse_from(argv)
     .unwrap_or_else(die);
+    obs_begin(&a);
     let input = a.get("input");
     let ds = if input.is_empty() {
         SynthSpec::blobs(
@@ -590,6 +655,7 @@ fn cmd_meanshift(argv: Vec<String>) {
         let count = res.assignment.iter().filter(|&&x| x == m).count();
         println!("mode {m}: {count} points @ {:?}", &c[..c.len().min(4)]);
     }
+    obs_end(&a);
 }
 
 fn cmd_krr(argv: Vec<String>) {
@@ -606,7 +672,8 @@ fn cmd_krr(argv: Vec<String>) {
             .opt_u64("seed", 42, "rng seed")
             .opt_usize("threads", 0, "0 = all cores"),
     ));
-    let a = far_opts(opts, "aca").parse_from(argv).unwrap_or_else(die);
+    let a = obs_opts(far_opts(opts, "aca")).parse_from(argv).unwrap_or_else(die);
+    obs_begin(&a);
     let kernel = kernel_kind(&a);
     let far = far_mode(&a);
     let ds = load_or_synth(&a);
@@ -646,6 +713,107 @@ fn cmd_krr(argv: Vec<String>) {
         "cg: {} iterations, rel residual {:.3e}, train rmse {:.4}  ({t:.2}s total)",
         res.iterations, res.rel_residual, res.train_rmse
     );
+    obs_end(&a);
+}
+
+/// `nni stats`: run a small end-to-end pipeline (tree + PCA + CSB + apply
+/// engine + ACA far field) with tracing on, then print the human
+/// observability report.  `--trace-out`/`--metrics-out` also work here, so
+/// this doubles as the quickest way to get a Perfetto-loadable trace.
+fn cmd_stats(argv: Vec<String>) {
+    let opts = kernel_opts(build_opts(
+        Args::new("exercise every subsystem and print the observability report")
+            .opt("workload", "sift", "sift|gist")
+            .opt_usize_min("n", 2048, 64, "points")
+            .opt_usize_min("rhs", 4, 1, "multi-RHS width of the timed applies")
+            .opt_usize_min("leaf-cap", 256, 1, "CSB block capacity")
+            .opt_usize_min("block-cap", 256, 1, "full-kernel tree-cut capacity")
+            .opt_usize_min("applies", 8, 1, "engine spmm calls to record")
+            .opt_u64("seed", 42, "rng seed")
+            .opt_usize("threads", 0, "0 = all cores"),
+    ));
+    let a = obs_opts(far_opts(opts, "aca")).parse_from(argv).unwrap_or_else(die);
+    // stats is *about* the observability layer: tracing is always on here
+    obs::install(nni::par::pool::default_threads(), obs::DEFAULT_SPAN_CAP);
+    obs::set_enabled(true);
+    let kernel = kernel_kind(&a);
+    let wl = workload(&a.get("workload"));
+    let n = a.get_usize("n");
+    let threads = a.get_usize("threads");
+    let build_threads = resolve_build_threads(&a);
+    let (ds, m) = wl.make(n, a.get_u64("seed"), threads);
+    let r = Pipeline::dual_tree(3)
+        .with_seed(a.get_u64("seed"))
+        .with_build_threads(build_threads)
+        .run(&ds, &m);
+    let eng = r
+        .engine_with(a.get_usize("leaf-cap"), 0.6, build_threads, threads, kernel)
+        .expect("dual-tree ordering carries a tree");
+    let k = a.get_usize("rhs");
+    let xk = vec![1.0f32; n * k];
+    let mut yk = vec![0.0f32; n * k];
+    for _ in 0..a.get_usize("applies") {
+        eng.spmm(&xk, &mut yk, k);
+    }
+    if let Some((cfg, _h)) = full_kernel_cfg(&a, &ds, a.get_usize("block-cap")) {
+        if let Some(fk) = r.full_kernel_engine(&ds, &cfg, build_threads, threads, kernel) {
+            let x = vec![1.0f32; n];
+            let mut y = vec![0.0f32; n];
+            fk.spmv(&x, &mut y);
+        }
+    }
+    println!("nni stats — {} n={n} rhs={k}", wl.name());
+    print!("{}", obs::export::human_report(&counters::snapshot()));
+    obs_end(&a);
+}
+
+/// `nni trace-check`: validate emitted Chrome traces (the CI gate behind
+/// the reorder trace smoke) — parse, per-event shape, and presence of the
+/// required subsystem prefixes.
+fn cmd_trace_check(argv: Vec<String>) {
+    let a = Args::new("validate Chrome trace-event JSON emitted via --trace-out")
+        .opt(
+            "require",
+            "tree,csb,hmat,apply",
+            "comma-separated span-name prefixes that must appear",
+        )
+        .parse_from(argv)
+        .unwrap_or_else(die);
+    if a.positional().is_empty() {
+        die::<()>("trace-check needs at least one trace file".into());
+    }
+    let require = a.get("require");
+    let required: Vec<&str> =
+        require.split(',').map(str::trim).filter(|s| !s.is_empty()).collect();
+    for f in a.positional() {
+        let text =
+            std::fs::read_to_string(f).unwrap_or_else(|e| die(format!("{f}: {e}")));
+        match obs::export::check_trace(&text, &required) {
+            Ok(events) => println!("{f}: ok ({events} events; subsystems {require})"),
+            Err(e) => die::<()>(format!("{f}: {e}")),
+        }
+    }
+}
+
+/// `nni bench-check`: validate `BENCH_*.json` records (the CI honesty
+/// gate) — schema plus, with `--no-pending`, rejection of records the
+/// smoke refresh should have measured but did not.
+fn cmd_bench_check(argv: Vec<String>) {
+    let a = Args::new("validate BENCH_*.json bench records")
+        .flag("no-pending", "fail records still pending with no measured points")
+        .parse_from(argv)
+        .unwrap_or_else(die);
+    if a.positional().is_empty() {
+        die::<()>("bench-check needs at least one BENCH_*.json".into());
+    }
+    for f in a.positional() {
+        let text =
+            std::fs::read_to_string(f).unwrap_or_else(|e| die(format!("{f}: {e}")));
+        match nni::bench::check_record(&text, a.get_flag("no-pending")) {
+            Ok(status) => println!("{f}: ok ({status})"),
+            Err(e) => die::<()>(format!("{f}: {e}")),
+        }
+    }
 }
 
 fn die<T>(e: String) -> T {

@@ -1,0 +1,300 @@
+//! Global profile counters — the runtime side of the paper's profile
+//! measure: block fill, panel traffic, GEMM flops, ACA ranks, schedule
+//! imbalance, and serving occupancy, as process-global relaxed atomics.
+//!
+//! Counters are always on: one relaxed `fetch_add` per update, no
+//! allocation, no locks.  Hot paths (the apply engine) amortize further by
+//! adding *schedule-static* totals once per call instead of once per block
+//! (see `spmv::multilevel::ApplySchedule`).  Spans — the opt-in, heavier
+//! half of the observability layer — live in [`crate::obs::trace`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+macro_rules! counters {
+    ($($variant:ident => $name:literal),+ $(,)?) => {
+        /// Counter identifiers; snapshot/export names are dotted
+        /// `subsystem.quantity` strings (see [`COUNTER_NAMES`]).
+        #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+        pub enum Counter { $($variant),+ }
+
+        /// Export names, index-aligned with the [`Counter`] discriminants.
+        pub const COUNTER_NAMES: &[&str] = &[$($name),+];
+    };
+}
+
+counters! {
+    // csb build (published once per HierCsb::build_with_par)
+    CsbDenseBlocks => "csb.dense_blocks",
+    CsbSparseBlocks => "csb.sparse_blocks",
+    CsbDenseCells => "csb.dense_cells",
+    CsbDenseNnz => "csb.dense_nnz",
+    CsbNnz => "csb.nnz",
+    CsbCoveredArea => "csb.covered_area",
+    CsbTotalArea => "csb.total_area",
+    CsbPanelBytes => "csb.panel_bytes",
+    // tree / embed builds
+    TreeBuilds => "tree.builds",
+    TreeNodes => "tree.nodes",
+    TreeLeaves => "tree.leaves",
+    PcaRuns => "embed.pca_runs",
+    // apply engine (near field)
+    ApplyCalls => "apply.calls",
+    ApplyTasks => "apply.tasks",
+    ApplyGemmFlops => "apply.gemm_flops",
+    ApplyPanelBytes => "apply.panel_bytes",
+    ApplySparseNnz => "apply.sparse_nnz",
+    ApplyWorkerNsTotal => "apply.worker_ns_total",
+    ApplyWorkerNsMax => "apply.worker_ns_max",
+    ApplyWorkers => "apply.workers",
+    // hmat far field
+    AcaBlocks => "aca.blocks",
+    AcaRankSum => "aca.rank_sum",
+    AcaRankMax => "aca.rank_max",
+    AcaFactorBytes => "aca.factor_bytes",
+    AcaDenseFallbacks => "aca.dense_fallbacks",
+    FarApplyCalls => "far.apply_calls",
+    FarGemmFlops => "far.gemm_flops",
+    // solvers / apps
+    CgIterations => "cg.iterations",
+    TsneIterations => "tsne.iterations",
+    MeanshiftIterations => "meanshift.iterations",
+    // coordinator (global mirror of the per-instance coordinator::Metrics)
+    CoordRustNs => "coord.rust_ns",
+    CoordPjrtNs => "coord.pjrt_ns",
+    CoordRustBlocks => "coord.rust_blocks",
+    CoordPjrtSingleCalls => "coord.pjrt_single_calls",
+    CoordPjrtBatchedCalls => "coord.pjrt_batched_calls",
+    CoordPjrtBlocks => "coord.pjrt_blocks",
+    CoordBatchedQueries => "coord.batched_queries",
+    CoordServeCalls => "coord.serve_calls",
+    CoordNnzProcessed => "coord.nnz_processed",
+    // serve path
+    ServeQueueDepthMax => "serve.queue_depth_max",
+    ServeBatchSlots => "serve.batch_slots",
+    ServeBatchOccupied => "serve.batch_occupied",
+    // the tracing layer's own bookkeeping
+    SpansDropped => "trace.spans_dropped",
+}
+
+const N: usize = COUNTER_NAMES.len();
+static CELLS: [AtomicU64; N] = [const { AtomicU64::new(0) }; N];
+
+/// Add `v` to a counter (relaxed; never allocates).
+#[inline]
+pub fn add(c: Counter, v: u64) {
+    CELLS[c as usize].fetch_add(v, Ordering::Relaxed);
+}
+
+/// Raise a high-water-mark counter to at least `v` (relaxed `fetch_max`).
+#[inline]
+pub fn raise(c: Counter, v: u64) {
+    CELLS[c as usize].fetch_max(v, Ordering::Relaxed);
+}
+
+/// Current value of one counter.
+#[inline]
+pub fn get(c: Counter) -> u64 {
+    CELLS[c as usize].load(Ordering::Relaxed)
+}
+
+/// Per-tree-level block statistics (level = depth of the block's target
+/// leaf in the ordering tree); levels at/past [`MAX_LEVELS`] fold into the
+/// last bucket.
+pub const MAX_LEVELS: usize = 32;
+
+/// Which per-level statistic to update.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LevelStat {
+    Blocks,
+    DenseBlocks,
+    Nnz,
+    Cells,
+}
+
+static LEVEL_BLOCKS: [AtomicU64; MAX_LEVELS] = [const { AtomicU64::new(0) }; MAX_LEVELS];
+static LEVEL_DENSE: [AtomicU64; MAX_LEVELS] = [const { AtomicU64::new(0) }; MAX_LEVELS];
+static LEVEL_NNZ: [AtomicU64; MAX_LEVELS] = [const { AtomicU64::new(0) }; MAX_LEVELS];
+static LEVEL_CELLS: [AtomicU64; MAX_LEVELS] = [const { AtomicU64::new(0) }; MAX_LEVELS];
+
+fn level_array(stat: LevelStat) -> &'static [AtomicU64; MAX_LEVELS] {
+    match stat {
+        LevelStat::Blocks => &LEVEL_BLOCKS,
+        LevelStat::DenseBlocks => &LEVEL_DENSE,
+        LevelStat::Nnz => &LEVEL_NNZ,
+        LevelStat::Cells => &LEVEL_CELLS,
+    }
+}
+
+/// Add `v` to one per-level statistic.
+#[inline]
+pub fn level_add(stat: LevelStat, level: usize, v: u64) {
+    level_array(stat)[level.min(MAX_LEVELS - 1)].fetch_add(v, Ordering::Relaxed);
+}
+
+/// One occupied level of the snapshot's per-level table.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LevelRow {
+    pub level: usize,
+    pub blocks: u64,
+    pub dense_blocks: u64,
+    pub nnz: u64,
+    pub cells: u64,
+}
+
+impl LevelRow {
+    /// Fill ratio of the level's stored blocks: nnz over covered cells.
+    pub fn fill_ratio(&self) -> f64 {
+        if self.cells == 0 {
+            0.0
+        } else {
+            self.nnz as f64 / self.cells as f64
+        }
+    }
+}
+
+/// A point-in-time copy of every counter plus the occupied level rows.
+#[derive(Clone, Debug, Default)]
+pub struct Snapshot {
+    /// `(export name, value)`, in [`COUNTER_NAMES`] order.
+    pub counters: Vec<(&'static str, u64)>,
+    /// Occupied per-level rows (empty levels omitted), ascending level.
+    pub levels: Vec<LevelRow>,
+}
+
+impl Snapshot {
+    /// Value of a counter by export name (0 when absent).
+    pub fn get(&self, name: &str) -> u64 {
+        self.counters
+            .iter()
+            .find(|(n, _)| *n == name)
+            .map(|&(_, v)| v)
+            .unwrap_or(0)
+    }
+
+    /// Schedule imbalance: max over mean of per-worker busy time across
+    /// apply calls (1.0 = perfectly balanced, 0.0 = never measured —
+    /// per-task timing runs only while tracing is enabled).
+    pub fn worker_imbalance(&self) -> f64 {
+        let total = self.get("apply.worker_ns_total");
+        let max = self.get("apply.worker_ns_max");
+        let workers = self.get("apply.workers");
+        if total == 0 || workers == 0 {
+            return 0.0;
+        }
+        max as f64 * workers as f64 / total as f64
+    }
+
+    /// Mean ACA rank over compressed far-field blocks.
+    pub fn mean_aca_rank(&self) -> f64 {
+        let blocks = self.get("aca.blocks");
+        if blocks == 0 {
+            0.0
+        } else {
+            self.get("aca.rank_sum") as f64 / blocks as f64
+        }
+    }
+
+    /// Near-field index-space coverage: covered block area over `rows·cols`.
+    pub fn covered_fraction(&self) -> f64 {
+        let total = self.get("csb.total_area");
+        if total == 0 {
+            0.0
+        } else {
+            self.get("csb.covered_area") as f64 / total as f64
+        }
+    }
+
+    /// Fill ratio of the dense-stored blocks: their nnz over their cells.
+    pub fn dense_fill_ratio(&self) -> f64 {
+        let cells = self.get("csb.dense_cells");
+        if cells == 0 {
+            0.0
+        } else {
+            self.get("csb.dense_nnz") as f64 / cells as f64
+        }
+    }
+}
+
+/// Copy every counter and the occupied level rows.
+pub fn snapshot() -> Snapshot {
+    let counters = COUNTER_NAMES
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| (n, CELLS[i].load(Ordering::Relaxed)))
+        .collect();
+    let mut levels = Vec::new();
+    for l in 0..MAX_LEVELS {
+        let row = LevelRow {
+            level: l,
+            blocks: LEVEL_BLOCKS[l].load(Ordering::Relaxed),
+            dense_blocks: LEVEL_DENSE[l].load(Ordering::Relaxed),
+            nnz: LEVEL_NNZ[l].load(Ordering::Relaxed),
+            cells: LEVEL_CELLS[l].load(Ordering::Relaxed),
+        };
+        if row.blocks != 0 || row.nnz != 0 {
+            levels.push(row);
+        }
+    }
+    Snapshot { counters, levels }
+}
+
+/// Zero every counter and level row (tests and CLI phase boundaries).
+pub fn reset() {
+    for c in &CELLS {
+        c.store(0, Ordering::Relaxed);
+    }
+    for arr in [&LEVEL_BLOCKS, &LEVEL_DENSE, &LEVEL_NNZ, &LEVEL_CELLS] {
+        for c in arr.iter() {
+            c.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The registry is process-global and the test harness runs tests
+    // concurrently, so assertions are monotonic (>=), never exact.
+
+    #[test]
+    fn add_is_monotonic() {
+        let before = get(Counter::CgIterations);
+        add(Counter::CgIterations, 3);
+        assert!(get(Counter::CgIterations) >= before + 3);
+    }
+
+    #[test]
+    fn raise_sets_high_water_mark() {
+        raise(Counter::ServeQueueDepthMax, 11);
+        assert!(get(Counter::ServeQueueDepthMax) >= 11);
+    }
+
+    #[test]
+    fn names_align_with_variants() {
+        assert_eq!(COUNTER_NAMES.len(), N);
+        assert_eq!(COUNTER_NAMES[Counter::CsbDenseBlocks as usize], "csb.dense_blocks");
+        assert_eq!(COUNTER_NAMES[Counter::SpansDropped as usize], "trace.spans_dropped");
+    }
+
+    #[test]
+    fn snapshot_reads_levels() {
+        level_add(LevelStat::Blocks, 3, 2);
+        level_add(LevelStat::Nnz, 3, 40);
+        level_add(LevelStat::Cells, 3, 100);
+        let snap = snapshot();
+        let row = snap.levels.iter().find(|r| r.level == 3).expect("level 3 occupied");
+        assert!(row.blocks >= 2);
+        assert!(row.fill_ratio() > 0.0);
+    }
+
+    #[test]
+    fn derived_ratios_handle_zero_denominators() {
+        let empty = Snapshot::default();
+        assert_eq!(empty.worker_imbalance(), 0.0);
+        assert_eq!(empty.mean_aca_rank(), 0.0);
+        assert_eq!(empty.covered_fraction(), 0.0);
+        assert_eq!(empty.dense_fill_ratio(), 0.0);
+        assert_eq!(empty.get("no.such.counter"), 0);
+    }
+}

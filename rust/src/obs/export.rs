@@ -1,0 +1,228 @@
+//! Exporters over the observability registry: Chrome trace-event JSON
+//! (loadable in `chrome://tracing` / Perfetto), a flat metrics snapshot,
+//! and the human `nni stats` report.
+
+use crate::obs::counters::Snapshot;
+use crate::obs::trace::SpanRec;
+use crate::util::json::{self, num, obj, s, Json};
+
+/// Spans → Chrome trace-event JSON: one `"ph": "X"` *complete* event per
+/// span (start + duration in µs), worker slot as the `tid` — the form both
+/// `chrome://tracing` and Perfetto load without a metadata preamble.
+pub fn chrome_trace(spans: &[SpanRec]) -> Json {
+    let events = spans
+        .iter()
+        .map(|sp| {
+            obj(vec![
+                ("name", s(sp.name)),
+                ("ph", s("X")),
+                ("ts", num(sp.t0_us as f64)),
+                ("dur", num(sp.t1_us.saturating_sub(sp.t0_us) as f64)),
+                ("pid", num(1.0)),
+                ("tid", num(sp.worker as f64)),
+            ])
+        })
+        .collect();
+    Json::Arr(events)
+}
+
+/// Counter snapshot → flat metrics JSON: raw counters, derived ratios
+/// (the paper's profile measure), and the per-level fill table.
+pub fn metrics_json(snap: &Snapshot) -> Json {
+    let counters = obj(snap
+        .counters
+        .iter()
+        .map(|&(name, v)| (name, num(v as f64)))
+        .collect());
+    let derived = obj(vec![
+        ("apply.worker_imbalance", num(snap.worker_imbalance())),
+        ("aca.mean_rank", num(snap.mean_aca_rank())),
+        ("csb.covered_fraction", num(snap.covered_fraction())),
+        ("csb.dense_fill_ratio", num(snap.dense_fill_ratio())),
+    ]);
+    let levels = Json::Arr(
+        snap.levels
+            .iter()
+            .map(|r| {
+                obj(vec![
+                    ("level", num(r.level as f64)),
+                    ("blocks", num(r.blocks as f64)),
+                    ("dense_blocks", num(r.dense_blocks as f64)),
+                    ("nnz", num(r.nnz as f64)),
+                    ("cells", num(r.cells as f64)),
+                    ("fill_ratio", num(r.fill_ratio())),
+                ])
+            })
+            .collect(),
+    );
+    obj(vec![
+        ("counters", counters),
+        ("derived", derived),
+        ("levels", levels),
+    ])
+}
+
+/// Drain all closed spans and write the Chrome trace to `path`.
+pub fn write_trace(path: &str) -> std::io::Result<()> {
+    let spans = crate::obs::trace::drain();
+    std::fs::write(path, chrome_trace(&spans).to_string())
+}
+
+/// Snapshot the counters and write the metrics JSON to `path`.
+pub fn write_metrics(path: &str) -> std::io::Result<()> {
+    std::fs::write(path, metrics_json(&crate::obs::counters::snapshot()).to_string())
+}
+
+/// Human-readable counter report (the `nni stats` body): non-zero counters
+/// grouped by subsystem, derived ratios, and the per-level fill table.
+pub fn human_report(snap: &Snapshot) -> String {
+    let mut out = String::new();
+    out.push_str("== counters ==\n");
+    let mut group = "";
+    for &(name, v) in &snap.counters {
+        if v == 0 {
+            continue;
+        }
+        let sub = name.split('.').next().unwrap_or(name);
+        if sub != group {
+            group = sub;
+            out.push_str(&format!("[{group}]\n"));
+        }
+        out.push_str(&format!("  {name} = {v}\n"));
+    }
+    out.push_str("== derived ==\n");
+    out.push_str(&format!(
+        "  apply.worker_imbalance = {:.3}\n  aca.mean_rank = {:.2}\n  \
+         csb.covered_fraction = {:.4}\n  csb.dense_fill_ratio = {:.4}\n",
+        snap.worker_imbalance(),
+        snap.mean_aca_rank(),
+        snap.covered_fraction(),
+        snap.dense_fill_ratio()
+    ));
+    if !snap.levels.is_empty() {
+        out.push_str("== levels (level blocks dense nnz cells fill) ==\n");
+        for r in &snap.levels {
+            out.push_str(&format!(
+                "  L{:<2} {:>6} {:>6} {:>10} {:>12} {:.3}\n",
+                r.level,
+                r.blocks,
+                r.dense_blocks,
+                r.nnz,
+                r.cells,
+                r.fill_ratio()
+            ));
+        }
+    }
+    out
+}
+
+/// Validate an emitted Chrome trace: it must parse, every event must carry
+/// `name`/`ts`/`dur`, and at least one span must come from each required
+/// subsystem prefix (the text before the first `.` of a span name).
+/// Returns the event count.
+pub fn check_trace(text: &str, required_subsystems: &[&str]) -> Result<usize, String> {
+    let v = json::parse(text)?;
+    let events = v.as_arr().ok_or("trace is not a JSON array")?;
+    for (i, e) in events.iter().enumerate() {
+        let o = e.as_obj().ok_or_else(|| format!("event {i} is not an object"))?;
+        for key in ["name", "ts", "dur"] {
+            if !o.contains_key(key) {
+                return Err(format!("event {i} missing \"{key}\""));
+            }
+        }
+    }
+    for want in required_subsystems {
+        let hit = events.iter().any(|e| {
+            e.get("name")
+                .and_then(|n| n.as_str())
+                .map(|n| n.split('.').next() == Some(*want))
+                .unwrap_or(false)
+        });
+        if !hit {
+            return Err(format!("no spans from subsystem \"{want}\""));
+        }
+    }
+    Ok(events.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::counters::LevelRow;
+
+    fn spans() -> Vec<SpanRec> {
+        vec![
+            SpanRec {
+                name: "tree.build",
+                t0_us: 0,
+                t1_us: 50,
+                depth: 0,
+                worker: 0,
+            },
+            SpanRec {
+                name: "csb.build.fill",
+                t0_us: 10,
+                t1_us: 30,
+                depth: 1,
+                worker: 0,
+            },
+        ]
+    }
+
+    #[test]
+    fn chrome_trace_emits_complete_events() {
+        let j = chrome_trace(&spans());
+        let text = j.to_string();
+        let back = json::parse(&text).unwrap();
+        let evs = back.as_arr().unwrap();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(evs[1].get("dur").unwrap().as_f64(), Some(20.0));
+        assert_eq!(evs[1].get("tid").unwrap().as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn check_trace_accepts_and_rejects() {
+        let text = chrome_trace(&spans()).to_string();
+        assert_eq!(check_trace(&text, &["tree", "csb"]), Ok(2));
+        assert!(check_trace(&text, &["hmat"]).is_err());
+        assert!(check_trace("not json", &[]).is_err());
+        assert!(check_trace("{\"a\":1}", &[]).is_err());
+    }
+
+    #[test]
+    fn metrics_json_has_counters_derived_levels() {
+        let snap = Snapshot {
+            counters: vec![("apply.gemm_flops", 128), ("aca.factor_bytes", 64)],
+            levels: vec![LevelRow {
+                level: 2,
+                blocks: 4,
+                dense_blocks: 1,
+                nnz: 50,
+                cells: 100,
+            }],
+        };
+        let j = metrics_json(&snap);
+        assert_eq!(
+            j.get("counters").unwrap().get("apply.gemm_flops").unwrap().as_f64(),
+            Some(128.0)
+        );
+        assert!(j.get("derived").unwrap().get("apply.worker_imbalance").is_some());
+        let lv = j.get("levels").unwrap().as_arr().unwrap();
+        assert_eq!(lv[0].get("fill_ratio").unwrap().as_f64(), Some(0.5));
+        // round-trips through the parser
+        assert!(json::parse(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn human_report_sections() {
+        let snap = Snapshot {
+            counters: vec![("cg.iterations", 7), ("csb.nnz", 0)],
+            levels: vec![],
+        };
+        let rep = human_report(&snap);
+        assert!(rep.contains("cg.iterations = 7"));
+        assert!(!rep.contains("csb.nnz"), "zero counters omitted");
+        assert!(rep.contains("== derived =="));
+    }
+}

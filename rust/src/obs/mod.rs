@@ -1,0 +1,71 @@
+//! Observability: hierarchical tracing spans, global profile counters,
+//! and Chrome-trace / JSON metrics exporters.
+//!
+//! The layer is **global and feature-light** by design:
+//!
+//! * [`counters`] — always-on relaxed atomics for the quantities the
+//!   paper's profile measure is made of (block fill, panel bytes, GEMM
+//!   flops, ACA ranks, schedule imbalance, CG iterations, serve
+//!   occupancy).  One registry; `coordinator::Metrics` mirrors into it.
+//! * [`trace`] — opt-in spans (`obs::span!("csb.build.fill")`) recorded
+//!   into per-worker fixed-capacity slabs pre-sized at engine build, so
+//!   steady-state applies allocate nothing even while traced.
+//! * [`export`] — Chrome trace-event JSON (`--trace-out`, Perfetto-
+//!   loadable), a flat metrics snapshot (`--metrics-out`), and the human
+//!   `nni stats` report.
+
+pub mod counters;
+pub mod export;
+pub mod trace;
+
+pub use counters::{Counter, LevelStat, Snapshot};
+pub use trace::{set_worker, SpanGuard};
+
+/// Re-export so call sites read `obs::span!("...")`.
+pub use crate::obs_span as span;
+
+/// Record a hierarchical span over the enclosing scope (inert unless
+/// tracing is enabled; see [`crate::obs::trace`] for the cost model).
+#[macro_export]
+macro_rules! obs_span {
+    ($name:expr) => {
+        let _obs_span_guard = $crate::obs::trace::SpanGuard::enter($name);
+    };
+}
+
+/// Default per-worker span-slab capacity: 32k records (~1.3 MB/worker),
+/// comfortably above a full pipeline run plus thousands of traced applies.
+pub const DEFAULT_SPAN_CAP: usize = 1 << 15;
+
+/// Pre-size the per-worker span slabs (idempotent; capacity only grows).
+/// Called at engine build and by the CLI before enabling tracing.
+pub fn install(workers: usize, cap_per_worker: usize) {
+    trace::install(workers, cap_per_worker);
+}
+
+/// Turn span recording on or off.  Counters are unconditional.
+pub fn set_enabled(on: bool) {
+    trace::set_enabled(on);
+}
+
+/// Whether spans are currently being recorded.
+#[inline]
+pub fn enabled() -> bool {
+    trace::enabled()
+}
+
+/// Time `f` and record a span around it: returns `(value, seconds)`.
+/// The timing is unconditional (callers fold it into their own
+/// accumulators); the span is recorded only while tracing is enabled.
+pub fn timed<T>(name: &'static str, f: impl FnOnce() -> T) -> (T, f64) {
+    let _g = trace::SpanGuard::enter(name);
+    let t0 = std::time::Instant::now();
+    let v = f();
+    (v, t0.elapsed().as_secs_f64())
+}
+
+/// Reset spans and counters (tests and CLI phase boundaries).
+pub fn reset() {
+    trace::reset();
+    counters::reset();
+}

@@ -1,0 +1,233 @@
+//! Zero-allocation hierarchical tracing spans.
+//!
+//! Every worker owns a fixed-capacity **slab** of span records, pre-sized
+//! at engine build ([`install`]); recording a span is a relaxed enabled
+//! check, one `Instant` read, and a short slab-mutex hold — no allocation
+//! once the slab capacity is reserved, so the steady-state apply path
+//! stays allocation-free with tracing enabled (asserted by
+//! `rust/tests/alloc_steady_state.rs`).
+//!
+//! Workers identify themselves through a thread-local slot set by the
+//! thread pool ([`set_worker`]); the calling thread defaults to slot 0.
+//! Nesting depth is tracked per slab via an open-span stack, and
+//! [`drain`] yields closed records sorted by `(worker, start)` — the
+//! order the Chrome-trace exporter wants.
+//!
+//! Scope semantics: `obs::span!("name")` records until the end of the
+//! enclosing scope.  Two `span!`s in one scope shadow (both close at
+//! scope end); for sequential phases use nested blocks or
+//! [`crate::obs::timed`].
+
+use crate::obs::counters::{self, Counter};
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
+
+/// Upper bound on distinct worker slots (slabs are statically allocated).
+pub const MAX_WORKERS: usize = 64;
+
+/// One closed (or still-open) span.
+#[derive(Clone, Copy, Debug)]
+pub struct SpanRec {
+    pub name: &'static str,
+    /// Start/end, microseconds since the process trace epoch.  `t1_us ==
+    /// u64::MAX` marks a still-open span.
+    pub t0_us: u64,
+    pub t1_us: u64,
+    /// Nesting depth on this worker at entry (0 = top level).
+    pub depth: u32,
+    /// Worker slot the span was recorded on.
+    pub worker: u32,
+}
+
+struct Slab {
+    recs: Vec<SpanRec>,
+    /// Indices into `recs` of currently-open spans (LIFO).
+    open: Vec<u32>,
+    dropped: u64,
+}
+
+impl Slab {
+    const fn new() -> Slab {
+        Slab {
+            recs: Vec::new(),
+            open: Vec::new(),
+            dropped: 0,
+        }
+    }
+}
+
+static SLABS: [Mutex<Slab>; MAX_WORKERS] = [const { Mutex::new(Slab::new()) }; MAX_WORKERS];
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+thread_local! {
+    static WORKER: Cell<usize> = const { Cell::new(0) };
+}
+
+fn lock(w: usize) -> MutexGuard<'static, Slab> {
+    lock_of(&SLABS[w])
+}
+
+fn lock_of(slab: &'static Mutex<Slab>) -> MutexGuard<'static, Slab> {
+    // A panic while holding a slab lock poisons it; tracing must keep
+    // working (tests assert on panics elsewhere), so poisoning is ignored.
+    slab.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[inline]
+fn now_us() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_micros() as u64
+}
+
+/// Bind the current thread to a worker slot (called by the thread pool;
+/// out-of-range slots fold into the last slab).
+#[inline]
+pub fn set_worker(w: usize) {
+    WORKER.with(|c| c.set(w.min(MAX_WORKERS - 1)));
+}
+
+/// The current thread's worker slot.
+#[inline]
+pub fn worker() -> usize {
+    WORKER.with(|c| c.get())
+}
+
+/// Reserve slab capacity for `workers` slots at `cap_per_worker` records
+/// each (idempotent and monotonic: capacity only grows).  Also pins the
+/// trace epoch so the first span does not pay the `OnceLock` init.
+pub fn install(workers: usize, cap_per_worker: usize) {
+    now_us();
+    for slab in SLABS.iter().take(workers.clamp(1, MAX_WORKERS)) {
+        let mut s = lock_of(slab);
+        if s.recs.capacity() < cap_per_worker {
+            let need = cap_per_worker - s.recs.len();
+            s.recs.reserve(need);
+        }
+        if s.open.capacity() < 64 {
+            let need = 64 - s.open.len();
+            s.open.reserve(need);
+        }
+    }
+}
+
+/// Turn span recording on or off (counters stay on either way).
+pub fn set_enabled(on: bool) {
+    if on {
+        now_us();
+    }
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Whether spans are currently recorded.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// RAII span: records on construction, closes on drop.  When tracing is
+/// disabled (or the slab is full) the guard is inert.
+pub struct SpanGuard {
+    worker: u32,
+    idx: u32,
+    active: bool,
+}
+
+impl SpanGuard {
+    /// Open a span on the current worker's slab.
+    #[inline]
+    pub fn enter(name: &'static str) -> SpanGuard {
+        if !ENABLED.load(Ordering::Relaxed) {
+            return SpanGuard {
+                worker: 0,
+                idx: 0,
+                active: false,
+            };
+        }
+        Self::enter_enabled(name)
+    }
+
+    fn enter_enabled(name: &'static str) -> SpanGuard {
+        let w = worker();
+        let t0 = now_us();
+        let mut slab = lock(w);
+        if slab.recs.len() == slab.recs.capacity() {
+            // Full (or never installed): count the drop, record nothing —
+            // still allocation-free.
+            slab.dropped += 1;
+            drop(slab);
+            counters::add(Counter::SpansDropped, 1);
+            return SpanGuard {
+                worker: 0,
+                idx: 0,
+                active: false,
+            };
+        }
+        let idx = slab.recs.len() as u32;
+        let depth = slab.open.len() as u32;
+        slab.recs.push(SpanRec {
+            name,
+            t0_us: t0,
+            t1_us: u64::MAX,
+            depth,
+            worker: w as u32,
+        });
+        slab.open.push(idx);
+        SpanGuard {
+            worker: w as u32,
+            idx,
+            active: true,
+        }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if !self.active {
+            return;
+        }
+        let t1 = now_us();
+        let mut slab = lock(self.worker as usize);
+        slab.recs[self.idx as usize].t1_us = t1;
+        // Normal drops are LIFO; tolerate out-of-order (e.g. a guard moved
+        // out of its scope) by popping through to this span's entry.
+        while let Some(top) = slab.open.pop() {
+            if top == self.idx {
+                break;
+            }
+        }
+    }
+}
+
+/// Move every closed span out of the slabs, sorted by `(worker, start,
+/// depth)`.  Slabs with spans still open are left untouched (their records
+/// surface on a later drain once closed); drained slabs keep their
+/// reserved capacity.
+pub fn drain() -> Vec<SpanRec> {
+    let mut out = Vec::new();
+    for slab in SLABS.iter() {
+        let mut s = lock_of(slab);
+        if !s.open.is_empty() {
+            continue;
+        }
+        out.extend(s.recs.drain(..).filter(|r| r.t1_us != u64::MAX));
+    }
+    out.sort_by_key(|r| (r.worker, r.t0_us, r.depth));
+    out
+}
+
+/// Total spans dropped because a slab was full.
+pub fn dropped() -> u64 {
+    SLABS.iter().map(|s| lock_of(s).dropped).sum()
+}
+
+/// Clear every slab (records, open stacks, drop counts), keeping capacity.
+pub fn reset() {
+    for slab in SLABS.iter() {
+        let mut s = lock_of(slab);
+        s.recs.clear();
+        s.open.clear();
+        s.dropped = 0;
+    }
+}

@@ -95,14 +95,19 @@ impl ThreadPool {
             for w in 0..self.threads {
                 let fr = &f;
                 let nr = &next;
-                s.spawn(move || loop {
-                    let start = nr.fetch_add(chunk, Ordering::Relaxed);
-                    if start >= n {
-                        break;
-                    }
-                    let end = (start + chunk).min(n);
-                    for i in start..end {
-                        fr(w, i);
+                s.spawn(move || {
+                    // Bind this OS thread to its worker slot so spans it
+                    // records land in the right per-worker slab.
+                    crate::obs::set_worker(w);
+                    loop {
+                        let start = nr.fetch_add(chunk, Ordering::Relaxed);
+                        if start >= n {
+                            break;
+                        }
+                        let end = (start + chunk).min(n);
+                        for i in start..end {
+                            fr(w, i);
+                        }
                     }
                 });
             }
@@ -147,7 +152,10 @@ where
                 break;
             }
             let fr = &f;
-            s.spawn(move || fr(lo..hi));
+            s.spawn(move || {
+                crate::obs::set_worker(t);
+                fr(lo..hi)
+            });
         }
     });
 }
@@ -170,14 +178,20 @@ where
     let slots: Vec<std::sync::Mutex<Option<(usize, &mut [T])>>> =
         chunks.into_iter().map(|c| std::sync::Mutex::new(Some(c))).collect();
     std::thread::scope(|s| {
-        for _ in 0..threads {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= slots.len() {
-                    break;
+        for w in 0..threads {
+            let fr = &f;
+            let nr = &next;
+            let sl = &slots;
+            s.spawn(move || {
+                crate::obs::set_worker(w);
+                loop {
+                    let i = nr.fetch_add(1, Ordering::Relaxed);
+                    if i >= sl.len() {
+                        break;
+                    }
+                    let (ci, chunk) = sl[i].lock().unwrap().take().unwrap();
+                    fr(ci, chunk);
                 }
-                let (ci, chunk) = slots[i].lock().unwrap().take().unwrap();
-                f(ci, chunk);
             });
         }
     });

@@ -29,6 +29,13 @@ pub struct ApplySchedule {
     /// Block indices, grouped per task, multilevel order within each task.
     pub block_ids: Vec<u32>,
     pub tasks: Vec<ApplyTask>,
+    /// Schedule-static profile totals, precomputed once so an apply call
+    /// feeds the `obs` counters with one `fetch_add` per quantity instead
+    /// of one per block: dense cells touched (`Σ rows·cols` over dense
+    /// blocks), stored sparse nnz, and packed panel bytes per RHS sweep.
+    pub dense_cells: u64,
+    pub sparse_nnz: u64,
+    pub panel_bytes: u64,
 }
 
 /// One schedule task: a target leaf and its span into
@@ -64,7 +71,30 @@ impl ApplySchedule {
                 hi: block_ids.len() as u32,
             });
         }
-        ApplySchedule { block_ids, tasks }
+        let (mut dense_cells, mut sparse_nnz, mut panel_bytes) = (0u64, 0u64, 0u64);
+        for b in &m.blocks {
+            if b.is_dense() {
+                dense_cells += b.rows.len() as u64 * b.cols.len() as u64;
+                panel_bytes +=
+                    crate::csb::panel::panel_len(b.rows.len(), b.cols.len()) as u64 * 4;
+            } else {
+                sparse_nnz += b.nnz as u64;
+            }
+        }
+        ApplySchedule {
+            block_ids,
+            tasks,
+            dense_cells,
+            sparse_nnz,
+            panel_bytes,
+        }
+    }
+
+    /// Fused-multiply-add flop count of one apply sweep with `k` RHS
+    /// columns over this schedule (2 flops per stored cell/nnz per column).
+    #[inline]
+    pub fn flops(&self, k: usize) -> u64 {
+        2 * (self.dense_cells + self.sparse_nnz) * k as u64
     }
 
     /// The block list of one task.
@@ -272,6 +302,29 @@ mod tests {
             let (a, b) = (work(&w[0]), work(&w[1]));
             assert!(a > b || (a == b && w[0].tleaf < w[1].tleaf), "{a} then {b}");
         }
+    }
+
+    #[test]
+    fn apply_schedule_static_totals_match_blocks() {
+        let (_, m) = setup(500);
+        let sched = ApplySchedule::build(&m);
+        let dense: u64 = m
+            .blocks
+            .iter()
+            .filter(|b| b.is_dense())
+            .map(|b| b.rows.len() as u64 * b.cols.len() as u64)
+            .sum();
+        let sparse: u64 = m
+            .blocks
+            .iter()
+            .filter(|b| !b.is_dense())
+            .map(|b| b.nnz as u64)
+            .sum();
+        assert_eq!(sched.dense_cells, dense);
+        assert_eq!(sched.sparse_nnz, sparse);
+        assert_eq!(sched.flops(3), 2 * (dense + sparse) * 3);
+        // the packed panel arena is exactly the dense blocks' panels
+        assert_eq!(sched.panel_bytes, m.panels.data.as_slice().len() as u64 * 4);
     }
 
     #[test]

@@ -9,6 +9,7 @@
 //! scheduler.
 
 use crate::data::dataset::Dataset;
+use crate::obs::{self, counters, Counter};
 use crate::par::pool::{SendPtr, ThreadPool};
 
 /// One tree node.
@@ -65,6 +66,7 @@ impl BoxTree {
     /// * `leaf_cap`: split nodes with more points than this;
     /// * `max_depth`: hard depth cap (guards degenerate duplicates).
     pub fn build(ds: &Dataset, leaf_cap: usize, max_depth: u32) -> BoxTree {
+        obs::span!("tree.build");
         let n = ds.n();
         let d = ds.d();
         assert!(d >= 1 && d <= 8, "embedding dimension out of range");
@@ -90,6 +92,7 @@ impl BoxTree {
         for (k, &p) in tree.perm.iter().enumerate() {
             tree.pos[p] = k;
         }
+        tree.publish_counters();
         tree
     }
 
@@ -109,12 +112,14 @@ impl BoxTree {
         if threads <= 1 {
             return Self::build(ds, leaf_cap, max_depth);
         }
+        obs::span!("tree.build_par");
         let n = ds.n();
         let d = ds.d();
         assert!(d >= 1 && d <= 8, "embedding dimension out of range");
         assert!(leaf_cap >= 1);
 
         // Serial top: split until >= threads (x4 for balance) subtrees.
+        let skel_span = obs::trace::SpanGuard::enter("tree.skeleton");
         let mut skel: Vec<Node> = vec![root_node(ds)];
         let mut perm: Vec<usize> = (0..n).collect();
         let needs = |nd: &Node| nd.len() > leaf_cap && nd.level < max_depth;
@@ -140,9 +145,11 @@ impl BoxTree {
         for (i, &v) in frontier.iter().enumerate() {
             fidx[v as usize] = Some(i);
         }
+        drop(skel_span);
 
         // Count pass: build each frontier subtree into a local arena; its
         // perm/leaf_at writes stay inside the pre-reserved span.
+        let subtree_span = obs::trace::SpanGuard::enter("tree.subtrees");
         let mut leaf_at = vec![0u32; n];
         let pool = ThreadPool::new(threads);
         let pp = SendPtr(perm.as_mut_ptr());
@@ -169,9 +176,11 @@ impl BoxTree {
             });
             slots.into_iter().map(|m| m.into_inner().unwrap()).collect()
         };
+        drop(subtree_span);
 
         // Renumber: simulate the sequential DFS id assignment over the
         // skeleton; each frontier subtree's descendants form one block.
+        let renumber_span = obs::trace::SpanGuard::enter("tree.renumber");
         let mut skel_global = vec![0u32; skel.len()];
         let mut base = vec![0u32; frontier.len()];
         let mut counter = 1u32; // root is id 0
@@ -244,14 +253,29 @@ impl BoxTree {
         for (k, &p) in perm.iter().enumerate() {
             pos[p] = k;
         }
-        BoxTree {
+        drop(renumber_span);
+        let tree = BoxTree {
             d,
             nodes,
             perm,
             pos,
             leaf_at,
             leaf_cap,
-        }
+        };
+        tree.publish_counters();
+        tree
+    }
+
+    /// Fold this build's shape into the global `obs` counter registry.
+    fn publish_counters(&self) {
+        counters::add(Counter::TreeBuilds, 1);
+        counters::add(Counter::TreeNodes, self.nodes.len() as u64);
+        let leaves = self
+            .nodes
+            .iter()
+            .filter(|nd| nd.is_leaf() && !nd.is_empty())
+            .count();
+        counters::add(Counter::TreeLeaves, leaves as u64);
     }
 
     pub fn n(&self) -> usize {

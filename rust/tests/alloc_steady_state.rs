@@ -7,6 +7,10 @@
 //! *call* (not per block) at higher counts, and those spawns allocate —
 //! that is pool overhead, already amortized over multi-ms applies, not the
 //! per-block allocation regression this test guards against.
+//!
+//! Tracing is **enabled** for the steady-state round: spans record into
+//! the per-worker slabs pre-sized by `obs::install`, so the zero-allocation
+//! contract must hold with instrumentation on, not just off.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -70,6 +74,11 @@ fn steady_state_applies_are_allocation_free() {
     let mut num = Vec::new();
     let mut den = Vec::new();
 
+    // Tracing on for the whole exercise: span records must land in the
+    // slab capacity reserved here, never in a fresh allocation.
+    nni::obs::install(1, nni::obs::DEFAULT_SPAN_CAP);
+    nni::obs::set_enabled(true);
+
     // Warm-up: two rounds reach every buffer's high-water mark (each
     // round visits every block, so per-worker scratch sees the largest
     // block of every shape).
@@ -87,7 +96,18 @@ fn steady_state_applies_are_allocation_free() {
     eng.meanshift_step_into(&coords, &coords, d, 0.5, &mut num, &mut den);
     eng.spmm(&x, &mut out_k, k);
     // Expected 0: schedule precompiled, scratch engine-owned at its
-    // high-water mark, output buffers caller-owned.
+    // high-water mark, output buffers caller-owned — and span recording
+    // stayed inside the pre-sized slabs.
     let delta = allocs() - before;
-    assert_eq!(delta, 0, "steady-state applies allocated {delta} times");
+    assert_eq!(delta, 0, "steady-state applies allocated {delta} times (tracing on)");
+
+    // The guard above would pass trivially if tracing had been off; prove
+    // the traced round actually recorded apply spans.
+    nni::obs::set_enabled(false);
+    let spans = nni::obs::trace::drain();
+    assert!(
+        spans.iter().any(|sp| sp.name == "apply.spmm"),
+        "no apply spans recorded ({} spans total)",
+        spans.len()
+    );
 }

@@ -224,6 +224,112 @@ fn meanshift_finds_modes() {
 }
 
 #[test]
+fn reorder_emits_trace_and_metrics_files() {
+    let dir = std::env::temp_dir();
+    let trace = dir.join("nni_cli_smoke_trace.json");
+    let metrics = dir.join("nni_cli_smoke_metrics.json");
+    let out = nni()
+        .args([
+            "reorder", "--n", "400", "--k", "6", "--leaf-cap", "64", "--rhs", "4",
+            "--far", "aca", "--tol", "1e-2",
+            "--trace-out", trace.to_str().unwrap(),
+            "--metrics-out", metrics.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("trace ->"), "{text}");
+    assert!(text.contains("metrics ->"), "{text}");
+
+    // the emitted trace passes the binary's own validator, including the
+    // default subsystem coverage (tree, csb, hmat, apply)
+    let out = nni().args(["trace-check", trace.to_str().unwrap()]).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains(": ok ("));
+    // ... but demanding a subsystem the run never touched fails
+    let out = nni()
+        .args(["trace-check", "--require", "warp", trace.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("warp"));
+
+    // the metrics snapshot is JSON with the expected top-level sections
+    let mtext = std::fs::read_to_string(&metrics).unwrap();
+    for key in ["\"counters\"", "\"derived\"", "\"levels\"", "csb.covered_fraction"] {
+        assert!(mtext.contains(key), "metrics missing {key}: {mtext}");
+    }
+    std::fs::remove_file(trace).ok();
+    std::fs::remove_file(metrics).ok();
+}
+
+#[test]
+fn stats_prints_counter_report() {
+    let out = nni()
+        // --far off so the apply.calls tally is exactly the --applies
+        // count (the full-kernel spmv routes through the same engine)
+        .args([
+            "stats", "--n", "256", "--rhs", "2", "--applies", "2", "--leaf-cap", "64",
+            "--far", "off",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("nni stats"), "{text}");
+    assert!(text.contains("== counters =="), "{text}");
+    assert!(text.contains("apply.calls = 2"), "{text}");
+    assert!(text.contains("== derived =="), "{text}");
+    assert!(text.contains("csb.covered_fraction"), "{text}");
+    assert!(text.contains("== levels"), "{text}");
+}
+
+#[test]
+fn trace_check_rejects_garbage() {
+    let dir = std::env::temp_dir();
+    let bad = dir.join("nni_cli_smoke_bad_trace.json");
+    std::fs::write(&bad, "this is not json").unwrap();
+    let out = nni().args(["trace-check", bad.to_str().unwrap()]).output().unwrap();
+    assert!(!out.status.success());
+    std::fs::remove_file(bad).ok();
+}
+
+#[test]
+fn bench_check_gates_pending_records() {
+    let dir = std::env::temp_dir();
+    let rec = dir.join("nni_cli_smoke_bench.json");
+    std::fs::write(
+        &rec,
+        r#"{"bench":"x","status":"pending: needs hardware","points":[]}"#,
+    )
+    .unwrap();
+    // schema-valid pending record: ok by default...
+    let out = nni().args(["bench-check", rec.to_str().unwrap()]).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("status=pending"));
+    // ...rejected under --no-pending (the CI honesty gate)
+    let out = nni()
+        .args(["bench-check", "--no-pending", rec.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("pending"));
+    // a measured record with points passes either way
+    std::fs::write(
+        &rec,
+        r#"{"bench":"x","status":"measured","points":[{"n":64,"seconds":0.5}]}"#,
+    )
+    .unwrap();
+    let out = nni()
+        .args(["bench-check", "--no-pending", rec.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    std::fs::remove_file(rec).ok();
+}
+
+#[test]
 fn tsne_short_run_logs_kl() {
     let out = nni()
         .args([

@@ -1,0 +1,170 @@
+//! Observability integration tests, isolated in their own process so the
+//! global counter registry and span slabs can be asserted **exactly**
+//! (the in-crate unit tests share a process with the whole suite and must
+//! stay monotonic).  Everything runs in one `#[test]` so no second test
+//! thread races the global state.
+
+use nni::obs::{self, counters, Counter};
+
+#[test]
+fn observability_end_to_end() {
+    exact_counter_semantics();
+    metrics_mirror_into_registry();
+    span_nesting_and_monotonic_drain();
+    slab_overflow_drops_without_recording();
+    pipeline_trace_covers_subsystems();
+}
+
+/// Exact add/raise/level arithmetic through a snapshot.
+fn exact_counter_semantics() {
+    obs::reset();
+    counters::add(Counter::CgIterations, 5);
+    counters::add(Counter::CgIterations, 2);
+    counters::raise(Counter::ServeQueueDepthMax, 9);
+    counters::raise(Counter::ServeQueueDepthMax, 4);
+    counters::level_add(counters::LevelStat::Blocks, 2, 3);
+    counters::level_add(counters::LevelStat::DenseBlocks, 2, 1);
+    counters::level_add(counters::LevelStat::Nnz, 2, 30);
+    counters::level_add(counters::LevelStat::Cells, 2, 60);
+    let snap = counters::snapshot();
+    assert_eq!(snap.get("cg.iterations"), 7);
+    assert_eq!(snap.get("serve.queue_depth_max"), 9, "raise keeps the high-water mark");
+    let row = snap.levels.iter().find(|r| r.level == 2).expect("level 2 occupied");
+    assert_eq!((row.blocks, row.dense_blocks, row.nnz, row.cells), (3, 1, 30, 60));
+    assert!((row.fill_ratio() - 0.5).abs() < 1e-12);
+}
+
+/// `coordinator::Metrics` note_* helpers mirror exactly into `coord.*`.
+fn metrics_mirror_into_registry() {
+    obs::reset();
+    let mut m = nni::coordinator::metrics::Metrics::new();
+    m.note_iteration(10);
+    m.note_rust(3, 0.5);
+    m.note_pjrt(1, 2, 17, 0.25);
+    m.note_serve(8, 1, 80, 0.125);
+    let snap = counters::snapshot();
+    assert_eq!(snap.get("coord.nnz_processed"), 90);
+    assert_eq!(snap.get("coord.rust_blocks"), 3);
+    assert_eq!(snap.get("coord.pjrt_single_calls"), 1);
+    assert_eq!(snap.get("coord.pjrt_batched_calls"), 2);
+    assert_eq!(snap.get("coord.pjrt_blocks"), 17);
+    assert_eq!(snap.get("coord.batched_queries"), 8);
+    assert_eq!(snap.get("coord.serve_calls"), 1);
+    assert_eq!(snap.get("coord.rust_ns"), 500_000_000 + 125_000_000);
+    assert_eq!(snap.get("coord.pjrt_ns"), 250_000_000);
+}
+
+/// Nested spans on two workers drain to a well-formed, monotonic Chrome
+/// trace: sorted by (worker, start), children contained in parents.
+fn span_nesting_and_monotonic_drain() {
+    obs::reset();
+    obs::install(2, 2048);
+    obs::set_enabled(true);
+    obs::trace::set_worker(0);
+    {
+        let _outer = obs::trace::SpanGuard::enter("csb.build");
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        {
+            obs::span!("csb.build.fill");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+    }
+    std::thread::spawn(|| {
+        obs::trace::set_worker(1);
+        obs::span!("apply.task");
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    })
+    .join()
+    .unwrap();
+    obs::set_enabled(false);
+
+    let spans = obs::trace::drain();
+    assert_eq!(spans.len(), 3, "{spans:?}");
+    for pair in spans.windows(2) {
+        assert!(
+            (pair[0].worker, pair[0].t0_us) <= (pair[1].worker, pair[1].t0_us),
+            "drain not sorted by (worker, start): {spans:?}"
+        );
+    }
+    for sp in &spans {
+        assert!(sp.t1_us >= sp.t0_us, "negative duration: {sp:?}");
+    }
+    let outer = spans.iter().find(|s| s.name == "csb.build").unwrap();
+    let inner = spans.iter().find(|s| s.name == "csb.build.fill").unwrap();
+    let task = spans.iter().find(|s| s.name == "apply.task").unwrap();
+    assert_eq!((outer.depth, outer.worker), (0, 0));
+    assert_eq!((inner.depth, inner.worker), (1, 0));
+    assert_eq!(task.worker, 1);
+    // child strictly inside the parent (the sleeps guarantee real widths)
+    assert!(inner.t0_us >= outer.t0_us && inner.t1_us <= outer.t1_us);
+    assert!(outer.t1_us - outer.t0_us >= inner.t1_us - inner.t0_us);
+
+    // the exporter round-trips and the checker accepts it
+    let text = obs::export::chrome_trace(&spans).to_string();
+    assert_eq!(obs::export::check_trace(&text, &["csb", "apply"]), Ok(3));
+    assert!(obs::export::check_trace(&text, &["hmat"]).is_err());
+
+    // a second drain is empty (records moved out, capacity kept)
+    assert!(obs::trace::drain().is_empty());
+}
+
+/// A full slab drops spans (counted, allocation-free) instead of growing.
+fn slab_overflow_drops_without_recording() {
+    obs::reset();
+    obs::set_enabled(true);
+    obs::trace::set_worker(0);
+    const ATTEMPTS: usize = 50_000; // far beyond any reserved capacity here
+    for _ in 0..ATTEMPTS {
+        obs::span!("apply.task");
+    }
+    obs::set_enabled(false);
+    assert!(obs::trace::dropped() > 0, "slab never filled");
+    assert!(counters::get(Counter::SpansDropped) > 0);
+    let spans = obs::trace::drain();
+    assert!(!spans.is_empty() && spans.len() < ATTEMPTS, "{} recorded", spans.len());
+}
+
+/// End-to-end: a small build + apply traces every near-field subsystem and
+/// publishes exact apply counters.
+fn pipeline_trace_covers_subsystems() {
+    use nni::csb::kernel::KernelKind;
+    use nni::data::synth::SynthSpec;
+    use nni::knn::exact::knn_graph;
+    use nni::order::Pipeline;
+    use nni::sparse::csr::Csr;
+
+    obs::reset();
+    obs::install(1, obs::DEFAULT_SPAN_CAP);
+    obs::set_enabled(true);
+    let n = 400;
+    // d = 8 > embed dim 3, so the PCA embedding step actually runs
+    // (the pipeline skips it for already-low-dimensional data).
+    let ds = SynthSpec::blobs(n, 8, 3, 11).generate();
+    let g = knn_graph(&ds, 6, 1);
+    let a = Csr::from_knn(&g, n).symmetrized();
+    let r = Pipeline::dual_tree(3).run(&ds, &a);
+    let eng = r.engine_with(64, 0.6, 1, 1, KernelKind::Auto).expect("tree ordering");
+    let k = 4;
+    let x = vec![1.0f32; n * k];
+    let mut y = vec![0.0f32; n * k];
+    eng.spmm(&x, &mut y, k);
+    eng.spmm(&x, &mut y, k);
+    obs::set_enabled(false);
+
+    let snap = counters::snapshot();
+    assert_eq!(snap.get("apply.calls"), 2);
+    assert!(snap.get("tree.builds") >= 1);
+    assert!(snap.get("embed.pca_runs") >= 1);
+    assert!(snap.get("csb.nnz") > 0);
+    assert!(snap.get("apply.gemm_flops") > 0);
+    assert!(snap.covered_fraction() > 0.0);
+    assert!(!snap.levels.is_empty(), "per-level fill table published");
+    // flops are schedule-static: every call adds the same amount, so the
+    // two calls account for exactly twice the per-call tally
+    assert_eq!(snap.get("apply.tasks") % 2, 0);
+
+    let spans = obs::trace::drain();
+    let text = obs::export::chrome_trace(&spans).to_string();
+    obs::export::check_trace(&text, &["tree", "embed", "csb", "apply"])
+        .expect("trace covers the near-field subsystems");
+}
