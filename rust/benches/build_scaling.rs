@@ -114,6 +114,16 @@ fn main() {
                 "csb arenas differ at threads={t}"
             );
         }
+        // regression guard on the per-point window: exactly this thread
+        // count's `reps` tree builds land in the snapshot — if the
+        // `obs::reset` above ever disappears, earlier windows leak in here
+        // and the embedded counters stop being per-point
+        let snap = nni::obs::counters::snapshot();
+        assert_eq!(
+            snap.get("tree.builds"),
+            reps as u64,
+            "counter window at threads={t} not isolated (expected {reps} tree builds)"
+        );
         points.push((t, pca_s, tree_s, csb_s));
         counter_snaps.push(counters_json());
     }

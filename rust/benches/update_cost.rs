@@ -1,0 +1,171 @@
+//! **Incremental update cost**: wall time of a localized delete/insert
+//! batch applied through the epoch layer (`UpdatableKernelEngine::update`
+//! — subtree patch + near-row memcpy + far-factor lift) versus a
+//! from-scratch build over the same post-update data.  The batch touches a
+//! fixed-size neighborhood of one anchor point, so as `n` grows the
+//! touched fraction shrinks and the update/rebuild ratio should fall —
+//! the sublinearity claim of the incremental subsystem.
+//!
+//! The cheaper-than-rebuild bar is asserted **before** the record is
+//! written: non-smoke points must come in under 0.8x the rebuild time
+//! (smoke runs on shared CI runners get a 1.5x sanity bound instead).
+//! Correctness is not re-proved here — the differential fuzz harness
+//! (`tests/update_fuzz.rs`) owns bit-identity; this record owns cost.
+//!
+//! Writes `BENCH_update.json` (relative paths resolve against the repo
+//! root via `bench::repo_root_out`).  `--smoke` runs one small size for
+//! CI.  Methodology: EXPERIMENTS.md §Update methodology.
+
+use nni::bench::{counters_json, print_header, repo_root_out, Table};
+use nni::csb::kernel::KernelKind;
+use nni::data::dataset::Dataset;
+use nni::data::synth::SynthSpec;
+use nni::hmat::FullKernelConfig;
+use nni::interact::epoch::{UpdatableKernelEngine, UpdateCfg};
+use nni::tree::update::UpdateBatch;
+use nni::util::cli::Args;
+use nni::util::json::{arr, num, obj, s, Json};
+use nni::util::timer::{machine_summary, time_once};
+use std::io::Write;
+
+/// Deterministic localized batch: delete the `m` interior points nearest
+/// to the first interior point (the anchor) and insert the anchor/deleted
+/// midpoints.  Everything stays strictly inside the hull, so the root box
+/// persists and the update exercises the subtree-patch path, and all the
+/// churn lands in one neighborhood — the case incremental updates are for.
+fn localized_batch(ds: &Dataset, m: usize) -> UpdateBatch {
+    let d = ds.d();
+    let mut lo = vec![f32::INFINITY; d];
+    let mut hi = vec![f32::NEG_INFINITY; d];
+    for i in 0..ds.n() {
+        for (a, &x) in ds.row(i).iter().enumerate() {
+            lo[a] = lo[a].min(x);
+            hi[a] = hi[a].max(x);
+        }
+    }
+    let on_hull = |row: &[f32]| row.iter().enumerate().any(|(a, &x)| x == lo[a] || x == hi[a]);
+    let anchor = (0..ds.n()).find(|&i| !on_hull(ds.row(i))).expect("interior anchor");
+    let ar = ds.row(anchor);
+    let mut cand: Vec<(f32, usize)> = (0..ds.n())
+        .filter(|&i| i != anchor && !on_hull(ds.row(i)))
+        .map(|i| {
+            let d2: f32 = ds.row(i).iter().zip(ar).map(|(x, y)| (x - y) * (x - y)).sum();
+            (d2, i)
+        })
+        .collect();
+    cand.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    cand.truncate(m);
+    let deletes: Vec<usize> = cand.iter().map(|&(_, i)| i).collect();
+    let mut inserts = Vec::with_capacity(deletes.len() * d);
+    for &i in &deletes {
+        for (x, y) in ds.row(i).iter().zip(ar) {
+            inserts.push(0.5 * (x + y));
+        }
+    }
+    UpdateBatch { deletes, inserts }
+}
+
+fn main() {
+    let a = Args::new("incremental update cost vs from-scratch rebuild (full-kernel operator)")
+        .opt("sizes", "2048,4096,8192", "problem sizes to sweep")
+        .opt_usize_min("batch", 16, 1, "localized batch size (deletes = inserts)")
+        .opt_usize_min("block-cap", 128, 1, "tree-cut block capacity")
+        .opt_usize_min("reps", 3, 1, "repetitions per point (minimum reported)")
+        .opt_f64("factor", 0.8, "bar: update must cost < factor x rebuild")
+        .opt_u64("seed", 42, "rng seed")
+        .opt_usize("threads", 0, "0 = all cores")
+        .opt("out", "BENCH_update.json", "json record path (relative = repo root)")
+        .flag("smoke", "CI smoke mode: one small size, sanity bar 1.5x")
+        .parse();
+    let smoke = a.get_flag("smoke");
+    let sizes: Vec<usize> = if smoke { vec![1024] } else { a.get_usize_list("sizes") };
+    let m = if smoke { 8 } else { a.get_usize("batch") };
+    let factor = if smoke { 1.5 } else { a.get_f64("factor") };
+    let reps = a.get_usize("reps");
+    let seed = a.get_u64("seed");
+    let ucfg = UpdateCfg {
+        leaf_cap: 16,
+        block_cap: a.get_usize("block-cap"),
+        build_threads: a.get_usize("threads"),
+        threads: a.get_usize("threads"),
+        kernel: KernelKind::Auto,
+        ..UpdateCfg::default()
+    };
+    let kcfg = FullKernelConfig::new(0.8);
+    print_header(
+        "update_cost",
+        "localized epoch update vs from-scratch full-kernel build",
+    );
+    println!("# batch=-{m}/+{m} bar: update < {factor:.2}x rebuild");
+
+    let mut table = Table::new(
+        "update_cost",
+        &["n", "update_ms", "rebuild_ms", "ratio", "touched"],
+    );
+    let mut records: Vec<Json> = Vec::new();
+    for &n in &sizes {
+        // per-point observability window (same discipline as build_scaling)
+        nni::obs::reset();
+        let ds = SynthSpec::blobs(n, 3, 8, seed).generate();
+        let upd = UpdatableKernelEngine::build(ds, ucfg, kcfg.clone());
+        let (mut upd_s, mut reb_s) = (f64::INFINITY, f64::INFINITY);
+        for _ in 0..reps {
+            let cur = upd.acquire();
+            let batch = localized_batch(&cur.value.ds, m);
+            drop(cur);
+            let (e, dt) = time_once(|| upd.update(&batch));
+            upd_s = upd_s.min(dt);
+            let post = e.value.ds.clone();
+            let (_fresh, dt) = time_once(|| UpdatableKernelEngine::build(post, ucfg, kcfg.clone()));
+            reb_s = reb_s.min(dt);
+        }
+        let ratio = upd_s / reb_s;
+        // the bar, gated BEFORE anything is recorded: an "incremental"
+        // path that costs as much as a rebuild is a regression, not a result
+        assert!(
+            ratio < factor,
+            "update_cost bar failed at n={n}: update {:.3} ms vs rebuild {:.3} ms \
+             (ratio {ratio:.2} >= {factor:.2})",
+            upd_s * 1e3,
+            reb_s * 1e3
+        );
+        let touched = 2 * m;
+        table.row(vec![
+            n.to_string(),
+            format!("{:.3}", upd_s * 1e3),
+            format!("{:.3}", reb_s * 1e3),
+            format!("{ratio:.3}"),
+            touched.to_string(),
+        ]);
+        records.push(obj(vec![
+            ("n", num(n as f64)),
+            ("batch", num(m as f64)),
+            ("update_seconds", num(upd_s)),
+            ("rebuild_seconds", num(reb_s)),
+            ("ratio", num(ratio)),
+            ("counters", counters_json()),
+        ]));
+    }
+    table.finish();
+
+    let doc = obj(vec![
+        ("bench", s("update_cost")),
+        ("n_sweep", arr(sizes.iter().map(|&n| num(n as f64)).collect())),
+        ("batch", num(m as f64)),
+        ("bar_factor", num(factor)),
+        ("status", s("measured")),
+        ("testbed", s(&machine_summary())),
+        (
+            "expected_shape",
+            s("ratio = update/rebuild stays below the bar at every n and falls as n grows \
+               (fixed-size localized batch -> shrinking touched fraction); the update.* \
+               counters embedded per point show leaves/rows/factors reused vs rebuilt"),
+        ),
+        ("points", arr(records)),
+    ]);
+    let out = repo_root_out(&a.get("out"));
+    let mut f = std::fs::File::create(&out).expect("write update json");
+    writeln!(f, "{doc}").expect("write update json");
+    println!("\n[saved {}]", out.display());
+    println!("expected shape: update/rebuild ratio below the bar, falling with n.");
+}

@@ -16,15 +16,18 @@
 
 use crate::csb::hier::HierCsb;
 use crate::csb::kernel::KernelKind;
+use crate::csb::update::{update_par, SideDelta};
 use crate::data::dataset::Dataset;
 use crate::interact::engine::Engine;
 use crate::knn::ann::forest::{knn_cross_with_forest, PcaForest};
+use crate::knn::exact::KnnGraph;
 use crate::knn::KnnBackend;
 use crate::obs::{self, counters, Counter};
 use crate::order::invert;
 use crate::par::pool::ThreadPool;
 use crate::sparse::csr::Csr;
 use crate::tree::boxtree::BoxTree;
+use crate::tree::update::{update_tree, UpdateBatch};
 
 /// Mean-shift configuration.
 #[derive(Clone, Debug)]
@@ -49,6 +52,14 @@ pub struct MeanShiftConfig {
     pub knn: KnnBackend,
     /// Apply kernel (`Scalar` pins the bit-exact reference path).
     pub kernel: KernelKind,
+    /// Incremental profile refresh: instead of rebuilding the target tree
+    /// + profile + CSB from scratch every `refresh_every` iterations,
+    /// delete + reinsert only the targets displaced beyond `tol` since
+    /// their last (re)insertion (`tree::update`), recompute kNN only for
+    /// those rows, and patch the CSB arenas (`csb::update`).  Near
+    /// convergence most targets sit still, so refreshes get cheaper as
+    /// the iteration proceeds.
+    pub incremental: bool,
 }
 
 impl MeanShiftConfig {
@@ -77,6 +88,7 @@ impl Default for MeanShiftConfig {
             leaf_cap: 128,
             knn: KnnBackend::Exact,
             kernel: KernelKind::Auto,
+            incremental: false,
         }
     }
 }
@@ -101,6 +113,32 @@ struct Structure {
     scoords: Vec<f32>,
 }
 
+/// Target→source kNN with the configured backend.  The ANN path reuses
+/// the cached source forest (sources are stationary across refreshes);
+/// (Ann, None) would rebuild it per call, and `run()` always passes the
+/// cache for the Ann backend, so in practice that arm is the exact path.
+fn cross_knn(
+    targets_ordered: &Dataset,
+    sources_ordered: &Dataset,
+    cfg: &MeanShiftConfig,
+    src_forest: Option<&PcaForest>,
+) -> KnnGraph {
+    match (&cfg.knn, src_forest) {
+        (KnnBackend::Ann(p), Some(f)) => knn_cross_with_forest(
+            targets_ordered,
+            sources_ordered,
+            f,
+            cfg.k,
+            p,
+            cfg.threads,
+            false,
+        ),
+        _ => cfg
+            .knn
+            .build_cross(targets_ordered, sources_ordered, cfg.k, cfg.threads, false),
+    }
+}
+
 fn build_structure(
     targets: &Dataset,
     sources_ordered: &Dataset,
@@ -114,27 +152,9 @@ fn build_structure(
     let ttree = BoxTree::build_par(targets, 16, 32, build_threads);
     let tperm = ttree.perm.clone();
     let tpos = invert(&tperm);
-    // kNN of (reordered) targets against (already ordered) sources, built
-    // with the configured backend.  The ANN path reuses the cached source
-    // forest (sources are stationary across refreshes).
+    // kNN of (reordered) targets against (already ordered) sources.
     let targets_ordered = targets.permuted(&tperm);
-    let g = match (&cfg.knn, src_forest) {
-        (KnnBackend::Ann(p), Some(f)) => knn_cross_with_forest(
-            &targets_ordered,
-            sources_ordered,
-            f,
-            cfg.k,
-            p,
-            cfg.threads,
-            false,
-        ),
-        // (Ann, None) would rebuild the source forest per refresh; run()
-        // always passes the cache for the Ann backend, so in practice this
-        // arm is the exact path.
-        _ => cfg
-            .knn
-            .build_cross(&targets_ordered, sources_ordered, cfg.k, cfg.threads, false),
-    };
+    let g = cross_knn(&targets_ordered, sources_ordered, cfg, src_forest);
     let a = Csr::from_knn(&g, sources_ordered.n());
     let _ = tpos;
     let csb = HierCsb::build_par(
@@ -156,6 +176,203 @@ fn build_structure(
 /// with spans as-is.
 fn ttree_identity(t: &BoxTree) -> BoxTree {
     t.clone()
+}
+
+/// Incrementally maintained cross-interaction structure (`incremental`
+/// mode).  Holds, besides the engine, everything the next refresh patches
+/// against: the target tree and its backing dataset (each target's
+/// coordinates as of its last (re)insertion), the external-row →
+/// original-point mapping, and the tree-ordered profile CSR.
+struct IncStructure {
+    engine: Engine,
+    ttree: BoxTree,
+    /// Target dataset backing `ttree`, external (insertion) order.
+    tds: Dataset,
+    /// External row → original point id (reinsertion moves a point to the
+    /// end of the external order, so this drifts from identity).
+    orig: Vec<usize>,
+    /// Profile CSR: target tree rows × source tree cols.
+    a: Csr,
+    /// Tree position → original point id (the gather/scatter permutation).
+    tperm: Vec<usize>,
+    scoords: Vec<f32>,
+}
+
+fn build_inc(
+    targets: &Dataset,
+    sources_ordered: &Dataset,
+    stree: &BoxTree,
+    cfg: &MeanShiftConfig,
+    src_forest: Option<&PcaForest>,
+) -> IncStructure {
+    let build_threads = cfg.resolved_build_threads();
+    let tds = targets.clone();
+    let ttree = BoxTree::build_par(&tds, 16, 32, build_threads);
+    let targets_ordered = tds.permuted(&ttree.perm);
+    let g = cross_knn(&targets_ordered, sources_ordered, cfg, src_forest);
+    let a = Csr::from_knn(&g, sources_ordered.n());
+    let csb = HierCsb::build_par(&a, &ttree, stree, cfg.leaf_cap, build_threads);
+    let engine = Engine::with_kernel(csb, cfg.threads, cfg.kernel);
+    let orig: Vec<usize> = (0..tds.n()).collect();
+    let tperm = ttree.perm.clone();
+    IncStructure {
+        engine,
+        ttree,
+        tds,
+        orig,
+        a,
+        tperm,
+        scoords: sources_ordered.raw().to_vec(),
+    }
+}
+
+/// Incremental refresh: delete + reinsert only the targets displaced more
+/// than `tol` since their last (re)insertion, recompute kNN only for those
+/// rows (unmoved rows keep their profile — sources are stationary), patch
+/// the CSB arenas, and recompile the schedule.  Near convergence most
+/// targets sit still, so this degenerates to a no-op; early on, when the
+/// hull itself moves, the tree update falls back to a full rebuild and the
+/// refresh degrades gracefully to the from-scratch path.
+fn refresh_inc(
+    s: IncStructure,
+    means: &Dataset,
+    sources_ordered: &Dataset,
+    stree: &BoxTree,
+    cfg: &MeanShiftConfig,
+    src_forest: Option<&PcaForest>,
+) -> IncStructure {
+    let d = means.d();
+    let build_threads = cfg.resolved_build_threads();
+    let eps2 = (cfg.tol * cfg.tol) as f32;
+    let mut deletes: Vec<usize> = Vec::new();
+    let mut moved: Vec<usize> = Vec::new(); // original ids, batch order
+    for ext in 0..s.tds.n() {
+        let o = s.orig[ext];
+        let mut d2 = 0.0f32;
+        for (a, b) in s.tds.row(ext).iter().zip(means.row(o)) {
+            let t = a - b;
+            d2 += t * t;
+        }
+        if d2 > eps2 {
+            deletes.push(ext);
+            moved.push(o);
+        }
+    }
+    if deletes.is_empty() {
+        // Nothing drifted beyond tol: the structure is still current.
+        return s;
+    }
+    let mut inserts = Vec::with_capacity(moved.len() * d);
+    for &o in &moved {
+        inserts.extend_from_slice(means.row(o));
+    }
+    let batch = UpdateBatch {
+        deletes: deletes.clone(),
+        inserts,
+    };
+    let tu = update_tree(&s.ttree, &s.tds, &batch, 32, build_threads);
+
+    // External-row identity after delete-compaction + append.
+    let mut orig = Vec::with_capacity(tu.ds.n());
+    let mut di = 0usize;
+    for (ext, &o) in s.orig.iter().enumerate() {
+        if di < deletes.len() && deletes[di] == ext {
+            di += 1;
+        } else {
+            orig.push(o);
+        }
+    }
+    orig.extend_from_slice(&moved);
+    debug_assert_eq!(orig.len(), tu.ds.n());
+
+    // Profile: rows of surviving (sub-tol) targets are copied from the old
+    // CSR at their old tree position; reinserted rows recompute kNN.
+    let tdelta = SideDelta::from_update(&s.ttree, &tu);
+    let n_new = tu.tree.n();
+    let fresh_pos: Vec<usize> = (0..n_new)
+        .filter(|&i| tdelta.pos_map[i] == u32::MAX)
+        .collect();
+    let a_new = {
+        let mut xs = Vec::with_capacity(fresh_pos.len() * d);
+        for &i in &fresh_pos {
+            xs.extend_from_slice(tu.ds.row(tu.tree.perm[i]));
+        }
+        let moved_ds = Dataset::new(fresh_pos.len(), d, xs);
+        let g = cross_knn(&moved_ds, sources_ordered, cfg, src_forest);
+        let a_moved = Csr::from_knn(&g, sources_ordered.n());
+        splice_profile(&s.a, &a_moved, &tdelta.pos_map, sources_ordered.n())
+    };
+
+    let csb = if tu.full_rebuild {
+        HierCsb::build_par(&a_new, &tu.tree, stree, cfg.leaf_cap, build_threads)
+    } else {
+        let sdelta = SideDelta::identity(stree);
+        update_par(
+            &s.engine.csb,
+            &s.a,
+            &a_new,
+            &tu.tree,
+            &tdelta,
+            stree,
+            &sdelta,
+            cfg.leaf_cap,
+            build_threads,
+        )
+    };
+    let engine = Engine::with_kernel(csb, cfg.threads, cfg.kernel);
+    let tperm: Vec<usize> = tu.tree.perm.iter().map(|&e| orig[e]).collect();
+    IncStructure {
+        engine,
+        ttree: tu.tree,
+        tds: tu.ds,
+        orig,
+        a: a_new,
+        tperm,
+        scoords: s.scoords,
+    }
+}
+
+/// Row-splice of the refreshed profile: rows with an old tree position
+/// copy from `a_old`; inserted rows take the next row of `a_fresh` (whose
+/// rows are in ascending new-tree-position order).
+fn splice_profile(a_old: &Csr, a_fresh: &Csr, pos_map: &[u32], cols: usize) -> Csr {
+    let n = pos_map.len();
+    let mut ptr = vec![0u32; n + 1];
+    let mut fresh_row = vec![usize::MAX; n];
+    let mut fi = 0usize;
+    for i in 0..n {
+        let len = if pos_map[i] == u32::MAX {
+            fresh_row[i] = fi;
+            fi += 1;
+            a_fresh.ptr[fresh_row[i] + 1] - a_fresh.ptr[fresh_row[i]]
+        } else {
+            let o = pos_map[i] as usize;
+            a_old.ptr[o + 1] - a_old.ptr[o]
+        };
+        ptr[i + 1] = ptr[i] + len;
+    }
+    assert_eq!(fi, a_fresh.rows, "every fresh row must be consumed");
+    let nnz = ptr[n] as usize;
+    let mut col = Vec::with_capacity(nnz);
+    let mut val = Vec::with_capacity(nnz);
+    for i in 0..n {
+        let (src, lo, hi) = if pos_map[i] == u32::MAX {
+            let f = fresh_row[i];
+            (a_fresh, a_fresh.ptr[f] as usize, a_fresh.ptr[f + 1] as usize)
+        } else {
+            let o = pos_map[i] as usize;
+            (a_old, a_old.ptr[o] as usize, a_old.ptr[o + 1] as usize)
+        };
+        col.extend_from_slice(&src.col[lo..hi]);
+        val.extend_from_slice(&src.val[lo..hi]);
+    }
+    Csr {
+        rows: n,
+        cols,
+        ptr,
+        col,
+        val,
+    }
 }
 
 /// Run mean shift over `data` (sources = initial targets).
@@ -182,6 +399,7 @@ pub fn run(data: &Dataset, cfg: &MeanShiftConfig) -> MeanShiftResult {
     let mut means = data.clone();
     let mut iterations = 0;
     let mut structure: Option<Structure> = None;
+    let mut inc: Option<IncStructure> = None;
     // Hoisted per-iteration buffers: the apply loop is allocation-free in
     // steady state (the engine owns its own kernel scratch the same way).
     let mut tcoords: Vec<f32> = Vec::new();
@@ -193,22 +411,37 @@ pub fn run(data: &Dataset, cfg: &MeanShiftConfig) -> MeanShiftResult {
         obs::span!("meanshift.iter");
         counters::add(Counter::MeanshiftIterations, 1);
         iterations = it + 1;
-        if structure.is_none() || it % cfg.refresh_every.max(1) == 0 {
-            obs::span!("meanshift.refresh");
-            structure = Some(build_structure(
-                &means,
-                &sources_ordered,
-                &stree,
-                cfg,
-                src_forest.as_ref(),
-            ));
-        }
-        let s = structure.as_ref().unwrap();
+        let refresh = it % cfg.refresh_every.max(1) == 0;
+        let (engine, tperm, scoords): (&Engine, &[usize], &[f32]) = if cfg.incremental {
+            if inc.is_none() || refresh {
+                obs::span!("meanshift.refresh");
+                inc = Some(match inc.take() {
+                    None => build_inc(&means, &sources_ordered, &stree, cfg, src_forest.as_ref()),
+                    Some(prev) => {
+                        refresh_inc(prev, &means, &sources_ordered, &stree, cfg, src_forest.as_ref())
+                    }
+                });
+            }
+            let s = inc.as_ref().unwrap();
+            (&s.engine, &s.tperm, &s.scoords)
+        } else {
+            if structure.is_none() || refresh {
+                obs::span!("meanshift.refresh");
+                structure = Some(build_structure(
+                    &means,
+                    &sources_ordered,
+                    &stree,
+                    cfg,
+                    src_forest.as_ref(),
+                ));
+            }
+            let s = structure.as_ref().unwrap();
+            (&s.engine, &s.tperm, &s.scoords)
+        };
 
         // tree-ordered target coordinates
-        crate::csb::layout::rows_to_tree_order_into(means.raw(), d, &s.tperm, &mut tcoords);
-        s.engine
-            .meanshift_step_into(&tcoords, &s.scoords, d, inv_h2, &mut num, &mut den);
+        crate::csb::layout::rows_to_tree_order_into(means.raw(), d, tperm, &mut tcoords);
+        engine.meanshift_step_into(&tcoords, scoords, d, inv_h2, &mut num, &mut den);
 
         // shift: m_i <- num_i / den_i  (tree order), then scatter back
         let mut max_shift2 = 0.0f64;
@@ -226,7 +459,7 @@ pub fn run(data: &Dataset, cfg: &MeanShiftConfig) -> MeanShiftResult {
             max_shift2 = max_shift2.max(s2);
         }
         // scatter the shifted means straight back into the dataset buffer
-        crate::csb::layout::rows_from_tree_order_into(&new_tree, d, &s.tperm, means.raw_mut());
+        crate::csb::layout::rows_from_tree_order_into(&new_tree, d, tperm, means.raw_mut());
         if max_shift2.sqrt() < cfg.tol {
             break;
         }
@@ -338,6 +571,66 @@ mod tests {
         };
         let res = run(&ds, &cfg);
         assert_eq!(res.modes.len(), 3, "modes: {:?}", res.modes.len());
+    }
+
+    #[test]
+    fn incremental_matches_full_rebuild_modes() {
+        let ds = SynthSpec::blobs(300, 2, 3, 77).generate();
+        let mk = |incremental: bool| MeanShiftConfig {
+            bandwidth: 0.25,
+            k: 24,
+            max_iters: 40,
+            refresh_every: 4,
+            threads: 2,
+            kernel: KernelKind::Scalar,
+            incremental,
+            ..Default::default()
+        };
+        let batches_before = counters::get(Counter::UpdateBatches);
+        let full = run(&ds, &mk(false));
+        let inc = run(&ds, &mk(true));
+        // The incremental path must actually route refreshes through the
+        // update machinery (the means move early on, so batches are
+        // non-empty well before convergence).
+        assert!(
+            counters::get(Counter::UpdateBatches) > batches_before,
+            "incremental run never issued an update batch"
+        );
+        assert_eq!(inc.modes.len(), full.modes.len(), "mode count");
+        // Every full-rebuild mode center has an incremental twin well
+        // within the merge radius.
+        for c in &full.modes {
+            let best = inc
+                .modes
+                .iter()
+                .map(|m| {
+                    m.iter()
+                        .zip(c)
+                        .map(|(a, b)| (a - b) * (a - b))
+                        .sum::<f32>()
+                })
+                .fold(f32::INFINITY, f32::min);
+            assert!(
+                (best.sqrt() as f64) < 0.5 * 0.25,
+                "mode center {c:?} has no incremental twin (nearest at {})",
+                best.sqrt()
+            );
+        }
+        // Assignments agree up to relabeling on ≥95% of points.
+        let mut map = std::collections::HashMap::new();
+        let mut agree = 0usize;
+        for i in 0..ds.n() {
+            let m = *map.entry(full.assignment[i]).or_insert(inc.assignment[i]);
+            if m == inc.assignment[i] {
+                agree += 1;
+            }
+        }
+        assert!(
+            agree * 100 >= 95 * ds.n(),
+            "assignment agreement {}/{}",
+            agree,
+            ds.n()
+        );
     }
 
     #[test]

@@ -285,58 +285,11 @@ impl HierCsb {
         // Pass 1 — count (parallel over target leaves): the occupied source
         // leaves of each target leaf, with per-block nnz and occupied-row
         // counts.  Counts depend only on the leaf's own rows, so the result
-        // is thread-count independent.  The per-leaf state is a sorted vec
-        // of just the *occupied* blocks — O(nnz + blocks) per leaf, not
-        // O(src_leaves) scratch per leaf, which would make the count pass
-        // quadratic in the leaf count at scale.  CSR rows have ascending
-        // columns, so equal source leaves arrive in runs and the cached
-        // index hits for all but the first entry of each run.
-        #[derive(Clone, Default)]
-        struct LeafCount {
-            sl: u32,
-            nnz: u32,
-            rows: u32,
-            /// Last row counted for this block (count-pass scratch).
-            last_row: u32,
-        }
+        // is thread-count independent.
         let leaf_idx: Vec<usize> = (0..nt).collect();
         let count_span = obs::trace::SpanGuard::enter("csb.build.count");
-        let per_leaf: Vec<Vec<LeafCount>> = pool.map(&leaf_idx, |&tl| {
-            let span = tgt_leaves[tl];
-            let mut counts: Vec<LeafCount> = Vec::new();
-            for i in span.lo..span.hi {
-                let (cols, _) = a.row(i as usize);
-                let mut cached: Option<usize> = None;
-                for &j in cols {
-                    let sl = col_leaf[j as usize];
-                    let li = match cached {
-                        Some(li) if counts[li].sl == sl => li,
-                        _ => match counts.binary_search_by_key(&sl, |c| c.sl) {
-                            Ok(li) => li,
-                            Err(pos) => {
-                                counts.insert(
-                                    pos,
-                                    LeafCount {
-                                        sl,
-                                        nnz: 0,
-                                        rows: 0,
-                                        last_row: u32::MAX,
-                                    },
-                                );
-                                pos
-                            }
-                        },
-                    };
-                    counts[li].nnz += 1;
-                    if counts[li].last_row != i {
-                        counts[li].last_row = i;
-                        counts[li].rows += 1;
-                    }
-                    cached = Some(li);
-                }
-            }
-            counts
-        });
+        let per_leaf: Vec<Vec<LeafCount>> =
+            pool.map(&leaf_idx, |&tl| count_target_leaf(a, tgt_leaves[tl], &col_leaf));
 
         drop(count_span);
 
@@ -355,64 +308,18 @@ impl HierCsb {
         // Exclusive scan — arena offsets in traversal order, so the hot
         // loop walks memory linearly.
         let scan_span = obs::trace::SpanGuard::enter("csb.build.scan");
-        let mut blocks: Vec<LeafBlock> = Vec::with_capacity(order.len());
-        let mut ent_base: Vec<u32> = Vec::with_capacity(order.len());
-        let mut panel_off: Vec<u32> = Vec::with_capacity(order.len());
-        let mut panel_total = 0usize;
-        let (mut dense_len, mut rows_len, mut ptr_len, mut ents_len) =
-            (0usize, 0usize, 0usize, 0usize);
-        for &(tl, sl) in &order {
-            let counts = &per_leaf[tl as usize];
-            let c = &counts[counts
-                .binary_search_by_key(&sl, |c| c.sl)
-                .expect("traversal emitted an uncounted block")];
-            let rows = tgt_leaves[tl as usize];
-            let cols = src_leaves[sl as usize];
-            let area = rows.len() * cols.len();
-            let density = c.nnz as f64 / area as f64;
-            let kind = if density >= dense_threshold {
-                let off = dense_len as u32;
-                dense_len += area;
-                ent_base.push(0);
-                panel_off.push(panel_total as u32);
-                panel_total += panel::panel_len(rows.len(), cols.len());
-                BlockKind::Dense { off }
-            } else {
-                let k = BlockKind::Sparse {
-                    row_off: rows_len as u32,
-                    row_cnt: c.rows,
-                    ptr_off: ptr_len as u32,
-                };
-                rows_len += c.rows as usize;
-                ptr_len += c.rows as usize + 1;
-                ent_base.push(ents_len as u32);
-                ents_len += c.nnz as usize;
-                panel_off.push(panel::NO_PANEL);
-                k
-            };
-            blocks.push(LeafBlock {
-                tleaf: tl,
-                sleaf: sl,
-                rows,
-                cols,
-                nnz: c.nnz,
-                kind,
-            });
-        }
-        assert!(panel_total <= u32::MAX as usize, "panel arena exceeds u32 offsets");
-        let mut by_target: Vec<Vec<u32>> = vec![Vec::new(); nt];
-        for (t, b) in blocks.iter().enumerate() {
-            by_target[b.tleaf as usize].push(t as u32);
-        }
-        // Per target leaf, (source leaf → block index), sorted for the
-        // fill-pass lookups.
-        let mut lookup: Vec<Vec<(u32, u32)>> = vec![Vec::new(); nt];
-        for (t, b) in blocks.iter().enumerate() {
-            lookup[b.tleaf as usize].push((b.sleaf, t as u32));
-        }
-        for l in lookup.iter_mut() {
-            l.sort_unstable();
-        }
+        let Layout {
+            blocks,
+            ent_base,
+            panel_off,
+            panel_total,
+            dense_len,
+            rows_len,
+            ptr_len,
+            ents_len,
+            by_target,
+            lookup,
+        } = scan_layout(&order, &per_leaf, &tgt_leaves, &src_leaves, dense_threshold);
         drop(scan_span);
 
         // Pass 2 — fill (parallel over target leaves).
@@ -447,62 +354,19 @@ impl HierCsb {
                     unsafe { std::slice::from_raw_parts_mut(cpr.0, ents_len) };
                 let val_all: &mut [f32] =
                     unsafe { std::slice::from_raw_parts_mut(vpr.0, ents_len) };
-                let lst = &lookup_ref[tl];
-                let mut ents_written = vec![0u32; lst.len()];
-                let mut rows_written = vec![0u32; lst.len()];
-                let mut cur_row = vec![u32::MAX; lst.len()];
-                for &(_, bi) in lst {
-                    if let BlockKind::Sparse { ptr_off, .. } = blocks_ref[bi as usize].kind {
-                        // ptr[0] = block entry base; ptr[1 + t] (filled
-                        // below) = end of occupied row t.
-                        ptr_all[ptr_off as usize] = ent_base_ref[bi as usize];
-                    }
-                }
-                let span = tgt_leaves_ref[tl];
-                for i in span.lo..span.hi {
-                    let local_row = i - span.lo;
-                    let (cols, vals) = a.row(i as usize);
-                    // Same run cache as the count pass: ascending columns
-                    // deliver equal source leaves in runs, so the lookup is
-                    // O(1) amortized instead of a search per nonzero.
-                    let mut cached = usize::MAX;
-                    for (&j, &v) in cols.iter().zip(vals) {
-                        let sl = col_leaf_ref[j as usize];
-                        let li = if cached != usize::MAX && lst[cached].0 == sl {
-                            cached
-                        } else {
-                            lst.binary_search_by_key(&sl, |e| e.0)
-                                .expect("entry in uncounted block")
-                        };
-                        cached = li;
-                        let bi = lst[li].1 as usize;
-                        let b = &blocks_ref[bi];
-                        match b.kind {
-                            BlockKind::Dense { off } => {
-                                let w = b.cols.len();
-                                let c = (j - b.cols.lo) as usize;
-                                dense_all[off as usize + local_row as usize * w + c] += v;
-                            }
-                            BlockKind::Sparse {
-                                row_off, ptr_off, ..
-                            } => {
-                                let base = ent_base_ref[bi];
-                                if cur_row[li] != i {
-                                    cur_row[li] = i;
-                                    rows_all[row_off as usize + rows_written[li] as usize] =
-                                        local_row as u16;
-                                    rows_written[li] += 1;
-                                }
-                                let e = (base + ents_written[li]) as usize;
-                                col_all[e] = (j - b.cols.lo) as u16;
-                                val_all[e] = v;
-                                ents_written[li] += 1;
-                                ptr_all[ptr_off as usize + rows_written[li] as usize] =
-                                    base + ents_written[li];
-                            }
-                        }
-                    }
-                }
+                fill_target_leaf(
+                    a,
+                    tgt_leaves_ref[tl],
+                    &lookup_ref[tl],
+                    col_leaf_ref,
+                    blocks_ref,
+                    ent_base_ref,
+                    dense_all,
+                    rows_all,
+                    ptr_all,
+                    col_all,
+                    val_all,
+                );
             });
         }
 
@@ -514,69 +378,20 @@ impl HierCsb {
         // block's dense values, so the arena is bit-identical across
         // thread counts).
         let pack_span = obs::trace::SpanGuard::enter("csb.build.pack");
-        let mut panel_data = panel::AlignedF32::zeroed(panel_total);
-        {
-            let pp = SendPtr(panel_data.as_mut_slice().as_mut_ptr());
-            let ppr = &pp;
-            let blocks_ref = &blocks;
-            let panel_off_ref = &panel_off;
-            let dense_ref = &dense;
-            pool.for_each_chunked(blocks_ref.len(), 8, |t| {
-                let b = &blocks_ref[t];
-                if let BlockKind::Dense { off } = b.kind {
-                    let (rn, cn) = (b.rows.len(), b.cols.len());
-                    let po = panel_off_ref[t] as usize;
-                    let plen = panel::panel_len(rn, cn);
-                    // SAFETY: the worker materializes only its own block's
-                    // panel region; regions are disjoint per block, so no
-                    // two live slices overlap.
-                    let out: &mut [f32] =
-                        unsafe { std::slice::from_raw_parts_mut(ppr.0.add(po), plen) };
-                    panel::pack_panel(
-                        &dense_ref[off as usize..off as usize + rn * cn],
-                        rn,
-                        cn,
-                        out,
-                    );
-                }
-            });
-        }
-
+        let panel_data = pack_panels(&pool, &blocks, &panel_off, &dense, panel_total);
         drop(pack_span);
 
         // Profile stats — computed once, published to the global counter
         // registry, and stored so describe()/reports never recompute.
-        let depth: Vec<u32> = tgt_leaf_ids.iter().map(|&id| node_depth(tgt_tree, id)).collect();
-        let max_depth = depth.iter().copied().max().unwrap_or(0) as usize;
-        let mut level_rows: Vec<CsbLevelStats> = (0..=max_depth)
-            .map(|l| CsbLevelStats {
-                level: l as u32,
-                ..CsbLevelStats::default()
-            })
-            .collect();
-        let mut stats = CsbStats {
-            nnz: a.nnz() as u64,
-            total_area: a.rows as u64 * a.cols as u64,
-            panel_bytes: panel_total as u64 * 4,
-            ..CsbStats::default()
-        };
-        for b in &blocks {
-            let area = b.rows.len() as u64 * b.cols.len() as u64;
-            stats.covered_area += area;
-            let row = &mut level_rows[depth[b.tleaf as usize] as usize];
-            row.blocks += 1;
-            row.nnz += b.nnz as u64;
-            row.cells += area;
-            if b.is_dense() {
-                stats.dense_blocks += 1;
-                stats.dense_cells += area;
-                stats.dense_nnz += b.nnz as u64;
-                row.dense_blocks += 1;
-            } else {
-                stats.sparse_blocks += 1;
-            }
-        }
-        stats.levels = level_rows.into_iter().filter(|r| r.blocks > 0).collect();
+        let stats = compute_stats(
+            a.nnz(),
+            a.rows,
+            a.cols,
+            &blocks,
+            tgt_tree,
+            &tgt_leaf_ids,
+            panel_total,
+        );
         stats.publish();
 
         HierCsb {
@@ -896,6 +711,305 @@ impl HierCsb {
     }
 }
 
+/// Per-(target leaf, source leaf) occupancy from the count pass — shared by
+/// the from-scratch build and the incremental update (`csb::update`), which
+/// reconstructs these for reused leaves instead of rescanning their rows.
+#[derive(Clone, Default)]
+pub(crate) struct LeafCount {
+    pub sl: u32,
+    pub nnz: u32,
+    pub rows: u32,
+    /// Last row counted for this block (count-pass scratch).
+    pub last_row: u32,
+}
+
+/// Count pass for one target leaf: the occupied source leaves of the leaf's
+/// rows, with per-block nnz and occupied-row counts, ascending `sl`.  A pure
+/// function of the leaf's own rows, so the result is thread-count
+/// independent.  The per-leaf state is a sorted vec of just the *occupied*
+/// blocks — O(nnz + blocks) per leaf, not O(src_leaves) scratch per leaf,
+/// which would make the count pass quadratic in the leaf count at scale.
+/// CSR rows have ascending columns, so equal source leaves arrive in runs
+/// and the cached index hits for all but the first entry of each run.
+pub(crate) fn count_target_leaf(a: &Csr, span: Span, col_leaf: &[u32]) -> Vec<LeafCount> {
+    let mut counts: Vec<LeafCount> = Vec::new();
+    for i in span.lo..span.hi {
+        let (cols, _) = a.row(i as usize);
+        let mut cached: Option<usize> = None;
+        for &j in cols {
+            let sl = col_leaf[j as usize];
+            let li = match cached {
+                Some(li) if counts[li].sl == sl => li,
+                _ => match counts.binary_search_by_key(&sl, |c| c.sl) {
+                    Ok(li) => li,
+                    Err(pos) => {
+                        counts.insert(
+                            pos,
+                            LeafCount {
+                                sl,
+                                nnz: 0,
+                                rows: 0,
+                                last_row: u32::MAX,
+                            },
+                        );
+                        pos
+                    }
+                },
+            };
+            counts[li].nnz += 1;
+            if counts[li].last_row != i {
+                counts[li].last_row = i;
+                counts[li].rows += 1;
+            }
+            cached = Some(li);
+        }
+    }
+    counts
+}
+
+/// Output of the exclusive scan: block metadata and arena extents, a pure
+/// function of `(order, per-leaf counts, spans, dense_threshold)`.
+pub(crate) struct Layout {
+    pub blocks: Vec<LeafBlock>,
+    /// Per block, base offset into the entry arenas (sparse blocks only).
+    pub ent_base: Vec<u32>,
+    pub panel_off: Vec<u32>,
+    pub panel_total: usize,
+    pub dense_len: usize,
+    pub rows_len: usize,
+    pub ptr_len: usize,
+    pub ents_len: usize,
+    pub by_target: Vec<Vec<u32>>,
+    /// Per target leaf, (source leaf → block index), sorted for the
+    /// fill-pass lookups.
+    pub lookup: Vec<Vec<(u32, u32)>>,
+}
+
+pub(crate) fn scan_layout(
+    order: &[(u32, u32)],
+    per_leaf: &[Vec<LeafCount>],
+    tgt_leaves: &[Span],
+    src_leaves: &[Span],
+    dense_threshold: f64,
+) -> Layout {
+    let nt = tgt_leaves.len();
+    let mut blocks: Vec<LeafBlock> = Vec::with_capacity(order.len());
+    let mut ent_base: Vec<u32> = Vec::with_capacity(order.len());
+    let mut panel_off: Vec<u32> = Vec::with_capacity(order.len());
+    let mut panel_total = 0usize;
+    let (mut dense_len, mut rows_len, mut ptr_len, mut ents_len) = (0usize, 0usize, 0usize, 0usize);
+    for &(tl, sl) in order {
+        let counts = &per_leaf[tl as usize];
+        let c = &counts[counts
+            .binary_search_by_key(&sl, |c| c.sl)
+            .expect("traversal emitted an uncounted block")];
+        let rows = tgt_leaves[tl as usize];
+        let cols = src_leaves[sl as usize];
+        let area = rows.len() * cols.len();
+        let density = c.nnz as f64 / area as f64;
+        let kind = if density >= dense_threshold {
+            let off = dense_len as u32;
+            dense_len += area;
+            ent_base.push(0);
+            panel_off.push(panel_total as u32);
+            panel_total += panel::panel_len(rows.len(), cols.len());
+            BlockKind::Dense { off }
+        } else {
+            let k = BlockKind::Sparse {
+                row_off: rows_len as u32,
+                row_cnt: c.rows,
+                ptr_off: ptr_len as u32,
+            };
+            rows_len += c.rows as usize;
+            ptr_len += c.rows as usize + 1;
+            ent_base.push(ents_len as u32);
+            ents_len += c.nnz as usize;
+            panel_off.push(panel::NO_PANEL);
+            k
+        };
+        blocks.push(LeafBlock {
+            tleaf: tl,
+            sleaf: sl,
+            rows,
+            cols,
+            nnz: c.nnz,
+            kind,
+        });
+    }
+    assert!(panel_total <= u32::MAX as usize, "panel arena exceeds u32 offsets");
+    let mut by_target: Vec<Vec<u32>> = vec![Vec::new(); nt];
+    for (t, b) in blocks.iter().enumerate() {
+        by_target[b.tleaf as usize].push(t as u32);
+    }
+    let mut lookup: Vec<Vec<(u32, u32)>> = vec![Vec::new(); nt];
+    for (t, b) in blocks.iter().enumerate() {
+        lookup[b.tleaf as usize].push((b.sleaf, t as u32));
+    }
+    for l in lookup.iter_mut() {
+        l.sort_unstable();
+    }
+    Layout {
+        blocks,
+        ent_base,
+        panel_off,
+        panel_total,
+        dense_len,
+        rows_len,
+        ptr_len,
+        ents_len,
+        by_target,
+        lookup,
+    }
+}
+
+/// Fill pass for one target leaf: scatter the leaf's rows of `a` into the
+/// (full) arena slices.  Writes land only in regions of blocks owned by
+/// this leaf; a fixed row scan, so the output is bit-identical regardless
+/// of which thread runs it.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn fill_target_leaf(
+    a: &Csr,
+    span: Span,
+    lst: &[(u32, u32)],
+    col_leaf: &[u32],
+    blocks: &[LeafBlock],
+    ent_base: &[u32],
+    dense_all: &mut [f32],
+    rows_all: &mut [u16],
+    ptr_all: &mut [u32],
+    col_all: &mut [u16],
+    val_all: &mut [f32],
+) {
+    let mut ents_written = vec![0u32; lst.len()];
+    let mut rows_written = vec![0u32; lst.len()];
+    let mut cur_row = vec![u32::MAX; lst.len()];
+    for &(_, bi) in lst {
+        if let BlockKind::Sparse { ptr_off, .. } = blocks[bi as usize].kind {
+            // ptr[0] = block entry base; ptr[1 + t] (filled below) = end of
+            // occupied row t.
+            ptr_all[ptr_off as usize] = ent_base[bi as usize];
+        }
+    }
+    for i in span.lo..span.hi {
+        let local_row = i - span.lo;
+        let (cols, vals) = a.row(i as usize);
+        // Same run cache as the count pass: ascending columns deliver equal
+        // source leaves in runs, so the lookup is O(1) amortized instead of
+        // a search per nonzero.
+        let mut cached = usize::MAX;
+        for (&j, &v) in cols.iter().zip(vals) {
+            let sl = col_leaf[j as usize];
+            let li = if cached != usize::MAX && lst[cached].0 == sl {
+                cached
+            } else {
+                lst.binary_search_by_key(&sl, |e| e.0)
+                    .expect("entry in uncounted block")
+            };
+            cached = li;
+            let bi = lst[li].1 as usize;
+            let b = &blocks[bi];
+            match b.kind {
+                BlockKind::Dense { off } => {
+                    let w = b.cols.len();
+                    let c = (j - b.cols.lo) as usize;
+                    dense_all[off as usize + local_row as usize * w + c] += v;
+                }
+                BlockKind::Sparse {
+                    row_off, ptr_off, ..
+                } => {
+                    let base = ent_base[bi];
+                    if cur_row[li] != i {
+                        cur_row[li] = i;
+                        rows_all[row_off as usize + rows_written[li] as usize] = local_row as u16;
+                        rows_written[li] += 1;
+                    }
+                    let e = (base + ents_written[li]) as usize;
+                    col_all[e] = (j - b.cols.lo) as u16;
+                    val_all[e] = v;
+                    ents_written[li] += 1;
+                    ptr_all[ptr_off as usize + rows_written[li] as usize] = base + ents_written[li];
+                }
+            }
+        }
+    }
+}
+
+/// Pack pass: tile-major panel copies of every dense block (parallel over
+/// blocks; a pure function of the dense arena, bit-identical across thread
+/// counts).
+pub(crate) fn pack_panels(
+    pool: &ThreadPool,
+    blocks: &[LeafBlock],
+    panel_off: &[u32],
+    dense: &[f32],
+    panel_total: usize,
+) -> panel::AlignedF32 {
+    let mut panel_data = panel::AlignedF32::zeroed(panel_total);
+    {
+        let pp = SendPtr(panel_data.as_mut_slice().as_mut_ptr());
+        let ppr = &pp;
+        pool.for_each_chunked(blocks.len(), 8, |t| {
+            let b = &blocks[t];
+            if let BlockKind::Dense { off } = b.kind {
+                let (rn, cn) = (b.rows.len(), b.cols.len());
+                let po = panel_off[t] as usize;
+                let plen = panel::panel_len(rn, cn);
+                // SAFETY: the worker materializes only its own block's
+                // panel region; regions are disjoint per block, so no two
+                // live slices overlap.
+                let out: &mut [f32] = unsafe { std::slice::from_raw_parts_mut(ppr.0.add(po), plen) };
+                panel::pack_panel(&dense[off as usize..off as usize + rn * cn], rn, cn, out);
+            }
+        });
+    }
+    panel_data
+}
+
+/// Profile stats of a block layout (a pure function of the blocks and the
+/// target cut) — computed once at build/update, published by the caller.
+pub(crate) fn compute_stats(
+    nnz: usize,
+    rows: usize,
+    cols: usize,
+    blocks: &[LeafBlock],
+    tgt_tree: &BoxTree,
+    tgt_leaf_ids: &[u32],
+    panel_total: usize,
+) -> CsbStats {
+    let depth: Vec<u32> = tgt_leaf_ids.iter().map(|&id| node_depth(tgt_tree, id)).collect();
+    let max_depth = depth.iter().copied().max().unwrap_or(0) as usize;
+    let mut level_rows: Vec<CsbLevelStats> = (0..=max_depth)
+        .map(|l| CsbLevelStats {
+            level: l as u32,
+            ..CsbLevelStats::default()
+        })
+        .collect();
+    let mut stats = CsbStats {
+        nnz: nnz as u64,
+        total_area: rows as u64 * cols as u64,
+        panel_bytes: panel_total as u64 * 4,
+        ..CsbStats::default()
+    };
+    for b in blocks {
+        let area = b.rows.len() as u64 * b.cols.len() as u64;
+        stats.covered_area += area;
+        let row = &mut level_rows[depth[b.tleaf as usize] as usize];
+        row.blocks += 1;
+        row.nnz += b.nnz as u64;
+        row.cells += area;
+        if b.is_dense() {
+            stats.dense_blocks += 1;
+            stats.dense_cells += area;
+            stats.dense_nnz += b.nnz as u64;
+            row.dense_blocks += 1;
+        } else {
+            stats.sparse_blocks += 1;
+        }
+    }
+    stats.levels = level_rows.into_iter().filter(|r| r.blocks > 0).collect();
+    stats
+}
+
 /// Depth of tree node `id` (root = 0) via parent walk — the level label of
 /// the per-level profile counters.
 fn node_depth(tree: &BoxTree, id: u32) -> u32 {
@@ -913,7 +1027,7 @@ fn node_depth(tree: &BoxTree, id: u32) -> u32 {
 }
 
 /// Map each index to its leaf ordinal via span scan.
-fn leaf_lookup(leaves: &[Span], n: usize) -> Vec<u32> {
+pub(crate) fn leaf_lookup(leaves: &[Span], n: usize) -> Vec<u32> {
     let mut out = vec![0u32; n];
     for (ord, sp) in leaves.iter().enumerate() {
         for i in sp.lo..sp.hi {
@@ -926,7 +1040,7 @@ fn leaf_lookup(leaves: &[Span], n: usize) -> Vec<u32> {
 /// Recursive dual-tree descent emitting (block-row ordinal, block-col
 /// ordinal) pairs over the two size cuts; pairs with no nonzeros are pruned
 /// via a bottom-up occupancy set.
-fn multilevel_order(
+pub(crate) fn multilevel_order(
     tt: &BoxTree,
     st: &BoxTree,
     tgt_leaf_ids: &[u32],

@@ -8,3 +8,4 @@ pub mod hier;
 pub mod kernel;
 pub mod layout;
 pub mod panel;
+pub mod update;

@@ -1,0 +1,569 @@
+//! Incremental [`HierCsb`] rebuild after a tree update: reuse the arena
+//! regions of target leaves whose rows are unchanged, re-fill only the rest
+//! — **bit-identical** to a from-scratch [`HierCsb::build_with_par`] over
+//! the updated inputs.
+//!
+//! A target leaf is *reusable* when a per-row diff proves its block
+//! contents would come out identical: same row lengths, bit-equal values,
+//! and every column mapping to the same source leaf at the same span-local
+//! offset.  The diff is self-contained evidence — the `clean`/`node_map`
+//! flags from the tree update only pre-filter which leaves are worth
+//! diffing — so reuse can never produce arenas that differ from a fresh
+//! build, it can only conservatively fall back to re-filling.
+//!
+//! Everything that is a cheap pure function of the new inputs (traversal
+//! order, exclusive scan, panel pack, stats) runs from scratch; the
+//! expensive passes (count and fill, the only passes that scan the profile
+//! matrix) are skipped per reused leaf.  A full-rebuild tree delta (all
+//! leaves un-clean) degrades gracefully to exactly the from-scratch build.
+
+use crate::csb::hier::{
+    self, count_target_leaf, fill_target_leaf, BlockKind, HierCsb, LeafCount, Span,
+};
+use crate::obs::{self, counters, Counter};
+use crate::par::pool::{SendPtr, ThreadPool};
+use crate::sparse::csr::Csr;
+use crate::tree::boxtree::BoxTree;
+use crate::tree::update::TreeUpdate;
+
+/// One side's (rows or columns) view of a tree update, in the form the CSB
+/// reuse check consumes.
+#[derive(Clone, Debug)]
+pub struct SideDelta {
+    /// New node id → old node id (`u32::MAX` = rebuilt).
+    pub node_map: Vec<u32>,
+    /// New node id → whole subtree preserved verbatim.
+    pub clean: Vec<bool>,
+    /// New tree position → old tree position (`u32::MAX` = inserted).
+    pub pos_map: Vec<u32>,
+}
+
+impl SideDelta {
+    /// Delta of an actual tree update.
+    pub fn from_update(old_tree: &BoxTree, tu: &TreeUpdate) -> SideDelta {
+        SideDelta {
+            node_map: tu.node_map.clone(),
+            clean: tu.clean.clone(),
+            pos_map: tu.pos_map(old_tree),
+        }
+    }
+
+    /// Delta of an unchanged side (e.g. a static source set while targets
+    /// move): every node clean, every position its own image.
+    pub fn identity(tree: &BoxTree) -> SideDelta {
+        let nn = tree.nodes.len();
+        SideDelta {
+            node_map: (0..nn as u32).collect(),
+            clean: vec![true; nn],
+            pos_map: (0..tree.n() as u32).collect(),
+        }
+    }
+}
+
+/// Incremental rebuild of `old` for the updated profile `a_new` over the
+/// updated trees.  `a_old` is the profile `old` was built from (needed for
+/// the row diffs).  The result is bit-identical to
+/// `HierCsb::build_with_par(a_new, new_tgt_tree, new_src_tree, block_cap,
+/// old.dense_threshold, _)` at any thread count.
+#[allow(clippy::too_many_arguments)]
+pub fn update_par(
+    old: &HierCsb,
+    a_old: &Csr,
+    a_new: &Csr,
+    new_tgt_tree: &BoxTree,
+    tdelta: &SideDelta,
+    new_src_tree: &BoxTree,
+    sdelta: &SideDelta,
+    block_cap: usize,
+    threads: usize,
+) -> HierCsb {
+    obs::span!("csb.update");
+    assert_eq!(a_old.rows, old.rows, "a_old shape mismatch with old csb");
+    assert_eq!(a_old.cols, old.cols, "a_old shape mismatch with old csb");
+    assert_eq!(a_new.rows, new_tgt_tree.n());
+    assert_eq!(a_new.cols, new_src_tree.n());
+    assert_eq!(tdelta.pos_map.len(), a_new.rows, "target pos_map mismatch");
+    assert_eq!(sdelta.pos_map.len(), a_new.cols, "source pos_map mismatch");
+    let dense_threshold = old.dense_threshold;
+    let block_cap = if block_cap == 0 { hier::LEAF_POINTS } else { block_cap };
+
+    let tgt_leaf_ids = new_tgt_tree.cut_by_size(block_cap);
+    let src_leaf_ids = new_src_tree.cut_by_size(block_cap);
+    let tgt_leaves: Vec<Span> = tgt_leaf_ids
+        .iter()
+        .map(|&l| Span {
+            lo: new_tgt_tree.nodes[l as usize].lo,
+            hi: new_tgt_tree.nodes[l as usize].hi,
+        })
+        .collect();
+    let src_leaves: Vec<Span> = src_leaf_ids
+        .iter()
+        .map(|&l| Span {
+            lo: new_src_tree.nodes[l as usize].lo,
+            hi: new_src_tree.nodes[l as usize].hi,
+        })
+        .collect();
+    for sp in tgt_leaves.iter().chain(src_leaves.iter()) {
+        assert!(
+            sp.len() <= (u16::MAX as usize) + 1,
+            "leaf span of {} points exceeds the u16 local-index range (block_cap {})",
+            sp.len(),
+            block_cap
+        );
+    }
+
+    let col_leaf_new = hier::leaf_lookup(&src_leaves, a_new.cols);
+    let col_leaf_old = hier::leaf_lookup(&old.src_leaves, a_old.cols);
+    let pool = ThreadPool::new_or_default(threads);
+    let nt = tgt_leaves.len();
+
+    // Source cut correspondence: new source leaf ordinal → old ordinal when
+    // the leaf's member rows sit in one preserved block (clean cut node and
+    // an exactly matching old span), `u32::MAX` otherwise.  Leaf spans
+    // partition the axis, so an exact span match identifies the unique old
+    // leaf covering the same contiguous stretch of old positions.
+    let find_old = |leaves: &[Span], old_lo: u32, len: usize| -> u32 {
+        match leaves.binary_search_by_key(&old_lo, |s| s.lo) {
+            Ok(o) if leaves[o].len() == len => o as u32,
+            _ => u32::MAX,
+        }
+    };
+    let src_old_ord: Vec<u32> = src_leaves
+        .iter()
+        .zip(&src_leaf_ids)
+        .map(|(sp, &sn)| {
+            if sp.is_empty() || !sdelta.clean[sn as usize] {
+                return u32::MAX;
+            }
+            let old_lo = sdelta.pos_map[sp.lo as usize];
+            if old_lo == u32::MAX {
+                return u32::MAX;
+            }
+            find_old(&old.src_leaves, old_lo, sp.len())
+        })
+        .collect();
+    let mut src_new_of_old = vec![u32::MAX; old.src_leaves.len()];
+    for (sl, &so) in src_old_ord.iter().enumerate() {
+        if so != u32::MAX {
+            src_new_of_old[so as usize] = sl as u32;
+        }
+    }
+
+    // Reuse plan: per new target leaf, the old target leaf whose arena
+    // regions can be copied verbatim (`u32::MAX` = re-fill).  The per-row
+    // diff below is the actual correctness proof; see module docs.
+    let leaf_idx: Vec<usize> = (0..nt).collect();
+    let plan: Vec<u32> = pool.map(&leaf_idx, |&tl| {
+        let sp = tgt_leaves[tl];
+        let tn = tgt_leaf_ids[tl] as usize;
+        if sp.is_empty() || !tdelta.clean[tn] {
+            return u32::MAX;
+        }
+        let old_lo = tdelta.pos_map[sp.lo as usize];
+        if old_lo == u32::MAX {
+            return u32::MAX;
+        }
+        let otl = find_old(&old.tgt_leaves, old_lo, sp.len());
+        if otl == u32::MAX {
+            return u32::MAX;
+        }
+        let osp = old.tgt_leaves[otl as usize];
+        for t in 0..sp.len() as u32 {
+            let (cn, vn) = a_new.row((sp.lo + t) as usize);
+            let (co, vo) = a_old.row((osp.lo + t) as usize);
+            if cn.len() != co.len() {
+                return u32::MAX;
+            }
+            for e in 0..cn.len() {
+                if vn[e].to_bits() != vo[e].to_bits() {
+                    return u32::MAX;
+                }
+                let sl = col_leaf_new[cn[e] as usize];
+                let so = src_old_ord[sl as usize];
+                if so == u32::MAX || col_leaf_old[co[e] as usize] != so {
+                    return u32::MAX;
+                }
+                if cn[e] - src_leaves[sl as usize].lo != co[e] - old.src_leaves[so as usize].lo {
+                    return u32::MAX;
+                }
+            }
+        }
+        otl
+    });
+
+    // Count pass: reused leaves reconstruct their counts from the old block
+    // metadata (the diff proved they are what a rescan would produce);
+    // everything else rescans its rows.
+    let count_span = obs::trace::SpanGuard::enter("csb.update.count");
+    let per_leaf: Vec<Vec<LeafCount>> = pool.map(&leaf_idx, |&tl| {
+        let otl = plan[tl];
+        if otl == u32::MAX {
+            return count_target_leaf(a_new, tgt_leaves[tl], &col_leaf_new);
+        }
+        let mut counts: Vec<LeafCount> = old.by_target[otl as usize]
+            .iter()
+            .map(|&bi| {
+                let b = &old.blocks[bi as usize];
+                let new_sl = src_new_of_old[b.sleaf as usize];
+                debug_assert_ne!(new_sl, u32::MAX, "reused leaf references an unmapped source leaf");
+                LeafCount {
+                    sl: new_sl,
+                    nnz: b.nnz,
+                    // `rows` feeds only the Sparse arm of the scan; a block
+                    // with identical nnz over an identical area keeps its
+                    // storage kind, so the dense value is never read.
+                    rows: match b.kind {
+                        BlockKind::Sparse { row_cnt, .. } => row_cnt,
+                        BlockKind::Dense { .. } => 0,
+                    },
+                    last_row: 0,
+                }
+            })
+            .collect();
+        counts.sort_unstable_by_key(|c| c.sl);
+        counts
+    });
+    drop(count_span);
+
+    // Traversal order + exclusive scan: cheap pure functions of the new
+    // trees and counts — always fresh.
+    let keys: Vec<(u32, u32)> = per_leaf
+        .iter()
+        .enumerate()
+        .flat_map(|(tl, cs)| cs.iter().map(move |c| (tl as u32, c.sl)))
+        .collect();
+    let order = {
+        obs::span!("csb.update.order");
+        hier::multilevel_order(new_tgt_tree, new_src_tree, &tgt_leaf_ids, &src_leaf_ids, &keys)
+    };
+    assert_eq!(order.len(), keys.len(), "traversal missed blocks");
+    let scan_span = obs::trace::SpanGuard::enter("csb.update.scan");
+    let hier::Layout {
+        blocks,
+        ent_base,
+        panel_off,
+        panel_total,
+        dense_len,
+        rows_len,
+        ptr_len,
+        ents_len,
+        by_target,
+        lookup,
+    } = hier::scan_layout(&order, &per_leaf, &tgt_leaves, &src_leaves, dense_threshold);
+    drop(scan_span);
+
+    // Fill pass: reused leaves copy their old arena regions (entry pointers
+    // rebased to the new block bases), the rest re-scatter their rows.
+    let fill_span = obs::trace::SpanGuard::enter("csb.update.fill");
+    let mut dense = vec![0.0f32; dense_len];
+    let mut sp_rows = vec![0u16; rows_len];
+    let mut sp_ptr = vec![0u32; ptr_len];
+    let mut sp_col = vec![0u16; ents_len];
+    let mut sp_val = vec![0.0f32; ents_len];
+    {
+        let dp = SendPtr(dense.as_mut_ptr());
+        let rp = SendPtr(sp_rows.as_mut_ptr());
+        let pp = SendPtr(sp_ptr.as_mut_ptr());
+        let cp = SendPtr(sp_col.as_mut_ptr());
+        let vp = SendPtr(sp_val.as_mut_ptr());
+        let (dpr, rpr, ppr, cpr, vpr) = (&dp, &rp, &pp, &cp, &vp);
+        let blocks_ref = &blocks;
+        let lookup_ref = &lookup;
+        let ent_base_ref = &ent_base;
+        let tgt_leaves_ref = &tgt_leaves;
+        let col_leaf_ref = &col_leaf_new;
+        let plan_ref = &plan;
+        let src_old_ord_ref = &src_old_ord;
+        pool.for_each_chunked(nt, 1, |tl| {
+            // SAFETY: every write lands in an arena region of a block owned
+            // by target leaf `tl`; block regions are disjoint.
+            let dense_all: &mut [f32] = unsafe { std::slice::from_raw_parts_mut(dpr.0, dense_len) };
+            let rows_all: &mut [u16] = unsafe { std::slice::from_raw_parts_mut(rpr.0, rows_len) };
+            let ptr_all: &mut [u32] = unsafe { std::slice::from_raw_parts_mut(ppr.0, ptr_len) };
+            let col_all: &mut [u16] = unsafe { std::slice::from_raw_parts_mut(cpr.0, ents_len) };
+            let val_all: &mut [f32] = unsafe { std::slice::from_raw_parts_mut(vpr.0, ents_len) };
+            let otl = plan_ref[tl];
+            if otl == u32::MAX {
+                fill_target_leaf(
+                    a_new,
+                    tgt_leaves_ref[tl],
+                    &lookup_ref[tl],
+                    col_leaf_ref,
+                    blocks_ref,
+                    ent_base_ref,
+                    dense_all,
+                    rows_all,
+                    ptr_all,
+                    col_all,
+                    val_all,
+                );
+                return;
+            }
+            // Old (source leaf → block index) lookup for the reused leaf.
+            let mut olst: Vec<(u32, u32)> = old.by_target[otl as usize]
+                .iter()
+                .map(|&bi| (old.blocks[bi as usize].sleaf, bi))
+                .collect();
+            olst.sort_unstable();
+            for &(sl, bi) in &lookup_ref[tl] {
+                let b = &blocks_ref[bi as usize];
+                let old_sl = src_old_ord_ref[sl as usize];
+                let obi = olst[olst
+                    .binary_search_by_key(&old_sl, |e| e.0)
+                    .expect("reused leaf lost a block")]
+                .1 as usize;
+                let ob = &old.blocks[obi];
+                debug_assert_eq!(b.nnz, ob.nnz, "reused block nnz drifted");
+                match (b.kind, ob.kind) {
+                    (BlockKind::Dense { off }, BlockKind::Dense { off: ooff }) => {
+                        let len = b.rows.len() * b.cols.len();
+                        dense_all[off as usize..off as usize + len]
+                            .copy_from_slice(&old.dense[ooff as usize..ooff as usize + len]);
+                    }
+                    (
+                        BlockKind::Sparse {
+                            row_off,
+                            row_cnt,
+                            ptr_off,
+                        },
+                        BlockKind::Sparse {
+                            row_off: orow_off,
+                            row_cnt: orow_cnt,
+                            ptr_off: optr_off,
+                        },
+                    ) => {
+                        debug_assert_eq!(row_cnt, orow_cnt, "reused block row count drifted");
+                        rows_all[row_off as usize..(row_off + row_cnt) as usize].copy_from_slice(
+                            &old.sp_rows[orow_off as usize..(orow_off + row_cnt) as usize],
+                        );
+                        // Entry pointers are absolute; rebase from the old
+                        // block's entry base (= its ptr[0]) to the new one.
+                        let obase = old.sp_ptr[optr_off as usize];
+                        let nbase = ent_base_ref[bi as usize];
+                        for t in 0..=row_cnt as usize {
+                            ptr_all[ptr_off as usize + t] =
+                                old.sp_ptr[optr_off as usize + t] - obase + nbase;
+                        }
+                        let nnz = b.nnz as usize;
+                        col_all[nbase as usize..nbase as usize + nnz].copy_from_slice(
+                            &old.sp_col[obase as usize..obase as usize + nnz],
+                        );
+                        val_all[nbase as usize..nbase as usize + nnz].copy_from_slice(
+                            &old.sp_val[obase as usize..obase as usize + nnz],
+                        );
+                    }
+                    _ => unreachable!(
+                        "identical density and threshold must keep the block storage kind"
+                    ),
+                }
+            }
+        });
+    }
+    drop(fill_span);
+
+    let reused = plan.iter().filter(|&&p| p != u32::MAX).count();
+    counters::add(Counter::UpdateLeavesReused, reused as u64);
+    counters::add(Counter::UpdateLeavesRebuilt, (nt - reused) as u64);
+
+    // Pack + stats: pure functions of the new layout, always fresh.
+    let pack_span = obs::trace::SpanGuard::enter("csb.update.pack");
+    let panel_data = hier::pack_panels(&pool, &blocks, &panel_off, &dense, panel_total);
+    drop(pack_span);
+    let stats = hier::compute_stats(
+        a_new.nnz(),
+        a_new.rows,
+        a_new.cols,
+        &blocks,
+        new_tgt_tree,
+        &tgt_leaf_ids,
+        panel_total,
+    );
+    stats.publish();
+
+    HierCsb {
+        rows: a_new.rows,
+        cols: a_new.cols,
+        nnz: a_new.nnz(),
+        tgt_leaves,
+        src_leaves,
+        blocks,
+        by_target,
+        dense_threshold,
+        dense,
+        sp_rows,
+        sp_ptr,
+        sp_col,
+        sp_val,
+        panels: crate::csb::panel::PanelArena {
+            off: panel_off,
+            data: panel_data,
+        },
+        stats,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::Dataset;
+    use crate::data::synth::SynthSpec;
+    use crate::knn::exact::knn_graph;
+    use crate::tree::update::{update_tree, UpdateBatch};
+    use crate::util::rng::Rng;
+
+    /// kNN profile of `ds` in `tree` order — the same recomputation both
+    /// the incremental and the from-scratch side get.
+    fn profile(ds: &Dataset, tree: &BoxTree) -> Csr {
+        let dsr = ds.permuted(&tree.perm);
+        let g = knn_graph(&dsr, 8, 2);
+        Csr::from_knn(&g, dsr.n()).symmetrized()
+    }
+
+    /// Interior batch (away from the bbox hull) so the tree path stays
+    /// incremental.
+    fn interior_batch(ds: &Dataset, seed: u64, n_del: usize, n_ins: usize) -> UpdateBatch {
+        let d = ds.d();
+        let mut rng = Rng::new(seed);
+        let mut lo = vec![f32::INFINITY; d];
+        let mut hi = vec![f32::NEG_INFINITY; d];
+        for i in 0..ds.n() {
+            for (a, &x) in ds.row(i).iter().enumerate() {
+                lo[a] = lo[a].min(x);
+                hi[a] = hi[a].max(x);
+            }
+        }
+        let on_hull = |row: &[f32]| row.iter().enumerate().any(|(a, &x)| x == lo[a] || x == hi[a]);
+        let mut deletes = Vec::new();
+        while deletes.len() < n_del {
+            let i = rng.below(ds.n());
+            if !on_hull(ds.row(i)) {
+                deletes.push(i);
+            }
+        }
+        let mut inserts = Vec::new();
+        for _ in 0..n_ins {
+            let i = rng.below(ds.n());
+            for (a, &x) in ds.row(i).iter().enumerate() {
+                inserts.push(0.9 * x + 0.1 * (0.5 * (lo[a] + hi[a])));
+            }
+        }
+        UpdateBatch { deletes, inserts }
+    }
+
+    fn assert_csb_eq(want: &HierCsb, got: &HierCsb, what: &str) {
+        assert_eq!(want.tgt_leaves, got.tgt_leaves, "{what}: tgt_leaves");
+        assert_eq!(want.src_leaves, got.src_leaves, "{what}: src_leaves");
+        assert_eq!(want.blocks, got.blocks, "{what}: block layout");
+        assert_eq!(want.by_target, got.by_target, "{what}: by_target");
+        assert_eq!(want.sp_rows, got.sp_rows, "{what}: sp_rows");
+        assert_eq!(want.sp_ptr, got.sp_ptr, "{what}: sp_ptr");
+        assert_eq!(want.sp_col, got.sp_col, "{what}: sp_col");
+        assert_eq!(want.dense.len(), got.dense.len(), "{what}: dense len");
+        assert!(
+            want.dense.iter().zip(&got.dense).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "{what}: dense arena differs"
+        );
+        assert!(
+            want.sp_val.iter().zip(&got.sp_val).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "{what}: sp_val arena differs"
+        );
+        assert_eq!(want.panels.off, got.panels.off, "{what}: panel offsets");
+        let wp = want.panels.data.as_slice();
+        let gp = got.panels.data.as_slice();
+        assert_eq!(wp.len(), gp.len(), "{what}: panel arena len");
+        assert!(
+            wp.iter().zip(gp).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "{what}: panel arena differs"
+        );
+        assert_eq!(want.stats, got.stats, "{what}: stats");
+    }
+
+    #[test]
+    fn update_bitidentical_with_fresh_build() {
+        let ds = SynthSpec::blobs(500, 3, 4, 11).generate();
+        let tree = BoxTree::build(&ds, 12, 24);
+        let a_old = profile(&ds, &tree);
+        let old = HierCsb::build_with_par(&a_old, &tree, &tree, 32, 0.5, 2);
+        let batch = interior_batch(&ds, 41, 15, 15);
+        let tu = update_tree(&tree, &ds, &batch, 24, 2);
+        assert!(!tu.full_rebuild);
+        let a_new = profile(&tu.ds, &tu.tree);
+        let delta = SideDelta::from_update(&tree, &tu);
+        let want = HierCsb::build_with_par(&a_new, &tu.tree, &tu.tree, 32, 0.5, 1);
+        for threads in [1usize, 2, 8] {
+            let before = counters::get(Counter::UpdateLeavesReused);
+            let got = update_par(
+                &old, &a_old, &a_new, &tu.tree, &delta, &tu.tree, &delta, 32, threads,
+            );
+            assert_csb_eq(&want, &got, &format!("threads={threads}"));
+            // A localized batch on clustered data must actually reuse work.
+            assert!(
+                counters::get(Counter::UpdateLeavesReused) > before,
+                "no leaves reused, threads={threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn chained_updates_stay_bitidentical() {
+        let mut ds = SynthSpec::blobs(400, 2, 4, 19).generate();
+        let mut tree = BoxTree::build(&ds, 12, 24);
+        let mut a = profile(&ds, &tree);
+        let mut csb = HierCsb::build_with_par(&a, &tree, &tree, 32, 0.5, 1);
+        for step in 0..3u64 {
+            let batch = interior_batch(&ds, 600 + step, 10, 10);
+            let tu = update_tree(&tree, &ds, &batch, 24, 2);
+            let a_new = profile(&tu.ds, &tu.tree);
+            let delta = SideDelta::from_update(&tree, &tu);
+            let got = update_par(
+                &csb, &a, &a_new, &tu.tree, &delta, &tu.tree, &delta, 32, 2,
+            );
+            let want = HierCsb::build_with_par(&a_new, &tu.tree, &tu.tree, 32, 0.5, 1);
+            assert_csb_eq(&want, &got, &format!("chain step {step}"));
+            ds = tu.ds;
+            tree = tu.tree;
+            a = a_new;
+            csb = got;
+        }
+    }
+
+    #[test]
+    fn full_rebuild_delta_degrades_to_fresh_build() {
+        let ds = SynthSpec::blobs(300, 2, 3, 23).generate();
+        let tree = BoxTree::build(&ds, 10, 24);
+        let a_old = profile(&ds, &tree);
+        let old = HierCsb::build_with_par(&a_old, &tree, &tree, 32, 0.5, 1);
+        // hull-growing insert → full tree rebuild, nothing clean
+        let batch = UpdateBatch {
+            deletes: vec![],
+            inserts: vec![1.0e3, -1.0e3],
+        };
+        let tu = update_tree(&tree, &ds, &batch, 24, 1);
+        assert!(tu.full_rebuild);
+        let a_new = profile(&tu.ds, &tu.tree);
+        let delta = SideDelta::from_update(&tree, &tu);
+        let got = update_par(
+            &old, &a_old, &a_new, &tu.tree, &delta, &tu.tree, &delta, 32, 2,
+        );
+        let want = HierCsb::build_with_par(&a_new, &tu.tree, &tu.tree, 32, 0.5, 1);
+        assert_csb_eq(&want, &got, "full-rebuild delta");
+    }
+
+    #[test]
+    fn identity_delta_reuses_everything() {
+        let ds = SynthSpec::blobs(350, 3, 3, 29).generate();
+        let tree = BoxTree::build(&ds, 12, 24);
+        let a = profile(&ds, &tree);
+        let old = HierCsb::build_with_par(&a, &tree, &tree, 32, 0.5, 1);
+        let delta = SideDelta::identity(&tree);
+        let before = counters::get(Counter::UpdateLeavesReused);
+        let got = update_par(&old, &a, &a, &tree, &delta, &tree, &delta, 32, 2);
+        assert_csb_eq(&old, &got, "identity delta");
+        // Counters are global and other tests add to them concurrently, so
+        // only the lower bound of this call's own contribution is checked.
+        assert!(
+            counters::get(Counter::UpdateLeavesReused) - before >= old.tgt_leaves.len() as u64,
+            "identity delta re-filled a leaf"
+        );
+    }
+}

@@ -43,6 +43,9 @@ pub struct FarBlockSpec {
     pub tleaf: u32,
     pub rows: Span,
     pub cols: Span,
+    /// Tree node id of the admissible source node — the identity the
+    /// incremental update keys factor reuse on (`hmat::update`).
+    pub src_node: u32,
 }
 
 /// The admissibility partition of the `n x n` self-interaction index
@@ -158,6 +161,7 @@ pub fn partition(tree: &BoxTree, block_cap: usize, eta: f32) -> Partition {
                 tleaf: o as u32,
                 rows: leaves[o],
                 cols,
+                src_node: sn,
             });
             covered = leaves[o].hi;
             o += 1;

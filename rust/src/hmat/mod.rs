@@ -29,8 +29,10 @@ pub mod aca;
 pub mod admissible;
 pub mod apply;
 pub mod store;
+pub mod update;
 
 use crate::csb::hier::{HierCsb, LEAF_POINTS};
+use crate::csb::update::SideDelta;
 use crate::csb::kernel::KernelKind;
 use crate::csb::panel::AlignedF32;
 use crate::hmat::admissible::Partition;
@@ -183,6 +185,73 @@ impl FullKernelEngine {
         }
     }
 
+    /// Incremental rebuild against a tree update: the near profile reuses
+    /// the Gaussian rows of clean target leaves straight out of this
+    /// engine's dense arenas ([`update::near_profile_update`] — the `exp`
+    /// regeneration is the dominant near-side cost), the far field lifts
+    /// the ACA factors of untouched (cut leaf, source node) pairs
+    /// ([`FarField::update`]), and everything else regenerates.  `self`
+    /// is untouched — existing handles keep applying against their
+    /// snapshot — and the result is bit-identical to
+    /// [`FullKernelEngine::build`] over `new_tree` at any
+    /// `build_threads`.  `cfg` must match the one this engine was built
+    /// with; `coords` are the **new** tree-ordered coordinates.
+    #[allow(clippy::too_many_arguments)]
+    pub fn update(
+        &self,
+        old_tree: &BoxTree,
+        new_tree: &BoxTree,
+        delta: &SideDelta,
+        coords: &[f32],
+        dim: usize,
+        cfg: &FullKernelConfig,
+        build_threads: usize,
+        threads: usize,
+        kernel: KernelKind,
+    ) -> FullKernelEngine {
+        crate::obs::span!("hmat.engine.update");
+        let n = new_tree.n();
+        assert_eq!(coords.len(), n * dim, "coords must be tree-ordered n x dim");
+        assert_eq!(dim, self.dim, "dimension must match the built engine");
+        let block_cap = if cfg.block_cap == 0 { LEAF_POINTS } else { cfg.block_cap };
+        let part_old = admissible::partition(old_tree, block_cap, cfg.eta);
+        let part = admissible::partition(new_tree, block_cap, cfg.eta);
+        let near_csr = update::near_profile_update(
+            &part,
+            &part_old,
+            &self.near.csb,
+            coords,
+            dim,
+            cfg.inv_h2,
+            delta,
+            build_threads,
+        );
+        let csb = HierCsb::build_with_par(&near_csr, new_tree, new_tree, block_cap, 0.5, build_threads);
+        let far = match cfg.far {
+            FarFieldMode::Off => FarField::empty(&part, cfg.tol),
+            FarFieldMode::Aca => FarField::update(
+                &self.far,
+                &part_old,
+                &part,
+                coords,
+                dim,
+                cfg.inv_h2,
+                cfg.tol,
+                delta,
+                build_threads,
+            ),
+        };
+        let near = Engine::with_kernel(csb, threads, kernel);
+        let far_scratch = apply::worker_scratch(near.pool.threads);
+        FullKernelEngine {
+            near,
+            far,
+            dim,
+            inv_h2: cfg.inv_h2,
+            far_scratch,
+        }
+    }
+
     pub fn n(&self) -> usize {
         self.near.csb.rows
     }
@@ -236,7 +305,7 @@ impl FullKernelEngine {
 /// transcendental recompute.  Fill is parallel over target leaves
 /// (disjoint row ranges) and each value is a pure function of its entry,
 /// so the CSR is bit-identical across thread counts.
-fn near_profile(
+pub(crate) fn near_profile(
     part: &Partition,
     coords: &[f32],
     d: usize,

@@ -115,12 +115,24 @@ impl FarField {
             pool.map(&part.far, |fb| aca_gauss(&gen, fb.rows, fb.cols, tol));
         drop(factorize_span);
 
+        Self::assemble(part, &factored, tol, &pool)
+    }
+
+    /// Passes 2–3 of the build — scan, fill, counters, task order — shared
+    /// with the incremental update (`hmat::update`), which swaps pass 1 for
+    /// a reuse-or-refactor mix.  A pure function of `(part, factored)`.
+    pub(crate) fn assemble(
+        part: &Partition,
+        factored: &[AcaFactor],
+        tol: f32,
+        pool: &ThreadPool,
+    ) -> FarField {
         // Pass 2 — exclusive scan of arena footprints.
         let scan_span = obs::trace::SpanGuard::enter("hmat.scan");
         let mut blocks: Vec<FarBlock> = Vec::with_capacity(part.far.len());
         let mut flen = 0usize;
         let mut plen = 0usize;
-        for (fb, f) in part.far.iter().zip(&factored) {
+        for (fb, f) in part.far.iter().zip(factored) {
             let rn = fb.rows.len();
             let cn = fb.cols.len();
             let (rank, kind) = match f {

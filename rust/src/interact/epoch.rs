@@ -1,0 +1,510 @@
+//! Versioned epoch publication of incrementally updated engines.
+//!
+//! The engines are immutable by design — the precompiled schedule, packed
+//! panels, and per-worker scratch all assume a frozen block structure.
+//! Incremental updates therefore never mutate a live engine: an update
+//! builds a **new epoch** off to the side (reusing untouched subtrees,
+//! arenas, and factors via the `tree::update` → `csb::update` →
+//! `hmat::update` chain) and publishes it atomically.  Readers hold
+//! `Arc<Epoch<_>>` handles: a handle acquired before a publish keeps
+//! applying against its snapshot — bit-stable answers for the epoch it
+//! saw — and the old engine's memory is reclaimed when the last such
+//! handle drops (`update.epochs_reclaimed` counts the drain).
+//!
+//! Lifecycle: **build → patch → publish → drain → reclaim.**
+//!
+//! Two concrete updatables:
+//!
+//! * [`UpdatableEngine`] — the near-field profile engine ([`Engine`]),
+//!   parameterized by a profile closure (e.g. symmetrized kNN); the CSB
+//!   arenas are patched by [`csb::update::update_par`] and the schedule is
+//!   recompiled by `Engine::with_kernel` (cheap — it walks the block list).
+//! * [`UpdatableKernelEngine`] — the full-kernel operator
+//!   ([`FullKernelEngine`]); near Gaussian rows and far ACA factors of
+//!   untouched pairs are lifted by [`hmat::update`].
+//!
+//! Both produce engines **bit-identical** to a from-scratch build over the
+//! post-update data (tree layout equivalence → profile equality → arena
+//! equality), which is what the differential fuzz harness
+//! (`rust/tests/update_fuzz.rs`) checks.
+
+use crate::csb::hier::HierCsb;
+use crate::csb::kernel::KernelKind;
+use crate::csb::update::{update_par, SideDelta};
+use crate::data::dataset::Dataset;
+use crate::hmat::{FullKernelConfig, FullKernelEngine};
+use crate::interact::engine::Engine;
+use crate::obs::{self, counters, Counter};
+use crate::sparse::csr::Csr;
+use crate::tree::boxtree::BoxTree;
+use crate::tree::update::{update_tree, UpdateBatch};
+use std::sync::{Arc, RwLock};
+
+/// One immutable published state.  Dropping the last handle to an epoch
+/// reclaims it (counted — the observable end of the drain).
+pub struct Epoch<T> {
+    /// Monotonic version, starting at 0 for the initial build.
+    pub version: u64,
+    pub value: T,
+}
+
+impl<T> Drop for Epoch<T> {
+    fn drop(&mut self) {
+        counters::add(Counter::UpdateEpochsReclaimed, 1);
+    }
+}
+
+/// Atomic single-writer/multi-reader publication point.
+///
+/// `acquire` hands out a snapshot handle (an `Arc` clone — O(1), no data
+/// copy); `publish` swaps in a new epoch.  In-flight readers are never
+/// blocked by a publish and never observe a half-built state: they keep
+/// the `Arc` they acquired.
+pub struct EpochPublisher<T> {
+    current: RwLock<Arc<Epoch<T>>>,
+}
+
+impl<T> EpochPublisher<T> {
+    /// Wrap the initial build as version 0 (counted as a publish).
+    pub fn new(value: T) -> EpochPublisher<T> {
+        counters::add(Counter::UpdateEpochsPublished, 1);
+        EpochPublisher {
+            current: RwLock::new(Arc::new(Epoch { version: 0, value })),
+        }
+    }
+
+    /// Snapshot handle to the current epoch.
+    pub fn acquire(&self) -> Arc<Epoch<T>> {
+        self.current.read().unwrap().clone()
+    }
+
+    /// Current version without taking a handle.
+    pub fn version(&self) -> u64 {
+        self.current.read().unwrap().version
+    }
+
+    /// Atomically replace the current epoch; returns the new version.
+    pub fn publish(&self, value: T) -> u64 {
+        let mut cur = self.current.write().unwrap();
+        let version = cur.version + 1;
+        *cur = Arc::new(Epoch { version, value });
+        counters::add(Counter::UpdateEpochsPublished, 1);
+        version
+    }
+}
+
+/// Build/update parameters shared by the updatable engines.
+#[derive(Clone, Copy, Debug)]
+pub struct UpdateCfg {
+    /// Tree leaf capacity (`BoxTree::build_par`).
+    pub leaf_cap: usize,
+    /// Tree depth cap — must stay fixed across updates (the clean-subtree
+    /// equivalence argument needs the same split policy on both sides).
+    pub max_depth: u32,
+    /// CSB blocking capacity (0 = `LEAF_POINTS`).
+    pub block_cap: usize,
+    /// Dense-storage threshold of the CSB build.
+    pub dense_threshold: f64,
+    /// Structure build/update parallelism (0 = machine default).
+    pub build_threads: usize,
+    /// Apply parallelism of published engines (0 = machine default).
+    pub threads: usize,
+    /// Kernel dispatch of published engines.
+    pub kernel: KernelKind,
+}
+
+impl Default for UpdateCfg {
+    fn default() -> Self {
+        UpdateCfg {
+            leaf_cap: 16,
+            max_depth: 32,
+            block_cap: 0,
+            dense_threshold: 0.6,
+            build_threads: 0,
+            threads: 0,
+            kernel: KernelKind::Auto,
+        }
+    }
+}
+
+/// Everything one near-field epoch owns: the engine plus the structures
+/// the *next* incremental update patches against.
+pub struct EngineEpoch {
+    pub engine: Engine,
+    pub tree: BoxTree,
+    /// Backing data in external (insertion) order.
+    pub ds: Dataset,
+    /// Tree-ordered profile CSR (the `a_old` of the next CSB patch).
+    pub profile: Csr,
+}
+
+/// An incrementally updatable near-field engine: a profile closure + an
+/// epoch publisher.  `update` rebuilds only touched subtrees and leaf
+/// blocks and publishes the result as a new epoch.
+///
+/// The profile closure receives the **tree-ordered** dataset and its tree
+/// and must return a tree-ordered CSR (rows = cols = tree positions).  It
+/// must be a deterministic function of its inputs — that is what carries
+/// the tree layer's layout equivalence into profile equality, and with it
+/// the bit-identity of incremental vs from-scratch arenas.
+pub struct UpdatableEngine<F: Fn(&Dataset, &BoxTree) -> Csr> {
+    cfg: UpdateCfg,
+    profile: F,
+    epochs: EpochPublisher<EngineEpoch>,
+}
+
+impl<F: Fn(&Dataset, &BoxTree) -> Csr> UpdatableEngine<F> {
+    /// From-scratch build of epoch 0.
+    pub fn build(ds: Dataset, cfg: UpdateCfg, profile: F) -> UpdatableEngine<F> {
+        obs::span!("epoch.build");
+        let tree = BoxTree::build_par(&ds, cfg.leaf_cap, cfg.max_depth, cfg.build_threads);
+        let a = profile(&ds.permuted(&tree.perm), &tree);
+        let csb = HierCsb::build_with_par(
+            &a,
+            &tree,
+            &tree,
+            cfg.block_cap,
+            cfg.dense_threshold,
+            cfg.build_threads,
+        );
+        let engine = Engine::with_kernel(csb, cfg.threads, cfg.kernel);
+        UpdatableEngine {
+            cfg,
+            profile,
+            epochs: EpochPublisher::new(EngineEpoch {
+                engine,
+                tree,
+                ds,
+                profile: a,
+            }),
+        }
+    }
+
+    /// Snapshot handle to the current epoch.
+    pub fn acquire(&self) -> Arc<Epoch<EngineEpoch>> {
+        self.epochs.acquire()
+    }
+
+    /// Current published version.
+    pub fn version(&self) -> u64 {
+        self.epochs.version()
+    }
+
+    /// Apply a delete/insert batch: rebuild touched subtrees, re-derive
+    /// the profile, patch the CSB arenas (reusing clean leaf blocks),
+    /// recompile the schedule, and publish the result as a new epoch.
+    /// Existing handles keep answering from their snapshot.  Returns a
+    /// handle to the new epoch.
+    pub fn update(&self, batch: &UpdateBatch) -> Arc<Epoch<EngineEpoch>> {
+        obs::span!("epoch.update");
+        let cur = self.epochs.acquire();
+        let cfg = &self.cfg;
+        let tu = update_tree(&cur.value.tree, &cur.value.ds, batch, cfg.max_depth, cfg.build_threads);
+        let a_new = (self.profile)(&tu.ds.permuted(&tu.tree.perm), &tu.tree);
+        let csb = if tu.full_rebuild {
+            HierCsb::build_with_par(
+                &a_new,
+                &tu.tree,
+                &tu.tree,
+                cfg.block_cap,
+                cfg.dense_threshold,
+                cfg.build_threads,
+            )
+        } else {
+            let delta = SideDelta::from_update(&cur.value.tree, &tu);
+            update_par(
+                &cur.value.engine.csb,
+                &cur.value.profile,
+                &a_new,
+                &tu.tree,
+                &delta,
+                &tu.tree,
+                &delta,
+                cfg.block_cap,
+                cfg.build_threads,
+            )
+        };
+        let engine = Engine::with_kernel(csb, cfg.threads, cfg.kernel);
+        self.epochs.publish(EngineEpoch {
+            engine,
+            tree: tu.tree,
+            ds: tu.ds,
+            profile: a_new,
+        });
+        self.epochs.acquire()
+    }
+}
+
+/// Everything one full-kernel epoch owns.
+pub struct KernelEpoch {
+    pub engine: FullKernelEngine,
+    pub tree: BoxTree,
+    /// Backing data in external (insertion) order.
+    pub ds: Dataset,
+    /// Tree-ordered coordinates (the Gaussian's space).
+    pub coords: Vec<f32>,
+}
+
+/// An incrementally updatable full-kernel operator: near Gaussian rows and
+/// far ACA factors of untouched pairs are lifted from the previous epoch
+/// (`hmat::update`); everything else regenerates.
+pub struct UpdatableKernelEngine {
+    cfg: UpdateCfg,
+    kcfg: FullKernelConfig,
+    epochs: EpochPublisher<KernelEpoch>,
+}
+
+impl UpdatableKernelEngine {
+    /// From-scratch build of epoch 0.  The tree is built over `ds` itself
+    /// (ordering space = kernel space), `kcfg.block_cap` follows
+    /// `cfg.block_cap`.
+    pub fn build(ds: Dataset, cfg: UpdateCfg, kcfg: FullKernelConfig) -> UpdatableKernelEngine {
+        obs::span!("epoch.build");
+        let kcfg = kcfg.with_block_cap(cfg.block_cap);
+        let tree = BoxTree::build_par(&ds, cfg.leaf_cap, cfg.max_depth, cfg.build_threads);
+        let coords = ds.permuted(&tree.perm).raw().to_vec();
+        let engine = FullKernelEngine::build(
+            &tree,
+            &coords,
+            ds.d(),
+            &kcfg,
+            cfg.build_threads,
+            cfg.threads,
+            cfg.kernel,
+        );
+        UpdatableKernelEngine {
+            cfg,
+            kcfg,
+            epochs: EpochPublisher::new(KernelEpoch {
+                engine,
+                tree,
+                ds,
+                coords,
+            }),
+        }
+    }
+
+    pub fn acquire(&self) -> Arc<Epoch<KernelEpoch>> {
+        self.epochs.acquire()
+    }
+
+    pub fn version(&self) -> u64 {
+        self.epochs.version()
+    }
+
+    /// Apply a delete/insert batch and publish the updated operator as a
+    /// new epoch (see [`UpdatableEngine::update`] for the lifecycle).
+    pub fn update(&self, batch: &UpdateBatch) -> Arc<Epoch<KernelEpoch>> {
+        obs::span!("epoch.update");
+        let cur = self.epochs.acquire();
+        let cfg = &self.cfg;
+        let tu = update_tree(&cur.value.tree, &cur.value.ds, batch, cfg.max_depth, cfg.build_threads);
+        let coords = tu.ds.permuted(&tu.tree.perm).raw().to_vec();
+        let engine = if tu.full_rebuild {
+            FullKernelEngine::build(
+                &tu.tree,
+                &coords,
+                tu.ds.d(),
+                &self.kcfg,
+                cfg.build_threads,
+                cfg.threads,
+                cfg.kernel,
+            )
+        } else {
+            let delta = SideDelta::from_update(&cur.value.tree, &tu);
+            cur.value.engine.update(
+                &cur.value.tree,
+                &tu.tree,
+                &delta,
+                &coords,
+                tu.ds.d(),
+                &self.kcfg,
+                cfg.build_threads,
+                cfg.threads,
+                cfg.kernel,
+            )
+        };
+        self.epochs.publish(KernelEpoch {
+            engine,
+            tree: tu.tree,
+            ds: tu.ds,
+            coords,
+        });
+        self.epochs.acquire()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+    use crate::knn::exact::knn_graph;
+    use crate::util::rng::Rng;
+
+    fn knn_profile(ds: &Dataset, _tree: &BoxTree) -> Csr {
+        let g = knn_graph(ds, 6, 2);
+        Csr::from_knn(&g, ds.n()).symmetrized()
+    }
+
+    fn cfg() -> UpdateCfg {
+        UpdateCfg {
+            leaf_cap: 8,
+            max_depth: 24,
+            block_cap: 32,
+            build_threads: 2,
+            threads: 2,
+            kernel: KernelKind::Scalar,
+            ..UpdateCfg::default()
+        }
+    }
+
+    fn batch(ds: &Dataset, seed: u64, n_del: usize, n_ins: usize) -> UpdateBatch {
+        let d = ds.d();
+        let mut rng = Rng::new(seed);
+        let mut lo = vec![f32::INFINITY; d];
+        let mut hi = vec![f32::NEG_INFINITY; d];
+        for i in 0..ds.n() {
+            for (a, &x) in ds.row(i).iter().enumerate() {
+                lo[a] = lo[a].min(x);
+                hi[a] = hi[a].max(x);
+            }
+        }
+        let on_hull = |row: &[f32]| row.iter().enumerate().any(|(a, &x)| x == lo[a] || x == hi[a]);
+        let mut deletes = Vec::new();
+        while deletes.len() < n_del {
+            let i = rng.below(ds.n());
+            if !on_hull(ds.row(i)) && !deletes.contains(&i) {
+                deletes.push(i);
+            }
+        }
+        let mut inserts = Vec::new();
+        for _ in 0..n_ins {
+            let i = rng.below(ds.n());
+            for (a, &x) in ds.row(i).iter().enumerate() {
+                inserts.push(0.9 * x + 0.1 * (0.5 * (lo[a] + hi[a])));
+            }
+        }
+        UpdateBatch { deletes, inserts }
+    }
+
+    #[test]
+    fn update_publishes_bitidentical_engine() {
+        let ds = SynthSpec::blobs(400, 3, 4, 71).generate();
+        let upd = UpdatableEngine::build(ds.clone(), cfg(), knn_profile);
+        assert_eq!(upd.version(), 0);
+        let b = batch(&ds, 72, 10, 10);
+        let e1 = upd.update(&b);
+        assert_eq!(e1.version, 1);
+        assert_eq!(upd.version(), 1);
+        // From-scratch over the post-update data must agree arena-for-arena.
+        let fresh = UpdatableEngine::build(e1.value.ds.clone(), cfg(), knn_profile);
+        let f = fresh.acquire();
+        assert_eq!(f.value.engine.csb.blocks, e1.value.engine.csb.blocks);
+        assert_eq!(f.value.engine.csb.sp_ptr, e1.value.engine.csb.sp_ptr);
+        assert_eq!(f.value.engine.csb.sp_col, e1.value.engine.csb.sp_col);
+        assert!(f
+            .value
+            .engine
+            .csb
+            .dense
+            .iter()
+            .zip(&e1.value.engine.csb.dense)
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
+        assert!(f
+            .value
+            .engine
+            .csb
+            .sp_val
+            .iter()
+            .zip(&e1.value.engine.csb.sp_val)
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    fn stale_handle_answers_from_snapshot() {
+        let ds = SynthSpec::blobs(400, 3, 4, 73).generate();
+        let upd = UpdatableEngine::build(ds.clone(), cfg(), knn_profile);
+        let stale = upd.acquire();
+        let n0 = stale.value.engine.csb.rows;
+        let mut x = vec![0.0f32; n0];
+        let mut rng = Rng::new(5);
+        for v in x.iter_mut() {
+            *v = rng.f32() - 0.5;
+        }
+        let mut y_before = vec![0.0f32; n0];
+        stale.value.engine.spmv(&x, &mut y_before);
+
+        let b = batch(&ds, 74, 15, 3); // shrinks n: new epoch has fewer rows
+        let e1 = upd.update(&b);
+        assert_ne!(e1.value.engine.csb.rows, n0);
+
+        // The stale handle still sees (and answers from) the old snapshot,
+        // bit-for-bit, after the publish.
+        assert_eq!(stale.version, 0);
+        assert_eq!(stale.value.engine.csb.rows, n0);
+        let mut y_after = vec![0.0f32; n0];
+        stale.value.engine.spmv(&x, &mut y_after);
+        assert_eq!(
+            y_before, y_after,
+            "stale epoch handle must answer from its snapshot"
+        );
+    }
+
+    #[test]
+    fn drain_reclaims_epochs() {
+        let ds = SynthSpec::blobs(300, 2, 3, 75).generate();
+        let upd = UpdatableEngine::build(ds.clone(), cfg(), knn_profile);
+        let stale = upd.acquire();
+        let published = counters::get(Counter::UpdateEpochsPublished);
+        let _e1 = upd.update(&batch(&ds, 76, 5, 5));
+        assert!(counters::get(Counter::UpdateEpochsPublished) > published);
+        // The old epoch survives while `stale` holds it...
+        let reclaimed = counters::get(Counter::UpdateEpochsReclaimed);
+        drop(stale);
+        // ...and is reclaimed on the last drop (publisher released it at
+        // publish time, so this drop was the drain's end).
+        assert!(
+            counters::get(Counter::UpdateEpochsReclaimed) > reclaimed,
+            "dropping the last stale handle must reclaim the epoch"
+        );
+    }
+
+    #[test]
+    fn kernel_engine_updates_bitidentical() {
+        let ds = SynthSpec::blobs(400, 3, 4, 77).generate();
+        let mut c = cfg();
+        c.block_cap = 64;
+        let kcfg = FullKernelConfig::new(0.8);
+        let upd = UpdatableKernelEngine::build(ds.clone(), c, kcfg.clone());
+        let e1 = upd.update(&batch(&ds, 78, 8, 8));
+        let fresh = UpdatableKernelEngine::build(e1.value.ds.clone(), c, kcfg);
+        let f = fresh.acquire();
+        assert_eq!(f.value.engine.far.blocks, e1.value.engine.far.blocks);
+        assert!(f
+            .value
+            .engine
+            .far
+            .factors
+            .iter()
+            .zip(&e1.value.engine.far.factors)
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
+        assert!(f
+            .value
+            .engine
+            .near
+            .csb
+            .dense
+            .iter()
+            .zip(&e1.value.engine.near.csb.dense)
+            .all(|(a, b)| a.to_bits() == b.to_bits()));
+        // And the published operator applies identically (scalar kernel).
+        let n = f.value.engine.n();
+        let mut rng = Rng::new(9);
+        let x: Vec<f32> = (0..n).map(|_| rng.f32() - 0.5).collect();
+        let mut ya = vec![0.0f32; n];
+        let mut yb = vec![0.0f32; n];
+        f.value.engine.spmv(&x, &mut ya);
+        e1.value.engine.spmv(&x, &mut yb);
+        assert_eq!(ya, yb);
+    }
+}

@@ -3,3 +3,4 @@
 //! across iterations while the hierarchical ordering persists.
 
 pub mod engine;
+pub mod epoch;

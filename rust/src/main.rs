@@ -11,6 +11,7 @@
 //! * `tsne`      — run t-SNE end to end (hybrid PJRT path optional)
 //! * `meanshift` — run mean shift, report modes
 //! * `krr`       — kernel ridge regression over the full-kernel operator
+//! * `update`    — stream delete/insert batches through versioned epochs
 //!
 //! The `knn`, `reorder`, `tsne`, and `meanshift` commands accept
 //! `--knn exact|ann` plus the `--ann-*` tuning knobs (see
@@ -25,8 +26,10 @@ use nni::csb::kernel::KernelKind;
 use nni::data::dataset::Dataset;
 use nni::data::synth::SynthSpec;
 use nni::hmat::{FarFieldMode, FullKernelConfig};
+use nni::interact::epoch::{UpdatableEngine, UpdatableKernelEngine, UpdateCfg};
 use nni::knn::ann::recall::recall_at_k;
 use nni::knn::ann::AnnParams;
+use nni::knn::exact::knn_graph;
 use nni::knn::KnnBackend;
 use nni::obs::{self, counters};
 use nni::order::{OrderingKind, Pipeline};
@@ -34,7 +37,10 @@ use nni::profile::{beta, gamma};
 use nni::runtime::ArtifactRegistry;
 use nni::sparse::csr::Csr;
 use nni::spmv;
+use nni::tree::boxtree::BoxTree;
+use nni::tree::update::UpdateBatch;
 use nni::util::cli::Args;
+use nni::util::rng::Rng;
 use nni::util::timer;
 use std::path::Path;
 
@@ -55,12 +61,13 @@ fn main() {
         "tsne" => cmd_tsne(argv),
         "meanshift" => cmd_meanshift(argv),
         "krr" => cmd_krr(argv),
+        "update" => cmd_update(argv),
         "stats" => cmd_stats(argv),
         "trace-check" => cmd_trace_check(argv),
         "bench-check" => cmd_bench_check(argv),
         _ => {
             eprintln!(
-                "usage: nni <info|synth|knn|reorder|gamma|spmv|tsne|meanshift|krr|stats|\
+                "usage: nni <info|synth|knn|reorder|gamma|spmv|tsne|meanshift|krr|update|stats|\
                  trace-check|bench-check> [options]\n\
                  run `nni <cmd> --help` for per-command options"
             );
@@ -616,7 +623,11 @@ fn cmd_meanshift(argv: Vec<String>) {
             .opt_usize_min("iters", 60, 1, "max iterations")
             .opt_usize("refresh", 5, "profile refresh cadence")
             .opt_u64("seed", 42, "rng seed")
-            .opt_usize("threads", 0, "0 = all cores"),
+            .opt_usize("threads", 0, "0 = all cores")
+            .flag(
+                "incremental",
+                "refresh by incremental tree/CSB patching (delete+reinsert of displaced targets)",
+            ),
     ))))
     .parse_from(argv)
     .unwrap_or_else(die);
@@ -642,6 +653,7 @@ fn cmd_meanshift(argv: Vec<String>) {
         build_threads: a.get_usize("build-threads"),
         knn: knn_backend(&a),
         kernel: kernel_kind(&a),
+        incremental: a.get_flag("incremental"),
         ..Default::default()
     };
     let res = meanshift::run(&ds, &cfg);
@@ -714,6 +726,224 @@ fn cmd_krr(argv: Vec<String>) {
         res.iterations, res.rel_residual, res.train_rmse
     );
     obs_end(&a);
+}
+
+/// `nni update`: exercise the incremental-update subsystem — build an
+/// updatable engine over synthetic blobs, stream seeded delete/insert
+/// batches through versioned epochs, and report the `update.*` reuse
+/// counters.  `--far aca` switches from the near-field profile engine to
+/// the full-kernel operator (near Gaussian rows + ACA far factors lifted
+/// across epochs).  With `--verify`, every published epoch is checked
+/// arena-for-arena against a from-scratch build over the same post-update
+/// data — the invariant the differential fuzz harness enforces in CI.
+fn cmd_update(argv: Vec<String>) {
+    let opts = kernel_opts(build_opts(
+        Args::new("stream delete/insert batches through versioned epochs")
+            .opt_usize_min("n", 2000, 64, "points when synthesizing blobs")
+            .opt_usize_min("blobs", 5, 1, "planted clusters")
+            .opt_usize_min("d", 3, 1, "dimension")
+            .opt_usize_min("rounds", 4, 1, "update batches to apply")
+            .opt_usize("deletes", 24, "deletions per batch")
+            .opt_usize("inserts", 24, "insertions per batch")
+            .opt_usize_min("k", 8, 1, "profile neighbors (near-field mode)")
+            .opt_usize_min("leaf-cap", 16, 1, "tree leaf capacity")
+            .opt_usize_min("block-cap", 64, 1, "CSB/tree-cut block capacity")
+            .opt_u64("seed", 42, "rng seed")
+            .opt_usize("threads", 0, "0 = all cores")
+            .flag("verify", "check each epoch against a from-scratch build"),
+    ));
+    let a = obs_opts(far_opts(opts, "off")).parse_from(argv).unwrap_or_else(die);
+    obs_begin(&a);
+    let ds = SynthSpec::blobs(
+        a.get_usize("n"),
+        a.get_usize("d"),
+        a.get_usize("blobs"),
+        a.get_u64("seed"),
+    )
+    .generate();
+    let ucfg = UpdateCfg {
+        leaf_cap: a.get_usize("leaf-cap"),
+        block_cap: a.get_usize("block-cap"),
+        build_threads: resolve_build_threads(&a),
+        threads: a.get_usize("threads"),
+        kernel: kernel_kind(&a),
+        ..UpdateCfg::default()
+    };
+    let mut rng = Rng::new(a.get_u64("seed") ^ 0x5eed);
+    let rounds = a.get_usize("rounds");
+    let (n_del, n_ins) = (a.get_usize("deletes"), a.get_usize("inserts"));
+    let verify = a.get_flag("verify");
+    println!(
+        "update n={} d={} rounds={rounds} batch=-{n_del}/+{n_ins} verify={verify}",
+        ds.n(),
+        ds.d()
+    );
+    match full_kernel_cfg(&a, &ds, a.get_usize("block-cap")) {
+        Some((kcfg, h)) => {
+            println!("mode: full-kernel (h={h:.4})");
+            run_kernel_updates(ds, ucfg, kcfg, rounds, n_del, n_ins, &mut rng, verify);
+        }
+        None => {
+            println!("mode: near-field profile (k={})", a.get_usize("k"));
+            run_near_updates(ds, ucfg, a.get_usize("k"), rounds, n_del, n_ins, &mut rng, verify);
+        }
+    }
+    let snap = counters::snapshot();
+    println!("update counters:");
+    for (name, v) in snap.counters.iter().filter(|(n, _)| n.starts_with("update.")) {
+        println!("  {name:<28} {v}");
+    }
+    obs_end(&a);
+}
+
+/// Bit-exact float-slice equality (the arena comparison of `--verify`).
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// Seeded interior delete/insert batch against the current epoch's data.
+/// Deletions avoid the hull and insertions pull existing points toward the
+/// box center, so the root box persists across rounds and the updates
+/// exercise the subtree-rebuild path rather than the full-rebuild fallback.
+fn update_batch(ds: &Dataset, rng: &mut Rng, n_del: usize, n_ins: usize) -> UpdateBatch {
+    let d = ds.d();
+    let mut lo = vec![f32::INFINITY; d];
+    let mut hi = vec![f32::NEG_INFINITY; d];
+    for i in 0..ds.n() {
+        for (a, &x) in ds.row(i).iter().enumerate() {
+            lo[a] = lo[a].min(x);
+            hi[a] = hi[a].max(x);
+        }
+    }
+    let on_hull = |row: &[f32]| row.iter().enumerate().any(|(a, &x)| x == lo[a] || x == hi[a]);
+    let n_del = n_del.min(ds.n() / 2);
+    let mut deletes = Vec::new();
+    let mut attempts = 0;
+    while deletes.len() < n_del && attempts < 64 * n_del.max(1) {
+        attempts += 1;
+        let i = rng.below(ds.n());
+        if !on_hull(ds.row(i)) && !deletes.contains(&i) {
+            deletes.push(i);
+        }
+    }
+    let mut inserts = Vec::with_capacity(n_ins * d);
+    for _ in 0..n_ins {
+        let i = rng.below(ds.n());
+        for (a, &x) in ds.row(i).iter().enumerate() {
+            inserts.push(0.9 * x + 0.1 * (0.5 * (lo[a] + hi[a])));
+        }
+    }
+    UpdateBatch { deletes, inserts }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_near_updates(
+    ds: Dataset,
+    ucfg: UpdateCfg,
+    k: usize,
+    rounds: usize,
+    n_del: usize,
+    n_ins: usize,
+    rng: &mut Rng,
+    verify: bool,
+) {
+    let bt = ucfg.build_threads;
+    let profile = move |d: &Dataset, _t: &BoxTree| {
+        Csr::from_knn(&knn_graph(d, k.min(d.n() - 1), bt), d.n()).symmetrized()
+    };
+    let dim = ds.d();
+    let (upd, t0) = timer::time_once(|| UpdatableEngine::build(ds, ucfg, profile));
+    let stale = upd.acquire();
+    let n0 = stale.value.engine.csb.rows;
+    println!("epoch v0: n={n0}  build {t0:.3}s  ({})", stale.value.engine.csb.describe());
+    let x0: Vec<f32> = (0..n0).map(|_| rng.f32() - 0.5).collect();
+    let mut y0 = vec![0.0f32; n0];
+    stale.value.engine.spmv(&x0, &mut y0);
+    for _ in 0..rounds {
+        let cur = upd.acquire();
+        let b = update_batch(&cur.value.ds, rng, n_del, n_ins);
+        let (nd, ni) = (b.deletes.len(), b.inserts.len() / dim);
+        drop(cur);
+        let (e, t) = timer::time_once(|| upd.update(&b));
+        println!("epoch v{}: -{nd} +{ni} -> n={}  patch {t:.3}s", e.version, e.value.engine.csb.rows);
+        if verify {
+            let fresh = UpdatableEngine::build(e.value.ds.clone(), ucfg, profile);
+            let f = fresh.acquire();
+            let ok = f.value.engine.csb.blocks == e.value.engine.csb.blocks
+                && f.value.engine.csb.sp_rows == e.value.engine.csb.sp_rows
+                && f.value.engine.csb.sp_ptr == e.value.engine.csb.sp_ptr
+                && f.value.engine.csb.sp_col == e.value.engine.csb.sp_col
+                && bits_eq(&f.value.engine.csb.dense, &e.value.engine.csb.dense)
+                && bits_eq(&f.value.engine.csb.sp_val, &e.value.engine.csb.sp_val);
+            if !ok {
+                die::<()>(format!("verify FAILED: epoch v{} differs from from-scratch", e.version));
+            }
+            println!("  verify: arenas bit-identical to from-scratch build");
+        }
+    }
+    // The stale v0 handle still answers from its snapshot after every
+    // publish — the reader-side half of the epoch contract.
+    let mut y1 = vec![0.0f32; n0];
+    stale.value.engine.spmv(&x0, &mut y1);
+    if !bits_eq(&y0, &y1) {
+        die::<()>("stale epoch handle drifted from its snapshot".into());
+    }
+    println!(
+        "stale v0 handle after {rounds} publishes: bit-stable (n={n0} vs current n={})",
+        upd.acquire().value.engine.csb.rows
+    );
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_kernel_updates(
+    ds: Dataset,
+    ucfg: UpdateCfg,
+    kcfg: FullKernelConfig,
+    rounds: usize,
+    n_del: usize,
+    n_ins: usize,
+    rng: &mut Rng,
+    verify: bool,
+) {
+    let dim = ds.d();
+    let (upd, t0) =
+        timer::time_once(|| UpdatableKernelEngine::build(ds, ucfg, kcfg.clone()));
+    let stale = upd.acquire();
+    let n0 = stale.value.engine.n();
+    println!("epoch v0: n={n0}  build {t0:.3}s  ({})", stale.value.engine.describe());
+    let x0: Vec<f32> = (0..n0).map(|_| rng.f32() - 0.5).collect();
+    let mut y0 = vec![0.0f32; n0];
+    stale.value.engine.spmv(&x0, &mut y0);
+    for _ in 0..rounds {
+        let cur = upd.acquire();
+        let b = update_batch(&cur.value.ds, rng, n_del, n_ins);
+        let (nd, ni) = (b.deletes.len(), b.inserts.len() / dim);
+        drop(cur);
+        let (e, t) = timer::time_once(|| upd.update(&b));
+        println!("epoch v{}: -{nd} +{ni} -> n={}  patch {t:.3}s", e.version, e.value.engine.n());
+        if verify {
+            let fresh = UpdatableKernelEngine::build(e.value.ds.clone(), ucfg, kcfg.clone());
+            let f = fresh.acquire();
+            let ok = f.value.engine.far.blocks == e.value.engine.far.blocks
+                && bits_eq(&f.value.engine.far.factors, &e.value.engine.far.factors)
+                && f.value.engine.near.csb.blocks == e.value.engine.near.csb.blocks
+                && bits_eq(&f.value.engine.near.csb.dense, &e.value.engine.near.csb.dense)
+                && bits_eq(&f.value.engine.near.csb.sp_val, &e.value.engine.near.csb.sp_val);
+            if !ok {
+                die::<()>(format!("verify FAILED: epoch v{} differs from from-scratch", e.version));
+            }
+            println!("  verify: near arenas + far factors bit-identical to from-scratch build");
+        }
+    }
+    let mut y1 = vec![0.0f32; n0];
+    stale.value.engine.spmv(&x0, &mut y1);
+    if !bits_eq(&y0, &y1) {
+        die::<()>("stale epoch handle drifted from its snapshot".into());
+    }
+    println!(
+        "stale v0 handle after {rounds} publishes: bit-stable (n={n0} vs current n={})",
+        upd.acquire().value.engine.n()
+    );
 }
 
 /// `nni stats`: run a small end-to-end pipeline (tree + PCA + CSB + apply

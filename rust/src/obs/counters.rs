@@ -72,6 +72,20 @@ counters! {
     ServeQueueDepthMax => "serve.queue_depth_max",
     ServeBatchSlots => "serve.batch_slots",
     ServeBatchOccupied => "serve.batch_occupied",
+    // incremental updates (tree/csb/hmat patching + epoch lifecycle)
+    UpdateBatches => "update.batches",
+    UpdateInserts => "update.inserts",
+    UpdateDeletes => "update.deletes",
+    UpdateFullRebuilds => "update.full_rebuilds",
+    UpdateSubtreesRebuilt => "update.subtrees_rebuilt",
+    UpdatePointsRebuilt => "update.points_rebuilt",
+    UpdateLeavesReused => "update.leaves_reused",
+    UpdateLeavesRebuilt => "update.leaves_rebuilt",
+    UpdateNearRowsReused => "update.near_rows_reused",
+    UpdateFarBlocksReused => "update.far_blocks_reused",
+    UpdateFarBlocksRefactored => "update.far_blocks_refactored",
+    UpdateEpochsPublished => "update.epochs_published",
+    UpdateEpochsReclaimed => "update.epochs_reclaimed",
     // the tracing layer's own bookkeeping
     SpansDropped => "trace.spans_dropped",
 }

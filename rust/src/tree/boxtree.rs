@@ -360,7 +360,7 @@ impl BoxTree {
 /// (the old `1e-12`) is a no-op at f32 magnitudes like 1e6, so
 /// all-duplicate data far from the origin stalled every split until
 /// `max_depth`.
-fn root_node(ds: &Dataset) -> Node {
+pub(crate) fn root_node(ds: &Dataset) -> Node {
     let n = ds.n();
     let d = ds.d();
     let mut lo = vec![f32::INFINITY; d];
@@ -404,7 +404,7 @@ fn root_node(ds: &Dataset) -> Node {
 /// orthant-code order — the sequential creation order).  Returns `false`
 /// when the node is degenerate (all points in one orthant and the box is at
 /// the coordinate resolution) and must become a leaf instead.
-fn split_node(
+pub(crate) fn split_node(
     ds: &Dataset,
     d: usize,
     nodes: &mut Vec<Node>,
@@ -484,7 +484,7 @@ fn split_node(
 /// against a *local* arena).  `perm`/`leaf_at` are global-position indexed;
 /// `leaf_at` receives arena-local node ids.
 #[allow(clippy::too_many_arguments)]
-fn build_rec(
+pub(crate) fn build_rec(
     ds: &Dataset,
     d: usize,
     leaf_cap: usize,

@@ -3,3 +3,4 @@
 
 pub mod boxtree;
 pub mod morton;
+pub mod update;

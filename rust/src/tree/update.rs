@@ -1,0 +1,829 @@
+//! Incremental insert/delete for [`BoxTree`]: rebuild only the touched
+//! subtrees, **bit-identical** to a from-scratch [`BoxTree::build`] over
+//! the updated point set.
+//!
+//! Identity rests on two invariants of the sequential build:
+//!
+//! * **Ascending spans.** `build` starts from the identity permutation and
+//!   `split_node` buckets stably, so every node's span lists points in
+//!   ascending original-index order, and the final layout of a subtree is a
+//!   deterministic function of (its box, its member set).  Deletions
+//!   compact indices monotonically and insertions append past the
+//!   survivors, so a preserved subtree's remapped span is exactly what the
+//!   from-scratch build would produce.
+//! * **Contiguous descendant blocks.** The sequential DFS appends all of a
+//!   node's descendants while it recurses, so a preserved subtree's node
+//!   ids shift as one block; the renumbering pass here is the same
+//!   simulation [`BoxTree::build_par`] already uses for its frontier
+//!   subtrees.
+//!
+//! Nodes whose member set is untouched are **clean** (copied verbatim with
+//! index shifts); touched internal nodes whose children all survive with
+//! the same orthant occupancy are **scaffold** (renumbered, recursed);
+//! everything else is **dirty**, and the minimal antichain of dirty nodes
+//! (the *frontier*) is rebuilt from scratch — in parallel, one subtree per
+//! task, exactly like the parallel build.  A batch that changes the root
+//! bounding box (or empties/initializes the tree) falls back to a full
+//! rebuild, reported via `update.full_rebuilds`.
+
+use super::boxtree::{build_rec, root_node, BoxTree, Node};
+use crate::data::dataset::Dataset;
+use crate::obs::{self, counters, Counter};
+use crate::par::pool::{SendPtr, ThreadPool};
+
+/// One batch of point updates against the tree's *external* (original)
+/// index space: `deletes` are indices into the current dataset (duplicates
+/// ignored), `inserts` is a row-major `n_ins x d` coordinate block.
+#[derive(Clone, Debug, Default)]
+pub struct UpdateBatch {
+    pub deletes: Vec<usize>,
+    pub inserts: Vec<f32>,
+}
+
+impl UpdateBatch {
+    pub fn is_empty(&self) -> bool {
+        self.deletes.is_empty() && self.inserts.is_empty()
+    }
+}
+
+/// Result of an incremental tree update.  The new external index space is
+/// *survivors in old order, then inserts in batch order*; the maps carry
+/// `u32::MAX` for deleted (resp. freshly inserted) points.
+pub struct TreeUpdate {
+    /// Updated tree, bit-identical to `BoxTree::build(&ds, leaf_cap,
+    /// max_depth)`.
+    pub tree: BoxTree,
+    /// Updated dataset in the new external order.
+    pub ds: Dataset,
+    /// Old external index → new external index (`u32::MAX` = deleted).
+    pub old_to_new: Vec<u32>,
+    /// New external index → old external index (`u32::MAX` = inserted).
+    pub new_to_old: Vec<u32>,
+    /// New node id → old node id (`u32::MAX` = node of a rebuilt subtree).
+    /// Preserved nodes (clean and scaffold) and frontier roots map — a
+    /// frontier root keeps its box even though its subtree was rebuilt.
+    pub node_map: Vec<u32>,
+    /// New node id → whole subtree preserved verbatim (member set,
+    /// structure, and within-span order unchanged up to index remapping).
+    pub clean: Vec<bool>,
+    /// The batch moved the root bounding box (or emptied/initialized the
+    /// tree) and the whole structure was rebuilt from scratch.
+    pub full_rebuild: bool,
+}
+
+impl TreeUpdate {
+    /// New tree position → old tree position (`u32::MAX` for inserted
+    /// points).  This is the row/column map the CSB and profile reuse
+    /// paths consume.
+    pub fn pos_map(&self, old: &BoxTree) -> Vec<u32> {
+        self.tree
+            .perm
+            .iter()
+            .map(|&e| {
+                let o = self.new_to_old[e];
+                if o == u32::MAX {
+                    u32::MAX
+                } else {
+                    old.pos[o as usize] as u32
+                }
+            })
+            .collect()
+    }
+}
+
+/// Apply `batch` to `(old, old_ds)`.  `max_depth` must equal the value the
+/// tree was originally built with (it is not stored on [`BoxTree`]); the
+/// clean-subtree equivalence argument needs the same split policy on both
+/// sides.  `threads = 0` means the machine default.
+pub fn update_tree(
+    old: &BoxTree,
+    old_ds: &Dataset,
+    batch: &UpdateBatch,
+    max_depth: u32,
+    threads: usize,
+) -> TreeUpdate {
+    obs::span!("tree.update");
+    let d = old.d;
+    assert_eq!(old_ds.d(), d, "dataset dimension mismatch");
+    assert_eq!(old_ds.n(), old.n(), "dataset size mismatch");
+    assert_eq!(batch.inserts.len() % d.max(1), 0, "insert block not a multiple of d");
+    let n_old = old.n();
+    let n_ins = batch.inserts.len() / d;
+
+    let mut dels = batch.deletes.clone();
+    dels.sort_unstable();
+    dels.dedup();
+    if let Some(&last) = dels.last() {
+        assert!(last < n_old, "delete index {last} out of range (n = {n_old})");
+    }
+    counters::add(Counter::UpdateBatches, 1);
+    counters::add(Counter::UpdateDeletes, dels.len() as u64);
+    counters::add(Counter::UpdateInserts, n_ins as u64);
+
+    // New external order: survivors (old order) then inserts (batch order).
+    let n_surv = n_old - dels.len();
+    let n_new = n_surv + n_ins;
+    let mut old_to_new = vec![u32::MAX; n_old];
+    let mut new_to_old = vec![u32::MAX; n_new];
+    let mut xs: Vec<f32> = Vec::with_capacity(n_new * d);
+    {
+        let mut di = 0usize;
+        let mut cursor = 0u32;
+        for i in 0..n_old {
+            if di < dels.len() && dels[di] == i {
+                di += 1;
+                continue;
+            }
+            old_to_new[i] = cursor;
+            new_to_old[cursor as usize] = i as u32;
+            xs.extend_from_slice(old_ds.row(i));
+            cursor += 1;
+        }
+    }
+    xs.extend_from_slice(&batch.inserts);
+    let ds = Dataset::new(n_new, d, xs);
+
+    if dels.is_empty() && n_ins == 0 {
+        // No-op batch: the old tree is the answer, every node clean.
+        let nn = old.nodes.len();
+        return TreeUpdate {
+            tree: old.clone(),
+            ds,
+            old_to_new,
+            new_to_old,
+            node_map: (0..nn as u32).collect(),
+            clean: vec![true; nn],
+            full_rebuild: false,
+        };
+    }
+
+    let full = |ds: Dataset, old_to_new: Vec<u32>, new_to_old: Vec<u32>| -> TreeUpdate {
+        counters::add(Counter::UpdateFullRebuilds, 1);
+        counters::add(Counter::UpdatePointsRebuilt, ds.n() as u64);
+        let tree = BoxTree::build_par(&ds, old.leaf_cap, max_depth, threads);
+        let nn = tree.nodes.len();
+        TreeUpdate {
+            node_map: vec![u32::MAX; nn],
+            clean: vec![false; nn],
+            tree,
+            ds,
+            old_to_new,
+            new_to_old,
+            full_rebuild: true,
+        }
+    };
+
+    // The incremental path needs a stable root box: growing (insert outside
+    // the hull) or shrinking (delete a hull point) the bounding cube moves
+    // every box in the tree, so nothing is reusable.
+    if n_old == 0 || n_new == 0 {
+        return full(ds, old_to_new, new_to_old);
+    }
+    let new_root = root_node(&ds);
+    let old_root = &old.nodes[0];
+    let same_box = new_root.half.to_bits() == old_root.half.to_bits()
+        && new_root
+            .center
+            .iter()
+            .zip(&old_root.center)
+            .all(|(a, b)| a.to_bits() == b.to_bits());
+    if !same_box {
+        return full(ds, old_to_new, new_to_old);
+    }
+
+    // ---- Delta pass: per-node delete/insert counts over the old tree ----
+    let nn_old = old.nodes.len();
+    let mut del_cnt = vec![0u32; nn_old];
+    let mut ins_cnt = vec![0u32; nn_old];
+    let mut touched = vec![false; nn_old];
+    let mut new_orthant = vec![false; nn_old];
+    for &e in &dels {
+        let mut v = old.leaf_at[old.pos[e]] as usize;
+        loop {
+            del_cnt[v] += 1;
+            touched[v] = true;
+            if v == 0 {
+                break;
+            }
+            v = old.nodes[v].parent as usize;
+        }
+    }
+    for t in 0..n_ins {
+        let row = &batch.inserts[t * d..t * d + d];
+        let (term, missing) = route(old, d, row);
+        if missing {
+            new_orthant[term] = true;
+        }
+        let mut v = term;
+        loop {
+            ins_cnt[v] += 1;
+            touched[v] = true;
+            if v == 0 {
+                break;
+            }
+            v = old.nodes[v].parent as usize;
+        }
+    }
+
+    // ---- Classification: dirty set and its minimal antichain ----
+    // A touched leaf is dirty.  A touched internal node is dirty when the
+    // update changes a split decision its subtree depends on: the node
+    // would collapse to a leaf (new population <= leaf_cap), an insert
+    // lands in an orthant with no existing child, or a child empties out.
+    // Everything else touched is scaffold: same children, same boxes, only
+    // spans and ids shift.
+    let leaf_cap = old.leaf_cap;
+    let new_len = |v: usize| -> i64 {
+        old.nodes[v].len() as i64 - del_cnt[v] as i64 + ins_cnt[v] as i64
+    };
+    let mut dirty = vec![false; nn_old];
+    for v in 0..nn_old {
+        if !touched[v] {
+            continue;
+        }
+        let nd = &old.nodes[v];
+        dirty[v] = nd.is_leaf()
+            || new_len(v) <= leaf_cap as i64
+            || new_orthant[v]
+            || nd.children.iter().any(|&c| new_len(c as usize) == 0);
+    }
+    let mut frontier: Vec<u32> = Vec::new();
+    let mut fidx = vec![u32::MAX; nn_old];
+    for v in 0..nn_old {
+        if !dirty[v] {
+            continue;
+        }
+        let mut anc = v;
+        let mut topmost = true;
+        while anc != 0 {
+            anc = old.nodes[anc].parent as usize;
+            if dirty[anc] {
+                topmost = false;
+                break;
+            }
+        }
+        if topmost {
+            fidx[v] = frontier.len() as u32;
+            frontier.push(v as u32);
+        }
+    }
+    debug_assert!(!frontier.is_empty(), "non-empty batch must dirty some node");
+
+    // Route each insert to the frontier subtree that will absorb it (the
+    // first frontier node on its root→terminal path).  Batch order keeps
+    // the appended new indices ascending inside each frontier list.
+    let mut ins_of: Vec<Vec<u32>> = vec![Vec::new(); frontier.len()];
+    for t in 0..n_ins {
+        let row = &batch.inserts[t * d..t * d + d];
+        let mut v = 0usize;
+        let f = loop {
+            if fidx[v] != u32::MAX {
+                break fidx[v] as usize;
+            }
+            match route_child(old, d, v, row) {
+                Some(c) => v = c,
+                None => unreachable!("insert path ended before reaching a frontier node"),
+            }
+        };
+        ins_of[f].push((n_surv + t) as u32);
+    }
+
+    // Contiguous-descendant-block DP: end[v] = one past the last id in v's
+    // subtree (children ids are always greater than the parent's, so a
+    // reverse scan sees every child before its parent).
+    let mut end = vec![0u32; nn_old];
+    for v in (0..nn_old).rev() {
+        let nd = &old.nodes[v];
+        end[v] = match nd.children.last() {
+            None => v as u32 + 1,
+            Some(&c) => end[c as usize],
+        };
+    }
+
+    let mut cx = Patcher {
+        old,
+        ds: &ds,
+        d,
+        leaf_cap,
+        old_to_new: &old_to_new,
+        touched: &touched,
+        fidx: &fidx,
+        frontier: &frontier,
+        ins_of: &ins_of,
+        end: &end,
+        new_lo: vec![0u32; nn_old],
+        new_hi: vec![0u32; nn_old],
+        new_perm: vec![0usize; n_new],
+        new_leaf: vec![0u32; n_new],
+        locals: Vec::new(),
+        new_id: vec![0u32; nn_old],
+        fbase: vec![0u32; frontier.len()],
+        cbase: vec![0u32; nn_old],
+        nodes: Vec::new(),
+        node_map: Vec::new(),
+        clean: Vec::new(),
+    };
+
+    // Span pass: new [lo, hi) for every preserved node, and the new
+    // permutation content for clean subtrees and frontier spans (both in
+    // the order the sequential build would produce — see module docs).
+    let mut cursor = 0u32;
+    cx.spans(0, &mut cursor);
+    assert_eq!(cursor as usize, n_new, "span pass must cover the new point set");
+
+    // Parallel frontier rebuilds, one subtree per task (the PR 3 unit of
+    // work): each build_rec works inside its pre-reserved perm/leaf_at
+    // span against a local node arena.
+    {
+        let rebuild_span = obs::trace::SpanGuard::enter("tree.update_subtrees");
+        let pool = ThreadPool::new_or_default(threads);
+        let pp = SendPtr(cx.new_perm.as_mut_ptr());
+        let lp = SendPtr(cx.new_leaf.as_mut_ptr());
+        let slots: Vec<std::sync::Mutex<Vec<Node>>> =
+            frontier.iter().map(|_| std::sync::Mutex::new(Vec::new())).collect();
+        {
+            let ppr = &pp;
+            let lpr = &lp;
+            let cxr = &cx;
+            let dsr = &ds;
+            pool.for_each_chunked(frontier.len(), 1, |fi| {
+                let v = frontier[fi] as usize;
+                // SAFETY: frontier spans are disjoint; each rebuild touches
+                // perm/leaf_at only inside its own [new_lo, new_hi).
+                let perm_all: &mut [usize] =
+                    unsafe { std::slice::from_raw_parts_mut(ppr.0, n_new) };
+                let leaf_all: &mut [u32] = unsafe { std::slice::from_raw_parts_mut(lpr.0, n_new) };
+                let onode = &cxr.old.nodes[v];
+                let mut lnodes = vec![Node {
+                    level: onode.level,
+                    lo: cxr.new_lo[v],
+                    hi: cxr.new_hi[v],
+                    children: Vec::new(),
+                    parent: 0,
+                    center: onode.center.clone(),
+                    half: onode.half,
+                }];
+                build_rec(dsr, d, leaf_cap, max_depth, &mut lnodes, 0, perm_all, leaf_all);
+                *slots[fi].lock().unwrap() = lnodes;
+            });
+        }
+        cx.locals = slots.into_iter().map(|m| m.into_inner().unwrap()).collect();
+        drop(rebuild_span);
+    }
+
+    // Renumber: simulate the sequential DFS id assignment (clean subtrees
+    // and rebuilt subtrees each take one contiguous descendant block).
+    let mut counter = 1u32;
+    cx.assign(0, &mut counter);
+    let total = counter as usize;
+
+    // Emit pass: preserved nodes serially (clean subtrees are block
+    // copies with index shifts), rebuilt subtrees spliced like build_par.
+    cx.nodes = vec![
+        Node {
+            level: 0,
+            lo: 0,
+            hi: 0,
+            children: Vec::new(),
+            parent: 0,
+            center: Vec::new(),
+            half: 0.0,
+        };
+        total
+    ];
+    cx.node_map = vec![u32::MAX; total];
+    cx.clean = vec![false; total];
+    cx.emit(0, 0);
+    for (fi, &fv) in frontier.iter().enumerate() {
+        let b = cx.fbase[fi];
+        let fg = cx.new_id[fv as usize];
+        for (li, ln) in cx.locals[fi].iter().enumerate().skip(1) {
+            let mut out = ln.clone();
+            out.parent = if ln.parent == 0 { fg } else { b + ln.parent - 1 };
+            out.children = ln.children.iter().map(|&c| b + c - 1).collect();
+            cx.nodes[(b + li as u32 - 1) as usize] = out;
+        }
+        let (lo, hi) = (cx.new_lo[fv as usize] as usize, cx.new_hi[fv as usize] as usize);
+        for k in lo..hi {
+            let v = cx.new_leaf[k];
+            cx.new_leaf[k] = if v == 0 { fg } else { b + v - 1 };
+        }
+    }
+
+    let rebuilt_points: u64 = frontier
+        .iter()
+        .map(|&f| (cx.new_hi[f as usize] - cx.new_lo[f as usize]) as u64)
+        .sum();
+    counters::add(Counter::UpdateSubtreesRebuilt, frontier.len() as u64);
+    counters::add(Counter::UpdatePointsRebuilt, rebuilt_points);
+
+    let mut pos = vec![0usize; n_new];
+    for (k, &p) in cx.new_perm.iter().enumerate() {
+        pos[p] = k;
+    }
+    let tree = BoxTree {
+        d,
+        nodes: cx.nodes,
+        perm: cx.new_perm,
+        pos,
+        leaf_at: cx.new_leaf,
+        leaf_cap,
+    };
+    TreeUpdate {
+        tree,
+        ds,
+        old_to_new,
+        new_to_old,
+        node_map: cx.node_map,
+        clean: cx.clean,
+        full_rebuild: false,
+    }
+}
+
+/// Orthant descent step: the child of `v` whose orthant contains `row`
+/// (`None` when that orthant has no child).  Matches `split_node`'s
+/// bucketing (`>= center` sets the bit); the child's code is recovered from
+/// its center offset, which is exact because boxes halve exactly.
+fn route_child(tree: &BoxTree, d: usize, v: usize, row: &[f32]) -> Option<usize> {
+    let nd = &tree.nodes[v];
+    let mut code = 0usize;
+    for a in 0..d {
+        if row[a] >= nd.center[a] {
+            code |= 1 << a;
+        }
+    }
+    for &c in &nd.children {
+        let ch = &tree.nodes[c as usize];
+        let mut ccode = 0usize;
+        for a in 0..d {
+            if ch.center[a] > nd.center[a] {
+                ccode |= 1 << a;
+            }
+        }
+        if ccode == code {
+            return Some(c as usize);
+        }
+    }
+    None
+}
+
+/// Descend to the node that would absorb `row`: the old leaf containing it,
+/// or (`missing = true`) the deepest internal node on the path when the
+/// point's orthant has no child there yet.
+fn route(tree: &BoxTree, d: usize, row: &[f32]) -> (usize, bool) {
+    let mut v = 0usize;
+    loop {
+        if tree.nodes[v].is_leaf() {
+            return (v, false);
+        }
+        match route_child(tree, d, v, row) {
+            Some(c) => v = c,
+            None => return (v, true),
+        }
+    }
+}
+
+/// Working state of the patching passes (old ids index `new_lo`/`new_hi`/
+/// `new_id`/`cbase`; new ids index `nodes`/`node_map`/`clean`).
+struct Patcher<'a> {
+    old: &'a BoxTree,
+    ds: &'a Dataset,
+    d: usize,
+    leaf_cap: usize,
+    old_to_new: &'a [u32],
+    touched: &'a [bool],
+    fidx: &'a [u32],
+    frontier: &'a [u32],
+    ins_of: &'a [Vec<u32>],
+    end: &'a [u32],
+    new_lo: Vec<u32>,
+    new_hi: Vec<u32>,
+    new_perm: Vec<usize>,
+    new_leaf: Vec<u32>,
+    locals: Vec<Vec<Node>>,
+    new_id: Vec<u32>,
+    fbase: Vec<u32>,
+    cbase: Vec<u32>,
+    nodes: Vec<Node>,
+    node_map: Vec<u32>,
+    clean: Vec<bool>,
+}
+
+impl Patcher<'_> {
+    fn spans(&mut self, v: usize, cursor: &mut u32) {
+        self.new_lo[v] = *cursor;
+        let nd = &self.old.nodes[v];
+        if self.fidx[v] != u32::MAX {
+            // Frontier: survivors of the old span (ascending after the
+            // monotone remap) then the routed inserts (ascending, all past
+            // the survivors) — the identity permutation restricted to the
+            // new span, which is what the from-scratch build starts from.
+            for k in nd.lo..nd.hi {
+                let m = self.old_to_new[self.old.perm[k as usize]];
+                if m != u32::MAX {
+                    self.new_perm[*cursor as usize] = m as usize;
+                    *cursor += 1;
+                }
+            }
+            for &e in &self.ins_of[self.fidx[v] as usize] {
+                self.new_perm[*cursor as usize] = e as usize;
+                *cursor += 1;
+            }
+        } else if !self.touched[v] {
+            // Clean: the old final layout remapped — identical to what the
+            // from-scratch build produces on the same member set.
+            for k in nd.lo..nd.hi {
+                let m = self.old_to_new[self.old.perm[k as usize]];
+                debug_assert!(m != u32::MAX, "clean subtree contains a deleted point");
+                self.new_perm[*cursor as usize] = m as usize;
+                *cursor += 1;
+            }
+        } else {
+            for c in nd.children.clone() {
+                self.spans(c as usize, cursor);
+            }
+        }
+        self.new_hi[v] = *cursor;
+    }
+
+    fn assign(&mut self, v: usize, counter: &mut u32) {
+        if self.fidx[v] != u32::MAX {
+            let fi = self.fidx[v] as usize;
+            self.fbase[fi] = *counter;
+            *counter += (self.locals[fi].len() - 1) as u32;
+            return;
+        }
+        if !self.touched[v] {
+            let nd = &self.old.nodes[v];
+            if let Some(&first) = nd.children.first() {
+                self.cbase[v] = *counter;
+                *counter += self.end[v] - first;
+            }
+            return;
+        }
+        let children = self.old.nodes[v].children.clone();
+        for &c in &children {
+            self.new_id[c as usize] = *counter;
+            *counter += 1;
+        }
+        for &c in &children {
+            self.assign(c as usize, counter);
+        }
+    }
+
+    fn emit(&mut self, v: usize, parent_new: u32) {
+        let g = self.new_id[v];
+        let nd = &self.old.nodes[v];
+        if self.fidx[v] != u32::MAX {
+            let fi = self.fidx[v] as usize;
+            let b = self.fbase[fi];
+            self.nodes[g as usize] = Node {
+                level: nd.level,
+                lo: self.new_lo[v],
+                hi: self.new_hi[v],
+                children: self.locals[fi][0].children.iter().map(|&c| b + c - 1).collect(),
+                parent: parent_new,
+                center: nd.center.clone(),
+                half: nd.half,
+            };
+            // The frontier root keeps its box (same orthant path), so it
+            // maps — but its subtree was rebuilt, so it is not clean.
+            self.node_map[g as usize] = v as u32;
+            return;
+        }
+        if !self.touched[v] {
+            // Clean subtree: block copy of [v] ∪ [first_child, end) with a
+            // uniform span shift and the block id remap.
+            let first = nd.children.first().copied().unwrap_or(0);
+            let shift = self.new_lo[v] as i64 - nd.lo as i64;
+            let map_id = |x: u32| -> u32 {
+                if x as usize == v {
+                    g
+                } else {
+                    self.cbase[v] + (x - first)
+                }
+            };
+            for x in std::iter::once(v as u32)
+                .chain(if nd.is_leaf() { first..first } else { first..self.end[v] })
+            {
+                let o = &self.old.nodes[x as usize];
+                let gx = map_id(x);
+                self.nodes[gx as usize] = Node {
+                    level: o.level,
+                    lo: (o.lo as i64 + shift) as u32,
+                    hi: (o.hi as i64 + shift) as u32,
+                    children: o.children.iter().map(|&c| map_id(c)).collect(),
+                    parent: if x as usize == v { parent_new } else { map_id(o.parent) },
+                    center: o.center.clone(),
+                    half: o.half,
+                };
+                self.node_map[gx as usize] = x;
+                self.clean[gx as usize] = true;
+            }
+            for k in self.new_lo[v]..self.new_hi[v] {
+                let old_k = (k as i64 - shift) as usize;
+                self.new_leaf[k as usize] = map_id(self.old.leaf_at[old_k]);
+            }
+            return;
+        }
+        // Scaffold: same children (all preserved, none emptied, no new
+        // orthant), shifted spans, renumbered ids.
+        let children = nd.children.clone();
+        self.nodes[g as usize] = Node {
+            level: nd.level,
+            lo: self.new_lo[v],
+            hi: self.new_hi[v],
+            children: children.iter().map(|&c| self.new_id[c as usize]).collect(),
+            parent: parent_new,
+            center: nd.center.clone(),
+            half: nd.half,
+        };
+        self.node_map[g as usize] = v as u32;
+        for &c in &children {
+            self.emit(c as usize, g);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+    use crate::util::rng::Rng;
+
+    fn assert_tree_eq(a: &BoxTree, b: &BoxTree, what: &str) {
+        assert_eq!(a.perm, b.perm, "{what}: perm");
+        assert_eq!(a.pos, b.pos, "{what}: pos");
+        assert_eq!(a.leaf_at, b.leaf_at, "{what}: leaf_at");
+        assert_eq!(a.nodes.len(), b.nodes.len(), "{what}: node count");
+        for (i, (x, y)) in a.nodes.iter().zip(&b.nodes).enumerate() {
+            assert_eq!(x.level, y.level, "{what}: node {i} level");
+            assert_eq!(x.lo, y.lo, "{what}: node {i} lo");
+            assert_eq!(x.hi, y.hi, "{what}: node {i} hi");
+            assert_eq!(x.children, y.children, "{what}: node {i} children");
+            assert_eq!(x.parent, y.parent, "{what}: node {i} parent");
+            assert_eq!(x.half.to_bits(), y.half.to_bits(), "{what}: node {i} half");
+            assert!(
+                x.center.iter().zip(&y.center).all(|(p, q)| p.to_bits() == q.to_bits()),
+                "{what}: node {i} center"
+            );
+        }
+    }
+
+    fn expected_ds(ds: &Dataset, batch: &UpdateBatch) -> Dataset {
+        let d = ds.d();
+        let mut dels = batch.deletes.clone();
+        dels.sort_unstable();
+        dels.dedup();
+        let mut xs = Vec::new();
+        for i in 0..ds.n() {
+            if dels.binary_search(&i).is_err() {
+                xs.extend_from_slice(ds.row(i));
+            }
+        }
+        xs.extend_from_slice(&batch.inserts);
+        let n = xs.len() / d;
+        Dataset::new(n, d, xs)
+    }
+
+    fn check(ds: &Dataset, batch: &UpdateBatch, leaf_cap: usize, what: &str) -> TreeUpdate {
+        let old = BoxTree::build(ds, leaf_cap, 24);
+        let tu = update_tree(&old, ds, batch, 24, 2);
+        let want_ds = expected_ds(ds, batch);
+        assert_eq!(tu.ds.n(), want_ds.n(), "{what}: ds size");
+        assert!(
+            tu.ds.raw().iter().zip(want_ds.raw()).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "{what}: ds payload"
+        );
+        let want = BoxTree::build(&want_ds, leaf_cap, 24);
+        assert_tree_eq(&tu.tree, &want, what);
+        // node_map / clean consistency: a clean node maps to an old node
+        // with the same population and box.
+        for (g, (&m, &cl)) in tu.node_map.iter().zip(&tu.clean).enumerate() {
+            if cl {
+                assert_ne!(m, u32::MAX, "{what}: clean node {g} unmapped");
+                let o = &old.nodes[m as usize];
+                let nnd = &tu.tree.nodes[g];
+                assert_eq!(o.len(), nnd.len(), "{what}: clean node {g} population");
+                assert_eq!(o.half.to_bits(), nnd.half.to_bits());
+            }
+        }
+        tu
+    }
+
+    fn interior_batch(ds: &Dataset, seed: u64, n_del: usize, n_ins: usize) -> UpdateBatch {
+        // deletes avoid the bbox hull so the incremental path stays live;
+        // inserts jitter existing points inward.
+        let d = ds.d();
+        let mut rng = Rng::new(seed);
+        let mut lo = vec![f32::INFINITY; d];
+        let mut hi = vec![f32::NEG_INFINITY; d];
+        for i in 0..ds.n() {
+            for (a, &x) in ds.row(i).iter().enumerate() {
+                lo[a] = lo[a].min(x);
+                hi[a] = hi[a].max(x);
+            }
+        }
+        let on_hull = |row: &[f32]| row.iter().enumerate().any(|(a, &x)| x == lo[a] || x == hi[a]);
+        let mut deletes = Vec::new();
+        while deletes.len() < n_del {
+            let i = rng.below(ds.n());
+            if !on_hull(ds.row(i)) {
+                deletes.push(i);
+            }
+        }
+        let mut inserts = Vec::new();
+        for _ in 0..n_ins {
+            let i = rng.below(ds.n());
+            for (a, &x) in ds.row(i).iter().enumerate() {
+                let t = 0.9 * x + 0.1 * (0.5 * (lo[a] + hi[a]));
+                inserts.push(t);
+            }
+        }
+        UpdateBatch { deletes, inserts }
+    }
+
+    #[test]
+    fn incremental_matches_from_scratch() {
+        for (n, d, seed) in [(400usize, 2usize, 11u64), (700, 3, 12), (250, 2, 13)] {
+            let ds = SynthSpec::blobs(n, d, 4, seed).generate();
+            for (n_del, n_ins) in [(20, 0), (0, 25), (15, 15)] {
+                let batch = interior_batch(&ds, seed * 31 + n_del as u64, n_del, n_ins);
+                let tu = check(&ds, &batch, 12, &format!("n={n} d={d} del={n_del} ins={n_ins}"));
+                assert!(!tu.full_rebuild, "interior batch must not force a full rebuild");
+            }
+        }
+    }
+
+    #[test]
+    fn chained_updates_stay_identical() {
+        let mut ds = SynthSpec::blobs(500, 3, 3, 21).generate();
+        let mut tree = BoxTree::build(&ds, 10, 24);
+        for step in 0..4 {
+            let batch = interior_batch(&ds, 100 + step, 12, 12);
+            let tu = update_tree(&tree, &ds, &batch, 24, 1 + (step as usize % 3));
+            let want = BoxTree::build(&tu.ds, 10, 24);
+            assert_tree_eq(&tu.tree, &want, &format!("chain step {step}"));
+            ds = tu.ds;
+            tree = tu.tree;
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_identity() {
+        let ds = SynthSpec::blobs(200, 2, 3, 5).generate();
+        let old = BoxTree::build(&ds, 8, 24);
+        let tu = update_tree(&old, &ds, &UpdateBatch::default(), 24, 2);
+        assert!(!tu.full_rebuild);
+        assert_tree_eq(&tu.tree, &old, "empty batch");
+        assert!(tu.clean.iter().all(|&c| c));
+        assert!(tu.node_map.iter().enumerate().all(|(i, &m)| m == i as u32));
+    }
+
+    #[test]
+    fn hull_change_forces_full_rebuild() {
+        let ds = SynthSpec::blobs(300, 2, 3, 7).generate();
+        let old = BoxTree::build(&ds, 8, 24);
+        // insert far outside the bounding box
+        let batch = UpdateBatch {
+            deletes: vec![],
+            inserts: vec![1.0e3, -1.0e3],
+        };
+        let tu = update_tree(&old, &ds, &batch, 24, 2);
+        assert!(tu.full_rebuild);
+        let want = BoxTree::build(&tu.ds, 8, 24);
+        assert_tree_eq(&tu.tree, &want, "hull grow");
+    }
+
+    #[test]
+    fn duplicate_deletes_are_deduped() {
+        let ds = SynthSpec::blobs(150, 2, 2, 9).generate();
+        let mut batch = interior_batch(&ds, 77, 6, 0);
+        let dup = batch.deletes[0];
+        batch.deletes.push(dup);
+        batch.deletes.push(dup);
+        check(&ds, &batch, 8, "duplicate deletes");
+    }
+
+    #[test]
+    fn pos_map_tracks_survivors() {
+        let ds = SynthSpec::blobs(180, 2, 3, 15).generate();
+        let old = BoxTree::build(&ds, 8, 24);
+        let batch = interior_batch(&ds, 16, 10, 10);
+        let tu = update_tree(&old, &ds, &batch, 24, 1);
+        let pm = tu.pos_map(&old);
+        for (p_new, &p_old) in pm.iter().enumerate() {
+            let e_new = tu.tree.perm[p_new];
+            let e_old = tu.new_to_old[e_new];
+            if e_old == u32::MAX {
+                assert_eq!(p_old, u32::MAX);
+            } else {
+                assert_eq!(old.perm[p_old as usize], e_old as usize);
+                // same coordinates on both sides
+                let a = tu.ds.row(e_new);
+                let b = ds.row(e_old as usize);
+                assert!(a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits()));
+            }
+        }
+    }
+}

@@ -1,0 +1,361 @@
+//! Differential update-fuzz harness (DESIGN: incremental engine updates).
+//!
+//! Every test here checks the same invariant from a different angle: an
+//! *incrementally* updated structure must be **byte-identical** to a
+//! from-scratch build over the post-update data — same tree layout, same
+//! CSB block list, same dense/sparse arena bits — and the full-kernel
+//! operator must additionally apply within the ACA tolerance.  The fuzz
+//! tests replay identical seeded batch streams at thread counts {1, 2, 8}
+//! and require the replicas to agree with each other as well.
+//!
+//! Batch shapes covered: uniform deletes + box-uniform inserts, cluster-
+//! skewed placement, duplicate inserts (including exact copies of existing
+//! points), insert-only and delete-only rounds, delete-to-empty-leaf
+//! collapse, and leaf-capacity-overflow resplits.
+
+use nni::csb::hier::HierCsb;
+use nni::csb::kernel::KernelKind;
+use nni::csb::update::{update_par, SideDelta};
+use nni::data::dataset::Dataset;
+use nni::data::synth::SynthSpec;
+use nni::hmat::FullKernelConfig;
+use nni::interact::epoch::{UpdatableEngine, UpdatableKernelEngine, UpdateCfg};
+use nni::knn::exact::knn_graph;
+use nni::sparse::csr::Csr;
+use nni::tree::boxtree::BoxTree;
+use nni::tree::update::{update_tree, TreeUpdate, UpdateBatch};
+use nni::util::rng::Rng;
+
+const THREADS: [usize; 3] = [1, 2, 8];
+const LEAF_CAP: usize = 8;
+const MAX_DEPTH: u32 = 24;
+const BLOCK_CAP: usize = 32;
+
+/// Deterministic tree-ordered profile (symmetrized kNN).  The fixed inner
+/// thread count keeps the closure a pure function of the dataset.
+fn profile(ds: &Dataset, _t: &BoxTree) -> Csr {
+    let k = 6usize.min(ds.n().saturating_sub(1)).max(1);
+    Csr::from_knn(&knn_graph(ds, k, 2), ds.n()).symmetrized()
+}
+
+fn cfg(build_threads: usize) -> UpdateCfg {
+    UpdateCfg {
+        leaf_cap: LEAF_CAP,
+        max_depth: MAX_DEPTH,
+        block_cap: BLOCK_CAP,
+        build_threads,
+        threads: build_threads,
+        kernel: KernelKind::Scalar,
+        ..UpdateCfg::default()
+    }
+}
+
+/// Byte-level arena equality — the differential oracle.
+fn assert_arenas_eq(want: &HierCsb, got: &HierCsb, ctx: &str) {
+    assert_eq!(want.rows, got.rows, "{ctx}: rows");
+    assert_eq!(want.cols, got.cols, "{ctx}: cols");
+    assert_eq!(want.blocks, got.blocks, "{ctx}: block list");
+    assert_eq!(want.by_target, got.by_target, "{ctx}: by_target");
+    assert_eq!(want.sp_rows, got.sp_rows, "{ctx}: sp_rows");
+    assert_eq!(want.sp_ptr, got.sp_ptr, "{ctx}: sp_ptr");
+    assert_eq!(want.sp_col, got.sp_col, "{ctx}: sp_col");
+    assert_eq!(want.dense.len(), got.dense.len(), "{ctx}: dense arena length");
+    assert_eq!(want.sp_val.len(), got.sp_val.len(), "{ctx}: sp_val arena length");
+    assert!(
+        want.dense.iter().zip(&got.dense).all(|(a, b)| a.to_bits() == b.to_bits()),
+        "{ctx}: dense arena bits differ"
+    );
+    assert!(
+        want.sp_val.iter().zip(&got.sp_val).all(|(a, b)| a.to_bits() == b.to_bits()),
+        "{ctx}: sp_val arena bits differ"
+    );
+}
+
+fn bbox(ds: &Dataset) -> (Vec<f32>, Vec<f32>) {
+    let d = ds.d();
+    let mut lo = vec![f32::INFINITY; d];
+    let mut hi = vec![f32::NEG_INFINITY; d];
+    for i in 0..ds.n() {
+        for (a, &x) in ds.row(i).iter().enumerate() {
+            lo[a] = lo[a].min(x);
+            hi[a] = hi[a].max(x);
+        }
+    }
+    (lo, hi)
+}
+
+/// Seeded batch generator cycling through shapes: uniform mixed, cluster-
+/// skewed, duplicate-heavy (repeated delete indices + exact-copy inserts),
+/// insert-only, delete-only.  Deletes may hit the hull — the full-rebuild
+/// fallback is a correct path and the differential oracle covers it too.
+fn gen_batch(ds: &Dataset, rng: &mut Rng, round: usize) -> UpdateBatch {
+    let (n, d) = (ds.n(), ds.d());
+    let (lo, hi) = bbox(ds);
+    let mut deletes = Vec::new();
+    let mut inserts = Vec::new();
+    match round % 5 {
+        0 => {
+            // uniform mixed batch, size varies with the rng
+            for _ in 0..1 + rng.below(20) {
+                deletes.push(rng.below(n));
+            }
+            for _ in 0..1 + rng.below(20) {
+                for (l, h) in lo.iter().zip(&hi) {
+                    inserts.push(l + rng.f32() * (h - l));
+                }
+            }
+        }
+        1 => {
+            // cluster-skewed: all inserts jitter one anchor point
+            let anchor = rng.below(n);
+            let scale: Vec<f32> = (0..d).map(|a| 0.02 * (hi[a] - lo[a])).collect();
+            for _ in 0..4 + rng.below(12) {
+                for (a, &x) in ds.row(anchor).iter().enumerate() {
+                    inserts.push(x + (rng.f32() - 0.5) * scale[a]);
+                }
+            }
+            for _ in 0..rng.below(6) {
+                deletes.push(rng.below(n));
+            }
+        }
+        2 => {
+            // duplicate-heavy: repeated delete indices (deduped by the tree
+            // layer) and exact copies of an existing point
+            let i = rng.below(n);
+            deletes.push(i);
+            deletes.push(i);
+            deletes.push(rng.below(n));
+            let p = rng.below(n);
+            for _ in 0..3 + rng.below(5) {
+                inserts.extend_from_slice(ds.row(p));
+            }
+        }
+        3 => {
+            // insert-only, larger
+            for _ in 0..8 + rng.below(24) {
+                for (l, h) in lo.iter().zip(&hi) {
+                    inserts.push(l + rng.f32() * (h - l));
+                }
+            }
+        }
+        _ => {
+            // delete-only, larger (bounded to keep the set nonempty)
+            for _ in 0..(8 + rng.below(24)).min(n / 4) {
+                deletes.push(rng.below(n));
+            }
+        }
+    }
+    UpdateBatch { deletes, inserts }
+}
+
+/// The tentpole invariant: replay an identical seeded batch stream through
+/// the epoch layer at thread counts {1, 2, 8}; after every publish the
+/// incremental CSB arenas must be byte-identical to a from-scratch build
+/// over the same post-update data, and the final replicas must agree with
+/// each other bit-for-bit across thread counts.
+#[test]
+fn fuzz_incremental_matches_from_scratch_across_threads() {
+    for &seed in &[101u64, 202, 303] {
+        let ds0 = SynthSpec::blobs(400, 3, 4, seed).generate();
+        let mut replicas: Vec<HierCsb> = Vec::new();
+        for &t in &THREADS {
+            let upd = UpdatableEngine::build(ds0.clone(), cfg(t), profile);
+            let mut rng = Rng::new(seed.wrapping_mul(7).wrapping_add(1));
+            for round in 0..5 {
+                let cur = upd.acquire();
+                let b = gen_batch(&cur.value.ds, &mut rng, round);
+                drop(cur);
+                let e = upd.update(&b);
+                let fresh = UpdatableEngine::build(e.value.ds.clone(), cfg(t), profile);
+                assert_arenas_eq(
+                    &fresh.acquire().value.engine.csb,
+                    &e.value.engine.csb,
+                    &format!("seed {seed} threads {t} round {round}"),
+                );
+            }
+            replicas.push(upd.acquire().value.engine.csb.clone());
+        }
+        for (i, r) in replicas.iter().enumerate().skip(1) {
+            assert_arenas_eq(
+                &replicas[0],
+                r,
+                &format!("seed {seed}: thread-count replay {} vs {}", THREADS[0], THREADS[i]),
+            );
+        }
+    }
+}
+
+/// Full-kernel operator: near arenas byte-identical, far-field application
+/// within the ACA tolerance (scalar kernel — the comparison is exact in
+/// practice because untouched factors are lifted bit-for-bit).
+#[test]
+fn fuzz_kernel_engine_spmv_within_tol_across_threads() {
+    let seed = 505u64;
+    let ds0 = SynthSpec::blobs(300, 3, 4, seed).generate();
+    let kcfg = FullKernelConfig::new(0.8);
+    for &t in &THREADS {
+        let mut c = cfg(t);
+        c.block_cap = 64;
+        let upd = UpdatableKernelEngine::build(ds0.clone(), c, kcfg.clone());
+        let mut rng = Rng::new(seed);
+        for round in 0..3 {
+            let cur = upd.acquire();
+            let b = gen_batch(&cur.value.ds, &mut rng, round);
+            drop(cur);
+            let e = upd.update(&b);
+            let fresh = UpdatableKernelEngine::build(e.value.ds.clone(), c, kcfg.clone());
+            let f = fresh.acquire();
+            let ctx = format!("threads {t} round {round}");
+            assert_arenas_eq(&f.value.engine.near.csb, &e.value.engine.near.csb, &ctx);
+            assert_eq!(f.value.engine.far.blocks, e.value.engine.far.blocks, "{ctx}: far blocks");
+            let n = e.value.engine.n();
+            let x: Vec<f32> = (0..n).map(|i| (i * 37 % 101) as f32 / 101.0 - 0.5).collect();
+            let mut ya = vec![0.0f32; n];
+            let mut yb = vec![0.0f32; n];
+            e.value.engine.spmv(&x, &mut ya);
+            f.value.engine.spmv(&x, &mut yb);
+            let scale = yb.iter().fold(1.0f32, |m, v| m.max(v.abs()));
+            for (i, (a, b)) in ya.iter().zip(&yb).enumerate() {
+                assert!(
+                    (a - b).abs() <= 1e-4 * scale,
+                    "{ctx}: spmv row {i}: incremental {a} vs fresh {b} (scale {scale})"
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Edge cases, via the layered API (full visibility into the fallback flag).
+// ---------------------------------------------------------------------------
+
+/// Run one batch through the tree → CSB incremental chain and check the
+/// result against a from-scratch build.  `expect_fallback` pins whether the
+/// tree layer must (not) have taken the full-rebuild path.
+fn layered_roundtrip(ds: &Dataset, batch: &UpdateBatch, expect_fallback: Option<bool>, ctx: &str) -> TreeUpdate {
+    let tree = BoxTree::build_par(ds, LEAF_CAP, MAX_DEPTH, 2);
+    let a = profile(&ds.permuted(&tree.perm), &tree);
+    let csb = HierCsb::build_with_par(&a, &tree, &tree, BLOCK_CAP, 0.6, 2);
+    let tu = update_tree(&tree, ds, batch, MAX_DEPTH, 2);
+    if let Some(fb) = expect_fallback {
+        assert_eq!(tu.full_rebuild, fb, "{ctx}: full-rebuild fallback");
+    }
+    let a_new = profile(&tu.ds.permuted(&tu.tree.perm), &tu.tree);
+    let inc = if tu.full_rebuild {
+        HierCsb::build_with_par(&a_new, &tu.tree, &tu.tree, BLOCK_CAP, 0.6, 2)
+    } else {
+        let delta = SideDelta::from_update(&tree, &tu);
+        update_par(&csb, &a, &a_new, &tu.tree, &delta, &tu.tree, &delta, BLOCK_CAP, 2)
+    };
+    let ftree = BoxTree::build_par(&tu.ds, LEAF_CAP, MAX_DEPTH, 2);
+    let fa = profile(&tu.ds.permuted(&ftree.perm), &ftree);
+    let fresh = HierCsb::build_with_par(&fa, &ftree, &ftree, BLOCK_CAP, 0.6, 2);
+    assert_arenas_eq(&fresh, &inc, ctx);
+    tu
+}
+
+/// External indices of the first leaf whose points all avoid the data hull
+/// (deleting or crowding it cannot move the root box → no fallback).
+fn interior_leaf_members(tree: &BoxTree, ds: &Dataset) -> Vec<usize> {
+    let (lo, hi) = bbox(ds);
+    let on_hull =
+        |row: &[f32]| row.iter().enumerate().any(|(a, &x)| x == lo[a] || x == hi[a]);
+    for l in tree.leaves() {
+        let nd = &tree.nodes[l as usize];
+        let members: Vec<usize> =
+            (nd.lo..nd.hi).map(|p| tree.perm[p as usize]).collect();
+        if !members.is_empty() && members.iter().all(|&e| !on_hull(ds.row(e))) {
+            return members;
+        }
+    }
+    panic!("no interior leaf in the test dataset");
+}
+
+/// Deleting every member of a leaf empties it; the subtree above collapses
+/// and the incremental result must still match from-scratch byte-for-byte.
+#[test]
+fn delete_to_empty_leaf_collapses_subtree() {
+    let ds = SynthSpec::blobs(400, 3, 4, 601).generate();
+    let tree = BoxTree::build_par(&ds, LEAF_CAP, MAX_DEPTH, 2);
+    let deletes = interior_leaf_members(&tree, &ds);
+    let batch = UpdateBatch { deletes: deletes.clone(), inserts: Vec::new() };
+    let tu = layered_roundtrip(&ds, &batch, Some(false), "empty-leaf collapse");
+    assert_eq!(tu.ds.n(), ds.n() - deletes.len());
+}
+
+/// Deleting an entire planted cluster (by label) collapses a whole region
+/// of the tree at once.
+#[test]
+fn delete_entire_cluster_matches_from_scratch() {
+    let ds = SynthSpec::blobs(400, 3, 4, 607).generate();
+    let labels = ds.labels.clone().expect("blobs carry labels");
+    let deletes: Vec<usize> =
+        (0..ds.n()).filter(|&i| labels[i] == 0).collect();
+    assert!(!deletes.is_empty());
+    let batch = UpdateBatch { deletes, inserts: Vec::new() };
+    // a cluster usually touches the hull — no fallback expectation either way
+    layered_roundtrip(&ds, &batch, None, "whole-cluster delete");
+}
+
+/// Crowding one interior leaf with more than `leaf_cap` new points forces
+/// the leaf to resplit; the resplit subtree must reproduce the from-scratch
+/// layout bit-for-bit.
+#[test]
+fn insert_overflow_forces_leaf_resplit() {
+    let ds = SynthSpec::blobs(400, 3, 4, 611).generate();
+    let tree = BoxTree::build_par(&ds, LEAF_CAP, MAX_DEPTH, 2);
+    let members = interior_leaf_members(&tree, &ds);
+    let anchor = ds.row(members[0]).to_vec();
+    let mut inserts = Vec::new();
+    let mut rng = Rng::new(613);
+    for _ in 0..2 * LEAF_CAP {
+        for &x in &anchor {
+            inserts.push(x + (rng.f32() - 0.5) * 1e-3);
+        }
+    }
+    let batch = UpdateBatch { deletes: Vec::new(), inserts };
+    layered_roundtrip(&ds, &batch, Some(false), "leaf-cap overflow resplit");
+}
+
+/// An all-duplicate insert batch (identical coordinates, repeated) must not
+/// diverge — unsplittable piles stop at the depth cap on both sides.
+#[test]
+fn all_duplicate_insert_batch_matches_from_scratch() {
+    let ds = SynthSpec::blobs(400, 3, 4, 617).generate();
+    let tree = BoxTree::build_par(&ds, LEAF_CAP, MAX_DEPTH, 2);
+    let members = interior_leaf_members(&tree, &ds);
+    let anchor = ds.row(members[0]).to_vec();
+    let mut inserts = Vec::new();
+    for _ in 0..10 {
+        inserts.extend_from_slice(&anchor);
+    }
+    let batch = UpdateBatch { deletes: Vec::new(), inserts };
+    layered_roundtrip(&ds, &batch, Some(false), "all-duplicate inserts");
+}
+
+/// Update-then-query on a stale epoch handle: the snapshot keeps answering
+/// bit-for-bit after later publishes replace it.
+#[test]
+fn stale_epoch_handle_is_bit_stable_across_publishes() {
+    let ds = SynthSpec::blobs(400, 3, 4, 619).generate();
+    let upd = UpdatableEngine::build(ds.clone(), cfg(2), profile);
+    let stale = upd.acquire();
+    let n0 = stale.value.engine.csb.rows;
+    let mut rng = Rng::new(620);
+    let x: Vec<f32> = (0..n0).map(|_| rng.f32() - 0.5).collect();
+    let mut y0 = vec![0.0f32; n0];
+    stale.value.engine.spmv(&x, &mut y0);
+    for round in 0..3 {
+        let cur = upd.acquire();
+        let b = gen_batch(&cur.value.ds, &mut rng, round);
+        drop(cur);
+        upd.update(&b);
+    }
+    assert_eq!(stale.version, 0);
+    let mut y1 = vec![0.0f32; n0];
+    stale.value.engine.spmv(&x, &mut y1);
+    assert!(
+        y0.iter().zip(&y1).all(|(a, b)| a.to_bits() == b.to_bits()),
+        "stale handle drifted from its snapshot"
+    );
+}
