@@ -1,12 +1,15 @@
 //! **Far-field compression sweep**: storage, accuracy, and apply time of
-//! the `hmat` full-kernel operator across ACA tolerances
-//! tol ∈ {1e-2, 1e-3, 1e-4}.
+//! the `hmat` full-kernel operator across representations × precisions ×
+//! ACA tolerances tol ∈ {1e-2, 1e-3, 1e-4}.
 //!
-//! Per tolerance the bench measures, on a clustered SIFT-like surrogate:
+//! Rows are (format, precision) pairs — per-block ACA in f32, nested-basis
+//! H² in f32, and H² with tolerance-gated bf16 factor storage.  Per row
+//! the bench measures, on a clustered SIFT-like surrogate:
 //!
 //! * compressed far-field bytes vs what the same blocks would cost dense
-//!   (the acceptance bar: `storage_ratio < 0.3` at tol = 1e-3);
-//! * the rank histogram of the low-rank blocks (η/tol methodology:
+//!   (the acceptance bars at tol = 1e-3: ACA `storage_ratio < 0.3` and
+//!   H²(f32) bytes strictly below ACA bytes);
+//! * basis/block rank statistics (η/tol methodology:
 //!   EXPERIMENTS.md §Far-field compression & KRR);
 //! * sampled relative error of the full spmv against a streamed f64
 //!   dense Gaussian oracle (must stay ≤ 10·tol);
@@ -24,7 +27,8 @@ use nni::bench::{counters_json, print_header, repo_root_out, Table, Workload};
 use nni::csb::kernel::{Dispatch, KernelKind};
 use nni::hmat::aca::GaussGen;
 use nni::hmat::apply::worker_scratch;
-use nni::hmat::{FullKernelConfig, FullKernelEngine};
+use nni::hmat::repr::{FarFieldRepr, FarFieldStore};
+use nni::hmat::{FarFieldMode, FullKernelConfig, FullKernelEngine, Precision};
 use nni::order::dualtree;
 use nni::par::pool::ThreadPool;
 use nni::util::cli::Args;
@@ -33,8 +37,33 @@ use nni::util::rng::Rng;
 use nni::util::timer::{bench_default, machine_summary, time_once};
 use std::io::Write;
 
+/// Rank statistics of either representation, for the shared table/record
+/// shape: (mean rank, max rank, histogram, format-specific extras).
+fn far_stats(far: &FarFieldStore) -> (f64, usize, Vec<(usize, usize)>, Vec<(&'static str, Json)>) {
+    match far {
+        FarFieldStore::Aca(f) => (
+            f.mean_rank(),
+            f.max_rank() as usize,
+            f.rank_histogram().into_iter().map(|(r, c)| (r as usize, c as usize)).collect(),
+            vec![
+                ("low_rank_blocks", num(f.low_rank_blocks() as f64)),
+                ("dense_fallback_blocks", num(f.dense_fallback_blocks() as f64)),
+            ],
+        ),
+        FarFieldStore::H2(f) => (
+            f.mean_basis_rank(),
+            f.max_basis_rank(),
+            f.rank_histogram(),
+            vec![
+                ("src_nodes", num(f.src_node_count() as f64)),
+                ("bf16_factors", num(f.bf16_factors() as f64)),
+            ],
+        ),
+    }
+}
+
 fn main() {
-    let a = Args::new("far-field ACA compression sweep (storage, accuracy, apply time)")
+    let a = Args::new("far-field compression sweep: format x precision x tolerance")
         .opt_usize_min("n", 8192, 64, "problem size")
         .opt("tol-list", "1e-2,1e-3,1e-4", "ACA tolerances to sweep")
         .opt_f64("eta", 1.0, "admissibility parameter")
@@ -59,7 +88,7 @@ fn main() {
     let seed = a.get_u64("seed");
     print_header(
         "farfield",
-        "hmat far-field ACA compression: storage vs tolerance, full-kernel accuracy",
+        "hmat far-field compression: ACA vs nested-basis H2, f32 vs bf16 factors",
     );
 
     // Fixed inputs: clustered surrogate, 3-D PCA embedding, dual tree.
@@ -92,104 +121,145 @@ fn main() {
         .collect();
     let oracle_norm: f64 = oracle.iter().map(|v| v * v).sum::<f64>().sqrt();
 
+    let variants: [(FarFieldMode, Precision); 3] = [
+        (FarFieldMode::Aca, Precision::F32),
+        (FarFieldMode::H2, Precision::F32),
+        (FarFieldMode::H2, Precision::Bf16),
+    ];
     let mut table = Table::new(
         "farfield",
         &[
-            "tol", "far_blocks", "mean_rank", "max_rank", "dense_fb", "storage_ratio",
+            "tol", "format", "prec", "far_blocks", "mean_rank", "max_rank", "storage_ratio",
             "rel_err", "build_s", "spmv_ms",
         ],
     );
     let mut records: Vec<Json> = Vec::new();
     for &tol in &tols {
-        // per-point observability window: the embedded counters cover just
-        // this tolerance's build + applies
-        nni::obs::reset();
-        let cfg = FullKernelConfig::new(inv_h2)
-            .with_eta(eta)
-            .with_tol(tol as f32)
-            .with_block_cap(block_cap);
-        let (eng, t_build) = time_once(|| {
-            FullKernelEngine::build(&tree, coords.raw(), ds.d(), &cfg, 0, 0, KernelKind::Auto)
-        });
-        let far = &eng.far;
+        // per-tolerance byte accounting for the cross-format acceptance bar
+        let mut aca_bytes = 0u64;
+        let mut h2_f32_bytes = 0u64;
+        for &(format, precision) in &variants {
+            // per-point observability window: the embedded counters cover
+            // just this variant's build + applies
+            nni::obs::reset();
+            let cfg = FullKernelConfig::new(inv_h2)
+                .with_eta(eta)
+                .with_tol(tol as f32)
+                .with_block_cap(block_cap)
+                .with_far(format)
+                .with_precision(precision);
+            let (eng, t_build) = time_once(|| {
+                FullKernelEngine::build(&tree, coords.raw(), ds.d(), &cfg, 0, 0, KernelKind::Auto)
+            });
+            let far = &eng.far;
 
-        // Determinism gate: far apply bit-identical across threads {1,2,8}
-        // under the scalar dispatch before anything is recorded.
-        let mut y_ref: Vec<f32> = Vec::new();
-        for threads in [1usize, 2, 8] {
-            let pool = ThreadPool::new(threads);
-            let scratch = worker_scratch(pool.threads);
-            let mut y = vec![0.0f32; n];
-            far.apply_acc(&x, 1, &mut y, &pool, Dispatch::Scalar, &scratch);
-            if y_ref.is_empty() {
-                y_ref = y;
-            } else {
-                assert!(
-                    y.iter().zip(&y_ref).all(|(p, q)| p.to_bits() == q.to_bits()),
-                    "far apply not bit-identical at threads={threads} (tol={tol})"
-                );
+            // Determinism gate: far apply bit-identical across threads
+            // {1,2,8} under the scalar dispatch before anything is recorded.
+            let mut y_ref: Vec<f32> = Vec::new();
+            for threads in [1usize, 2, 8] {
+                let pool = ThreadPool::new(threads);
+                let scratch = worker_scratch(pool.threads);
+                let mut y = vec![0.0f32; n];
+                far.apply_acc(&x, 1, &mut y, &pool, Dispatch::Scalar, &scratch);
+                if y_ref.is_empty() {
+                    y_ref = y;
+                } else {
+                    assert!(
+                        y.iter().zip(&y_ref).all(|(p, q)| p.to_bits() == q.to_bits()),
+                        "far apply not bit-identical at threads={threads} \
+                         (format={} tol={tol})",
+                        format.label()
+                    );
+                }
             }
-        }
 
-        // Accuracy: full spmv vs the sampled f64 oracle.
-        let mut y = vec![0.0f32; n];
-        eng.spmv(&x, &mut y);
-        let err: f64 = sample
-            .iter()
-            .zip(&oracle)
-            .map(|(&i, &w)| (y[i] as f64 - w) * (y[i] as f64 - w))
-            .sum::<f64>()
-            .sqrt();
-        let rel_err = err / oracle_norm.max(1e-300);
-        assert!(
-            rel_err <= 10.0 * tol,
-            "full-kernel spmv rel err {rel_err:.3e} exceeds 10·tol at tol={tol}"
-        );
-
-        let ratio = far.far_bytes() as f64 / far.dense_far_bytes().max(1) as f64;
-        if (tol - 1e-3).abs() < 1e-12 {
+            // Accuracy: full spmv vs the sampled f64 oracle.
+            let mut y = vec![0.0f32; n];
+            eng.spmv(&x, &mut y);
+            let err: f64 = sample
+                .iter()
+                .zip(&oracle)
+                .map(|(&i, &w)| (y[i] as f64 - w) * (y[i] as f64 - w))
+                .sum::<f64>()
+                .sqrt();
+            let rel_err = err / oracle_norm.max(1e-300);
             assert!(
-                ratio < 0.3,
-                "acceptance: far storage ratio {ratio:.3} must be < 0.3 at tol=1e-3 ({})",
+                rel_err <= 10.0 * tol,
+                "full-kernel spmv rel err {rel_err:.3e} exceeds 10·tol \
+                 (format={} precision={} tol={tol})",
+                format.label(),
+                precision.label()
+            );
+
+            let ratio = far.far_bytes() as f64 / far.dense_far_bytes().max(1) as f64;
+            match (format, precision) {
+                (FarFieldMode::Aca, _) => aca_bytes = far.far_bytes(),
+                (FarFieldMode::H2, Precision::F32) => h2_f32_bytes = far.far_bytes(),
+                _ => {}
+            }
+            if (tol - 1e-3).abs() < 1e-12 {
+                if format == FarFieldMode::Aca {
+                    assert!(
+                        ratio < 0.3,
+                        "acceptance: far storage ratio {ratio:.3} must be < 0.3 \
+                         at tol=1e-3 ({})",
+                        far.describe()
+                    );
+                }
+                if format == FarFieldMode::H2 && precision == Precision::F32 {
+                    assert!(
+                        h2_f32_bytes < aca_bytes,
+                        "acceptance: H2 factors {h2_f32_bytes} bytes must be < \
+                         ACA {aca_bytes} bytes at tol=1e-3 ({})",
+                        far.describe()
+                    );
+                }
+            }
+            let m_spmv = bench_default(|| eng.spmv(&x, &mut y));
+            println!(
+                "# tol={tol:.0e} format={} precision={}: {}",
+                format.label(),
+                precision.label(),
                 far.describe()
             );
-        }
-        let m_spmv = bench_default(|| eng.spmv(&x, &mut y));
-        println!("# tol={tol:.0e}: {}", far.describe());
 
-        table.row(vec![
-            format!("{tol:.0e}"),
-            far.blocks.len().to_string(),
-            format!("{:.1}", far.mean_rank()),
-            far.max_rank().to_string(),
-            far.dense_fallback_blocks().to_string(),
-            format!("{ratio:.4}"),
-            format!("{rel_err:.3e}"),
-            format!("{t_build:.3}"),
-            format!("{:.3}", m_spmv.robust_min_s * 1e3),
-        ]);
-        let hist: Vec<Json> = far
-            .rank_histogram()
-            .into_iter()
-            .map(|(r, c)| obj(vec![("rank", num(r as f64)), ("blocks", num(c as f64))]))
-            .collect();
-        records.push(obj(vec![
-            ("tol", num(tol)),
-            ("far_blocks", num(far.blocks.len() as f64)),
-            ("low_rank_blocks", num(far.low_rank_blocks() as f64)),
-            ("dense_fallback_blocks", num(far.dense_fallback_blocks() as f64)),
-            ("mean_rank", num(far.mean_rank())),
-            ("max_rank", num(far.max_rank() as f64)),
-            ("rank_histogram", arr(hist)),
-            ("far_bytes", num(far.far_bytes() as f64)),
-            ("dense_far_bytes", num(far.dense_far_bytes() as f64)),
-            ("storage_ratio", num(ratio)),
-            ("near_covered_entries", num(eng.near.csb.coverage().0 as f64)),
-            ("rel_err_sample", num(rel_err)),
-            ("build_seconds", num(t_build)),
-            ("spmv_seconds", num(m_spmv.robust_min_s)),
-            ("counters", counters_json()),
-        ]));
+            let (mean_rank, max_rank, hist, extras) = far_stats(far);
+            table.row(vec![
+                format!("{tol:.0e}"),
+                format.label().to_string(),
+                precision.label().to_string(),
+                far.block_count().to_string(),
+                format!("{mean_rank:.1}"),
+                max_rank.to_string(),
+                format!("{ratio:.4}"),
+                format!("{rel_err:.3e}"),
+                format!("{t_build:.3}"),
+                format!("{:.3}", m_spmv.robust_min_s * 1e3),
+            ]);
+            let hist: Vec<Json> = hist
+                .into_iter()
+                .map(|(r, c)| obj(vec![("rank", num(r as f64)), ("blocks", num(c as f64))]))
+                .collect();
+            let mut fields = vec![
+                ("tol", num(tol)),
+                ("format", s(format.label())),
+                ("precision", s(precision.label())),
+                ("far_blocks", num(far.block_count() as f64)),
+                ("mean_rank", num(mean_rank)),
+                ("max_rank", num(max_rank as f64)),
+                ("rank_histogram", arr(hist)),
+                ("far_bytes", num(far.far_bytes() as f64)),
+                ("dense_far_bytes", num(far.dense_far_bytes() as f64)),
+                ("storage_ratio", num(ratio)),
+                ("near_covered_entries", num(eng.near.csb.coverage().0 as f64)),
+                ("rel_err_sample", num(rel_err)),
+                ("build_seconds", num(t_build)),
+                ("spmv_seconds", num(m_spmv.robust_min_s)),
+                ("counters", counters_json()),
+            ];
+            fields.extend(extras);
+            records.push(obj(fields));
+        }
     }
     table.finish();
 
@@ -205,9 +275,12 @@ fn main() {
         ("testbed", s(&machine_summary())),
         (
             "expected_shape",
-            s("storage_ratio grows and rel_err_sample shrinks as tol tightens; \
-               storage_ratio < 0.3 at tol=1e-3 and rel_err_sample <= 10*tol are asserted, \
-               as is far-apply bit-identity across threads {1,2,8}, before recording"),
+            s("per format: storage_ratio grows and rel_err_sample shrinks as tol \
+               tightens; rel_err_sample <= 10*tol always; at tol=1e-3 ACA \
+               storage_ratio < 0.3 and H2(f32) far_bytes < ACA far_bytes; \
+               bf16 shrinks H2 bytes further where the tolerance gate allows; \
+               far-apply bit-identity across threads {1,2,8} asserted before \
+               recording"),
         ),
         ("points", arr(records)),
     ]);
@@ -215,5 +288,5 @@ fn main() {
     let mut f = std::fs::File::create(&out).expect("write farfield json");
     writeln!(f, "{doc}").expect("write farfield json");
     println!("\n[saved {}]", out.display());
-    println!("expected shape: tighter tol → higher rank/storage, lower error; identity asserted.");
+    println!("expected shape: tighter tol → higher rank/storage, lower error; h2 < aca bytes.");
 }

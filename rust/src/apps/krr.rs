@@ -14,17 +14,29 @@
 //! tolerance (`rust/tests/full_kernel.rs` checks against an f64 dense
 //! solve).
 //!
+//! With `--far h2 --precond`, the CG solve is preconditioned by a
+//! Nyström approximation built on the H² **leaf skeletons** — the rows
+//! the far-field compression itself singled out as spanning the kernel's
+//! range.  `M = λI + B·Bᵀ` with `B = K(X,L)·chol(K(L,L))⁻ᵀ` over ≤ 128
+//! landmarks `L`; `M⁻¹` applies in O(n·m) via Woodbury, and the
+//! preconditioned iteration count drops well below plain CG
+//! (`rust/tests/full_kernel.rs` asserts strictly fewer iterations at the
+//! same accuracy).
+//!
 //! CLI: `nni krr` (see `main.rs`); `--far off` degrades to the truncated
 //! near-field baseline for comparison.
 
 use crate::csb::kernel::KernelKind;
 use crate::data::dataset::Dataset;
 use crate::embed::pca::pca_par;
-use crate::hmat::aca::dot64;
-use crate::hmat::{FarFieldMode, FullKernelConfig, FullKernelEngine};
+use crate::hmat::aca::{dot64, GaussGen};
+use crate::hmat::{FarFieldMode, FullKernelConfig, FullKernelEngine, Precision};
 use crate::obs::{self, counters, Counter};
 use crate::order::dualtree;
 use crate::util::rng::Rng;
+
+/// Landmark cap of the H²-skeleton Nyström preconditioner.
+pub const NYSTROM_LANDMARK_CAP: usize = 128;
 
 /// KRR hyper-parameters.
 #[derive(Clone, Debug)]
@@ -38,6 +50,11 @@ pub struct KrrConfig {
     pub lambda: f64,
     /// Far-field handling (`Off` = truncated near-field baseline).
     pub far: FarFieldMode,
+    /// Far-field factor storage precision (H² only).
+    pub precision: Precision,
+    /// Precondition the CG solve with the H²-skeleton Nyström operator
+    /// (requires `far = H2`; silently ignored otherwise).
+    pub precond: bool,
     /// ACA relative tolerance per far block.
     pub tol: f64,
     /// Admissibility parameter η.
@@ -63,6 +80,8 @@ impl Default for KrrConfig {
             bandwidth: 0.0,
             lambda: 1.0,
             far: FarFieldMode::Aca,
+            precision: Precision::F32,
+            precond: false,
             tol: 1e-3,
             eta: 1.0,
             block_cap: 0,
@@ -170,7 +189,8 @@ pub fn run(ds: &Dataset, targets: &[f32], cfg: &KrrConfig) -> KrrResult {
         .with_eta(cfg.eta as f32)
         .with_tol(cfg.tol as f32)
         .with_block_cap(cfg.block_cap)
-        .with_far(cfg.far);
+        .with_far(cfg.far)
+        .with_precision(cfg.precision);
     let eng = FullKernelEngine::build(
         &tree,
         coords.raw(),
@@ -181,11 +201,28 @@ pub fn run(ds: &Dataset, targets: &[f32], cfg: &KrrConfig) -> KrrResult {
         cfg.kernel,
     );
 
+    let pre = if cfg.precond {
+        eng.far.as_h2().and_then(|h2| {
+            NystromPrecond::build(
+                coords.raw(),
+                ds.d(),
+                inv_h2,
+                &h2.landmarks(NYSTROM_LANDMARK_CAP),
+                cfg.lambda,
+            )
+        })
+    } else {
+        None
+    };
+
     // Targets into tree order, solve, and back.
     let b: Vec<f32> = perm.iter().map(|&p| targets[p]).collect();
     let (alpha_t, iterations, rel_residual) = {
         obs::span!("krr.cg_solve");
-        cg_solve(&eng, &b, cfg.lambda as f32, cfg.cg_tol, cfg.cg_max_iters)
+        match &pre {
+            Some(p) => pcg_solve(&eng, &b, cfg.lambda as f32, cfg.cg_tol, cfg.cg_max_iters, p),
+            None => cg_solve(&eng, &b, cfg.lambda as f32, cfg.cg_tol, cfg.cg_max_iters),
+        }
     };
 
     // Training RMSE of the smoother f = K·α (= (K+λI)α − λα).
@@ -264,6 +301,210 @@ pub fn cg_solve(
     (x, iters, rs.sqrt() / bnorm)
 }
 
+/// Nyström preconditioner `M = λI + B·Bᵀ ≈ λI + K` over a landmark set,
+/// applied through the Woodbury identity:
+/// `M⁻¹·r = (r − B·G⁻¹·Bᵀ·r)/λ` with `G = λI + BᵀB` (`m x m`).  All
+/// internals in f64; build is O(n·m²) once, apply is O(n·m) per
+/// iteration — negligible next to the compressed spmv for m ≤ 128.
+pub struct NystromPrecond {
+    m: usize,
+    lambda: f64,
+    /// `B = K(X,L)·chol(K(L,L))⁻ᵀ`, row-major `n x m`.
+    b: Vec<f64>,
+    /// Lower Cholesky factor of `G = λI + BᵀB`.
+    lg: Vec<f64>,
+}
+
+impl NystromPrecond {
+    /// Build over tree-ordered `coords` and landmark indices (typically
+    /// [`crate::hmat::h2::H2Field::landmarks`]).  `None` when the
+    /// landmark Gram matrix is numerically singular — the caller falls
+    /// back to plain CG.
+    pub fn build(
+        coords: &[f32],
+        d: usize,
+        inv_h2: f32,
+        landmarks: &[u32],
+        lambda: f64,
+    ) -> Option<NystromPrecond> {
+        let m = landmarks.len();
+        if m == 0 || !(lambda > 0.0) {
+            return None;
+        }
+        let n = coords.len() / d;
+        let gen = GaussGen { coords, d, inv_h2 };
+        // Landmark Gram with a trace-scaled jitter for the Cholesky.
+        let mut amm = vec![0.0f64; m * m];
+        let mut tr = 0.0f64;
+        for a in 0..m {
+            for c in 0..m {
+                amm[a * m + c] = gen.entry_f64(landmarks[a] as usize, landmarks[c] as usize);
+            }
+            tr += amm[a * m + a];
+        }
+        let jitter = 1e-6 * tr / m as f64;
+        for a in 0..m {
+            amm[a * m + a] += jitter;
+        }
+        let lc = chol(&amm, m)?;
+        // Row i of B solves the lower-triangular system Lc·bᵢ = cᵢ.
+        let mut b = vec![0.0f64; n * m];
+        let mut c = vec![0.0f64; m];
+        for i in 0..n {
+            for (a, &l) in landmarks.iter().enumerate() {
+                c[a] = gen.entry_f64(i, l as usize);
+            }
+            for a in 0..m {
+                let mut s = c[a];
+                for t in 0..a {
+                    s -= lc[a * m + t] * b[i * m + t];
+                }
+                b[i * m + a] = s / lc[a * m + a];
+            }
+        }
+        let mut g = vec![0.0f64; m * m];
+        for i in 0..n {
+            let row = &b[i * m..(i + 1) * m];
+            for a in 0..m {
+                for t in a..m {
+                    g[a * m + t] += row[a] * row[t];
+                }
+            }
+        }
+        for a in 0..m {
+            for t in 0..a {
+                g[a * m + t] = g[t * m + a];
+            }
+            g[a * m + a] += lambda;
+        }
+        let lg = chol(&g, m)?;
+        Some(NystromPrecond { m, lambda, b, lg })
+    }
+
+    /// `z = M⁻¹·r`.
+    pub fn apply(&self, r: &[f32]) -> Vec<f32> {
+        let m = self.m;
+        let n = r.len();
+        let mut t = vec![0.0f64; m];
+        for i in 0..n {
+            let row = &self.b[i * m..(i + 1) * m];
+            let ri = r[i] as f64;
+            for a in 0..m {
+                t[a] += row[a] * ri;
+            }
+        }
+        // G⁻¹·t through the Cholesky factor: Lg·y = t, Lgᵀ·u = y.
+        let mut y = vec![0.0f64; m];
+        for a in 0..m {
+            let mut s = t[a];
+            for c in 0..a {
+                s -= self.lg[a * m + c] * y[c];
+            }
+            y[a] = s / self.lg[a * m + a];
+        }
+        let mut u = vec![0.0f64; m];
+        for a in (0..m).rev() {
+            let mut s = y[a];
+            for c in a + 1..m {
+                s -= self.lg[c * m + a] * u[c];
+            }
+            u[a] = s / self.lg[a * m + a];
+        }
+        (0..n)
+            .map(|i| {
+                let row = &self.b[i * m..(i + 1) * m];
+                let bu: f64 = row.iter().zip(&u).map(|(&bv, &uv)| bv * uv).sum();
+                ((r[i] as f64 - bu) / self.lambda) as f32
+            })
+            .collect()
+    }
+}
+
+/// Lower Cholesky of a symmetric positive-definite `m x m` matrix;
+/// `None` when a pivot is non-positive.
+fn chol(a: &[f64], m: usize) -> Option<Vec<f64>> {
+    let mut l = vec![0.0f64; m * m];
+    for i in 0..m {
+        for j in 0..=i {
+            let mut s = a[i * m + j];
+            for k in 0..j {
+                s -= l[i * m + k] * l[j * m + k];
+            }
+            if i == j {
+                if !(s > 0.0) {
+                    return None;
+                }
+                l[i * m + i] = s.sqrt();
+            } else {
+                l[i * m + j] = s / l[j * m + j];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Preconditioned conjugate gradients on `(K + λI)·α = b` — same
+/// operator, vectors, and stopping rule as [`cg_solve`] (true residual
+/// norm, so iteration counts are directly comparable), plus one
+/// `M⁻¹`-apply per iteration.
+pub fn pcg_solve(
+    eng: &FullKernelEngine,
+    b: &[f32],
+    lambda: f32,
+    tol: f64,
+    max_iters: usize,
+    pre: &NystromPrecond,
+) -> (Vec<f32>, usize, f64) {
+    let n = b.len();
+    assert_eq!(n, eng.n());
+    let bnorm = dot64(b, b).sqrt();
+    let mut x = vec![0.0f32; n];
+    if bnorm == 0.0 {
+        return (x, 0, 0.0);
+    }
+    let mut r = b.to_vec();
+    let mut z = pre.apply(&r);
+    let mut p = z.clone();
+    let mut ap = vec![0.0f32; n];
+    let mut rz = dot64(&r, &z);
+    let mut rn2 = dot64(&r, &r);
+    let mut iters = 0usize;
+    while iters < max_iters && rn2.sqrt() > tol * bnorm {
+        eng.spmv(&p, &mut ap);
+        for (a, &pv) in ap.iter_mut().zip(&p) {
+            *a += lambda * pv;
+        }
+        let pap = dot64(&p, &ap);
+        if !pap.is_finite() || pap <= 0.0 {
+            break;
+        }
+        let step = (rz / pap) as f32;
+        for (xi, &pv) in x.iter_mut().zip(&p) {
+            *xi += step * pv;
+        }
+        for (ri, &av) in r.iter_mut().zip(&ap) {
+            *ri -= step * av;
+        }
+        rn2 = dot64(&r, &r);
+        iters += 1;
+        if rn2.sqrt() <= tol * bnorm {
+            break;
+        }
+        z = pre.apply(&r);
+        let rz_new = dot64(&r, &z);
+        if !rz_new.is_finite() || rz_new <= 0.0 {
+            break;
+        }
+        let beta = (rz_new / rz) as f32;
+        for (pi, &zi) in p.iter_mut().zip(&z) {
+            *pi = zi + beta * *pi;
+        }
+        rz = rz_new;
+    }
+    counters::add(Counter::CgIterations, iters as u64);
+    (x, iters, rn2.sqrt() / bnorm)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -327,6 +568,50 @@ mod tests {
             .map(|(&a, &b)| (a as f64 - b as f64).abs())
             .sum();
         assert!(diff > 1e-6, "far field had no effect on the solution");
+    }
+
+    #[test]
+    fn h2_preconditioner_cuts_cg_iterations() {
+        let ds = SynthSpec::blobs(600, 3, 4, 7).generate();
+        let y = synthetic_targets(&ds, 3);
+        let base = KrrConfig {
+            lambda: 1.0,
+            block_cap: 64,
+            threads: 2,
+            kernel: KernelKind::Scalar,
+            far: FarFieldMode::H2,
+            cg_tol: 1e-6,
+            ..KrrConfig::default()
+        };
+        let plain = run(&ds, &y, &base);
+        let pre = run(
+            &ds,
+            &y,
+            &KrrConfig {
+                precond: true,
+                ..base
+            },
+        );
+        assert!(plain.iterations > 0 && pre.iterations > 0);
+        assert!(
+            pre.iterations < plain.iterations,
+            "preconditioner did not help: {} vs {}",
+            pre.iterations,
+            plain.iterations
+        );
+        // same system, same stopping rule — solutions must agree
+        let n2: f64 = dot64(&plain.alpha, &plain.alpha);
+        let d2: f64 = plain
+            .alpha
+            .iter()
+            .zip(&pre.alpha)
+            .map(|(&a, &b)| (a as f64 - b as f64).powi(2))
+            .sum();
+        assert!(
+            d2.sqrt() <= 2e-2 * n2.sqrt().max(1e-12),
+            "PCG solution drifted: rel {}",
+            d2.sqrt() / n2.sqrt().max(1e-12)
+        );
     }
 
     #[test]

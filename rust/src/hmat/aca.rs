@@ -102,19 +102,37 @@ impl AcaFactor {
 /// Safety factor on the ACA stopping criterion (see module docs).
 pub const ACA_SAFETY: f32 = 0.25;
 
-/// Factorize the `rows x cols` Gaussian block to relative Frobenius
-/// tolerance `tol`, falling back to dense storage when the rank would
-/// exceed half the smaller block side.
-pub fn aca_gauss(gen: &GaussGen, rows: Span, cols: Span, tol: f32) -> AcaFactor {
+/// A successful ACA run with the accepted pivots recorded: the raw
+/// column-stacked factors plus the block-local pivot rows/columns in
+/// acceptance order.  The pivots are the block's *skeleton* — the H²
+/// basis construction ([`crate::hmat::h2`]) interpolates cluster bases
+/// through them.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub(crate) struct AcaBuild {
+    /// Column-stacked `U`: `us[k*rn..(k+1)*rn]` is the k-th column.
+    pub us: Vec<f32>,
+    /// Row-major `Vᵀ`: `vs[k*cn..(k+1)*cn]` is the k-th row.
+    pub vs: Vec<f32>,
+    pub rank: usize,
+    /// Accepted pivot rows (block-local), one per rank step.
+    pub row_piv: Vec<u32>,
+    /// Accepted pivot columns (block-local), one per rank step.
+    pub col_piv: Vec<u32>,
+}
+
+/// The partial-pivot ACA core loop over an arbitrary entry generator
+/// (`entry(i, j)` with block-local indices).  Returns `None` when the
+/// rank reaches half the smaller side — the caller's dense-fallback
+/// signal.  The arithmetic is identical to [`aca_gauss`]'s historical
+/// inline loop, so factors stay bit-for-bit reproducible.
+pub(crate) fn aca_core<F: Fn(usize, usize) -> f32>(
+    entry: F,
+    rn: usize,
+    cn: usize,
+    tol: f32,
+) -> Option<AcaBuild> {
     assert!(tol > 0.0 && tol.is_finite(), "aca tolerance must be positive");
-    let rn = rows.len();
-    let cn = cols.len();
-    if rn == 0 || cn == 0 {
-        return AcaFactor::default();
-    }
     let max_rank = rn.min(cn) / 2;
-    let r0 = rows.lo as usize;
-    let c0 = cols.lo as usize;
 
     // u_k / v_k stored contiguously per rank step: `us[k*rn..]` is the
     // k-th column of U, `vs[k*cn..]` the k-th row of Vᵀ (already the
@@ -124,6 +142,8 @@ pub fn aca_gauss(gen: &GaussGen, rows: Span, cols: Span, tol: f32) -> AcaFactor 
     let mut rank = 0usize;
     let mut row_used = vec![false; rn];
     let mut col_used = vec![false; cn];
+    let mut row_piv: Vec<u32> = Vec::new();
+    let mut col_piv: Vec<u32> = Vec::new();
     // ‖U·Vᵀ‖_F² maintained incrementally in f64.
     let mut est2 = 0.0f64;
     let mut piv_row = 0usize;
@@ -135,10 +155,10 @@ pub fn aca_gauss(gen: &GaussGen, rows: Span, cols: Span, tol: f32) -> AcaFactor 
     loop {
         if rank >= max_rank {
             // Rank would exceed half the block side: dense wins.
-            return AcaFactor::Dense(dense_fill(gen, rows, cols));
+            return None;
         }
         // Residual row at piv_row: A[piv_row, :] − Σ_k u_k[piv_row]·v_k.
-        let mut r: Vec<f32> = (0..cn).map(|j| gen.entry(r0 + piv_row, c0 + j)).collect();
+        let mut r: Vec<f32> = (0..cn).map(|j| entry(piv_row, j)).collect();
         for k in 0..rank {
             let uk = us[k * rn + piv_row];
             if uk != 0.0 {
@@ -174,8 +194,10 @@ pub fn aca_gauss(gen: &GaussGen, rows: Span, cols: Span, tol: f32) -> AcaFactor 
             *rv *= inv;
         }
         col_used[piv_col] = true;
+        row_piv.push(piv_row as u32);
+        col_piv.push(piv_col as u32);
         // Residual column at piv_col: A[:, piv_col] − Σ_k v_k[piv_col]·u_k.
-        let mut c: Vec<f32> = (0..rn).map(|i| gen.entry(r0 + i, c0 + piv_col)).collect();
+        let mut c: Vec<f32> = (0..rn).map(|i| entry(i, piv_col)).collect();
         for k in 0..rank {
             let vk = vs[k * cn + piv_col];
             if vk != 0.0 {
@@ -221,15 +243,45 @@ pub fn aca_gauss(gen: &GaussGen, rows: Span, cols: Span, tol: f32) -> AcaFactor 
         }
     }
 
-    // Transpose the column-stacked `us` into row-major `U` (`rn x rank`);
-    // `vs` already is row-major `Vt` (`rank x cn`).
-    let mut u = vec![0.0f32; rn * rank];
-    for k in 0..rank {
-        for i in 0..rn {
-            u[i * rank + k] = us[k * rn + i];
+    Some(AcaBuild {
+        us,
+        vs,
+        rank,
+        row_piv,
+        col_piv,
+    })
+}
+
+/// Factorize the `rows x cols` Gaussian block to relative Frobenius
+/// tolerance `tol`, falling back to dense storage when the rank would
+/// exceed half the smaller block side.
+pub fn aca_gauss(gen: &GaussGen, rows: Span, cols: Span, tol: f32) -> AcaFactor {
+    let rn = rows.len();
+    let cn = cols.len();
+    if rn == 0 || cn == 0 {
+        assert!(tol > 0.0 && tol.is_finite(), "aca tolerance must be positive");
+        return AcaFactor::default();
+    }
+    let r0 = rows.lo as usize;
+    let c0 = cols.lo as usize;
+    match aca_core(|i, j| gen.entry(r0 + i, c0 + j), rn, cn, tol) {
+        None => AcaFactor::Dense(dense_fill(gen, rows, cols)),
+        Some(b) => {
+            // Transpose the column-stacked `us` into row-major `U`
+            // (`rn x rank`); `vs` already is row-major `Vt` (`rank x cn`).
+            let mut u = vec![0.0f32; rn * b.rank];
+            for k in 0..b.rank {
+                for i in 0..rn {
+                    u[i * b.rank + k] = b.us[k * rn + i];
+                }
+            }
+            AcaFactor::LowRank {
+                u,
+                vt: b.vs,
+                rank: b.rank,
+            }
         }
     }
-    AcaFactor::LowRank { u, vt: vs, rank }
 }
 
 /// Generate the full block row-major (the dense fallback and test oracle

@@ -147,7 +147,7 @@ impl FarField {
 /// kernel on an unsupported CPU.
 #[cfg(target_arch = "x86_64")]
 #[allow(clippy::too_many_arguments)]
-fn far_gemm(
+pub(crate) fn far_gemm(
     dispatch: Dispatch,
     d: &[f32],
     panel: &[f32],
@@ -167,7 +167,7 @@ fn far_gemm(
 
 #[cfg(not(target_arch = "x86_64"))]
 #[allow(clippy::too_many_arguments)]
-fn far_gemm(
+pub(crate) fn far_gemm(
     _dispatch: Dispatch,
     d: &[f32],
     _panel: &[f32],

@@ -28,6 +28,8 @@
 pub mod aca;
 pub mod admissible;
 pub mod apply;
+pub mod h2;
+pub mod repr;
 pub mod store;
 pub mod update;
 
@@ -36,6 +38,8 @@ use crate::csb::update::SideDelta;
 use crate::csb::kernel::KernelKind;
 use crate::csb::panel::AlignedF32;
 use crate::hmat::admissible::Partition;
+use crate::hmat::h2::H2Field;
+use crate::hmat::repr::{FarFieldRepr, FarFieldStore};
 use crate::hmat::store::FarField;
 use crate::interact::engine::Engine;
 use crate::par::pool::{SendPtr, ThreadPool};
@@ -48,9 +52,12 @@ use std::sync::Mutex;
 pub enum FarFieldMode {
     /// Near field only — the truncated baseline (`--far off`).
     Off,
-    /// ACA-compressed far field (the full-kernel operator).
+    /// ACA-compressed far field, one independent factor pair per block.
     #[default]
     Aca,
+    /// Nested cluster bases + transfer matrices + skeleton couplings
+    /// ([`h2`]) — same accuracy contract, O(n)-class storage.
+    H2,
 }
 
 impl FarFieldMode {
@@ -58,7 +65,8 @@ impl FarFieldMode {
         match s.to_ascii_lowercase().as_str() {
             "off" => Ok(FarFieldMode::Off),
             "aca" => Ok(FarFieldMode::Aca),
-            other => Err(format!("unknown far-field mode '{other}' (off|aca)")),
+            "h2" => Ok(FarFieldMode::H2),
+            other => Err(format!("unknown far-field mode '{other}' (off|aca|h2)")),
         }
     }
 
@@ -66,6 +74,36 @@ impl FarFieldMode {
         match self {
             FarFieldMode::Off => "off",
             FarFieldMode::Aca => "aca",
+            FarFieldMode::H2 => "h2",
+        }
+    }
+}
+
+/// Far-field factor storage precision.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Precision {
+    /// All factors stored as f32 (with packed AVX2 panels).
+    #[default]
+    F32,
+    /// Per-factor bf16-in-u16 where the rounded image stays within the
+    /// tolerance budget; everything else stays f32 ([`h2`] module docs).
+    /// Only the H² representation consumes this today.
+    Bf16,
+}
+
+impl Precision {
+    pub fn parse(s: &str) -> Result<Precision, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "f32" => Ok(Precision::F32),
+            "bf16" => Ok(Precision::Bf16),
+            other => Err(format!("unknown precision '{other}' (f32|bf16)")),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Bf16 => "bf16",
         }
     }
 }
@@ -85,6 +123,8 @@ pub struct FullKernelConfig {
     pub block_cap: usize,
     /// Far-field handling.
     pub far: FarFieldMode,
+    /// Far-field factor storage precision (H² only today).
+    pub precision: Precision,
 }
 
 impl FullKernelConfig {
@@ -95,6 +135,7 @@ impl FullKernelConfig {
             tol: 1e-3,
             block_cap: 0,
             far: FarFieldMode::Aca,
+            precision: Precision::F32,
         }
     }
 
@@ -117,18 +158,24 @@ impl FullKernelConfig {
         self.far = far;
         self
     }
+
+    pub fn with_precision(mut self, precision: Precision) -> Self {
+        self.precision = precision;
+        self
+    }
 }
 
 /// The fused full-kernel operator: near field through the established
 /// [`Engine`] (Gaussian weights baked into dense `HierCsb` blocks at
 /// build time, so every apply is a stored-value SpMM over the
-/// precompiled schedule), far field accumulated on top by
-/// [`FarField::apply_acc`].  Both halves run the same kernel dispatch
-/// and thread pool; with the scalar kernel the whole apply is bit-exact
-/// across thread counts.
+/// precompiled schedule), far field accumulated on top through the
+/// [`FarFieldRepr`] seam (per-block ACA or nested-basis H², per
+/// `cfg.far`).  Both halves run the same kernel dispatch and thread
+/// pool; with the scalar kernel the whole apply is bit-exact across
+/// thread counts.
 pub struct FullKernelEngine {
     pub near: Engine,
-    pub far: FarField,
+    pub far: FarFieldStore,
     /// Coordinate dimension of the Gaussian.
     pub dim: usize,
     pub inv_h2: f32,
@@ -163,7 +210,7 @@ impl FullKernelEngine {
         let csb = HierCsb::build_with_par(&near_csr, tree, tree, block_cap, 0.5, build_threads);
         debug_assert_eq!(csb.tgt_leaves, part.leaves, "near cut must match the partition cut");
         let far = match cfg.far {
-            FarFieldMode::Off => FarField::empty(&part, cfg.tol),
+            FarFieldMode::Off => FarFieldStore::Aca(FarField::empty(&part, cfg.tol)),
             FarFieldMode::Aca => {
                 let f = FarField::build(&part, coords, dim, cfg.inv_h2, cfg.tol, build_threads);
                 debug_assert_eq!(
@@ -171,7 +218,24 @@ impl FullKernelEngine {
                     n as u64 * n as u64,
                     "near + far must tile the index space"
                 );
-                f
+                FarFieldStore::Aca(f)
+            }
+            FarFieldMode::H2 => {
+                let f = H2Field::build(
+                    &part,
+                    coords,
+                    dim,
+                    cfg.inv_h2,
+                    cfg.tol,
+                    cfg.precision,
+                    build_threads,
+                );
+                debug_assert_eq!(
+                    csb.coverage().0 + f.coverage(),
+                    n as u64 * n as u64,
+                    "near + far must tile the index space"
+                );
+                FarFieldStore::H2(f)
             }
         };
         let near = Engine::with_kernel(csb, threads, kernel);
@@ -228,18 +292,53 @@ impl FullKernelEngine {
         );
         let csb = HierCsb::build_with_par(&near_csr, new_tree, new_tree, block_cap, 0.5, build_threads);
         let far = match cfg.far {
-            FarFieldMode::Off => FarField::empty(&part, cfg.tol),
-            FarFieldMode::Aca => FarField::update(
-                &self.far,
-                &part_old,
-                &part,
-                coords,
-                dim,
-                cfg.inv_h2,
-                cfg.tol,
-                delta,
-                build_threads,
-            ),
+            FarFieldMode::Off => FarFieldStore::Aca(FarField::empty(&part, cfg.tol)),
+            FarFieldMode::Aca => {
+                // Representation mismatch (engine built with a different
+                // `cfg.far`) falls back to a from-scratch build — the
+                // result is bit-identical either way.
+                let f = match self.far.as_aca() {
+                    Some(old) if old.blocks.len() == part_old.far.len() => FarField::update(
+                        old,
+                        &part_old,
+                        &part,
+                        coords,
+                        dim,
+                        cfg.inv_h2,
+                        cfg.tol,
+                        delta,
+                        build_threads,
+                    ),
+                    _ => FarField::build(&part, coords, dim, cfg.inv_h2, cfg.tol, build_threads),
+                };
+                FarFieldStore::Aca(f)
+            }
+            FarFieldMode::H2 => {
+                let f = match self.far.as_h2() {
+                    Some(old) => H2Field::update(
+                        old,
+                        &part_old,
+                        &part,
+                        coords,
+                        dim,
+                        cfg.inv_h2,
+                        cfg.tol,
+                        cfg.precision,
+                        delta,
+                        build_threads,
+                    ),
+                    None => H2Field::build(
+                        &part,
+                        coords,
+                        dim,
+                        cfg.inv_h2,
+                        cfg.tol,
+                        cfg.precision,
+                        build_threads,
+                    ),
+                };
+                FarFieldStore::H2(f)
+            }
         };
         let near = Engine::with_kernel(csb, threads, kernel);
         let far_scratch = apply::worker_scratch(near.pool.threads);
@@ -272,8 +371,8 @@ impl FullKernelEngine {
     /// Multi-query Gaussian apply over the **full** kernel — the
     /// far-field-complete counterpart of [`Engine::gauss_apply_multi`].
     /// The Gaussian weights are baked into storage at build time
-    /// (near: dense block values; far: ACA factors), so this is exactly
-    /// [`FullKernelEngine::spmm`].
+    /// (near: dense block values; far: compressed factors), so this is
+    /// exactly [`FullKernelEngine::spmm`].
     pub fn gauss_apply_multi(&self, x: &[f32], k: usize, y_out: &mut [f32]) {
         self.spmm(x, y_out, k);
     }
@@ -291,8 +390,8 @@ impl FullKernelEngine {
             "near[{}] far[{}] eta={} tol={:.0e}",
             self.near.csb.describe(),
             self.far.describe(),
-            self.far.eta,
-            self.far.tol
+            self.far.eta(),
+            self.far.tol()
         )
     }
 }
@@ -486,24 +585,48 @@ mod tests {
         let tree = BoxTree::build(&ds, 8, 24);
         let coords = ds.permuted(&tree.perm).raw().to_vec();
         let cfg = FullKernelConfig::new(0.8).with_block_cap(64);
-        let r1 = FullKernelEngine::build(&tree, &coords, 3, &cfg, 1, 1, KernelKind::Scalar);
-        for bt in [2usize, 8] {
-            let r = FullKernelEngine::build(&tree, &coords, 3, &cfg, bt, 1, KernelKind::Scalar);
-            assert_eq!(r.near.csb.blocks, r1.near.csb.blocks, "build_threads={bt}");
-            assert!(r
-                .near
-                .csb
-                .dense
-                .iter()
-                .zip(&r1.near.csb.dense)
-                .all(|(a, b)| a.to_bits() == b.to_bits()));
-            assert_eq!(r.far.blocks, r1.far.blocks);
-            assert!(r
-                .far
-                .factors
-                .iter()
-                .zip(&r1.far.factors)
-                .all(|(a, b)| a.to_bits() == b.to_bits()));
+        for far in [FarFieldMode::Aca, FarFieldMode::H2] {
+            let cfg = cfg.clone().with_far(far);
+            let r1 = FullKernelEngine::build(&tree, &coords, 3, &cfg, 1, 1, KernelKind::Scalar);
+            for bt in [2usize, 8] {
+                let r = FullKernelEngine::build(&tree, &coords, 3, &cfg, bt, 1, KernelKind::Scalar);
+                assert_eq!(r.near.csb.blocks, r1.near.csb.blocks, "build_threads={bt}");
+                assert!(r
+                    .near
+                    .csb
+                    .dense
+                    .iter()
+                    .zip(&r1.near.csb.dense)
+                    .all(|(a, b)| a.to_bits() == b.to_bits()));
+                assert!(
+                    r.far.bits_eq(&r1.far),
+                    "far field differs at build_threads={bt} far={}",
+                    far.label()
+                );
+            }
         }
+    }
+
+    #[test]
+    fn h2_engine_matches_dense_oracle() {
+        let (coords, eng) = build_engine(600, |c| c.far = FarFieldMode::H2);
+        let mut rng = Rng::new(5);
+        let x: Vec<f32> = (0..600).map(|_| rng.f32() - 0.5).collect();
+        let want = oracle_spmv(&coords, 3, 0.8, &x);
+        let mut got = vec![0.0f32; 600];
+        eng.spmv(&x, &mut got);
+        let norm: f64 = want.iter().map(|w| w * w).sum::<f64>().sqrt();
+        let err: f64 = got
+            .iter()
+            .zip(&want)
+            .map(|(&g, &w)| (g as f64 - w) * (g as f64 - w))
+            .sum::<f64>()
+            .sqrt();
+        assert!(
+            err <= 10.0 * 1e-3 * norm,
+            "h2 full-kernel spmv err {err} vs 10·tol·norm {} ({})",
+            1e-2 * norm,
+            eng.describe()
+        );
     }
 }

@@ -1,0 +1,270 @@
+//! The far-field representation seam.
+//!
+//! [`FullKernelEngine`](crate::hmat::FullKernelEngine) and every consumer
+//! above it (epoch patching, KRR, the CLI paths, benches) talk to the far
+//! field exclusively through [`FarFieldRepr`] and the concrete-but-opaque
+//! [`FarFieldStore`] — never to [`FarField`] or [`H2Field`] directly.
+//! The contract every representation must honor:
+//!
+//! * `apply_acc` **accumulates** `y += far·x` (the near apply overwrites
+//!   first) through the dispatched `csb::kernel` GEMMs, bit-identically
+//!   across thread counts;
+//! * construction is a pure function of `(partition, coords, tol, …)` at
+//!   any build thread count, so incremental updates can be cross-checked
+//!   against from-scratch builds bit-for-bit;
+//! * byte accounting (`far_bytes`, `dense_far_bytes`) uses factor arenas
+//!   only — packed panel mirrors are excluded on both sides, keeping the
+//!   ACA-vs-H² storage comparison honest.
+
+use crate::csb::kernel::Dispatch;
+use crate::csb::panel::AlignedF32;
+use crate::hmat::h2::H2Field;
+use crate::hmat::store::FarField;
+use crate::hmat::FarFieldMode;
+use crate::par::pool::ThreadPool;
+use std::sync::Mutex;
+
+/// What the engine (and everything above it) needs from a far field.
+pub trait FarFieldRepr {
+    /// `y += far · x` with `k` RHS columns; see the module contract.
+    fn apply_acc(
+        &self,
+        x: &[f32],
+        k: usize,
+        y: &mut [f32],
+        pool: &ThreadPool,
+        dispatch: Dispatch,
+        scratch: &[Mutex<AlignedF32>],
+    );
+    /// No far blocks at all (`--far off` or a partition with no
+    /// admissible pairs).
+    fn is_empty(&self) -> bool;
+    /// Total far-field cells covered (near + far must tile `n²`).
+    fn coverage(&self) -> u64;
+    /// Factor arena bytes (panels excluded).
+    fn far_bytes(&self) -> u64;
+    /// Bytes a dense f32 materialization of the far blocks would need.
+    fn dense_far_bytes(&self) -> u64;
+    /// Number of far blocks.
+    fn block_count(&self) -> usize;
+    fn eta(&self) -> f32;
+    fn tol(&self) -> f32;
+    fn mode(&self) -> FarFieldMode;
+    /// One stats line for logs/benches.
+    fn describe(&self) -> String;
+}
+
+impl FarFieldRepr for FarField {
+    fn apply_acc(
+        &self,
+        x: &[f32],
+        k: usize,
+        y: &mut [f32],
+        pool: &ThreadPool,
+        dispatch: Dispatch,
+        scratch: &[Mutex<AlignedF32>],
+    ) {
+        FarField::apply_acc(self, x, k, y, pool, dispatch, scratch)
+    }
+
+    fn is_empty(&self) -> bool {
+        FarField::is_empty(self)
+    }
+
+    fn coverage(&self) -> u64 {
+        FarField::coverage(self)
+    }
+
+    fn far_bytes(&self) -> u64 {
+        FarField::far_bytes(self)
+    }
+
+    fn dense_far_bytes(&self) -> u64 {
+        FarField::dense_far_bytes(self)
+    }
+
+    fn block_count(&self) -> usize {
+        self.blocks.len()
+    }
+
+    fn eta(&self) -> f32 {
+        self.eta
+    }
+
+    fn tol(&self) -> f32 {
+        self.tol
+    }
+
+    fn mode(&self) -> FarFieldMode {
+        FarFieldMode::Aca
+    }
+
+    fn describe(&self) -> String {
+        FarField::describe(self)
+    }
+}
+
+impl FarFieldRepr for H2Field {
+    fn apply_acc(
+        &self,
+        x: &[f32],
+        k: usize,
+        y: &mut [f32],
+        pool: &ThreadPool,
+        dispatch: Dispatch,
+        scratch: &[Mutex<AlignedF32>],
+    ) {
+        H2Field::apply_acc(self, x, k, y, pool, dispatch, scratch)
+    }
+
+    fn is_empty(&self) -> bool {
+        H2Field::is_empty(self)
+    }
+
+    fn coverage(&self) -> u64 {
+        H2Field::coverage(self)
+    }
+
+    fn far_bytes(&self) -> u64 {
+        H2Field::far_bytes(self)
+    }
+
+    fn dense_far_bytes(&self) -> u64 {
+        H2Field::dense_far_bytes(self)
+    }
+
+    fn block_count(&self) -> usize {
+        H2Field::block_count(self)
+    }
+
+    fn eta(&self) -> f32 {
+        self.eta
+    }
+
+    fn tol(&self) -> f32 {
+        self.tol
+    }
+
+    fn mode(&self) -> FarFieldMode {
+        H2Field::mode(self)
+    }
+
+    fn describe(&self) -> String {
+        H2Field::describe(self)
+    }
+}
+
+/// The engine's owned far field: one of the two representations.  An
+/// engine built with `--far off` stores an empty ACA field (zero blocks,
+/// zero bytes) so every consumer sees one uniform surface.
+#[derive(Clone)]
+pub enum FarFieldStore {
+    Aca(FarField),
+    H2(H2Field),
+}
+
+impl FarFieldStore {
+    pub fn as_aca(&self) -> Option<&FarField> {
+        match self {
+            FarFieldStore::Aca(f) => Some(f),
+            FarFieldStore::H2(_) => None,
+        }
+    }
+
+    pub fn as_h2(&self) -> Option<&H2Field> {
+        match self {
+            FarFieldStore::H2(f) => Some(f),
+            FarFieldStore::Aca(_) => None,
+        }
+    }
+
+    /// Same representation, same structure, bitwise-equal factors — the
+    /// cross-check the incremental-update tests assert.
+    pub fn bits_eq(&self, other: &FarFieldStore) -> bool {
+        match (self, other) {
+            (FarFieldStore::Aca(a), FarFieldStore::Aca(b)) => a.bits_eq(b),
+            (FarFieldStore::H2(a), FarFieldStore::H2(b)) => a.bits_eq(b),
+            _ => false,
+        }
+    }
+}
+
+impl FarFieldRepr for FarFieldStore {
+    fn apply_acc(
+        &self,
+        x: &[f32],
+        k: usize,
+        y: &mut [f32],
+        pool: &ThreadPool,
+        dispatch: Dispatch,
+        scratch: &[Mutex<AlignedF32>],
+    ) {
+        match self {
+            FarFieldStore::Aca(f) => f.apply_acc(x, k, y, pool, dispatch, scratch),
+            FarFieldStore::H2(f) => f.apply_acc(x, k, y, pool, dispatch, scratch),
+        }
+    }
+
+    fn is_empty(&self) -> bool {
+        match self {
+            FarFieldStore::Aca(f) => FarFieldRepr::is_empty(f),
+            FarFieldStore::H2(f) => FarFieldRepr::is_empty(f),
+        }
+    }
+
+    fn coverage(&self) -> u64 {
+        match self {
+            FarFieldStore::Aca(f) => FarFieldRepr::coverage(f),
+            FarFieldStore::H2(f) => FarFieldRepr::coverage(f),
+        }
+    }
+
+    fn far_bytes(&self) -> u64 {
+        match self {
+            FarFieldStore::Aca(f) => FarFieldRepr::far_bytes(f),
+            FarFieldStore::H2(f) => FarFieldRepr::far_bytes(f),
+        }
+    }
+
+    fn dense_far_bytes(&self) -> u64 {
+        match self {
+            FarFieldStore::Aca(f) => FarFieldRepr::dense_far_bytes(f),
+            FarFieldStore::H2(f) => FarFieldRepr::dense_far_bytes(f),
+        }
+    }
+
+    fn block_count(&self) -> usize {
+        match self {
+            FarFieldStore::Aca(f) => FarFieldRepr::block_count(f),
+            FarFieldStore::H2(f) => FarFieldRepr::block_count(f),
+        }
+    }
+
+    fn eta(&self) -> f32 {
+        match self {
+            FarFieldStore::Aca(f) => f.eta,
+            FarFieldStore::H2(f) => f.eta,
+        }
+    }
+
+    fn tol(&self) -> f32 {
+        match self {
+            FarFieldStore::Aca(f) => f.tol,
+            FarFieldStore::H2(f) => f.tol,
+        }
+    }
+
+    fn mode(&self) -> FarFieldMode {
+        match self {
+            FarFieldStore::Aca(f) => FarFieldRepr::mode(f),
+            FarFieldStore::H2(f) => FarFieldRepr::mode(f),
+        }
+    }
+
+    fn describe(&self) -> String {
+        match self {
+            FarFieldStore::Aca(f) => FarFieldRepr::describe(f),
+            FarFieldStore::H2(f) => FarFieldRepr::describe(f),
+        }
+    }
+}

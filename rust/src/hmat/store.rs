@@ -306,6 +306,22 @@ impl FarField {
         self.blocks.is_empty()
     }
 
+    /// Structural + bitwise factor equality (panels are a pure function
+    /// of the factor arena, so they are implied and skipped).
+    pub fn bits_eq(&self, o: &FarField) -> bool {
+        self.rows == o.rows
+            && self.cols == o.cols
+            && self.tgt_leaves == o.tgt_leaves
+            && self.blocks == o.blocks
+            && self.tasks == o.tasks
+            && self.factors.len() == o.factors.len()
+            && self
+                .factors
+                .iter()
+                .zip(&o.factors)
+                .all(|(a, b)| a.to_bits() == b.to_bits())
+    }
+
     /// Index-space area covered by far blocks.
     pub fn coverage(&self) -> u64 {
         self.blocks.iter().map(|b| b.area()).sum()

@@ -31,7 +31,7 @@ use crate::sparse::csr::Csr;
 use std::collections::HashMap;
 
 /// Old-cut index: tree node id → cut-leaf ordinal.
-fn cut_ordinals(part: &Partition) -> HashMap<u32, u32> {
+pub(crate) fn cut_ordinals(part: &Partition) -> HashMap<u32, u32> {
     part.cut
         .iter()
         .enumerate()
@@ -386,15 +386,9 @@ mod tests {
                 "near dense arena differs, threads={threads}"
             );
             assert_eq!(want.near.csb.sp_ptr, got.near.csb.sp_ptr);
-            assert_eq!(want.far.blocks, got.far.blocks, "far blocks, threads={threads}");
-            assert_eq!(want.far.tasks, got.far.tasks);
             assert!(
-                want.far
-                    .factors
-                    .iter()
-                    .zip(&got.far.factors)
-                    .all(|(a, b)| a.to_bits() == b.to_bits()),
-                "far factor arena differs, threads={threads}"
+                want.far.bits_eq(&got.far),
+                "far field differs, threads={threads}"
             );
             // Localized batch on clustered data must reuse both halves.
             assert!(
@@ -405,6 +399,52 @@ mod tests {
                 counters::get(Counter::UpdateNearRowsReused) > before_near,
                 "no near rows reused"
             );
+        }
+    }
+
+    #[test]
+    fn incremental_h2_engine_matches_fresh_build() {
+        use crate::hmat::{FarFieldMode, Precision};
+        for precision in [Precision::F32, Precision::Bf16] {
+            let ds = SynthSpec::blobs(500, 3, 4, 47).generate();
+            let tree = BoxTree::build(&ds, 8, 24);
+            let coords = ds.permuted(&tree.perm).raw().to_vec();
+            let cfg = FullKernelConfig::new(0.8)
+                .with_block_cap(64)
+                .with_far(FarFieldMode::H2)
+                .with_precision(precision);
+            let eng = FullKernelEngine::build(&tree, &coords, 3, &cfg, 2, 1, KernelKind::Scalar);
+
+            let batch = localized_batch(&ds, 10, 10);
+            let tu = update_tree(&tree, &ds, &batch, 24, 2);
+            assert!(!tu.full_rebuild);
+            let coords_new = tu.ds.permuted(&tu.tree.perm).raw().to_vec();
+            let delta = SideDelta::from_update(&tree, &tu);
+
+            let want =
+                FullKernelEngine::build(&tu.tree, &coords_new, 3, &cfg, 1, 1, KernelKind::Scalar);
+            for threads in [1usize, 2, 8] {
+                let before = counters::get(Counter::UpdateH2LeavesReused);
+                let got = eng.update(
+                    &tree,
+                    &tu.tree,
+                    &delta,
+                    &coords_new,
+                    3,
+                    &cfg,
+                    threads,
+                    1,
+                    KernelKind::Scalar,
+                );
+                assert!(
+                    want.far.bits_eq(&got.far),
+                    "h2 far field differs, threads={threads} precision={precision:?}"
+                );
+                assert!(
+                    counters::get(Counter::UpdateH2LeavesReused) > before,
+                    "no h2 leaf bases reused (precision={precision:?})"
+                );
+            }
         }
     }
 

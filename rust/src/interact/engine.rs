@@ -80,6 +80,7 @@ impl Engine {
     /// Engine with an explicit kernel choice (`Scalar` pins the bit-exact
     /// reference path for determinism-sensitive runs).
     pub fn with_kernel(csb: HierCsb, threads: usize, kernel: KernelKind) -> Engine {
+        obs::span!("interact.engine.build");
         let pool = ThreadPool::new_or_default(threads);
         let (dispatch, dispatch_fallback) = kernel.resolve();
         let schedule = ApplySchedule::build(&csb);

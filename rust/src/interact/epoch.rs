@@ -20,8 +20,9 @@
 //!   arenas are patched by [`csb::update::update_par`] and the schedule is
 //!   recompiled by `Engine::with_kernel` (cheap — it walks the block list).
 //! * [`UpdatableKernelEngine`] — the full-kernel operator
-//!   ([`FullKernelEngine`]); near Gaussian rows and far ACA factors of
-//!   untouched pairs are lifted by [`hmat::update`].
+//!   ([`FullKernelEngine`]); near Gaussian rows and far factors (ACA
+//!   block factors or H² leaf bases, per the configured representation)
+//!   of untouched pairs are lifted by [`hmat::update`] / [`hmat::h2`].
 //!
 //! Both produce engines **bit-identical** to a from-scratch build over the
 //! post-update data (tree layout equivalence → profile equality → arena
@@ -246,8 +247,9 @@ pub struct KernelEpoch {
 }
 
 /// An incrementally updatable full-kernel operator: near Gaussian rows and
-/// far ACA factors of untouched pairs are lifted from the previous epoch
-/// (`hmat::update`); everything else regenerates.
+/// far factors (ACA or H², per the configured representation) of untouched
+/// pairs are lifted from the previous epoch (`hmat::update`,
+/// `hmat::h2::H2Field::update`); everything else regenerates.
 pub struct UpdatableKernelEngine {
     cfg: UpdateCfg,
     kcfg: FullKernelConfig,
@@ -471,40 +473,39 @@ mod tests {
 
     #[test]
     fn kernel_engine_updates_bitidentical() {
-        let ds = SynthSpec::blobs(400, 3, 4, 77).generate();
-        let mut c = cfg();
-        c.block_cap = 64;
-        let kcfg = FullKernelConfig::new(0.8);
-        let upd = UpdatableKernelEngine::build(ds.clone(), c, kcfg.clone());
-        let e1 = upd.update(&batch(&ds, 78, 8, 8));
-        let fresh = UpdatableKernelEngine::build(e1.value.ds.clone(), c, kcfg);
-        let f = fresh.acquire();
-        assert_eq!(f.value.engine.far.blocks, e1.value.engine.far.blocks);
-        assert!(f
-            .value
-            .engine
-            .far
-            .factors
-            .iter()
-            .zip(&e1.value.engine.far.factors)
-            .all(|(a, b)| a.to_bits() == b.to_bits()));
-        assert!(f
-            .value
-            .engine
-            .near
-            .csb
-            .dense
-            .iter()
-            .zip(&e1.value.engine.near.csb.dense)
-            .all(|(a, b)| a.to_bits() == b.to_bits()));
-        // And the published operator applies identically (scalar kernel).
-        let n = f.value.engine.n();
-        let mut rng = Rng::new(9);
-        let x: Vec<f32> = (0..n).map(|_| rng.f32() - 0.5).collect();
-        let mut ya = vec![0.0f32; n];
-        let mut yb = vec![0.0f32; n];
-        f.value.engine.spmv(&x, &mut ya);
-        e1.value.engine.spmv(&x, &mut yb);
-        assert_eq!(ya, yb);
+        use crate::hmat::FarFieldMode;
+        for far in [FarFieldMode::Aca, FarFieldMode::H2] {
+            let ds = SynthSpec::blobs(400, 3, 4, 77).generate();
+            let mut c = cfg();
+            c.block_cap = 64;
+            let kcfg = FullKernelConfig::new(0.8).with_far(far);
+            let upd = UpdatableKernelEngine::build(ds.clone(), c, kcfg.clone());
+            let e1 = upd.update(&batch(&ds, 78, 8, 8));
+            let fresh = UpdatableKernelEngine::build(e1.value.ds.clone(), c, kcfg);
+            let f = fresh.acquire();
+            assert!(
+                f.value.engine.far.bits_eq(&e1.value.engine.far),
+                "epoch far field differs from fresh build (far={})",
+                far.label()
+            );
+            assert!(f
+                .value
+                .engine
+                .near
+                .csb
+                .dense
+                .iter()
+                .zip(&e1.value.engine.near.csb.dense)
+                .all(|(a, b)| a.to_bits() == b.to_bits()));
+            // And the published operator applies identically (scalar kernel).
+            let n = f.value.engine.n();
+            let mut rng = Rng::new(9);
+            let x: Vec<f32> = (0..n).map(|_| rng.f32() - 0.5).collect();
+            let mut ya = vec![0.0f32; n];
+            let mut yb = vec![0.0f32; n];
+            f.value.engine.spmv(&x, &mut ya);
+            e1.value.engine.spmv(&x, &mut yb);
+            assert_eq!(ya, yb, "spmv differs (far={})", far.label());
+        }
     }
 }

@@ -17,15 +17,16 @@
 //! `--knn exact|ann` plus the `--ann-*` tuning knobs (see
 //! `knn::ann::AnnParams`); `gamma` and `spmv` always use the exact
 //! backend (their outputs are figure reproductions).  `reorder`, `spmv`,
-//! and `krr` accept the far-field knobs (`--far off|aca`, `--tol`,
-//! `--eta`, `--bandwidth`) of the `hmat` full-kernel subsystem.
+//! and `krr` accept the far-field knobs (`--far off|aca|h2`,
+//! `--precision f32|bf16`, `--tol`, `--eta`, `--bandwidth`) of the
+//! `hmat` full-kernel subsystem.
 
 use nni::apps::{krr, meanshift, tsne};
 use nni::bench::Workload;
 use nni::csb::kernel::KernelKind;
 use nni::data::dataset::Dataset;
 use nni::data::synth::SynthSpec;
-use nni::hmat::{FarFieldMode, FullKernelConfig};
+use nni::hmat::{FarFieldMode, FullKernelConfig, Precision};
 use nni::interact::epoch::{UpdatableEngine, UpdatableKernelEngine, UpdateCfg};
 use nni::knn::ann::recall::recall_at_k;
 use nni::knn::ann::AnnParams;
@@ -172,7 +173,8 @@ fn kernel_line(kind: KernelKind) -> String {
 /// default differs per command: `krr` is *about* the full kernel (aca),
 /// the figure-reproduction commands opt in (off).
 fn far_opts(a: Args, default: &'static str) -> Args {
-    a.opt("far", default, "far field: off|aca (aca = full-kernel mode)")
+    a.opt("far", default, "far field: off|aca|h2 (aca/h2 = full-kernel mode)")
+        .opt("precision", "f32", "far-field factor storage: f32|bf16 (h2 only)")
         .opt_f64("tol", 1e-3, "ACA relative tolerance per far block")
         .opt_f64("eta", 1.0, "admissibility parameter (bigger = more far field)")
         .opt_f64("bandwidth", 0.0, "gaussian bandwidth h (0 = median-distance auto)")
@@ -180,7 +182,12 @@ fn far_opts(a: Args, default: &'static str) -> Args {
 
 /// Resolve the `--far` choice (usage error on bad values).
 fn far_mode(a: &Args) -> FarFieldMode {
-    FarFieldMode::parse(&a.get("far")).unwrap_or_else(die)
+    FarFieldMode::parse(&a.get("far")).unwrap_or_else(|e| die(format!("--far: {e}")))
+}
+
+/// Resolve the `--precision` choice (usage error on bad values).
+fn precision(a: &Args) -> Precision {
+    Precision::parse(&a.get("precision")).unwrap_or_else(|e| die(format!("--precision: {e}")))
 }
 
 /// Resolve the full-kernel config from the `far_opts` block (`None` when
@@ -197,7 +204,9 @@ fn full_kernel_cfg(a: &Args, ds: &Dataset, block_cap: usize) -> Option<(FullKern
     let cfg = FullKernelConfig::new((1.0 / (h * h)) as f32)
         .with_eta(a.get_f64("eta") as f32)
         .with_tol(a.get_f64("tol") as f32)
-        .with_block_cap(block_cap);
+        .with_block_cap(block_cap)
+        .with_far(far_mode(a))
+        .with_precision(precision(a));
     Some((cfg, h))
 }
 
@@ -343,10 +352,11 @@ fn cmd_reorder(argv: Vec<String>) {
     )));
     let a = obs_opts(far_opts(opts, "off")).parse_from(argv).unwrap_or_else(die);
     obs_begin(&a);
-    // validate the kernel and far-mode choices up front — before the
-    // expensive kNN build
+    // validate the kernel, far-mode, and precision choices up front —
+    // before the expensive kNN build
     let kernel = kernel_kind(&a);
     let _ = far_mode(&a);
+    let _ = precision(&a);
     let ds = load_or_synth(&a);
     let k = if a.get_usize("k") == 0 {
         workload(&a.get("workload")).k()
@@ -433,6 +443,18 @@ fn cmd_reorder(argv: Vec<String>) {
                     "full-kernel build {t_fk:.2}s, stored {} bytes (near + far factors)",
                     fk.stored_bytes()
                 );
+                if cfg.far == FarFieldMode::H2 {
+                    let snap = counters::snapshot();
+                    println!(
+                        "h2: basis_ranks={} transfer_bytes={} coupling_blocks={} \
+                         f32_bytes={} bf16_bytes={}",
+                        snap.get("hmat.h2.basis_ranks"),
+                        snap.get("hmat.h2.transfer_bytes"),
+                        snap.get("hmat.h2.coupling_blocks"),
+                        snap.get("hmat.h2.f32_bytes"),
+                        snap.get("hmat.h2.bf16_bytes")
+                    );
+                }
             }
             None => println!("full-kernel: unavailable (ordering carries no tree)"),
         }
@@ -477,10 +499,11 @@ fn cmd_spmv(argv: Vec<String>) {
     ));
     let a = obs_opts(far_opts(opts, "off")).parse_from(argv).unwrap_or_else(die);
     obs_begin(&a);
-    // validate the kernel and far-mode choices up front — before the
-    // expensive kNN build
+    // validate the kernel, far-mode, and precision choices up front —
+    // before the expensive kNN build
     let kind = kernel_kind(&a);
     let _ = far_mode(&a);
+    let _ = precision(&a);
     let wl = workload(&a.get("workload"));
     let threads = if a.get_usize("threads") == 0 {
         nni::par::pool::default_threads()
@@ -682,7 +705,9 @@ fn cmd_krr(argv: Vec<String>) {
             .opt_f64("cg-tol", 1e-6, "CG relative-residual stop")
             .opt_usize_min("cg-iters", 500, 1, "CG iteration cap")
             .opt_u64("seed", 42, "rng seed")
-            .opt_usize("threads", 0, "0 = all cores"),
+            .opt_usize("threads", 0, "0 = all cores")
+            .flag("precond", "precondition CG with the H2-skeleton Nystrom operator")
+            .flag("verify", "solve plain and preconditioned, check agreement (--far h2)"),
     ));
     let a = obs_opts(far_opts(opts, "aca")).parse_from(argv).unwrap_or_else(die);
     obs_begin(&a);
@@ -695,10 +720,16 @@ fn cmd_krr(argv: Vec<String>) {
     // Demo target: a smooth function of the leading principal coordinate
     // (the regression problem KRR is meant to smooth).
     let y = krr::synthetic_targets(&ds, a.get_u64("seed"));
+    let verify = a.get_flag("verify");
+    if verify && far != FarFieldMode::H2 {
+        die::<()>("--verify: needs --far h2 (the preconditioner rides the H2 skeletons)".into());
+    }
     let cfg = krr::KrrConfig {
         bandwidth: a.get_f64("bandwidth"),
         lambda: a.get_f64("lambda"),
         far,
+        precision: precision(&a),
+        precond: a.get_flag("precond") || verify,
         tol: a.get_f64("tol"),
         eta: a.get_f64("eta"),
         block_cap: a.get_usize("block-cap"),
@@ -712,10 +743,11 @@ fn cmd_krr(argv: Vec<String>) {
     };
     let (res, t) = timer::time_once(|| krr::run(&ds, &y, &cfg));
     println!(
-        "krr n={} d={} far={} h={:.4} lambda={}",
+        "krr n={} d={} far={} precision={} h={:.4} lambda={}",
         ds.n(),
         ds.d(),
         far.label(),
+        cfg.precision.label(),
         res.bandwidth,
         cfg.lambda
     );
@@ -725,6 +757,39 @@ fn cmd_krr(argv: Vec<String>) {
         "cg: {} iterations, rel residual {:.3e}, train rmse {:.4}  ({t:.2}s total)",
         res.iterations, res.rel_residual, res.train_rmse
     );
+    if verify {
+        // Same system through plain CG — the preconditioned solve must
+        // reach the same answer in no more iterations.
+        let plain = krr::run(
+            &ds,
+            &y,
+            &krr::KrrConfig {
+                precond: false,
+                ..cfg.clone()
+            },
+        );
+        let n2: f64 = plain.alpha.iter().map(|&v| (v as f64) * (v as f64)).sum();
+        let d2: f64 = plain
+            .alpha
+            .iter()
+            .zip(&res.alpha)
+            .map(|(&p, &q)| (p as f64 - q as f64) * (p as f64 - q as f64))
+            .sum();
+        let rel = d2.sqrt() / n2.sqrt().max(1e-12);
+        if res.iterations > plain.iterations {
+            die::<()>(format!(
+                "verify FAILED: preconditioned CG took {} iterations vs {} plain",
+                res.iterations, plain.iterations
+            ));
+        }
+        if rel > 2e-2 {
+            die::<()>(format!("verify FAILED: solutions disagree (rel {rel:.3e})"));
+        }
+        println!(
+            "verify OK: pcg {} <= cg {} iterations, solutions agree (rel {rel:.3e})",
+            res.iterations, plain.iterations
+        );
+    }
     obs_end(&a);
 }
 
@@ -924,8 +989,7 @@ fn run_kernel_updates(
         if verify {
             let fresh = UpdatableKernelEngine::build(e.value.ds.clone(), ucfg, kcfg.clone());
             let f = fresh.acquire();
-            let ok = f.value.engine.far.blocks == e.value.engine.far.blocks
-                && bits_eq(&f.value.engine.far.factors, &e.value.engine.far.factors)
+            let ok = f.value.engine.far.bits_eq(&e.value.engine.far)
                 && f.value.engine.near.csb.blocks == e.value.engine.near.csb.blocks
                 && bits_eq(&f.value.engine.near.csb.dense, &e.value.engine.near.csb.dense)
                 && bits_eq(&f.value.engine.near.csb.sp_val, &e.value.engine.near.csb.sp_val);
@@ -1004,7 +1068,7 @@ fn cmd_trace_check(argv: Vec<String>) {
     let a = Args::new("validate Chrome trace-event JSON emitted via --trace-out")
         .opt(
             "require",
-            "tree,csb,hmat,apply",
+            "tree,csb,hmat,apply,interact",
             "comma-separated span-name prefixes that must appear",
         )
         .parse_from(argv)

@@ -86,6 +86,14 @@ counters! {
     UpdateFarBlocksRefactored => "update.far_blocks_refactored",
     UpdateEpochsPublished => "update.epochs_published",
     UpdateEpochsReclaimed => "update.epochs_reclaimed",
+    UpdateH2LeavesReused => "update.h2_leaves_reused",
+    UpdateH2LeavesRefactored => "update.h2_leaves_refactored",
+    // hmat H² nested-basis far field
+    H2BasisRanks => "hmat.h2.basis_ranks",
+    H2TransferBytes => "hmat.h2.transfer_bytes",
+    H2CouplingBlocks => "hmat.h2.coupling_blocks",
+    H2F32Bytes => "hmat.h2.f32_bytes",
+    H2Bf16Bytes => "hmat.h2.bf16_bytes",
     // the tracing layer's own bookkeeping
     SpansDropped => "trace.spans_dropped",
 }

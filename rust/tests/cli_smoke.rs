@@ -180,10 +180,63 @@ fn krr_converges_and_reports_engine() {
         .unwrap();
     assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
     assert!(String::from_utf8_lossy(&out.stdout).contains("far=off"));
-    // bad far mode is a usage error
+    // bad far mode is a usage error naming the flag and the choices
     let out = nni().args(["krr", "--n", "64", "--far", "fmm"]).output().unwrap();
     assert!(!out.status.success());
-    assert!(String::from_utf8_lossy(&out.stderr).contains("off|aca"));
+    let text = String::from_utf8_lossy(&out.stderr);
+    assert!(text.contains("--far"), "{text}");
+    assert!(text.contains("off|aca|h2"), "{text}");
+}
+
+#[test]
+fn krr_h2_mode_and_precision_knobs() {
+    // --far h2 routes the far field through the nested-basis representation
+    let out = nni()
+        .args([
+            "krr", "--n", "512", "--block-cap", "64", "--far", "h2", "--tol", "1e-3",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("far=h2"), "{text}");
+    assert!(text.contains("precision=f32"), "{text}");
+    assert!(text.contains("cg:"), "{text}");
+    // bf16 factor storage is accepted and reported
+    let out = nni()
+        .args([
+            "krr", "--n", "512", "--block-cap", "64", "--far", "h2", "--precision", "bf16",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("precision=bf16"));
+    // --verify solves plain + preconditioned and checks agreement
+    let out = nni()
+        .args([
+            "krr", "--n", "512", "--block-cap", "64", "--far", "h2", "--verify",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("verify OK"));
+    // bad precision is a one-line usage error naming the flag
+    let out = nni()
+        .args(["krr", "--n", "64", "--precision", "f64"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let text = String::from_utf8_lossy(&out.stderr);
+    assert!(text.contains("--precision"), "{text}");
+    assert!(text.contains("f32|bf16"), "{text}");
+    assert!(!text.contains("panicked"), "{text}");
+    // --verify without --far h2 is a usage error, not a silent no-op
+    let out = nni()
+        .args(["krr", "--n", "64", "--far", "aca", "--verify"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--verify"));
 }
 
 #[test]

@@ -18,7 +18,7 @@ use nni::csb::kernel::KernelKind;
 use nni::csb::update::{update_par, SideDelta};
 use nni::data::dataset::Dataset;
 use nni::data::synth::SynthSpec;
-use nni::hmat::FullKernelConfig;
+use nni::hmat::{FarFieldMode, FullKernelConfig, Precision};
 use nni::interact::epoch::{UpdatableEngine, UpdatableKernelEngine, UpdateCfg};
 use nni::knn::exact::knn_graph;
 use nni::sparse::csr::Csr;
@@ -207,7 +207,7 @@ fn fuzz_kernel_engine_spmv_within_tol_across_threads() {
             let f = fresh.acquire();
             let ctx = format!("threads {t} round {round}");
             assert_arenas_eq(&f.value.engine.near.csb, &e.value.engine.near.csb, &ctx);
-            assert_eq!(f.value.engine.far.blocks, e.value.engine.far.blocks, "{ctx}: far blocks");
+            assert!(f.value.engine.far.bits_eq(&e.value.engine.far), "{ctx}: far field differs");
             let n = e.value.engine.n();
             let x: Vec<f32> = (0..n).map(|i| (i * 37 % 101) as f32 / 101.0 - 0.5).collect();
             let mut ya = vec![0.0f32; n];
@@ -219,6 +219,43 @@ fn fuzz_kernel_engine_spmv_within_tol_across_threads() {
                 assert!(
                     (a - b).abs() <= 1e-4 * scale,
                     "{ctx}: spmv row {i}: incremental {a} vs fresh {b} (scale {scale})"
+                );
+            }
+        }
+    }
+}
+
+/// H² far field through the same differential harness: replay identical
+/// seeded batch streams at thread counts {1, 2, 8} with `--far h2`
+/// semantics (nested bases + transfer/coupling factors) and require every
+/// published epoch to be **fully bit-identical** to a from-scratch
+/// `H2Field` over the post-update data — skeletons, arenas, and layout,
+/// not just application accuracy.  Covers both storage precisions.
+#[test]
+fn fuzz_h2_kernel_engine_matches_fresh_across_threads() {
+    let seed = 707u64;
+    let ds0 = SynthSpec::blobs(300, 3, 4, seed).generate();
+    for precision in [Precision::F32, Precision::Bf16] {
+        let kcfg = FullKernelConfig::new(0.8)
+            .with_far(FarFieldMode::H2)
+            .with_precision(precision);
+        for &t in &THREADS {
+            let mut c = cfg(t);
+            c.block_cap = 64;
+            let upd = UpdatableKernelEngine::build(ds0.clone(), c, kcfg.clone());
+            let mut rng = Rng::new(seed);
+            for round in 0..3 {
+                let cur = upd.acquire();
+                let b = gen_batch(&cur.value.ds, &mut rng, round);
+                drop(cur);
+                let e = upd.update(&b);
+                let fresh = UpdatableKernelEngine::build(e.value.ds.clone(), c, kcfg.clone());
+                let f = fresh.acquire();
+                let ctx = format!("precision {precision:?} threads {t} round {round}");
+                assert_arenas_eq(&f.value.engine.near.csb, &e.value.engine.near.csb, &ctx);
+                assert!(
+                    f.value.engine.far.bits_eq(&e.value.engine.far),
+                    "{ctx}: h2 far field differs from from-scratch"
                 );
             }
         }
