@@ -99,6 +99,27 @@ impl BatchPlan {
     }
 }
 
+/// Typed rejection for a query that cannot enter a slate.  The serve tier
+/// wraps this in its own reject reason; direct callers get it from
+/// [`QueryBatcher::submit`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QueryReject {
+    /// Charge-vector length differs from the engine's source count — the
+    /// slate would be shape-mismatched (and every other query in the group
+    /// would pay for the panic deep inside the engine).
+    ShapeMismatch { expected: usize, got: usize },
+}
+
+impl std::fmt::Display for QueryReject {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            QueryReject::ShapeMismatch { expected, got } => {
+                write!(f, "query length {got} != source count {expected}")
+            }
+        }
+    }
+}
+
 /// Accumulates single-RHS Gaussian queries and drains them through
 /// [`Engine::gauss_apply_multi`] in whole `batch`-sized groups, so the
 /// engine always sees multi-RHS work instead of a stream of singleton
@@ -109,6 +130,8 @@ impl BatchPlan {
 pub struct QueryBatcher {
     batch: usize,
     pending: Vec<Vec<f32>>,
+    /// Expected charge-vector length (None = unvalidated legacy mode).
+    expect: Option<usize>,
 }
 
 impl QueryBatcher {
@@ -116,15 +139,43 @@ impl QueryBatcher {
         QueryBatcher {
             batch: batch.max(1),
             pending: Vec::new(),
+            expect: None,
         }
     }
 
+    /// A batcher that validates every submission against the engine's
+    /// source count `n_cols` — the serve-path constructor (malformed
+    /// queries are rejected at the door, not deep inside a slate).
+    pub fn for_sources(batch: usize, n_cols: usize) -> QueryBatcher {
+        QueryBatcher {
+            expect: Some(n_cols),
+            ..QueryBatcher::new(batch)
+        }
+    }
+
+    /// Shape check shared by [`QueryBatcher::submit`] and the serve tier's
+    /// admission gate.
+    pub fn validate(expected: usize, q: &[f32]) -> Result<(), QueryReject> {
+        if q.len() != expected {
+            return Err(QueryReject::ShapeMismatch {
+                expected,
+                got: q.len(),
+            });
+        }
+        Ok(())
+    }
+
     /// Enqueue one charge vector (length = source count); returns its
-    /// submission slot (results come back in submission order).
-    pub fn submit(&mut self, x: Vec<f32>) -> usize {
+    /// submission slot (results come back in submission order).  A
+    /// wrong-dimension query is rejected with a typed reason instead of
+    /// poisoning the slate it would have joined.
+    pub fn submit(&mut self, x: Vec<f32>) -> Result<usize, QueryReject> {
+        if let Some(expected) = self.expect {
+            Self::validate(expected, &x)?;
+        }
         self.pending.push(x);
         counters::raise(Counter::ServeQueueDepthMax, self.pending.len() as u64);
-        self.pending.len() - 1
+        Ok(self.pending.len() - 1)
     }
 
     /// Queries waiting for a flush.
@@ -306,9 +357,9 @@ mod tests {
             .map(|_| (0..n).map(|_| rng.f32() - 0.5).collect())
             .collect();
         // batch of 4 → groups 4,4,3
-        let mut qb = QueryBatcher::new(4);
+        let mut qb = QueryBatcher::for_sources(4, n);
         for q in &queries {
-            qb.submit(q.clone());
+            qb.submit(q.clone()).expect("valid query rejected");
         }
         assert!(qb.ready());
         assert_eq!(qb.pending_len(), 11);
@@ -323,6 +374,30 @@ mod tests {
                 assert!((g - w).abs() < 1e-4 * (1.0 + w.abs()), "{g} vs {w}");
             }
         }
+    }
+
+    #[test]
+    fn submit_rejects_shape_mismatch_with_typed_reason() {
+        let mut qb = QueryBatcher::for_sources(4, 100);
+        assert_eq!(qb.submit(vec![0.0; 100]), Ok(0));
+        assert_eq!(
+            qb.submit(vec![0.0; 99]),
+            Err(QueryReject::ShapeMismatch {
+                expected: 100,
+                got: 99
+            })
+        );
+        // The rejected query never entered the slate.
+        assert_eq!(qb.pending_len(), 1);
+        // Legacy unvalidated batchers keep accepting anything.
+        let mut legacy = QueryBatcher::new(4);
+        assert_eq!(legacy.submit(vec![0.0; 7]), Ok(0));
+        let msg = QueryReject::ShapeMismatch {
+            expected: 100,
+            got: 99,
+        }
+        .to_string();
+        assert!(msg.contains("99") && msg.contains("100"), "{msg}");
     }
 
     #[test]

@@ -368,6 +368,17 @@ impl FullKernelEngine {
         self.spmm(x, y, 1);
     }
 
+    /// Far field only, accumulating: `y += K_far·x` (`x`/`y` row-major
+    /// `n x k`).  Public seam for callers that compute the near field
+    /// themselves in pieces — the serve tier's sharded workers produce
+    /// near-row partials, the coordinator merges them and applies the far
+    /// field once on the merged buffer (uniform across Off/Aca/H2, and
+    /// bit-identical to [`FullKernelEngine::spmm`] on the same inputs).
+    pub fn far_apply_acc(&self, x: &[f32], k: usize, y: &mut [f32]) {
+        self.far
+            .apply_acc(x, k, y, &self.near.pool, self.near.dispatch(), &self.far_scratch);
+    }
+
     /// Multi-query Gaussian apply over the **full** kernel — the
     /// far-field-complete counterpart of [`Engine::gauss_apply_multi`].
     /// The Gaussian weights are baked into storage at build time

@@ -29,7 +29,7 @@
 //! equality), which is what the differential fuzz harness
 //! (`rust/tests/update_fuzz.rs`) checks.
 
-use crate::csb::hier::HierCsb;
+use crate::csb::hier::{HierCsb, Span};
 use crate::csb::kernel::KernelKind;
 use crate::csb::update::{update_par, SideDelta};
 use crate::data::dataset::Dataset;
@@ -334,6 +334,142 @@ impl UpdatableKernelEngine {
         });
         self.epochs.acquire()
     }
+
+    /// Shard-scoped acquire for the serving tier: one snapshot handle plus
+    /// the contiguous target-leaf shards of **that** epoch's block
+    /// structure.  The shard map is a pure function of the snapshot (tree
+    /// top-level subtrees × CSB target leaves), so every worker handed the
+    /// same epoch sees the same ownership — and a new epoch publishes a new
+    /// map atomically with the engine it describes.
+    pub fn acquire_sharded(&self, shards: usize) -> (Arc<Epoch<KernelEpoch>>, Vec<ShardSpan>) {
+        let e = self.epochs.acquire();
+        let spans = shard_spans(&e.value.tree, &e.value.engine.near.csb.tgt_leaves, shards);
+        (e, spans)
+    }
+
+    /// Restart a crashed shard worker from the **current** snapshot: a
+    /// fresh handle plus the worker's span under the current epoch.  Stale
+    /// handles held by in-flight requests keep answering bit-stably from
+    /// their own snapshot (the epoch contract); only the restarted worker
+    /// moves forward.  Counted as `serve.shard_restarts`.
+    pub fn restart_shard(
+        &self,
+        shards: usize,
+        shard: usize,
+    ) -> (Arc<Epoch<KernelEpoch>>, ShardSpan) {
+        counters::add(Counter::ServeShardRestarts, 1);
+        let (e, spans) = self.acquire_sharded(shards);
+        let span = spans[shard.min(spans.len() - 1)].clone();
+        (e, span)
+    }
+}
+
+/// One serving shard's slice of an epoch: a contiguous run of CSB target
+/// leaves (each leaf is a node of the tree's blocking cut, so a run is one
+/// or more whole top-level subtrees) and the tree-position row range those
+/// leaves cover.  Shards partition `[0, n)`; trailing shards may be empty
+/// when there are more workers than subtrees.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardSpan {
+    pub shard: usize,
+    /// Target-leaf index range `[leaf_lo, leaf_hi)` into `csb.tgt_leaves`.
+    pub leaf_lo: usize,
+    pub leaf_hi: usize,
+    /// Tree-position row range `[row_lo, row_hi)` covered by those leaves.
+    pub row_lo: usize,
+    pub row_hi: usize,
+}
+
+impl ShardSpan {
+    pub fn rows(&self) -> usize {
+        self.row_hi - self.row_lo
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.leaf_lo == self.leaf_hi
+    }
+}
+
+/// Partition `tgt_leaves` into `shards` contiguous groups, balanced by row
+/// count and aligned to top-level subtree boundaries (the tree's depth-1
+/// cut) wherever the blocking cut permits: a worker owns whole subtrees, so
+/// locality-correlated query load stays shard-local.  A target leaf wider
+/// than a depth-1 subtree (tiny trees) forms its own atom.  Deterministic:
+/// a pure function of `(tree, tgt_leaves, shards)`.
+pub fn shard_spans(tree: &BoxTree, tgt_leaves: &[Span], shards: usize) -> Vec<ShardSpan> {
+    let shards = shards.max(1);
+    let n = tgt_leaves.last().map(|s| s.hi as usize).unwrap_or(0);
+    let subs: Vec<Span> = tree
+        .level_cut(1)
+        .iter()
+        .map(|&id| {
+            let nd = &tree.nodes[id as usize];
+            Span { lo: nd.lo, hi: nd.hi }
+        })
+        .collect();
+    // Atoms: maximal runs of consecutive target leaves inside one subtree.
+    let mut atoms: Vec<(usize, usize)> = Vec::new();
+    let (mut i, mut si) = (0usize, 0usize);
+    while i < tgt_leaves.len() {
+        while si < subs.len() && subs[si].hi <= tgt_leaves[i].lo {
+            si += 1;
+        }
+        let j0 = i;
+        if si < subs.len() && tgt_leaves[i].lo >= subs[si].lo && tgt_leaves[i].hi <= subs[si].hi {
+            while i < tgt_leaves.len() && tgt_leaves[i].hi <= subs[si].hi {
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+        atoms.push((j0, i));
+    }
+    let atom_rows =
+        |a: &(usize, usize)| (tgt_leaves[a.1 - 1].hi - tgt_leaves[a.0].lo) as usize;
+    // Contiguous greedy assignment: each shard takes atoms until it reaches
+    // its share of the remaining rows.
+    let mut out = Vec::with_capacity(shards);
+    let (mut a, mut rows_done) = (0usize, 0usize);
+    for s in 0..shards {
+        let target = (n - rows_done).div_ceil(shards - s).max(1);
+        let leaf_lo = if a < atoms.len() { atoms[a].0 } else { tgt_leaves.len() };
+        let mut leaf_hi = leaf_lo;
+        let mut rows = 0usize;
+        while a < atoms.len() {
+            let ar = atom_rows(&atoms[a]);
+            if rows > 0 && rows + ar > target {
+                break;
+            }
+            rows += ar;
+            leaf_hi = atoms[a].1;
+            a += 1;
+            if rows >= target {
+                break;
+            }
+        }
+        let row_lo = if leaf_lo < tgt_leaves.len() {
+            tgt_leaves[leaf_lo].lo as usize
+        } else {
+            n
+        };
+        let row_hi = if leaf_hi > leaf_lo { tgt_leaves[leaf_hi - 1].hi as usize } else { row_lo };
+        rows_done += rows;
+        out.push(ShardSpan {
+            shard: s,
+            leaf_lo,
+            leaf_hi,
+            row_lo,
+            row_hi,
+        });
+    }
+    // Defensive: any unassigned tail folds into the last shard (cannot
+    // happen with the targets above, but the invariant must hold).
+    if a < atoms.len() {
+        let last = out.last_mut().expect("shards >= 1");
+        last.leaf_hi = tgt_leaves.len();
+        last.row_hi = n;
+    }
+    out
 }
 
 #[cfg(test)]
@@ -469,6 +605,41 @@ mod tests {
             counters::get(Counter::UpdateEpochsReclaimed) > reclaimed,
             "dropping the last stale handle must reclaim the epoch"
         );
+    }
+
+    #[test]
+    fn shard_spans_partition_rows_at_any_width() {
+        let ds = SynthSpec::blobs(500, 3, 4, 81).generate();
+        let mut c = cfg();
+        c.block_cap = 32;
+        let upd = UpdatableKernelEngine::build(ds, c, FullKernelConfig::new(0.8));
+        for shards in [1usize, 2, 3, 8, 64] {
+            let (e, spans) = upd.acquire_sharded(shards);
+            let leaves = &e.value.engine.near.csb.tgt_leaves;
+            assert_eq!(spans.len(), shards);
+            // Contiguous cover of both the leaf list and the row range.
+            let mut leaf = 0usize;
+            let mut row = 0usize;
+            for sp in &spans {
+                assert_eq!(sp.leaf_lo, leaf);
+                assert_eq!(sp.row_lo, row);
+                assert!(sp.leaf_hi >= sp.leaf_lo);
+                leaf = sp.leaf_hi;
+                row = sp.row_hi;
+            }
+            assert_eq!(leaf, leaves.len());
+            assert_eq!(row, e.value.engine.n());
+            // The same epoch must always produce the same map.
+            let (e2, spans2) = upd.acquire_sharded(shards);
+            assert_eq!(e2.version, e.version);
+            assert_eq!(spans2, spans);
+        }
+        // Restart-from-snapshot hands back the worker's current span.
+        let restarts = counters::get(Counter::ServeShardRestarts);
+        let (e, span) = upd.restart_shard(4, 2);
+        assert_eq!(span.shard, 2);
+        assert_eq!(e.version, upd.version());
+        assert!(counters::get(Counter::ServeShardRestarts) > restarts);
     }
 
     #[test]

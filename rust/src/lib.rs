@@ -66,6 +66,7 @@ pub mod runtime;
 pub mod coordinator;
 pub mod apps;
 pub mod bench;
+pub mod serve;
 
 /// Convenient re-exports for examples and downstream users.
 pub mod prelude {

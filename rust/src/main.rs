@@ -12,6 +12,10 @@
 //! * `meanshift` — run mean shift, report modes
 //! * `krr`       — kernel ridge regression over the full-kernel operator
 //! * `update`    — stream delete/insert batches through versioned epochs
+//! * `serve`     — fault-tolerant serving daemon: sharded epoch workers
+//!   with admission control, deadlines, and deterministic fault injection
+//!   (`--load-gen` records p50/p99 + shed/retry counters to
+//!   `BENCH_serve.json`; `--smoke` is the CI drill)
 //!
 //! The `knn`, `reorder`, `tsne`, and `meanshift` commands accept
 //! `--knn exact|ann` plus the `--ann-*` tuning knobs (see
@@ -36,14 +40,17 @@ use nni::obs::{self, counters};
 use nni::order::{OrderingKind, Pipeline};
 use nni::profile::{beta, gamma};
 use nni::runtime::ArtifactRegistry;
+use nni::serve::{loadgen, FaultPlan, Payload, Query, ServeConfig, Server};
 use nni::sparse::csr::Csr;
 use nni::spmv;
 use nni::tree::boxtree::BoxTree;
 use nni::tree::update::UpdateBatch;
 use nni::util::cli::Args;
+use nni::util::json::{arr, num, obj, s};
 use nni::util::rng::Rng;
 use nni::util::timer;
 use std::path::Path;
+use std::sync::Arc;
 
 fn main() {
     let mut argv: Vec<String> = std::env::args().skip(1).collect();
@@ -63,13 +70,14 @@ fn main() {
         "meanshift" => cmd_meanshift(argv),
         "krr" => cmd_krr(argv),
         "update" => cmd_update(argv),
+        "serve" => cmd_serve(argv),
         "stats" => cmd_stats(argv),
         "trace-check" => cmd_trace_check(argv),
         "bench-check" => cmd_bench_check(argv),
         _ => {
             eprintln!(
-                "usage: nni <info|synth|knn|reorder|gamma|spmv|tsne|meanshift|krr|update|stats|\
-                 trace-check|bench-check> [options]\n\
+                "usage: nni <info|synth|knn|reorder|gamma|spmv|tsne|meanshift|krr|update|serve|\
+                 stats|trace-check|bench-check> [options]\n\
                  run `nni <cmd> --help` for per-command options"
             );
             std::process::exit(if cmd == "help" { 0 } else { 2 });
@@ -1014,6 +1022,286 @@ fn run_kernel_updates(
 /// engine + ACA far field) with tracing on, then print the human
 /// observability report.  `--trace-out`/`--metrics-out` also work here, so
 /// this doubles as the quickest way to get a Perfetto-loadable trace.
+/// `nni serve`: the fault-tolerant serving tier — one engine built once,
+/// queries answered from sharded epoch workers behind admission control
+/// and per-request deadlines.  `--load-gen` drives the daemon with the
+/// seeded generator (optionally against an `--inject` fault script) and
+/// records p50/p99 latency plus the shed/retry counters to
+/// `BENCH_serve.json`; without it, a line protocol on stdin serves
+/// interactive queries until EOF.
+fn cmd_serve(argv: Vec<String>) {
+    let opts = kernel_opts(build_opts(
+        Args::new("serve kNN/potential/KRR queries from sharded epoch workers")
+            .opt_usize_min("n", 4096, 64, "points when synthesizing blobs")
+            .opt_usize_min("blobs", 5, 1, "planted clusters")
+            .opt_usize_min("d", 8, 1, "dimension")
+            .opt_usize_min("leaf-cap", 16, 1, "tree leaf capacity")
+            .opt_usize_min("block-cap", 64, 1, "CSB/tree-cut block capacity")
+            .opt_u64("seed", 42, "rng seed (data, load stream, fault script)")
+            .opt_usize("threads", 0, "0 = all cores")
+            .opt_usize_min("shards", 4, 1, "shard workers (top-level subtree owners)")
+            .opt_usize_min("queue-cap", 256, 1, "admission queue bound (beyond it = shed)")
+            .opt_usize_min("batch", 8, 1, "max queries per dispatch slate")
+            .opt_u64("budget-us", 50_000, "default per-request deadline budget, us")
+            .opt_usize("max-retries", 2, "retries per shard task before the scalar fallback")
+            .opt_u64("retry-base-us", 100, "exponential backoff base (retry a waits base<<a us)")
+            .opt_usize_min("poison-after", 1, 1, "contained panics per epoch that poison a shard")
+            .opt(
+                "inject",
+                "",
+                "fault script: panic:S:SEQ | slow:S:US:FROM[:N] | malformed:AT | \
+                 oversized:AT | update:AT:DEL:INS (comma-separated)",
+            )
+            .flag("load-gen", "drive with the seeded load generator and write the bench record")
+            .opt_usize_min("requests", 64, 1, "load-gen requests per point")
+            .opt_usize("knn-every", 4, "every i-th load-gen request is a kNN lookup (0 = none)")
+            .flag(
+                "smoke",
+                "CI drill: small run, injected panic + slow shard by default, virtual time, \
+                 exit nonzero on any lost request or unconsumed panic script",
+            )
+            .flag("virtual-time", "charge injected latency/backoff virtually (deterministic deadlines)")
+            .opt("out", "BENCH_serve.json", "bench record path (load-gen mode)"),
+    ));
+    let a = obs_opts(far_opts(opts, "aca")).parse_from(argv).unwrap_or_else(die);
+    obs_begin(&a);
+    let smoke = a.get_flag("smoke");
+    let n = if smoke { a.get_usize("n").min(1024) } else { a.get_usize("n") };
+    let ds = SynthSpec::blobs(n, a.get_usize("d"), a.get_usize("blobs"), a.get_u64("seed"))
+        .generate();
+    let ucfg = UpdateCfg {
+        leaf_cap: a.get_usize("leaf-cap"),
+        block_cap: a.get_usize("block-cap"),
+        build_threads: resolve_build_threads(&a),
+        threads: a.get_usize("threads"),
+        kernel: kernel_kind(&a),
+        ..UpdateCfg::default()
+    };
+    let (kcfg, h) = full_kernel_cfg(&a, &ds, a.get_usize("block-cap"))
+        .unwrap_or_else(|| die("serve needs the full-kernel operator: --far aca|h2".into()));
+    let scfg = ServeConfig {
+        shards: a.get_usize("shards"),
+        queue_cap: a.get_usize("queue-cap"),
+        batch: a.get_usize("batch"),
+        default_budget_us: a.get_u64("budget-us"),
+        max_retries: a.get_usize("max-retries") as u32,
+        retry_base_us: a.get_u64("retry-base-us"),
+        poison_after: a.get_usize("poison-after") as u32,
+        oversize_factor: 4,
+        real_time: !(a.get_flag("virtual-time") || smoke),
+    };
+    let spec = if a.get("inject").is_empty() && smoke {
+        // the CI drill: one contained worker panic + one slow shard
+        "panic:0:1, slow:1:2000:2:1".to_string()
+    } else {
+        a.get("inject")
+    };
+    let plan = FaultPlan::parse(a.get_u64("seed"), &spec)
+        .unwrap_or_else(|e| die(format!("--inject: {e}")));
+    let t_build = std::time::Instant::now();
+    let engine = Arc::new(UpdatableKernelEngine::build(ds, ucfg, kcfg));
+    println!(
+        "serve n={n} h={h:.4} shards={} queue={} batch={} budget={}us build={:.2}s faults=[{spec}]",
+        scfg.shards,
+        scfg.queue_cap,
+        scfg.batch,
+        scfg.default_budget_us,
+        t_build.elapsed().as_secs_f64(),
+    );
+    let (_e, spans) = engine.acquire_sharded(scfg.shards);
+    for sp in &spans {
+        println!(
+            "  shard {}: leaves [{}, {}) rows [{}, {})",
+            sp.shard, sp.leaf_lo, sp.leaf_hi, sp.row_lo, sp.row_hi
+        );
+    }
+    drop((_e, spans));
+    if a.get_flag("load-gen") {
+        serve_load_gen(&a, engine, scfg, plan, smoke);
+    } else {
+        serve_stdin(engine, scfg, plan);
+    }
+    obs_end(&a);
+}
+
+/// Load-generator mode of `nni serve`: one bench point per shard width,
+/// every point asserted lossless before `BENCH_serve.json` is written.
+fn serve_load_gen(
+    a: &Args,
+    engine: Arc<UpdatableKernelEngine>,
+    scfg: ServeConfig,
+    plan: FaultPlan,
+    smoke: bool,
+) {
+    use std::io::Write;
+    let requests = if smoke { a.get_usize("requests").min(32) } else { a.get_usize("requests") };
+    let lcfg = loadgen::LoadGenCfg {
+        requests,
+        knn_every: a.get_usize("knn-every"),
+        ..loadgen::LoadGenCfg::default()
+    };
+    let mut widths = vec![1, 2, scfg.shards];
+    widths.sort_unstable();
+    widths.dedup();
+    let mut points = Vec::new();
+    for &w in &widths {
+        obs::reset();
+        let server =
+            Server::start(engine.clone(), ServeConfig { shards: w, ..scfg }, plan.clone());
+        let rep = loadgen::run(&server, &plan, &lcfg);
+        let stats = server.shutdown();
+        println!(
+            "shards={w}: sent={} ok={} shed={} degraded={} lost={} p50={}us p99={}us \
+             retried={} contained={}",
+            rep.sent,
+            rep.ok,
+            rep.shed,
+            rep.degraded,
+            rep.lost,
+            rep.p50_us,
+            rep.p99_us,
+            stats.retried,
+            stats.panics_contained,
+        );
+        if rep.lost != 0 {
+            die::<()>(format!(
+                "serve: {} request(s) lost/hung at shards={w} — the serving contract is broken",
+                rep.lost
+            ));
+        }
+        if smoke && stats.panics_contained != plan.panic_count() {
+            die::<()>(format!(
+                "serve smoke: contained {} panic(s), plan scripted {}",
+                stats.panics_contained,
+                plan.panic_count()
+            ));
+        }
+        points.push(obj(vec![
+            ("shards", num(w as f64)),
+            ("requests", num(rep.sent as f64)),
+            ("ok", num(rep.ok as f64)),
+            ("shed", num(rep.shed as f64)),
+            ("degraded", num(rep.degraded as f64)),
+            ("lost", num(rep.lost as f64)),
+            ("p50_us", num(rep.p50_us as f64)),
+            ("p99_us", num(rep.p99_us as f64)),
+            ("max_us", num(rep.max_us as f64)),
+            ("retried", num(stats.retried as f64)),
+            ("panics_contained", num(stats.panics_contained as f64)),
+            ("deadline_missed", num(stats.shed_deadline as f64)),
+            ("epoch_switches", num(stats.epoch_switches as f64)),
+            ("counters", nni::bench::counters_json()),
+        ]));
+    }
+    let doc = obj(vec![
+        ("bench", s("serve")),
+        ("status", s("measured")),
+        ("seed", num(plan.seed as f64)),
+        ("requests", num(requests as f64)),
+        ("faults", num(plan.faults.len() as f64)),
+        ("testbed", s(&timer::machine_summary())),
+        (
+            "expected_shape",
+            s("zero lost at every shard width and ok+shed == sent (the serving contract); \
+               every scripted panic contained + retried; p50/p99 flat or falling with \
+               shard width on a fault-free plan"),
+        ),
+        ("points", arr(points)),
+    ]);
+    let out = nni::bench::repo_root_out(&a.get("out"));
+    let mut f = std::fs::File::create(&out)
+        .unwrap_or_else(|e| die(format!("write {}: {e}", out.display())));
+    writeln!(f, "{doc}").unwrap_or_else(|e| die(format!("write {}: {e}", out.display())));
+    println!("[saved {}]", out.display());
+}
+
+/// Daemon mode of `nni serve`: a line protocol on stdin until EOF —
+///   `knn <point> <k>` | `gauss` | `krr` | `update <ndel> <nins>` |
+///   `stats` | `quit`
+/// (`gauss`/`krr` use a seeded random charge vector of the current
+/// epoch's length; responses print epoch version, latency, and the
+/// degraded/retry flags).
+fn serve_stdin(engine: Arc<UpdatableKernelEngine>, scfg: ServeConfig, plan: FaultPlan) {
+    use std::io::BufRead;
+    let server = Server::start(engine, scfg, plan);
+    println!("ready — knn <point> <k> | gauss | krr | update <ndel> <nins> | stats | quit");
+    let stdin = std::io::stdin();
+    let mut rng = Rng::new(0x5e11e);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match stdin.lock().read_line(&mut line) {
+            Ok(0) | Err(_) => break,
+            Ok(_) => {}
+        }
+        let parts: Vec<&str> = line.split_whitespace().collect();
+        let (n, d) = server.shape();
+        let submitted = match parts.as_slice() {
+            [] => continue,
+            ["quit"] | ["exit"] => break,
+            ["stats"] => {
+                println!("{:?}", server.stats());
+                continue;
+            }
+            ["update", ndel, nins] => {
+                match (ndel.parse::<usize>(), nins.parse::<usize>()) {
+                    (Ok(ndel), Ok(nins)) => {
+                        let deletes: Vec<usize> = (0..ndel.min(n.saturating_sub(16))).collect();
+                        let inserts: Vec<f32> =
+                            (0..nins * d).map(|_| rng.f32() * 2.0 - 1.0).collect();
+                        println!("epoch -> v{}", server.update(&UpdateBatch { deletes, inserts }));
+                    }
+                    _ => println!("usage: update <ndel> <nins>"),
+                }
+                continue;
+            }
+            ["knn", p, k] => match (p.parse::<u32>(), k.parse::<usize>()) {
+                (Ok(point), Ok(k)) => server.submit(Query::Knn { point, k }),
+                _ => {
+                    println!("usage: knn <point> <k>");
+                    continue;
+                }
+            },
+            ["gauss"] | ["krr"] => {
+                let charges: Vec<f32> = (0..n).map(|_| rng.f32() - 0.5).collect();
+                if parts[0] == "gauss" {
+                    server.submit(Query::Gauss { charges })
+                } else {
+                    server.submit(Query::Krr { alpha: charges })
+                }
+            }
+            _ => {
+                println!("unknown command");
+                continue;
+            }
+        };
+        match submitted {
+            Err(reason) => println!("shed: {reason}"),
+            Ok(pending) => match pending.wait() {
+                None => println!("lost (daemon fault — this violates the serving contract)"),
+                Some(r) => match r.result {
+                    Ok(Payload::Knn(nb)) => {
+                        println!("epoch v{} {}us knn: {nb:?}", r.epoch, r.elapsed_us)
+                    }
+                    Ok(Payload::Potentials(y)) => {
+                        let sum: f64 = y.iter().map(|&v| v as f64).sum();
+                        println!(
+                            "epoch v{} {}us potentials: n={} sum={sum:.4} degraded={} retries={}",
+                            r.epoch,
+                            r.elapsed_us,
+                            y.len(),
+                            r.degraded,
+                            r.retries
+                        );
+                    }
+                    Err(reason) => println!("shed: {reason}"),
+                },
+            },
+        }
+    }
+    println!("serve done: {:?}", server.shutdown());
+}
+
 fn cmd_stats(argv: Vec<String>) {
     let opts = kernel_opts(build_opts(
         Args::new("exercise every subsystem and print the observability report")
@@ -1055,6 +1343,34 @@ fn cmd_stats(argv: Vec<String>) {
             let mut y = vec![0.0f32; n];
             fk.spmv(&x, &mut y);
         }
+    }
+    // Serving tier: a small daemon round-trip with one contained panic
+    // and one typed shed, so the serve.* counters are exercised and show
+    // up in the (non-zero-only) report below.
+    {
+        let sds = SynthSpec::blobs(512, 3, 4, a.get_u64("seed")).generate();
+        let ucfg = UpdateCfg {
+            leaf_cap: 16,
+            block_cap: 64,
+            build_threads,
+            threads,
+            kernel,
+            ..UpdateCfg::default()
+        };
+        let upd = Arc::new(UpdatableKernelEngine::build(sds, ucfg, FullKernelConfig::new(1.0)));
+        let plan = FaultPlan::parse(a.get_u64("seed"), "panic:0:1, malformed:2")
+            .expect("static fault spec");
+        let server = Server::start(
+            upd,
+            ServeConfig { shards: 2, real_time: false, ..ServeConfig::default() },
+            plan.clone(),
+        );
+        loadgen::run(
+            &server,
+            &plan,
+            &loadgen::LoadGenCfg { requests: 8, ..loadgen::LoadGenCfg::default() },
+        );
+        server.shutdown();
     }
     println!("nni stats — {} n={n} rhs={k}", wl.name());
     print!("{}", obs::export::human_report(&counters::snapshot()));

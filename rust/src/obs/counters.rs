@@ -72,6 +72,17 @@ counters! {
     ServeQueueDepthMax => "serve.queue_depth_max",
     ServeBatchSlots => "serve.batch_slots",
     ServeBatchOccupied => "serve.batch_occupied",
+    // serve daemon (admission, deadlines, fault containment)
+    ServeAdmitted => "serve.admitted",
+    ServeShed => "serve.shed",
+    ServeRetried => "serve.retried",
+    ServeDeadlineMissed => "serve.deadline_missed",
+    ServePanicsContained => "serve.panics_contained",
+    ServeShardRestarts => "serve.shard_restarts",
+    ServeDegraded => "serve.degraded",
+    ServeEpochSwitches => "serve.epoch_switches",
+    ServeShardBusyNs => "serve.shard_busy_ns",
+    ServeShardBusyNsMax => "serve.shard_busy_ns_max",
     // incremental updates (tree/csb/hmat patching + epoch lifecycle)
     UpdateBatches => "update.batches",
     UpdateInserts => "update.inserts",

@@ -2,7 +2,40 @@
 //! chunk-stealing index — dynamic load balancing without a work-stealing
 //! deque, which is all the paper's block-irregular workloads need.
 
+use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// First-panic capture for contained workers: parallel drivers record the
+/// first panic payload here and re-raise it **once, after the scope joins**
+/// — so one panicking task never tears down its sibling workers mid-write
+/// (containment), while the caller still observes the panic exactly as
+/// before (a `catch_unwind` above the pool — e.g. a serve shard task —
+/// sees one panic, and every other task's work completed).
+struct PanicSlot(Mutex<Option<Box<dyn std::any::Any + Send>>>);
+
+impl PanicSlot {
+    fn new() -> PanicSlot {
+        PanicSlot(Mutex::new(None))
+    }
+
+    /// Record `p` if it is the first panic (later ones are dropped — the
+    /// caller can only re-raise one payload).
+    fn record(&self, p: Box<dyn std::any::Any + Send>) {
+        // Recover a poisoned slot: it only guards an Option we overwrite.
+        let mut slot = self.0.lock().unwrap_or_else(|e| e.into_inner());
+        if slot.is_none() {
+            *slot = Some(p);
+        }
+    }
+
+    /// Re-raise the recorded panic, if any (call after the scope joined).
+    fn resume(self) {
+        if let Some(p) = self.0.into_inner().unwrap_or_else(|e| e.into_inner()) {
+            std::panic::resume_unwind(p);
+        }
+    }
+}
 
 /// Raw mutable pointer that may cross scoped-thread boundaries — the
 /// crate's one shared wrapper for the disjoint-write parallel pattern: a
@@ -91,10 +124,12 @@ impl ThreadPool {
         }
         let next = AtomicUsize::new(0);
         let chunk = chunk.max(1);
+        let panicked = PanicSlot::new();
         std::thread::scope(|s| {
             for w in 0..self.threads {
                 let fr = &f;
                 let nr = &next;
+                let pr = &panicked;
                 s.spawn(move || {
                     // Bind this OS thread to its worker slot so spans it
                     // records land in the right per-worker slab.
@@ -106,12 +141,19 @@ impl ThreadPool {
                         }
                         let end = (start + chunk).min(n);
                         for i in start..end {
-                            fr(w, i);
+                            // Contain per-index panics: siblings and the rest
+                            // of this worker's chunks still run to completion.
+                            if let Err(p) =
+                                std::panic::catch_unwind(AssertUnwindSafe(|| fr(w, i)))
+                            {
+                                pr.record(p);
+                            }
                         }
                     }
                 });
             }
         });
+        panicked.resume();
     }
 
     /// Parallel map over a slice into a new Vec (order preserved).
@@ -124,7 +166,10 @@ impl ThreadPool {
             let slots: Vec<std::sync::Mutex<&mut U>> =
                 out.iter_mut().map(std::sync::Mutex::new).collect();
             self.for_each_chunked(xs.len(), 8, |i| {
-                **slots[i].lock().unwrap() = f(&xs[i]);
+                **slots[i]
+                    .lock()
+                    .expect("par.pool map: result-slot mutex poisoned by a contained worker panic") =
+                    f(&xs[i]);
             });
         }
         out
@@ -144,6 +189,7 @@ where
         return;
     }
     let per = n.div_ceil(threads);
+    let panicked = PanicSlot::new();
     std::thread::scope(|s| {
         for t in 0..threads {
             let lo = t * per;
@@ -152,12 +198,16 @@ where
                 break;
             }
             let fr = &f;
+            let pr = &panicked;
             s.spawn(move || {
                 crate::obs::set_worker(t);
-                fr(lo..hi)
+                if let Err(p) = std::panic::catch_unwind(AssertUnwindSafe(|| fr(lo..hi))) {
+                    pr.record(p);
+                }
             });
         }
     });
+    panicked.resume();
 }
 
 /// Parallel iteration over mutable, disjoint chunks of a slice:
@@ -177,11 +227,13 @@ where
     let next = AtomicUsize::new(0);
     let slots: Vec<std::sync::Mutex<Option<(usize, &mut [T])>>> =
         chunks.into_iter().map(|c| std::sync::Mutex::new(Some(c))).collect();
+    let panicked = PanicSlot::new();
     std::thread::scope(|s| {
         for w in 0..threads {
             let fr = &f;
             let nr = &next;
             let sl = &slots;
+            let pr = &panicked;
             s.spawn(move || {
                 crate::obs::set_worker(w);
                 loop {
@@ -189,12 +241,24 @@ where
                     if i >= sl.len() {
                         break;
                     }
-                    let (ci, chunk) = sl[i].lock().unwrap().take().unwrap();
-                    fr(ci, chunk);
+                    let (ci, chunk) = sl[i]
+                        .lock()
+                        .expect("par.pool parallel_chunks: chunk-slot mutex poisoned")
+                        .take()
+                        .expect(
+                            "par.pool parallel_chunks: chunk claimed twice — \
+                             atomic index handed out a duplicate",
+                        );
+                    if let Err(p) =
+                        std::panic::catch_unwind(AssertUnwindSafe(|| fr(ci, chunk)))
+                    {
+                        pr.record(p);
+                    }
                 }
             });
         }
     });
+    panicked.resume();
 }
 
 #[cfg(test)]
@@ -273,5 +337,27 @@ mod tests {
     #[test]
     fn default_threads_positive() {
         assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    fn panic_is_contained_then_reraised_once() {
+        let n = 1024;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        crate::serve::faults::quiet_injected_panics();
+        let res = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            ThreadPool::new(4).for_each_chunked(n, 16, |i| {
+                if i == 500 {
+                    panic!("injected");
+                }
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+        }));
+        // The panic surfaces to the caller exactly once...
+        let payload = res.expect_err("contained panic must be re-raised");
+        assert_eq!(payload.downcast_ref::<&str>(), Some(&"injected"));
+        // ...but every other index still ran: no sibling work was lost.
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), u64::from(i != 500), "index {i}");
+        }
     }
 }

@@ -1,0 +1,119 @@
+//! Admission control: a bounded queue with explicit load shedding.
+//!
+//! The gate is a `sync_channel` of `queue_cap` slots plus
+//! a screening pass.  `try_admit` never blocks: a full queue is an
+//! immediate typed [`RejectReason::QueueFull`] — the "never block
+//! unboundedly" half of the robustness contract — and shape/size
+//! screening runs *before* the queue so malformed or oversized payloads
+//! are bounced without occupying a slot.
+
+use crate::coordinator::batcher::QueryBatcher;
+use crate::serve::wire::{Query, RejectReason, Request, Response};
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
+use std::time::Instant;
+
+/// An admitted request in flight: the wire request plus its response
+/// channel and admission timestamp (real-time latency accounting).
+pub struct Job {
+    pub req: Request,
+    pub reply: Sender<Response>,
+    pub submitted: Instant,
+}
+
+/// The bounded admission queue.
+pub struct Gate {
+    tx: SyncSender<Job>,
+    cap: usize,
+}
+
+impl Gate {
+    /// Gate + the dispatcher's receiving end.
+    pub fn new(cap: usize) -> (Gate, Receiver<Job>) {
+        let cap = cap.max(1);
+        let (tx, rx) = sync_channel(cap);
+        (Gate { tx, cap }, rx)
+    }
+
+    /// Admit without blocking; a full queue sheds with a typed reason and
+    /// hands the job back so the caller can deliver the rejection.
+    pub fn try_admit(&self, job: Job) -> Result<(), (Job, RejectReason)> {
+        match self.tx.try_send(job) {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(job)) => {
+                let cap = self.cap;
+                Err((job, RejectReason::QueueFull { depth: cap, cap }))
+            }
+            Err(TrySendError::Disconnected(job)) => Err((job, RejectReason::ShuttingDown)),
+        }
+    }
+}
+
+/// Shape/size screening against the current epoch's index space `n`.
+/// Order matters: the oversize ceiling (`oversize_factor * n`) is checked
+/// first so a hostile giant payload is rejected by length alone; the
+/// exact-shape check reuses the batcher's typed validation.
+pub fn screen(query: &Query, n: usize, oversize_factor: usize) -> Result<(), RejectReason> {
+    match query {
+        Query::Gauss { .. } | Query::Krr { .. } => {
+            let q = query.charges().expect("apply query carries charges");
+            let max = n * oversize_factor.max(1);
+            if q.len() > max {
+                return Err(RejectReason::Oversized { len: q.len(), max });
+            }
+            QueryBatcher::validate(n, q).map_err(RejectReason::Malformed)
+        }
+        Query::Knn { point, .. } => {
+            if (*point as usize) < n {
+                Ok(())
+            } else {
+                Err(RejectReason::BadPoint { point: *point, n })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::wire::Query;
+    use std::sync::mpsc::channel;
+
+    fn job(id: u64) -> Job {
+        let (reply, _rx) = channel();
+        Job {
+            req: Request { id, query: Query::Knn { point: 0, k: 1 }, budget_us: 1000 },
+            reply,
+            submitted: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn gate_sheds_when_full_without_blocking() {
+        let (gate, rx) = Gate::new(2);
+        gate.try_admit(job(0)).expect("slot 0");
+        gate.try_admit(job(1)).expect("slot 1");
+        let (_, reason) = gate.try_admit(job(2)).expect_err("queue full");
+        assert_eq!(reason, RejectReason::QueueFull { depth: 2, cap: 2 });
+        drop(rx);
+        let (_, reason) = gate.try_admit(job(3)).expect_err("disconnected");
+        assert_eq!(reason, RejectReason::ShuttingDown);
+    }
+
+    #[test]
+    fn screen_orders_oversize_before_shape() {
+        let n = 8;
+        // way over the ceiling: Oversized, not Malformed
+        let big = Query::Gauss { charges: vec![0.0; n * 5] };
+        assert!(matches!(screen(&big, n, 4), Err(RejectReason::Oversized { .. })));
+        // wrong but under the ceiling: Malformed
+        let wrong = Query::Gauss { charges: vec![0.0; n + 1] };
+        assert!(matches!(screen(&wrong, n, 4), Err(RejectReason::Malformed(_))));
+        let ok = Query::Krr { alpha: vec![0.0; n] };
+        assert!(screen(&ok, n, 4).is_ok());
+        assert!(matches!(
+            screen(&Query::Knn { point: 8, k: 2 }, n, 4),
+            Err(RejectReason::BadPoint { .. })
+        ));
+        assert!(screen(&Query::Knn { point: 7, k: 2 }, n, 4).is_ok());
+    }
+}

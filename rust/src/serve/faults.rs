@@ -1,0 +1,240 @@
+//! Deterministic, seeded fault injection for the serving tier.
+//!
+//! A [`FaultPlan`] is a replayable script of failures keyed on the
+//! dispatcher's global slate sequence number (`seq`) — every apply slate
+//! fans out to all shards, so `(shard, seq)` addresses the same task no
+//! matter how many worker threads run.  [`FaultState`] is the armed form:
+//! worker-side faults (panic, latency) are checked inside the shard loop,
+//! client-side faults (malformed/oversized query, mid-stream epoch
+//! update) are executed by the load generator / test driver at the given
+//! request index.
+//!
+//! Panic faults fire **once** (an `AtomicBool` latch), so the retry
+//! ladder observes exactly one transient failure per injected panic —
+//! which is what makes the `serve.retried`/`serve.panics_contained`
+//! counter assertions exact.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Once;
+
+/// Marker prefix of injected panic payloads — the quiet panic hook (and
+/// the pool containment test) filters on it so test logs stay readable.
+pub const INJECTED_PANIC: &str = "injected";
+
+/// One scripted failure.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// Shard `shard` panics on the slate with sequence number `seq`
+    /// (fires once; the retry succeeds).
+    PanicOnTask { shard: usize, seq: u64 },
+    /// Shard `shard` reports `delay_us` of artificial latency on every
+    /// slate with `from_seq <= seq < from_seq + count`.
+    SlowShard { shard: usize, delay_us: u64, from_seq: u64, count: u64 },
+    /// Client submits a shape-mismatched query as request `at`.
+    MalformedQuery { at: usize },
+    /// Client submits a query above the oversize ceiling as request `at`.
+    OversizedQuery { at: usize },
+    /// Client applies a delete/insert epoch update after request `at`
+    /// completes (mid-stream publish; in-flight slates keep their
+    /// snapshot).
+    EpochUpdate { at: usize, n_del: usize, n_ins: usize },
+}
+
+/// A replayable script of failures plus the seed driving the load
+/// generator's query stream.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub faults: Vec<Fault>,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan { seed, faults: Vec::new() }
+    }
+
+    pub fn with(mut self, f: Fault) -> FaultPlan {
+        self.faults.push(f);
+        self
+    }
+
+    /// Parse a comma-separated CLI spec:
+    /// `panic:SHARD:SEQ`, `slow:SHARD:DELAY_US:FROM[:COUNT]`,
+    /// `malformed:AT`, `oversized:AT`, `update:AT:NDEL:NINS`.
+    pub fn parse(seed: u64, spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::new(seed);
+        for item in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let parts: Vec<&str> = item.split(':').collect();
+            let usage = || format!("bad fault spec '{item}'");
+            let arg = |i: usize| -> Result<u64, String> {
+                parts.get(i).ok_or_else(usage)?.parse::<u64>().map_err(|_| usage())
+            };
+            let fault = match parts[0] {
+                "panic" if parts.len() == 3 => Fault::PanicOnTask {
+                    shard: arg(1)? as usize,
+                    seq: arg(2)?,
+                },
+                "slow" if parts.len() == 4 || parts.len() == 5 => Fault::SlowShard {
+                    shard: arg(1)? as usize,
+                    delay_us: arg(2)?,
+                    from_seq: arg(3)?,
+                    count: if parts.len() == 5 { arg(4)? } else { 1 },
+                },
+                "malformed" if parts.len() == 2 => {
+                    Fault::MalformedQuery { at: arg(1)? as usize }
+                }
+                "oversized" if parts.len() == 2 => {
+                    Fault::OversizedQuery { at: arg(1)? as usize }
+                }
+                "update" if parts.len() == 4 => Fault::EpochUpdate {
+                    at: arg(1)? as usize,
+                    n_del: arg(2)? as usize,
+                    n_ins: arg(3)? as usize,
+                },
+                _ => return Err(usage()),
+            };
+            plan.faults.push(fault);
+        }
+        Ok(plan)
+    }
+
+    /// Number of injected worker panics (each is contained + retried once).
+    pub fn panic_count(&self) -> u64 {
+        self.faults
+            .iter()
+            .filter(|f| matches!(f, Fault::PanicOnTask { .. }))
+            .count() as u64
+    }
+
+    /// Client-side faults at request index `at`.
+    pub fn client_faults_at(&self, at: usize) -> impl Iterator<Item = &Fault> {
+        self.faults.iter().filter(move |f| match f {
+            Fault::MalformedQuery { at: a }
+            | Fault::OversizedQuery { at: a }
+            | Fault::EpochUpdate { at: a, .. } => *a == at,
+            _ => false,
+        })
+    }
+}
+
+/// An armed [`FaultPlan`]: shared by the dispatcher and every shard
+/// worker, with a fire-once latch per panic fault.
+pub struct FaultState {
+    plan: FaultPlan,
+    fired: Vec<AtomicBool>,
+}
+
+impl FaultState {
+    pub fn arm(plan: FaultPlan) -> FaultState {
+        let fired = plan.faults.iter().map(|_| AtomicBool::new(false)).collect();
+        FaultState { plan, fired }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Panic here if the plan scripts a (not yet fired) panic for this
+    /// `(shard, seq)` task.  Called **inside** the worker's
+    /// `catch_unwind`, so the panic is contained, counted, and retried.
+    pub fn maybe_panic(&self, shard: usize, seq: u64) {
+        for (i, f) in self.plan.faults.iter().enumerate() {
+            if let Fault::PanicOnTask { shard: s, seq: q } = f {
+                if *s == shard && *q == seq && !self.fired[i].swap(true, Ordering::Relaxed) {
+                    panic!("{INJECTED_PANIC} fault: shard {shard} slate {seq}");
+                }
+            }
+        }
+    }
+
+    /// Artificial latency scripted for this `(shard, seq)` task, in µs.
+    pub fn latency_us(&self, shard: usize, seq: u64) -> u64 {
+        self.plan
+            .faults
+            .iter()
+            .map(|f| match f {
+                Fault::SlowShard { shard: s, delay_us, from_seq, count }
+                    if *s == shard && seq >= *from_seq && seq < from_seq + count =>
+                {
+                    *delay_us
+                }
+                _ => 0,
+            })
+            .sum()
+    }
+}
+
+/// Install (once, process-wide) a panic hook that suppresses injected
+/// fault panics — they are scripted, contained, and counted, so their
+/// default backtrace spam would only obscure real failures — while
+/// forwarding everything else to the previous hook.
+pub fn quiet_injected_panics() {
+    static ONCE: Once = Once::new();
+    ONCE.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let injected = info
+                .payload()
+                .downcast_ref::<String>()
+                .map(|s| s.starts_with(INJECTED_PANIC))
+                .or_else(|| {
+                    info.payload()
+                        .downcast_ref::<&str>()
+                        .map(|s| s.starts_with(INJECTED_PANIC))
+                })
+                .unwrap_or(false);
+            if !injected {
+                prev(info);
+            }
+        }));
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_every_kind() {
+        let p = FaultPlan::parse(7, "panic:0:2, slow:1:2000:3:2, malformed:4, oversized:5, update:6:8:8")
+            .expect("valid spec");
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.faults.len(), 5);
+        assert_eq!(p.faults[0], Fault::PanicOnTask { shard: 0, seq: 2 });
+        assert_eq!(
+            p.faults[1],
+            Fault::SlowShard { shard: 1, delay_us: 2000, from_seq: 3, count: 2 }
+        );
+        assert_eq!(p.panic_count(), 1);
+        assert_eq!(p.client_faults_at(4).count(), 1);
+        assert_eq!(p.client_faults_at(0).count(), 0);
+        assert!(FaultPlan::parse(0, "panic:0").is_err());
+        assert!(FaultPlan::parse(0, "explode:1:2").is_err());
+        assert_eq!(FaultPlan::parse(0, "").expect("empty ok").faults.len(), 0);
+    }
+
+    #[test]
+    fn panic_fault_fires_exactly_once() {
+        quiet_injected_panics();
+        let st = FaultState::arm(FaultPlan::new(0).with(Fault::PanicOnTask { shard: 1, seq: 3 }));
+        // wrong shard / wrong seq: no fire
+        st.maybe_panic(0, 3);
+        st.maybe_panic(1, 2);
+        let hit = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| st.maybe_panic(1, 3)));
+        assert!(hit.is_err(), "scripted panic must fire");
+        // latch: the retry of the same task succeeds
+        st.maybe_panic(1, 3);
+    }
+
+    #[test]
+    fn latency_matches_window() {
+        let st = FaultState::arm(
+            FaultPlan::new(0).with(Fault::SlowShard { shard: 2, delay_us: 500, from_seq: 1, count: 2 }),
+        );
+        assert_eq!(st.latency_us(2, 0), 0);
+        assert_eq!(st.latency_us(2, 1), 500);
+        assert_eq!(st.latency_us(2, 2), 500);
+        assert_eq!(st.latency_us(2, 3), 0);
+        assert_eq!(st.latency_us(0, 1), 0);
+    }
+}

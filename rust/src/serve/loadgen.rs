@@ -1,0 +1,193 @@
+//! Deterministic load generator: the client side of the fault harness.
+//!
+//! Drives a [`Server`] with a seeded query stream (Gauss/KRR apply
+//! slates interleaved with kNN lookups), executes the **client-side**
+//! faults of the plan at their scripted request indices (malformed query,
+//! oversized query, mid-stream epoch update), and accounts for every
+//! request: answered, shed (typed), or — the bug detector — lost/hung.
+//! `nni serve --load-gen` feeds the report into `BENCH_serve.json`
+//! (p50/p99 latency plus the shed/retry counters).
+
+use crate::serve::faults::{Fault, FaultPlan};
+use crate::serve::server::{Server, StatsSnapshot};
+use crate::serve::wire::Query;
+use crate::tree::update::UpdateBatch;
+use crate::util::rng::Rng;
+use std::time::{Duration, Instant};
+
+/// Load-generator knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct LoadGenCfg {
+    /// Requests to send (client-side faults count toward this).
+    pub requests: usize,
+    /// Every `knn_every`-th request is a kNN lookup (0 = apply-only).
+    pub knn_every: usize,
+    /// Neighbors per kNN lookup.
+    pub k: usize,
+    /// Per-request wait bound; expiry marks the request **lost** — the
+    /// one outcome the serving contract forbids.
+    pub timeout: Duration,
+}
+
+impl Default for LoadGenCfg {
+    fn default() -> Self {
+        LoadGenCfg { requests: 64, knn_every: 4, k: 8, timeout: Duration::from_secs(30) }
+    }
+}
+
+/// What happened to a request stream.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LoadReport {
+    pub sent: usize,
+    pub ok: usize,
+    /// Shed with a typed reason (admission or dispatch side).
+    pub shed: usize,
+    /// Answered, but some owning shard ran the scalar fallback.
+    pub degraded: usize,
+    /// Neither answered nor shed within the timeout — must stay 0.
+    pub lost: usize,
+    /// Wall-clock latency percentiles over answered requests, µs.
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub max_us: u64,
+    pub stats: StatsSnapshot,
+}
+
+/// Nearest-rank percentile of an ascending-sorted sample (`0` if empty).
+pub fn percentile(sorted_us: &[u64], p: f64) -> u64 {
+    if sorted_us.is_empty() {
+        return 0;
+    }
+    let rank = ((p / 100.0) * sorted_us.len() as f64).ceil() as usize;
+    sorted_us[rank.clamp(1, sorted_us.len()) - 1]
+}
+
+/// Drive `server` with `cfg.requests` seeded requests, executing the
+/// plan's client-side faults, serially (submit, then wait) — so slate
+/// sequence numbers, and with them the worker-side fault script, are
+/// deterministic regardless of shard count.
+pub fn run(server: &Server, plan: &FaultPlan, cfg: &LoadGenCfg) -> LoadReport {
+    let mut rng = Rng::new(plan.seed ^ 0x6c6f_6164);
+    let mut lat: Vec<u64> = Vec::with_capacity(cfg.requests);
+    let mut rep = LoadReport::default();
+    for i in 0..cfg.requests {
+        let (n, d) = server.shape();
+        // A scripted bad query replaces request i's normal payload.
+        let mut query = None;
+        for f in plan.client_faults_at(i) {
+            match f {
+                Fault::MalformedQuery { .. } => {
+                    query = Some(Query::Gauss { charges: vec![0.0; n + 1] });
+                }
+                Fault::OversizedQuery { .. } => {
+                    let max = n * server.config().oversize_factor.max(1);
+                    query = Some(Query::Gauss { charges: vec![0.0; max + 1] });
+                }
+                _ => {}
+            }
+        }
+        let query = query.unwrap_or_else(|| {
+            if cfg.knn_every > 0 && i % cfg.knn_every == cfg.knn_every - 1 {
+                Query::Knn { point: rng.below(n) as u32, k: cfg.k }
+            } else {
+                let charges: Vec<f32> = (0..n).map(|_| rng.f32() - 0.5).collect();
+                if i % 2 == 0 {
+                    Query::Gauss { charges }
+                } else {
+                    Query::Krr { alpha: charges }
+                }
+            }
+        });
+        rep.sent += 1;
+        let t0 = Instant::now();
+        match server.submit(query) {
+            Err(_) => rep.shed += 1, // typed admission shed — accounted
+            Ok(pending) => match pending.wait_timeout(cfg.timeout) {
+                Err(_) => rep.lost += 1,
+                Ok(resp) => {
+                    lat.push(t0.elapsed().as_micros() as u64);
+                    if resp.result.is_ok() {
+                        rep.ok += 1;
+                        if resp.degraded {
+                            rep.degraded += 1;
+                        }
+                    } else {
+                        rep.shed += 1;
+                    }
+                }
+            },
+        }
+        // Mid-stream epoch updates publish after request i completes;
+        // later requests are screened and served against the new epoch.
+        for f in plan.client_faults_at(i) {
+            if let Fault::EpochUpdate { n_del, n_ins, .. } = f {
+                let n_del = (*n_del).min(n.saturating_sub(16));
+                let deletes: Vec<usize> = (0..n_del).collect();
+                let inserts: Vec<f32> =
+                    (0..n_ins * d).map(|_| rng.f32() * 2.0 - 1.0).collect();
+                server.update(&UpdateBatch { deletes, inserts });
+            }
+        }
+    }
+    lat.sort_unstable();
+    rep.p50_us = percentile(&lat, 50.0);
+    rep.p99_us = percentile(&lat, 99.0);
+    rep.max_us = lat.last().copied().unwrap_or(0);
+    rep.stats = server.stats();
+    rep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::csb::kernel::KernelKind;
+    use crate::data::synth::SynthSpec;
+    use crate::hmat::FullKernelConfig;
+    use crate::interact::epoch::{UpdatableKernelEngine, UpdateCfg};
+    use crate::serve::wire::ServeConfig;
+    use std::sync::Arc;
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        assert_eq!(percentile(&[], 50.0), 0);
+        assert_eq!(percentile(&[7], 50.0), 7);
+        assert_eq!(percentile(&[1, 2, 3, 4], 50.0), 2);
+        assert_eq!(percentile(&[1, 2, 3, 4], 99.0), 4);
+        assert_eq!(percentile(&[1, 2, 3, 4], 100.0), 4);
+    }
+
+    #[test]
+    fn loadgen_accounts_for_every_request() {
+        let ds = SynthSpec::blobs(260, 3, 4, 31).generate();
+        let cfg = UpdateCfg {
+            leaf_cap: 8,
+            block_cap: 32,
+            build_threads: 1,
+            threads: 1,
+            kernel: KernelKind::Scalar,
+            ..UpdateCfg::default()
+        };
+        let upd = Arc::new(UpdatableKernelEngine::build(ds, cfg, FullKernelConfig::new(0.8)));
+        let plan = FaultPlan::parse(11, "malformed:2, oversized:5, update:7:4:4").expect("spec");
+        let server = Server::start(
+            upd,
+            ServeConfig { shards: 2, real_time: false, ..ServeConfig::default() },
+            plan.clone(),
+        );
+        let report = run(
+            &server,
+            &plan,
+            &LoadGenCfg { requests: 12, ..LoadGenCfg::default() },
+        );
+        assert_eq!(report.sent, 12);
+        assert_eq!(report.lost, 0, "no request may be lost or hung");
+        assert_eq!(report.shed, 2, "exactly the two scripted bad queries");
+        assert_eq!(report.ok, 10);
+        assert_eq!(report.ok + report.shed + report.lost, report.sent);
+        assert_eq!(report.stats.shed_malformed, 1);
+        assert_eq!(report.stats.shed_oversized, 1);
+        assert_eq!(report.stats.epoch_switches, 1, "mid-stream update published");
+        let stats = server.shutdown();
+        assert_eq!(stats.responded_ok, 10);
+    }
+}

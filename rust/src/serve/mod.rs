@@ -1,0 +1,37 @@
+//! Fault-tolerant serving tier: a persistent daemon over one
+//! [`UpdatableKernelEngine`](crate::interact::epoch::UpdatableKernelEngine).
+//!
+//! Topology: an admission [`Gate`](admission::Gate) (bounded queue,
+//! explicit load shedding) feeds a dispatcher that coalesces requests
+//! into slates, acquires one epoch snapshot per slate, and fans
+//! near-field work to shard workers — each owning a contiguous run of
+//! top-level subtrees.  The dispatcher merges the disjoint row partials
+//! and applies the far field once, so answers are bit-identical across
+//! shard counts and epoch-consistent under mid-stream updates.
+//!
+//! Degradation ladder (robustness contract):
+//! 1. **full** — SIMD near field on healthy shards;
+//! 2. **scalar-kernel shard** — a panicking shard is retried with
+//!    backoff, then rescued with the scalar fallback; repeated panics
+//!    poison it (fallback until the next epoch heals it), answers are
+//!    flagged `degraded`;
+//! 3. **shed** — typed rejection ([`wire::RejectReason`]) for queue
+//!    overflow, malformed/oversized queries, blown deadlines, and shards
+//!    that fail even the fallback.  The daemon never blocks unboundedly
+//!    and never panics outward.
+//!
+//! Determinism: [`faults::FaultPlan`] scripts worker panics, artificial
+//! shard latency, bad client queries, and mid-stream epoch updates
+//! against seeded sequence numbers, so every failure drill in
+//! `tests/serve_faults.rs` replays exactly.
+
+pub mod admission;
+pub mod faults;
+pub mod loadgen;
+pub mod server;
+pub mod shard;
+pub mod wire;
+
+pub use faults::FaultPlan;
+pub use server::{Pending, Server, ServeStats, StatsSnapshot};
+pub use wire::{Payload, Query, RejectReason, Request, Response, ServeConfig};

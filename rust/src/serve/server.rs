@@ -1,0 +1,897 @@
+//! The serving daemon: admission gate → dispatcher → shard workers.
+//!
+//! One [`Server`] owns an [`UpdatableKernelEngine`] (built once) and a
+//! fixed set of shard worker threads.  The dispatcher coalesces admitted
+//! requests into slates, acquires **one epoch snapshot per slate**
+//! (`acquire_sharded`), fans the near-field work to every shard, merges
+//! the disjoint row partials, and applies the far field once on the
+//! merged buffer — so a slate's answers are epoch-consistent and
+//! bit-identical across shard counts, and a mid-stream epoch update only
+//! affects slates dispatched after its publish.
+//!
+//! Failure ladder per shard task (the degradation ladder):
+//! 1. contained panic → retry with exponential backoff against the
+//!    *same* slate epoch (restart-from-snapshot re-derives the worker's
+//!    map via [`UpdatableKernelEngine::restart_shard`]);
+//! 2. retries exhausted → one final attempt with the scalar-kernel
+//!    fallback; a shard with `poison_after` contained panics in the
+//!    current epoch is poisoned — all its tasks run the fallback (and
+//!    responses are flagged `degraded`) until the next epoch heals it;
+//! 3. fallback also fails → the slate's requests are shed with
+//!    [`RejectReason::ShardFailed`] — the daemon itself never dies.
+//!
+//! Deadlines: each request carries a µs budget.  Injected shard latency
+//! and retry backoff are charged against it (virtually unless
+//! `real_time`), budgets propagate into the fan-out (a shard skips work
+//! no request can still use), and a blown budget sheds the request with
+//! a typed reason instead of blocking the slate.
+
+use crate::interact::epoch::{Epoch, KernelEpoch, ShardSpan, UpdatableKernelEngine};
+use crate::obs::{counters, Counter};
+use crate::serve::admission::{screen, Gate, Job};
+use crate::serve::faults::{FaultPlan, FaultState};
+use crate::serve::shard::{worker_loop, ShardResult, ShardTask};
+use crate::serve::wire::{Payload, Query, RejectReason, Request, Response, ServeConfig};
+use crate::tree::update::UpdateBatch;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Per-daemon counters (atomic, exact): the instance-local mirror of the
+/// global `serve.*` observability counters, so tests can assert exact
+/// values even when other tests touch the global registry concurrently.
+#[derive(Default)]
+pub struct ServeStats {
+    pub admitted: AtomicU64,
+    pub responded_ok: AtomicU64,
+    pub shed_queue_full: AtomicU64,
+    pub shed_malformed: AtomicU64,
+    pub shed_oversized: AtomicU64,
+    pub shed_bad_point: AtomicU64,
+    pub shed_deadline: AtomicU64,
+    pub shed_shard_failed: AtomicU64,
+    pub shed_shutdown: AtomicU64,
+    pub retried: AtomicU64,
+    pub panics_contained: AtomicU64,
+    pub degraded_responses: AtomicU64,
+    pub epoch_switches: AtomicU64,
+}
+
+/// Plain-value copy of [`ServeStats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StatsSnapshot {
+    pub admitted: u64,
+    pub responded_ok: u64,
+    pub shed_queue_full: u64,
+    pub shed_malformed: u64,
+    pub shed_oversized: u64,
+    pub shed_bad_point: u64,
+    pub shed_deadline: u64,
+    pub shed_shard_failed: u64,
+    pub shed_shutdown: u64,
+    pub retried: u64,
+    pub panics_contained: u64,
+    pub degraded_responses: u64,
+    pub epoch_switches: u64,
+}
+
+impl StatsSnapshot {
+    /// Requests shed for any reason (admission + dispatch side).
+    pub fn shed_total(&self) -> u64 {
+        self.shed_queue_full
+            + self.shed_malformed
+            + self.shed_oversized
+            + self.shed_bad_point
+            + self.shed_deadline
+            + self.shed_shard_failed
+            + self.shed_shutdown
+    }
+}
+
+impl ServeStats {
+    pub fn snapshot(&self) -> StatsSnapshot {
+        let g = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        StatsSnapshot {
+            admitted: g(&self.admitted),
+            responded_ok: g(&self.responded_ok),
+            shed_queue_full: g(&self.shed_queue_full),
+            shed_malformed: g(&self.shed_malformed),
+            shed_oversized: g(&self.shed_oversized),
+            shed_bad_point: g(&self.shed_bad_point),
+            shed_deadline: g(&self.shed_deadline),
+            shed_shard_failed: g(&self.shed_shard_failed),
+            shed_shutdown: g(&self.shed_shutdown),
+            retried: g(&self.retried),
+            panics_contained: g(&self.panics_contained),
+            degraded_responses: g(&self.degraded_responses),
+            epoch_switches: g(&self.epoch_switches),
+        }
+    }
+
+    /// Record a shed with its typed reason — instance counter plus the
+    /// matching global `serve.*` counters, at the same point.
+    fn note_shed(&self, reason: &RejectReason) {
+        counters::add(Counter::ServeShed, 1);
+        let cell = match reason {
+            RejectReason::QueueFull { .. } => &self.shed_queue_full,
+            RejectReason::Malformed(_) => &self.shed_malformed,
+            RejectReason::Oversized { .. } => &self.shed_oversized,
+            RejectReason::BadPoint { .. } => &self.shed_bad_point,
+            RejectReason::DeadlineExceeded { .. } => {
+                counters::add(Counter::ServeDeadlineMissed, 1);
+                &self.shed_deadline
+            }
+            RejectReason::ShardFailed { .. } => &self.shed_shard_failed,
+            RejectReason::ShuttingDown => &self.shed_shutdown,
+        };
+        cell.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Handle to one in-flight request.
+pub struct Pending {
+    rx: Receiver<Response>,
+}
+
+impl Pending {
+    /// Block until the response arrives.  `None` only if the daemon
+    /// dropped the channel without responding — which the fault tests
+    /// treat as a lost request (it must never happen).
+    pub fn wait(self) -> Option<Response> {
+        self.rx.recv().ok()
+    }
+
+    /// Bounded wait — the "no request hangs" probe.
+    pub fn wait_timeout(self, d: Duration) -> Result<Response, RecvTimeoutError> {
+        self.rx.recv_timeout(d)
+    }
+}
+
+/// The daemon handle.  Dropping without [`Server::shutdown`] also shuts
+/// down cleanly (channel teardown), but `shutdown` returns final stats.
+pub struct Server {
+    engine: Arc<UpdatableKernelEngine>,
+    cfg: ServeConfig,
+    gate: Option<Gate>,
+    stats: Arc<ServeStats>,
+    next_id: AtomicU64,
+    dispatcher: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Build the worker topology over an already-built engine and start
+    /// serving.  `plan` arms the deterministic fault script (empty plan =
+    /// fault-free).
+    pub fn start(
+        engine: Arc<UpdatableKernelEngine>,
+        cfg: ServeConfig,
+        plan: FaultPlan,
+    ) -> Server {
+        crate::serve::faults::quiet_injected_panics();
+        let faults = Arc::new(FaultState::arm(plan));
+        let stats = Arc::new(ServeStats::default());
+        let (gate, jobs_rx) = Gate::new(cfg.queue_cap);
+        let (results_tx, results_rx) = channel();
+        let mut task_txs = Vec::with_capacity(cfg.shards.max(1));
+        let mut workers = Vec::with_capacity(cfg.shards.max(1));
+        for shard in 0..cfg.shards.max(1) {
+            let (tx, rx) = channel();
+            task_txs.push(tx);
+            let rtx = results_tx.clone();
+            let f = faults.clone();
+            let rt = cfg.real_time;
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("nni-serve-shard-{shard}"))
+                    .spawn(move || worker_loop(shard, rx, rtx, f, rt))
+                    .expect("serve: spawn shard worker"),
+            );
+        }
+        drop(results_tx); // dispatcher detects full worker loss as disconnect
+        let d = Dispatcher {
+            engine: engine.clone(),
+            cfg,
+            faults,
+            stats: stats.clone(),
+            task_txs,
+            workers,
+            results_rx,
+        };
+        let dispatcher = std::thread::Builder::new()
+            .name("nni-serve-dispatch".into())
+            .spawn(move || d.run(jobs_rx))
+            .expect("serve: spawn dispatcher");
+        Server {
+            engine,
+            cfg,
+            gate: Some(gate),
+            stats,
+            next_id: AtomicU64::new(0),
+            dispatcher: Some(dispatcher),
+        }
+    }
+
+    /// Submit with the daemon's default budget.
+    pub fn submit(&self, query: Query) -> Result<Pending, RejectReason> {
+        self.submit_with_budget(query, self.cfg.default_budget_us)
+    }
+
+    /// Admission path: screen (shape/size against the current epoch),
+    /// then the bounded queue — both non-blocking, both shed typed.
+    pub fn submit_with_budget(
+        &self,
+        query: Query,
+        budget_us: u64,
+    ) -> Result<Pending, RejectReason> {
+        let n = self.engine.acquire().value.engine.n();
+        if let Err(reason) = screen(&query, n, self.cfg.oversize_factor) {
+            self.stats.note_shed(&reason);
+            return Err(reason);
+        }
+        let gate = match &self.gate {
+            Some(g) => g,
+            None => {
+                let reason = RejectReason::ShuttingDown;
+                self.stats.note_shed(&reason);
+                return Err(reason);
+            }
+        };
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (reply, rx) = channel();
+        let job = Job {
+            req: Request { id, query, budget_us },
+            reply,
+            submitted: Instant::now(),
+        };
+        match gate.try_admit(job) {
+            Ok(()) => {
+                self.stats.admitted.fetch_add(1, Ordering::Relaxed);
+                counters::add(Counter::ServeAdmitted, 1);
+                Ok(Pending { rx })
+            }
+            Err((_job, reason)) => {
+                self.stats.note_shed(&reason);
+                Err(reason)
+            }
+        }
+    }
+
+    /// Publish a delete/insert batch as a new epoch (mid-stream updates:
+    /// in-flight slates keep their snapshot).  Returns the new version.
+    pub fn update(&self, batch: &UpdateBatch) -> u64 {
+        self.engine.update(batch).version
+    }
+
+    /// Live stats (exact, instance-local).
+    pub fn stats(&self) -> StatsSnapshot {
+        self.stats.snapshot()
+    }
+
+    /// Current epoch version.
+    pub fn epoch_version(&self) -> u64 {
+        self.engine.version()
+    }
+
+    /// `(n, d)` of the current epoch — what the load generator sizes
+    /// queries against.
+    pub fn shape(&self) -> (usize, usize) {
+        let e = self.engine.acquire();
+        (e.value.engine.n(), e.value.ds.d())
+    }
+
+    /// The daemon's configuration (by value; it is `Copy`).
+    pub fn config(&self) -> ServeConfig {
+        self.cfg
+    }
+
+    /// Drain, stop the workers, and return final stats.
+    pub fn shutdown(mut self) -> StatsSnapshot {
+        self.gate = None; // close admission; dispatcher drains then exits
+        if let Some(h) = self.dispatcher.take() {
+            h.join().expect("serve: dispatcher thread must exit cleanly");
+        }
+        self.stats.snapshot()
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.gate = None;
+        if let Some(h) = self.dispatcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Dispatcher-owned state (runs on its own thread).
+struct Dispatcher {
+    engine: Arc<UpdatableKernelEngine>,
+    cfg: ServeConfig,
+    faults: Arc<FaultState>,
+    stats: Arc<ServeStats>,
+    task_txs: Vec<Sender<ShardTask>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    results_rx: Receiver<ShardResult>,
+}
+
+/// Failure outcome of collecting one fanned-out sub-slate (`None` in the
+/// collect loop means every shard reported a usable partial).
+enum Collect {
+    DeadlineSkip { latency_us: u64 },
+    Failed { shard: usize, attempts: u32 },
+}
+
+impl Dispatcher {
+    fn run(mut self, jobs: Receiver<Job>) {
+        let shards = self.task_txs.len();
+        let mut seq = 0u64;
+        let mut last_version: Option<u64> = None;
+        // Contained panics per shard within the current epoch; reaching
+        // `poison_after` poisons the shard (scalar fallback) until the
+        // next epoch heals it.
+        let mut contained = vec![0u32; shards];
+        let mut poisoned = vec![false; shards];
+        while let Ok(first) = jobs.recv() {
+            let mut slate = vec![first];
+            while slate.len() < self.cfg.batch.max(1) {
+                match jobs.try_recv() {
+                    Ok(j) => slate.push(j),
+                    Err(_) => break,
+                }
+            }
+            let (epoch, spans) = self.engine.acquire_sharded(shards);
+            if last_version != Some(epoch.version) {
+                if last_version.is_some() {
+                    self.stats.epoch_switches.fetch_add(1, Ordering::Relaxed);
+                    counters::add(Counter::ServeEpochSwitches, 1);
+                    // heal: a new epoch rebuilt the crashed state
+                    contained.fill(0);
+                    poisoned.fill(false);
+                }
+                last_version = Some(epoch.version);
+            }
+            self.process_slate(seq, slate, &epoch, &spans, &mut contained, &mut poisoned);
+            seq += 1;
+        }
+        for tx in &self.task_txs {
+            let _ = tx.send(ShardTask::Stop);
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    fn respond(&self, job: &Job, epoch: u64, result: Result<Payload, RejectReason>, degraded: bool, retries: u32, elapsed_us: u64) {
+        if let Err(reason) = &result {
+            self.stats.note_shed(reason);
+        } else {
+            self.stats.responded_ok.fetch_add(1, Ordering::Relaxed);
+            if degraded {
+                self.stats.degraded_responses.fetch_add(1, Ordering::Relaxed);
+                counters::add(Counter::ServeDegraded, 1);
+            }
+        }
+        // A dropped receiver just means the client stopped listening —
+        // the response was still produced, nothing is lost server-side.
+        let _ = job.reply.send(Response {
+            id: job.req.id,
+            epoch,
+            result,
+            degraded,
+            retries,
+            elapsed_us,
+        });
+    }
+
+    /// Handle one contained panic inside a collect loop: count, maybe
+    /// poison, and either re-dispatch (retry → fallback) or give up.
+    /// Returns the follow-up task to send, or `None` when the ladder is
+    /// exhausted.
+    #[allow(clippy::too_many_arguments)]
+    fn retry_ladder(
+        &self,
+        shard: usize,
+        attempt: u32,
+        contained: &mut [u32],
+        poisoned: &mut [bool],
+        charge: &mut u64,
+        rebuild: impl Fn(u32, bool) -> ShardTask,
+    ) -> Option<ShardTask> {
+        self.stats.panics_contained.fetch_add(1, Ordering::Relaxed);
+        counters::add(Counter::ServePanicsContained, 1);
+        contained[shard] += 1;
+        if contained[shard] >= self.cfg.poison_after && !poisoned[shard] {
+            poisoned[shard] = true;
+        }
+        // max_retries plain attempts, then one scalar-fallback rescue
+        if attempt > self.cfg.max_retries {
+            return None;
+        }
+        let backoff = self.cfg.retry_base_us << attempt.min(16);
+        *charge += backoff;
+        if self.cfg.real_time {
+            std::thread::sleep(Duration::from_micros(backoff));
+        }
+        self.stats.retried.fetch_add(1, Ordering::Relaxed);
+        counters::add(Counter::ServeRetried, 1);
+        // Restart-from-snapshot: re-derive the worker's map under the
+        // *current* epoch (counts `serve.shard_restarts`).  The retry
+        // task itself keeps the slate's epoch handle — the slate must
+        // stay epoch-consistent for bit-identical merges; the restarted
+        // state serves the *next* slate.
+        let _ = self.engine.restart_shard(self.task_txs.len(), shard);
+        let fallback = attempt >= self.cfg.max_retries || poisoned[shard];
+        Some(rebuild(attempt + 1, fallback))
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn process_slate(
+        &self,
+        seq: u64,
+        slate: Vec<Job>,
+        epoch: &Arc<Epoch<KernelEpoch>>,
+        spans: &[ShardSpan],
+        contained: &mut [u32],
+        poisoned: &mut [bool],
+    ) {
+        let n = epoch.value.engine.n();
+        let version = epoch.version;
+        // Re-screen against the slate's epoch: an update published after
+        // admission can change n, and a stale-shaped query must shed
+        // typed instead of panicking deep in the engine.
+        let mut apply_jobs: Vec<Job> = Vec::new();
+        let mut knn_jobs: Vec<Job> = Vec::new();
+        for job in slate {
+            match screen(&job.req.query, n, self.cfg.oversize_factor) {
+                Err(reason) => self.respond(&job, version, Err(reason), false, 0, 0),
+                Ok(()) => match &job.req.query {
+                    Query::Knn { .. } => knn_jobs.push(job),
+                    _ => apply_jobs.push(job),
+                },
+            }
+        }
+
+        if !apply_jobs.is_empty() {
+            self.apply_slate(seq, &apply_jobs, epoch, spans, contained, poisoned);
+        }
+        for (j, job) in knn_jobs.iter().enumerate() {
+            self.knn_one(seq, j, job, epoch, spans, contained, poisoned);
+        }
+    }
+
+    /// Multi-RHS apply sub-slate: fan the near field to every shard,
+    /// merge, far-field once, de-interleave per request.
+    #[allow(clippy::too_many_arguments)]
+    fn apply_slate(
+        &self,
+        seq: u64,
+        jobs: &[Job],
+        epoch: &Arc<Epoch<KernelEpoch>>,
+        spans: &[ShardSpan],
+        contained: &mut [u32],
+        poisoned: &mut [bool],
+    ) {
+        let eng = &epoch.value.engine;
+        let n = eng.n();
+        let k = jobs.len();
+        let version = epoch.version;
+        // Tree-ordered, interleaved RHS: column j of row p is request
+        // j's charge for external point perm[p].
+        let mut x = vec![0.0f32; n * k];
+        for p in 0..n {
+            let o = epoch.value.tree.perm[p];
+            for (j, job) in jobs.iter().enumerate() {
+                x[p * k + j] = job.req.query.charges().expect("screened apply query")[o];
+            }
+        }
+        let x = Arc::new(x);
+        let slate_budget = jobs.iter().map(|j| j.req.budget_us).max().unwrap_or(0);
+        for (s, tx) in self.task_txs.iter().enumerate() {
+            let task = ShardTask::Apply {
+                seq,
+                epoch: epoch.clone(),
+                span: spans[s].clone(),
+                x: x.clone(),
+                k,
+                budget_us: slate_budget,
+                attempt: 0,
+                fallback: poisoned[s],
+            };
+            tx.send(task).expect("serve: shard task channel closed mid-slate");
+        }
+        let mut merged = vec![0.0f32; n * k];
+        let mut outstanding = self.task_txs.len();
+        let mut charge = vec![0u64; self.task_txs.len()];
+        let mut retries = 0u32;
+        let mut degraded = false;
+        let mut outcome: Option<Collect> = None;
+        while outstanding > 0 {
+            let msg = self
+                .results_rx
+                .recv()
+                .expect("serve: results channel closed with tasks outstanding");
+            match msg {
+                ShardResult::Near { seq: s, shard, rows, charged_us, fallback } => {
+                    debug_assert_eq!(s, seq);
+                    let sp = &spans[shard];
+                    merged[sp.row_lo * k..sp.row_hi * k].copy_from_slice(&rows);
+                    charge[shard] += charged_us;
+                    degraded |= fallback;
+                    outstanding -= 1;
+                }
+                ShardResult::Panicked { shard, attempt, charged_us, .. } => {
+                    charge[shard] += charged_us;
+                    let ep = epoch.clone();
+                    let xs = x.clone();
+                    let span = spans[shard].clone();
+                    match self.retry_ladder(
+                        shard,
+                        attempt,
+                        contained,
+                        poisoned,
+                        &mut charge[shard],
+                        move |attempt, fallback| ShardTask::Apply {
+                            seq,
+                            epoch: ep.clone(),
+                            span: span.clone(),
+                            x: xs.clone(),
+                            k,
+                            budget_us: slate_budget,
+                            attempt,
+                            fallback,
+                        },
+                    ) {
+                        Some(task) => {
+                            retries += 1;
+                            self.task_txs[shard]
+                                .send(task)
+                                .expect("serve: shard task channel closed mid-retry");
+                        }
+                        None => {
+                            outcome = Some(Collect::Failed { shard, attempts: attempt + 1 });
+                            outstanding -= 1;
+                        }
+                    }
+                }
+                ShardResult::DeadlineSkip { latency_us, shard, .. } => {
+                    charge[shard] += latency_us;
+                    if !matches!(outcome, Some(Collect::Failed { .. })) {
+                        outcome = Some(Collect::DeadlineSkip { latency_us });
+                    }
+                    outstanding -= 1;
+                }
+                ShardResult::Knn { .. } => {
+                    unreachable!("knn results are collected by knn_one, one slate at a time")
+                }
+            }
+        }
+        match outcome {
+            Some(Collect::Failed { shard, attempts }) => {
+                for job in jobs {
+                    self.respond(
+                        job,
+                        version,
+                        Err(RejectReason::ShardFailed { shard, attempts }),
+                        false,
+                        retries,
+                        charge.iter().copied().max().unwrap_or(0),
+                    );
+                }
+            }
+            Some(Collect::DeadlineSkip { latency_us }) => {
+                // The skipping shard saw latency >= the slate's max
+                // budget, so every request here is past its deadline.
+                for job in jobs {
+                    self.respond(
+                        job,
+                        version,
+                        Err(RejectReason::DeadlineExceeded {
+                            budget_us: job.req.budget_us,
+                            elapsed_us: latency_us,
+                        }),
+                        false,
+                        retries,
+                        latency_us,
+                    );
+                }
+            }
+            _ => {
+                eng.far_apply_acc(&x, k, &mut merged);
+                let virtual_us = charge.iter().copied().max().unwrap_or(0);
+                for (j, job) in jobs.iter().enumerate() {
+                    let elapsed_us = if self.cfg.real_time {
+                        job.submitted.elapsed().as_micros() as u64
+                    } else {
+                        virtual_us
+                    };
+                    if elapsed_us > job.req.budget_us {
+                        self.respond(
+                            job,
+                            version,
+                            Err(RejectReason::DeadlineExceeded {
+                                budget_us: job.req.budget_us,
+                                elapsed_us,
+                            }),
+                            false,
+                            retries,
+                            elapsed_us,
+                        );
+                        continue;
+                    }
+                    let pos = &epoch.value.tree.pos;
+                    let mut y = vec![0.0f32; n];
+                    for (i, yi) in y.iter_mut().enumerate() {
+                        *yi = merged[pos[i] * k + j];
+                    }
+                    self.respond(
+                        job,
+                        version,
+                        Ok(Payload::Potentials(y)),
+                        degraded,
+                        retries,
+                        elapsed_us,
+                    );
+                }
+            }
+        }
+    }
+
+    /// One kNN request: routed to the single shard owning the point's
+    /// tree position, same retry/fallback/deadline ladder.
+    #[allow(clippy::too_many_arguments)]
+    fn knn_one(
+        &self,
+        seq: u64,
+        job_idx: usize,
+        job: &Job,
+        epoch: &Arc<Epoch<KernelEpoch>>,
+        spans: &[ShardSpan],
+        contained: &mut [u32],
+        poisoned: &mut [bool],
+    ) {
+        let version = epoch.version;
+        let (point, kk) = match &job.req.query {
+            Query::Knn { point, k } => (*point as usize, *k),
+            _ => unreachable!("knn_one only receives knn jobs"),
+        };
+        let pos = epoch.value.tree.pos[point];
+        let shard = match spans.iter().position(|s| s.row_lo <= pos && pos < s.row_hi) {
+            Some(s) => s,
+            None => {
+                // spans partition [0, n): unreachable, but shed typed
+                // rather than panic if the invariant ever breaks.
+                let reason = RejectReason::BadPoint { point: point as u32, n: epoch.value.engine.n() };
+                self.respond(job, version, Err(reason), false, 0, 0);
+                return;
+            }
+        };
+        let mk = |attempt: u32, fallback: bool| ShardTask::Knn {
+            seq,
+            epoch: epoch.clone(),
+            span: spans[shard].clone(),
+            job: job_idx,
+            pos,
+            k: kk,
+            budget_us: job.req.budget_us,
+            attempt,
+            fallback,
+        };
+        self.task_txs[shard]
+            .send(mk(0, poisoned[shard]))
+            .expect("serve: shard task channel closed mid-knn");
+        let mut charge_us = 0u64;
+        let mut retries = 0u32;
+        loop {
+            let msg = self
+                .results_rx
+                .recv()
+                .expect("serve: results channel closed with a knn task outstanding");
+            match msg {
+                ShardResult::Knn { neighbors, charged_us, fallback, .. } => {
+                    charge_us += charged_us;
+                    let elapsed_us = if self.cfg.real_time {
+                        job.submitted.elapsed().as_micros() as u64
+                    } else {
+                        charge_us
+                    };
+                    if elapsed_us > job.req.budget_us {
+                        self.respond(
+                            job,
+                            version,
+                            Err(RejectReason::DeadlineExceeded {
+                                budget_us: job.req.budget_us,
+                                elapsed_us,
+                            }),
+                            false,
+                            retries,
+                            elapsed_us,
+                        );
+                    } else {
+                        self.respond(
+                            job,
+                            version,
+                            Ok(Payload::Knn(neighbors)),
+                            fallback,
+                            retries,
+                            elapsed_us,
+                        );
+                    }
+                    return;
+                }
+                ShardResult::Panicked { shard: s, attempt, charged_us, .. } => {
+                    charge_us += charged_us;
+                    match self.retry_ladder(
+                        s,
+                        attempt,
+                        contained,
+                        poisoned,
+                        &mut charge_us,
+                        mk,
+                    ) {
+                        Some(task) => {
+                            retries += 1;
+                            self.task_txs[s]
+                                .send(task)
+                                .expect("serve: shard task channel closed mid-retry");
+                        }
+                        None => {
+                            self.respond(
+                                job,
+                                version,
+                                Err(RejectReason::ShardFailed { shard: s, attempts: attempt + 1 }),
+                                false,
+                                retries,
+                                charge_us,
+                            );
+                            return;
+                        }
+                    }
+                }
+                ShardResult::DeadlineSkip { latency_us, .. } => {
+                    charge_us += latency_us;
+                    self.respond(
+                        job,
+                        version,
+                        Err(RejectReason::DeadlineExceeded {
+                            budget_us: job.req.budget_us,
+                            elapsed_us: charge_us,
+                        }),
+                        false,
+                        retries,
+                        charge_us,
+                    );
+                    return;
+                }
+                ShardResult::Near { .. } => {
+                    unreachable!("apply results are fully collected before knn dispatch")
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::csb::kernel::KernelKind;
+    use crate::data::synth::SynthSpec;
+    use crate::hmat::FullKernelConfig;
+    use crate::interact::epoch::UpdateCfg;
+    use crate::serve::shard::knn_lookup;
+    use crate::tree::update::UpdateBatch;
+    use crate::util::rng::Rng;
+
+    fn test_engine(n: usize, seed: u64) -> Arc<UpdatableKernelEngine> {
+        let ds = SynthSpec::blobs(n, 3, 4, seed).generate();
+        let cfg = UpdateCfg {
+            leaf_cap: 8,
+            block_cap: 32,
+            build_threads: 1,
+            threads: 1,
+            kernel: KernelKind::Scalar,
+            ..UpdateCfg::default()
+        };
+        Arc::new(UpdatableKernelEngine::build(ds, cfg, FullKernelConfig::new(0.8)))
+    }
+
+    fn test_cfg(shards: usize) -> ServeConfig {
+        ServeConfig {
+            shards,
+            real_time: false,
+            ..ServeConfig::default()
+        }
+    }
+
+    /// Reference: what the engine itself computes for one charge vector,
+    /// mapped back to external order.
+    fn direct_apply(upd: &UpdatableKernelEngine, q: &[f32]) -> Vec<f32> {
+        let e = upd.acquire();
+        let n = e.value.engine.n();
+        let x: Vec<f32> = (0..n).map(|p| q[e.value.tree.perm[p]]).collect();
+        let mut y = vec![0.0f32; n];
+        e.value.engine.gauss_apply_multi(&x, 1, &mut y);
+        (0..n).map(|i| y[e.value.tree.pos[i]]).collect()
+    }
+
+    #[test]
+    fn serves_gauss_krr_knn_end_to_end() {
+        let upd = test_engine(300, 23);
+        let n = upd.acquire().value.engine.n();
+        let server = Server::start(upd.clone(), test_cfg(3), FaultPlan::default());
+        let mut rng = Rng::new(5);
+        let q: Vec<f32> = (0..n).map(|_| rng.f32() - 0.5).collect();
+        let want = direct_apply(&upd, &q);
+
+        let r = server
+            .submit(Query::Gauss { charges: q.clone() })
+            .expect("admitted")
+            .wait()
+            .expect("responded");
+        assert_eq!(r.epoch, 0);
+        assert!(!r.degraded);
+        assert_eq!(r.retries, 0);
+        match &r.result {
+            Ok(Payload::Potentials(y)) => {
+                assert!(y.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()));
+            }
+            other => panic!("unexpected result: {other:?}"),
+        }
+        // KRR is the same slate with alpha as charges.
+        let r2 = server
+            .submit(Query::Krr { alpha: q.clone() })
+            .expect("admitted")
+            .wait()
+            .expect("responded");
+        assert!(matches!(r2.result, Ok(Payload::Potentials(_))));
+
+        // kNN matches a direct lookup against the same epoch.
+        let (e, spans) = upd.acquire_sharded(3);
+        let pos = e.value.tree.pos[7];
+        let span = spans.iter().find(|s| s.row_lo <= pos && pos < s.row_hi).unwrap();
+        let want_knn = knn_lookup(&e.value, span, pos, 4);
+        let r3 = server
+            .submit(Query::Knn { point: 7, k: 4 })
+            .expect("admitted")
+            .wait()
+            .expect("responded");
+        assert_eq!(r3.result, Ok(Payload::Knn(want_knn)));
+
+        let stats = server.shutdown();
+        assert_eq!(stats.admitted, 3);
+        assert_eq!(stats.responded_ok, 3);
+        assert_eq!(stats.shed_total(), 0);
+        assert_eq!(stats.panics_contained, 0);
+    }
+
+    #[test]
+    fn mid_stream_update_switches_epochs() {
+        let upd = test_engine(260, 29);
+        let n0 = upd.acquire().value.engine.n();
+        let server = Server::start(upd.clone(), test_cfg(2), FaultPlan::default());
+        let q = vec![0.25f32; n0];
+        let r0 = server
+            .submit(Query::Gauss { charges: q })
+            .expect("admitted")
+            .wait()
+            .expect("responded");
+        assert_eq!(r0.epoch, 0);
+        // Delete two interior points: n changes, a stale-shaped query now
+        // sheds typed at screening.
+        let v = server.update(&UpdateBatch { deletes: vec![3, 5], inserts: vec![] });
+        assert_eq!(v, 1);
+        let stale = server.submit(Query::Gauss { charges: vec![0.25f32; n0] });
+        assert!(matches!(stale, Err(RejectReason::Malformed(_))));
+        let n1 = upd.acquire().value.engine.n();
+        let r1 = server
+            .submit(Query::Gauss { charges: vec![0.25f32; n1] })
+            .expect("admitted")
+            .wait()
+            .expect("responded");
+        assert_eq!(r1.epoch, 1);
+        let stats = server.shutdown();
+        assert_eq!(stats.epoch_switches, 1);
+        assert_eq!(stats.shed_malformed, 1);
+        assert_eq!(stats.responded_ok, 2);
+    }
+}

@@ -1,0 +1,307 @@
+//! Shard workers: each owns a contiguous run of top-level subtrees (a
+//! [`ShardSpan`] of the epoch's CSB target leaves) and computes
+//! **near-field row partials** for apply slates — per target leaf, the
+//! same `by_target` block walk the engine's own schedule performs, into a
+//! shard-local buffer.  The coordinator merges the disjoint row ranges
+//! and applies the far field once on the merged buffer, which keeps the
+//! sharded answer bit-identical regardless of shard count (each output
+//! row's accumulation chain is unchanged).
+//!
+//! Robustness: every task body runs under `catch_unwind` with the fault
+//! hooks *inside*, so a scripted (or real) panic surfaces as a
+//! [`ShardResult::Panicked`] message — the worker thread itself never
+//! dies; the dispatcher owns the retry/restart/poison ladder.
+
+use crate::csb::kernel::Dispatch;
+use crate::hmat::FullKernelEngine;
+use crate::interact::epoch::{Epoch, KernelEpoch, ShardSpan};
+use crate::obs::{counters, Counter};
+use crate::serve::faults::FaultState;
+use std::panic::AssertUnwindSafe;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// One unit of work fanned out by the dispatcher.  Tasks carry their
+/// epoch handle, so a slate stays epoch-consistent even if an update
+/// publishes mid-flight (the PR 7 bit-stability contract).
+pub enum ShardTask {
+    /// Near-field row partial of an apply slate (`k` RHS columns,
+    /// tree-ordered interleaved `x`).
+    Apply {
+        seq: u64,
+        epoch: Arc<Epoch<KernelEpoch>>,
+        span: ShardSpan,
+        x: Arc<Vec<f32>>,
+        k: usize,
+        /// Max remaining budget across the slate's requests — the
+        /// deadline propagated into the fan-out: injected latency at or
+        /// beyond it makes computing pointless for every request.
+        budget_us: u64,
+        attempt: u32,
+        /// Scalar-kernel fallback (poisoned shard or post-retry rescue).
+        fallback: bool,
+    },
+    /// kNN lookup of one tree position owned by this shard.
+    Knn {
+        seq: u64,
+        epoch: Arc<Epoch<KernelEpoch>>,
+        span: ShardSpan,
+        /// Index of the job within the slate (echoed back for matching).
+        job: usize,
+        pos: usize,
+        k: usize,
+        budget_us: u64,
+        attempt: u32,
+        fallback: bool,
+    },
+    Stop,
+}
+
+/// What a shard sends back — exactly one message per received task.
+pub enum ShardResult {
+    Near {
+        seq: u64,
+        shard: usize,
+        /// `span.rows() * k` partial rows (tree order, interleaved).
+        rows: Vec<f32>,
+        charged_us: u64,
+        fallback: bool,
+    },
+    Knn {
+        seq: u64,
+        shard: usize,
+        job: usize,
+        neighbors: Vec<(u32, f32)>,
+        charged_us: u64,
+        fallback: bool,
+    },
+    /// The task body panicked; contained, worker alive, dispatcher
+    /// decides (retry → fallback → shed).
+    Panicked { seq: u64, shard: usize, attempt: u32, charged_us: u64, knn_job: Option<usize> },
+    /// Injected latency ≥ the propagated budget: skip the compute, every
+    /// request in the slate will miss its deadline anyway.
+    DeadlineSkip { seq: u64, shard: usize, latency_us: u64, knn_job: Option<usize> },
+}
+
+/// Near-field row partial of `span` for `k` interleaved RHS columns:
+/// zeroed local buffer, then per target leaf the ascending `by_target`
+/// block walk — the same per-row accumulation chain as the engine's
+/// full near apply, so merged partials are bit-identical across shard
+/// maps.  `fallback` pins the scalar kernel (the degradation ladder's
+/// middle rung; with a scalar-dispatch engine it is bit-identical).
+pub fn near_partial(
+    eng: &FullKernelEngine,
+    span: &ShardSpan,
+    x: &[f32],
+    k: usize,
+    fallback: bool,
+) -> Vec<f32> {
+    let csb = &eng.near.csb;
+    let mut out = vec![0.0f32; span.rows() * k];
+    let d = if fallback { Dispatch::Scalar } else { eng.near.dispatch() };
+    for tl in span.leaf_lo..span.leaf_hi {
+        let sp = &csb.tgt_leaves[tl];
+        let seg =
+            &mut out[(sp.lo as usize - span.row_lo) * k..(sp.hi as usize - span.row_lo) * k];
+        for &t in &csb.by_target[tl] {
+            csb.block_matmul_seg_with(t as usize, x, seg, k, d);
+        }
+    }
+    out
+}
+
+/// k nearest neighbors of tree position `pos` from the near-field
+/// Gaussian profile: candidates are the stored nonzeros of `pos`'s row
+/// (the dual-tree near field), ranked by weight descending (Gaussian
+/// weight is monotone decreasing in distance), ties by ascending tree
+/// position; `pos` itself excluded.  Returns external ids via `perm`.
+pub fn knn_lookup(epoch: &KernelEpoch, span: &ShardSpan, pos: usize, k: usize) -> Vec<(u32, f32)> {
+    let csb = &epoch.engine.near.csb;
+    // The target leaf containing `pos` (leaves are sorted, disjoint).
+    let leaves = &csb.tgt_leaves[span.leaf_lo..span.leaf_hi];
+    let tl = match leaves.binary_search_by(|s| {
+        if (s.hi as usize) <= pos {
+            std::cmp::Ordering::Less
+        } else if (s.lo as usize) > pos {
+            std::cmp::Ordering::Greater
+        } else {
+            std::cmp::Ordering::Equal
+        }
+    }) {
+        Ok(i) => span.leaf_lo + i,
+        Err(_) => return Vec::new(),
+    };
+    let mut cand: Vec<(u32, f32)> = Vec::new();
+    for &t in &csb.by_target[tl] {
+        let b = &csb.blocks[t as usize];
+        if (b.rows.lo as usize) > pos || pos >= b.rows.hi as usize {
+            continue;
+        }
+        let local = pos - b.rows.lo as usize;
+        csb.for_each_nz(t as usize, |r, c, v| {
+            if r == local {
+                let col = b.cols.lo as usize + c;
+                if col != pos {
+                    cand.push((col as u32, v));
+                }
+            }
+        });
+    }
+    cand.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal).then(a.0.cmp(&b.0)));
+    cand.truncate(k);
+    cand.into_iter().map(|(p, w)| (epoch.tree.perm[p as usize] as u32, w)).collect()
+}
+
+/// The worker loop: one OS thread per shard, alive until [`ShardTask::Stop`].
+/// Fault hooks run inside the containment boundary; latency is charged
+/// virtually (and slept only when `real_time`).
+pub fn worker_loop(
+    shard: usize,
+    rx: Receiver<ShardTask>,
+    tx: Sender<ShardResult>,
+    faults: Arc<FaultState>,
+    real_time: bool,
+) {
+    while let Ok(task) = rx.recv() {
+        let (seq, attempt, budget_us, knn_job) = match &task {
+            ShardTask::Apply { seq, attempt, budget_us, .. } => (*seq, *attempt, *budget_us, None),
+            ShardTask::Knn { seq, attempt, budget_us, job, .. } => {
+                (*seq, *attempt, *budget_us, Some(*job))
+            }
+            ShardTask::Stop => break,
+        };
+        // Injected latency first: charged against the propagated budget
+        // before any compute.  Retries re-charge it (the slow shard is
+        // still slow), which is what the deadline tests script against.
+        let latency_us = faults.latency_us(shard, seq);
+        if real_time && latency_us > 0 {
+            std::thread::sleep(std::time::Duration::from_micros(latency_us));
+        }
+        if latency_us >= budget_us {
+            let _ = tx.send(ShardResult::DeadlineSkip { seq, shard, latency_us, knn_job });
+            continue;
+        }
+        let t0 = Instant::now();
+        let out = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            faults.maybe_panic(shard, seq);
+            match &task {
+                ShardTask::Apply { epoch, span, x, k, fallback, .. } => ShardResult::Near {
+                    seq,
+                    shard,
+                    rows: near_partial(&epoch.value.engine, span, x, *k, *fallback),
+                    charged_us: latency_us,
+                    fallback: *fallback,
+                },
+                ShardTask::Knn { epoch, span, job, pos, k, fallback, .. } => ShardResult::Knn {
+                    seq,
+                    shard,
+                    job: *job,
+                    neighbors: knn_lookup(&epoch.value, span, *pos, *k),
+                    charged_us: latency_us,
+                    fallback: *fallback,
+                },
+                ShardTask::Stop => unreachable!("handled above"),
+            }
+        }));
+        let busy = t0.elapsed().as_nanos() as u64;
+        counters::add(Counter::ServeShardBusyNs, busy);
+        counters::raise(Counter::ServeShardBusyNsMax, busy);
+        let msg = match out {
+            Ok(r) => r,
+            Err(_) => {
+                ShardResult::Panicked { seq, shard, attempt, charged_us: latency_us, knn_job }
+            }
+        };
+        if tx.send(msg).is_err() {
+            break; // dispatcher gone: shut down quietly
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+    use crate::hmat::FullKernelConfig;
+    use crate::interact::epoch::{UpdatableKernelEngine, UpdateCfg};
+    use crate::csb::kernel::KernelKind;
+
+    fn engine() -> UpdatableKernelEngine {
+        let ds = SynthSpec::blobs(300, 3, 4, 19).generate();
+        let cfg = UpdateCfg {
+            leaf_cap: 8,
+            block_cap: 32,
+            build_threads: 1,
+            threads: 1,
+            kernel: KernelKind::Scalar,
+            ..UpdateCfg::default()
+        };
+        UpdatableKernelEngine::build(ds, cfg, FullKernelConfig::new(0.8))
+    }
+
+    #[test]
+    fn sharded_near_plus_far_matches_engine_spmm() {
+        let upd = engine();
+        for shards in [1usize, 3, 7] {
+            let (e, spans) = upd.acquire_sharded(shards);
+            let eng = &e.value.engine;
+            let n = eng.n();
+            let k = 3;
+            let x: Vec<f32> = (0..n * k).map(|i| (i % 13) as f32 * 0.1 - 0.6).collect();
+            let mut merged = vec![0.0f32; n * k];
+            for sp in &spans {
+                let part = near_partial(eng, sp, &x, k, false);
+                merged[sp.row_lo * k..sp.row_hi * k].copy_from_slice(&part);
+            }
+            eng.far_apply_acc(&x, k, &mut merged);
+            let mut want = vec![0.0f32; n * k];
+            eng.gauss_apply_multi(&x, k, &mut want);
+            assert!(
+                merged.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "sharded near + coordinator far must be bit-identical (shards={shards})"
+            );
+            // The scalar fallback is bit-identical too when the engine's
+            // own dispatch is already scalar (the test engine is).
+            let sp = &spans[0];
+            let a = near_partial(eng, sp, &x, k, false);
+            let b = near_partial(eng, sp, &x, k, true);
+            assert!(a.iter().zip(&b).all(|(p, q)| p.to_bits() == q.to_bits()));
+        }
+    }
+
+    #[test]
+    fn knn_lookup_ranks_near_candidates_by_distance() {
+        let upd = engine();
+        let (e, spans) = upd.acquire_sharded(2);
+        let ep = &e.value;
+        let n = ep.engine.n();
+        for orig in [0usize, n / 2, n - 1] {
+            let pos = ep.tree.pos[orig];
+            let span = spans
+                .iter()
+                .find(|s| s.row_lo <= pos && pos < s.row_hi)
+                .expect("spans partition rows");
+            let got = knn_lookup(ep, span, pos, 5);
+            assert!(!got.is_empty(), "near field always has in-leaf neighbors");
+            assert!(got.len() <= 5);
+            // Descending weight, self excluded, ids in range.
+            for w in got.windows(2) {
+                assert!(w[0].1 >= w[1].1);
+            }
+            let dist2 = |a: usize, b: usize| -> f32 {
+                ep.ds.row(a).iter().zip(ep.ds.row(b)).map(|(x, y)| (x - y) * (x - y)).sum()
+            };
+            let mut prev = -1.0f32;
+            for &(id, _) in &got {
+                assert_ne!(id as usize, orig, "self must be excluded");
+                assert!((id as usize) < n);
+                let dd = dist2(orig, id as usize);
+                // monotone up to f32 weight rounding (equal rounded
+                // weights tie-break by id, not by distance)
+                assert!(dd >= prev - 1e-3 * prev.abs().max(1.0), "weights must rank by distance");
+                prev = prev.max(dd);
+            }
+        }
+    }
+}

@@ -1,0 +1,192 @@
+//! Wire types of the serving tier: queries, requests, responses, typed
+//! rejection reasons, and the daemon configuration.
+//!
+//! Everything a client sees lives here.  The contract the fault tests
+//! lean on: a request either gets **exactly one** [`Response`] (possibly
+//! a typed shed) or is rejected synchronously at admission — never
+//! silently dropped, never left hanging.
+
+use crate::coordinator::batcher::QueryReject;
+
+/// One query against the served operator.
+#[derive(Clone, Debug)]
+pub enum Query {
+    /// k nearest neighbors of indexed point `point` (external/insertion
+    /// id), served from the near-field Gaussian profile of the current
+    /// epoch (weights are monotone in distance, so top-k by stored weight
+    /// = nearest among the dual-tree near candidates).
+    Knn { point: u32, k: usize },
+    /// Gaussian potentials: `y = K·q` for a charge vector `q` of length
+    /// n (insertion order), via the sharded near field + coordinator far
+    /// field.
+    Gauss { charges: Vec<f32> },
+    /// KRR prediction at the indexed points: `y = K·alpha` — the same
+    /// apply slate as [`Query::Gauss`] with the solved coefficients as
+    /// charges (arXiv 1803.10274's serving mode).
+    Krr { alpha: Vec<f32> },
+}
+
+impl Query {
+    /// Charge vector of the apply-slate queries (`None` for kNN).
+    pub(crate) fn charges(&self) -> Option<&[f32]> {
+        match self {
+            Query::Gauss { charges } => Some(charges),
+            Query::Krr { alpha } => Some(alpha),
+            Query::Knn { .. } => None,
+        }
+    }
+}
+
+/// One submitted request: a query plus its latency budget.  Ids are
+/// assigned by the server at submission (monotonic per daemon).
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub query: Query,
+    /// Latency budget in µs; blowing it sheds the request with
+    /// [`RejectReason::DeadlineExceeded`] instead of blocking the slate.
+    pub budget_us: u64,
+}
+
+/// Why a request was shed instead of answered.  Every variant is a
+/// deliberate admission/deadline decision — the daemon never blocks
+/// unboundedly and never panics outward.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// Bounded admission queue is full — load shed at the door.
+    QueueFull { depth: usize, cap: usize },
+    /// Query shape does not match the served epoch (see
+    /// [`QueryReject`]).
+    Malformed(QueryReject),
+    /// Query exceeds the configured size ceiling — rejected before any
+    /// buffer is allocated for it.
+    Oversized { len: usize, max: usize },
+    /// kNN point id outside the current epoch's index space.
+    BadPoint { point: u32, n: usize },
+    /// The request's latency budget was exhausted before a result was
+    /// ready (injected shard latency and retry backoff are charged
+    /// against the budget).
+    DeadlineExceeded { budget_us: u64, elapsed_us: u64 },
+    /// A shard kept failing after every retry and the scalar fallback —
+    /// the request is shed rather than the daemon torn down.
+    ShardFailed { shard: usize, attempts: u32 },
+    /// The daemon is draining for shutdown.
+    ShuttingDown,
+}
+
+impl std::fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RejectReason::QueueFull { depth, cap } => {
+                write!(f, "admission queue full ({depth}/{cap})")
+            }
+            RejectReason::Malformed(e) => write!(f, "malformed query: {e}"),
+            RejectReason::Oversized { len, max } => {
+                write!(f, "oversized query ({len} > max {max})")
+            }
+            RejectReason::BadPoint { point, n } => {
+                write!(f, "point id {point} outside index space [0, {n})")
+            }
+            RejectReason::DeadlineExceeded { budget_us, elapsed_us } => {
+                write!(f, "deadline exceeded ({elapsed_us}us > budget {budget_us}us)")
+            }
+            RejectReason::ShardFailed { shard, attempts } => {
+                write!(f, "shard {shard} failed after {attempts} attempts")
+            }
+            RejectReason::ShuttingDown => write!(f, "daemon shutting down"),
+        }
+    }
+}
+
+/// Result payload of an answered query.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    /// `(neighbor id, kernel weight)` descending by weight (ties broken
+    /// by ascending id) — ids in external/insertion order.
+    Knn(Vec<(u32, f32)>),
+    /// Potentials/predictions in external/insertion order.
+    Potentials(Vec<f32>),
+}
+
+/// One response — exactly one per admitted request.
+#[derive(Clone, Debug)]
+pub struct Response {
+    /// Echo of the request id assigned at submission.
+    pub id: u64,
+    /// Epoch version the answer was computed against.
+    pub epoch: u64,
+    pub result: Result<Payload, RejectReason>,
+    /// True when any owning shard ran in the scalar-kernel fallback
+    /// (poisoned-shard degradation) — the answer is still complete.
+    pub degraded: bool,
+    /// Transient shard failures retried while serving this request.
+    pub retries: u32,
+    /// Latency charged against the budget (virtual when
+    /// [`ServeConfig::real_time`] is off — injected latency + backoff).
+    pub elapsed_us: u64,
+}
+
+/// Daemon configuration.  Defaults are sized for tests and the smoke
+/// load generator; `nni serve` exposes each knob.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Shard workers (each owns a contiguous run of top-level subtrees).
+    pub shards: usize,
+    /// Admission queue bound — beyond it requests are shed, never queued.
+    pub queue_cap: usize,
+    /// Max queries coalesced into one dispatch slate.
+    pub batch: usize,
+    /// Default per-request latency budget.
+    pub default_budget_us: u64,
+    /// Transient-failure retries per shard task (then scalar fallback).
+    pub max_retries: u32,
+    /// Exponential backoff base: retry `a` waits `retry_base_us << a`.
+    pub retry_base_us: u64,
+    /// Consecutive contained panics before a shard is poisoned (forced
+    /// into the scalar fallback until the next epoch heals it).
+    pub poison_after: u32,
+    /// Oversize ceiling as a multiple of the epoch's point count.
+    pub oversize_factor: usize,
+    /// Sleep injected latencies/backoffs for real (`nni serve`); tests
+    /// keep this off so deadline accounting is purely virtual and the
+    /// shed/retry counters are machine-independent.
+    pub real_time: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            shards: 4,
+            queue_cap: 256,
+            batch: 8,
+            default_budget_us: 50_000,
+            max_retries: 2,
+            retry_base_us: 100,
+            poison_after: 3,
+            oversize_factor: 4,
+            real_time: true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reject_reasons_render() {
+        let r = RejectReason::QueueFull { depth: 8, cap: 8 };
+        assert!(r.to_string().contains("queue full"));
+        let d = RejectReason::DeadlineExceeded { budget_us: 10, elapsed_us: 25 };
+        assert!(d.to_string().contains("deadline"));
+        let m = RejectReason::Malformed(QueryReject::ShapeMismatch { expected: 4, got: 3 });
+        assert!(m.to_string().contains("3"));
+    }
+
+    #[test]
+    fn charges_only_for_apply_queries() {
+        assert!(Query::Knn { point: 0, k: 3 }.charges().is_none());
+        assert_eq!(Query::Gauss { charges: vec![1.0] }.charges(), Some(&[1.0][..]));
+        assert_eq!(Query::Krr { alpha: vec![2.0] }.charges(), Some(&[2.0][..]));
+    }
+}

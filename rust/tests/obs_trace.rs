@@ -10,9 +10,88 @@ use nni::obs::{self, counters, Counter};
 fn observability_end_to_end() {
     exact_counter_semantics();
     metrics_mirror_into_registry();
+    serve_counter_family_is_registered();
+    serve_daemon_mirrors_global_counters();
     span_nesting_and_monotonic_drain();
     slab_overflow_drops_without_recording();
     pipeline_trace_covers_subsystems();
+}
+
+/// The serving tier's full counter family is registered for export —
+/// the name list is the contract `nni stats` and the flat metrics JSON
+/// surface to dashboards.
+fn serve_counter_family_is_registered() {
+    const SERVE: &[&str] = &[
+        "serve.queue_depth_max",
+        "serve.batch_slots",
+        "serve.batch_occupied",
+        "serve.admitted",
+        "serve.shed",
+        "serve.retried",
+        "serve.deadline_missed",
+        "serve.panics_contained",
+        "serve.shard_restarts",
+        "serve.degraded",
+        "serve.epoch_switches",
+        "serve.shard_busy_ns",
+        "serve.shard_busy_ns_max",
+    ];
+    for name in SERVE {
+        assert!(
+            counters::COUNTER_NAMES.contains(name),
+            "counter {name} missing from the export registry"
+        );
+    }
+}
+
+/// A daemon round-trip (one contained panic, one typed admission shed)
+/// mirrors the instance stats into the global `serve.*` counters exactly
+/// — this file runs in its own process, so the registry is clean.
+fn serve_daemon_mirrors_global_counters() {
+    use nni::csb::kernel::KernelKind;
+    use nni::data::synth::SynthSpec;
+    use nni::hmat::FullKernelConfig;
+    use nni::interact::epoch::{UpdatableKernelEngine, UpdateCfg};
+    use nni::serve::{loadgen, FaultPlan, ServeConfig, Server};
+    use std::sync::Arc;
+
+    obs::reset();
+    let ds = SynthSpec::blobs(300, 3, 4, 19).generate();
+    let cfg = UpdateCfg {
+        leaf_cap: 8,
+        block_cap: 32,
+        build_threads: 1,
+        threads: 1,
+        kernel: KernelKind::Scalar,
+        ..UpdateCfg::default()
+    };
+    let upd = Arc::new(UpdatableKernelEngine::build(ds, cfg, FullKernelConfig::new(0.8)));
+    let plan = FaultPlan::parse(7, "panic:0:0, malformed:2").expect("static fault spec");
+    let server = Server::start(
+        upd,
+        ServeConfig { shards: 2, real_time: false, ..ServeConfig::default() },
+        plan.clone(),
+    );
+    let rep = loadgen::run(
+        &server,
+        &plan,
+        &loadgen::LoadGenCfg { requests: 8, ..loadgen::LoadGenCfg::default() },
+    );
+    let stats = server.shutdown();
+    assert_eq!(rep.lost, 0, "no request lost");
+    assert_eq!(stats.panics_contained, 1);
+    assert_eq!(stats.shed_malformed, 1);
+    let snap = counters::snapshot();
+    assert_eq!(snap.get("serve.admitted"), stats.admitted);
+    assert_eq!(snap.get("serve.shed"), stats.shed_total());
+    assert_eq!(snap.get("serve.retried"), stats.retried);
+    assert_eq!(snap.get("serve.panics_contained"), stats.panics_contained);
+    assert_eq!(
+        snap.get("serve.shard_restarts"),
+        stats.panics_contained,
+        "one snapshot restart per contained panic"
+    );
+    assert!(snap.get("serve.shard_busy_ns") > 0, "workers account busy time");
 }
 
 /// Exact add/raise/level arithmetic through a snapshot.

@@ -1,0 +1,325 @@
+//! Fault-injection drills for the serving tier (DESIGN: `nni serve`).
+//!
+//! Every scenario replays a fixed seeded request stream against a fresh
+//! daemon at shard widths {1, 2, 8} and checks the three-part serving
+//! contract:
+//!
+//! 1. **no request is lost or hung** — every submitted request gets
+//!    exactly one response (or a synchronous typed admission rejection)
+//!    within the wait bound;
+//! 2. **non-shed responses are bit-identical** to the fault-free run on
+//!    the same epoch, at every shard width — faults may shed or degrade,
+//!    never silently corrupt;
+//! 3. **the shed/retried/contained counters match the fault plan
+//!    exactly** — containment is accounted, not approximate.
+//!
+//! Scenarios: fault-free baseline, contained worker panics (retry
+//! ladder), repeated panics (shard poisoning + scalar-fallback
+//! degradation), artificial shard latency against deadlines (typed
+//! deadline sheds + virtual-time accounting), malformed/oversized client
+//! queries, and a mid-stream epoch update (snapshot isolation + heal).
+//!
+//! Determinism: scalar kernel, single-threaded build, virtual time, and
+//! serial submit-then-wait clients — so the dispatcher's slate sequence
+//! numbers equal request indices and worker faults keyed on `(shard,
+//! seq)` fire identically at every width.  Worker-side faults are only
+//! scripted on apply slates (which fan out to *every* shard) so the
+//! plans stay width-independent.
+
+use nni::csb::kernel::KernelKind;
+use nni::data::synth::SynthSpec;
+use nni::hmat::FullKernelConfig;
+use nni::interact::epoch::{UpdatableKernelEngine, UpdateCfg};
+use nni::serve::server::StatsSnapshot;
+use nni::serve::wire::{Payload, Query, RejectReason, Response};
+use nni::serve::{FaultPlan, ServeConfig, Server};
+use nni::tree::update::UpdateBatch;
+use nni::util::rng::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+const WIDTHS: [usize; 3] = [1, 2, 8];
+const N: usize = 300;
+const REQUESTS: usize = 9;
+/// Generous wall-clock bound per request: expiry means a hung request,
+/// which is precisely the bug this harness exists to catch.
+const WAIT: Duration = Duration::from_secs(30);
+
+/// Fresh deterministic engine — rebuilt per drive so mid-stream epoch
+/// updates in one run can never leak into the next.
+fn engine() -> Arc<UpdatableKernelEngine> {
+    let ds = SynthSpec::blobs(N, 3, 4, 19).generate();
+    let cfg = UpdateCfg {
+        leaf_cap: 8,
+        block_cap: 32,
+        build_threads: 1,
+        threads: 1,
+        kernel: KernelKind::Scalar,
+        ..UpdateCfg::default()
+    };
+    Arc::new(UpdatableKernelEngine::build(ds, cfg, FullKernelConfig::new(0.8)))
+}
+
+fn config(shards: usize) -> ServeConfig {
+    ServeConfig { shards, real_time: false, ..ServeConfig::default() }
+}
+
+/// The fixed request stream: i%3==0 Gauss, i%3==1 KRR, i%3==2 kNN, all
+/// seeded per index so every drive submits byte-identical queries.
+fn stream(n: usize) -> Vec<Query> {
+    let mut rng = Rng::new(0xfa17);
+    (0..REQUESTS)
+        .map(|i| match i % 3 {
+            0 => Query::Gauss { charges: (0..n).map(|_| rng.f32() - 0.5).collect() },
+            1 => Query::Krr { alpha: (0..n).map(|_| rng.f32() - 0.5).collect() },
+            _ => Query::Knn { point: rng.below(n) as u32, k: 5 },
+        })
+        .collect()
+}
+
+struct Outcome {
+    /// One slot per request: the response, or the synchronous admission
+    /// rejection.  `panic!` on a lost/hung request — contract part 1.
+    responses: Vec<Result<Response, RejectReason>>,
+    stats: StatsSnapshot,
+}
+
+/// Serial submit-then-wait drive: slate seq == request index, so the
+/// plan's `(shard, seq)` worker faults address the same task at every
+/// width.  Client-side faults (malformed/oversized/update) are executed
+/// here, at their scripted request indices.
+fn drive(shards: usize, plan: &FaultPlan, cfg: ServeConfig) -> Outcome {
+    let upd = engine();
+    let queries = stream(upd.acquire().value.engine.n());
+    let server = Server::start(upd, ServeConfig { shards, ..cfg }, plan.clone());
+    let mut responses = Vec::with_capacity(queries.len());
+    for (i, q) in queries.iter().enumerate() {
+        let mut q = q.clone();
+        for f in plan.client_faults_at(i) {
+            use nni::serve::faults::Fault;
+            let (n, _) = server.shape();
+            match f {
+                Fault::MalformedQuery { .. } => q = Query::Gauss { charges: vec![0.0; n + 1] },
+                Fault::OversizedQuery { .. } => {
+                    q = Query::Gauss { charges: vec![0.0; n * server.config().oversize_factor + 1] }
+                }
+                _ => {}
+            }
+        }
+        let out = match server.submit(q) {
+            Err(reason) => Err(reason),
+            Ok(pending) => match pending.wait_timeout(WAIT) {
+                Ok(resp) => Ok(resp),
+                Err(_) => panic!("request {i} lost/hung at shards={shards} — contract broken"),
+            },
+        };
+        responses.push(out);
+        for f in plan.client_faults_at(i) {
+            use nni::serve::faults::Fault;
+            if let Fault::EpochUpdate { n_del, n_ins, .. } = f {
+                let (n, d) = server.shape();
+                let mut rng = Rng::new(plan.seed ^ i as u64);
+                let deletes: Vec<usize> = (0..(*n_del).min(n / 4)).collect();
+                let inserts: Vec<f32> =
+                    (0..n_ins * d).map(|_| rng.f32() * 2.0 - 1.0).collect();
+                server.update(&UpdateBatch { deletes, inserts });
+            }
+        }
+    }
+    let stats = server.shutdown();
+    Outcome { responses, stats }
+}
+
+/// Bit-exact equality of two answered payloads.
+fn payload_bits_eq(a: &Payload, b: &Payload) -> bool {
+    match (a, b) {
+        (Payload::Potentials(x), Payload::Potentials(y)) => {
+            x.len() == y.len() && x.iter().zip(y).all(|(p, q)| p.to_bits() == q.to_bits())
+        }
+        (Payload::Knn(x), Payload::Knn(y)) => {
+            x.len() == y.len()
+                && x.iter().zip(y).all(|(p, q)| p.0 == q.0 && p.1.to_bits() == q.1.to_bits())
+        }
+        _ => false,
+    }
+}
+
+/// Contract part 2: every non-shed response of `got` must be bit-identical
+/// to the baseline's answer for the same request on the same epoch.
+fn assert_bit_identical(got: &Outcome, baseline: &Outcome, label: &str) {
+    for (i, (g, b)) in got.responses.iter().zip(&baseline.responses).enumerate() {
+        let (Ok(g), Ok(b)) = (g, b) else { continue };
+        let (Ok(gp), Ok(bp)) = (&g.result, &b.result) else { continue };
+        if g.epoch != b.epoch {
+            continue; // different epochs answer different operators
+        }
+        assert!(
+            payload_bits_eq(gp, bp),
+            "{label}: request {i} diverged from the fault-free baseline"
+        );
+    }
+}
+
+#[test]
+fn fault_free_baseline_is_width_invariant() {
+    let plan = FaultPlan::new(7);
+    let base = drive(1, &plan, config(1));
+    assert_eq!(base.stats.admitted, REQUESTS as u64);
+    assert_eq!(base.stats.responded_ok, REQUESTS as u64);
+    assert_eq!(base.stats.shed_total(), 0);
+    assert_eq!(base.stats.retried, 0);
+    assert_eq!(base.stats.panics_contained, 0);
+    for w in WIDTHS {
+        let got = drive(w, &plan, config(w));
+        assert_eq!(got.stats.responded_ok, REQUESTS as u64, "width {w}");
+        assert_bit_identical(&got, &base, &format!("baseline width {w}"));
+        for (i, r) in got.responses.iter().enumerate() {
+            let r = r.as_ref().expect("admitted");
+            assert!(r.result.is_ok(), "request {i} shed on a fault-free run");
+            assert!(!r.degraded);
+            assert_eq!(r.retries, 0);
+        }
+    }
+}
+
+#[test]
+fn contained_panics_are_retried_and_invisible() {
+    // Requests 0 and 3 are Gauss applies: the slate fans to every shard,
+    // so shard 0's scripted panics fire at every width.
+    let plan = FaultPlan::parse(7, "panic:0:0, panic:0:3").expect("spec");
+    let base = drive(1, &FaultPlan::new(7), config(1));
+    for w in WIDTHS {
+        let got = drive(w, &plan, config(w));
+        assert_eq!(got.stats.panics_contained, 2, "width {w}: exactly the scripted panics");
+        assert_eq!(got.stats.retried, 2, "width {w}: one retry per contained panic");
+        assert_eq!(got.stats.shed_total(), 0, "width {w}: retries succeed, nothing shed");
+        assert_eq!(got.stats.responded_ok, REQUESTS as u64, "width {w}");
+        assert_bit_identical(&got, &base, &format!("panic width {w}"));
+        // The two panicked requests report their retry; the rest don't.
+        for (i, r) in got.responses.iter().enumerate() {
+            let r = r.as_ref().expect("admitted");
+            let want = u32::from(i == 0 || i == 3);
+            assert_eq!(r.retries, want, "width {w} request {i}");
+        }
+    }
+}
+
+#[test]
+fn repeated_panics_poison_the_shard_into_scalar_fallback() {
+    let plan = FaultPlan::parse(7, "panic:0:0, panic:0:3").expect("spec");
+    let mut cfg = config(1);
+    cfg.poison_after = 2; // second contained panic poisons shard 0
+    for w in WIDTHS {
+        let base = drive(w, &FaultPlan::new(7), config(w));
+        let got = drive(w, &plan, ServeConfig { shards: w, ..cfg });
+        assert_eq!(got.stats.panics_contained, 2, "width {w}");
+        assert_eq!(got.stats.shed_total(), 0, "width {w}: degraded, not shed");
+        assert_eq!(got.stats.responded_ok, REQUESTS as u64, "width {w}");
+        // Poisoning forces the scalar fallback — with a scalar-dispatch
+        // engine the answers stay bit-identical, only the flag changes.
+        assert_bit_identical(&got, &base, &format!("poison width {w}"));
+        // Request 3's rescue attempt and every later apply touching
+        // shard 0 runs the fallback: apply slates fan to all shards, so
+        // requests 3, 4, 6, 7 (the applies from the poisoning on) must
+        // be flagged degraded.
+        for i in [3usize, 4, 6, 7] {
+            let r = got.responses[i].as_ref().expect("admitted");
+            assert!(r.degraded, "width {w} request {i}: poisoned shard must flag degraded");
+        }
+        assert!(got.stats.degraded_responses >= 4, "width {w}");
+    }
+}
+
+#[test]
+fn slow_shard_sheds_on_deadline_with_typed_reason() {
+    // Slate 1 (a KRR apply): 60ms of injected latency against the 50ms
+    // default budget — the worker skips the compute and every request in
+    // the slate sheds typed.  Slate 4 (also an apply): 1ms of latency,
+    // under budget — answered, with the latency charged to elapsed_us.
+    let plan = FaultPlan::parse(7, "slow:0:60000:1:1, slow:0:1000:4:1").expect("spec");
+    let base = drive(1, &FaultPlan::new(7), config(1));
+    for w in WIDTHS {
+        let got = drive(w, &plan, config(w));
+        assert_eq!(got.stats.shed_deadline, 1, "width {w}: exactly the over-budget slate");
+        assert_eq!(got.stats.shed_total(), 1, "width {w}");
+        assert_eq!(got.stats.responded_ok, REQUESTS as u64 - 1, "width {w}");
+        assert_eq!(got.stats.retried, 0, "width {w}");
+        assert_eq!(got.stats.panics_contained, 0, "width {w}");
+        assert_bit_identical(&got, &base, &format!("slow width {w}"));
+        let shed = got.responses[1].as_ref().expect("admitted");
+        match &shed.result {
+            Err(RejectReason::DeadlineExceeded { budget_us, elapsed_us }) => {
+                assert_eq!(*budget_us, 50_000);
+                assert_eq!(*elapsed_us, 60_000, "virtual time charges the injected latency");
+            }
+            other => panic!("width {w}: expected a typed deadline shed, got {other:?}"),
+        }
+        let slowed = got.responses[4].as_ref().expect("admitted");
+        assert!(slowed.result.is_ok());
+        assert_eq!(slowed.elapsed_us, 1_000, "width {w}: under-budget latency is charged");
+    }
+}
+
+#[test]
+fn malformed_and_oversized_queries_shed_at_admission() {
+    let plan = FaultPlan::parse(7, "malformed:2, oversized:5").expect("spec");
+    let base = drive(1, &FaultPlan::new(7), config(1));
+    for w in WIDTHS {
+        let got = drive(w, &plan, config(w));
+        assert_eq!(got.stats.shed_malformed, 1, "width {w}");
+        assert_eq!(got.stats.shed_oversized, 1, "width {w}");
+        assert_eq!(got.stats.shed_total(), 2, "width {w}");
+        assert_eq!(got.stats.responded_ok, REQUESTS as u64 - 2, "width {w}");
+        assert_bit_identical(&got, &base, &format!("badquery width {w}"));
+        assert!(matches!(got.responses[2], Err(RejectReason::Malformed(_))), "width {w}");
+        assert!(matches!(got.responses[5], Err(RejectReason::Oversized { .. })), "width {w}");
+    }
+}
+
+#[test]
+fn mid_stream_epoch_update_keeps_serving_and_heals() {
+    let plan = FaultPlan::parse(7, "update:3:16:16").expect("spec");
+    // The update is a client-side event, so the "fault-free" baseline for
+    // bit-identity is the same stream with the same update at width 1.
+    let base = drive(1, &plan, config(1));
+    assert_eq!(base.stats.epoch_switches, 1);
+    for w in WIDTHS {
+        let got = drive(w, &plan, config(w));
+        assert_eq!(got.stats.epoch_switches, 1, "width {w}");
+        assert_eq!(got.stats.shed_total(), 0, "width {w}: updates never shed requests");
+        assert_eq!(got.stats.responded_ok, REQUESTS as u64, "width {w}");
+        assert_bit_identical(&got, &base, &format!("update width {w}"));
+        for (i, r) in got.responses.iter().enumerate() {
+            let r = r.as_ref().expect("admitted");
+            let want_epoch = u64::from(i > 3);
+            assert_eq!(r.epoch, want_epoch, "width {w} request {i}: snapshot isolation");
+        }
+    }
+}
+
+#[test]
+fn combined_plan_accounts_for_every_fault_exactly() {
+    // Everything at once: a contained panic, a deadline-blowing slow
+    // shard, a malformed query, an oversized query, and a mid-stream
+    // epoch update — the daemon must account for all of it, exactly.
+    let plan = FaultPlan::parse(
+        7,
+        "panic:0:0, slow:0:60000:1:1, malformed:2, oversized:5, update:6:16:16",
+    )
+    .expect("spec");
+    for w in WIDTHS {
+        let got = drive(w, &plan, config(w));
+        assert_eq!(got.stats.panics_contained, 1, "width {w}");
+        assert_eq!(got.stats.retried, 1, "width {w}");
+        assert_eq!(got.stats.shed_deadline, 1, "width {w}");
+        assert_eq!(got.stats.shed_malformed, 1, "width {w}");
+        assert_eq!(got.stats.shed_oversized, 1, "width {w}");
+        assert_eq!(got.stats.shed_total(), 3, "width {w}");
+        assert_eq!(got.stats.epoch_switches, 1, "width {w}");
+        assert_eq!(
+            got.stats.responded_ok + got.stats.shed_total(),
+            REQUESTS as u64,
+            "width {w}: every request accounted"
+        );
+    }
+}
