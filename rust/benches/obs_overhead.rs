@@ -6,6 +6,12 @@
 //! regression in the span hot path fails the bench instead of silently
 //! taxing every traced run.
 //!
+//! A second round prices the serve tier: request round-trips through a
+//! live daemon with the whole deep-observability layer (spans + stage
+//! histograms + flight recorder) off vs on, under the same tolerance —
+//! the serve instrumentation sits on the request hot path and carries
+//! the same leave-it-on contract.
+//!
 //! Writes `BENCH_obs_overhead.json` at the repo root; `--smoke` shrinks n
 //! for the CI refresh (same code paths).
 
@@ -88,6 +94,70 @@ fn main() {
         tolerance * 100.0
     );
 
+    // Serve round: a request round-trip through admission, dispatch,
+    // shard compute, and merge on a live daemon, with the entire
+    // deep-observability layer toggled as one (spans + histograms +
+    // flight recorder) — same interleaving, same tolerance.
+    let serve_n = if smoke { 512 } else { 1024 };
+    let sds = nni::data::synth::SynthSpec::blobs(serve_n, 3, 4, seed).generate();
+    let scfg = nni::interact::epoch::UpdateCfg {
+        leaf_cap: 32,
+        block_cap: 64,
+        build_threads: 1,
+        threads: 1,
+        kernel: KernelKind::Auto,
+        ..nni::interact::epoch::UpdateCfg::default()
+    };
+    let upd = std::sync::Arc::new(nni::interact::epoch::UpdatableKernelEngine::build(
+        sds,
+        scfg,
+        nni::hmat::FullKernelConfig::new(0.8),
+    ));
+    let server = nni::serve::Server::start(
+        upd,
+        nni::serve::ServeConfig { shards: 2, ..nni::serve::ServeConfig::default() },
+        nni::serve::FaultPlan::new(seed),
+    );
+    let charges: Vec<f32> = (0..serve_n).map(|_| rng.f32() - 0.5).collect();
+    let round_trip = || {
+        let pending = server
+            .submit(nni::serve::Query::Gauss { charges: charges.clone() })
+            .expect("bench request admitted");
+        pending
+            .wait_timeout(std::time::Duration::from_secs(30))
+            .expect("bench request answered");
+    };
+    let set_all = |on: bool| {
+        obs::set_enabled(on);
+        obs::hist::set_enabled(on);
+        obs::flight::set_enabled(on);
+    };
+    let (mut srv_off, mut srv_on) = (f64::INFINITY, f64::INFINITY);
+    for _ in 0..rounds {
+        set_all(false);
+        srv_off = srv_off.min(bench_default(round_trip).robust_min_s);
+        obs::reset(); // drain slabs + ring: the on-path must record, not drop
+        set_all(true);
+        srv_on = srv_on.min(bench_default(round_trip).robust_min_s);
+    }
+    set_all(true); // instrumentation is on by default; leave it that way
+    obs::set_enabled(false);
+    server.shutdown();
+    let serve_ratio = srv_on / srv_off;
+    println!(
+        "# serve off {:.3} ms | on {:.3} ms | overhead {:+.2}%",
+        srv_off * 1e3,
+        srv_on * 1e3,
+        (serve_ratio - 1.0) * 100.0
+    );
+    assert!(
+        serve_ratio < 1.0 + tolerance,
+        "serve observability overhead {:.2}% exceeds the {:.0}% budget \
+         (off {srv_off:.6}s, on {srv_on:.6}s)",
+        (serve_ratio - 1.0) * 100.0,
+        tolerance * 100.0
+    );
+
     let point = obj(vec![
         ("n", num(n as f64)),
         ("rhs", num(k as f64)),
@@ -95,6 +165,10 @@ fn main() {
         ("off_seconds", num(best_off)),
         ("on_seconds", num(best_on)),
         ("overhead_ratio", num(ratio)),
+        ("serve_n", num(serve_n as f64)),
+        ("serve_off_seconds", num(srv_off)),
+        ("serve_on_seconds", num(srv_on)),
+        ("serve_overhead_ratio", num(serve_ratio)),
         ("counters", counters_json()),
     ]);
     let doc = obj(vec![
@@ -105,8 +179,9 @@ fn main() {
         ("testbed", s(&machine_summary())),
         (
             "expected_shape",
-            s("overhead_ratio stays below 1 + tolerance (default 1.03); the assert \
-               runs before the record is written, so a present record implies a pass"),
+            s("overhead_ratio and serve_overhead_ratio stay below 1 + tolerance \
+               (default 1.03); both asserts run before the record is written, so a \
+               present record implies a pass"),
         ),
         ("points", arr(vec![point])),
     ]);

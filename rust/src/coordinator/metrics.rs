@@ -62,7 +62,10 @@ impl Metrics {
 
     /// Serve-path outcome: `queries` answered in `calls` whole-batch
     /// engine calls over `nnz` edge visits, spending `secs` on the Rust
-    /// side (the serve path has no PJRT leg).
+    /// side (the serve path has no PJRT leg).  The call latency also
+    /// lands in the serve tier's end-to-end histogram (`serve.e2e`), so
+    /// coordinator-served batches show up in the same latency report as
+    /// daemon-served requests.
     pub fn note_serve(&mut self, queries: u64, calls: u64, nnz: u64, secs: f64) {
         self.batched_queries += queries;
         self.serve_calls += calls;
@@ -72,6 +75,7 @@ impl Metrics {
         counters::add(Counter::CoordServeCalls, calls);
         counters::add(Counter::CoordNnzProcessed, nnz);
         counters::add(Counter::CoordRustNs, (secs * 1e9) as u64);
+        crate::obs::hist::record(crate::obs::hist::Stage::EndToEnd, (secs * 1e6) as u64);
     }
 
     /// Interactions (edges) per second over everything processed so far.

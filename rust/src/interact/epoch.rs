@@ -85,11 +85,15 @@ impl<T> EpochPublisher<T> {
     }
 
     /// Atomically replace the current epoch; returns the new version.
+    /// Recorded in the flight ring as an `epoch_switch` event (`aux` =
+    /// new version) — the initial build in [`EpochPublisher::new`] is
+    /// not a switch and is not recorded.
     pub fn publish(&self, value: T) -> u64 {
         let mut cur = self.current.write().unwrap();
         let version = cur.version + 1;
         *cur = Arc::new(Epoch { version, value });
         counters::add(Counter::UpdateEpochsPublished, 1);
+        crate::obs::flight::record(crate::obs::flight::Kind::EpochSwitch, -1, 0, version);
         version
     }
 }
@@ -358,6 +362,7 @@ impl UpdatableKernelEngine {
         shard: usize,
     ) -> (Arc<Epoch<KernelEpoch>>, ShardSpan) {
         counters::add(Counter::ServeShardRestarts, 1);
+        crate::obs::flight::record(crate::obs::flight::Kind::Restart, shard as i64, 0, 0);
         let (e, spans) = self.acquire_sharded(shards);
         let span = spans[shard.min(spans.len() - 1)].clone();
         (e, span)

@@ -1061,10 +1061,16 @@ fn cmd_serve(argv: Vec<String>) {
                  exit nonzero on any lost request or unconsumed panic script",
             )
             .flag("virtual-time", "charge injected latency/backoff virtually (deterministic deadlines)")
+            .opt_usize("stats-interval", 0, "print a counters + latency-quantile line every SECS (0 = off)")
+            .opt("flight-out", "", "also write flight-recorder auto-dumps to this path")
             .opt("out", "BENCH_serve.json", "bench record path (load-gen mode)"),
     ));
     let a = obs_opts(far_opts(opts, "aca")).parse_from(argv).unwrap_or_else(die);
     obs_begin(&a);
+    let flight_out = a.get("flight-out");
+    if !flight_out.is_empty() {
+        obs::flight::set_dump_path(Some(flight_out));
+    }
     let smoke = a.get_flag("smoke");
     let n = if smoke { a.get_usize("n").min(1024) } else { a.get_usize("n") };
     let ds = SynthSpec::blobs(n, a.get_usize("d"), a.get_usize("blobs"), a.get_u64("seed"))
@@ -1116,12 +1122,43 @@ fn cmd_serve(argv: Vec<String>) {
         );
     }
     drop((_e, spans));
+    spawn_stats_printer(a.get_usize("stats-interval"));
     if a.get_flag("load-gen") {
         serve_load_gen(&a, engine, scfg, plan, smoke);
     } else {
         serve_stdin(engine, scfg, plan);
     }
     obs_end(&a);
+}
+
+/// `--stats-interval SECS`: a detached printer thread emitting one
+/// counters + latency-quantile line per tick (reads the global serve
+/// counters and the `serve.e2e` histogram; dies with the process).
+fn spawn_stats_printer(secs: usize) {
+    if secs == 0 {
+        return;
+    }
+    std::thread::Builder::new()
+        .name("nni-serve-stats".into())
+        .spawn(move || loop {
+            std::thread::sleep(std::time::Duration::from_secs(secs as u64));
+            let snap = counters::snapshot();
+            let e2e = nni::obs::hist::stage_snapshot(nni::obs::hist::Stage::EndToEnd);
+            println!(
+                "[stats] admitted={} ok_hist_n={} shed={} deadline_missed={} retried={} \
+                 flight_events={} e2e p50={}us p99={}us max={}us",
+                snap.get("serve.admitted"),
+                e2e.count,
+                snap.get("serve.shed"),
+                snap.get("serve.deadline_missed"),
+                snap.get("serve.retried"),
+                snap.get("flight.events"),
+                e2e.quantile(50.0),
+                e2e.quantile(99.0),
+                e2e.max,
+            );
+        })
+        .expect("serve: spawn stats printer");
 }
 
 /// Load-generator mode of `nni serve`: one bench point per shard width,
@@ -1217,14 +1254,15 @@ fn serve_load_gen(
 
 /// Daemon mode of `nni serve`: a line protocol on stdin until EOF —
 ///   `knn <point> <k>` | `gauss` | `krr` | `update <ndel> <nins>` |
-///   `stats` | `quit`
+///   `stats` | `dump` | `quit`
 /// (`gauss`/`krr` use a seeded random charge vector of the current
 /// epoch's length; responses print epoch version, latency, and the
-/// degraded/retry flags).
+/// degraded/retry flags; `dump` prints an on-demand flight-recorder
+/// forensic dump).
 fn serve_stdin(engine: Arc<UpdatableKernelEngine>, scfg: ServeConfig, plan: FaultPlan) {
     use std::io::BufRead;
     let server = Server::start(engine, scfg, plan);
-    println!("ready — knn <point> <k> | gauss | krr | update <ndel> <nins> | stats | quit");
+    println!("ready — knn <point> <k> | gauss | krr | update <ndel> <nins> | stats | dump | quit");
     let stdin = std::io::stdin();
     let mut rng = Rng::new(0x5e11e);
     let mut line = String::new();
@@ -1241,6 +1279,10 @@ fn serve_stdin(engine: Arc<UpdatableKernelEngine>, scfg: ServeConfig, plan: Faul
             ["quit"] | ["exit"] => break,
             ["stats"] => {
                 println!("{:?}", server.stats());
+                continue;
+            }
+            ["dump"] => {
+                println!("{}", obs::flight::dump_json("stdin"));
                 continue;
             }
             ["update", ndel, nins] => {
@@ -1384,7 +1426,7 @@ fn cmd_trace_check(argv: Vec<String>) {
     let a = Args::new("validate Chrome trace-event JSON emitted via --trace-out")
         .opt(
             "require",
-            "tree,csb,hmat,apply,interact",
+            "tree,csb,hmat,apply,interact,serve",
             "comma-separated span-name prefixes that must appear",
         )
         .parse_from(argv)

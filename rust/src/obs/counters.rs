@@ -83,6 +83,15 @@ counters! {
     ServeEpochSwitches => "serve.epoch_switches",
     ServeShardBusyNs => "serve.shard_busy_ns",
     ServeShardBusyNsMax => "serve.shard_busy_ns_max",
+    ServeShardWorkers => "serve.shard_workers",
+    // serve deadline attribution: which stage ate a missed budget
+    DeadlineMissAdmission => "deadline.miss.admission",
+    DeadlineMissCompute => "deadline.miss.compute",
+    DeadlineMissFar => "deadline.miss.far",
+    DeadlineMissMerge => "deadline.miss.merge",
+    // flight recorder bookkeeping
+    FlightEvents => "flight.events",
+    FlightDumps => "flight.dumps",
     // incremental updates (tree/csb/hmat patching + epoch lifecycle)
     UpdateBatches => "update.batches",
     UpdateInserts => "update.inserts",
@@ -164,6 +173,20 @@ pub fn level_add(stat: LevelStat, level: usize, v: u64) {
     level_array(stat)[level.min(MAX_LEVELS - 1)].fetch_add(v, Ordering::Relaxed);
 }
 
+/// Per-shard cumulative busy-time slots for the serve tier; shards
+/// at/past [`MAX_SHARD_SLOTS`] fold in modulo (matching
+/// `obs::hist::MAX_SHARD_HISTS`).
+pub const MAX_SHARD_SLOTS: usize = 8;
+
+static SHARD_BUSY_NS: [AtomicU64; MAX_SHARD_SLOTS] = [const { AtomicU64::new(0) }; MAX_SHARD_SLOTS];
+
+/// Add one shard worker's busy nanoseconds to its cumulative slot
+/// (feeds [`Snapshot::shard_imbalance`]).
+#[inline]
+pub fn shard_busy_add(shard: usize, ns: u64) {
+    SHARD_BUSY_NS[shard % MAX_SHARD_SLOTS].fetch_add(ns, Ordering::Relaxed);
+}
+
 /// One occupied level of the snapshot's per-level table.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct LevelRow {
@@ -192,6 +215,9 @@ pub struct Snapshot {
     pub counters: Vec<(&'static str, u64)>,
     /// Occupied per-level rows (empty levels omitted), ascending level.
     pub levels: Vec<LevelRow>,
+    /// Cumulative serve-shard busy ns, one entry per occupied slot
+    /// (empty when the serve tier never ran).
+    pub shard_busy_ns: Vec<u64>,
 }
 
 impl Snapshot {
@@ -215,6 +241,20 @@ impl Snapshot {
             return 0.0;
         }
         max as f64 * workers as f64 / total as f64
+    }
+
+    /// Serve-tier analog of [`Self::worker_imbalance`]: max over mean of
+    /// cumulative per-shard busy time (1.0 = balanced, 0.0 = serve tier
+    /// never ran).  Shards past [`MAX_SHARD_SLOTS`] fold modulo, so with
+    /// more shards than slots this is a slot-level approximation.
+    pub fn shard_imbalance(&self) -> f64 {
+        let total: u64 = self.shard_busy_ns.iter().sum();
+        let max = self.shard_busy_ns.iter().copied().max().unwrap_or(0);
+        let shards = (self.get("serve.shard_workers") as usize).min(MAX_SHARD_SLOTS);
+        if total == 0 || shards == 0 {
+            return 0.0;
+        }
+        max as f64 * shards as f64 / total as f64
     }
 
     /// Mean ACA rank over compressed far-field blocks.
@@ -268,10 +308,16 @@ pub fn snapshot() -> Snapshot {
             levels.push(row);
         }
     }
-    Snapshot { counters, levels }
+    let mut shard_busy_ns: Vec<u64> =
+        SHARD_BUSY_NS.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+    while shard_busy_ns.last() == Some(&0) {
+        shard_busy_ns.pop();
+    }
+    Snapshot { counters, levels, shard_busy_ns }
 }
 
-/// Zero every counter and level row (tests and CLI phase boundaries).
+/// Zero every counter, level row, and shard-busy slot (tests and CLI
+/// phase boundaries).
 pub fn reset() {
     for c in &CELLS {
         c.store(0, Ordering::Relaxed);
@@ -280,6 +326,9 @@ pub fn reset() {
         for c in arr.iter() {
             c.store(0, Ordering::Relaxed);
         }
+    }
+    for c in &SHARD_BUSY_NS {
+        c.store(0, Ordering::Relaxed);
     }
 }
 
@@ -325,9 +374,24 @@ mod tests {
     fn derived_ratios_handle_zero_denominators() {
         let empty = Snapshot::default();
         assert_eq!(empty.worker_imbalance(), 0.0);
+        assert_eq!(empty.shard_imbalance(), 0.0);
         assert_eq!(empty.mean_aca_rank(), 0.0);
         assert_eq!(empty.covered_fraction(), 0.0);
         assert_eq!(empty.dense_fill_ratio(), 0.0);
         assert_eq!(empty.get("no.such.counter"), 0);
+    }
+
+    #[test]
+    fn shard_imbalance_is_max_over_mean() {
+        let snap = Snapshot {
+            counters: vec![("serve.shard_workers", 2)],
+            levels: Vec::new(),
+            shard_busy_ns: vec![300, 100],
+        };
+        // max 300 · 2 shards / 400 total = 1.5
+        assert!((snap.shard_imbalance() - 1.5).abs() < 1e-12);
+        shard_busy_add(0, 7);
+        shard_busy_add(MAX_SHARD_SLOTS, 7); // folds into slot 0
+        assert!(snapshot().shard_busy_ns.first().copied().unwrap_or(0) >= 14);
     }
 }

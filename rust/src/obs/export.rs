@@ -9,8 +9,13 @@ use crate::util::json::{self, num, obj, s, Json};
 /// Spans → Chrome trace-event JSON: one `"ph": "X"` *complete* event per
 /// span (start + duration in µs), worker slot as the `tid` — the form both
 /// `chrome://tracing` and Perfetto load without a metadata preamble.
+///
+/// Request-scoped spans (`req != 0`, the serve tier) additionally emit
+/// Chrome **flow events** (`ph` `"s"`/`"t"`/`"f"`, one shared `id` per
+/// request) tying a request's stages together across the dispatcher and
+/// shard tracks, so a deadline miss reads as one connected arrow chain.
 pub fn chrome_trace(spans: &[SpanRec]) -> Json {
-    let events = spans
+    let mut events: Vec<Json> = spans
         .iter()
         .map(|sp| {
             obj(vec![
@@ -23,11 +28,49 @@ pub fn chrome_trace(spans: &[SpanRec]) -> Json {
             ])
         })
         .collect();
+    let mut flows: std::collections::BTreeMap<u64, Vec<&SpanRec>> =
+        std::collections::BTreeMap::new();
+    for sp in spans.iter().filter(|sp| sp.req != 0) {
+        flows.entry(sp.req).or_default().push(sp);
+    }
+    for (req, mut stages) in flows {
+        if stages.len() < 2 {
+            continue; // a flow needs at least a start and an end
+        }
+        stages.sort_by_key(|sp| sp.t0_us);
+        let last = stages.len() - 1;
+        for (i, sp) in stages.iter().enumerate() {
+            let ph = if i == 0 {
+                "s"
+            } else if i == last {
+                "f"
+            } else {
+                "t"
+            };
+            let mut fields = vec![
+                ("name", s("serve.request")),
+                ("cat", s("serve")),
+                ("ph", s(ph)),
+                ("ts", num(sp.t0_us as f64)),
+                ("pid", num(1.0)),
+                ("tid", num(sp.worker as f64)),
+                ("id", num(req as f64)),
+            ];
+            if ph == "f" {
+                // bind the flow end to the enclosing slice, not the next one
+                fields.push(("bp", s("e")));
+            }
+            events.push(obj(fields));
+        }
+    }
     Json::Arr(events)
 }
 
 /// Counter snapshot → flat metrics JSON: raw counters, derived ratios
-/// (the paper's profile measure), and the per-level fill table.
+/// (the paper's profile measure), the per-level fill table, and a
+/// summary of every occupied serve-stage latency histogram (count /
+/// p50 / p99 / max / mean in µs; the histograms are process-global, so
+/// this section reflects the live registry, not `snap`).
 pub fn metrics_json(snap: &Snapshot) -> Json {
     let counters = obj(snap
         .counters
@@ -36,10 +79,27 @@ pub fn metrics_json(snap: &Snapshot) -> Json {
         .collect());
     let derived = obj(vec![
         ("apply.worker_imbalance", num(snap.worker_imbalance())),
+        ("serve.shard_imbalance", num(snap.shard_imbalance())),
         ("aca.mean_rank", num(snap.mean_aca_rank())),
         ("csb.covered_fraction", num(snap.covered_fraction())),
         ("csb.dense_fill_ratio", num(snap.dense_fill_ratio())),
     ]);
+    let hists = obj(crate::obs::hist::snapshot_all()
+        .into_iter()
+        .filter(|(_, h)| h.count > 0)
+        .map(|(name, h)| {
+            (
+                name,
+                obj(vec![
+                    ("count", num(h.count as f64)),
+                    ("p50_us", num(h.quantile(50.0) as f64)),
+                    ("p99_us", num(h.quantile(99.0) as f64)),
+                    ("max_us", num(h.max as f64)),
+                    ("mean_us", num(h.mean())),
+                ]),
+            )
+        })
+        .collect());
     let levels = Json::Arr(
         snap.levels
             .iter()
@@ -58,6 +118,7 @@ pub fn metrics_json(snap: &Snapshot) -> Json {
     obj(vec![
         ("counters", counters),
         ("derived", derived),
+        ("hists", hists),
         ("levels", levels),
     ])
 }
@@ -92,13 +153,31 @@ pub fn human_report(snap: &Snapshot) -> String {
     }
     out.push_str("== derived ==\n");
     out.push_str(&format!(
-        "  apply.worker_imbalance = {:.3}\n  aca.mean_rank = {:.2}\n  \
+        "  apply.worker_imbalance = {:.3}\n  serve.shard_imbalance = {:.3}\n  \
+         aca.mean_rank = {:.2}\n  \
          csb.covered_fraction = {:.4}\n  csb.dense_fill_ratio = {:.4}\n",
         snap.worker_imbalance(),
+        snap.shard_imbalance(),
         snap.mean_aca_rank(),
         snap.covered_fraction(),
         snap.dense_fill_ratio()
     ));
+    let hists: Vec<_> = crate::obs::hist::snapshot_all()
+        .into_iter()
+        .filter(|(_, h)| h.count > 0)
+        .collect();
+    if !hists.is_empty() {
+        out.push_str("== latency µs (count p50 p99 max) ==\n");
+        for (name, h) in &hists {
+            out.push_str(&format!(
+                "  {name:<22} {:>8} {:>8} {:>8} {:>8}\n",
+                h.count,
+                h.quantile(50.0),
+                h.quantile(99.0),
+                h.max
+            ));
+        }
+    }
     if !snap.levels.is_empty() {
         out.push_str("== levels (level blocks dense nnz cells fill) ==\n");
         for r in &snap.levels {
@@ -116,17 +195,25 @@ pub fn human_report(snap: &Snapshot) -> String {
     out
 }
 
-/// Validate an emitted Chrome trace: it must parse, every event must carry
-/// `name`/`ts`/`dur`, and at least one span must come from each required
-/// subsystem prefix (the text before the first `.` of a span name).
-/// Returns the event count.
+/// Validate an emitted Chrome trace: it must parse, every event must be
+/// well-formed for its phase — complete events (`ph` `"X"`, the default)
+/// need `name`/`ts`/`dur`, flow events (`"s"`/`"t"`/`"f"`) need
+/// `name`/`ts`/`id`, anything else is rejected — and at least one event
+/// must come from each required subsystem prefix (the text before the
+/// first `.` of an event name).  Returns the event count.
 pub fn check_trace(text: &str, required_subsystems: &[&str]) -> Result<usize, String> {
     let v = json::parse(text)?;
     let events = v.as_arr().ok_or("trace is not a JSON array")?;
     for (i, e) in events.iter().enumerate() {
         let o = e.as_obj().ok_or_else(|| format!("event {i} is not an object"))?;
-        for key in ["name", "ts", "dur"] {
-            if !o.contains_key(key) {
+        let ph = e.get("ph").and_then(|p| p.as_str()).unwrap_or("X");
+        let keys: &[&str] = match ph {
+            "X" => &["name", "ts", "dur"],
+            "s" | "t" | "f" => &["name", "ts", "id"],
+            other => return Err(format!("event {i} has unsupported phase \"{other}\"")),
+        };
+        for key in keys {
+            if !o.contains_key(*key) {
                 return Err(format!("event {i} missing \"{key}\""));
             }
         }
@@ -158,6 +245,7 @@ mod tests {
                 t1_us: 50,
                 depth: 0,
                 worker: 0,
+                req: 0,
             },
             SpanRec {
                 name: "csb.build.fill",
@@ -165,6 +253,36 @@ mod tests {
                 t1_us: 30,
                 depth: 1,
                 worker: 0,
+                req: 0,
+            },
+        ]
+    }
+
+    fn request_spans() -> Vec<SpanRec> {
+        vec![
+            SpanRec {
+                name: "serve.admit",
+                t0_us: 0,
+                t1_us: 5,
+                depth: 0,
+                worker: 31,
+                req: 7,
+            },
+            SpanRec {
+                name: "serve.shard.compute",
+                t0_us: 6,
+                t1_us: 20,
+                depth: 0,
+                worker: 32,
+                req: 7,
+            },
+            SpanRec {
+                name: "serve.merge",
+                t0_us: 21,
+                t1_us: 25,
+                depth: 0,
+                worker: 31,
+                req: 7,
             },
         ]
     }
@@ -188,6 +306,32 @@ mod tests {
         assert!(check_trace(&text, &["hmat"]).is_err());
         assert!(check_trace("not json", &[]).is_err());
         assert!(check_trace("{\"a\":1}", &[]).is_err());
+        // flow events validate by their own key set; bad phases reject
+        assert!(check_trace(r#"[{"name":"a","ts":1,"id":2,"ph":"s"}]"#, &[]).is_ok());
+        assert!(check_trace(r#"[{"name":"a","ts":1,"ph":"s"}]"#, &[]).is_err());
+        assert!(check_trace(r#"[{"name":"a","ts":1,"dur":2,"ph":"Q"}]"#, &[]).is_err());
+    }
+
+    #[test]
+    fn request_spans_emit_connected_flow_events() {
+        let text = chrome_trace(&request_spans()).to_string();
+        // 3 complete events + a 3-step flow (s, t, f) sharing the request id
+        assert_eq!(check_trace(&text, &["serve"]), Ok(6));
+        let evs = json::parse(&text).unwrap();
+        let evs = evs.as_arr().unwrap().to_vec();
+        let flow: Vec<_> = evs
+            .iter()
+            .filter(|e| {
+                matches!(e.get("ph").and_then(|p| p.as_str()), Some("s" | "t" | "f"))
+            })
+            .collect();
+        assert_eq!(flow.len(), 3);
+        assert!(flow.iter().all(|e| e.get("id").unwrap().as_f64() == Some(7.0)));
+        assert_eq!(flow[0].get("ph").unwrap().as_str(), Some("s"));
+        assert_eq!(flow[2].get("ph").unwrap().as_str(), Some("f"));
+        assert_eq!(flow[2].get("bp").unwrap().as_str(), Some("e"));
+        // flow steps ride the track (tid) of the span they annotate
+        assert_eq!(flow[1].get("tid").unwrap().as_f64(), Some(32.0));
     }
 
     #[test]
@@ -201,6 +345,7 @@ mod tests {
                 nnz: 50,
                 cells: 100,
             }],
+            shard_busy_ns: vec![],
         };
         let j = metrics_json(&snap);
         assert_eq!(
@@ -219,6 +364,7 @@ mod tests {
         let snap = Snapshot {
             counters: vec![("cg.iterations", 7), ("csb.nnz", 0)],
             levels: vec![],
+            shard_busy_ns: vec![],
         };
         let rep = human_report(&snap);
         assert!(rep.contains("cg.iterations = 7"));

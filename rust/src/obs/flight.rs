@@ -1,0 +1,322 @@
+//! Fault flight recorder: a fixed-capacity lock-free ring buffer that
+//! always records compact serve-tier events (admit / shed / slate /
+//! panic / restart / poison / epoch-switch / fault-injection) and dumps
+//! the most recent [`CAP`] of them as JSON when something goes wrong.
+//!
+//! **Dump triggers.**  A dump is taken automatically on panic
+//! containment (`trigger = "panic"`), shard poisoning (`"poison"`), and
+//! deadline sheds (`"deadline_shed"`); the serve stdin protocol's
+//! `dump` command and tests take on-demand dumps.  Each dump is stored
+//! in [`last_dump`] (and written to the `--flight-out` path when the
+//! CLI set one) so the forensic trail survives the triggering request.
+//!
+//! **Recording protocol.**  A writer claims a ticket from a global
+//! head counter, zeroes the slot's stamp, stores the event fields, then
+//! publishes `ticket + 1` into the stamp with release ordering.  A
+//! reader accepts a slot only when the stamp matches the expected
+//! ticket before *and* after reading the fields, so a slot being
+//! overwritten concurrently is skipped rather than read torn.  The
+//! record path is a handful of relaxed atomic stores — no locks, no
+//! allocation — and is priced by the `obs_overhead` serve round.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::obs::counters::{self, Counter};
+use crate::obs::trace::now_us;
+
+/// Ring capacity: the forensic window is the last `CAP` events.
+pub const CAP: usize = 1024;
+
+/// Compact event kinds; `aux` semantics depend on the kind (see
+/// [`record`] call sites in `serve/` and `interact/epoch.rs`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    /// Request admitted into the queue (`seq` = request id).
+    Admit = 0,
+    /// Request shed (`aux` = reject-reason code, see [`reason_name`]).
+    Shed = 1,
+    /// Slate dispatched (`seq` = first request id, `aux` = slate size).
+    Slate = 2,
+    /// Shard panic contained by the retry ladder (`aux` = attempt).
+    Panic = 3,
+    /// Shard worker restarted after a contained panic.
+    Restart = 4,
+    /// Shard poisoned into scalar fallback (`aux` = contained count).
+    Poison = 5,
+    /// New engine epoch published (`aux` = version).
+    EpochSwitch = 6,
+    /// Scripted fault injection fired (`aux` = kind-specific detail).
+    Fault = 7,
+}
+
+const KIND_NAMES: [&str; 8] = [
+    "admit",
+    "shed",
+    "slate",
+    "panic",
+    "restart",
+    "poison",
+    "epoch_switch",
+    "fault",
+];
+
+impl Kind {
+    pub fn name(self) -> &'static str {
+        KIND_NAMES[self as usize]
+    }
+
+    fn from_u64(v: u64) -> Option<Kind> {
+        Some(match v {
+            0 => Kind::Admit,
+            1 => Kind::Shed,
+            2 => Kind::Slate,
+            3 => Kind::Panic,
+            4 => Kind::Restart,
+            5 => Kind::Poison,
+            6 => Kind::EpochSwitch,
+            7 => Kind::Fault,
+            _ => return None,
+        })
+    }
+}
+
+/// Reject-reason codes carried in `aux` of [`Kind::Shed`] events; the
+/// mapping from `serve::wire::RejectReason` lives next to that enum.
+pub fn reason_name(code: u64) -> &'static str {
+    match code {
+        1 => "queue_full",
+        2 => "malformed",
+        3 => "oversized",
+        4 => "bad_point",
+        5 => "deadline",
+        6 => "shard_failed",
+        7 => "shutdown",
+        _ => "unknown",
+    }
+}
+
+/// One decoded flight event (timestamps share the span timebase of
+/// `obs::trace`, so dumps line up with Chrome traces).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Event {
+    pub t_us: u64,
+    pub kind: Kind,
+    /// Shard id, or -1 for dispatcher/admission-level events.
+    pub shard: i64,
+    /// Request id or task sequence number (kind-dependent).
+    pub seq: u64,
+    /// Kind-specific detail (reason code, slate size, attempt, version).
+    pub aux: u64,
+}
+
+struct Slot {
+    stamp: AtomicU64,
+    t_us: AtomicU64,
+    kind: AtomicU64,
+    shard: AtomicU64,
+    seq: AtomicU64,
+    aux: AtomicU64,
+}
+
+#[allow(clippy::declare_interior_mutable_const)]
+const EMPTY_SLOT: Slot = Slot {
+    stamp: AtomicU64::new(0),
+    t_us: AtomicU64::new(0),
+    kind: AtomicU64::new(0),
+    shard: AtomicU64::new(0),
+    seq: AtomicU64::new(0),
+    aux: AtomicU64::new(0),
+};
+
+static RING: [Slot; CAP] = [EMPTY_SLOT; CAP];
+static HEAD: AtomicU64 = AtomicU64::new(0);
+static ENABLED: AtomicBool = AtomicBool::new(true);
+static LAST_DUMP: Mutex<Option<String>> = Mutex::new(None);
+static DUMP_PATH: Mutex<Option<String>> = Mutex::new(None);
+
+/// Turn event recording on or off (on by default; the `obs_overhead`
+/// bench toggles it to price the instrumented path).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Whether the recorder is currently capturing events.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Record one event (lock-free, allocation-free).
+#[inline]
+pub fn record(kind: Kind, shard: i64, seq: u64, aux: u64) {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return;
+    }
+    let ticket = HEAD.fetch_add(1, Ordering::Relaxed);
+    let slot = &RING[(ticket % CAP as u64) as usize];
+    slot.stamp.store(0, Ordering::Release);
+    slot.t_us.store(now_us(), Ordering::Relaxed);
+    slot.kind.store(kind as u64, Ordering::Relaxed);
+    slot.shard.store(shard as u64, Ordering::Relaxed);
+    slot.seq.store(seq, Ordering::Relaxed);
+    slot.aux.store(aux, Ordering::Relaxed);
+    slot.stamp.store(ticket + 1, Ordering::Release);
+    counters::add(Counter::FlightEvents, 1);
+}
+
+/// Decode the ring, oldest first, skipping slots caught mid-overwrite.
+pub fn snapshot() -> Vec<Event> {
+    let head = HEAD.load(Ordering::Acquire);
+    let start = head.saturating_sub(CAP as u64);
+    let mut out = Vec::with_capacity((head - start) as usize);
+    for ticket in start..head {
+        let slot = &RING[(ticket % CAP as u64) as usize];
+        let expect = ticket + 1;
+        if slot.stamp.load(Ordering::Acquire) != expect {
+            continue;
+        }
+        let ev = Event {
+            t_us: slot.t_us.load(Ordering::Relaxed),
+            kind: match Kind::from_u64(slot.kind.load(Ordering::Relaxed)) {
+                Some(k) => k,
+                None => continue,
+            },
+            shard: slot.shard.load(Ordering::Relaxed) as i64,
+            seq: slot.seq.load(Ordering::Relaxed),
+            aux: slot.aux.load(Ordering::Relaxed),
+        };
+        if slot.stamp.load(Ordering::Acquire) != expect {
+            continue; // overwritten while reading
+        }
+        out.push(ev);
+    }
+    out
+}
+
+/// Render the current ring as a JSON dump (does not store it).
+pub fn dump_json(trigger: &str) -> String {
+    let events = snapshot();
+    let mut s = String::with_capacity(64 + events.len() * 80);
+    s.push_str("{\n  \"trigger\": \"");
+    s.push_str(trigger);
+    s.push_str("\",\n  \"dumped_at_us\": ");
+    s.push_str(&now_us().to_string());
+    s.push_str(",\n  \"events\": [");
+    for (i, ev) in events.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str("\n    {\"t_us\": ");
+        s.push_str(&ev.t_us.to_string());
+        s.push_str(", \"kind\": \"");
+        s.push_str(ev.kind.name());
+        s.push_str("\", \"shard\": ");
+        s.push_str(&ev.shard.to_string());
+        s.push_str(", \"seq\": ");
+        s.push_str(&ev.seq.to_string());
+        s.push_str(", \"aux\": ");
+        s.push_str(&ev.aux.to_string());
+        if ev.kind == Kind::Shed {
+            s.push_str(", \"reason\": \"");
+            s.push_str(reason_name(ev.aux));
+            s.push('"');
+        }
+        s.push('}');
+    }
+    s.push_str("\n  ]\n}\n");
+    s
+}
+
+/// Take a dump: render the ring, remember it in [`last_dump`], write it
+/// to the configured dump path (if any), and count it.  Called
+/// automatically on panic containment, poison, and deadline sheds.
+pub fn trigger_dump(trigger: &str) {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return;
+    }
+    let dump = dump_json(trigger);
+    counters::add(Counter::FlightDumps, 1);
+    if let Some(path) = DUMP_PATH.lock().unwrap_or_else(|e| e.into_inner()).as_deref() {
+        let _ = std::fs::write(path, &dump);
+    }
+    *LAST_DUMP.lock().unwrap_or_else(|e| e.into_inner()) = Some(dump);
+}
+
+/// The most recent dump taken by [`trigger_dump`], if any.
+pub fn last_dump() -> Option<String> {
+    LAST_DUMP.lock().unwrap_or_else(|e| e.into_inner()).clone()
+}
+
+/// Set (or clear) a file path that every future dump is also written to.
+pub fn set_dump_path(path: Option<String>) {
+    *DUMP_PATH.lock().unwrap_or_else(|e| e.into_inner()) = path;
+}
+
+/// Clear the ring and the stored dump (the enabled flag and dump path
+/// are configuration and survive).
+pub fn reset() {
+    HEAD.store(0, Ordering::Release);
+    for slot in RING.iter() {
+        slot.stamp.store(0, Ordering::Release);
+    }
+    *LAST_DUMP.lock().unwrap_or_else(|e| e.into_inner()) = None;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The ring is global; serialize the in-file tests against each other.
+    fn lock() -> std::sync::MutexGuard<'static, ()> {
+        static GATE: Mutex<()> = Mutex::new(());
+        GATE.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn records_in_order_and_dumps_json() {
+        let _g = lock();
+        reset();
+        record(Kind::Admit, -1, 0, 0);
+        record(Kind::Shed, -1, 1, 5);
+        record(Kind::Panic, 2, 7, 1);
+        let evs = snapshot();
+        assert_eq!(evs.len(), 3);
+        assert_eq!(evs[0].kind, Kind::Admit);
+        assert_eq!(evs[1].aux, 5);
+        assert_eq!(evs[2].shard, 2);
+        assert!(evs.windows(2).all(|w| w[0].t_us <= w[1].t_us));
+        assert!(last_dump().is_none());
+        trigger_dump("test");
+        let dump = last_dump().expect("dump stored");
+        assert!(dump.contains("\"trigger\": \"test\""));
+        assert!(dump.contains("\"kind\": \"panic\""));
+        assert!(dump.contains("\"reason\": \"deadline\""));
+        crate::util::json::parse(&dump).expect("dump is valid JSON");
+    }
+
+    #[test]
+    fn ring_keeps_only_the_last_cap_events() {
+        let _g = lock();
+        reset();
+        for i in 0..(CAP as u64 + 10) {
+            record(Kind::Slate, -1, i, 1);
+        }
+        let evs = snapshot();
+        assert_eq!(evs.len(), CAP);
+        assert_eq!(evs.first().unwrap().seq, 10);
+        assert_eq!(evs.last().unwrap().seq, CAP as u64 + 9);
+    }
+
+    #[test]
+    fn disabled_recording_is_inert() {
+        let _g = lock();
+        reset();
+        set_enabled(false);
+        record(Kind::Admit, -1, 0, 0);
+        trigger_dump("ignored");
+        assert!(snapshot().is_empty());
+        assert!(last_dump().is_none());
+        set_enabled(true);
+    }
+}

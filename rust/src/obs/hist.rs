@@ -1,0 +1,359 @@
+//! Lock-free log-linear latency histograms (HDR-style) for the serving
+//! tier: fixed arrays of relaxed atomics, mergeable snapshots, and
+//! bounded-relative-error quantile queries.
+//!
+//! **Bucket layout.**  Values below `2^LOW_BITS` (= [`SUB_BUCKETS`]) get
+//! one bucket each (exact).  Above that, every power-of-two octave is
+//! split into [`SUB_BUCKETS`] linear sub-buckets, so a bucket spanning
+//! `[lo, lo + w)` always has `w / lo <= 1/SUB_BUCKETS` — the quantile
+//! error bound: a reported quantile lies in the same bucket as the exact
+//! nearest-rank sample, hence within one bucket width (relative error
+//! `<= 1/32` ≈ 3.1%) of it.  `rust/src/serve/loadgen.rs` pins this
+//! against the exact nearest-rank oracle on seeded workloads.
+//!
+//! **Cost model.**  Recording is one enabled load, one bucket-index
+//! computation (a `leading_zeros` and two shifts), and four relaxed
+//! atomic RMWs — no locks, no allocation, safe on the steady-state
+//! serve path (the `obs_overhead` bench keeps the serve round under its
+//! 1.03 ratio with recording on).
+//!
+//! **Registry.**  One static histogram per serve stage — admission wait,
+//! slate coalesce, per-shard compute ([`MAX_SHARD_HISTS`] slots, higher
+//! shard ids fold in modulo), far apply, merge, end-to-end — surfaced by
+//! `nni stats`, the metrics JSON, and `nni serve --stats-interval`.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+/// log2 of the per-octave sub-bucket count.
+const LOW_BITS: u32 = 5;
+
+/// Linear sub-buckets per octave; also the identity range `[0, 32)` where
+/// buckets are exact.  `1/SUB_BUCKETS` is the relative quantile error
+/// bound.
+pub const SUB_BUCKETS: u64 = 1 << LOW_BITS;
+
+/// Total buckets: the identity range plus 59 sub-divided octaves covers
+/// the full `u64` range.
+pub const NBUCKETS: usize = (64 - LOW_BITS as usize) * SUB_BUCKETS as usize;
+
+/// Bucket index of a value (monotone in `v`, total over `u64`).
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v < SUB_BUCKETS {
+        return v as usize;
+    }
+    let top = 63 - v.leading_zeros(); // >= LOW_BITS
+    let octave = top - LOW_BITS;
+    let sub = (v >> (top - LOW_BITS)) & (SUB_BUCKETS - 1);
+    ((octave as usize + 1) << LOW_BITS) + sub as usize
+}
+
+/// Half-open value range `[lo, hi)` of a bucket.
+#[inline]
+pub fn bucket_bounds(idx: usize) -> (u64, u64) {
+    if idx < SUB_BUCKETS as usize {
+        return (idx as u64, idx as u64 + 1);
+    }
+    let octave = (idx >> LOW_BITS) as u32 - 1;
+    let sub = (idx as u64) & (SUB_BUCKETS - 1);
+    let lo = (SUB_BUCKETS + sub) << octave;
+    (lo, lo + (1u64 << octave))
+}
+
+/// One lock-free histogram: fixed bucket array of relaxed atomics plus
+/// exact count/sum/max.  `new()` is const so stage histograms live in
+/// static storage; local instances (the load generator) box one.
+pub struct Hist {
+    counts: [AtomicU64; NBUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Hist {
+    pub const fn new() -> Hist {
+        Hist {
+            counts: [const { AtomicU64::new(0) }; NBUCKETS],
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one value (relaxed; never allocates).
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.counts[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Point-in-time copy (concurrent recording may make count/sum lag
+    /// the buckets by in-flight updates; merges stay consistent).
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+            max: self.max.load(Ordering::Relaxed),
+            counts: self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect(),
+        }
+    }
+
+    /// Zero every bucket and the aggregates.
+    pub fn clear(&self) {
+        for c in &self.counts {
+            c.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum.store(0, Ordering::Relaxed);
+        self.max.store(0, Ordering::Relaxed);
+    }
+}
+
+impl Default for Hist {
+    fn default() -> Hist {
+        Hist::new()
+    }
+}
+
+/// Mergeable plain-value copy of a [`Hist`].
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub count: u64,
+    pub sum: u64,
+    pub max: u64,
+    counts: Vec<u64>,
+}
+
+impl HistSnapshot {
+    /// Fold another snapshot in (bucketwise add; max of maxes).
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        if self.counts.is_empty() {
+            self.counts = vec![0; NBUCKETS];
+        }
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
+
+    /// Nearest-rank quantile (`p` in percent): the midpoint of the bucket
+    /// containing the rank-`ceil(p/100·count)` sample — the same bucket
+    /// the exact sample falls in, so the estimate is within one bucket
+    /// width (relative error `<= 1/SUB_BUCKETS`) of the exact value.
+    /// Returns 0 when empty.
+    pub fn quantile(&self, p: f64) -> u64 {
+        let total: u64 = self.counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((p / 100.0) * total as f64).ceil().max(1.0) as u64;
+        let rank = rank.min(total);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                let (lo, hi) = bucket_bounds(i);
+                return lo + (hi - lo - 1) / 2;
+            }
+        }
+        self.max
+    }
+
+    /// Mean of the recorded values (exact: sum/count).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+}
+
+/// Serve-tier stages with a registered histogram (shard compute is
+/// per-shard; see [`record_shard`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// Submission → dispatcher pickup (queue wait).
+    AdmissionWait,
+    /// Dispatcher slate coalescing (first recv → slate dispatched).
+    SlateCoalesce,
+    /// Far-field apply over the merged buffer.
+    FarApply,
+    /// Row merge + per-request de-interleave and delivery.
+    Merge,
+    /// Request end-to-end as reported in `Response::elapsed_us`
+    /// (virtual under `real_time: false`).
+    EndToEnd,
+}
+
+const NSTAGES: usize = 5;
+
+/// Per-shard compute histogram slots; shard ids fold in modulo.
+pub const MAX_SHARD_HISTS: usize = 8;
+
+static STAGE_NAMES: [&str; NSTAGES] = [
+    "serve.admission_wait",
+    "serve.slate_coalesce",
+    "serve.far_apply",
+    "serve.merge",
+    "serve.e2e",
+];
+
+static SHARD_NAMES: [&str; MAX_SHARD_HISTS] = [
+    "serve.shard_compute.0",
+    "serve.shard_compute.1",
+    "serve.shard_compute.2",
+    "serve.shard_compute.3",
+    "serve.shard_compute.4",
+    "serve.shard_compute.5",
+    "serve.shard_compute.6",
+    "serve.shard_compute.7",
+];
+
+static STAGE_HISTS: [Hist; NSTAGES] = [const { Hist::new() }; NSTAGES];
+static SHARD_HISTS: [Hist; MAX_SHARD_HISTS] = [const { Hist::new() }; MAX_SHARD_HISTS];
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// Turn stage-histogram recording on or off (on by default; the
+/// `obs_overhead` bench toggles it to price the instrumented path).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Whether stage histograms are currently recording.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Record a stage latency in µs.
+#[inline]
+pub fn record(stage: Stage, us: u64) {
+    if ENABLED.load(Ordering::Relaxed) {
+        STAGE_HISTS[stage as usize].record(us);
+    }
+}
+
+/// Record one shard's compute latency in µs (slots fold modulo
+/// [`MAX_SHARD_HISTS`]).
+#[inline]
+pub fn record_shard(shard: usize, us: u64) {
+    if ENABLED.load(Ordering::Relaxed) {
+        SHARD_HISTS[shard % MAX_SHARD_HISTS].record(us);
+    }
+}
+
+/// Snapshot one stage histogram.
+pub fn stage_snapshot(stage: Stage) -> HistSnapshot {
+    STAGE_HISTS[stage as usize].snapshot()
+}
+
+/// Snapshot every registered histogram as `(export name, snapshot)`,
+/// stage histograms first, then the occupied shard-compute slots.
+pub fn snapshot_all() -> Vec<(&'static str, HistSnapshot)> {
+    let mut out: Vec<(&'static str, HistSnapshot)> = STAGE_NAMES
+        .iter()
+        .zip(&STAGE_HISTS)
+        .map(|(&n, h)| (n, h.snapshot()))
+        .collect();
+    for (&n, h) in SHARD_NAMES.iter().zip(&SHARD_HISTS) {
+        let s = h.snapshot();
+        if s.count > 0 {
+            out.push((n, s));
+        }
+    }
+    out
+}
+
+/// Zero every registered histogram (tests and CLI phase boundaries;
+/// the enabled flag is left as-is).
+pub fn reset() {
+    for h in STAGE_HISTS.iter().chain(SHARD_HISTS.iter()) {
+        h.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_monotone_contiguous_and_bounded() {
+        // exact identity range
+        for v in 0..SUB_BUCKETS {
+            assert_eq!(bucket_index(v), v as usize);
+            assert_eq!(bucket_bounds(v as usize), (v, v + 1));
+        }
+        // every bucket's bounds contain exactly the values that map to it
+        let mut prev_hi = 0u64;
+        for idx in 0..2048usize.min(NBUCKETS) {
+            let (lo, hi) = bucket_bounds(idx);
+            assert_eq!(lo, prev_hi, "buckets must tile without gaps at {idx}");
+            assert_eq!(bucket_index(lo), idx);
+            assert_eq!(bucket_index(hi - 1), idx);
+            // relative width bound: w/lo <= 1/SUB_BUCKETS (lo > 0)
+            if lo > 0 {
+                assert!((hi - lo) * SUB_BUCKETS <= lo * 2, "width bound at {idx}");
+            }
+            prev_hi = hi;
+        }
+        assert_eq!(bucket_index(u64::MAX), NBUCKETS - 1);
+    }
+
+    #[test]
+    fn record_snapshot_quantile_merge() {
+        let h = Box::new(Hist::new());
+        for v in [0u64, 1, 1, 5, 40, 41, 1000, 100_000] {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 8);
+        assert_eq!(s.max, 100_000);
+        assert_eq!(s.sum, 101_088);
+        // small values land in exact buckets: the quantile is exact
+        assert_eq!(s.quantile(25.0), 1);
+        // large values: within the bucket of the exact sample
+        let q = s.quantile(100.0);
+        let (lo, hi) = bucket_bounds(bucket_index(100_000));
+        assert!(q >= lo && q < hi, "{q} not in [{lo},{hi})");
+        // merging doubles every count
+        let mut m = s.clone();
+        m.merge(&h.snapshot());
+        assert_eq!(m.count, 16);
+        assert_eq!(m.quantile(25.0), 1);
+        h.clear();
+        assert_eq!(h.snapshot().count, 0);
+        assert_eq!(h.snapshot().quantile(50.0), 0);
+    }
+
+    #[test]
+    fn stage_registry_records_and_resets() {
+        // global registry: other tests may record concurrently, so
+        // assertions are monotonic on a private-ish stage pair
+        let before = stage_snapshot(Stage::FarApply).count;
+        record(Stage::FarApply, 17);
+        record_shard(3, 250);
+        record_shard(MAX_SHARD_HISTS + 3, 250); // folds into slot 3
+        assert!(stage_snapshot(Stage::FarApply).count >= before + 1);
+        let all = snapshot_all();
+        assert!(all.iter().any(|(n, _)| *n == "serve.far_apply"));
+        let shard3 = all
+            .iter()
+            .find(|(n, _)| *n == "serve.shard_compute.3")
+            .expect("occupied shard slot exported");
+        assert!(shard3.1.count >= 2);
+    }
+
+    #[test]
+    fn disabled_recording_is_inert() {
+        set_enabled(false);
+        let before = stage_snapshot(Stage::SlateCoalesce).count;
+        record(Stage::SlateCoalesce, 9);
+        assert_eq!(stage_snapshot(Stage::SlateCoalesce).count, before);
+        set_enabled(true);
+    }
+}

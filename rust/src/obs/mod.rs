@@ -13,9 +13,15 @@
 //! * [`export`] — Chrome trace-event JSON (`--trace-out`, Perfetto-
 //!   loadable), a flat metrics snapshot (`--metrics-out`), and the human
 //!   `nni stats` report.
+//! * [`hist`] — always-on lock-free log-linear latency histograms for
+//!   the serve tier (per-stage, bounded-error quantiles).
+//! * [`flight`] — always-on fixed-capacity flight recorder of compact
+//!   serve events, auto-dumped as JSON on faults.
 
 pub mod counters;
 pub mod export;
+pub mod flight;
+pub mod hist;
 pub mod trace;
 
 pub use counters::{Counter, LevelStat, Snapshot};
@@ -64,8 +70,11 @@ pub fn timed<T>(name: &'static str, f: impl FnOnce() -> T) -> (T, f64) {
     (v, t0.elapsed().as_secs_f64())
 }
 
-/// Reset spans and counters (tests and CLI phase boundaries).
+/// Reset spans, counters, histograms, and the flight recorder (tests
+/// and CLI phase boundaries).  Enabled flags are left as-is.
 pub fn reset() {
     trace::reset();
     counters::reset();
+    hist::reset();
+    flight::reset();
 }

@@ -39,6 +39,10 @@ pub struct SpanRec {
     pub depth: u32,
     /// Worker slot the span was recorded on.
     pub worker: u32,
+    /// Request flow id (serve tier: request id + 1), 0 = not
+    /// request-scoped.  The exporter ties same-`req` spans together with
+    /// Chrome flow events.
+    pub req: u64,
 }
 
 struct Slab {
@@ -76,8 +80,10 @@ fn lock_of(slab: &'static Mutex<Slab>) -> MutexGuard<'static, Slab> {
     slab.lock().unwrap_or_else(|e| e.into_inner())
 }
 
+/// Microseconds since the process trace epoch — the shared timebase of
+/// spans, flight-recorder events, and [`record_closed`] timestamps.
 #[inline]
-fn now_us() -> u64 {
+pub fn now_us() -> u64 {
     EPOCH.get_or_init(Instant::now).elapsed().as_micros() as u64
 }
 
@@ -145,10 +151,24 @@ impl SpanGuard {
                 active: false,
             };
         }
-        Self::enter_enabled(name)
+        Self::enter_enabled(name, 0)
     }
 
-    fn enter_enabled(name: &'static str) -> SpanGuard {
+    /// Open a request-scoped span: like [`Self::enter`] but tagged with a
+    /// flow id (`req` = request id + 1; 0 means not request-scoped).
+    #[inline]
+    pub fn enter_req(name: &'static str, req: u64) -> SpanGuard {
+        if !ENABLED.load(Ordering::Relaxed) {
+            return SpanGuard {
+                worker: 0,
+                idx: 0,
+                active: false,
+            };
+        }
+        Self::enter_enabled(name, req)
+    }
+
+    fn enter_enabled(name: &'static str, req: u64) -> SpanGuard {
         let w = worker();
         let t0 = now_us();
         let mut slab = lock(w);
@@ -172,6 +192,7 @@ impl SpanGuard {
             t1_us: u64::MAX,
             depth,
             worker: w as u32,
+            req,
         });
         slab.open.push(idx);
         SpanGuard {
@@ -180,6 +201,33 @@ impl SpanGuard {
             active: true,
         }
     }
+}
+
+/// Record an already-closed span retroactively on the current worker's
+/// slab (e.g. the dispatcher stamping a request's admission wait from
+/// its submit timestamp).  Timestamps are µs on the [`now_us`] timebase;
+/// inert when tracing is disabled, drop-counted when the slab is full.
+pub fn record_closed(name: &'static str, t0_us: u64, t1_us: u64, req: u64) {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return;
+    }
+    let w = worker();
+    let mut slab = lock(w);
+    if slab.recs.len() == slab.recs.capacity() {
+        slab.dropped += 1;
+        drop(slab);
+        counters::add(Counter::SpansDropped, 1);
+        return;
+    }
+    let depth = slab.open.len() as u32;
+    slab.recs.push(SpanRec {
+        name,
+        t0_us,
+        t1_us: t1_us.max(t0_us),
+        depth,
+        worker: w as u32,
+        req,
+    });
 }
 
 impl Drop for SpanGuard {

@@ -13,11 +13,15 @@ use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::time::Instant;
 
 /// An admitted request in flight: the wire request plus its response
-/// channel and admission timestamp (real-time latency accounting).
+/// channel and admission timestamps — a monotonic [`Instant`] for
+/// real-time latency accounting and the same moment on the
+/// `obs::trace::now_us` timebase, which the dispatcher uses to record
+/// the admission-wait histogram and the retroactive `serve.admit` span.
 pub struct Job {
     pub req: Request,
     pub reply: Sender<Response>,
     pub submitted: Instant,
+    pub submitted_us: u64,
 }
 
 /// The bounded admission queue.
@@ -84,6 +88,7 @@ mod tests {
             req: Request { id, query: Query::Knn { point: 0, k: 1 }, budget_us: 1000 },
             reply,
             submitted: Instant::now(),
+            submitted_us: crate::obs::trace::now_us(),
         }
     }
 

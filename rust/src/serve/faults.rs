@@ -14,6 +14,7 @@
 //! which is what makes the `serve.retried`/`serve.panics_contained`
 //! counter assertions exact.
 
+use crate::obs::flight::{self, Kind};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Once;
 
@@ -137,10 +138,14 @@ impl FaultState {
     /// Panic here if the plan scripts a (not yet fired) panic for this
     /// `(shard, seq)` task.  Called **inside** the worker's
     /// `catch_unwind`, so the panic is contained, counted, and retried.
+    /// The injection itself lands in the flight recorder (`fault` event,
+    /// `aux` = fault index in the plan) *before* the panic unwinds, so a
+    /// forensic dump shows cause before effect.
     pub fn maybe_panic(&self, shard: usize, seq: u64) {
         for (i, f) in self.plan.faults.iter().enumerate() {
             if let Fault::PanicOnTask { shard: s, seq: q } = f {
                 if *s == shard && *q == seq && !self.fired[i].swap(true, Ordering::Relaxed) {
+                    flight::record(Kind::Fault, shard as i64, seq, i as u64);
                     panic!("{INJECTED_PANIC} fault: shard {shard} slate {seq}");
                 }
             }
@@ -148,8 +153,11 @@ impl FaultState {
     }
 
     /// Artificial latency scripted for this `(shard, seq)` task, in µs.
+    /// A nonzero total is recorded as a flight `fault` event (`aux` =
+    /// injected µs).
     pub fn latency_us(&self, shard: usize, seq: u64) -> u64 {
-        self.plan
+        let total: u64 = self
+            .plan
             .faults
             .iter()
             .map(|f| match f {
@@ -160,7 +168,11 @@ impl FaultState {
                 }
                 _ => 0,
             })
-            .sum()
+            .sum();
+        if total > 0 {
+            flight::record(Kind::Fault, shard as i64, seq, total);
+        }
+        total
     }
 }
 

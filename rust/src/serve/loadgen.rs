@@ -8,6 +8,7 @@
 //! `nni serve --load-gen` feeds the report into `BENCH_serve.json`
 //! (p50/p99 latency plus the shed/retry counters).
 
+use crate::obs::hist::Hist;
 use crate::serve::faults::{Fault, FaultPlan};
 use crate::serve::server::{Server, StatsSnapshot};
 use crate::serve::wire::Query;
@@ -46,14 +47,19 @@ pub struct LoadReport {
     pub degraded: usize,
     /// Neither answered nor shed within the timeout — must stay 0.
     pub lost: usize,
-    /// Wall-clock latency percentiles over answered requests, µs.
+    /// Wall-clock latency quantiles over answered requests, µs — read
+    /// from a log-linear [`Hist`], so each is within one bucket
+    /// (relative error `<= 1/32`) of the exact nearest-rank value.
     pub p50_us: u64,
     pub p99_us: u64,
+    /// Exact (the histogram tracks max exactly).
     pub max_us: u64,
     pub stats: StatsSnapshot,
 }
 
 /// Nearest-rank percentile of an ascending-sorted sample (`0` if empty).
+/// Kept as the **exact oracle** the histogram quantiles are pinned
+/// against (see `histogram_quantile_tracks_exact_oracle`).
 pub fn percentile(sorted_us: &[u64], p: f64) -> u64 {
     if sorted_us.is_empty() {
         return 0;
@@ -68,7 +74,10 @@ pub fn percentile(sorted_us: &[u64], p: f64) -> u64 {
 /// deterministic regardless of shard count.
 pub fn run(server: &Server, plan: &FaultPlan, cfg: &LoadGenCfg) -> LoadReport {
     let mut rng = Rng::new(plan.seed ^ 0x6c6f_6164);
-    let mut lat: Vec<u64> = Vec::with_capacity(cfg.requests);
+    // Latencies go straight into a local log-linear histogram (boxed:
+    // the bucket array is ~15 KiB) — the same machinery the serve
+    // stages use, so the report's quantiles carry the same 1/32 bound.
+    let lat = Box::new(Hist::new());
     let mut rep = LoadReport::default();
     for i in 0..cfg.requests {
         let (n, d) = server.shape();
@@ -105,7 +114,7 @@ pub fn run(server: &Server, plan: &FaultPlan, cfg: &LoadGenCfg) -> LoadReport {
             Ok(pending) => match pending.wait_timeout(cfg.timeout) {
                 Err(_) => rep.lost += 1,
                 Ok(resp) => {
-                    lat.push(t0.elapsed().as_micros() as u64);
+                    lat.record(t0.elapsed().as_micros() as u64);
                     if resp.result.is_ok() {
                         rep.ok += 1;
                         if resp.degraded {
@@ -129,10 +138,10 @@ pub fn run(server: &Server, plan: &FaultPlan, cfg: &LoadGenCfg) -> LoadReport {
             }
         }
     }
-    lat.sort_unstable();
-    rep.p50_us = percentile(&lat, 50.0);
-    rep.p99_us = percentile(&lat, 99.0);
-    rep.max_us = lat.last().copied().unwrap_or(0);
+    let snap = lat.snapshot();
+    rep.p50_us = snap.quantile(50.0);
+    rep.p99_us = snap.quantile(99.0);
+    rep.max_us = snap.max;
     rep.stats = server.stats();
     rep
 }
@@ -146,6 +155,36 @@ mod tests {
     use crate::interact::epoch::{UpdatableKernelEngine, UpdateCfg};
     use crate::serve::wire::ServeConfig;
     use std::sync::Arc;
+
+    #[test]
+    fn histogram_quantile_tracks_exact_oracle() {
+        use crate::obs::hist::bucket_index;
+        // Seeded values spanning six orders of magnitude: every histogram
+        // quantile must land in the same bucket as the exact nearest-rank
+        // oracle, i.e. within one bucket width (relative error <= 1/32).
+        let mut rng = Rng::new(0x0b5e);
+        let h = Box::new(Hist::new());
+        let mut exact: Vec<u64> = Vec::new();
+        for _ in 0..5000 {
+            let scale = 1u64 << (rng.below(20) + 1);
+            let v = rng.below(scale as usize) as u64;
+            h.record(v);
+            exact.push(v);
+        }
+        exact.sort_unstable();
+        let snap = h.snapshot();
+        assert_eq!(snap.count, 5000);
+        assert_eq!(snap.max, *exact.last().unwrap());
+        for p in [50.0, 90.0, 99.0, 99.9] {
+            let want = percentile(&exact, p);
+            let got = snap.quantile(p);
+            assert_eq!(
+                bucket_index(got),
+                bucket_index(want),
+                "p{p}: estimate {got} must share a bucket with exact {want}"
+            );
+        }
+    }
 
     #[test]
     fn percentile_is_nearest_rank() {

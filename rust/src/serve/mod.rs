@@ -24,6 +24,13 @@
 //! shard latency, bad client queries, and mid-stream epoch updates
 //! against seeded sequence numbers, so every failure drill in
 //! `tests/serve_faults.rs` replays exactly.
+//!
+//! Observability: every stage records into the serve-tier deep
+//! observability layer — lock-free latency histograms per stage
+//! ([`crate::obs::hist`]), request-scoped tracing (flow-tagged spans on
+//! the dispatcher track and one Chrome-trace track per shard), and the
+//! fault flight recorder ([`crate::obs::flight`]) that auto-dumps
+//! forensics on panic containment, shard poisoning, and deadline sheds.
 
 pub mod admission;
 pub mod faults;

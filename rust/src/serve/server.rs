@@ -27,7 +27,9 @@
 //! a typed reason instead of blocking the slate.
 
 use crate::interact::epoch::{Epoch, KernelEpoch, ShardSpan, UpdatableKernelEngine};
-use crate::obs::{counters, Counter};
+use crate::obs::flight::{self, Kind};
+use crate::obs::hist::{self, Stage};
+use crate::obs::{counters, trace, Counter};
 use crate::serve::admission::{screen, Gate, Job};
 use crate::serve::faults::{FaultPlan, FaultState};
 use crate::serve::shard::{worker_loop, ShardResult, ShardTask};
@@ -37,6 +39,20 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+/// Trace-track (worker-slot) layout for the serve tier: the dispatcher
+/// records on slot 31, shard workers on `32 + shard` (see
+/// `crate::serve::shard::shard_track`) — one Chrome-trace track per
+/// shard, flow events tying a request's stages across them.
+pub(crate) const DISPATCH_TRACK: usize = 31;
+
+/// Per-worker span-slab capacity reserved for the serve tracks (smaller
+/// than the engine's build/apply slabs; `install` is monotonic).
+const SERVE_SPAN_CAP: usize = 1 << 12;
+
+/// Flight-recorder `seq` used for requests shed before an id was
+/// assigned (admission screening).
+const NO_REQ_ID: u64 = u64::MAX;
 
 /// Per-daemon counters (atomic, exact): the instance-local mirror of the
 /// global `serve.*` observability counters, so tests can assert exact
@@ -109,10 +125,15 @@ impl ServeStats {
         }
     }
 
-    /// Record a shed with its typed reason — instance counter plus the
-    /// matching global `serve.*` counters, at the same point.
-    fn note_shed(&self, reason: &RejectReason) {
+    /// Record a shed with its typed reason — instance counter, the
+    /// matching global `serve.*` counters, and one flight-recorder
+    /// `Shed` event, all at the same point (so dump counts match the
+    /// instance stats exactly).  `id` is the request id, [`NO_REQ_ID`]
+    /// when the request was shed before one was assigned.  A deadline
+    /// shed additionally auto-dumps the flight recorder.
+    fn note_shed(&self, id: u64, reason: &RejectReason) {
         counters::add(Counter::ServeShed, 1);
+        flight::record(Kind::Shed, -1, id, reason.flight_code());
         let cell = match reason {
             RejectReason::QueueFull { .. } => &self.shed_queue_full,
             RejectReason::Malformed(_) => &self.shed_malformed,
@@ -120,6 +141,7 @@ impl ServeStats {
             RejectReason::BadPoint { .. } => &self.shed_bad_point,
             RejectReason::DeadlineExceeded { .. } => {
                 counters::add(Counter::ServeDeadlineMissed, 1);
+                flight::trigger_dump("deadline_shed");
                 &self.shed_deadline
             }
             RejectReason::ShardFailed { .. } => &self.shed_shard_failed,
@@ -169,6 +191,11 @@ impl Server {
         plan: FaultPlan,
     ) -> Server {
         crate::serve::faults::quiet_injected_panics();
+        // Reserve the dispatcher + shard trace tracks (monotonic; no-op
+        // when already reserved) and publish the shard count for the
+        // serve.shard_imbalance derived metric.
+        crate::obs::install(DISPATCH_TRACK + 1 + cfg.shards.clamp(1, 32), SERVE_SPAN_CAP);
+        counters::raise(Counter::ServeShardWorkers, cfg.shards.max(1) as u64);
         let faults = Arc::new(FaultState::arm(plan));
         let stats = Arc::new(ServeStats::default());
         let (gate, jobs_rx) = Gate::new(cfg.queue_cap);
@@ -226,14 +253,14 @@ impl Server {
     ) -> Result<Pending, RejectReason> {
         let n = self.engine.acquire().value.engine.n();
         if let Err(reason) = screen(&query, n, self.cfg.oversize_factor) {
-            self.stats.note_shed(&reason);
+            self.stats.note_shed(NO_REQ_ID, &reason);
             return Err(reason);
         }
         let gate = match &self.gate {
             Some(g) => g,
             None => {
                 let reason = RejectReason::ShuttingDown;
-                self.stats.note_shed(&reason);
+                self.stats.note_shed(NO_REQ_ID, &reason);
                 return Err(reason);
             }
         };
@@ -243,15 +270,17 @@ impl Server {
             req: Request { id, query, budget_us },
             reply,
             submitted: Instant::now(),
+            submitted_us: trace::now_us(),
         };
         match gate.try_admit(job) {
             Ok(()) => {
                 self.stats.admitted.fetch_add(1, Ordering::Relaxed);
                 counters::add(Counter::ServeAdmitted, 1);
+                flight::record(Kind::Admit, -1, id, 0);
                 Ok(Pending { rx })
             }
             Err((_job, reason)) => {
-                self.stats.note_shed(&reason);
+                self.stats.note_shed(id, &reason);
                 Err(reason)
             }
         }
@@ -322,8 +351,31 @@ enum Collect {
     Failed { shard: usize, attempts: u32 },
 }
 
+/// Attribute a deadline miss to the stage that ate the largest share of
+/// the budget: bumps exactly one `deadline.miss.*` counter.  The stage
+/// shares are the admission wait, the shard compute charge (virtual
+/// under `real_time: false`), the far apply, and the merge so far — an
+/// attribution heuristic, not an exact decomposition, since the charge
+/// mixes injected latency and backoff.
+fn attribute_miss(wait_us: u64, compute_us: u64, far_us: u64, merge_us: u64) {
+    let mut best = Counter::DeadlineMissAdmission;
+    let mut top = wait_us;
+    for (c, v) in [
+        (Counter::DeadlineMissCompute, compute_us),
+        (Counter::DeadlineMissFar, far_us),
+        (Counter::DeadlineMissMerge, merge_us),
+    ] {
+        if v > top {
+            best = c;
+            top = v;
+        }
+    }
+    counters::add(best, 1);
+}
+
 impl Dispatcher {
     fn run(mut self, jobs: Receiver<Job>) {
+        trace::set_worker(DISPATCH_TRACK);
         let shards = self.task_txs.len();
         let mut seq = 0u64;
         let mut last_version: Option<u64> = None;
@@ -333,6 +385,7 @@ impl Dispatcher {
         let mut contained = vec![0u32; shards];
         let mut poisoned = vec![false; shards];
         while let Ok(first) = jobs.recv() {
+            let t_coalesce0 = trace::now_us();
             let mut slate = vec![first];
             while slate.len() < self.cfg.batch.max(1) {
                 match jobs.try_recv() {
@@ -340,6 +393,11 @@ impl Dispatcher {
                     Err(_) => break,
                 }
             }
+            let t_coalesce1 = trace::now_us();
+            let first_id = slate[0].req.id;
+            hist::record(Stage::SlateCoalesce, t_coalesce1.saturating_sub(t_coalesce0));
+            trace::record_closed("serve.slate", t_coalesce0, t_coalesce1, first_id + 1);
+            flight::record(Kind::Slate, -1, first_id, slate.len() as u64);
             let (epoch, spans) = self.engine.acquire_sharded(shards);
             if last_version != Some(epoch.version) {
                 if last_version.is_some() {
@@ -364,9 +422,10 @@ impl Dispatcher {
 
     fn respond(&self, job: &Job, epoch: u64, result: Result<Payload, RejectReason>, degraded: bool, retries: u32, elapsed_us: u64) {
         if let Err(reason) = &result {
-            self.stats.note_shed(reason);
+            self.stats.note_shed(job.req.id, reason);
         } else {
             self.stats.responded_ok.fetch_add(1, Ordering::Relaxed);
+            hist::record(Stage::EndToEnd, elapsed_us);
             if degraded {
                 self.stats.degraded_responses.fetch_add(1, Ordering::Relaxed);
                 counters::add(Counter::ServeDegraded, 1);
@@ -391,6 +450,7 @@ impl Dispatcher {
     #[allow(clippy::too_many_arguments)]
     fn retry_ladder(
         &self,
+        seq: u64,
         shard: usize,
         attempt: u32,
         contained: &mut [u32],
@@ -400,9 +460,14 @@ impl Dispatcher {
     ) -> Option<ShardTask> {
         self.stats.panics_contained.fetch_add(1, Ordering::Relaxed);
         counters::add(Counter::ServePanicsContained, 1);
+        flight::record(Kind::Panic, shard as i64, seq, attempt as u64);
         contained[shard] += 1;
         if contained[shard] >= self.cfg.poison_after && !poisoned[shard] {
             poisoned[shard] = true;
+            flight::record(Kind::Poison, shard as i64, seq, contained[shard] as u64);
+            flight::trigger_dump("poison");
+        } else {
+            flight::trigger_dump("panic");
         }
         // max_retries plain attempts, then one scalar-fallback rescue
         if attempt > self.cfg.max_retries {
@@ -437,6 +502,15 @@ impl Dispatcher {
     ) {
         let n = epoch.value.engine.n();
         let version = epoch.version;
+        // Pickup: the admission wait of every request in the slate ends
+        // here.  Record it per request (histogram + retroactive
+        // "serve.admit" span on the dispatch track, flow-tagged).
+        let picked_us = trace::now_us();
+        for job in &slate {
+            let wait = picked_us.saturating_sub(job.submitted_us);
+            hist::record(Stage::AdmissionWait, wait);
+            trace::record_closed("serve.admit", job.submitted_us, picked_us, job.req.id + 1);
+        }
         // Re-screen against the slate's epoch: an update published after
         // admission can change n, and a stale-shaped query must shed
         // typed instead of panicking deep in the engine.
@@ -453,10 +527,10 @@ impl Dispatcher {
         }
 
         if !apply_jobs.is_empty() {
-            self.apply_slate(seq, &apply_jobs, epoch, spans, contained, poisoned);
+            self.apply_slate(seq, picked_us, &apply_jobs, epoch, spans, contained, poisoned);
         }
         for (j, job) in knn_jobs.iter().enumerate() {
-            self.knn_one(seq, j, job, epoch, spans, contained, poisoned);
+            self.knn_one(seq, picked_us, j, job, epoch, spans, contained, poisoned);
         }
     }
 
@@ -466,6 +540,7 @@ impl Dispatcher {
     fn apply_slate(
         &self,
         seq: u64,
+        picked_us: u64,
         jobs: &[Job],
         epoch: &Arc<Epoch<KernelEpoch>>,
         spans: &[ShardSpan],
@@ -487,6 +562,9 @@ impl Dispatcher {
         }
         let x = Arc::new(x);
         let slate_budget = jobs.iter().map(|j| j.req.budget_us).max().unwrap_or(0);
+        // Flow id of the sub-slate's shard spans: the slate's first
+        // request (the same anchor serve.far/serve.merge use).
+        let flow = jobs[0].req.id + 1;
         for (s, tx) in self.task_txs.iter().enumerate() {
             let task = ShardTask::Apply {
                 seq,
@@ -497,6 +575,7 @@ impl Dispatcher {
                 budget_us: slate_budget,
                 attempt: 0,
                 fallback: poisoned[s],
+                flow,
             };
             tx.send(task).expect("serve: shard task channel closed mid-slate");
         }
@@ -526,6 +605,7 @@ impl Dispatcher {
                     let xs = x.clone();
                     let span = spans[shard].clone();
                     match self.retry_ladder(
+                        seq,
                         shard,
                         attempt,
                         contained,
@@ -540,6 +620,7 @@ impl Dispatcher {
                             budget_us: slate_budget,
                             attempt,
                             fallback,
+                            flow,
                         },
                     ) {
                         Some(task) => {
@@ -581,8 +662,10 @@ impl Dispatcher {
             }
             Some(Collect::DeadlineSkip { latency_us }) => {
                 // The skipping shard saw latency >= the slate's max
-                // budget, so every request here is past its deadline.
+                // budget, so every request here is past its deadline —
+                // the compute stage ate the whole budget.
                 for job in jobs {
+                    counters::add(Counter::DeadlineMissCompute, 1);
                     self.respond(
                         job,
                         version,
@@ -597,8 +680,14 @@ impl Dispatcher {
                 }
             }
             _ => {
+                let t_far0 = trace::now_us();
                 eng.far_apply_acc(&x, k, &mut merged);
+                let t_far1 = trace::now_us();
+                let far_us = t_far1.saturating_sub(t_far0);
+                hist::record(Stage::FarApply, far_us);
+                trace::record_closed("serve.far", t_far0, t_far1, jobs[0].req.id + 1);
                 let virtual_us = charge.iter().copied().max().unwrap_or(0);
+                let t_merge0 = trace::now_us();
                 for (j, job) in jobs.iter().enumerate() {
                     let elapsed_us = if self.cfg.real_time {
                         job.submitted.elapsed().as_micros() as u64
@@ -606,6 +695,12 @@ impl Dispatcher {
                         virtual_us
                     };
                     if elapsed_us > job.req.budget_us {
+                        attribute_miss(
+                            picked_us.saturating_sub(job.submitted_us),
+                            virtual_us,
+                            far_us,
+                            trace::now_us().saturating_sub(t_merge0),
+                        );
                         self.respond(
                             job,
                             version,
@@ -633,6 +728,9 @@ impl Dispatcher {
                         elapsed_us,
                     );
                 }
+                let t_merge1 = trace::now_us();
+                hist::record(Stage::Merge, t_merge1.saturating_sub(t_merge0));
+                trace::record_closed("serve.merge", t_merge0, t_merge1, jobs[0].req.id + 1);
             }
         }
     }
@@ -643,6 +741,7 @@ impl Dispatcher {
     fn knn_one(
         &self,
         seq: u64,
+        picked_us: u64,
         job_idx: usize,
         job: &Job,
         epoch: &Arc<Epoch<KernelEpoch>>,
@@ -676,6 +775,7 @@ impl Dispatcher {
             budget_us: job.req.budget_us,
             attempt,
             fallback,
+            flow: job.req.id + 1,
         };
         self.task_txs[shard]
             .send(mk(0, poisoned[shard]))
@@ -696,6 +796,12 @@ impl Dispatcher {
                         charge_us
                     };
                     if elapsed_us > job.req.budget_us {
+                        attribute_miss(
+                            picked_us.saturating_sub(job.submitted_us),
+                            charge_us,
+                            0,
+                            0,
+                        );
                         self.respond(
                             job,
                             version,
@@ -722,6 +828,7 @@ impl Dispatcher {
                 ShardResult::Panicked { shard: s, attempt, charged_us, .. } => {
                     charge_us += charged_us;
                     match self.retry_ladder(
+                        seq,
                         s,
                         attempt,
                         contained,
@@ -750,6 +857,7 @@ impl Dispatcher {
                 }
                 ShardResult::DeadlineSkip { latency_us, .. } => {
                     charge_us += latency_us;
+                    counters::add(Counter::DeadlineMissCompute, 1);
                     self.respond(
                         job,
                         version,

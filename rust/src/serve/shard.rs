@@ -15,12 +15,20 @@
 use crate::csb::kernel::Dispatch;
 use crate::hmat::FullKernelEngine;
 use crate::interact::epoch::{Epoch, KernelEpoch, ShardSpan};
-use crate::obs::{counters, Counter};
+use crate::obs::trace::SpanGuard;
+use crate::obs::{counters, hist, trace, Counter};
 use crate::serve::faults::FaultState;
 use std::panic::AssertUnwindSafe;
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 use std::time::Instant;
+
+/// Trace track (worker slot) of a shard worker: one Chrome-trace track
+/// per shard, above the engine pool's slots and the dispatcher's track
+/// 31 (`serve::server::DISPATCH_TRACK`); shards past 32 fold.
+pub(crate) fn shard_track(shard: usize) -> usize {
+    32 + shard % 32
+}
 
 /// One unit of work fanned out by the dispatcher.  Tasks carry their
 /// epoch handle, so a slate stays epoch-consistent even if an update
@@ -41,6 +49,10 @@ pub enum ShardTask {
         attempt: u32,
         /// Scalar-kernel fallback (poisoned shard or post-retry rescue).
         fallback: bool,
+        /// Request flow id (request id + 1, 0 = none) tagged onto the
+        /// shard's `serve.shard.compute` span so the exporter can tie
+        /// the request's stages across tracks with flow events.
+        flow: u64,
     },
     /// kNN lookup of one tree position owned by this shard.
     Knn {
@@ -54,6 +66,7 @@ pub enum ShardTask {
         budget_us: u64,
         attempt: u32,
         fallback: bool,
+        flow: u64,
     },
     Stop,
 }
@@ -163,11 +176,14 @@ pub fn worker_loop(
     faults: Arc<FaultState>,
     real_time: bool,
 ) {
+    trace::set_worker(shard_track(shard));
     while let Ok(task) = rx.recv() {
-        let (seq, attempt, budget_us, knn_job) = match &task {
-            ShardTask::Apply { seq, attempt, budget_us, .. } => (*seq, *attempt, *budget_us, None),
-            ShardTask::Knn { seq, attempt, budget_us, job, .. } => {
-                (*seq, *attempt, *budget_us, Some(*job))
+        let (seq, attempt, budget_us, knn_job, flow) = match &task {
+            ShardTask::Apply { seq, attempt, budget_us, flow, .. } => {
+                (*seq, *attempt, *budget_us, None, *flow)
+            }
+            ShardTask::Knn { seq, attempt, budget_us, job, flow, .. } => {
+                (*seq, *attempt, *budget_us, Some(*job), *flow)
             }
             ShardTask::Stop => break,
         };
@@ -183,30 +199,39 @@ pub fn worker_loop(
             continue;
         }
         let t0 = Instant::now();
-        let out = std::panic::catch_unwind(AssertUnwindSafe(|| {
-            faults.maybe_panic(shard, seq);
-            match &task {
-                ShardTask::Apply { epoch, span, x, k, fallback, .. } => ShardResult::Near {
-                    seq,
-                    shard,
-                    rows: near_partial(&epoch.value.engine, span, x, *k, *fallback),
-                    charged_us: latency_us,
-                    fallback: *fallback,
-                },
-                ShardTask::Knn { epoch, span, job, pos, k, fallback, .. } => ShardResult::Knn {
-                    seq,
-                    shard,
-                    job: *job,
-                    neighbors: knn_lookup(&epoch.value, span, *pos, *k),
-                    charged_us: latency_us,
-                    fallback: *fallback,
-                },
-                ShardTask::Stop => unreachable!("handled above"),
-            }
-        }));
+        let out = {
+            // The span wraps the containment boundary from outside, so a
+            // contained panic still closes it when the block ends.
+            let _sp = SpanGuard::enter_req("serve.shard.compute", flow);
+            std::panic::catch_unwind(AssertUnwindSafe(|| {
+                faults.maybe_panic(shard, seq);
+                match &task {
+                    ShardTask::Apply { epoch, span, x, k, fallback, .. } => ShardResult::Near {
+                        seq,
+                        shard,
+                        rows: near_partial(&epoch.value.engine, span, x, *k, *fallback),
+                        charged_us: latency_us,
+                        fallback: *fallback,
+                    },
+                    ShardTask::Knn { epoch, span, job, pos, k, fallback, .. } => {
+                        ShardResult::Knn {
+                            seq,
+                            shard,
+                            job: *job,
+                            neighbors: knn_lookup(&epoch.value, span, *pos, *k),
+                            charged_us: latency_us,
+                            fallback: *fallback,
+                        }
+                    }
+                    ShardTask::Stop => unreachable!("handled above"),
+                }
+            }))
+        };
         let busy = t0.elapsed().as_nanos() as u64;
         counters::add(Counter::ServeShardBusyNs, busy);
         counters::raise(Counter::ServeShardBusyNsMax, busy);
+        counters::shard_busy_add(shard, busy);
+        hist::record_shard(shard, busy / 1_000);
         let msg = match out {
             Ok(r) => r,
             Err(_) => {

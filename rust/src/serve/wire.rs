@@ -74,6 +74,23 @@ pub enum RejectReason {
     ShuttingDown,
 }
 
+impl RejectReason {
+    /// Compact reason code carried in the `aux` field of flight-recorder
+    /// `Shed` events — must stay in sync with
+    /// `crate::obs::flight::reason_name`.
+    pub(crate) fn flight_code(&self) -> u64 {
+        match self {
+            RejectReason::QueueFull { .. } => 1,
+            RejectReason::Malformed(_) => 2,
+            RejectReason::Oversized { .. } => 3,
+            RejectReason::BadPoint { .. } => 4,
+            RejectReason::DeadlineExceeded { .. } => 5,
+            RejectReason::ShardFailed { .. } => 6,
+            RejectReason::ShuttingDown => 7,
+        }
+    }
+}
+
 impl std::fmt::Display for RejectReason {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
@@ -181,6 +198,26 @@ mod tests {
         assert!(d.to_string().contains("deadline"));
         let m = RejectReason::Malformed(QueryReject::ShapeMismatch { expected: 4, got: 3 });
         assert!(m.to_string().contains("3"));
+    }
+
+    #[test]
+    fn flight_codes_round_trip_reason_names() {
+        use crate::obs::flight::reason_name;
+        let cases: Vec<(RejectReason, &str)> = vec![
+            (RejectReason::QueueFull { depth: 1, cap: 1 }, "queue_full"),
+            (
+                RejectReason::Malformed(QueryReject::ShapeMismatch { expected: 4, got: 3 }),
+                "malformed",
+            ),
+            (RejectReason::Oversized { len: 9, max: 4 }, "oversized"),
+            (RejectReason::BadPoint { point: 9, n: 4 }, "bad_point"),
+            (RejectReason::DeadlineExceeded { budget_us: 1, elapsed_us: 2 }, "deadline"),
+            (RejectReason::ShardFailed { shard: 0, attempts: 3 }, "shard_failed"),
+            (RejectReason::ShuttingDown, "shutdown"),
+        ];
+        for (r, name) in cases {
+            assert_eq!(reason_name(r.flight_code()), name, "{r:?}");
+        }
     }
 
     #[test]

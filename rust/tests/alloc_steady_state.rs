@@ -10,7 +10,10 @@
 //!
 //! Tracing is **enabled** for the steady-state round: spans record into
 //! the per-worker slabs pre-sized by `obs::install`, so the zero-allocation
-//! contract must hold with instrumentation on, not just off.
+//! contract must hold with instrumentation on, not just off.  The serve
+//! tier's histogram and flight-recorder record paths are exercised inside
+//! the counted round too: both write into fixed static atomic arrays and
+//! must be allocation-free by construction.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -95,9 +98,14 @@ fn steady_state_applies_are_allocation_free() {
     eng.gauss_apply_multi(&coords, &coords, d, 0.6, &x, k, &mut out_k);
     eng.meanshift_step_into(&coords, &coords, d, 0.5, &mut num, &mut den);
     eng.spmm(&x, &mut out_k, k);
+    // The serve-tier observability record paths share the contract:
+    // static bucket arrays and a static lock-free ring, no heap.
+    nni::obs::hist::record(nni::obs::hist::Stage::EndToEnd, 250);
+    nni::obs::hist::record_shard(0, 125);
+    nni::obs::flight::record(nni::obs::flight::Kind::Admit, -1, 1, 0);
     // Expected 0: schedule precompiled, scratch engine-owned at its
-    // high-water mark, output buffers caller-owned — and span recording
-    // stayed inside the pre-sized slabs.
+    // high-water mark, output buffers caller-owned — and span, histogram,
+    // and flight recording all stayed inside static pre-sized storage.
     let delta = allocs() - before;
     assert_eq!(delta, 0, "steady-state applies allocated {delta} times (tracing on)");
 
@@ -109,5 +117,12 @@ fn steady_state_applies_are_allocation_free() {
         spans.iter().any(|sp| sp.name == "apply.spmm"),
         "no apply spans recorded ({} spans total)",
         spans.len()
+    );
+    // Same for the histogram and flight-recorder writes in the counted
+    // round (snapshotting allocates, which is why it happens only here).
+    assert!(nni::obs::hist::stage_snapshot(nni::obs::hist::Stage::EndToEnd).count >= 1);
+    assert!(
+        nni::obs::flight::snapshot().iter().any(|e| e.kind == nni::obs::flight::Kind::Admit),
+        "flight event not recorded"
     );
 }

@@ -295,9 +295,16 @@ fn reorder_emits_trace_and_metrics_files() {
     assert!(text.contains("trace ->"), "{text}");
     assert!(text.contains("metrics ->"), "{text}");
 
-    // the emitted trace passes the binary's own validator, including the
-    // default subsystem coverage (tree, csb, hmat, apply)
-    let out = nni().args(["trace-check", trace.to_str().unwrap()]).output().unwrap();
+    // the emitted trace passes the binary's own validator for every
+    // subsystem a reorder run touches (the full default additionally
+    // requires serve — see the stats smoke below for that one)
+    let out = nni()
+        .args([
+            "trace-check", "--require", "tree,csb,hmat,apply,interact",
+            trace.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
     assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
     assert!(String::from_utf8_lossy(&out.stdout).contains(": ok ("));
     // ... but demanding a subsystem the run never touched fails
@@ -336,6 +343,36 @@ fn stats_prints_counter_report() {
     assert!(text.contains("== derived =="), "{text}");
     assert!(text.contains("csb.covered_fraction"), "{text}");
     assert!(text.contains("== levels"), "{text}");
+}
+
+#[test]
+fn stats_serve_round_satisfies_full_default_require() {
+    let dir = std::env::temp_dir();
+    let trace = dir.join("nni_cli_smoke_stats_trace.json");
+    let metrics = dir.join("nni_cli_smoke_stats_metrics.json");
+    let out = nni()
+        .args([
+            "stats", "--n", "256", "--rhs", "2", "--applies", "2", "--leaf-cap", "64",
+            "--trace-out", trace.to_str().unwrap(),
+            "--metrics-out", metrics.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    // stats runs the full pipeline *and* a serve round, so its trace is
+    // the artifact that satisfies trace-check's complete default require
+    // list (tree,csb,hmat,apply,interact,serve) with no flags.
+    let out = nni().args(["trace-check", trace.to_str().unwrap()]).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains(": ok ("));
+    // the metrics JSON carries the stage latency histograms and the
+    // derived shard-imbalance gauge next to the flat counters
+    let mtext = std::fs::read_to_string(&metrics).unwrap();
+    for key in ["\"hists\"", "serve.e2e", "serve.shard_imbalance"] {
+        assert!(mtext.contains(key), "metrics missing {key}: {mtext}");
+    }
+    std::fs::remove_file(trace).ok();
+    std::fs::remove_file(metrics).ok();
 }
 
 #[test]

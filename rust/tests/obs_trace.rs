@@ -13,6 +13,7 @@ fn observability_end_to_end() {
     serve_counter_family_is_registered();
     serve_daemon_mirrors_global_counters();
     span_nesting_and_monotonic_drain();
+    request_flow_events_round_trip();
     slab_overflow_drops_without_recording();
     pipeline_trace_covers_subsystems();
 }
@@ -35,6 +36,13 @@ fn serve_counter_family_is_registered() {
         "serve.epoch_switches",
         "serve.shard_busy_ns",
         "serve.shard_busy_ns_max",
+        "serve.shard_workers",
+        "deadline.miss.admission",
+        "deadline.miss.compute",
+        "deadline.miss.far",
+        "deadline.miss.merge",
+        "flight.events",
+        "flight.dumps",
     ];
     for name in SERVE {
         assert!(
@@ -92,6 +100,20 @@ fn serve_daemon_mirrors_global_counters() {
         "one snapshot restart per contained panic"
     );
     assert!(snap.get("serve.shard_busy_ns") > 0, "workers account busy time");
+    // The deep-observability layer saw the same run: the worker gauge,
+    // the flight ring (one admit per admitted request, one restart per
+    // containment), and the end-to-end latency histogram all agree with
+    // the instance stats.
+    assert_eq!(snap.get("serve.shard_workers"), 2, "shard worker gauge");
+    assert!(snap.get("flight.events") > 0, "flight recorder captured the run");
+    assert!(snap.get("flight.dumps") > 0, "the contained panic auto-dumped");
+    let evs = obs::flight::snapshot();
+    let count = |k: obs::flight::Kind| evs.iter().filter(|e| e.kind == k).count() as u64;
+    assert_eq!(count(obs::flight::Kind::Admit), stats.admitted, "one admit event each");
+    assert_eq!(count(obs::flight::Kind::Panic), stats.panics_contained);
+    assert_eq!(count(obs::flight::Kind::Restart), stats.panics_contained);
+    let e2e = obs::hist::stage_snapshot(obs::hist::Stage::EndToEnd);
+    assert_eq!(e2e.count, stats.responded_ok, "every answer in the e2e histogram");
 }
 
 /// Exact add/raise/level arithmetic through a snapshot.
@@ -185,6 +207,55 @@ fn span_nesting_and_monotonic_drain() {
 
     // a second drain is empty (records moved out, capacity kept)
     assert!(obs::trace::drain().is_empty());
+}
+
+/// Request-scoped spans export as a Chrome flow chain (`ph` `"s"`/`"t"`/
+/// `"f"`, shared `id`) tying the request's stages across tracks; a
+/// request with a single span emits no chain, and the checker accepts
+/// the mixed trace.
+fn request_flow_events_round_trip() {
+    use nni::util::json::{self, Json};
+
+    obs::reset();
+    obs::install(3, 256);
+    obs::set_enabled(true);
+    let t0 = obs::trace::now_us();
+    // Request 42's three stages land on three tracks (dispatcher, one
+    // shard, dispatcher again) — the same shape the serve tier records.
+    obs::trace::set_worker(0);
+    obs::trace::record_closed("serve.slate", t0, t0 + 5, 42);
+    obs::trace::set_worker(1);
+    obs::trace::record_closed("serve.shard.compute", t0 + 5, t0 + 9, 42);
+    obs::trace::set_worker(2);
+    obs::trace::record_closed("serve.merge", t0 + 9, t0 + 11, 42);
+    // Request 7 has one span only: below the two-stage flow threshold.
+    obs::trace::record_closed("serve.slate", t0 + 11, t0 + 12, 7);
+    obs::set_enabled(false);
+
+    let spans = obs::trace::drain();
+    assert_eq!(spans.len(), 4);
+    let text = obs::export::chrome_trace(&spans).to_string();
+    // 4 complete events + the 3-stage flow chain for request 42.
+    assert_eq!(obs::export::check_trace(&text, &["serve"]), Ok(7));
+    let parsed = json::parse(&text).expect("trace is valid JSON");
+    let flows: Vec<&Json> = parsed
+        .as_arr()
+        .expect("trace is an array")
+        .iter()
+        .filter(|e| e.get("name").and_then(Json::as_str) == Some("serve.request"))
+        .collect();
+    let phases: Vec<&str> =
+        flows.iter().map(|e| e.get("ph").and_then(Json::as_str).unwrap()).collect();
+    assert_eq!(phases, ["s", "t", "f"], "start, step, finish — in stage order");
+    for e in &flows {
+        assert_eq!(e.get("id").and_then(Json::as_f64), Some(42.0), "one id per request");
+    }
+    let finish = flows.last().unwrap();
+    assert_eq!(
+        finish.get("bp").and_then(Json::as_str),
+        Some("e"),
+        "flow end binds to its enclosing slice"
+    );
 }
 
 /// A full slab drops spans (counted, allocation-free) instead of growing.

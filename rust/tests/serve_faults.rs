@@ -30,12 +30,15 @@ use nni::csb::kernel::KernelKind;
 use nni::data::synth::SynthSpec;
 use nni::hmat::FullKernelConfig;
 use nni::interact::epoch::{UpdatableKernelEngine, UpdateCfg};
+use nni::obs::{flight, hist};
 use nni::serve::server::StatsSnapshot;
 use nni::serve::wire::{Payload, Query, RejectReason, Response};
 use nni::serve::{FaultPlan, ServeConfig, Server};
 use nni::tree::update::UpdateBatch;
+use nni::util::json::{self, Json};
 use nni::util::rng::Rng;
-use std::sync::Arc;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 const WIDTHS: [usize; 3] = [1, 2, 8];
@@ -44,6 +47,43 @@ const REQUESTS: usize = 9;
 /// Generous wall-clock bound per request: expiry means a hung request,
 /// which is precisely the bug this harness exists to catch.
 const WAIT: Duration = Duration::from_secs(30);
+
+/// The flight recorder and stage histograms are process-global, and
+/// [`drive`] resets both so each run's forensics are exact — so every
+/// test in this file holds this gate for its whole body.  Poison-
+/// tolerant: a failed sibling must not cascade.
+fn forensics_guard() -> std::sync::MutexGuard<'static, ()> {
+    static GATE: Mutex<()> = Mutex::new(());
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Count events per kind name in a parsed flight dump.
+fn dump_kind_counts(dump: &Json) -> BTreeMap<String, u64> {
+    let mut counts = BTreeMap::new();
+    let events = dump.get("events").and_then(Json::as_arr).expect("dump has an events array");
+    for ev in events {
+        let kind = ev.get("kind").and_then(Json::as_str).expect("event has a kind");
+        *counts.entry(kind.to_string()).or_insert(0) += 1;
+    }
+    counts
+}
+
+/// Flight timestamps must be monotone *per shard track*: each shard's
+/// events are causally ordered (worker thread, or the dispatcher acting
+/// on that shard), as are the dispatcher/admission events on track -1.
+/// Cross-shard interleaving carries no order guarantee.
+fn assert_shard_times_monotone(evs: &[flight::Event], width: usize) {
+    let mut last: BTreeMap<i64, u64> = BTreeMap::new();
+    for e in evs {
+        let prev = last.insert(e.shard, e.t_us).unwrap_or(0);
+        assert!(
+            prev <= e.t_us,
+            "width {width}: shard {} flight timestamps regressed ({prev} -> {})",
+            e.shard,
+            e.t_us
+        );
+    }
+}
 
 /// Fresh deterministic engine — rebuilt per drive so mid-stream epoch
 /// updates in one run can never leak into the next.
@@ -89,6 +129,12 @@ struct Outcome {
 /// width.  Client-side faults (malformed/oversized/update) are executed
 /// here, at their scripted request indices.
 fn drive(shards: usize, plan: &FaultPlan, cfg: ServeConfig) -> Outcome {
+    // Start each run with a clean forensic slate: the flight ring and
+    // the stage histograms then cover exactly this drive, so the
+    // per-scenario event-count assertions can be exact.  Callers hold
+    // `forensics_guard`, so concurrent tests can't clobber each other.
+    flight::reset();
+    hist::reset();
     let upd = engine();
     let queries = stream(upd.acquire().value.engine.n());
     let server = Server::start(upd, ServeConfig { shards, ..cfg }, plan.clone());
@@ -162,6 +208,7 @@ fn assert_bit_identical(got: &Outcome, baseline: &Outcome, label: &str) {
 
 #[test]
 fn fault_free_baseline_is_width_invariant() {
+    let _forensics = forensics_guard();
     let plan = FaultPlan::new(7);
     let base = drive(1, &plan, config(1));
     assert_eq!(base.stats.admitted, REQUESTS as u64);
@@ -179,11 +226,30 @@ fn fault_free_baseline_is_width_invariant() {
             assert!(!r.degraded);
             assert_eq!(r.retries, 0);
         }
+        // Forensics of a clean run: one admit and one single-job slate
+        // per request (serial clients), no shed events, no auto-dump.
+        let evs = flight::snapshot();
+        let count = |k: flight::Kind| evs.iter().filter(|e| e.kind == k).count();
+        assert_eq!(count(flight::Kind::Admit), REQUESTS, "width {w}: one admit per request");
+        assert_eq!(count(flight::Kind::Slate), REQUESTS, "width {w}: serial one-job slates");
+        assert!(
+            evs.iter().filter(|e| e.kind == flight::Kind::Slate).all(|e| e.aux == 1),
+            "width {w}: slate size recorded in aux"
+        );
+        assert_eq!(count(flight::Kind::Shed), 0, "width {w}");
+        assert!(flight::last_dump().is_none(), "width {w}: clean runs never dump");
+        assert_shard_times_monotone(&evs, w);
+        // Every answered request lands in the end-to-end histogram.
+        let e2e = hist::stage_snapshot(hist::Stage::EndToEnd);
+        assert_eq!(e2e.count, REQUESTS as u64, "width {w}: every answer histogrammed");
+        assert!(e2e.quantile(50.0) <= e2e.quantile(99.0), "width {w}");
+        assert!(e2e.quantile(99.0) <= e2e.max, "width {w}");
     }
 }
 
 #[test]
 fn contained_panics_are_retried_and_invisible() {
+    let _forensics = forensics_guard();
     // Requests 0 and 3 are Gauss applies: the slate fans to every shard,
     // so shard 0's scripted panics fire at every width.
     let plan = FaultPlan::parse(7, "panic:0:0, panic:0:3").expect("spec");
@@ -201,11 +267,24 @@ fn contained_panics_are_retried_and_invisible() {
             let want = u32::from(i == 0 || i == 3);
             assert_eq!(r.retries, want, "width {w} request {i}");
         }
+        // The flight ring accounts for both injections and containments,
+        // and the second containment's auto-dump is the one that's kept.
+        let evs = flight::snapshot();
+        let count = |k: flight::Kind| evs.iter().filter(|e| e.kind == k).count();
+        assert_eq!(count(flight::Kind::Fault), 2, "width {w}: one fault event per injection");
+        assert_eq!(count(flight::Kind::Panic), 2, "width {w}: one panic event per containment");
+        assert_eq!(count(flight::Kind::Poison), 0, "width {w}: contained, never poisoned");
+        let dump = flight::last_dump().expect("panic containment auto-dumps");
+        assert!(dump.contains("\"trigger\": \"panic\""), "width {w}");
+        let parsed = json::parse(&dump).expect("dump is valid JSON");
+        let kinds = dump_kind_counts(&parsed);
+        assert_eq!(kinds.get("panic").copied().unwrap_or(0), 2, "width {w}: both in the dump");
     }
 }
 
 #[test]
 fn repeated_panics_poison_the_shard_into_scalar_fallback() {
+    let _forensics = forensics_guard();
     let plan = FaultPlan::parse(7, "panic:0:0, panic:0:3").expect("spec");
     let mut cfg = config(1);
     cfg.poison_after = 2; // second contained panic poisons shard 0
@@ -227,6 +306,19 @@ fn repeated_panics_poison_the_shard_into_scalar_fallback() {
             assert!(r.degraded, "width {w} request {i}: poisoned shard must flag degraded");
         }
         assert!(got.stats.degraded_responses >= 4, "width {w}");
+        // The poison dump supersedes the first containment's panic dump,
+        // and pins the poisoned shard and its containment count.
+        let dump = flight::last_dump().expect("poisoning auto-dumps");
+        assert!(dump.contains("\"trigger\": \"poison\""), "width {w}: poison dump kept last");
+        let kinds = dump_kind_counts(&json::parse(&dump).expect("dump is valid JSON"));
+        assert_eq!(kinds.get("panic").copied().unwrap_or(0), 2, "width {w}");
+        assert_eq!(kinds.get("poison").copied().unwrap_or(0), 1, "width {w}: one poisoning");
+        let poison = flight::snapshot()
+            .into_iter()
+            .find(|e| e.kind == flight::Kind::Poison)
+            .expect("poison event recorded");
+        assert_eq!(poison.shard, 0, "width {w}: shard 0 was the poisoned one");
+        assert_eq!(poison.aux, 2, "width {w}: poisoned at the second containment");
     }
 }
 
@@ -236,6 +328,7 @@ fn slow_shard_sheds_on_deadline_with_typed_reason() {
     // default budget — the worker skips the compute and every request in
     // the slate sheds typed.  Slate 4 (also an apply): 1ms of latency,
     // under budget — answered, with the latency charged to elapsed_us.
+    let _forensics = forensics_guard();
     let plan = FaultPlan::parse(7, "slow:0:60000:1:1, slow:0:1000:4:1").expect("spec");
     let base = drive(1, &FaultPlan::new(7), config(1));
     for w in WIDTHS {
@@ -257,11 +350,25 @@ fn slow_shard_sheds_on_deadline_with_typed_reason() {
         let slowed = got.responses[4].as_ref().expect("admitted");
         assert!(slowed.result.is_ok());
         assert_eq!(slowed.elapsed_us, 1_000, "width {w}: under-budget latency is charged");
+        // The deadline shed auto-dumped with a typed reason, and the
+        // shed event carries the deadline reject-reason code.
+        let dump = flight::last_dump().expect("deadline shed auto-dumps");
+        assert!(dump.contains("\"trigger\": \"deadline_shed\""), "width {w}");
+        assert!(dump.contains("\"reason\": \"deadline\""), "width {w}");
+        let kinds = dump_kind_counts(&json::parse(&dump).expect("dump is valid JSON"));
+        assert_eq!(kinds.get("shed").copied().unwrap_or(0), 1, "width {w}: one shed dumped");
+        let shed_ev = flight::snapshot()
+            .into_iter()
+            .find(|e| e.kind == flight::Kind::Shed)
+            .expect("shed event recorded");
+        assert_eq!(flight::reason_name(shed_ev.aux), "deadline", "width {w}");
+        assert_eq!(shed_ev.seq, 1, "width {w}: the shed request's id");
     }
 }
 
 #[test]
 fn malformed_and_oversized_queries_shed_at_admission() {
+    let _forensics = forensics_guard();
     let plan = FaultPlan::parse(7, "malformed:2, oversized:5").expect("spec");
     let base = drive(1, &FaultPlan::new(7), config(1));
     for w in WIDTHS {
@@ -273,11 +380,23 @@ fn malformed_and_oversized_queries_shed_at_admission() {
         assert_bit_identical(&got, &base, &format!("badquery width {w}"));
         assert!(matches!(got.responses[2], Err(RejectReason::Malformed(_))), "width {w}");
         assert!(matches!(got.responses[5], Err(RejectReason::Oversized { .. })), "width {w}");
+        // Admission sheds are recorded but do not auto-dump (only
+        // deadline sheds, panics, and poisonings do); the on-demand dump
+        // — what the serve stdin `dump` command renders — shows both
+        // sheds with their typed reasons, and neither request admitted.
+        assert!(flight::last_dump().is_none(), "width {w}: admission sheds don't auto-dump");
+        let dump = flight::dump_json("test");
+        assert!(dump.contains("\"reason\": \"malformed\""), "width {w}");
+        assert!(dump.contains("\"reason\": \"oversized\""), "width {w}");
+        let kinds = dump_kind_counts(&json::parse(&dump).expect("dump is valid JSON"));
+        assert_eq!(kinds.get("shed").copied().unwrap_or(0), 2, "width {w}");
+        assert_eq!(kinds.get("admit").copied().unwrap_or(0), REQUESTS as u64 - 2, "width {w}");
     }
 }
 
 #[test]
 fn mid_stream_epoch_update_keeps_serving_and_heals() {
+    let _forensics = forensics_guard();
     let plan = FaultPlan::parse(7, "update:3:16:16").expect("spec");
     // The update is a client-side event, so the "fault-free" baseline for
     // bit-identity is the same stream with the same update at width 1.
@@ -294,6 +413,18 @@ fn mid_stream_epoch_update_keeps_serving_and_heals() {
             let want_epoch = u64::from(i > 3);
             assert_eq!(r.epoch, want_epoch, "width {w} request {i}: snapshot isolation");
         }
+        // Exactly the one published epoch in the flight ring (the
+        // initial build is not an epoch *switch*), carrying the new
+        // version in aux; no shard had to be healed.
+        let evs = flight::snapshot();
+        let switches: Vec<_> =
+            evs.iter().filter(|e| e.kind == flight::Kind::EpochSwitch).collect();
+        assert_eq!(switches.len(), 1, "width {w}: one epoch-switch event");
+        assert_eq!(switches[0].aux, 1, "width {w}: version 1 published");
+        assert!(
+            !evs.iter().any(|e| e.kind == flight::Kind::Restart),
+            "width {w}: nothing poisoned, nothing restarted"
+        );
     }
 }
 
@@ -321,5 +452,18 @@ fn combined_plan_accounts_for_every_fault_exactly() {
             REQUESTS as u64,
             "width {w}: every request accounted"
         );
+        // The flight ring mirrors the instance stats event for event:
+        // containment, typed sheds, the epoch switch, and the admits.
+        let evs = flight::snapshot();
+        let count = |k: flight::Kind| evs.iter().filter(|e| e.kind == k).count() as u64;
+        assert_eq!(count(flight::Kind::Panic), got.stats.panics_contained, "width {w}");
+        assert_eq!(count(flight::Kind::Shed), got.stats.shed_total(), "width {w}");
+        assert_eq!(count(flight::Kind::EpochSwitch), got.stats.epoch_switches, "width {w}");
+        assert_eq!(count(flight::Kind::Admit), REQUESTS as u64 - 2, "width {w}");
+        assert_shard_times_monotone(&evs, w);
+        let dump = flight::last_dump().expect("a faulted run leaves a dump behind");
+        json::parse(&dump).expect("dump is valid JSON");
+        let e2e = hist::stage_snapshot(hist::Stage::EndToEnd);
+        assert_eq!(e2e.count, got.stats.responded_ok, "width {w}: every answer histogrammed");
     }
 }
