@@ -5,8 +5,11 @@
 //!
 //! **Dump triggers.**  A dump is taken automatically on panic
 //! containment (`trigger = "panic"`), shard poisoning (`"poison"`), and
-//! deadline sheds (`"deadline_shed"`); the serve stdin protocol's
-//! `dump` command and tests take on-demand dumps.  Each dump is stored
+//! deadline sheds (`"deadline_shed"`, at most once per slate — the
+//! dispatcher dumps after responding, not per shed response, so a
+//! slate full of misses under overload costs one ring render, not B);
+//! the serve stdin protocol's `dump` command and tests take on-demand
+//! dumps.  Each dump is stored
 //! in [`last_dump`] (and written to the `--flight-out` path when the
 //! CLI set one) so the forensic trail survives the triggering request.
 //!

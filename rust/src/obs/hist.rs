@@ -8,7 +8,9 @@
 //! `[lo, lo + w)` always has `w / lo <= 1/SUB_BUCKETS` — the quantile
 //! error bound: a reported quantile lies in the same bucket as the exact
 //! nearest-rank sample, hence within one bucket width (relative error
-//! `<= 1/32` ≈ 3.1%) of it.  `rust/src/serve/loadgen.rs` pins this
+//! `<= 1/32` ≈ 3.1%) of it.  The one exception is the saturated top
+//! octave — values `>= 2^63` (~292k years in µs) clamp into the last
+//! bucket, see [`NBUCKETS`].  `rust/src/serve/loadgen.rs` pins the bound
 //! against the exact nearest-rank oracle on seeded workloads.
 //!
 //! **Cost model.**  Recording is one enabled load, one bucket-index
@@ -32,11 +34,15 @@ const LOW_BITS: u32 = 5;
 /// bound.
 pub const SUB_BUCKETS: u64 = 1 << LOW_BITS;
 
-/// Total buckets: the identity range plus 59 sub-divided octaves covers
-/// the full `u64` range.
+/// Total buckets: the identity range plus 58 sub-divided octaves covers
+/// `[0, 2^63)`; the top octave `[2^63, u64::MAX]` saturates into the
+/// last bucket (its exact upper bound would overflow `u64`).
 pub const NBUCKETS: usize = (64 - LOW_BITS as usize) * SUB_BUCKETS as usize;
 
-/// Bucket index of a value (monotone in `v`, total over `u64`).
+/// Bucket index of a value (monotone non-decreasing in `v`, total over
+/// `u64`: values at or above `2^63` clamp into the last bucket, so the
+/// relative-error bound holds for all values below `2^63` — ~292k years
+/// in µs — and degrades only in the saturated top octave).
 #[inline]
 pub fn bucket_index(v: u64) -> usize {
     if v < SUB_BUCKETS {
@@ -45,7 +51,7 @@ pub fn bucket_index(v: u64) -> usize {
     let top = 63 - v.leading_zeros(); // >= LOW_BITS
     let octave = top - LOW_BITS;
     let sub = (v >> (top - LOW_BITS)) & (SUB_BUCKETS - 1);
-    ((octave as usize + 1) << LOW_BITS) + sub as usize
+    (((octave as usize + 1) << LOW_BITS) + sub as usize).min(NBUCKETS - 1)
 }
 
 /// Half-open value range `[lo, hi)` of a bucket.
@@ -290,18 +296,30 @@ mod tests {
         }
         // every bucket's bounds contain exactly the values that map to it
         let mut prev_hi = 0u64;
-        for idx in 0..2048usize.min(NBUCKETS) {
+        for idx in 0..NBUCKETS {
             let (lo, hi) = bucket_bounds(idx);
             assert_eq!(lo, prev_hi, "buckets must tile without gaps at {idx}");
             assert_eq!(bucket_index(lo), idx);
             assert_eq!(bucket_index(hi - 1), idx);
-            // relative width bound: w/lo <= 1/SUB_BUCKETS (lo > 0)
-            if lo > 0 {
-                assert!((hi - lo) * SUB_BUCKETS <= lo * 2, "width bound at {idx}");
+            if idx < SUB_BUCKETS as usize {
+                // identity range: unit-width, exact
+                assert_eq!(hi - lo, 1, "identity bucket at {idx}");
+            } else {
+                // relative width bound: w/lo <= 1/SUB_BUCKETS
+                assert!((hi - lo) * SUB_BUCKETS <= lo, "width bound at {idx}");
             }
             prev_hi = hi;
         }
+        // the table tiles [0, 2^63) exactly
+        assert_eq!(prev_hi, 1u64 << 63);
+        // the top octave saturates into the last bucket
+        assert_eq!(bucket_index((1u64 << 63) - 1), NBUCKETS - 1);
+        assert_eq!(bucket_index(1u64 << 63), NBUCKETS - 1);
         assert_eq!(bucket_index(u64::MAX), NBUCKETS - 1);
+        // recording extreme values must not panic
+        let h = Box::new(Hist::new());
+        h.record(u64::MAX);
+        assert_eq!(h.snapshot().max, u64::MAX);
     }
 
     #[test]

@@ -129,8 +129,12 @@ impl ServeStats {
     /// matching global `serve.*` counters, and one flight-recorder
     /// `Shed` event, all at the same point (so dump counts match the
     /// instance stats exactly).  `id` is the request id, [`NO_REQ_ID`]
-    /// when the request was shed before one was assigned.  A deadline
-    /// shed additionally auto-dumps the flight recorder.
+    /// when the request was shed before one was assigned.  Deadline
+    /// sheds additionally auto-dump the flight recorder, but that is the
+    /// dispatcher's job, *at most once per slate*, after every shed
+    /// event of the slate has been recorded — dumping per response here
+    /// would rewrite the full ring B times for a B-request slate, piling
+    /// work onto the serve path exactly when it is already overloaded.
     fn note_shed(&self, id: u64, reason: &RejectReason) {
         counters::add(Counter::ServeShed, 1);
         flight::record(Kind::Shed, -1, id, reason.flight_code());
@@ -141,7 +145,6 @@ impl ServeStats {
             RejectReason::BadPoint { .. } => &self.shed_bad_point,
             RejectReason::DeadlineExceeded { .. } => {
                 counters::add(Counter::ServeDeadlineMissed, 1);
-                flight::trigger_dump("deadline_shed");
                 &self.shed_deadline
             }
             RejectReason::ShardFailed { .. } => &self.shed_shard_failed,
@@ -354,9 +357,11 @@ enum Collect {
 /// Attribute a deadline miss to the stage that ate the largest share of
 /// the budget: bumps exactly one `deadline.miss.*` counter.  The stage
 /// shares are the admission wait, the shard compute charge (virtual
-/// under `real_time: false`), the far apply, and the merge so far — an
-/// attribution heuristic, not an exact decomposition, since the charge
-/// mixes injected latency and backoff.
+/// under `real_time: false`), the far apply, and the job's own merge
+/// slice (the delta since the previous job's delivery, so slate
+/// position adds no systematic skew) — an attribution heuristic, not an
+/// exact decomposition, since the charge mixes injected latency and
+/// backoff.
 fn attribute_miss(wait_us: u64, compute_us: u64, far_us: u64, merge_us: u64) {
     let mut best = Counter::DeadlineMissAdmission;
     let mut top = wait_us;
@@ -678,6 +683,9 @@ impl Dispatcher {
                         latency_us,
                     );
                 }
+                // One dump for the whole slate, after every shed event
+                // above is in the ring.
+                flight::trigger_dump("deadline_shed");
             }
             _ => {
                 let t_far0 = trace::now_us();
@@ -688,6 +696,11 @@ impl Dispatcher {
                 trace::record_closed("serve.far", t_far0, t_far1, jobs[0].req.id + 1);
                 let virtual_us = charge.iter().copied().max().unwrap_or(0);
                 let t_merge0 = trace::now_us();
+                // Per-job merge charge: the delta since the previous
+                // job's delivery, so a job late in the slate is not
+                // charged the earlier jobs' de-interleave/send time.
+                let mut t_prev = t_merge0;
+                let mut deadline_shed = false;
                 for (j, job) in jobs.iter().enumerate() {
                     let elapsed_us = if self.cfg.real_time {
                         job.submitted.elapsed().as_micros() as u64
@@ -699,8 +712,9 @@ impl Dispatcher {
                             picked_us.saturating_sub(job.submitted_us),
                             virtual_us,
                             far_us,
-                            trace::now_us().saturating_sub(t_merge0),
+                            trace::now_us().saturating_sub(t_prev),
                         );
+                        deadline_shed = true;
                         self.respond(
                             job,
                             version,
@@ -712,6 +726,7 @@ impl Dispatcher {
                             retries,
                             elapsed_us,
                         );
+                        t_prev = trace::now_us();
                         continue;
                     }
                     let pos = &epoch.value.tree.pos;
@@ -727,10 +742,16 @@ impl Dispatcher {
                         retries,
                         elapsed_us,
                     );
+                    t_prev = trace::now_us();
                 }
                 let t_merge1 = trace::now_us();
                 hist::record(Stage::Merge, t_merge1.saturating_sub(t_merge0));
                 trace::record_closed("serve.merge", t_merge0, t_merge1, jobs[0].req.id + 1);
+                // At most one auto-dump per slate, taken after the merge
+                // span closes so the dump's cost is not charged to it.
+                if deadline_shed {
+                    flight::trigger_dump("deadline_shed");
+                }
             }
         }
     }
@@ -813,6 +834,9 @@ impl Dispatcher {
                             retries,
                             elapsed_us,
                         );
+                        // knn routes one request per task, so this is
+                        // the same at-most-one-dump-per-slate policy.
+                        flight::trigger_dump("deadline_shed");
                     } else {
                         self.respond(
                             job,
@@ -869,6 +893,9 @@ impl Dispatcher {
                         retries,
                         charge_us,
                     );
+                    // one request per knn task → one dump, after the
+                    // shed event is in the ring
+                    flight::trigger_dump("deadline_shed");
                     return;
                 }
                 ShardResult::Near { .. } => {
